@@ -1,0 +1,68 @@
+//! End-to-end driver: train the lm_small transformer for a few hundred
+//! steps through the full three-layer stack and log the loss curve.
+//!
+//! This is the repository's system-level validation (see EXPERIMENTS.md
+//! §End-to-end): Layer-1 Pallas SM3 kernel + Layer-2 JAX transformer,
+//! AOT-lowered to an HLO artifact, executed step-by-step by the Layer-3
+//! Rust coordinator on the fused path — Python never runs.
+//!
+//! Run: `cargo run --release --example end_to_end [-- steps]`
+//! Writes out/end_to_end_loss.csv.
+
+use anyhow::Result;
+use sm3::config::{ExecMode, TrainConfig};
+use sm3::coordinator::Trainer;
+use sm3::metrics::RunLogger;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let mut cfg = TrainConfig::default();
+    cfg.model = "lm_small".into();
+    cfg.optim.name = "sm3".into();
+    cfg.optim.lr = 0.25;
+    cfg.optim.warmup_steps = 30;
+    cfg.steps = steps;
+    cfg.eval_every = 50;
+    cfg.exec = ExecMode::Fused;
+
+    println!("end-to-end: lm_small ({} steps, fused SM3 path)", steps);
+    let mut trainer = Trainer::new(cfg)?;
+    println!("  {:.2}M params, batch {}, seq {}",
+             trainer.meta.param_count as f64 / 1e6,
+             trainer.meta.batch, trainer.meta.seq);
+
+    let t0 = std::time::Instant::now();
+    let hist = trainer.train()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut log = RunLogger::new(Some("out/end_to_end_loss.csv"),
+                                 "step,loss,loss_ema,lr,wall_ms", false)?;
+    for s in &hist.steps {
+        log.row(&[s.step.to_string(), format!("{:.6}", s.loss),
+                  format!("{:.6}", s.loss_ema), format!("{:.6e}", s.lr),
+                  format!("{:.2}", s.wall_ms)])?;
+    }
+    log.flush()?;
+
+    println!("\n  step    loss(ema)");
+    for s in hist.steps.iter().filter(|s| s.step % 25 == 0 || s.step == 1) {
+        println!("  {:>5}   {:.4}", s.step, s.loss_ema);
+    }
+    for e in &hist.evals {
+        println!("  eval @ {:>5}: held-out loss {:.4} (ppl {:.1})",
+                 e.step, e.loss, e.loss.exp());
+    }
+    let first = hist.steps.first().unwrap().loss;
+    let last = hist.steps.last().unwrap().loss_ema;
+    let tput = hist.steps.len() as f64 * trainer.meta.batch as f64
+        * trainer.meta.seq as f64 / wall;
+    println!("\n  loss {first:.3} -> {last:.3} in {wall:.1}s \
+              ({tput:.0} tokens/s end-to-end)");
+    println!("  curve written to out/end_to_end_loss.csv");
+    assert!(last < first - 0.5, "training failed to make progress");
+    Ok(())
+}

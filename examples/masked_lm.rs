@@ -1,0 +1,49 @@
+//! Masked-LM workload (the paper's §5.2 BERT scenario at miniature
+//! scale): train the bidirectional encoder, report masked-token accuracy,
+//! and demonstrate the *batch-size scaling* mechanism — the freed
+//! optimizer memory funds a larger effective batch via gradient
+//! accumulation, reaching target accuracy in fewer steps (Fig. 3-right).
+//!
+//! Run: `cargo run --release --example masked_lm -- [steps] [target_acc]`
+
+use anyhow::Result;
+use sm3::config::{ExecMode, TrainConfig};
+use sm3::coordinator::Trainer;
+
+fn run(accum: u64, steps: u64, target: f64) -> Result<(Option<u64>, f64)> {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "mlm_small".into();
+    cfg.optim.name = "sm3".into();
+    cfg.optim.lr = 0.3;
+    cfg.optim.warmup_steps = 10;
+    cfg.steps = steps;
+    cfg.eval_every = 10;
+    cfg.grad_accum = accum;
+    cfg.exec = ExecMode::Split;
+    let mut trainer = Trainer::new(cfg)?;
+    let hist = trainer.train()?;
+    let final_acc = hist.final_eval().and_then(|e| e.metric).unwrap_or(0.0);
+    Ok((hist.steps_to_metric(target), final_acc))
+}
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1).and_then(|s| s.parse().ok()).unwrap_or(120);
+    let target: f64 = std::env::args()
+        .nth(2).and_then(|s| s.parse().ok()).unwrap_or(0.35);
+
+    println!("masked-LM: mlm_small, SM3, target accuracy {target}");
+    println!("{:>14} {:>16} {:>12}", "batch(eff.)", "steps→target", "final acc");
+    for accum in [1u64, 2, 4] {
+        let (steps_to, acc) = run(accum, steps, target)?;
+        let reached = steps_to
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "not reached".into());
+        println!("{:>14} {:>16} {:>11.1}%",
+                 format!("{}x", accum), reached, acc * 100.0);
+    }
+    println!("\nlarger effective batches (funded by SM3's memory savings on \
+              real hardware)\nreach the target in fewer optimizer steps — \
+              the Fig. 3-right mechanism.");
+    Ok(())
+}

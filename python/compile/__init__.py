@@ -1,0 +1,6 @@
+"""Build-time compile package: Layer-2 JAX models + Layer-1 Pallas kernels.
+
+Nothing in here runs at training time — `aot.py` lowers every (model,
+optimizer) variant to HLO text once, and the Rust coordinator executes the
+artifacts via PJRT.
+"""

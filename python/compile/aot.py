@@ -1,0 +1,364 @@
+"""AOT compiler: lower every (model, optimizer) variant to HLO text.
+
+This is the single point where Python runs. `make artifacts` invokes
+
+    python -m compile.aot --out-dir ../artifacts
+
+which writes, for every registered artifact,
+    artifacts/<name>.hlo.txt      — HLO *text* (the interchange format:
+                                    jax ≥0.5 emits 64-bit instruction ids in
+                                    serialized protos which xla_extension
+                                    0.5.1 rejects; the text parser reassigns
+                                    ids and round-trips cleanly)
+    artifacts/manifest.json       — calling convention for the Rust runtime:
+                                    ordered input/output names, shapes,
+                                    dtypes, plus model metadata.
+
+Input flattening order is positional args in order, dicts by sorted key —
+mirrored exactly by `leaf_names` and asserted at lowering time.
+
+Token-id conventions shared with the Rust data pipeline:
+    PAD=0, BOS=1, EOS=2, UNK=3, first real token = 4.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import optim
+from .models import bert, convnet, transformer
+from .models.convnet import ConvNetConfig
+from .models.transformer import TransformerConfig
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Model registry
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    # smoke-test scale: fast to lower, fast to compile in rust tests
+    "lm_tiny": dict(kind="lm", batch=4, seq=16,
+                    cfg=TransformerConfig(vocab=64, d_model=32, n_heads=2,
+                                          n_layers=1, d_ff=64, max_len=16)),
+    # end-to-end driver scale (~1M params)
+    "lm_small": dict(kind="lm", batch=4, seq=64,
+                     cfg=TransformerConfig(vocab=1024, d_model=128, n_heads=4,
+                                           n_layers=2, d_ff=512, max_len=64)),
+    # translation (Fig. 2 / Fig. 6 / Table 1 analogue)
+    "mt_small": dict(kind="mt", batch=16, seq=24,
+                     cfg=TransformerConfig(vocab=256, d_model=64, n_heads=4,
+                                           n_layers=2, d_ff=256, max_len=24)),
+    # masked LM (Fig. 3 / Table 2 analogue). Kept small enough that the
+    # attention-routing phase (the loss plateau before the model learns to
+    # read a masked token's neighbors) breaks within a few hundred steps
+    # on one CPU core for every optimizer family.
+    "mlm_small": dict(kind="mlm", batch=16, seq=16, n_masked=3,
+                      cfg=TransformerConfig(vocab=96, d_model=64, n_heads=4,
+                                            n_layers=2, d_ff=256, max_len=16)),
+    # image classification (Fig. 4 analogue)
+    "img_small": dict(kind="img", batch=32,
+                      cfg=ConvNetConfig(height=16, width=16, channels=3,
+                                        widths=(16, 32, 48), n_classes=10)),
+}
+
+# fused train-step optimizer variants emitted per model
+FUSED_OPTS = {
+    "lm_tiny": ["sm3"],
+    "lm_small": ["sm3", "sm3i", "adagrad", "adam", "adafactor", "sgdm"],
+    "mt_small": ["sm3"],
+    "mlm_small": ["sm3"],
+    "img_small": ["sm3"],
+}
+
+
+def _init_params(name):
+    spec = MODELS[name]
+    if spec["kind"] == "lm":
+        return transformer.init_lm_params(spec["cfg"], seed=0)
+    if spec["kind"] == "mt":
+        return transformer.init_mt_params(spec["cfg"], seed=0)
+    if spec["kind"] == "mlm":
+        return bert.init_mlm_params(spec["cfg"], seed=0)
+    if spec["kind"] == "img":
+        return convnet.init_convnet_params(spec["cfg"], seed=0)
+    raise ValueError(spec["kind"])
+
+
+def _loss_fn(name):
+    spec = MODELS[name]
+    cfg = spec["cfg"]
+    if spec["kind"] == "lm":
+        return lambda p, tokens: transformer.lm_loss(p, tokens, cfg)
+    if spec["kind"] == "mt":
+        return lambda p, src, tgt: transformer.mt_loss(p, src, tgt, cfg)
+    if spec["kind"] == "mlm":
+        return lambda p, tok, pos, tgt, wts: bert.mlm_loss(
+            p, tok, pos, tgt, wts, cfg)
+    if spec["kind"] == "img":
+        return lambda p, images, labels: convnet.convnet_loss(
+            p, images, labels, cfg)
+    raise ValueError(spec["kind"])
+
+
+def _batch_specs(name):
+    """(ordered names, ShapeDtypeStructs) of the batch inputs."""
+    spec = MODELS[name]
+    b = spec["batch"]
+    if spec["kind"] == "lm":
+        return [("batch/tokens", jax.ShapeDtypeStruct((b, spec["seq"]), I32))]
+    if spec["kind"] == "mt":
+        s = spec["seq"]
+        return [("batch/src", jax.ShapeDtypeStruct((b, s), I32)),
+                ("batch/tgt", jax.ShapeDtypeStruct((b, s), I32))]
+    if spec["kind"] == "mlm":
+        s, p = spec["seq"], spec["n_masked"]
+        return [("batch/tokens", jax.ShapeDtypeStruct((b, s), I32)),
+                ("batch/positions", jax.ShapeDtypeStruct((b, p), I32)),
+                ("batch/targets", jax.ShapeDtypeStruct((b, p), I32)),
+                ("batch/weights", jax.ShapeDtypeStruct((b, p), F32))]
+    if spec["kind"] == "img":
+        cfg = spec["cfg"]
+        return [("batch/images", jax.ShapeDtypeStruct(
+                    (b, cfg.height, cfg.width, cfg.channels), F32)),
+                ("batch/labels", jax.ShapeDtypeStruct((b,), I32))]
+    raise ValueError(spec["kind"])
+
+
+# ---------------------------------------------------------------------------
+# Pytree naming (mirrors jax dict flattening: sorted keys, depth first)
+# ---------------------------------------------------------------------------
+
+def _tree_names(tree, prefix):
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree.keys()):
+            out.extend(_tree_names(tree[k], f"{prefix}/{k}"))
+        return out
+    return [prefix]
+
+
+def _tree_specs(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _dtype_name(dt):
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _io_entry(name, spec):
+    return {"name": name, "shape": [int(s) for s in spec.shape],
+            "dtype": _dtype_name(spec.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def _flat_specs(tree):
+    return [jax.ShapeDtypeStruct(x.shape, x.dtype)
+            for x in jax.tree_util.tree_leaves(tree)]
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "models": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        # partial rebuilds (--models subset) merge into the existing manifest
+        existing = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(existing):
+            with open(existing) as f:
+                self.manifest = json.load(f)
+
+    def add_model_meta(self, name):
+        spec = MODELS[name]
+        params = _init_params(name)
+        leaves = []
+        flat = jax.tree_util.tree_leaves(params)
+        names = _tree_names(params, "params")
+        assert len(flat) == len(names), (len(flat), len(names))
+        for n, x in zip(names, flat):
+            leaves.append(_io_entry(n, jax.ShapeDtypeStruct(x.shape, x.dtype)))
+        cfg = spec["cfg"]
+        meta = {"kind": spec["kind"], "batch": spec["batch"],
+                "param_count": int(sum(np.prod(x.shape) for x in flat)),
+                "params": leaves}
+        if spec["kind"] != "img":
+            meta.update({"vocab": cfg.vocab, "seq": spec["seq"],
+                         "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                         "n_heads": cfg.n_heads, "d_ff": cfg.d_ff})
+        else:
+            meta.update({"height": cfg.height, "width": cfg.width,
+                         "channels": cfg.channels,
+                         "n_classes": cfg.n_classes})
+        if spec["kind"] == "mlm":
+            meta["n_masked"] = spec["n_masked"]
+        self.manifest["models"][name] = meta
+        return params
+
+    def write(self, art_name, lowered, input_entries, output_entries,
+              model, kind):
+        text = to_hlo_text(lowered)
+        fname = f"{art_name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][art_name] = {
+            "file": fname, "model": model, "kind": kind,
+            "inputs": input_entries, "outputs": output_entries,
+        }
+        print(f"  wrote {fname} ({len(text)} chars, "
+              f"{len(input_entries)} in / {len(output_entries)} out)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  wrote manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def write_init_ckpt(out_dir, name, params):
+    """Export initial parameters in the Rust checkpoint format
+    (rust/src/checkpoint.rs): magic, count, then per tensor
+    name_len/name/rank/dims(u64)/f32 data, all little-endian. Training in
+    Rust starts from bit-identical values to a JAX-side run."""
+    import struct
+
+    names = _tree_names(params, "params")
+    leaves = jax.tree_util.tree_leaves(params)
+    path = os.path.join(out_dir, f"{name}_init.ckpt")
+    with open(path, "wb") as f:
+        f.write(b"SM3CKPT1")
+        f.write(struct.pack("<I", len(leaves)))
+        for n, x in zip(names, leaves):
+            nb = n.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            arr = np.asarray(x, np.float32)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.astype("<f4").tobytes())
+    print(f"  wrote {name}_init.ckpt ({len(leaves)} tensors)")
+
+
+def emit_model(w: ArtifactWriter, name: str):
+    print(f"[{name}]")
+    spec = MODELS[name]
+    params = w.add_model_meta(name)
+    write_init_ckpt(w.out_dir, name, params)
+    loss_fn = _loss_fn(name)
+    pspecs = _tree_specs(params)
+    pnames = _tree_names(params, "params")
+    batch = _batch_specs(name)
+    bnames = [n for n, _ in batch]
+    bspecs = [s for _, s in batch]
+    lr_spec = jax.ShapeDtypeStruct((), F32)
+
+    def param_entries(prefix="params"):
+        return [_io_entry(n, s) for n, s in
+                zip(_tree_names(params, prefix),
+                    _flat_specs(params))]
+
+    # --- grad_step: (params, *batch) -> (loss, grads) --------------------
+    grad_fn = optim.make_grad_step(loss_fn)
+    lowered = _lower(grad_fn, pspecs, *bspecs)
+    inputs = param_entries() + [_io_entry(n, s) for n, s in batch]
+    outputs = ([{"name": "loss", "shape": [], "dtype": "f32"}]
+               + [_io_entry(n, s) for n, s in
+                  zip(_tree_names(params, "grads"), _flat_specs(params))])
+    w.write(f"{name}_grad", lowered, inputs, outputs, name, "grad")
+
+    # --- eval step --------------------------------------------------------
+    cfg = spec["cfg"]
+    if spec["kind"] == "lm":
+        eval_fn = lambda p, tokens: (transformer.lm_loss(p, tokens, cfg),)
+        eval_out = [{"name": "loss", "shape": [], "dtype": "f32"}]
+    elif spec["kind"] == "mt":
+        eval_fn = lambda p, src, tgt: (transformer.mt_loss(p, src, tgt, cfg),)
+        eval_out = [{"name": "loss", "shape": [], "dtype": "f32"}]
+    elif spec["kind"] == "mlm":
+        eval_fn = lambda p, tok, pos, tgt, wts: bert.mlm_eval(
+            p, tok, pos, tgt, wts, cfg)
+        eval_out = [{"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "correct", "shape": [], "dtype": "f32"},
+                    {"name": "total", "shape": [], "dtype": "f32"}]
+    else:
+        eval_fn = lambda p, images, labels: convnet.convnet_eval(
+            p, images, labels, cfg)
+        eval_out = [{"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "top1", "shape": [], "dtype": "f32"},
+                    {"name": "top5", "shape": [], "dtype": "f32"}]
+    lowered = _lower(eval_fn, pspecs, *bspecs)
+    w.write(f"{name}_eval", lowered,
+            param_entries() + [_io_entry(n, s) for n, s in batch],
+            eval_out, name, "eval")
+
+    # --- greedy decode (translation only) ---------------------------------
+    if spec["kind"] == "mt":
+        dec_fn = lambda p, src: (transformer.mt_greedy_decode(p, src, cfg),)
+        lowered = _lower(dec_fn, pspecs, bspecs[0])
+        w.write(f"{name}_decode", lowered,
+                param_entries() + [_io_entry(bnames[0], bspecs[0])],
+                [{"name": "tokens",
+                  "shape": [spec["batch"], cfg.max_len - 1],
+                  "dtype": "i32"}],
+                name, "decode")
+
+    # --- fused train steps -------------------------------------------------
+    for opt_name in FUSED_OPTS.get(name, []):
+        state = optim.init_opt_state(opt_name, params)
+        sspecs = _tree_specs(state)
+        snames = _tree_names(state, "opt")
+        step_fn = optim.make_train_step(loss_fn, opt_name)
+        lowered = _lower(step_fn, pspecs, sspecs, *bspecs, lr_spec)
+        inputs = (param_entries()
+                  + [_io_entry(n, s) for n, s in
+                     zip(snames, _flat_specs(state))]
+                  + [_io_entry(n, s) for n, s in batch]
+                  + [{"name": "lr", "shape": [], "dtype": "f32"}])
+        outputs = (param_entries("new_params")
+                   + [_io_entry(n, s) for n, s in
+                      zip(_tree_names(state, "new_opt"), _flat_specs(state))]
+                   + [{"name": "loss", "shape": [], "dtype": "f32"}])
+        w.write(f"{name}_train_{opt_name}", lowered, inputs, outputs,
+                name, f"train:{opt_name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args()
+    names = args.models.split(",") if args.models else list(MODELS)
+    w = ArtifactWriter(args.out_dir)
+    for name in names:
+        emit_model(w, name)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

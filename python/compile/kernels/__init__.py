@@ -1,0 +1,8 @@
+"""Layer-1 Pallas optimizer kernels (interpret=True on CPU PJRT).
+
+`sm3` — the paper's contribution (SM3-I and SM3-II fused updates).
+`baselines` — Adagrad, Adam, Adafactor, SGD+momentum comparators.
+`ref` — pure-jnp oracles every kernel is tested against.
+"""
+
+from . import baselines, ref, sm3  # noqa: F401

@@ -1,0 +1,207 @@
+"""Pallas kernels for the baseline optimizers the paper compares against:
+Adagrad (+momentum), Adam, Adafactor, and SGD with momentum.
+
+Same conventions as :mod:`sm3`: interpret=True (CPU PJRT), runtime scalar
+hyperparameters, block shapes sized for VMEM on real hardware. Each kernel
+must match its :mod:`ref` oracle bit-for-bit in op order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sm3 import BLOCK_M, BLOCK_N, _ceil_div, _safe_rsqrt
+
+
+def _flatten2(w):
+    """View an arbitrary-rank tensor as a 2-D matrix for elementwise kernels."""
+    if w.ndim == 2:
+        return w, w.shape
+    flat = w.reshape(-1)
+    return flat.reshape(1, flat.shape[0]), w.shape
+
+
+# ---------------------------------------------------------------------------
+# Adagrad (elementwise second moment — Eq. (1) of the paper) + momentum
+# ---------------------------------------------------------------------------
+
+def _adagrad_kernel(lr_ref, beta1_ref, w_ref, g_ref, acc_ref, mom_ref,
+                    new_w_ref, new_acc_ref, new_mom_ref):
+    g = g_ref[...]
+    nu = acc_ref[...] + g * g
+    upd = g * _safe_rsqrt(nu)
+    beta1 = beta1_ref[0, 0]
+    new_mom = beta1 * mom_ref[...] + (1.0 - beta1) * upd
+    new_acc_ref[...] = nu
+    new_mom_ref[...] = new_mom
+    new_w_ref[...] = w_ref[...] - lr_ref[0, 0] * new_mom
+
+
+def adagrad(w, g, acc, mom, lr, beta1,
+            block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """Fused Adagrad+momentum step for any-rank parameter.
+
+    Returns ``(new_w, new_acc, new_mom)``; matches :func:`ref.adagrad`.
+    """
+    w2, shape = _flatten2(w)
+    g2, _ = _flatten2(g)
+    acc2, _ = _flatten2(acc)
+    mom2, _ = _flatten2(mom)
+    m, n = w2.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (_ceil_div(m, bm), _ceil_div(n, bn))
+    lr = jnp.asarray(lr, w.dtype).reshape(1, 1)
+    beta1 = jnp.asarray(beta1, w.dtype).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    mat = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    outs = pl.pallas_call(
+        _adagrad_kernel,
+        grid=grid,
+        in_specs=[scalar, scalar, mat, mat, mat, mat],
+        out_specs=[mat, mat, mat],
+        out_shape=[jax.ShapeDtypeStruct((m, n), w.dtype)] * 3,
+        interpret=True,
+    )(lr, beta1, w2, g2, acc2, mom2)
+    return tuple(o.reshape(shape) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba) with bias correction
+# ---------------------------------------------------------------------------
+
+def _adam_kernel(lr_ref, beta1_ref, beta2_ref, t_ref, w_ref, g_ref,
+                 m_ref, v_ref, new_w_ref, new_m_ref, new_v_ref, *, eps):
+    g = g_ref[...]
+    b1 = beta1_ref[0, 0]
+    b2 = beta2_ref[0, 0]
+    t = t_ref[0, 0]
+    new_m = b1 * m_ref[...] + (1.0 - b1) * g
+    new_v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = new_m / (1.0 - b1**t)
+    vhat = new_v / (1.0 - b2**t)
+    new_m_ref[...] = new_m
+    new_v_ref[...] = new_v
+    new_w_ref[...] = w_ref[...] - lr_ref[0, 0] * mhat / (jnp.sqrt(vhat) + eps)
+
+
+def adam(w, g, m, v, t, lr, beta1, beta2, eps=1e-8,
+         block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """Fused Adam step for any-rank parameter.
+
+    ``t`` is the 1-based step count (runtime scalar). Returns
+    ``(new_w, new_m, new_v)``; matches :func:`ref.adam`.
+    """
+    import functools
+    w2, shape = _flatten2(w)
+    g2, _ = _flatten2(g)
+    m2, _ = _flatten2(m)
+    v2, _ = _flatten2(v)
+    mm, nn = w2.shape
+    bm, bn = min(block_m, mm), min(block_n, nn)
+    grid = (_ceil_div(mm, bm), _ceil_div(nn, bn))
+    mk = lambda x: jnp.asarray(x, w.dtype).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    mat = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    outs = pl.pallas_call(
+        functools.partial(_adam_kernel, eps=eps),
+        grid=grid,
+        in_specs=[scalar, scalar, scalar, scalar, mat, mat, mat, mat],
+        out_specs=[mat, mat, mat],
+        out_shape=[jax.ShapeDtypeStruct((mm, nn), w.dtype)] * 3,
+        interpret=True,
+    )(mk(lr), mk(beta1), mk(beta2), mk(t), w2, g2, m2, v2)
+    return tuple(o.reshape(shape) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moment for matrices.
+# ---------------------------------------------------------------------------
+# The factored statistics need global row/col means and a global update-RMS
+# for clipping, so the kernel runs as a single block over the matrix (the
+# state is what is factored, not the compute); larger matrices fall back to
+# a row-tiled grid with the reductions precomputed in plain jnp. We keep the
+# whole update in one pallas_call for parity with the other kernels.
+
+def _adafactor_matrix_kernel(lr_ref, beta1_ref, beta2_ref, w_ref, g_ref,
+                             vr_ref, vc_ref, mom_ref,
+                             new_w_ref, new_vr_ref, new_vc_ref, new_mom_ref,
+                             *, eps):
+    g = g_ref[...]
+    b1 = beta1_ref[0, 0]
+    b2 = beta2_ref[0, 0]
+    g2 = g * g + eps
+    new_vr = b2 * vr_ref[...] + (1.0 - b2) * jnp.mean(g2, axis=1)
+    new_vc = b2 * vc_ref[...] + (1.0 - b2) * jnp.mean(g2, axis=0)
+    vhat = new_vr[:, None] * new_vc[None, :] / jnp.mean(new_vr)
+    upd = g / jnp.sqrt(vhat)
+    rms = jnp.sqrt(jnp.mean(upd * upd))
+    upd = upd / jnp.maximum(1.0, rms)
+    new_mom = b1 * mom_ref[...] + (1.0 - b1) * upd
+    new_vr_ref[...] = new_vr
+    new_vc_ref[...] = new_vc
+    new_mom_ref[...] = new_mom
+    new_w_ref[...] = w_ref[...] - lr_ref[0, 0] * new_mom
+
+
+def adafactor_matrix(w, g, vr, vc, mom, lr, beta1, beta2, eps=1e-30):
+    """Fused Adafactor step for an m×n matrix.
+
+    Returns ``(new_w, new_vr, new_vc, new_mom)``; matches
+    :func:`ref.adafactor_matrix`.
+    """
+    import functools
+    m, n = w.shape
+    mk = lambda x: jnp.asarray(x, w.dtype).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
+    mat = pl.BlockSpec((m, n), lambda: (0, 0))
+    rowspec = pl.BlockSpec((m,), lambda: (0,))
+    colspec = pl.BlockSpec((n,), lambda: (0,))
+    return pl.pallas_call(
+        functools.partial(_adafactor_matrix_kernel, eps=eps),
+        grid=(),
+        in_specs=[scalar, scalar, scalar, mat, mat, rowspec, colspec, mat],
+        out_specs=[mat, rowspec, colspec, mat],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), w.dtype),
+            jax.ShapeDtypeStruct((m,), w.dtype),
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((m, n), w.dtype),
+        ],
+        interpret=True,
+    )(mk(lr), mk(beta1), mk(beta2), w, g, vr, vc, mom)
+
+
+# ---------------------------------------------------------------------------
+# SGD + heavy-ball momentum
+# ---------------------------------------------------------------------------
+
+def _sgdm_kernel(lr_ref, beta1_ref, w_ref, g_ref, mom_ref,
+                 new_w_ref, new_mom_ref):
+    new_mom = beta1_ref[0, 0] * mom_ref[...] + g_ref[...]
+    new_mom_ref[...] = new_mom
+    new_w_ref[...] = w_ref[...] - lr_ref[0, 0] * new_mom
+
+
+def sgd_momentum(w, g, mom, lr, beta1,
+                 block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """Fused heavy-ball SGD step. Returns ``(new_w, new_mom)``."""
+    w2, shape = _flatten2(w)
+    g2, _ = _flatten2(g)
+    mom2, _ = _flatten2(mom)
+    m, n = w2.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (_ceil_div(m, bm), _ceil_div(n, bn))
+    mk = lambda x: jnp.asarray(x, w.dtype).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    mat = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    outs = pl.pallas_call(
+        _sgdm_kernel,
+        grid=grid,
+        in_specs=[scalar, scalar, mat, mat, mat],
+        out_specs=[mat, mat],
+        out_shape=[jax.ShapeDtypeStruct((m, n), w.dtype)] * 2,
+        interpret=True,
+    )(mk(lr), mk(beta1), w2, g2, mom2)
+    return tuple(o.reshape(shape) for o in outs)

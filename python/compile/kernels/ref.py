@@ -1,0 +1,178 @@
+"""Pure-jnp reference oracles for every optimizer update kernel.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+`optim::` bank) are tested against. Every function is a *single step*:
+it takes the current parameter/state and one gradient and returns the new
+parameter/state. All follow the paper's convention 0/0 = 0 (no epsilon in
+the SM3/Adagrad preconditioner, matching Algorithm SM3-I/II verbatim).
+
+Shapes
+------
+Vector parameters use the singleton cover (== Adagrad, see paper §3).
+Matrix parameters use the co-dimension-1 cover {rows} ∪ {cols}:
+  row accumulator  r ∈ R^m,  col accumulator  c ∈ R^n.
+Rank-p tensors use p slice accumulators, one per dimension.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _safe_rsqrt(nu):
+    """1/sqrt(nu) with the paper's 0/0 = 0 convention."""
+    return jnp.where(nu > 0.0, 1.0 / jnp.sqrt(jnp.where(nu > 0.0, nu, 1.0)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SM3-II (paper Algorithm SM3-II), matrix case with {rows, cols} cover.
+# ---------------------------------------------------------------------------
+
+def sm3ii_matrix(w, g, row, col, mom, lr, beta1):
+    """One SM3-II step for an m×n matrix parameter.
+
+    nu'_t(i,j) = min(row_{t-1}(i), col_{t-1}(j)) + g_t(i,j)^2
+    w         -= lr * m_t          (m_t = beta1 m + (1-beta1) g/sqrt(nu'))
+    row_t(i)   = max_j nu'_t(i,j)
+    col_t(j)   = max_i nu'_t(i,j)
+    """
+    nu = jnp.minimum(row[:, None], col[None, :]) + g * g
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    new_w = w - lr * new_mom
+    new_row = jnp.max(nu, axis=1)
+    new_col = jnp.max(nu, axis=0)
+    return new_w, new_row, new_col, new_mom
+
+
+def sm3ii_vector(w, g, acc, mom, lr, beta1):
+    """SM3-II for a vector with the singleton cover — exactly Adagrad."""
+    nu = acc + g * g
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    return w - lr * new_mom, nu, new_mom
+
+
+def sm3ii_tensor(w, g, accs, mom, lr, beta1):
+    """SM3-II for a rank-p tensor with the co-dim-1 cover (p accumulators).
+
+    `accs` is a tuple of p vectors, accs[a].shape == (w.shape[a],).
+    """
+    p = w.ndim
+    nu = None
+    for a in range(p):
+        shape = [1] * p
+        shape[a] = w.shape[a]
+        acc_b = accs[a].reshape(shape)
+        nu = acc_b if nu is None else jnp.minimum(nu, acc_b)
+    nu = nu + g * g
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    new_w = w - lr * new_mom
+    new_accs = tuple(
+        jnp.max(nu, axis=tuple(b for b in range(p) if b != a)) for a in range(p)
+    )
+    return new_w, new_accs, new_mom
+
+
+# ---------------------------------------------------------------------------
+# SM3-I (paper Algorithm SM3-I) — kept for the Fig. 5 tightness comparison.
+# ---------------------------------------------------------------------------
+
+def sm3i_matrix(w, g, row, col, mom, lr, beta1):
+    """One SM3-I step for an m×n matrix parameter.
+
+    mu_t(row i) = row_{t-1}(i) + max_j g^2(i,j)      (ditto columns)
+    nu_t(i,j)   = min(mu_t(row i), mu_t(col j))
+    w          -= lr * m_t     (momentum as in sm3ii_matrix)
+    """
+    g2 = g * g
+    new_row = row + jnp.max(g2, axis=1)
+    new_col = col + jnp.max(g2, axis=0)
+    nu = jnp.minimum(new_row[:, None], new_col[None, :])
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    new_w = w - lr * new_mom
+    return new_w, new_row, new_col, new_mom
+
+
+def sm3i_tensor(w, g, accs, mom, lr, beta1):
+    """SM3-I for a rank-p tensor with the co-dim-1 cover (p accumulators)."""
+    p = w.ndim
+    g2 = g * g
+    new_accs = tuple(
+        accs[a] + jnp.max(g2, axis=tuple(b for b in range(p) if b != a))
+        for a in range(p)
+    )
+    nu = None
+    for a in range(p):
+        shape = [1] * p
+        shape[a] = w.shape[a]
+        acc_b = new_accs[a].reshape(shape)
+        nu = acc_b if nu is None else jnp.minimum(nu, acc_b)
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    return w - lr * new_mom, new_accs, new_mom
+
+
+# ---------------------------------------------------------------------------
+# Baselines: Adagrad, Adam, Adafactor, SGD with momentum.
+# ---------------------------------------------------------------------------
+
+def adagrad(w, g, acc, mom, lr, beta1):
+    """Adagrad (Eq. 1–2 of the paper) with heavy-ball momentum."""
+    nu = acc + g * g
+    upd = g * _safe_rsqrt(nu)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    return w - lr * new_mom, nu, new_mom
+
+
+def adam(w, g, m, v, t, lr, beta1, beta2, eps=1e-8):
+    """Adam (Kingma & Ba) with bias correction; `t` is the 1-based step.
+
+    Bias-correction powers are computed in f32, matching the kernel (and
+    the Rust implementation) exactly.
+    """
+    b1 = jnp.float32(beta1)
+    b2 = jnp.float32(beta2)
+    tf = jnp.float32(t)
+    new_m = b1 * m + (1.0 - b1) * g
+    new_v = b2 * v + (1.0 - b2) * g * g
+    mhat = new_m / (1.0 - b1**tf)
+    vhat = new_v / (1.0 - b2**tf)
+    new_w = w - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_w, new_m, new_v
+
+
+def adafactor_matrix(w, g, vr, vc, mom, lr, beta1, beta2, eps=1e-30):
+    """Adafactor (Shazeer & Stern) factored second moment for a matrix.
+
+    R_t = b2 R + (1-b2) rowmean(g^2+eps);  C_t likewise over columns;
+    Vhat = R C^T / mean(R);  update = g / sqrt(Vhat), clipped at RMS 1.0
+    (the paper's d=1.0 update clipping), then beta1 momentum.
+    """
+    g2 = g * g + eps
+    new_vr = beta2 * vr + (1.0 - beta2) * jnp.mean(g2, axis=1)
+    new_vc = beta2 * vc + (1.0 - beta2) * jnp.mean(g2, axis=0)
+    vhat = new_vr[:, None] * new_vc[None, :] / jnp.mean(new_vr)
+    upd = g / jnp.sqrt(vhat)
+    rms = jnp.sqrt(jnp.mean(upd * upd))
+    upd = upd / jnp.maximum(1.0, rms)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    return w - lr * new_mom, new_vr, new_vc, new_mom
+
+
+def adafactor_vector(w, g, v, mom, lr, beta1, beta2, eps=1e-30):
+    """Adafactor falls back to an unfactored second moment for vectors."""
+    new_v = beta2 * v + (1.0 - beta2) * (g * g + eps)
+    upd = g / jnp.sqrt(new_v)
+    rms = jnp.sqrt(jnp.mean(upd * upd))
+    upd = upd / jnp.maximum(1.0, rms)
+    new_mom = beta1 * mom + (1.0 - beta1) * upd
+    return w - lr * new_mom, new_v, new_mom
+
+
+def sgd_momentum(w, g, mom, lr, beta1):
+    """Heavy-ball SGD: m = beta1 m + g; w -= lr m."""
+    new_mom = beta1 * mom + g
+    return w - lr * new_mom, new_mom

@@ -1,0 +1,4 @@
+"""Layer-2 pure-JAX model zoo: transformer LM, seq2seq translation,
+BERT-style masked LM, and a small convnet."""
+
+from . import bert, convnet, transformer  # noqa: F401

@@ -1,0 +1,87 @@
+"""BERT-style bidirectional masked-LM model (Layer 2).
+
+Mirrors the paper's §5.2 workload: a bidirectional transformer encoder
+jointly trained on a Masked-LM objective. (We drop the NSP head: the
+paper's reported metric — Fig. 3 — is Masked-LM accuracy; NSP adds a
+2-class head that contributes nothing to the memory/convergence story.)
+
+Batch layout (all int32):
+  tokens     (B, S)    input with [MASK] already substituted
+  positions  (B, P)    indices of the masked positions
+  targets    (B, P)    original token ids at those positions
+  weights    (B, P)    1.0 for real predictions, 0.0 for padding   (f32)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .transformer import (
+    TransformerConfig,
+    _block_params,
+    _dense_init,
+    _layer_norm,
+    _self_attn_block,
+)
+
+
+def init_mlm_params(cfg: TransformerConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "embed": _dense_init(rng, (cfg.vocab, cfg.d_model), scale=0.02),
+        "pos": _dense_init(rng, (cfg.max_len, cfg.d_model), scale=0.02),
+        "lnf_scale": jnp.ones(cfg.d_model, jnp.float32),
+        "lnf_bias": jnp.zeros(cfg.d_model, jnp.float32),
+        # MLM head: dense transform + layernorm, tied output embedding.
+        "mlm_w": _dense_init(rng, (cfg.d_model, cfg.d_model)),
+        "mlm_b": jnp.zeros(cfg.d_model, jnp.float32),
+        "mlm_ln_scale": jnp.ones(cfg.d_model, jnp.float32),
+        "mlm_ln_bias": jnp.zeros(cfg.d_model, jnp.float32),
+        "mlm_out_bias": jnp.zeros(cfg.vocab, jnp.float32),
+    }
+    for l in range(cfg.n_layers):
+        params[f"block{l}"] = _block_params(rng, cfg, cross_attention=False)
+    return params
+
+
+def _encode(params, tokens, cfg: TransformerConfig):
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:S][None, :, :]
+    mask = jnp.zeros((S, S), jnp.float32)  # fully bidirectional
+    for l in range(cfg.n_layers):
+        x = _self_attn_block(params[f"block{l}"], x, cfg, mask)
+    return _layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+
+
+def mlm_logits(params, tokens, positions, cfg: TransformerConfig):
+    """Logits at the masked positions only: (B, P, V)."""
+    x = _encode(params, tokens, cfg)                       # (B, S, D)
+    gathered = jnp.take_along_axis(x, positions[..., None], axis=1)
+    h = gathered @ params["mlm_w"] + params["mlm_b"]
+    h = jax.nn.gelu(h)
+    h = _layer_norm(h, params["mlm_ln_scale"], params["mlm_ln_bias"])
+    return h @ params["embed"].T + params["mlm_out_bias"]
+
+
+def mlm_loss(params, tokens, positions, targets, weights,
+             cfg: TransformerConfig):
+    """Weighted masked-LM cross-entropy (scalar)."""
+    logits = mlm_logits(params, tokens, positions, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def mlm_eval(params, tokens, positions, targets, weights,
+             cfg: TransformerConfig):
+    """Returns (loss, n_correct, n_total) for Masked-LM accuracy (Fig. 3)."""
+    logits = mlm_logits(params, tokens, positions, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == targets).astype(jnp.float32) * weights)
+    total = jnp.sum(weights)
+    return loss, correct, total

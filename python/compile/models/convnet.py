@@ -1,0 +1,85 @@
+"""Small convolutional image classifier (Layer 2).
+
+Stands in for AmoebaNet-D on ImageNet (paper §5.3, Fig. 4). The point of
+this workload in the reproduction is (a) a second domain where SM3 is
+compared against SGD+momentum and (b) rank-4 convolution kernels, which
+exercise the co-dimension-1 tensor cover (4 slice accumulators per kernel,
+see Fig. 7's conv activation patterns).
+
+Input: images (B, H, W, C) f32, labels (B,) int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetConfig:
+    height: int = 16
+    width: int = 16
+    channels: int = 3
+    widths: tuple = (16, 32, 64)   # channels per stage (3x3 conv + 2x2 pool)
+    n_classes: int = 10
+
+
+def init_convnet_params(cfg: ConvNetConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = {}
+    cin = cfg.channels
+    for i, cout in enumerate(cfg.widths):
+        fan_in = 3 * 3 * cin
+        params[f"conv{i}_w"] = jnp.asarray(
+            rng.normal(0.0, (2.0 / fan_in) ** 0.5, size=(3, 3, cin, cout)),
+            jnp.float32)
+        params[f"conv{i}_b"] = jnp.zeros(cout, jnp.float32)
+        cin = cout
+    params["fc_w"] = jnp.asarray(
+        rng.normal(0.0, (1.0 / cin) ** 0.5, size=(cin, cfg.n_classes)),
+        jnp.float32)
+    params["fc_b"] = jnp.zeros(cfg.n_classes, jnp.float32)
+    return params
+
+
+def convnet_logits(params, images, cfg: ConvNetConfig):
+    x = images
+    for i in range(len(cfg.widths)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"],
+            window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}_b"])
+        # 2x2 average pool, stride 2
+        x = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    x = jnp.mean(x, axis=(1, 2))            # global average pool
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def convnet_loss(params, images, labels, cfg: ConvNetConfig):
+    logits = convnet_logits(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def convnet_eval(params, images, labels, cfg: ConvNetConfig, k: int = 5):
+    """Returns (loss, top1_correct, topk_correct) counts for Fig. 4.
+
+    Top-k is computed by rank counting rather than `lax.top_k`: the topk
+    HLO op grew a `largest=` attribute that the pinned xla_extension
+    0.5.1 text parser rejects, while comparisons parse everywhere.
+    """
+    logits = convnet_logits(params, images, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    top1 = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)
+    rank = jnp.sum((logits > label_logit).astype(jnp.int32), axis=-1)
+    topk = jnp.sum((rank < k).astype(jnp.float32))
+    return loss, top1, topk

@@ -1,0 +1,244 @@
+"""Pure-JAX transformer models (Layer 2).
+
+Two variants, mirroring the paper's workloads:
+
+* a decoder-only language model (`init_lm_params` / `lm_loss`) — the
+  BERT/LM-style experiments and the end-to-end driver;
+* an encoder-decoder translation model (`init_mt_params` / `mt_loss` /
+  `mt_greedy_decode`) — the WMT'14 experiments (Fig. 2 / Fig. 6 / Table 1).
+
+No flax/haiku — parameters are plain nested dicts of jnp arrays so the AOT
+manifest can name every leaf deterministically and the Rust side can map
+leaves to optimizer slots. All matrices are 2-D (embeddings, projections),
+which is exactly the case the SM3 {rows, cols} cover targets; biases and
+layernorm scales are vectors (singleton cover).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    max_len: int = 64
+    dtype: object = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _dense_init(rng, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+
+def _block_params(rng, cfg: TransformerConfig, cross_attention: bool):
+    d = cfg.d_model
+    p = {
+        "ln1_scale": jnp.ones(d, jnp.float32),
+        "ln1_bias": jnp.zeros(d, jnp.float32),
+        "wq": _dense_init(rng, (d, d)),
+        "wk": _dense_init(rng, (d, d)),
+        "wv": _dense_init(rng, (d, d)),
+        "wo": _dense_init(rng, (d, d)),
+        "ln2_scale": jnp.ones(d, jnp.float32),
+        "ln2_bias": jnp.zeros(d, jnp.float32),
+        "ffn_w1": _dense_init(rng, (d, cfg.d_ff)),
+        "ffn_b1": jnp.zeros(cfg.d_ff, jnp.float32),
+        "ffn_w2": _dense_init(rng, (cfg.d_ff, d)),
+        "ffn_b2": jnp.zeros(d, jnp.float32),
+    }
+    if cross_attention:
+        p.update({
+            "lnx_scale": jnp.ones(d, jnp.float32),
+            "lnx_bias": jnp.zeros(d, jnp.float32),
+            "xwq": _dense_init(rng, (d, d)),
+            "xwk": _dense_init(rng, (d, d)),
+            "xwv": _dense_init(rng, (d, d)),
+            "xwo": _dense_init(rng, (d, d)),
+        })
+    return p
+
+
+def init_lm_params(cfg: TransformerConfig, seed: int = 0):
+    """Decoder-only LM parameters: embedding (tied softmax), learned
+    positions, `n_layers` causal blocks, final layernorm."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "embed": _dense_init(rng, (cfg.vocab, cfg.d_model), scale=0.02),
+        "pos": _dense_init(rng, (cfg.max_len, cfg.d_model), scale=0.02),
+        "lnf_scale": jnp.ones(cfg.d_model, jnp.float32),
+        "lnf_bias": jnp.zeros(cfg.d_model, jnp.float32),
+    }
+    for l in range(cfg.n_layers):
+        params[f"block{l}"] = _block_params(rng, cfg, cross_attention=False)
+    return params
+
+
+def init_mt_params(cfg: TransformerConfig, seed: int = 0):
+    """Encoder-decoder parameters; source/target share the embedding table
+    (word-piece vocab is shared, as in the paper's setup)."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "embed": _dense_init(rng, (cfg.vocab, cfg.d_model), scale=0.02),
+        "pos_src": _dense_init(rng, (cfg.max_len, cfg.d_model), scale=0.02),
+        "pos_tgt": _dense_init(rng, (cfg.max_len, cfg.d_model), scale=0.02),
+        "enc_lnf_scale": jnp.ones(cfg.d_model, jnp.float32),
+        "enc_lnf_bias": jnp.zeros(cfg.d_model, jnp.float32),
+        "dec_lnf_scale": jnp.ones(cfg.d_model, jnp.float32),
+        "dec_lnf_bias": jnp.zeros(cfg.d_model, jnp.float32),
+    }
+    for l in range(cfg.n_layers):
+        params[f"enc{l}"] = _block_params(rng, cfg, cross_attention=False)
+        params[f"dec{l}"] = _block_params(rng, cfg, cross_attention=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _attention(q, k, v, cfg: TransformerConfig, mask):
+    """Multi-head attention. q/k/v: (B, S, D) pre-projection inputs already
+    projected; mask: (S_q, S_k) additive (0 or -inf)."""
+    B, Sq, D = q.shape
+    Sk = k.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    q = q.reshape(B, Sq, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, Sk, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Sk, h, dh).transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    logits = logits + mask[None, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.transpose(0, 2, 1, 3).reshape(B, Sq, D)
+
+
+def _self_attn_block(p, x, cfg, mask):
+    h = _layer_norm(x, p["ln1_scale"], p["ln1_bias"])
+    attn = _attention(h @ p["wq"], h @ p["wk"], h @ p["wv"], cfg, mask)
+    x = x + attn @ p["wo"]
+    h = _layer_norm(x, p["ln2_scale"], p["ln2_bias"])
+    ff = jax.nn.relu(h @ p["ffn_w1"] + p["ffn_b1"]) @ p["ffn_w2"] + p["ffn_b2"]
+    return x + ff
+
+
+def _cross_attn(p, x, enc_out, cfg, mask):
+    h = _layer_norm(x, p["lnx_scale"], p["lnx_bias"])
+    attn = _attention(h @ p["xwq"], enc_out @ p["xwk"], enc_out @ p["xwv"],
+                      cfg, mask)
+    return x + attn @ p["xwo"]
+
+
+def _causal_mask(s):
+    return jnp.where(jnp.tril(jnp.ones((s, s), bool)), 0.0, -jnp.inf)
+
+
+def lm_logits(params, tokens, cfg: TransformerConfig):
+    """Decoder-only forward: tokens (B, S) int32 → logits (B, S, V)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:S][None, :, :]
+    mask = _causal_mask(S)
+    for l in range(cfg.n_layers):
+        x = _self_attn_block(params[f"block{l}"], x, cfg, mask)
+    x = _layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+    return x @ params["embed"].T
+
+
+def lm_loss(params, tokens, cfg: TransformerConfig):
+    """Next-token cross-entropy, averaged over all (B, S-1) positions."""
+    logits = lm_logits(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def _encode(params, src, cfg):
+    B, S = src.shape
+    x = params["embed"][src] + params["pos_src"][:S][None, :, :]
+    mask = jnp.zeros((S, S), jnp.float32)
+    for l in range(cfg.n_layers):
+        x = _self_attn_block(params[f"enc{l}"], x, cfg, mask)
+    return _layer_norm(x, params["enc_lnf_scale"], params["enc_lnf_bias"])
+
+
+def _decode(params, enc_out, tgt_in, cfg):
+    B, S = tgt_in.shape
+    Sk = enc_out.shape[1]
+    x = params["embed"][tgt_in] + params["pos_tgt"][:S][None, :, :]
+    causal = _causal_mask(S)
+    xmask = jnp.zeros((S, Sk), jnp.float32)
+    for l in range(cfg.n_layers):
+        p = params[f"dec{l}"]
+        h = _layer_norm(x, p["ln1_scale"], p["ln1_bias"])
+        attn = _attention(h @ p["wq"], h @ p["wk"], h @ p["wv"], cfg, causal)
+        x = x + attn @ p["wo"]
+        x = _cross_attn(p, x, enc_out, cfg, xmask)
+        h = _layer_norm(x, p["ln2_scale"], p["ln2_bias"])
+        ff = jax.nn.relu(h @ p["ffn_w1"] + p["ffn_b1"]) @ p["ffn_w2"] + p["ffn_b2"]
+        x = x + ff
+    x = _layer_norm(x, params["dec_lnf_scale"], params["dec_lnf_bias"])
+    return x @ params["embed"].T
+
+
+def mt_loss(params, src, tgt, cfg: TransformerConfig, pad_id: int = 0):
+    """Teacher-forced translation loss; `tgt` includes BOS at position 0.
+    PAD positions (token == pad_id) are masked out of the mean."""
+    enc = _encode(params, src, cfg)
+    logits = _decode(params, enc, tgt[:, :-1], cfg)
+    targets = tgt[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    wmask = (targets != pad_id).astype(jnp.float32)
+    return jnp.sum(nll * wmask) / jnp.maximum(jnp.sum(wmask), 1.0)
+
+
+def mt_greedy_decode(params, src, cfg: TransformerConfig, bos_id: int = 1,
+                     max_len: int | None = None):
+    """Greedy decode entirely inside the artifact (no Python at serve time).
+
+    Runs the full decoder once per output position via `lax.scan` (no KV
+    cache — O(L²) attention recompute, fine at these lengths) and returns
+    (B, max_len) int32 tokens.
+    """
+    max_len = max_len or cfg.max_len
+    B = src.shape[0]
+    enc = _encode(params, src, cfg)
+
+    def step(tgt, t):
+        logits = _decode(params, enc, tgt, cfg)          # (B, L, V)
+        nxt = jnp.argmax(logits[:, t, :], axis=-1).astype(jnp.int32)
+        tgt = tgt.at[:, t + 1].set(nxt)
+        return tgt, None
+
+    tgt0 = jnp.full((B, max_len), 0, jnp.int32).at[:, 0].set(bos_id)
+    tgt, _ = jax.lax.scan(step, tgt0, jnp.arange(max_len - 1))
+    return tgt[:, 1:]
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,249 @@
+"""Layer-2 optimizer glue: state trees + fused train steps.
+
+Binds the Layer-1 Pallas kernels to arbitrary parameter pytrees. Each
+optimizer defines
+  * ``init(params)``  → state pytree (dict leaf-name → slot dict), and
+  * ``apply(params, grads, state, lr)`` → (new_params, new_state),
+dispatching on tensor rank:
+
+  rank 1 (biases, layernorm)   singleton cover  → sm3ii_vector kernel
+  rank 2 (all big matrices)    {rows, cols}     → sm3ii_matrix kernel
+  rank ≥3 (conv kernels)       co-dim-1 slices  → jnp path (ref.sm3ii_tensor)
+
+The rank ≥3 jnp path is deliberate: >99% of transformer parameters are
+matrices, which is where the Pallas kernel sits; conv tensors go through
+the identical math in plain jnp (tested equal in python/tests).
+
+Hyperparameters (beta1, beta2, eps) are baked per artifact; the learning
+rate is a runtime scalar so a single artifact serves the whole
+warmup/decay schedule. Adam's step count lives in the state ("t" slot).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import baselines, ref, sm3
+
+OPTIMIZERS = ("sm3", "sm3i", "adagrad", "adam", "adafactor", "sgdm")
+
+
+# ---------------------------------------------------------------------------
+# Leaf naming — must match the Rust side's manifest ordering exactly.
+# ---------------------------------------------------------------------------
+
+def leaf_names(params, prefix=""):
+    """Deterministic leaf names matching jax's dict flattening (sorted keys)."""
+    names = []
+    for k in sorted(params.keys()):
+        v = params[k]
+        name = f"{prefix}{k}"
+        if isinstance(v, dict):
+            names.extend(leaf_names(v, prefix=name + "/"))
+        else:
+            names.append(name)
+    return names
+
+
+def _map_leaves(fn, params, prefix=""):
+    out = {}
+    for k in sorted(params.keys()):
+        v = params[k]
+        name = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out[k] = _map_leaves(fn, v, prefix=name + "/")
+        else:
+            out[k] = fn(name, v)
+    return out
+
+
+def _zip_leaves(fn, params, grads, state):
+    """Apply fn(leaf_w, leaf_g, leaf_state) over aligned pytrees; returns
+    (new_params, new_state) with the same structure."""
+    new_p, new_s = {}, {}
+    for k in sorted(params.keys()):
+        if isinstance(params[k], dict):
+            new_p[k], new_s[k] = _zip_leaves(fn, params[k], grads[k], state[k])
+        else:
+            new_p[k], new_s[k] = fn(params[k], grads[k], state[k])
+    return new_p, new_s
+
+
+def _vec(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SM3-II (the paper's shipped variant)
+# ---------------------------------------------------------------------------
+
+def sm3_init(params):
+    def leaf(_name, w):
+        if w.ndim <= 1:
+            return {"acc0": _vec(w.shape), "mom": _vec(w.shape)}
+        return {**{f"acc{a}": _vec((w.shape[a],)) for a in range(w.ndim)},
+                "mom": _vec(w.shape)}
+    return _map_leaves(leaf, params)
+
+
+def sm3_apply(params, grads, state, lr, beta1=0.9):
+    def leaf(w, g, s):
+        if w.ndim == 1:
+            nw, nacc, nmom = sm3.sm3ii_vector(w, g, s["acc0"], s["mom"], lr, beta1)
+            return nw, {"acc0": nacc, "mom": nmom}
+        if w.ndim == 2:
+            nw, nr, nc, nmom = sm3.sm3ii_matrix(
+                w, g, s["acc0"], s["acc1"], s["mom"], lr, beta1)
+            return nw, {"acc0": nr, "acc1": nc, "mom": nmom}
+        accs = tuple(s[f"acc{a}"] for a in range(w.ndim))
+        nw, naccs, nmom = ref.sm3ii_tensor(w, g, accs, s["mom"], lr, beta1)
+        ns = {f"acc{a}": naccs[a] for a in range(w.ndim)}
+        ns["mom"] = nmom
+        return nw, ns
+    return _zip_leaves(leaf, params, grads, state)
+
+
+# ---------------------------------------------------------------------------
+# SM3-I (kept for the Fig. 5 tightness comparison)
+# ---------------------------------------------------------------------------
+
+def sm3i_init(params):
+    return sm3_init(params)
+
+
+def sm3i_apply(params, grads, state, lr, beta1=0.9):
+    def leaf(w, g, s):
+        if w.ndim == 1:
+            # singleton cover: SM3-I degenerates to Adagrad, same as SM3-II
+            nw, nacc, nmom = sm3.sm3ii_vector(w, g, s["acc0"], s["mom"], lr, beta1)
+            return nw, {"acc0": nacc, "mom": nmom}
+        if w.ndim == 2:
+            nw, nr, nc, nmom = sm3.sm3i_matrix(
+                w, g, s["acc0"], s["acc1"], s["mom"], lr, beta1)
+            return nw, {"acc0": nr, "acc1": nc, "mom": nmom}
+        accs = tuple(s[f"acc{a}"] for a in range(w.ndim))
+        nw, naccs, nmom = ref.sm3i_tensor(w, g, accs, s["mom"], lr, beta1)
+        ns = {f"acc{a}": naccs[a] for a in range(w.ndim)}
+        ns["mom"] = nmom
+        return nw, ns
+    return _zip_leaves(leaf, params, grads, state)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def adagrad_init(params):
+    return _map_leaves(
+        lambda _n, w: {"acc": _vec(w.shape), "mom": _vec(w.shape)}, params)
+
+
+def adagrad_apply(params, grads, state, lr, beta1=0.9):
+    def leaf(w, g, s):
+        nw, nacc, nmom = baselines.adagrad(w, g, s["acc"], s["mom"], lr, beta1)
+        return nw, {"acc": nacc, "mom": nmom}
+    return _zip_leaves(leaf, params, grads, state)
+
+
+def adam_init(params):
+    st = _map_leaves(
+        lambda _n, w: {"m": _vec(w.shape), "v": _vec(w.shape)}, params)
+    st["_t"] = jnp.zeros((), jnp.float32)
+    return st
+
+
+def adam_apply(params, grads, state, lr, beta1=0.9, beta2=0.98, eps=1e-8):
+    t = state["_t"] + 1.0
+    def leaf(w, g, s):
+        nw, nm, nv = baselines.adam(w, g, s["m"], s["v"], t, lr, beta1, beta2,
+                                    eps=eps)
+        return nw, {"m": nm, "v": nv}
+    inner = {k: v for k, v in state.items() if k != "_t"}
+    new_p, new_s = _zip_leaves(leaf, params, grads, inner)
+    new_s["_t"] = t
+    return new_p, new_s
+
+
+def adafactor_init(params):
+    def leaf(_name, w):
+        if w.ndim >= 2:
+            m = 1
+            for s in w.shape[:-1]:
+                m *= int(s)
+            return {"vr": _vec((m,)), "vc": _vec((w.shape[-1],)),
+                    "mom": _vec(w.shape)}
+        return {"v": _vec(w.shape), "mom": _vec(w.shape)}
+    return _map_leaves(leaf, params)
+
+
+def adafactor_apply(params, grads, state, lr, beta1=0.9, beta2=0.98):
+    def leaf(w, g, s):
+        if w.ndim >= 2:
+            # rank>2 folds leading dims — Adafactor is matrix-only (paper §4)
+            shp = w.shape
+            w2 = w.reshape(-1, shp[-1])
+            g2 = g.reshape(-1, shp[-1])
+            mom2 = s["mom"].reshape(-1, shp[-1])
+            nw, nvr, nvc, nmom = baselines.adafactor_matrix(
+                w2, g2, s["vr"], s["vc"], mom2, lr, beta1, beta2)
+            return nw.reshape(shp), {"vr": nvr, "vc": nvc,
+                                     "mom": nmom.reshape(shp)}
+        nw, nv, nmom = ref.adafactor_vector(w, g, s["v"], s["mom"], lr,
+                                            beta1, beta2)
+        return nw, {"v": nv, "mom": nmom}
+    return _zip_leaves(leaf, params, grads, state)
+
+
+def sgdm_init(params):
+    return _map_leaves(lambda _n, w: {"mom": _vec(w.shape)}, params)
+
+
+def sgdm_apply(params, grads, state, lr, beta1=0.9):
+    def leaf(w, g, s):
+        nw, nmom = baselines.sgd_momentum(w, g, s["mom"], lr, beta1)
+        return nw, {"mom": nmom}
+    return _zip_leaves(leaf, params, grads, state)
+
+
+# ---------------------------------------------------------------------------
+# Registry + fused train-step builder
+# ---------------------------------------------------------------------------
+
+_INIT = {
+    "sm3": sm3_init, "sm3i": sm3i_init, "adagrad": adagrad_init,
+    "adam": adam_init, "adafactor": adafactor_init, "sgdm": sgdm_init,
+}
+_APPLY = {
+    "sm3": sm3_apply, "sm3i": sm3i_apply, "adagrad": adagrad_apply,
+    "adam": adam_apply, "adafactor": adafactor_apply, "sgdm": sgdm_apply,
+}
+
+
+def init_opt_state(name, params):
+    return _INIT[name](params)
+
+
+def apply_updates(name, params, grads, state, lr, **hparams):
+    return _APPLY[name](params, grads, state, lr, **hparams)
+
+
+def make_train_step(loss_fn, opt_name, **hparams):
+    """Build the fused train step lowered by aot.py:
+    (params, opt_state, *batch, lr) → (new_params, new_state, loss)."""
+    def train_step(params, opt_state, *batch_and_lr):
+        *batch, lr = batch_and_lr
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        new_params, new_state = apply_updates(
+            opt_name, params, grads, opt_state, lr, **hparams)
+        return new_params, new_state, loss
+    return train_step
+
+
+def make_grad_step(loss_fn):
+    """Split-path artifact: (params, *batch) → (loss, grads). The Rust
+    `optim::` bank applies the update host-side."""
+    def grad_step(params, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        return loss, grads
+    return grad_step

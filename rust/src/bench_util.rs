@@ -1,0 +1,147 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmed-up, repeated timing with median/p10/p90 reporting and a
+//! throughput helper. Bench binaries (`rust/benches/*.rs`, harness=false)
+//! use this to print the rows that regenerate the paper's tables/figures;
+//! output is plain text + CSV so EXPERIMENTS.md can quote it directly.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// items/second at the median.
+    pub fn throughput(&self, items_per_iter: usize) -> f64 {
+        items_per_iter as f64 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} median  [{:>10} .. {:>10}]  ({} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Time `f` with automatic warmup; targets ~`budget` of measurement wall
+/// time, at least `min_iters` iterations.
+pub fn bench(name: &str, budget: Duration, min_iters: usize,
+             mut f: impl FnMut()) -> Stats {
+    // warmup: run until ~10% of budget spent or 3 iters
+    let warm_start = Instant::now();
+    let mut warm = 0;
+    while warm < 3 || (warm_start.elapsed() < budget / 10 && warm < 1000) {
+        f();
+        warm += 1;
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (start.elapsed() < budget && samples.len() < 10_000)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        median: samples[n / 2],
+        p10: samples[n / 10],
+        p90: samples[(n * 9) / 10],
+        mean,
+    }
+}
+
+/// Simple CSV writer used by bench binaries to persist series for
+/// EXPERIMENTS.md (and external plotting).
+pub struct CsvWriter {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, header: &str) -> std::io::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        use std::io::Write;
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(out, "{header}")?;
+        Ok(Self { out })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        use std::io::Write;
+        writeln!(self.out, "{}", fields.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", Duration::from_millis(20), 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median > Duration::ZERO);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(2),
+            p10: Duration::from_secs(2),
+            p90: Duration::from_secs(2),
+            mean: Duration::from_secs(2),
+        };
+        assert!((s.throughput(100) - 50.0).abs() < 1e-9);
+    }
+}

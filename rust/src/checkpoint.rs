@@ -1,0 +1,155 @@
+//! Checkpointing: a self-describing binary format for named tensors.
+//!
+//! Used for (a) the initial parameters exported by `aot.py` (so Rust and
+//! JAX train from bit-identical initializations), and (b) training
+//! save/restore of params + optimizer state.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   8 bytes   "SM3CKPT1"
+//! count   u32
+//! entry*  name_len u32, name bytes (utf-8),
+//!         rank u32, dims u64 × rank,
+//!         f32 data × Π dims
+//! ```
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SM3CKPT1";
+
+/// Write named tensors to `path`.
+pub fn save(path: impl AsRef<Path>, entries: &[(String, &Tensor)])
+            -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load all named tensors from `path` (in file order).
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let path = path.as_ref();
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic (not an SM3 checkpoint)");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut nb = vec![0u8; name_len];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf-8")?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor::from_vec(&shape, data)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sm3_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let b = Tensor::randn(&[7], 1.0, &mut rng);
+        let scalar = Tensor::from_vec(&[], vec![42.0]);
+        let path = tmpfile("roundtrip.ckpt");
+        save(&path, &[("a".into(), &a), ("b/c".into(), &b),
+                      ("t".into(), &scalar)]).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, "a");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].0, "b/c");
+        assert_eq!(loaded[1].1, b);
+        assert_eq!(loaded[2].1.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad.ckpt");
+        std::fs::write(&path, b"NOTAMAGIC???").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let path = tmpfile("trunc.ckpt");
+        save(&path, &[("a".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint() {
+        let path = tmpfile("empty.ckpt");
+        save(&path, &[]).unwrap();
+        assert!(load(&path).unwrap().is_empty());
+    }
+}

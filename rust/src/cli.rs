@@ -1,0 +1,188 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options,
+//! and positional arguments, with generated usage text. The binary's
+//! command tree lives in `main.rs`; this module is the mechanism.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("invalid value for --{name}: {e}"),
+            },
+        }
+    }
+}
+
+/// Option/flag declaration for usage text + validation.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// A subcommand declaration.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<Spec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, takes_value: false, help });
+        self
+    }
+
+    pub fn option(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, takes_value: true, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("  {} — {}\n", self.name, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            s.push_str(&format!("      {arg:<28} {}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse the argument list following the subcommand name.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{name} for {:?}\n{}",
+                                        self.name, self.usage())
+                    })?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!(
+                                    "--{name} requires a value"))?
+                        }
+                    };
+                    out.options.insert(name, value);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "run training")
+            .option("config", "config file")
+            .option("steps", "override step count")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--config", "c.toml", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.opt("config"), Some("c.toml"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd().parse(&argv(&["--steps=500"])).unwrap();
+        assert_eq!(a.opt_parse::<u64>("steps").unwrap(), Some(500));
+    }
+
+    #[test]
+    fn unknown_option_is_an_error() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(cmd().parse(&argv(&["--config"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reports_name() {
+        let a = cmd().parse(&argv(&["--steps", "abc"])).unwrap();
+        let e = a.opt_parse::<u64>("steps").unwrap_err();
+        assert!(e.to_string().contains("steps"));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--config"));
+        assert!(u.contains("--verbose"));
+    }
+}

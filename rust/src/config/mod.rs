@@ -1,0 +1,233 @@
+//! Typed experiment configuration, loaded from TOML files in `configs/`.
+//!
+//! A config fully determines a training run: which model artifacts to use,
+//! optimizer + hyperparameters (paper Table 3), LR schedule (Table 4),
+//! data-generation seed, worker topology. `TrainConfig::load` parses the
+//! TOML (via the in-repo [`toml`] parser — serde is unavailable offline),
+//! applies defaults, and validates.
+
+pub mod toml;
+
+use self::toml::TomlValue;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Optimizer selection + hyperparameters (paper Table 3).
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    /// "sm3" | "sm3i" | "adagrad" | "adam" | "adafactor" | "sgdm"
+    pub name: String,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    /// "constant" | "rsqrt" | "linear" | "staircase" (Table 4)
+    pub schedule: String,
+    pub warmup_steps: u64,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        Self {
+            name: "sm3".into(),
+            lr: 0.1,
+            beta1: 0.9,
+            beta2: 0.98,
+            schedule: "constant".into(),
+            warmup_steps: 100,
+        }
+    }
+}
+
+/// Execution path through the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// fused HLO artifact: fwd+bwd+optimizer inside XLA (fast path)
+    Fused,
+    /// grad artifact + Rust optimizer bank (flexible path)
+    Split,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fused" => ExecMode::Fused,
+            "split" => ExecMode::Split,
+            other => bail!("unknown exec mode {other:?} (fused|split)"),
+        })
+    }
+}
+
+/// A complete training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// model key in the artifact manifest ("lm_small", "mt_small", ...)
+    pub model: String,
+    pub optim: OptimConfig,
+    pub exec: ExecMode,
+    /// total optimizer steps
+    pub steps: u64,
+    /// evaluate every N steps
+    pub eval_every: u64,
+    /// microbatches accumulated per optimizer step (simulated large batch)
+    pub grad_accum: u64,
+    /// data-parallel worker count (simulated cores)
+    pub workers: usize,
+    /// RNG seed for data + init
+    pub seed: u64,
+    /// artifact directory
+    pub artifacts_dir: String,
+    /// output directory for metric CSVs
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "lm_small".into(),
+            optim: OptimConfig::default(),
+            exec: ExecMode::Split,
+            steps: 200,
+            eval_every: 20,
+            grad_accum: 1,
+            workers: 1,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+            out_dir: "out".into(),
+        }
+    }
+}
+
+fn get_str(t: &TomlValue, key: &str, default: &str) -> String {
+    t.get(key).and_then(TomlValue::as_str).map(String::from)
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn get_f64(t: &TomlValue, key: &str, default: f64) -> f64 {
+    t.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+}
+
+fn get_u64(t: &TomlValue, key: &str, default: u64) -> u64 {
+    t.get(key).and_then(TomlValue::as_i64).map(|v| v as u64)
+        .unwrap_or(default)
+}
+
+impl TrainConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let root = toml::parse(text).context("parsing config TOML")?;
+        let d = TrainConfig::default();
+        let od = OptimConfig::default();
+
+        let optim_tbl = root.get("optim").cloned()
+            .unwrap_or(TomlValue::empty_table());
+        let optim = OptimConfig {
+            name: get_str(&optim_tbl, "name", &od.name),
+            lr: get_f64(&optim_tbl, "lr", od.lr),
+            beta1: get_f64(&optim_tbl, "beta1", od.beta1),
+            beta2: get_f64(&optim_tbl, "beta2", od.beta2),
+            schedule: get_str(&optim_tbl, "schedule", &od.schedule),
+            warmup_steps: get_u64(&optim_tbl, "warmup_steps", od.warmup_steps),
+        };
+
+        let train_tbl = root.get("train").cloned()
+            .unwrap_or(TomlValue::empty_table());
+        let cfg = Self {
+            model: get_str(&train_tbl, "model", &d.model),
+            exec: ExecMode::parse(&get_str(&train_tbl, "exec", "split"))?,
+            steps: get_u64(&train_tbl, "steps", d.steps),
+            eval_every: get_u64(&train_tbl, "eval_every", d.eval_every),
+            grad_accum: get_u64(&train_tbl, "grad_accum", d.grad_accum),
+            workers: get_u64(&train_tbl, "workers", d.workers as u64) as usize,
+            seed: get_u64(&train_tbl, "seed", d.seed),
+            artifacts_dir: get_str(&train_tbl, "artifacts_dir",
+                                   &d.artifacts_dir),
+            out_dir: get_str(&train_tbl, "out_dir", &d.out_dir),
+            optim,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !crate::optim::ALL.contains(&self.optim.name.as_str()) {
+            bail!("unknown optimizer {:?}", self.optim.name);
+        }
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.grad_accum == 0 || self.workers == 0 {
+            bail!("grad_accum and workers must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.optim.beta1) {
+            bail!("beta1 out of range");
+        }
+        if self.optim.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_round_trip() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.model, "lm_small");
+        assert_eq!(cfg.optim.name, "sm3");
+        assert_eq!(cfg.exec, ExecMode::Split);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+[train]
+model = "mt_small"
+exec = "fused"
+steps = 500
+eval_every = 50
+grad_accum = 2
+workers = 4
+seed = 7
+
+[optim]
+name = "adafactor"
+lr = 0.00045
+beta1 = 0.9
+beta2 = 0.98
+schedule = "rsqrt"
+warmup_steps = 40
+"#;
+        let cfg = TrainConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model, "mt_small");
+        assert_eq!(cfg.exec, ExecMode::Fused);
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.optim.name, "adafactor");
+        assert!((cfg.optim.lr - 0.00045).abs() < 1e-12);
+        assert_eq!(cfg.optim.schedule, "rsqrt");
+    }
+
+    #[test]
+    fn rejects_bad_optimizer() {
+        assert!(TrainConfig::from_toml("[optim]\nname = \"zzz\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_steps() {
+        assert!(TrainConfig::from_toml("[train]\nsteps = 0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_exec_mode() {
+        assert!(TrainConfig::from_toml("[train]\nexec = \"warp\"\n").is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! TOML-subset parser (serde/toml crates unavailable offline).
+//!
+//! Supports the subset the config system uses: `[table]` and
+//! `[nested.table]` headers, `key = value` pairs with string / integer /
+//! float / boolean / array values, comments, and blank lines. Unsupported
+//! TOML (multi-line strings, dotted keys, inline tables, dates) is
+//! rejected with a line-numbered error rather than mis-parsed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    pub fn empty_table() -> Self {
+        TomlValue::Table(BTreeMap::new())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric access accepting both int and float literals.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, msg: msg.into() }
+}
+
+/// Parse TOML text into a root table.
+pub fn parse(text: &str) -> Result<TomlValue, TomlError> {
+    let mut root = BTreeMap::new();
+    // path of the currently-open table
+    let mut current: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unclosed table header"))?;
+            if header.starts_with('[') {
+                return Err(err(lineno, "array-of-tables not supported"));
+            }
+            current = header.split('.').map(|p| p.trim().to_string()).collect();
+            if current.iter().any(String::is_empty) {
+                return Err(err(lineno, "empty table-name component"));
+            }
+            // ensure the table exists
+            table_at(&mut root, &current, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        if key.contains('.') {
+            return Err(err(lineno, "dotted keys not supported"));
+        }
+        let key = key.trim_matches('"').to_string();
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let tbl = table_at(&mut root, &current, lineno)?;
+        if tbl.insert(key.clone(), value).is_some() {
+            return Err(err(lineno, format!("duplicate key {key:?}")));
+        }
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, TomlValue>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(TomlValue::empty_table);
+        match entry {
+            TomlValue::Table(m) => cur = m,
+            _ => return Err(err(lineno, format!("{part:?} is not a table"))),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quote not supported"));
+        }
+        return Ok(TomlValue::String(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), lineno)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Integer(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value {s:?}")))
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\")
+}
+
+/// Split an array body on commas not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let t = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(t.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(t.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_tables_and_nesting() {
+        let t = parse("[a]\nx = 1\n[a.b]\ny = 2\n[c]\nz = 3\n").unwrap();
+        assert_eq!(t.get("a").unwrap().get("x").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get("a").unwrap().get("b").unwrap()
+                       .get("y").unwrap().as_i64(), Some(2));
+        assert_eq!(t.get("c").unwrap().get("z").unwrap().as_i64(), Some(3));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nzs = []\n").unwrap();
+        assert_eq!(t.get("xs").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(t.get("ys").unwrap().as_array().unwrap()[1].as_str(),
+                   Some("b"));
+        assert!(t.get("zs").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = parse("# header\n\na = 1  # trailing\nb = \"#not a comment\"\n")
+            .unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get("b").unwrap().as_str(), Some("#not a comment"));
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let t = parse("lr = 4.5e-4\nneg = -1e3\n").unwrap();
+        assert!((t.get("lr").unwrap().as_f64().unwrap() - 4.5e-4).abs() < 1e-12);
+        assert_eq!(t.get("neg").unwrap().as_f64(), Some(-1000.0));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn unsupported_syntax_rejected_not_misparsed() {
+        assert!(parse("[[array.of.tables]]\n").is_err());
+        assert!(parse("a.b = 1\n").is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! The training coordinator — Layer 3's centerpiece.
+//!
+//! Owns the whole training run: loads AOT artifacts through the PJRT
+//! [`Runtime`], shards the synthetic data across logical workers, runs the
+//! step loop on either execution path, reduces worker gradients with the
+//! ring all-reduce, applies the LR schedule, evaluates, and logs curves.
+//!
+//! Two execution paths (DESIGN.md §2):
+//!
+//! * **Split** — the artifact computes `(loss, grads)`; the pure-Rust
+//!   `optim::` bank applies the update. One artifact serves every
+//!   optimizer; optimizer state is introspectable (traces, checkpoints);
+//!   gradient accumulation gives arbitrary effective batch sizes (the
+//!   Fig. 3-right batch-size sweep).
+//! * **Fused** — the artifact is the whole train step with the Layer-1
+//!   Pallas optimizer kernel inside; host code only shuttles state.
+//!
+//! Workers are *logical ranks*: each has an independent data shard and its
+//! gradients join through `collectives::ring_allreduce` in rank order, so
+//! the arithmetic (and hence the loss curve) is exactly what a pod run
+//! would produce; with one physical CPU the ranks execute sequentially.
+
+mod trainer;
+
+pub use trainer::{EvalRecord, RunHistory, StepRecord, Trainer};
+
+use crate::config::TrainConfig;
+use crate::optim::schedule::{paper_default, Schedule};
+
+/// Resolve the schedule from config (paper Table 4 defaults by optimizer
+/// unless the config overrides the shape).
+pub fn schedule_for(cfg: &TrainConfig, d_model: usize) -> Schedule {
+    match cfg.optim.schedule.as_str() {
+        "paper" => paper_default(&cfg.optim.name, cfg.optim.lr,
+                                 cfg.optim.warmup_steps, d_model, cfg.steps),
+        name => Schedule::from_name(name, cfg.optim.lr,
+                                    cfg.optim.warmup_steps, d_model,
+                                    cfg.steps)
+            .unwrap_or_else(|_| Schedule::constant(cfg.optim.lr,
+                                                   cfg.optim.warmup_steps)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn schedule_resolution() {
+        let mut cfg = TrainConfig::default();
+        cfg.optim.schedule = "paper".into();
+        cfg.optim.name = "sm3".into();
+        let s = schedule_for(&cfg, 128);
+        assert_eq!(s.lr(10_000), cfg.optim.lr); // constant past warmup
+
+        cfg.optim.name = "adam".into();
+        let s = schedule_for(&cfg, 128);
+        assert!(s.lr(50_000) < s.lr(200)); // rsqrt decays
+    }
+}

@@ -1,0 +1,421 @@
+//! The trainer: step loop, both execution paths, eval, BLEU decode.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+
+use crate::collectives;
+use crate::config::{ExecMode, TrainConfig};
+use crate::data::{source_for_model, translation::trim_ref, BatchSource};
+use crate::metrics::{corpus_bleu, Ema};
+use crate::optim::{self, schedule::Schedule, Optimizer};
+use crate::runtime::manifest::ModelMeta;
+use crate::runtime::{Artifact, HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::vocab;
+
+/// One training-step record (the loss-curve CSV row).
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f64,
+    pub loss_ema: f64,
+    pub lr: f64,
+    pub wall_ms: f64,
+}
+
+/// One evaluation record.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub loss: f64,
+    /// task metric: masked-LM / top-1 accuracy, or BLEU for translation
+    pub metric: Option<f64>,
+    /// secondary metric (top-5 accuracy)
+    pub metric2: Option<f64>,
+}
+
+/// Full run output.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl RunHistory {
+    pub fn final_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    /// First step at which the eval metric reached `target` (Fig. 3-right).
+    pub fn steps_to_metric(&self, target: f64) -> Option<u64> {
+        self.evals
+            .iter()
+            .find(|e| e.metric.unwrap_or(f64::NEG_INFINITY) >= target)
+            .map(|e| e.step)
+    }
+
+    /// First step at which the held-out loss dropped to `target` — the
+    /// steps-to-quality measure used when the accuracy target is not
+    /// reachable at miniature scale (see EXPERIMENTS.md Fig. 3 notes).
+    pub fn steps_to_loss(&self, target: f64) -> Option<u64> {
+        self.evals
+            .iter()
+            .find(|e| e.loss <= target)
+            .map(|e| e.step)
+    }
+}
+
+enum Engine {
+    Split {
+        grad_art: Arc<Artifact>,
+        params: Vec<Tensor>,
+        opt: Box<dyn Optimizer>,
+    },
+    Fused {
+        train_art: Arc<Artifact>,
+        /// params ++ opt state, kept in artifact input order
+        state: Vec<HostValue>,
+        n_params: usize,
+    },
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub meta: ModelMeta,
+    runtime: Arc<Runtime>,
+    engine: Engine,
+    eval_art: Arc<Artifact>,
+    decode_art: Option<Arc<Artifact>>,
+    sources: Vec<Box<dyn BatchSource>>,
+    schedule: Schedule,
+    step: u64,
+    ema: Ema,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        let runtime = Arc::new(Runtime::new(cfg.artifacts_dir.clone())?);
+        Self::with_runtime(cfg, runtime)
+    }
+
+    /// Share one PJRT runtime (and its executable cache) across trainers —
+    /// the benches construct many trainers over the same artifacts.
+    pub fn with_runtime(cfg: TrainConfig, runtime: Arc<Runtime>) -> Result<Self> {
+        let meta = runtime.manifest.model(&cfg.model)?.clone();
+        let schedule = super::schedule_for(&cfg, meta.d_model.max(1));
+
+        let params = load_init_params(&cfg.artifacts_dir, &meta)?;
+
+        let engine = match cfg.exec {
+            ExecMode::Split => {
+                let grad_art = runtime
+                    .load(&format!("{}_grad", cfg.model))
+                    .context("loading grad artifact")?;
+                let specs = meta.param_specs();
+                let opt = optim::build(&cfg.optim.name, &specs,
+                                       cfg.optim.beta1 as f32,
+                                       cfg.optim.beta2 as f32)?;
+                Engine::Split { grad_art, params, opt }
+            }
+            ExecMode::Fused => {
+                let name = format!("{}_train_{}", cfg.model, cfg.optim.name);
+                let train_art = runtime.load(&name).with_context(|| {
+                    format!("loading fused artifact {name} \
+                             (is this optimizer in FUSED_OPTS for the model?)")
+                })?;
+                let state = fused_initial_state(&train_art, params)?;
+                let n_params = meta.params.len();
+                Engine::Fused { train_art, state, n_params }
+            }
+        };
+
+        let eval_art = runtime.load(&format!("{}_eval", cfg.model))?;
+        let decode_art = if meta.kind == "mt" {
+            Some(runtime.load(&format!("{}_decode", cfg.model))?)
+        } else {
+            None
+        };
+
+        let sources: Vec<Box<dyn BatchSource>> = (0..cfg.workers)
+            .map(|w| source_for_model(&meta, cfg.seed, w, cfg.workers))
+            .collect::<Result<_>>()?;
+
+        Ok(Self {
+            cfg,
+            meta,
+            runtime,
+            engine,
+            eval_art,
+            decode_art,
+            sources,
+            schedule,
+            step: 0,
+            ema: Ema::new(0.9),
+        })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Current host-side parameters (clones; split mode borrows, fused
+    /// mode converts from the artifact state).
+    pub fn params(&self) -> Vec<Tensor> {
+        match &self.engine {
+            Engine::Split { params, .. } => params.clone(),
+            Engine::Fused { state, n_params, .. } => state[..*n_params]
+                .iter()
+                .map(|v| v.as_f32().expect("params are f32").clone())
+                .collect(),
+        }
+    }
+
+    /// Introspect the optimizer (split mode only).
+    pub fn optimizer(&self) -> Option<&dyn Optimizer> {
+        match &self.engine {
+            Engine::Split { opt, .. } => Some(opt.as_ref()),
+            Engine::Fused { .. } => None,
+        }
+    }
+
+    /// Gradient-only pass on one training batch of worker 0 (trace probes).
+    pub fn compute_grads(&mut self) -> Result<(f64, Vec<Tensor>)> {
+        let batch = self.sources[0].next_train();
+        match &self.engine {
+            Engine::Split { grad_art, params, .. } => {
+                grad_pass(grad_art, params, &batch.values)
+            }
+            Engine::Fused { .. } => bail!("compute_grads needs split mode"),
+        }
+    }
+
+    /// One optimizer step. Returns the mean training loss across workers.
+    pub fn train_step(&mut self) -> Result<f64> {
+        self.step += 1;
+        let lr = self.schedule.lr(self.step) as f32;
+        match &mut self.engine {
+            Engine::Split { grad_art, params, opt } => {
+                // per-worker gradient (averaged over grad_accum microbatches)
+                let mut worker_grads: Vec<Vec<Tensor>> =
+                    Vec::with_capacity(self.cfg.workers);
+                let mut loss_sum = 0.0;
+                for src in self.sources.iter_mut() {
+                    let mut acc: Option<Vec<Tensor>> = None;
+                    let mut wloss = 0.0;
+                    for _ in 0..self.cfg.grad_accum {
+                        let batch = src.next_train();
+                        let (loss, grads) =
+                            grad_pass(grad_art, params, &batch.values)?;
+                        wloss += loss;
+                        acc = Some(match acc {
+                            None => grads,
+                            Some(mut a) => {
+                                for (t, g) in a.iter_mut().zip(&grads) {
+                                    let d = t.data_mut();
+                                    for (x, y) in d.iter_mut().zip(g.data()) {
+                                        *x += y;
+                                    }
+                                }
+                                a
+                            }
+                        });
+                    }
+                    let mut grads = acc.unwrap();
+                    if self.cfg.grad_accum > 1 {
+                        let inv = 1.0 / self.cfg.grad_accum as f32;
+                        for t in grads.iter_mut() {
+                            t.map_inplace(|v| v * inv);
+                        }
+                    }
+                    loss_sum += wloss / self.cfg.grad_accum as f64;
+                    worker_grads.push(grads);
+                }
+                // data-parallel combine (ring all-reduce, rank order)
+                collectives::allreduce_mean(&mut worker_grads);
+                let grads = worker_grads.into_iter().next().unwrap();
+                opt.step(params, &grads, lr);
+                Ok(loss_sum / self.cfg.workers as f64)
+            }
+            Engine::Fused { train_art, state, n_params } => {
+                if self.cfg.workers != 1 || self.cfg.grad_accum != 1 {
+                    bail!("fused mode runs single-worker, no accumulation \
+                           (the optimizer lives inside the artifact)");
+                }
+                let batch = self.sources[0].next_train();
+                let mut inputs = Vec::with_capacity(
+                    state.len() + batch.values.len() + 1);
+                inputs.extend(state.iter().cloned());
+                inputs.extend(batch.values);
+                inputs.push(HostValue::scalar_f32(lr));
+                let outputs = train_art.execute(&inputs)?;
+                // outputs: new_params ++ new_opt ++ loss
+                let n_state = state.len();
+                debug_assert!(*n_params <= n_state);
+                let loss = outputs[n_state].scalar()? as f64;
+                state.clone_from_slice(&outputs[..n_state]);
+                Ok(loss)
+            }
+        }
+    }
+
+    /// Evaluate on the held-out set. Returns (loss, metric, metric2).
+    pub fn evaluate(&self) -> Result<EvalRecord> {
+        let src = &self.sources[0];
+        let params = self.params_as_values();
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut total = 0.0;
+        let mut top5 = 0.0;
+        let n = src.eval_batches();
+        for i in 0..n {
+            let batch = src.eval_batch(i);
+            let mut inputs = params.clone();
+            inputs.extend(batch.values);
+            let out = self.eval_art.execute(&inputs)?;
+            loss_sum += out[0].scalar()? as f64;
+            if out.len() >= 3 {
+                correct += out[1].scalar()? as f64;
+                total += out[2].scalar()? as f64;
+                if self.meta.kind == "img" {
+                    // outputs are (loss, top1, top5) counts per batch
+                    top5 += out[2].scalar()? as f64;
+                }
+            }
+        }
+        let loss = loss_sum / n as f64;
+        let (metric, metric2) = match self.meta.kind.as_str() {
+            "mlm" => (Some(correct / total.max(1.0)), None),
+            "img" => {
+                let seen = (n * self.meta.batch) as f64;
+                (Some(correct / seen), Some(top5 / seen))
+            }
+            "mt" => (self.bleu().ok().map(|b| b.bleu_smooth), None),
+            _ => (None, None),
+        };
+        Ok(EvalRecord { step: self.step, loss, metric, metric2 })
+    }
+
+    /// Greedy-decode the eval set and score corpus BLEU (translation only).
+    pub fn bleu(&self) -> Result<crate::metrics::BleuScore> {
+        let decode = self.decode_art.as_ref()
+            .ok_or_else(|| anyhow!("no decode artifact for {}", self.meta.kind))?;
+        // references come from the typed MtSource
+        let mt = self.sources[0]
+            .as_any()
+            .downcast_ref::<crate::data::translation::MtSource>()
+            .ok_or_else(|| anyhow!("bleu() needs an MtSource"))?;
+        let params = self.params_as_values();
+        let mut hyps = Vec::new();
+        let mut refs = Vec::new();
+        let n = mt.eval_batches();
+        for i in 0..n {
+            let batch = mt.eval_batch(i);
+            let mut inputs = params.clone();
+            inputs.push(batch.values[0].clone()); // src tokens only
+            let out = decode.execute(&inputs)?;
+            let tokens = out[0].as_i32()?;
+            let l = out[0].shape()[1];
+            for b in 0..self.meta.batch {
+                hyps.push(trim_ref(&tokens[b * l..(b + 1) * l]));
+            }
+            refs.extend(mt.references(i).iter().cloned());
+        }
+        Ok(corpus_bleu(&hyps, &refs))
+    }
+
+    fn params_as_values(&self) -> Vec<HostValue> {
+        match &self.engine {
+            Engine::Split { params, .. } => {
+                params.iter().map(|t| HostValue::F32(t.clone())).collect()
+            }
+            Engine::Fused { state, n_params, .. } => {
+                state[..*n_params].to_vec()
+            }
+        }
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Run the configured number of steps with periodic eval; logs curves
+    /// through `log` (step → CSV row) when provided.
+    pub fn train(&mut self) -> Result<RunHistory> {
+        let mut hist = RunHistory::default();
+        for _ in 0..self.cfg.steps {
+            let t0 = std::time::Instant::now();
+            let loss = self.train_step()?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let ema = self.ema.update(loss);
+            hist.steps.push(StepRecord {
+                step: self.step,
+                loss,
+                loss_ema: ema,
+                lr: self.schedule.lr(self.step),
+                wall_ms,
+            });
+            if self.step % self.cfg.eval_every == 0
+                || self.step == self.cfg.steps
+            {
+                hist.evals.push(self.evaluate()?);
+            }
+        }
+        Ok(hist)
+    }
+}
+
+/// Execute a grad artifact: inputs `params ++ batch`, outputs
+/// `(loss, grads...)`.
+fn grad_pass(art: &Artifact, params: &[Tensor], batch: &[HostValue])
+             -> Result<(f64, Vec<Tensor>)> {
+    let mut inputs: Vec<HostValue> =
+        params.iter().map(|t| HostValue::F32(t.clone())).collect();
+    inputs.extend(batch.iter().cloned());
+    let mut out = art.execute(&inputs)?;
+    let loss = out[0].scalar()? as f64;
+    let grads = out
+        .drain(1..)
+        .map(HostValue::into_f32)
+        .collect::<Result<Vec<_>>>()?;
+    Ok((loss, grads))
+}
+
+/// Load `<model>_init.ckpt` (exported by aot.py) in manifest param order.
+fn load_init_params(dir: &str, meta: &ModelMeta) -> Result<Vec<Tensor>> {
+    let path = std::path::Path::new(dir).join(format!("{}_init.ckpt", meta.name));
+    let loaded = crate::checkpoint::load(&path)?;
+    let by_name: std::collections::HashMap<String, Tensor> =
+        loaded.into_iter().collect();
+    meta.params
+        .iter()
+        .map(|e| {
+            let t = by_name.get(&e.name).ok_or_else(|| {
+                anyhow!("{path:?} missing tensor {}", e.name)
+            })?;
+            if t.shape() != e.shape.as_slice() {
+                bail!("{}: checkpoint shape {:?} != manifest {:?}",
+                      e.name, t.shape(), e.shape);
+            }
+            Ok(t.clone())
+        })
+        .collect()
+}
+
+/// Zero-initialized optimizer state for a fused artifact, in input order.
+/// (JAX inits every slot with `jnp.zeros`, including Adam's step count.)
+fn fused_initial_state(art: &Artifact, params: Vec<Tensor>)
+                       -> Result<Vec<HostValue>> {
+    let spec = art.spec();
+    let mut state: Vec<HostValue> =
+        params.into_iter().map(HostValue::F32).collect();
+    let opt_idx = spec.input_range("opt");
+    for &i in &opt_idx {
+        let e = &spec.inputs[i];
+        if i != state.len() {
+            bail!("fused artifact inputs out of order at {}", e.name);
+        }
+        state.push(HostValue::F32(Tensor::zeros(&e.shape)));
+    }
+    Ok(state)
+}
+

@@ -1,0 +1,169 @@
+//! Synthetic image-classification dataset — the ImageNet stand-in
+//! (AmoebaNet experiment, Fig. 4).
+//!
+//! Each class k is a distinct 2-D sinusoidal texture (frequency pair +
+//! phase + per-channel weighting) plus additive noise — separable by a
+//! small convnet but not trivially (noise std comparable to signal), so
+//! top-1/top-5 accuracy curves have the shape the figure needs.
+
+use super::{Batch, BatchSource};
+use crate::rng::Rng;
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+
+const N_EVAL: usize = 8;
+const NOISE: f32 = 2.2;
+
+struct ClassSpec {
+    fx: f32,
+    fy: f32,
+    phase: f32,
+    channel_w: [f32; 4],
+}
+
+pub struct ImageSource {
+    h: usize,
+    w: usize,
+    c: usize,
+    n_classes: usize,
+    batch: usize,
+    classes: Vec<ClassSpec>,
+    rng: Rng,
+    eval: Vec<(Tensor, Vec<i32>)>,
+}
+
+impl ImageSource {
+    pub fn new(h: usize, w: usize, c: usize, n_classes: usize, batch: usize,
+               seed: u64) -> Self {
+        assert!(c <= 4);
+        // class textures are dataset-global
+        let mut crng = Rng::new(0x1316);
+        let classes = (0..n_classes)
+            .map(|k| ClassSpec {
+                fx: 0.5 + 0.45 * k as f32 + crng.next_f32(),
+                fy: 0.4 + 0.3 * ((k * 7) % n_classes) as f32 + crng.next_f32(),
+                phase: crng.next_f32() * std::f32::consts::TAU,
+                channel_w: [
+                    0.4 + crng.next_f32(),
+                    0.4 + crng.next_f32(),
+                    0.4 + crng.next_f32(),
+                    0.4 + crng.next_f32(),
+                ],
+            })
+            .collect();
+        let mut s = Self {
+            h, w, c, n_classes, batch, classes,
+            rng: Rng::new(seed ^ 0x1443),
+            eval: Vec::new(),
+        };
+        let mut eval_rng = Rng::new(0xE7A3);
+        for _ in 0..N_EVAL {
+            let b = s.make_batch(&mut eval_rng);
+            s.eval.push(b);
+        }
+        s
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng) -> Vec<f32> {
+        let spec = &self.classes[class];
+        let mut out = Vec::with_capacity(self.h * self.w * self.c);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let base = (spec.fx * x as f32 / self.w as f32
+                    * std::f32::consts::TAU
+                    + spec.fy * y as f32 / self.h as f32
+                        * std::f32::consts::TAU
+                    + spec.phase)
+                    .sin();
+                for ch in 0..self.c {
+                    let v = base * spec.channel_w[ch]
+                        + NOISE * rng.normal_f32(0.0, 1.0);
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    fn make_batch(&self, rng: &mut Rng) -> (Tensor, Vec<i32>) {
+        let mut images = Vec::with_capacity(
+            self.batch * self.h * self.w * self.c);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let k = rng.index(self.n_classes);
+            labels.push(k as i32);
+            images.extend(self.render(k, rng));
+        }
+        (Tensor::from_vec(&[self.batch, self.h, self.w, self.c], images),
+         labels)
+    }
+
+    fn to_batch(&self, imgs: Tensor, labels: Vec<i32>) -> Batch {
+        Batch {
+            values: vec![
+                HostValue::F32(imgs),
+                HostValue::I32 { shape: vec![self.batch], data: labels },
+            ],
+        }
+    }
+}
+
+impl BatchSource for ImageSource {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = self.rng.clone();
+        let (imgs, labels) = self.make_batch(&mut rng);
+        self.rng = rng;
+        self.to_batch(imgs, labels)
+    }
+
+    fn eval_batch(&self, i: usize) -> Batch {
+        let (imgs, labels) = self.eval[i % N_EVAL].clone();
+        self.to_batch(imgs, labels)
+    }
+
+    fn eval_batches(&self) -> usize {
+        N_EVAL
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut s = ImageSource::new(8, 8, 3, 10, 4, 0);
+        let b = s.next_train();
+        assert_eq!(b.values[0].shape(), &[4, 8, 8, 3]);
+        assert_eq!(b.values[1].shape(), &[4]);
+        for &l in b.values[1].as_i32().unwrap() {
+            assert!((0..10).contains(&l));
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean per-pixel distance between class prototypes (noise-free
+        // signal) must exceed the within-class noise floor on average
+        let s = ImageSource::new(8, 8, 3, 10, 2, 0);
+        let mut rng = Rng::new(9);
+        let a: Vec<f32> = s.render(0, &mut rng);
+        let b: Vec<f32> = s.render(1, &mut rng);
+        let a2: Vec<f32> = s.render(0, &mut rng);
+        let cross: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        let within: f32 = a.iter().zip(&a2).map(|(x, y)| (x - y).abs()).sum();
+        assert!(cross > 0.0 && within > 0.0);
+    }
+
+    #[test]
+    fn eval_deterministic() {
+        let s = ImageSource::new(8, 8, 3, 10, 4, 0);
+        let a = s.eval_batch(1);
+        let b = s.eval_batch(1);
+        assert_eq!(a.values[1].as_i32().unwrap(), b.values[1].as_i32().unwrap());
+    }
+}

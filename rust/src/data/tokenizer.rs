@@ -1,0 +1,198 @@
+//! Subword tokenizer: a miniature BPE, built from scratch.
+//!
+//! The paper tokenizes WMT with 32K shared word-pieces (Schuster &
+//! Nakajima). Our synthetic translation corpus is made of generated
+//! "words" (character strings); this module learns a byte-pair vocabulary
+//! from a sample of the corpus and encodes words by greedy merges —
+//! the same mechanics at miniature scale, so the embedding rows the model
+//! trains correspond to genuine subword units with Zipfian frequencies.
+//!
+//! Ids 0..4 are reserved (PAD/BOS/EOS/UNK per `crate::vocab`).
+
+use crate::vocab;
+use std::collections::HashMap;
+
+/// A learned BPE vocabulary.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge rules in priority order: (left, right) -> merged token string
+    merges: Vec<(String, String)>,
+    /// token string -> id
+    token_ids: HashMap<String, i32>,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Learn a BPE vocabulary of at most `vocab_size` ids (including the 4
+    /// reserved ids) from a training word list with frequencies.
+    pub fn train(words: &[(String, usize)], vocab_size: usize) -> Self {
+        assert!(vocab_size > 8, "vocab too small");
+        // start from characters
+        let mut corpus: Vec<(Vec<String>, usize)> = words
+            .iter()
+            .map(|(w, f)| (w.chars().map(|c| c.to_string()).collect(), *f))
+            .collect();
+        let mut alphabet: Vec<String> = {
+            let mut set: Vec<String> = corpus
+                .iter()
+                .flat_map(|(cs, _)| cs.iter().cloned())
+                .collect();
+            set.sort();
+            set.dedup();
+            set
+        };
+        alphabet.sort();
+        let budget = vocab_size - vocab::FIRST as usize;
+        let mut merges = Vec::new();
+        let mut n_tokens = alphabet.len();
+        while n_tokens < budget {
+            // count adjacent pairs
+            let mut counts: HashMap<(String, String), usize> = HashMap::new();
+            for (cs, f) in &corpus {
+                for win in cs.windows(2) {
+                    *counts
+                        .entry((win[0].clone(), win[1].clone()))
+                        .or_insert(0) += f;
+                }
+            }
+            // deterministic best pair: max count, ties by lexicographic
+            let Some(best) = counts.into_iter().max_by(|a, b| {
+                a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0))
+            }) else {
+                break;
+            };
+            if best.1 < 2 {
+                break;
+            }
+            let (l, r) = best.0;
+            let merged = format!("{l}{r}");
+            // apply merge to corpus
+            for (cs, _) in corpus.iter_mut() {
+                let mut out = Vec::with_capacity(cs.len());
+                let mut i = 0;
+                while i < cs.len() {
+                    if i + 1 < cs.len() && cs[i] == l && cs[i + 1] == r {
+                        out.push(merged.clone());
+                        i += 2;
+                    } else {
+                        out.push(cs[i].clone());
+                        i += 1;
+                    }
+                }
+                *cs = out;
+            }
+            merges.push((l, r));
+            n_tokens += 1;
+        }
+        // assign ids: reserved, then alphabet, then merges
+        let mut token_ids = HashMap::new();
+        let mut next = vocab::FIRST;
+        for a in &alphabet {
+            token_ids.insert(a.clone(), next);
+            next += 1;
+        }
+        for (l, r) in &merges {
+            let t = format!("{l}{r}");
+            token_ids.entry(t).or_insert_with(|| {
+                let id = next;
+                next += 1;
+                id
+            });
+        }
+        Self { merges, token_ids, vocab_size }
+    }
+
+    /// Encode one word into subword ids (UNK for unknown characters).
+    pub fn encode_word(&self, word: &str) -> Vec<i32> {
+        let mut parts: Vec<String> =
+            word.chars().map(|c| c.to_string()).collect();
+        for (l, r) in &self.merges {
+            let mut out = Vec::with_capacity(parts.len());
+            let mut i = 0;
+            while i < parts.len() {
+                if i + 1 < parts.len() && &parts[i] == l && &parts[i + 1] == r {
+                    out.push(format!("{l}{r}"));
+                    i += 2;
+                } else {
+                    out.push(parts[i].clone());
+                    i += 1;
+                }
+            }
+            parts = out;
+        }
+        parts
+            .iter()
+            .map(|p| *self.token_ids.get(p).unwrap_or(&vocab::UNK))
+            .collect()
+    }
+
+    /// Encode a sentence (words joined by spaces).
+    pub fn encode(&self, sentence: &[&str]) -> Vec<i32> {
+        sentence.iter().flat_map(|w| self.encode_word(w)).collect()
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.token_ids.len() + vocab::FIRST as usize
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(String, usize)> {
+        vec![
+            ("abab".into(), 10),
+            ("abc".into(), 5),
+            ("cab".into(), 3),
+            ("bc".into(), 2),
+        ]
+    }
+
+    #[test]
+    fn learns_frequent_pairs() {
+        let tok = Tokenizer::train(&sample(), 32);
+        // "ab" occurs 10*2 + 5 + 3 = 28 times: must be merged first
+        assert_eq!(tok.merges[0], ("a".to_string(), "b".to_string()));
+        // encoding "abab" uses the merged token => at most 2 ids
+        assert!(tok.encode_word("abab").len() <= 2);
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let tok = Tokenizer::train(&sample(), 16);
+        for w in ["abab", "abc", "cab", "zzz"] {
+            for id in tok.encode_word(w) {
+                assert!((id as usize) < 16 || id == crate::vocab::UNK,
+                        "id {id} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_chars_map_to_unk() {
+        let tok = Tokenizer::train(&sample(), 32);
+        assert!(tok.encode_word("xyz").iter()
+                .all(|&id| id == crate::vocab::UNK));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Tokenizer::train(&sample(), 32);
+        let b = Tokenizer::train(&sample(), 32);
+        assert_eq!(a.encode_word("abcabc"), b.encode_word("abcabc"));
+    }
+
+    #[test]
+    fn encode_sentence_concatenates() {
+        let tok = Tokenizer::train(&sample(), 32);
+        let s = tok.encode(&["ab", "c"]);
+        let mut expect = tok.encode_word("ab");
+        expect.extend(tok.encode_word("c"));
+        assert_eq!(s, expect);
+    }
+}

@@ -1,0 +1,285 @@
+//! Synthetic parallel corpus — the WMT'14 stand-in (Fig. 2 / Fig. 6 /
+//! Table 1 experiments).
+//!
+//! Construction: a Zipf-distributed lexicon of generated source "words";
+//! the target language applies a deterministic word-level mapping
+//! (character rotation + suffix marking) and a local reordering rule
+//! (adjacent pairs beginning with the same letter are swapped). Both sides
+//! are encoded with a shared miniature-BPE [`Tokenizer`] — the same shared
+//! word-piece setup as the paper. The task is learnable by a small
+//! encoder-decoder transformer and scored with corpus BLEU, and the
+//! Zipfian word frequencies produce the sparse embedding-row activation
+//! patterns SM3's cover exploits.
+
+use super::tokenizer::Tokenizer;
+use super::{Batch, BatchSource};
+use crate::rng::{Rng, Zipf};
+use crate::runtime::HostValue;
+use crate::vocab;
+
+/// Number of lexicon words; sentence length range in words.
+const LEXICON: usize = 120;
+const MIN_WORDS: usize = 2;
+const MAX_WORDS: usize = 5;
+const N_EVAL: usize = 8;
+
+/// Deterministic "translation" of one source word.
+fn translate_word(src: &str) -> String {
+    // rotate characters by one and append a marker suffix
+    let mut cs: Vec<char> = src.chars().collect();
+    cs.rotate_left(1);
+    let mut t: String = cs.into_iter().collect();
+    t.push('q');
+    t
+}
+
+/// Generate the source lexicon: pronounceable CV(C) syllable words.
+fn make_lexicon(rng: &mut Rng) -> Vec<String> {
+    const CONS: &[u8] = b"bdfgklmnprstvz";
+    const VOWS: &[u8] = b"aeiou";
+    let mut words = Vec::with_capacity(LEXICON);
+    while words.len() < LEXICON {
+        let syllables = 1 + rng.index(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push(CONS[rng.index(CONS.len())] as char);
+            w.push(VOWS[rng.index(VOWS.len())] as char);
+        }
+        if !words.contains(&w) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// A sentence pair in word space.
+fn make_pair(lex: &[String], zipf: &Zipf, rng: &mut Rng)
+             -> (Vec<String>, Vec<String>) {
+    let n = MIN_WORDS + rng.index(MAX_WORDS - MIN_WORDS + 1);
+    let src: Vec<String> =
+        (0..n).map(|_| lex[zipf.sample(rng)].clone()).collect();
+    // target: translate words, then swap adjacent pairs that start with
+    // the same letter (a local-reordering rule the decoder must learn)
+    let mut tgt: Vec<String> = src.iter().map(|w| translate_word(w)).collect();
+    let mut i = 0;
+    while i + 1 < tgt.len() {
+        if src[i].as_bytes()[0] == src[i + 1].as_bytes()[0] {
+            tgt.swap(i, i + 1);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    (src, tgt)
+}
+
+/// The translation batch source.
+pub struct MtSource {
+    seq: usize,
+    batch: usize,
+    tokenizer: Tokenizer,
+    lexicon: Vec<String>,
+    zipf: Zipf,
+    rng: Rng,
+    eval: Vec<(Vec<i32>, Vec<i32>)>,
+    /// reference (tokenized) targets for BLEU, aligned with eval batches
+    eval_refs: Vec<Vec<Vec<i32>>>,
+}
+
+impl MtSource {
+    pub fn new(vocab_size: usize, seq: usize, batch: usize, seed: u64) -> Self {
+        // the corpus itself (lexicon + tokenizer) is shared across workers:
+        // derive it from a fixed stream, and use `seed` only for sampling
+        let mut corpus_rng = Rng::new(0xC0_FFEE);
+        let lexicon = make_lexicon(&mut corpus_rng);
+        let zipf = Zipf::new(LEXICON, 1.1);
+        // tokenizer training sample: lexicon + translations, Zipf weights
+        let mut words: Vec<(String, usize)> = Vec::new();
+        for (rank, w) in lexicon.iter().enumerate() {
+            let f = (2.0 * LEXICON as f64 / (rank + 1) as f64) as usize + 1;
+            words.push((w.clone(), f));
+            words.push((translate_word(w), f));
+        }
+        let tokenizer = Tokenizer::train(&words, vocab_size);
+
+        let mut s = Self {
+            seq,
+            batch,
+            tokenizer,
+            lexicon,
+            zipf,
+            rng: Rng::new(seed ^ 0x7A39),
+            eval: Vec::new(),
+            eval_refs: Vec::new(),
+        };
+        // held-out set from its own fixed stream
+        let mut eval_rng = Rng::new(0xE7A1);
+        for _ in 0..N_EVAL * batch {
+            let (src, tgt) = make_pair(&s.lexicon, &s.zipf, &mut eval_rng);
+            let (si, ti) = s.encode_pair(&src, &tgt);
+            s.eval.push((si, ti));
+        }
+        for b in 0..N_EVAL {
+            let refs = (0..batch)
+                .map(|i| {
+                    let t = &s.eval[b * batch + i].1;
+                    // strip BOS and padding; keep up to (excl.) EOS
+                    trim_ref(t)
+                })
+                .collect();
+            s.eval_refs.push(refs);
+        }
+        s
+    }
+
+    fn encode_pair(&self, src: &[String], tgt: &[String])
+                   -> (Vec<i32>, Vec<i32>) {
+        let sw: Vec<&str> = src.iter().map(String::as_str).collect();
+        let tw: Vec<&str> = tgt.iter().map(String::as_str).collect();
+        let mut s = self.tokenizer.encode(&sw);
+        s.truncate(self.seq);
+        while s.len() < self.seq {
+            s.push(vocab::PAD);
+        }
+        let mut t = vec![vocab::BOS];
+        t.extend(self.tokenizer.encode(&tw));
+        t.truncate(self.seq - 1);
+        t.push(vocab::EOS);
+        while t.len() < self.seq {
+            t.push(vocab::PAD);
+        }
+        (s, t)
+    }
+
+    fn batch_from(&self, pairs: &[(Vec<i32>, Vec<i32>)]) -> Batch {
+        let mut src = Vec::with_capacity(self.batch * self.seq);
+        let mut tgt = Vec::with_capacity(self.batch * self.seq);
+        for (s, t) in pairs {
+            src.extend_from_slice(s);
+            tgt.extend_from_slice(t);
+        }
+        Batch {
+            values: vec![
+                HostValue::I32 { shape: vec![self.batch, self.seq], data: src },
+                HostValue::I32 { shape: vec![self.batch, self.seq], data: tgt },
+            ],
+        }
+    }
+
+    /// Reference token sequences for BLEU on eval batch `i`.
+    pub fn references(&self, i: usize) -> &[Vec<i32>] {
+        &self.eval_refs[i]
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+}
+
+/// Strip BOS/EOS/PAD from a target sequence (BLEU reference form).
+pub fn trim_ref(t: &[i32]) -> Vec<i32> {
+    t.iter()
+        .copied()
+        .skip_while(|&x| x == vocab::BOS)
+        .take_while(|&x| x != vocab::EOS && x != vocab::PAD)
+        .collect()
+}
+
+impl BatchSource for MtSource {
+    fn next_train(&mut self) -> Batch {
+        let mut pairs = Vec::with_capacity(self.batch);
+        // split borrows: sample with a local copy of the rng
+        let mut rng = self.rng.clone();
+        for _ in 0..self.batch {
+            let (s, t) = make_pair(&self.lexicon, &self.zipf, &mut rng);
+            pairs.push(self.encode_pair(&s, &t));
+        }
+        self.rng = rng;
+        self.batch_from(&pairs)
+    }
+
+    fn eval_batch(&self, i: usize) -> Batch {
+        let b = i % N_EVAL;
+        self.batch_from(&self.eval[b * self.batch..(b + 1) * self.batch])
+    }
+
+    fn eval_batches(&self) -> usize {
+        N_EVAL
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_are_deterministic_translations() {
+        let mut rng = Rng::new(1);
+        let lex = make_lexicon(&mut rng);
+        let zipf = Zipf::new(LEXICON, 1.1);
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let a = make_pair(&lex, &zipf, &mut r1);
+        let b = make_pair(&lex, &zipf, &mut r2);
+        assert_eq!(a, b);
+        assert_eq!(a.0.len(), a.1.len());
+    }
+
+    #[test]
+    fn translate_word_is_injective_on_lexicon() {
+        let mut rng = Rng::new(1);
+        let lex = make_lexicon(&mut rng);
+        let mut t: Vec<String> = lex.iter().map(|w| translate_word(w)).collect();
+        t.sort();
+        let n = t.len();
+        t.dedup();
+        assert_eq!(t.len(), n);
+    }
+
+    #[test]
+    fn batches_have_manifest_shapes() {
+        let mut s = MtSource::new(256, 24, 4, 0);
+        let b = s.next_train();
+        assert_eq!(b.values.len(), 2);
+        assert_eq!(b.values[0].shape(), &[4, 24]);
+        assert_eq!(b.values[1].shape(), &[4, 24]);
+        // target starts with BOS
+        let tgt = b.values[1].as_i32().unwrap();
+        assert_eq!(tgt[0], vocab::BOS);
+    }
+
+    #[test]
+    fn token_ids_within_vocab() {
+        let mut s = MtSource::new(256, 24, 4, 0);
+        for _ in 0..3 {
+            let b = s.next_train();
+            for v in &b.values {
+                for &id in v.as_i32().unwrap() {
+                    assert!((0..256).contains(&id));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn references_align_with_eval_batches() {
+        let s = MtSource::new(256, 24, 4, 0);
+        assert_eq!(s.eval_batches(), N_EVAL);
+        let refs = s.references(0);
+        assert_eq!(refs.len(), 4);
+        let b = s.eval_batch(0);
+        let tgt = b.values[1].as_i32().unwrap();
+        let trimmed = trim_ref(&tgt[0..24]);
+        assert_eq!(refs[0], trimmed);
+    }
+
+    #[test]
+    fn trim_ref_strips_specials() {
+        let t = vec![vocab::BOS, 7, 8, 9, vocab::EOS, vocab::PAD, vocab::PAD];
+        assert_eq!(trim_ref(&t), vec![7, 8, 9]);
+    }
+}

@@ -1,0 +1,51 @@
+//! # SM3 — Memory-Efficient Adaptive Optimization
+//!
+//! A production-style reproduction of *"Memory-Efficient Adaptive
+//! Optimization"* (Anil, Gupta, Koren, Singer — NeurIPS 2019), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas update kernels for
+//!   SM3-I/SM3-II and all baselines, tested against pure-jnp oracles.
+//! * **Layer 2** (`python/compile/`) — pure-JAX models (transformer LM,
+//!   seq2seq translation, BERT-style masked LM, convnet) with fused
+//!   per-optimizer train steps, AOT-lowered once to HLO text.
+//! * **Layer 3** (this crate) — the training framework: configuration,
+//!   synthetic data pipelines, a data-parallel coordinator with simulated
+//!   collectives, a pure-Rust optimizer bank mirroring the kernels, the
+//!   memory accountant that reproduces the paper's Tables 1–2, metrics
+//!   (BLEU, perplexity, accuracy), checkpointing, and the PJRT runtime
+//!   that executes the AOT artifacts. Python never runs at training time.
+//!
+//! See `DESIGN.md` for the experiment index (every paper table/figure →
+//! bench target) and `EXPERIMENTS.md` for measured results.
+
+pub mod bench_util;
+pub mod checkpoint;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod memory;
+pub mod metrics;
+pub mod optim;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod trace;
+
+/// Token-id conventions shared with `python/compile/aot.py`.
+pub mod vocab {
+    /// Padding token.
+    pub const PAD: i32 = 0;
+    /// Beginning-of-sequence token.
+    pub const BOS: i32 = 1;
+    /// End-of-sequence token.
+    pub const EOS: i32 = 2;
+    /// Unknown token.
+    pub const UNK: i32 = 3;
+    /// First regular (content) token id.
+    pub const FIRST: i32 = 4;
+}

@@ -1,0 +1,227 @@
+//! `sm3-train` — the SM3 training framework launcher.
+//!
+//! Subcommands:
+//!   train          run a training job from a TOML config (+ overrides)
+//!   eval           evaluate a model's held-out metrics at init
+//!   memory-report  per-core memory table for the real model inventories
+//!                  (reproduces paper Tables 1–2)
+//!   list           list AOT artifacts and models in the manifest
+//!
+//! Examples:
+//!   sm3-train train --config configs/mt_sm3.toml
+//!   sm3-train train --model lm_small --optimizer sm3 --steps 100 --exec fused
+//!   sm3-train memory-report
+
+use anyhow::{bail, Result};
+use sm3::cli::Command;
+use sm3::config::TrainConfig;
+use sm3::coordinator::Trainer;
+use sm3::memory::{inventory, MemoryModel, GIB};
+use sm3::metrics::RunLogger;
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command::new("train", "run a training job")
+            .option("config", "TOML config file (configs/*.toml)")
+            .option("model", "model key override (lm_small, mt_small, ...)")
+            .option("optimizer", "optimizer override (sm3|sm3i|adagrad|adam|adafactor|sgdm)")
+            .option("steps", "step-count override")
+            .option("lr", "base learning-rate override")
+            .option("exec", "execution path: split | fused")
+            .option("workers", "data-parallel worker count")
+            .option("grad-accum", "microbatches per step")
+            .option("seed", "data/init RNG seed")
+            .option("artifacts", "artifacts directory (default: artifacts)")
+            .option("out", "CSV output path for the loss curve")
+            .flag("quiet", "suppress per-step output"),
+        Command::new("eval", "evaluate at initialization")
+            .option("model", "model key")
+            .option("artifacts", "artifacts directory"),
+        Command::new("memory-report", "reproduce paper Tables 1-2")
+            .option("out", "CSV output path"),
+        Command::new("list", "list artifacts in the manifest")
+            .option("artifacts", "artifacts directory"),
+    ]
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "sm3-train — Memory-Efficient Adaptive Optimization (SM3), \
+         NeurIPS 2019 reproduction\n\nUSAGE: sm3-train <command> [options]\n\n");
+    for c in commands() {
+        s.push_str(&c.usage());
+        s.push('\n');
+    }
+    s
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd_name) = argv.first() else {
+        eprintln!("{}", usage());
+        bail!("missing command");
+    };
+    let cmds = commands();
+    let Some(cmd) = cmds.iter().find(|c| c.name == cmd_name.as_str()) else {
+        eprintln!("{}", usage());
+        bail!("unknown command {cmd_name:?}");
+    };
+    let args = cmd.parse(&argv[1..])?;
+    match cmd_name.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "memory-report" => cmd_memory_report(&args),
+        "list" => cmd_list(&args),
+        _ => unreachable!(),
+    }
+}
+
+fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => TrainConfig::load(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(m) = args.opt("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(o) = args.opt("optimizer") {
+        cfg.optim.name = o.to_string();
+    }
+    if let Some(s) = args.opt_parse::<u64>("steps")? {
+        cfg.steps = s;
+    }
+    if let Some(lr) = args.opt_parse::<f64>("lr")? {
+        cfg.optim.lr = lr;
+    }
+    if let Some(e) = args.opt("exec") {
+        cfg.exec = sm3::config::ExecMode::parse(e)?;
+    }
+    if let Some(w) = args.opt_parse::<usize>("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
+        cfg.grad_accum = g;
+    }
+    if let Some(s) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let quiet = args.has_flag("quiet");
+    println!(
+        "sm3-train: model={} optimizer={} exec={:?} steps={} workers={} \
+         grad_accum={}",
+        cfg.model, cfg.optim.name, cfg.exec, cfg.steps, cfg.workers,
+        cfg.grad_accum
+    );
+    let mut trainer = Trainer::new(cfg.clone())?;
+    println!("  platform: {}", trainer.runtime().platform());
+    println!("  params:   {:.2}M", trainer.meta.param_count as f64 / 1e6);
+    if let Some(opt) = trainer.optimizer() {
+        println!("  opt state: {:.2}M floats ({})",
+                 opt.state_floats() as f64 / 1e6, opt.name());
+    }
+    let mut logger = RunLogger::new(
+        args.opt("out"), "step,loss,loss_ema,lr,wall_ms", false)?;
+    let hist = trainer.train()?;
+    for s in &hist.steps {
+        logger.row(&[s.step.to_string(), format!("{:.6}", s.loss),
+                     format!("{:.6}", s.loss_ema), format!("{:.6e}", s.lr),
+                     format!("{:.2}", s.wall_ms)])?;
+        if !quiet && (s.step % 10 == 0 || s.step == 1) {
+            println!("  step {:>6}  loss {:.4}  (ema {:.4})  lr {:.3e}  {:.0} ms",
+                     s.step, s.loss, s.loss_ema, s.lr, s.wall_ms);
+        }
+    }
+    logger.flush()?;
+    for e in &hist.evals {
+        let metric = e.metric.map(|m| format!("  metric {m:.4}"))
+            .unwrap_or_default();
+        println!("  eval @ {:>6}: loss {:.4}{}", e.step, e.loss, metric);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &sm3::cli::Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    if let Some(m) = args.opt("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    cfg.steps = 1;
+    let trainer = Trainer::new(cfg)?;
+    let e = trainer.evaluate()?;
+    println!("eval: loss {:.4}  metric {:?}", e.loss, e.metric);
+    Ok(())
+}
+
+fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
+    // Table 1: Transformer-Big on TPUv2 (8 GiB/core), batch 12 & 24 per core
+    let m = MemoryModel::calibrate(
+        inventory::transformer_big(),
+        8.0 * GIB,
+        ("adam", 12, 6.88 * GIB),
+        ("sm3", 24, 7.02 * GIB),
+    );
+    println!("Table 1 — Transformer-Big (WMT'14 en→fr), GiB per TPUv2 core");
+    println!("{:<12} {:>6} {:>10} {:>8}", "optimizer", "batch", "memory", "fits");
+    let mut rows = Vec::new();
+    for (opt, b) in [("adam", 12), ("adagrad", 12), ("adafactor", 12),
+                     ("sm3", 12), ("adam", 24), ("adagrad", 24),
+                     ("adafactor", 24), ("sm3", 24)] {
+        let gib = m.gib_per_core(opt, b);
+        let fits = m.fits(opt, b);
+        println!("{opt:<12} {b:>6} {gib:>9.2} {:>8}",
+                 if fits { "yes" } else { "OOM" });
+        rows.push(format!("transformer_big,{opt},{b},{gib:.3},{fits}"));
+    }
+    // Table 2: BERT-Large on 8x8 TPUv2
+    let bert = MemoryModel::calibrate(
+        inventory::bert_large(),
+        8.0 * GIB,
+        ("adam", 8, 6.15 * GIB),
+        ("sm3", 16, 6.02 * GIB),
+    );
+    println!("\nTable 2 — BERT-Large, GiB per TPUv2 core");
+    for (opt, b) in [("adam", 8), ("sm3", 8), ("sm3", 16), ("adam", 16)] {
+        let gib = bert.gib_per_core(opt, b);
+        let fits = bert.fits(opt, b);
+        println!("{opt:<12} {b:>6} {gib:>9.2} {:>8}",
+                 if fits { "yes" } else { "OOM" });
+        rows.push(format!("bert_large,{opt},{b},{gib:.3},{fits}"));
+    }
+    if let Some(path) = args.opt("out") {
+        let mut logger = RunLogger::new(
+            Some(path), "model,optimizer,batch_per_core,gib,fits", false)?;
+        for r in rows {
+            logger.row(&[r])?;
+        }
+        logger.flush()?;
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &sm3::cli::Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let manifest = sm3::runtime::manifest::Manifest::load(dir)?;
+    println!("models:");
+    for (name, meta) in &manifest.models {
+        println!("  {name:<12} kind={:<4} params={:.2}M batch={}",
+                 meta.kind, meta.param_count as f64 / 1e6, meta.batch);
+    }
+    println!("artifacts:");
+    for (name, a) in &manifest.artifacts {
+        println!("  {name:<28} {:<14} {:>3} in / {:>3} out",
+                 a.kind, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,223 @@
+//! The memory accountant — reproduces the paper's Tables 1 and 2.
+//!
+//! Per-core training memory is modeled as
+//!
+//! ```text
+//! bytes/core = overhead                      (runtime + program constants)
+//!            + 4·P/cores_model               (fp32 parameters, replicated*)
+//!            + 4·P/cores_model               (fp32 gradients)
+//!            + 4·S_opt/cores_model           (optimizer slots — the paper's term)
+//!            + A·batch_per_core              (activations, per example)
+//! ```
+//!
+//! The optimizer-slot arithmetic `S_opt` is *exact* (same code as the
+//! optimizer bank, cross-checked in tests); `overhead` and the per-example
+//! activation cost `A` are calibrated once against two published cells of
+//! Table 1 (Adam@384 and SM3@768) and then *predict* the remaining cells
+//! and all of Table 2. What the tables demonstrate — who fits, who OOMs,
+//! and the gap between Adam/Adagrad and Adafactor/SM3 — is driven entirely
+//! by the exact slot arithmetic.
+//!
+//! (*) the paper's runs are data-parallel: parameters are replicated per
+//! core, so `cores_model = 1`.
+
+pub mod inventory;
+
+use crate::optim::ParamSpec;
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Exact optimizer-state scalar count for a parameter inventory —
+/// the static mirror of `Optimizer::state_floats`.
+pub fn opt_state_floats(opt: &str, specs: &[ParamSpec]) -> usize {
+    let d: usize = specs.iter().map(ParamSpec::numel).sum();
+    match opt {
+        // m + v
+        "adam" => 2 * d,
+        // γ + momentum
+        "adagrad" => 2 * d,
+        // momentum only
+        "sgdm" => d,
+        // co-dim-1 slice accumulators + momentum
+        "sm3" | "sm3i" => {
+            let covers: usize = specs
+                .iter()
+                .map(|s| {
+                    if s.shape.len() <= 1 {
+                        s.numel() // singleton cover == full vector
+                    } else {
+                        s.shape.iter().sum()
+                    }
+                })
+                .sum();
+            covers + d
+        }
+        // factored row/col stats (full for vectors) + momentum
+        "adafactor" => {
+            let stats: usize = specs
+                .iter()
+                .map(|s| {
+                    if s.shape.len() >= 2 {
+                        let cols = *s.shape.last().unwrap();
+                        s.numel() / cols + cols
+                    } else {
+                        s.numel()
+                    }
+                })
+                .sum();
+            stats + d
+        }
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+/// Calibrated activation/overhead model for one hardware+model setting.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// parameter inventory of the model
+    pub specs: Vec<ParamSpec>,
+    /// fixed per-core overhead, bytes
+    pub overhead: f64,
+    /// activation bytes per example
+    pub act_per_example: f64,
+    /// device memory per core, bytes (TPUv2: 8 GiB; TPUv3: 16 GiB)
+    pub core_limit: f64,
+}
+
+impl MemoryModel {
+    /// Per-core usage in bytes for `opt` at `batch_per_core`.
+    pub fn bytes_per_core(&self, opt: &str, batch_per_core: usize) -> f64 {
+        let p: usize = self.specs.iter().map(ParamSpec::numel).sum();
+        let slots = opt_state_floats(opt, &self.specs);
+        self.overhead
+            + 4.0 * p as f64          // params
+            + 4.0 * p as f64          // grads
+            + 4.0 * slots as f64      // optimizer state
+            + self.act_per_example * batch_per_core as f64
+    }
+
+    pub fn gib_per_core(&self, opt: &str, batch_per_core: usize) -> f64 {
+        self.bytes_per_core(opt, batch_per_core) / GIB
+    }
+
+    /// Does (optimizer, batch/core) fit on the device?
+    pub fn fits(&self, opt: &str, batch_per_core: usize) -> bool {
+        self.bytes_per_core(opt, batch_per_core) <= self.core_limit
+    }
+
+    /// Largest batch/core that fits (0 if even batch 1 does not).
+    pub fn max_batch(&self, opt: &str) -> usize {
+        let fixed = self.bytes_per_core(opt, 0);
+        if fixed > self.core_limit {
+            return 0;
+        }
+        ((self.core_limit - fixed) / self.act_per_example) as usize
+    }
+
+    /// Calibrate (overhead, act_per_example) from two published cells
+    /// `(opt, batch_per_core, observed_bytes)` — a 2×2 linear solve.
+    pub fn calibrate(
+        specs: Vec<ParamSpec>,
+        core_limit: f64,
+        cell_a: (&str, usize, f64),
+        cell_b: (&str, usize, f64),
+    ) -> Self {
+        let p: usize = specs.iter().map(ParamSpec::numel).sum();
+        let fixed = |opt: &str| {
+            4.0 * p as f64 * 2.0
+                + 4.0 * opt_state_floats(opt, &specs) as f64
+        };
+        let (oa, ba, ya) = cell_a;
+        let (ob, bb, yb) = cell_b;
+        let ra = ya - fixed(oa);
+        let rb = yb - fixed(ob);
+        // ra = overhead + A·ba ; rb = overhead + A·bb
+        let act = (rb - ra) / (bb as f64 - ba as f64);
+        let overhead = ra - act * ba as f64;
+        Self { specs, overhead, act_per_example: act, core_limit }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::inventory;
+    use super::*;
+    use crate::optim;
+
+    /// The static arithmetic must agree with the live optimizer bank.
+    #[test]
+    fn static_matches_dynamic_state_floats() {
+        let specs = vec![
+            ParamSpec::new("emb", &[100, 16]),
+            ParamSpec::new("w", &[16, 64]),
+            ParamSpec::new("b", &[64]),
+            ParamSpec::new("conv", &[3, 3, 4, 8]),
+        ];
+        for name in optim::ALL {
+            let opt = optim::build(name, &specs, 0.9, 0.98).unwrap();
+            assert_eq!(opt_state_floats(name, &specs), opt.state_floats(),
+                       "{name}");
+        }
+    }
+
+    #[test]
+    fn sm3_is_the_smallest_adaptive_state() {
+        let specs = inventory::transformer_big();
+        let sm3 = opt_state_floats("sm3", &specs);
+        let ada = opt_state_floats("adagrad", &specs);
+        let adam = opt_state_floats("adam", &specs);
+        let af = opt_state_floats("adafactor", &specs);
+        // SM3 ≤ Adafactor: for matrices both keep rows+cols (+ momentum);
+        // the paper's 0.07 GiB gap between them is framework overhead noise
+        assert!(sm3 <= af, "sm3 {sm3} <= adafactor {af}");
+        assert!(af < ada);
+        assert_eq!(ada, adam);
+        // SM3's second-moment state is negligible vs d (paper: "virtually
+        // eliminates the memory overhead")
+        let d: usize = specs.iter().map(ParamSpec::numel).sum();
+        assert!((sm3 - d) * 100 < d, "covers are <1% of d");
+    }
+
+    #[test]
+    fn table1_shape_reproduced() {
+        // Transformer-Big on 4x4 TPUv2 (16 cores, 8 GiB each), Table 1.
+        let m = MemoryModel::calibrate(
+            inventory::transformer_big(),
+            8.0 * GIB,
+            ("adam", 12, 6.88 * GIB),
+            ("sm3", 24, 7.02 * GIB),
+        );
+        // predicted cells, paper values in comments
+        let adagrad12 = m.gib_per_core("adagrad", 12);   // 6.85
+        let adafactor12 = m.gib_per_core("adafactor", 12); // 5.43
+        let sm3_12 = m.gib_per_core("sm3", 12);          // 5.36
+        let adafactor24 = m.gib_per_core("adafactor", 24); // 7.04
+        assert!((adagrad12 - 6.85).abs() < 0.15, "adagrad@12 {adagrad12}");
+        assert!((adafactor12 - 5.43).abs() < 0.25, "adafactor@12 {adafactor12}");
+        assert!((sm3_12 - 5.36).abs() < 0.25, "sm3@12 {sm3_12}");
+        assert!((adafactor24 - 7.04).abs() < 0.25, "adafactor@24 {adafactor24}");
+        // the qualitative claim: Adam/Adagrad OOM at 24/core, SM3/Adafactor fit
+        assert!(m.fits("sm3", 24));
+        assert!(m.fits("adafactor", 24));
+        assert!(!m.fits("adam", 24));
+        assert!(!m.fits("adagrad", 24));
+    }
+
+    #[test]
+    fn max_batch_doubles_for_sm3() {
+        let m = MemoryModel::calibrate(
+            inventory::transformer_big(),
+            8.0 * GIB,
+            ("adam", 12, 6.88 * GIB),
+            ("sm3", 24, 7.02 * GIB),
+        );
+        let adam_max = m.max_batch("adam");
+        let sm3_max = m.max_batch("sm3");
+        // the paper doubles 12 → 24; our calibrated activation model puts
+        // Adam's ceiling at ~20 and SM3's at ~31 — SM3 fits 24, Adam not
+        assert!(sm3_max >= 24, "sm3 {sm3_max}");
+        assert!(adam_max < 24, "adam {adam_max}");
+        assert!(sm3_max as f64 >= 1.5 * adam_max as f64,
+                "sm3 {sm3_max} vs adam {adam_max}");
+    }
+}

@@ -1,0 +1,174 @@
+//! Corpus BLEU (Papineni et al.) — the paper's Table 1 / Fig. 6 metric.
+//!
+//! Standard BLEU-4: modified n-gram precision with per-sentence clipping
+//! against the reference, geometric mean over n = 1..4 with +0 smoothing
+//! (a precision of zero zeroes the score, as in the canonical definition),
+//! and the corpus-level brevity penalty. Operates on token-id sequences —
+//! the paper likewise reports tokenized BLEU.
+
+use std::collections::HashMap;
+
+/// Detailed corpus score.
+#[derive(Debug, Clone)]
+pub struct BleuScore {
+    /// canonical BLEU-4, 0..100 (zero if any n-gram precision is zero)
+    pub bleu: f64,
+    /// add-one-smoothed BLEU-4 (Lin & Och smoothing for n ≥ 2) — finite
+    /// and informative for partially-trained models where canonical
+    /// BLEU-4 is degenerately 0
+    pub bleu_smooth: f64,
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub hyp_len: usize,
+    pub ref_len: usize,
+}
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over aligned (hypothesis, reference) pairs.
+pub fn corpus_bleu(hyps: &[Vec<i32>], refs: &[Vec<i32>]) -> BleuScore {
+    assert_eq!(hyps.len(), refs.len(), "hyps/refs must align");
+    let mut matched = [0usize; 4];
+    let mut total = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (h, r) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        ref_len += r.len();
+        for n in 1..=4 {
+            let hc = ngram_counts(h, n);
+            let rc = ngram_counts(r, n);
+            for (gram, &count) in &hc {
+                total[n - 1] += count;
+                let clip = rc.get(gram).copied().unwrap_or(0);
+                matched[n - 1] += count.min(clip);
+            }
+        }
+    }
+    let mut precisions = [0.0f64; 4];
+    for n in 0..4 {
+        precisions[n] = if total[n] == 0 {
+            0.0
+        } else {
+            matched[n] as f64 / total[n] as f64
+        };
+    }
+    let bp = if hyp_len == 0 {
+        0.0
+    } else if hyp_len > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    let bleu = if precisions.iter().any(|&p| p == 0.0) {
+        0.0
+    } else {
+        let log_mean: f64 =
+            precisions.iter().map(|p| p.ln()).sum::<f64>() / 4.0;
+        bp * log_mean.exp() * 100.0
+    };
+    // add-one smoothing on n >= 2 (Lin & Och, "smoothing 1")
+    let mut smooth = [0.0f64; 4];
+    for n in 0..4 {
+        smooth[n] = if n == 0 {
+            precisions[0]
+        } else {
+            (matched[n] + 1) as f64 / (total[n] + 1) as f64
+        };
+    }
+    let bleu_smooth = if smooth[0] == 0.0 {
+        0.0
+    } else {
+        let log_mean: f64 = smooth.iter().map(|p| p.ln()).sum::<f64>() / 4.0;
+        bp * log_mean.exp() * 100.0
+    };
+    BleuScore { bleu, bleu_smooth, precisions, brevity_penalty: bp,
+                hyp_len, ref_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let seqs = vec![vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9]];
+        let s = corpus_bleu(&seqs, &seqs);
+        assert!((s.bleu - 100.0).abs() < 1e-9);
+        assert_eq!(s.brevity_penalty, 1.0);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let h = vec![vec![1, 2, 3, 4, 5]];
+        let r = vec![vec![6, 7, 8, 9, 10]];
+        let s = corpus_bleu(&h, &r);
+        assert_eq!(s.bleu, 0.0);
+        // unigram precision 0 zeroes the smoothed score too
+        assert_eq!(s.bleu_smooth, 0.0);
+    }
+
+    #[test]
+    fn smoothed_is_finite_when_canonical_is_zero() {
+        // some unigram overlap but no 4-gram match
+        let h = vec![vec![1, 9, 3, 8, 5]];
+        let r = vec![vec![1, 2, 3, 4, 5]];
+        let s = corpus_bleu(&h, &r);
+        assert_eq!(s.bleu, 0.0);
+        assert!(s.bleu_smooth > 0.0 && s.bleu_smooth < 100.0);
+    }
+
+    #[test]
+    fn smoothed_tracks_canonical_when_all_match() {
+        let seqs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let s = corpus_bleu(&seqs, &seqs);
+        assert!((s.bleu - 100.0).abs() < 1e-9);
+        assert!(s.bleu_smooth > 90.0);
+    }
+
+    #[test]
+    fn brevity_penalty_applies_to_short_hypotheses() {
+        let h = vec![vec![1, 2, 3, 4]];
+        let r = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let s = corpus_bleu(&h, &r);
+        assert!(s.brevity_penalty < 1.0);
+        // 4/8: bp = exp(1 - 2) = e^-1
+        assert!((s.brevity_penalty - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipping_limits_repeated_ngrams() {
+        // hypothesis repeats a unigram beyond its reference count
+        let h = vec![vec![1, 1, 1, 1, 1, 1, 1]];
+        let r = vec![vec![1, 2, 3, 4, 5, 6, 7]];
+        let s = corpus_bleu(&h, &r);
+        // unigram precision = 1/7 (clip at one occurrence)
+        assert!((s.precisions[0] - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_overlap_is_between() {
+        let h = vec![vec![1, 2, 3, 9, 5, 6, 7, 8]];
+        let r = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let b = corpus_bleu(&h, &r).bleu;
+        assert!(b > 10.0 && b < 90.0, "bleu {b}");
+    }
+
+    #[test]
+    fn corpus_pools_statistics() {
+        // corpus BLEU is not the mean of sentence BLEUs: a zero-overlap
+        // sentence does not zero the corpus score
+        let h = vec![vec![1, 2, 3, 4, 5], vec![20, 21, 22, 23, 24]];
+        let r = vec![vec![1, 2, 3, 4, 5], vec![6, 7, 8, 9, 10]];
+        let s = corpus_bleu(&h, &r);
+        assert!(s.bleu > 0.0 && s.bleu < 100.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Training/eval metrics: BLEU, perplexity, accuracy, EMA smoothing, and
+//! CSV curve logging (the series behind every reproduced figure).
+
+pub mod bleu;
+
+pub use bleu::{corpus_bleu, BleuScore};
+
+use std::io::Write;
+
+/// Exponential moving average (loss-curve smoothing, as in the paper's
+/// training plots).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * prev + (1.0 - self.alpha) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Streaming mean/variance (Welford) for stable metric aggregation.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Perplexity from mean token NLL (the paper's Fig. 2 y-axis is
+/// log-perplexity == the loss itself).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// A metrics logger writing one CSV per run (plus stdout echo).
+pub struct RunLogger {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    pub echo: bool,
+}
+
+impl RunLogger {
+    /// `path = None` logs to stdout only.
+    pub fn new(path: Option<&str>, header: &str, echo: bool)
+               -> std::io::Result<Self> {
+        let out = match path {
+            None => None,
+            Some(p) => {
+                if let Some(dir) = std::path::Path::new(p).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                let mut f = std::io::BufWriter::new(std::fs::File::create(p)?);
+                writeln!(f, "{header}")?;
+                Some(f)
+            }
+        };
+        Ok(Self { out, echo })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        let line = fields.join(",");
+        if let Some(f) = &mut self.out {
+            writeln!(f, "{line}")?;
+        }
+        if self.echo {
+            println!("  {line}");
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        if let Some(f) = &mut self.out {
+            f.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.get().unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut e = Ema::new(0.99);
+        assert_eq!(e.update(7.0), 7.0);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // uniform over 64 tokens: nll = ln 64 -> ppl = 64
+        assert!((perplexity(64f64.ln()) - 64.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,214 @@
+//! Adafactor (Shazeer & Stern) — the sublinear-memory comparator
+//! (paper §4 "Comparison with Adafactor").
+//!
+//! Matrix parameters keep factored row/col second-moment estimates
+//! (Θ(m+n) like SM3); vectors fall back to the full second moment.
+//! Rank>2 tensors are folded to (Π leading dims, last dim) matrices —
+//! Adafactor is matrix-only by construction. Update clipping at RMS 1.0
+//! (the reference implementation's d=1.0) and β1 momentum, matching the
+//! paper's experimental setup (all methods run with momentum).
+
+use super::{Optimizer, ParamSpec};
+use crate::tensor::Tensor;
+
+const EPS: f32 = 1e-30;
+
+enum Slot {
+    Factored { vr: Vec<f32>, vc: Vec<f32>, rows: usize, cols: usize },
+    Full { v: Vec<f32> },
+}
+
+pub struct Adafactor {
+    beta1: f32,
+    beta2: f32,
+    slots: Vec<Slot>,
+    mom: Vec<Tensor>,
+    /// scratch buffer for the unclipped update (reused across leaves)
+    scratch: Vec<f32>,
+}
+
+impl Adafactor {
+    pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32) -> Self {
+        let slots = specs
+            .iter()
+            .map(|s| {
+                if s.shape.len() >= 2 {
+                    let cols = *s.shape.last().unwrap();
+                    let rows = s.numel() / cols;
+                    Slot::Factored { vr: vec![0.0; rows], vc: vec![0.0; cols],
+                                     rows, cols }
+                } else {
+                    Slot::Full { v: vec![0.0; s.numel()] }
+                }
+            })
+            .collect();
+        Self {
+            beta1,
+            beta2,
+            slots,
+            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let (b1, b2) = (self.beta1, self.beta2);
+        for idx in 0..params.len() {
+            let wd = params[idx].data_mut();
+            let gd = grads[idx].data();
+            let mom = self.mom[idx].data_mut();
+            match &mut self.slots[idx] {
+                Slot::Factored { vr, vc, rows, cols } => {
+                    let (m, n) = (*rows, *cols);
+                    // update factored stats: row/col means of g² + eps
+                    for i in 0..m {
+                        let mut s = 0.0f32;
+                        for j in 0..n {
+                            let g = gd[i * n + j];
+                            s += g * g + EPS;
+                        }
+                        vr[i] = b2 * vr[i] + (1.0 - b2) * (s / n as f32);
+                    }
+                    for j in 0..n {
+                        let mut s = 0.0f32;
+                        for i in 0..m {
+                            let g = gd[i * n + j];
+                            s += g * g + EPS;
+                        }
+                        vc[j] = b2 * vc[j] + (1.0 - b2) * (s / m as f32);
+                    }
+                    let vr_mean: f32 = vr.iter().sum::<f32>() / m as f32;
+                    // unclipped update into scratch, accumulate RMS
+                    self.scratch.clear();
+                    self.scratch.resize(m * n, 0.0);
+                    let mut sumsq = 0.0f32;
+                    for i in 0..m {
+                        for j in 0..n {
+                            let k = i * n + j;
+                            let vhat = vr[i] * vc[j] / vr_mean;
+                            let u = gd[k] / vhat.sqrt();
+                            self.scratch[k] = u;
+                            sumsq += u * u;
+                        }
+                    }
+                    let rms = (sumsq / (m * n) as f32).sqrt();
+                    let clip = 1.0f32.max(rms);
+                    for k in 0..m * n {
+                        let u = self.scratch[k] / clip;
+                        mom[k] = b1 * mom[k] + (1.0 - b1) * u;
+                        wd[k] -= lr * mom[k];
+                    }
+                }
+                Slot::Full { v } => {
+                    self.scratch.clear();
+                    self.scratch.resize(wd.len(), 0.0);
+                    let mut sumsq = 0.0f32;
+                    for k in 0..wd.len() {
+                        v[k] = b2 * v[k] + (1.0 - b2) * (gd[k] * gd[k] + EPS);
+                        let u = gd[k] / v[k].sqrt();
+                        self.scratch[k] = u;
+                        sumsq += u * u;
+                    }
+                    let rms = (sumsq / wd.len() as f32).sqrt();
+                    let clip = 1.0f32.max(rms);
+                    for k in 0..wd.len() {
+                        let u = self.scratch[k] / clip;
+                        mom[k] = b1 * mom[k] + (1.0 - b1) * u;
+                        wd[k] -= lr * mom[k];
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        let stats: usize = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Factored { vr, vc, .. } => vr.len() + vc.len(),
+                Slot::Full { v } => v.len(),
+            })
+            .sum();
+        stats + self.mom.iter().map(Tensor::len).sum::<usize>()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        let mut out = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            match s {
+                Slot::Factored { vr, vc, .. } => {
+                    out.push((i, "vr", Tensor::from_vec(&[vr.len()], vr.clone())));
+                    out.push((i, "vc", Tensor::from_vec(&[vc.len()], vc.clone())));
+                }
+                Slot::Full { v } => {
+                    out.push((i, "v", Tensor::from_vec(&[v.len()], v.clone())));
+                }
+            }
+            out.push((i, "mom", self.mom[i].clone()));
+        }
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        let mut it = state.into_iter();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            match s {
+                Slot::Factored { vr, vc, .. } => {
+                    vr.copy_from_slice(it.next().expect("underrun").data());
+                    vc.copy_from_slice(it.next().expect("underrun").data());
+                }
+                Slot::Full { v } => {
+                    v.copy_from_slice(it.next().expect("underrun").data());
+                }
+            }
+            self.mom[i] = it.next().expect("underrun");
+        }
+        assert!(it.next().is_none());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn factored_state_is_sublinear() {
+        let specs = vec![ParamSpec::new("emb", &[256, 64])];
+        let opt = Adafactor::new(&specs, 0.9, 0.98);
+        // stats: 256 + 64; momentum: 256*64
+        assert_eq!(opt.state_floats(), 256 + 64 + 256 * 64);
+    }
+
+    #[test]
+    fn update_rms_clipped_to_one() {
+        // with zero history a huge gradient's update must have RMS <= 1
+        let specs = vec![ParamSpec::new("w", &[4, 4])];
+        let mut opt = Adafactor::new(&specs, 0.0, 0.5);
+        let mut params = vec![Tensor::zeros(&[4, 4])];
+        let mut rng = Rng::new(1);
+        let g = Tensor::randn(&[4, 4], 100.0, &mut rng);
+        opt.step(&mut params, &[g], 1.0);
+        let rms = (params[0].sq_norm() / 16.0).sqrt();
+        assert!(rms <= 1.0 + 1e-4, "rms {rms}");
+    }
+
+    #[test]
+    fn rank3_is_folded_to_matrix() {
+        let specs = vec![ParamSpec::new("conv", &[3, 3, 8])];
+        let opt = Adafactor::new(&specs, 0.9, 0.98);
+        match &opt.slots[0] {
+            Slot::Factored { rows, cols, .. } => {
+                assert_eq!((*rows, *cols), (9, 8));
+            }
+            _ => panic!("expected factored slot"),
+        }
+    }
+}

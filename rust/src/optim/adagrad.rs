@@ -1,0 +1,115 @@
+//! Adagrad (Duchi, Hazan & Singer) with heavy-ball momentum — the
+//! linear-memory method SM3 is measured against (paper Eq. 1–2).
+
+use super::{safe_rsqrt, Optimizer, ParamSpec};
+use crate::tensor::Tensor;
+
+pub struct Adagrad {
+    beta1: f32,
+    /// per-parameter elementwise accumulator γ (Eq. 1)
+    acc: Vec<Tensor>,
+    mom: Vec<Tensor>,
+}
+
+impl Adagrad {
+    pub fn new(specs: &[ParamSpec], beta1: f32) -> Self {
+        Self {
+            beta1,
+            acc: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+        }
+    }
+
+    /// The full elementwise second-moment statistics γ_t (Fig. 1 / Fig. 5).
+    pub fn accumulator(&self, idx: usize) -> &Tensor {
+        &self.acc[idx]
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let beta1 = self.beta1;
+        for idx in 0..params.len() {
+            let wd = params[idx].data_mut();
+            let gd = grads[idx].data();
+            let acc = self.acc[idx].data_mut();
+            let mom = self.mom[idx].data_mut();
+            for k in 0..wd.len() {
+                let nu = acc[k] + gd[k] * gd[k];
+                let upd = gd[k] * safe_rsqrt(nu);
+                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+                wd[k] -= lr * mom[k];
+                acc[k] = nu;
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.acc.iter().map(Tensor::len).sum::<usize>()
+            + self.mom.iter().map(Tensor::len).sum::<usize>()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        let mut out = Vec::new();
+        for i in 0..self.acc.len() {
+            out.push((i, "acc", self.acc[i].clone()));
+            out.push((i, "mom", self.mom[i].clone()));
+        }
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        let mut it = state.into_iter();
+        for i in 0..self.acc.len() {
+            self.acc[i] = it.next().expect("state underrun");
+            self.mom[i] = it.next().expect("state underrun");
+        }
+        assert!(it.next().is_none());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn accumulator_is_sum_of_squares() {
+        let specs = vec![ParamSpec::new("w", &[4])];
+        let mut opt = Adagrad::new(&specs, 0.0);
+        let mut params = vec![Tensor::zeros(&[4])];
+        let mut expect = vec![0.0f32; 4];
+        let mut rng = Rng::new(0);
+        for _ in 0..8 {
+            let g = Tensor::randn(&[4], 1.0, &mut rng);
+            for (e, &gv) in expect.iter_mut().zip(g.data()) {
+                *e += gv * gv;
+            }
+            opt.step(&mut params, &[g], 0.1);
+        }
+        for (a, e) in opt.accumulator(0).data().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn effective_lr_decays() {
+        // repeated identical gradients: |Δw| shrinks like 1/sqrt(t)
+        let specs = vec![ParamSpec::new("w", &[1])];
+        let mut opt = Adagrad::new(&specs, 0.0);
+        let mut params = vec![Tensor::zeros(&[1])];
+        let g = Tensor::from_vec(&[1], vec![2.0]);
+        let mut prev = f32::INFINITY;
+        for _ in 0..10 {
+            let before = params[0].data()[0];
+            opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+            let delta = (params[0].data()[0] - before).abs();
+            assert!(delta < prev);
+            prev = delta;
+        }
+    }
+}

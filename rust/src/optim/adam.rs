@@ -1,0 +1,116 @@
+//! Adam (Kingma & Ba) — the 2×d-state baseline whose memory footprint
+//! motivates the paper (Tables 1–2).
+
+use super::{Optimizer, ParamSpec};
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: f32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32) -> Self {
+        Self {
+            beta1,
+            beta2,
+            eps,
+            t: 0.0,
+            m: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+            v: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        self.t += 1.0;
+        let (b1, b2) = (self.beta1, self.beta2);
+        // f32 powers, matching the kernel exactly
+        let bc1 = 1.0 - b1.powf(self.t);
+        let bc2 = 1.0 - b2.powf(self.t);
+        for idx in 0..params.len() {
+            let wd = params[idx].data_mut();
+            let gd = grads[idx].data();
+            let m = self.m[idx].data_mut();
+            let v = self.v[idx].data_mut();
+            for k in 0..wd.len() {
+                m[k] = b1 * m[k] + (1.0 - b1) * gd[k];
+                v[k] = b2 * v[k] + (1.0 - b2) * gd[k] * gd[k];
+                let mhat = m[k] / bc1;
+                let vhat = v[k] / bc2;
+                wd[k] -= lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.m.iter().map(Tensor::len).sum::<usize>()
+            + self.v.iter().map(Tensor::len).sum::<usize>()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        let mut out = Vec::new();
+        // step count rides along as a 1-element tensor on slot "t" of leaf 0
+        out.push((0, "t", Tensor::from_vec(&[1], vec![self.t])));
+        for i in 0..self.m.len() {
+            out.push((i, "m", self.m[i].clone()));
+            out.push((i, "v", self.v[i].clone()));
+        }
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        let mut it = state.into_iter();
+        self.t = it.next().expect("state underrun").data()[0];
+        for i in 0..self.m.len() {
+            self.m[i] = it.next().expect("state underrun");
+            self.v[i] = it.next().expect("state underrun");
+        }
+        assert!(it.next().is_none());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // bias correction ⇒ |Δw| ≈ lr on step 1 regardless of g scale
+        let specs = vec![ParamSpec::new("w", &[1])];
+        let mut opt = Adam::new(&specs, 0.9, 0.999, 1e-8);
+        for scale in [0.01f32, 1.0, 100.0] {
+            let mut opt2 = Adam::new(&specs, 0.9, 0.999, 1e-8);
+            let mut params = vec![Tensor::zeros(&[1])];
+            let g = Tensor::from_vec(&[1], vec![scale]);
+            opt2.step(&mut params, &[g], 0.01);
+            assert!((params[0].data()[0].abs() - 0.01).abs() < 1e-4,
+                    "scale {scale}: {}", params[0].data()[0]);
+        }
+        let _ = opt.state_floats();
+    }
+
+    #[test]
+    fn step_counter_in_state_roundtrip() {
+        let specs = vec![ParamSpec::new("w", &[2])];
+        let mut opt = Adam::new(&specs, 0.9, 0.999, 1e-8);
+        let mut params = vec![Tensor::zeros(&[2])];
+        let g = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        for _ in 0..5 {
+            opt.step(&mut params, std::slice::from_ref(&g), 0.01);
+        }
+        let st: Vec<Tensor> = opt.state().into_iter().map(|(_, _, t)| t).collect();
+        let mut fresh = Adam::new(&specs, 0.9, 0.999, 1e-8);
+        fresh.load_state(st);
+        assert_eq!(fresh.t, 5.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! The Layer-3 optimizer bank.
+//!
+//! Pure-Rust implementations of SM3-I, SM3-II, Adagrad, Adam, Adafactor and
+//! SGD+momentum, bit-compatible (same f32 op order) with the Layer-1 Pallas
+//! kernels and their jnp oracles. These drive the *split* execution path
+//! (grad artifact → host-side update), power optimizer-state introspection
+//! for the Fig. 1/5/7 traces, checkpointing, and the memory accountant.
+//!
+//! The fused path (optimizer inside the HLO artifact) bypasses this module
+//! entirely; cross-path equality is asserted in `rust/tests/`.
+
+mod adafactor;
+mod adagrad;
+mod adam;
+pub mod cover;
+pub mod schedule;
+mod sgdm;
+mod sm3;
+
+pub use adafactor::Adafactor;
+pub use adagrad::Adagrad;
+pub use adam::Adam;
+pub use sgdm::SgdMomentum;
+pub use sm3::{Sm3, Sm3Variant};
+
+use crate::tensor::Tensor;
+
+/// `1/sqrt(nu)` with the paper's `0/0 = 0` convention (no epsilon), f32.
+#[inline(always)]
+pub(crate) fn safe_rsqrt(nu: f32) -> f32 {
+    if nu > 0.0 {
+        1.0 / nu.sqrt()
+    } else {
+        0.0
+    }
+}
+
+/// Shape-and-name description of one parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn new(name: impl Into<String>, shape: &[usize]) -> Self {
+        Self { name: name.into(), shape: shape.to_vec() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A first-order optimizer over a fixed list of parameter tensors.
+///
+/// `step` applies one update in place; `lr` is the *post-schedule* learning
+/// rate for this step (warmup/decay live in [`schedule`]).
+pub trait Optimizer: Send {
+    /// Short name ("sm3", "adam", ...) matching the artifact registry.
+    fn name(&self) -> &'static str;
+
+    /// Apply one update step in place.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32);
+
+    /// Total optimizer-state scalars (the paper's memory quantity).
+    fn state_floats(&self) -> usize;
+
+    /// Named state tensors for checkpointing / introspection, in a stable
+    /// order: `(param_index, slot_name, tensor)`. Tensors are cloned — this
+    /// is a checkpoint/trace path, not the hot loop.
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)>;
+
+    /// Restore state saved by [`Optimizer::state`] (same order).
+    fn load_state(&mut self, state: Vec<Tensor>);
+}
+
+/// Construct an optimizer by registry name.
+///
+/// `beta1` is the momentum coefficient used by every method; Adam and
+/// Adafactor also take `beta2`.
+pub fn build(name: &str, specs: &[ParamSpec], beta1: f32, beta2: f32)
+             -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sm3" => Box::new(Sm3::new(specs, Sm3Variant::II, beta1)),
+        "sm3i" => Box::new(Sm3::new(specs, Sm3Variant::I, beta1)),
+        "adagrad" => Box::new(Adagrad::new(specs, beta1)),
+        "adam" => Box::new(Adam::new(specs, beta1, beta2, 1e-8)),
+        "adafactor" => Box::new(Adafactor::new(specs, beta1, beta2)),
+        "sgdm" => Box::new(SgdMomentum::new(specs, beta1)),
+        other => anyhow::bail!("unknown optimizer {other:?}"),
+    })
+}
+
+/// All registry names, in the order the paper's tables list them.
+pub const ALL: &[&str] = &["adam", "adagrad", "adafactor", "sm3", "sm3i", "sgdm"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn quad_specs() -> Vec<ParamSpec> {
+        vec![ParamSpec::new("w", &[8, 6]), ParamSpec::new("b", &[6])]
+    }
+
+    /// Minimizing a convex quadratic: every optimizer must reduce the loss.
+    #[test]
+    fn all_optimizers_descend_on_quadratic() {
+        for name in ALL {
+            let specs = quad_specs();
+            let mut opt = build(name, &specs, 0.9, 0.98).unwrap();
+            let mut rng = Rng::new(0);
+            let target_w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+            let target_b = Tensor::randn(&[6], 1.0, &mut rng);
+            let mut params = vec![Tensor::zeros(&[8, 6]), Tensor::zeros(&[6])];
+            let loss = |p: &[Tensor]| -> f64 {
+                p[0].zip(&target_w, |a, b| (a - b) * (a - b)).sq_norm().sqrt()
+                    + p[1].zip(&target_b, |a, b| (a - b) * (a - b)).sq_norm().sqrt()
+            };
+            let l0 = loss(&params);
+            let lr = match *name {
+                "sgdm" => 0.02,
+                "adam" => 0.05,
+                _ => 0.3,
+            };
+            for _ in 0..200 {
+                let gw = params[0].zip(&target_w, |a, b| 2.0 * (a - b));
+                let gb = params[1].zip(&target_b, |a, b| 2.0 * (a - b));
+                let grads = vec![gw, gb];
+                let (a, b) = params.split_at_mut(1);
+                let mut all = Vec::new();
+                all.extend(a.iter().cloned());
+                all.extend(b.iter().cloned());
+                opt.step(&mut all, &grads, lr);
+                params = all;
+            }
+            let l1 = loss(&params);
+            assert!(l1 < 0.5 * l0, "{name}: {l0} -> {l1}");
+        }
+    }
+
+    #[test]
+    fn state_floats_ordering_matches_paper() {
+        // Adam = 2d, Adagrad(+m) = 2d, SGD+m = d,
+        // SM3(+m) = d + sum(slices), Adafactor(+m) = d + rows+cols.
+        let specs = vec![ParamSpec::new("emb", &[1000, 64]),
+                         ParamSpec::new("b", &[64])];
+        let d: usize = specs.iter().map(|s| s.numel()).sum();
+        let f = |n: &str| build(n, &specs, 0.9, 0.98).unwrap().state_floats();
+        assert_eq!(f("adam"), 2 * d);
+        assert_eq!(f("adagrad"), 2 * d);
+        assert_eq!(f("sgdm"), d);
+        assert_eq!(f("sm3"), d + (1000 + 64) + 64);
+        assert_eq!(f("adafactor"), d + (1000 + 64) + 64);
+        assert!(f("sm3") < f("adam"));
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("nope", &quad_specs(), 0.9, 0.98).is_err());
+    }
+}

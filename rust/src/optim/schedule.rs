@@ -1,0 +1,163 @@
+//! Learning-rate schedules — paper Appendix C, Table 4.
+//!
+//! | optimizer (experiment)      | post-warmup schedule        |
+//! |-----------------------------|-----------------------------|
+//! | Adam/Adafactor (Transformer)| η·√(d/t)                    |
+//! | Adam/Adafactor (BERT)       | η·(1 − t/T)                 |
+//! | SGD+momentum (AmoebaNet)    | max{η₀, η·α^⌊t/τ⌋}          |
+//! | Adagrad, SM3 (all)          | η (constant — the paper's   |
+//! |                             | "single hyper-parameter")   |
+//!
+//! All schedules are wrapped in linear warmup over the first `T₀` steps:
+//! the paper gradually ramps η from zero for every optimizer.
+
+/// Post-warmup decay shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decay {
+    /// η (SM3/Adagrad: no decay schedule to tune).
+    Constant,
+    /// η·√(d/t) — the Transformer schedule; `d` is the model dimension.
+    Rsqrt { d: f64 },
+    /// η·(1 − t/T) — the BERT schedule; `t_total` is T.
+    Linear { t_total: u64 },
+    /// max{η₀, η·α^⌊t/τ⌋} — staircase exponential (AmoebaNet SGD).
+    Staircase { eta0: f64, alpha: f64, tau: u64 },
+}
+
+/// A complete schedule: base rate, warmup, decay.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub base: f64,
+    pub warmup: u64,
+    pub decay: Decay,
+}
+
+impl Schedule {
+    pub fn constant(base: f64, warmup: u64) -> Self {
+        Self { base, warmup, decay: Decay::Constant }
+    }
+
+    pub fn rsqrt(base: f64, warmup: u64, d: usize) -> Self {
+        Self { base, warmup, decay: Decay::Rsqrt { d: d as f64 } }
+    }
+
+    pub fn linear(base: f64, warmup: u64, t_total: u64) -> Self {
+        Self { base, warmup, decay: Decay::Linear { t_total } }
+    }
+
+    pub fn staircase(base: f64, warmup: u64, eta0: f64, alpha: f64, tau: u64)
+                     -> Self {
+        Self { base, warmup, decay: Decay::Staircase { eta0, alpha, tau } }
+    }
+
+    /// Parse from config: "constant" | "rsqrt" | "linear" | "staircase".
+    pub fn from_name(name: &str, base: f64, warmup: u64, d_model: usize,
+                     t_total: u64) -> anyhow::Result<Self> {
+        Ok(match name {
+            "constant" => Self::constant(base, warmup),
+            "rsqrt" => Self::rsqrt(base, warmup, d_model),
+            "linear" => Self::linear(base, warmup, t_total),
+            "staircase" => Self::staircase(base, warmup, base * 0.01, 0.88,
+                                           (t_total / 10).max(1)),
+            other => anyhow::bail!("unknown schedule {other:?}"),
+        })
+    }
+
+    /// Learning rate at (1-based) step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        let t = t.max(1);
+        let warm = if self.warmup > 0 && t <= self.warmup {
+            t as f64 / self.warmup as f64
+        } else {
+            1.0
+        };
+        let decayed = match &self.decay {
+            Decay::Constant => self.base,
+            Decay::Rsqrt { d } => {
+                // η·√(d/t), counting t from the end of warmup (Vaswani et al.)
+                let tt = (t.max(self.warmup + 1) - self.warmup) as f64;
+                self.base * (d / tt).sqrt()
+            }
+            Decay::Linear { t_total } => {
+                self.base * (1.0 - t as f64 / *t_total as f64).max(0.0)
+            }
+            Decay::Staircase { eta0, alpha, tau } => {
+                (self.base * alpha.powf((t / tau) as f64)).max(*eta0)
+            }
+        };
+        warm * decayed
+    }
+}
+
+/// The paper's default schedule per optimizer name (Table 4).
+pub fn paper_default(opt: &str, base: f64, warmup: u64, d_model: usize,
+                     t_total: u64) -> Schedule {
+    match opt {
+        "adam" | "adafactor" => Schedule::rsqrt(base, warmup, d_model),
+        "sgdm" => Schedule::staircase(base, warmup, base * 0.01, 0.88,
+                                      (t_total / 10).max(1)),
+        // Adagrad and both SM3 variants: constant past warmup
+        _ => Schedule::constant(base, warmup),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::constant(1.0, 10);
+        assert!((s.lr(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr(5) - 0.5).abs() < 1e-12);
+        assert!((s.lr(10) - 1.0).abs() < 1e-12);
+        assert!((s.lr(100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_never_decays() {
+        let s = Schedule::constant(0.25, 0);
+        assert_eq!(s.lr(1), 0.25);
+        assert_eq!(s.lr(1_000_000), 0.25);
+    }
+
+    #[test]
+    fn rsqrt_decays_after_warmup() {
+        let s = Schedule::rsqrt(0.001, 100, 512);
+        let a = s.lr(200);
+        let b = s.lr(800);
+        assert!(b < a);
+        // ratio follows sqrt: lr(t) ∝ 1/sqrt(t - warmup)
+        let expect = ((200.0f64 - 100.0) / (800.0 - 100.0)).sqrt();
+        assert!((b / a - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_hits_zero_at_t_total() {
+        let s = Schedule::linear(0.1, 0, 1000);
+        assert!(s.lr(1000) < 1e-12);
+        assert!((s.lr(500) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staircase_steps_down_and_floors() {
+        let s = Schedule::staircase(1.0, 0, 0.05, 0.5, 100);
+        assert_eq!(s.lr(50), 1.0);
+        assert_eq!(s.lr(150), 0.5);
+        assert_eq!(s.lr(250), 0.25);
+        // floor
+        assert_eq!(s.lr(10_000), 0.05);
+    }
+
+    #[test]
+    fn paper_defaults_match_table4() {
+        assert_eq!(paper_default("sm3", 0.1, 10, 512, 1000).decay,
+                   Decay::Constant);
+        assert_eq!(paper_default("adagrad", 0.1, 10, 512, 1000).decay,
+                   Decay::Constant);
+        assert!(matches!(paper_default("adam", 0.1, 10, 512, 1000).decay,
+                         Decay::Rsqrt { .. }));
+        assert!(matches!(paper_default("sgdm", 0.1, 10, 512, 1000).decay,
+                         Decay::Staircase { .. }));
+    }
+}

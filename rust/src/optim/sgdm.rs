@@ -1,0 +1,72 @@
+//! SGD with heavy-ball momentum — the non-adaptive baseline
+//! (paper §5.3, AmoebaNet).
+
+use super::{Optimizer, ParamSpec};
+use crate::tensor::Tensor;
+
+pub struct SgdMomentum {
+    beta1: f32,
+    mom: Vec<Tensor>,
+}
+
+impl SgdMomentum {
+    pub fn new(specs: &[ParamSpec], beta1: f32) -> Self {
+        Self {
+            beta1,
+            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+        }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgdm"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let b1 = self.beta1;
+        for idx in 0..params.len() {
+            let wd = params[idx].data_mut();
+            let gd = grads[idx].data();
+            let mom = self.mom[idx].data_mut();
+            for k in 0..wd.len() {
+                mom[k] = b1 * mom[k] + gd[k];
+                wd[k] -= lr * mom[k];
+            }
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.mom.iter().map(Tensor::len).sum()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        self.mom.iter().cloned().enumerate()
+            .map(|(i, t)| (i, "mom", t)).collect()
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        assert_eq!(state.len(), self.mom.len());
+        self.mom = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates() {
+        let specs = vec![ParamSpec::new("w", &[1])];
+        let mut opt = SgdMomentum::new(&specs, 0.9);
+        let mut params = vec![Tensor::zeros(&[1])];
+        let g = Tensor::from_vec(&[1], vec![1.0]);
+        opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+        let d1 = -params[0].data()[0];
+        let w1 = params[0].data()[0];
+        opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+        let d2 = w1 - params[0].data()[0];
+        assert!((d1 - 0.1).abs() < 1e-6);
+        assert!((d2 - 0.19).abs() < 1e-6); // lr*(0.9*1 + 1)
+    }
+}

@@ -1,0 +1,469 @@
+//! SM3-I and SM3-II with the co-dimension-1 cover (paper §3 / §4).
+//!
+//! Matrix parameters keep one accumulator per row and per column
+//! (Θ(m+n) state); rank-p tensors keep p slice accumulators; vectors use
+//! the singleton cover (== Adagrad). The update math matches the Pallas
+//! kernels in `python/compile/kernels/sm3.py` f32-op-for-f32-op.
+//!
+//! The matrix hot path is single-pass: `nu` is computed per element,
+//! consumed immediately for the weight update, and folded into the *new*
+//! row/col accumulators without materializing the m×n `nu` matrix — this
+//! is the memory story of the paper executed literally.
+
+use super::{safe_rsqrt, Optimizer, ParamSpec};
+use crate::tensor::{axis_index, Tensor};
+
+/// Which algorithm from the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sm3Variant {
+    /// Algorithm SM3-I: `mu += max g²` then `nu = min mu`.
+    I,
+    /// Algorithm SM3-II: `nu = min mu_prev + g²`, `mu = max nu` (tighter).
+    II,
+}
+
+struct LeafState {
+    /// One accumulator vector per tensor axis (rank-p ⇒ p vectors);
+    /// vectors (rank 1) store the full elementwise accumulator.
+    accs: Vec<Vec<f32>>,
+    mom: Tensor,
+}
+
+/// SM3 optimizer state over a parameter list.
+pub struct Sm3 {
+    variant: Sm3Variant,
+    beta1: f32,
+    leaves: Vec<LeafState>,
+    specs: Vec<ParamSpec>,
+}
+
+impl Sm3 {
+    pub fn new(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32) -> Self {
+        let leaves = specs
+            .iter()
+            .map(|s| {
+                let accs = if s.shape.len() <= 1 {
+                    vec![vec![0.0; s.numel()]]
+                } else {
+                    s.shape.iter().map(|&n| vec![0.0; n]).collect()
+                };
+                LeafState { accs, mom: Tensor::zeros(&s.shape) }
+            })
+            .collect();
+        Self { variant, beta1, leaves, specs: specs.to_vec() }
+    }
+
+    /// Read accumulator `axis` of parameter `idx` (trace / tests).
+    pub fn acc(&self, idx: usize, axis: usize) -> &[f32] {
+        &self.leaves[idx].accs[axis]
+    }
+
+    /// The implied per-entry `nu` (min over covering accumulators) for a
+    /// matrix parameter — the quantity Fig. 5 compares against Adagrad.
+    pub fn implied_nu_matrix(&self, idx: usize) -> Tensor {
+        let shape = &self.specs[idx].shape;
+        assert_eq!(shape.len(), 2);
+        let (m, n) = (shape[0], shape[1]);
+        let row = &self.leaves[idx].accs[0];
+        let col = &self.leaves[idx].accs[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        let data = out.data_mut();
+        for i in 0..m {
+            for j in 0..n {
+                data[i * n + j] = row[i].min(col[j]);
+            }
+        }
+        out
+    }
+
+    fn step_vector(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
+        let beta1 = self.beta1;
+        let leaf = &mut self.leaves[idx];
+        let acc = &mut leaf.accs[0];
+        let mom = leaf.mom.data_mut();
+        let wd = w.data_mut();
+        let gd = g.data();
+        for i in 0..wd.len() {
+            let nu = acc[i] + gd[i] * gd[i];
+            let upd = gd[i] * safe_rsqrt(nu);
+            mom[i] = beta1 * mom[i] + (1.0 - beta1) * upd;
+            wd[i] -= lr * mom[i];
+            acc[i] = nu;
+        }
+    }
+
+    fn step_matrix_ii(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
+        let beta1 = self.beta1;
+        let (m, n) = (w.shape()[0], w.shape()[1]);
+        let leaf = &mut self.leaves[idx];
+        let mom = leaf.mom.data_mut();
+        let wd = w.data_mut();
+        let gd = g.data();
+        let (rows, cols) = leaf.accs.split_at_mut(1);
+        let row = &mut rows[0];
+        let col = &mut cols[0];
+        let mut new_col = vec![f32::NEG_INFINITY; n];
+        // Single fused pass: nu is computed per element, consumed for the
+        // update, and folded into the new row/col maxima — the m×n nu
+        // matrix is never materialized (memory stays Θ(m+n)).
+        // Perf-pass note (EXPERIMENTS.md §Perf): a 5-way-zip variant and a
+        // 2-pass scratch-row variant both measured SLOWER on this
+        // toolchain; this indexed loop is the keeper.
+        for i in 0..m {
+            let ri = row[i];
+            let base = i * n;
+            let mut rmax = f32::NEG_INFINITY;
+            for j in 0..n {
+                let k = base + j;
+                let gv = gd[k];
+                let nu = ri.min(col[j]) + gv * gv;
+                let upd = gv * safe_rsqrt(nu);
+                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+                wd[k] -= lr * mom[k];
+                if nu > rmax {
+                    rmax = nu;
+                }
+                if nu > new_col[j] {
+                    new_col[j] = nu;
+                }
+            }
+            row[i] = rmax;
+        }
+        *col = new_col;
+    }
+
+    fn step_matrix_i(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
+        let beta1 = self.beta1;
+        let (m, n) = (w.shape()[0], w.shape()[1]);
+        let leaf = &mut self.leaves[idx];
+        let gd = g.data();
+        // pass 1: mu += max over slice of g²
+        {
+            let (rows, cols) = leaf.accs.split_at_mut(1);
+            let row = &mut rows[0];
+            let col = &mut cols[0];
+            let mut rowmax = vec![0.0f32; m];
+            let mut colmax = vec![0.0f32; n];
+            for i in 0..m {
+                let base = i * n;
+                for j in 0..n {
+                    let g2 = gd[base + j] * gd[base + j];
+                    if g2 > rowmax[i] {
+                        rowmax[i] = g2;
+                    }
+                    if g2 > colmax[j] {
+                        colmax[j] = g2;
+                    }
+                }
+            }
+            for i in 0..m {
+                row[i] += rowmax[i];
+            }
+            for j in 0..n {
+                col[j] += colmax[j];
+            }
+        }
+        // pass 2: nu = min(mu_row, mu_col); update
+        let mom = leaf.mom.data_mut();
+        let wd = w.data_mut();
+        let row = &leaf.accs[0];
+        let col = &leaf.accs[1];
+        for i in 0..m {
+            let base = i * n;
+            for j in 0..n {
+                let k = base + j;
+                let nu = row[i].min(col[j]);
+                let upd = gd[k] * safe_rsqrt(nu);
+                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+                wd[k] -= lr * mom[k];
+            }
+        }
+    }
+
+    /// Generic rank-p path (conv kernels etc.). SM3-II semantics.
+    fn step_tensor_ii(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
+        let beta1 = self.beta1;
+        let shape = w.shape().to_vec();
+        let p = shape.len();
+        let leaf = &mut self.leaves[idx];
+        let mom = leaf.mom.data_mut();
+        let wd = w.data_mut();
+        let gd = g.data();
+        let mut new_accs: Vec<Vec<f32>> =
+            shape.iter().map(|&nn| vec![f32::NEG_INFINITY; nn]).collect();
+        for k in 0..wd.len() {
+            let mut nu = f32::INFINITY;
+            for a in 0..p {
+                let v = leaf.accs[a][axis_index(&shape, k, a)];
+                if v < nu {
+                    nu = v;
+                }
+            }
+            nu += gd[k] * gd[k];
+            let upd = gd[k] * safe_rsqrt(nu);
+            mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+            wd[k] -= lr * mom[k];
+            for a in 0..p {
+                let ai = axis_index(&shape, k, a);
+                if nu > new_accs[a][ai] {
+                    new_accs[a][ai] = nu;
+                }
+            }
+        }
+        leaf.accs = new_accs;
+    }
+
+    fn step_tensor_i(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
+        let beta1 = self.beta1;
+        let shape = w.shape().to_vec();
+        let p = shape.len();
+        let leaf = &mut self.leaves[idx];
+        let gd = g.data();
+        // pass 1: accumulate slice maxima of g²
+        for a in 0..p {
+            let mut mx = vec![0.0f32; shape[a]];
+            for k in 0..gd.len() {
+                let g2 = gd[k] * gd[k];
+                let ai = axis_index(&shape, k, a);
+                if g2 > mx[ai] {
+                    mx[ai] = g2;
+                }
+            }
+            for (acc, m) in leaf.accs[a].iter_mut().zip(mx) {
+                *acc += m;
+            }
+        }
+        // pass 2: update
+        let mom = leaf.mom.data_mut();
+        let wd = w.data_mut();
+        for k in 0..wd.len() {
+            let mut nu = f32::INFINITY;
+            for a in 0..p {
+                let v = leaf.accs[a][axis_index(&shape, k, a)];
+                if v < nu {
+                    nu = v;
+                }
+            }
+            let upd = gd[k] * safe_rsqrt(nu);
+            mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+            wd[k] -= lr * mom[k];
+        }
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            Sm3Variant::I => "sm3i",
+            Sm3Variant::II => "sm3",
+        }
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.leaves.len());
+        for idx in 0..params.len() {
+            let rank = params[idx].rank();
+            // Split borrows: temporarily move the tensor out.
+            let mut w = std::mem::replace(&mut params[idx], Tensor::zeros(&[0]));
+            let g = &grads[idx];
+            match (rank, self.variant) {
+                (0 | 1, _) => self.step_vector(idx, &mut w, g, lr),
+                (2, Sm3Variant::II) => self.step_matrix_ii(idx, &mut w, g, lr),
+                (2, Sm3Variant::I) => self.step_matrix_i(idx, &mut w, g, lr),
+                (_, Sm3Variant::II) => self.step_tensor_ii(idx, &mut w, g, lr),
+                (_, Sm3Variant::I) => self.step_tensor_i(idx, &mut w, g, lr),
+            }
+            params[idx] = w;
+        }
+    }
+
+    fn state_floats(&self) -> usize {
+        self.leaves
+            .iter()
+            .map(|l| l.accs.iter().map(Vec::len).sum::<usize>() + l.mom.len())
+            .sum()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        const AXIS_NAMES: [&str; 4] = ["acc0", "acc1", "acc2", "acc3"];
+        let mut out = Vec::new();
+        for (i, leaf) in self.leaves.iter().enumerate() {
+            for (a, acc) in leaf.accs.iter().enumerate() {
+                out.push((i, AXIS_NAMES[a.min(3)],
+                          Tensor::from_vec(&[acc.len()], acc.clone())));
+            }
+            out.push((i, "mom", leaf.mom.clone()));
+        }
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        let mut it = state.into_iter();
+        for leaf in self.leaves.iter_mut() {
+            for acc in leaf.accs.iter_mut() {
+                let t = it.next().expect("state underrun");
+                assert_eq!(t.len(), acc.len());
+                acc.copy_from_slice(t.data());
+            }
+            let t = it.next().expect("state underrun");
+            assert_eq!(t.shape(), leaf.mom.shape());
+            leaf.mom = t;
+        }
+        assert!(it.next().is_none(), "state overrun");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn run_steps(variant: Sm3Variant, shape: &[usize], steps: usize,
+                 seed: u64) -> (Tensor, Sm3) {
+        let specs = vec![ParamSpec::new("w", shape)];
+        let mut opt = Sm3::new(&specs, variant, 0.9);
+        let mut rng = Rng::new(seed);
+        let mut params = vec![Tensor::randn(shape, 0.5, &mut rng)];
+        for _ in 0..steps {
+            let g = vec![Tensor::randn(shape, 1.0, &mut rng)];
+            opt.step(&mut params, &g, 0.1);
+        }
+        (params.pop().unwrap(), opt)
+    }
+
+    /// Claim 2: nu_t(i) >= sum_s g_s²(i), accumulators monotone.
+    #[test]
+    fn claim2_lower_bound_matrix() {
+        let shape = [6, 9];
+        let specs = vec![ParamSpec::new("w", &shape)];
+        for variant in [Sm3Variant::I, Sm3Variant::II] {
+            let mut opt = Sm3::new(&specs, variant, 0.9);
+            let mut rng = Rng::new(1);
+            let mut params = vec![Tensor::zeros(&shape)];
+            let mut gsq = vec![0.0f64; 54];
+            let mut prev_rows = vec![0.0f32; 6];
+            for _ in 0..15 {
+                let g = Tensor::randn(&shape, 1.0, &mut rng);
+                for (acc, &gv) in gsq.iter_mut().zip(g.data()) {
+                    *acc += (gv as f64) * (gv as f64);
+                }
+                opt.step(&mut params, &[g], 0.1);
+                let nu = opt.implied_nu_matrix(0);
+                for (k, &nuv) in nu.data().iter().enumerate() {
+                    assert!(nuv as f64 + 1e-3 >= gsq[k],
+                            "{variant:?} nu {nuv} < gsq {}", gsq[k]);
+                }
+                for (i, (&r, &p)) in
+                    opt.acc(0, 0).iter().zip(&prev_rows).enumerate()
+                {
+                    assert!(r + 1e-6 >= p, "row {i} not monotone");
+                }
+                prev_rows = opt.acc(0, 0).to_vec();
+            }
+        }
+    }
+
+    /// Prop. 3: SM3-II accumulators are tighter than SM3-I's.
+    #[test]
+    fn prop3_sm3ii_tighter() {
+        let shape = [8, 5];
+        let specs = vec![ParamSpec::new("w", &shape)];
+        let mut o1 = Sm3::new(&specs, Sm3Variant::I, 0.9);
+        let mut o2 = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        let mut rng = Rng::new(2);
+        let mut p1 = vec![Tensor::zeros(&shape)];
+        let mut p2 = vec![Tensor::zeros(&shape)];
+        for _ in 0..20 {
+            let g = Tensor::randn(&shape, 1.0, &mut rng);
+            o1.step(&mut p1, std::slice::from_ref(&g), 0.1);
+            o2.step(&mut p2, std::slice::from_ref(&g), 0.1);
+            let nu1 = o1.implied_nu_matrix(0);
+            let nu2 = o2.implied_nu_matrix(0);
+            for (a, b) in nu2.data().iter().zip(nu1.data()) {
+                assert!(a <= &(b + 1e-5), "nu2 {a} > nu1 {b}");
+            }
+        }
+    }
+
+    /// §3: with singleton cover (vectors) SM3 == Adagrad exactly.
+    #[test]
+    fn vector_equals_adagrad() {
+        let specs = vec![ParamSpec::new("b", &[33])];
+        let mut sm3 = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        let mut ada = super::super::Adagrad::new(&specs, 0.9);
+        let mut rng = Rng::new(3);
+        let w0 = Tensor::randn(&[33], 1.0, &mut rng);
+        let mut p1 = vec![w0.clone()];
+        let mut p2 = vec![w0];
+        for _ in 0..10 {
+            let g = Tensor::randn(&[33], 1.0, &mut rng);
+            sm3.step(&mut p1, std::slice::from_ref(&g), 0.2);
+            ada.step(&mut p2, std::slice::from_ref(&g), 0.2);
+        }
+        assert_eq!(p1[0], p2[0]);
+    }
+
+    /// 1×n and m×1 matrices: cover degenerates to whole-tensor max + diag.
+    #[test]
+    fn degenerate_matrix_shapes() {
+        for shape in [[1usize, 7], [7, 1]] {
+            let (w, _) = run_steps(Sm3Variant::II, &shape, 5, 4);
+            assert!(w.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn zero_gradients_are_noop() {
+        let specs = vec![ParamSpec::new("w", &[4, 4])];
+        let mut opt = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        let mut params = vec![Tensor::full(&[4, 4], 1.5)];
+        let g = vec![Tensor::zeros(&[4, 4])];
+        opt.step(&mut params, &g, 0.5);
+        assert_eq!(params[0], Tensor::full(&[4, 4], 1.5));
+    }
+
+    #[test]
+    fn rank3_matches_matrix_when_trailing_dim_1() {
+        // (m, n, 1) tensor path must agree with the (m, n) matrix fast path.
+        let mut rng = Rng::new(5);
+        let w0 = Tensor::randn(&[5, 6], 0.5, &mut rng);
+        let g0 = Tensor::randn(&[5, 6], 1.0, &mut rng);
+
+        let specs2 = vec![ParamSpec::new("w", &[5, 6])];
+        let mut o2 = Sm3::new(&specs2, Sm3Variant::II, 0.9);
+        let mut p2 = vec![w0.clone()];
+        o2.step(&mut p2, &[g0.clone()], 0.1);
+
+        let specs3 = vec![ParamSpec::new("w", &[5, 6, 1])];
+        let mut o3 = Sm3::new(&specs3, Sm3Variant::II, 0.9);
+        let mut p3 = vec![w0.clone().reshape(&[5, 6, 1])];
+        o3.step(&mut p3, &[g0.reshape(&[5, 6, 1])], 0.1);
+
+        for (a, b) in p2[0].data().iter().zip(p3[0].data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let (_, opt) = run_steps(Sm3Variant::II, &[4, 3], 3, 7);
+        let saved: Vec<Tensor> =
+            opt.state().into_iter().map(|(_, _, t)| t).collect();
+        let specs = vec![ParamSpec::new("w", &[4, 3])];
+        let mut fresh = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        fresh.load_state(saved.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t.clone()).collect();
+        assert_eq!(saved, restored);
+    }
+
+    #[test]
+    fn memory_is_sublinear_for_matrices() {
+        let specs = vec![ParamSpec::new("emb", &[512, 128])];
+        let opt = Sm3::new(&specs, Sm3Variant::II, 0.0);
+        // acc floats only: 512 + 128 (mom is counted in state_floats)
+        let acc_floats: usize = (0..2).map(|a| opt.acc(0, a).len()).sum();
+        assert_eq!(acc_floats, 512 + 128);
+    }
+}

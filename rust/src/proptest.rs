@@ -1,0 +1,150 @@
+//! In-repo property-testing harness.
+//!
+//! The external `proptest` crate is unavailable offline, so this module
+//! provides the subset the test-suite needs: seeded generators, `forall`
+//! runners with case counts, and failure reporting that prints the seed so
+//! a failing case can be replayed deterministically. (No shrinking — cases
+//! are small enough to debug directly; the seed is the repro handle.)
+
+use crate::rng::Rng;
+
+/// Number of random cases per property (override with SM3_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SM3_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` seeded inputs produced by `gen`.
+/// Panics with the offending seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n\
+                 input: {input:?}\n{msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::rng::Rng;
+
+    /// A random shape with `rank` in [1, max_rank] and dims in [1, max_dim].
+    pub fn shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+        let rank = 1 + rng.index(max_rank);
+        (0..rank).map(|_| 1 + rng.index(max_dim)).collect()
+    }
+
+    /// A random matrix shape.
+    pub fn matrix(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
+        (1 + rng.index(max_dim), 1 + rng.index(max_dim))
+    }
+
+    /// Random f32 vector with entries from N(0, scale), occasionally sparse
+    /// or exactly zero — exercising the 0/0=0 path.
+    pub fn grad_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        let sparsity = if rng.bernoulli(0.3) { rng.next_f64() } else { 0.0 };
+        (0..n)
+            .map(|_| {
+                if rng.bernoulli(sparsity) {
+                    0.0
+                } else {
+                    rng.normal_f32(0.0, scale)
+                }
+            })
+            .collect()
+    }
+
+    /// A random cover of [d]: random sets + a repair pass guaranteeing
+    /// every index is covered.
+    pub fn cover(rng: &mut Rng, d: usize, max_sets: usize) -> Vec<Vec<usize>> {
+        let k = 1 + rng.index(max_sets);
+        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(k + 1);
+        for _ in 0..k {
+            let size = 1 + rng.index(d);
+            let mut s: Vec<usize> = (0..d).collect();
+            rng.shuffle(&mut s);
+            s.truncate(size);
+            s.sort_unstable();
+            sets.push(s);
+        }
+        let mut covered = vec![false; d];
+        for s in &sets {
+            for &i in s {
+                covered[i] = true;
+            }
+        }
+        let missing: Vec<usize> =
+            (0..d).filter(|&i| !covered[i]).collect();
+        if !missing.is_empty() {
+            sets.push(missing);
+        }
+        sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 is u64", |rng| rng.next_u64(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn forall_reports_failures() {
+        forall("fails", |rng| rng.next_u64(),
+               |_| Err("always fails".to_string()));
+    }
+
+    #[test]
+    fn generated_covers_are_valid() {
+        forall("covers cover", |rng| {
+            let d = 1 + rng.index(20);
+            (d, gen::cover(rng, d, 6))
+        }, |(d, sets)| {
+            let mut covered = vec![false; *d];
+            for s in sets {
+                if s.is_empty() {
+                    return Err("empty set".into());
+                }
+                for &i in s {
+                    if i >= *d {
+                        return Err(format!("index {i} out of range"));
+                    }
+                    covered[i] = true;
+                }
+            }
+            if covered.iter().all(|&c| c) {
+                Ok(())
+            } else {
+                Err("not a cover".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shapes_in_bounds() {
+        forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {
+            if s.is_empty() || s.len() > 4 || s.iter().any(|&d| d == 0 || d > 9) {
+                Err(format!("bad shape {s:?}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

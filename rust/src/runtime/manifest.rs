@@ -1,0 +1,268 @@
+//! Artifact manifest: the calling convention contract with `aot.py`.
+//!
+//! `manifest.json` describes every AOT artifact's ordered inputs/outputs
+//! (names, shapes, dtypes) plus per-model metadata (parameter inventory,
+//! vocab/seq/batch geometry). The Rust side trusts nothing else about the
+//! HLO files — all literal construction is driven from here.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Element type of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct IoEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        let name = j.get("name").and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("io entry missing name"))?.to_string();
+        let shape = j.get("shape").and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("io entry {name} missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("io entry {name} missing dtype"))?)?;
+        Ok(Self { name, shape, dtype })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    /// "grad" | "eval" | "decode" | "train:<opt>"
+    pub kind: String,
+    pub inputs: Vec<IoEntry>,
+    pub outputs: Vec<IoEntry>,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs whose name starts with `prefix + "/"`.
+    pub fn input_range(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.name.starts_with(prefix)
+                    && e.name[prefix.len()..].starts_with('/'))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|e| e.name == name)
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|e| e.name == name)
+    }
+}
+
+/// Per-model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    /// "lm" | "mt" | "mlm" | "img"
+    pub kind: String,
+    pub batch: usize,
+    pub param_count: usize,
+    /// parameter leaves with `params/` prefix, in artifact input order
+    pub params: Vec<IoEntry>,
+    /// task geometry (absent fields are 0)
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_masked: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+}
+
+impl ModelMeta {
+    /// Parameter specs with the `params/` prefix stripped — feeds the
+    /// optimizer bank and the memory accountant.
+    pub fn param_specs(&self) -> Vec<crate::optim::ParamSpec> {
+        self.params
+            .iter()
+            .map(|e| crate::optim::ParamSpec::new(
+                e.name.strip_prefix("params/").unwrap_or(&e.name),
+                &e.shape))
+            .collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn get_usize(j: &Json, key: &str) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(0)
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, j) in root
+            .get("artifacts")
+            .and_then(Json::as_object)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let inputs = j.get("inputs").and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter().map(IoEntry::parse).collect::<Result<Vec<_>>>()?;
+            let outputs = j.get("outputs").and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter().map(IoEntry::parse).collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.clone(), ArtifactSpec {
+                name: name.clone(),
+                file: j.get("file").and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?.into(),
+                model: j.get("model").and_then(Json::as_str)
+                    .unwrap_or_default().into(),
+                kind: j.get("kind").and_then(Json::as_str)
+                    .unwrap_or_default().into(),
+                inputs,
+                outputs,
+            });
+        }
+        let mut models = BTreeMap::new();
+        for (name, j) in root
+            .get("models")
+            .and_then(Json::as_object)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let params = j.get("params").and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter().map(IoEntry::parse).collect::<Result<Vec<_>>>()?;
+            models.insert(name.clone(), ModelMeta {
+                name: name.clone(),
+                kind: j.get("kind").and_then(Json::as_str)
+                    .unwrap_or_default().into(),
+                batch: get_usize(j, "batch"),
+                param_count: get_usize(j, "param_count"),
+                params,
+                vocab: get_usize(j, "vocab"),
+                seq: get_usize(j, "seq"),
+                d_model: get_usize(j, "d_model"),
+                n_masked: get_usize(j, "n_masked"),
+                height: get_usize(j, "height"),
+                width: get_usize(j, "width"),
+                channels: get_usize(j, "channels"),
+                n_classes: get_usize(j, "n_classes"),
+            });
+        }
+        Ok(Self { artifacts, models })
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "m_grad": {
+          "file": "m_grad.hlo.txt", "model": "m", "kind": "grad",
+          "inputs": [
+            {"name": "params/w", "shape": [4, 2], "dtype": "f32"},
+            {"name": "batch/tokens", "shape": [2, 8], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "grads/w", "shape": [4, 2], "dtype": "f32"}
+          ]
+        }
+      },
+      "models": {
+        "m": {
+          "kind": "lm", "batch": 2, "param_count": 8,
+          "vocab": 64, "seq": 8, "d_model": 4,
+          "params": [{"name": "params/w", "shape": [4, 2], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("m_grad").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.outputs[0].shape.len(), 0);
+        let meta = m.model("m").unwrap();
+        assert_eq!(meta.vocab, 64);
+        assert_eq!(meta.param_specs()[0].name, "w");
+    }
+
+    #[test]
+    fn input_range_by_prefix() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("m_grad").unwrap();
+        assert_eq!(a.input_range("params"), vec![0]);
+        assert_eq!(a.input_range("batch"), vec![1]);
+        assert_eq!(a.input_range("param"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥0.5 serialized protos carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §9 and /opt/xla-example).
+//!
+//! Compiled executables are cached per artifact name; values crossing the
+//! boundary are [`HostValue`]s (f32 tensors or i32 index arrays) built and
+//! validated against the manifest signature.
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::{ArtifactSpec, Dtype, Manifest};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::Tensor;
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32(Tensor::from_vec(&[], vec![v]))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32(_) => Dtype::F32,
+            HostValue::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    /// Extract the single element of a rank-0/1-element f32 value.
+    pub fn scalar(&self) -> Result<f32> {
+        let t = self.as_f32()?;
+        if t.len() != 1 {
+            bail!("expected scalar, got shape {:?}", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            HostValue::I32 { data, .. } => {
+                xla::Literal::vec1(data.as_slice()).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, entry: &manifest::IoEntry)
+                    -> Result<Self> {
+        match entry.dtype {
+            Dtype::F32 => {
+                let data = lit.to_vec::<f32>()
+                    .with_context(|| format!("reading output {}", entry.name))?;
+                if data.len() != entry.numel() {
+                    bail!("output {}: got {} elems, manifest says {:?}",
+                          entry.name, data.len(), entry.shape);
+                }
+                Ok(HostValue::F32(Tensor::from_vec(&entry.shape, data)))
+            }
+            Dtype::I32 => {
+                let data = lit.to_vec::<i32>()
+                    .with_context(|| format!("reading output {}", entry.name))?;
+                if data.len() != entry.numel() {
+                    bail!("output {}: wrong element count", entry.name);
+                }
+                Ok(HostValue::I32 { shape: entry.shape.clone(), data })
+            }
+        }
+    }
+}
+
+/// A loaded, compiled artifact.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the underlying PJRT C API is thread-safe (the CPU client
+// serializes compilation and execution internally); the `xla` wrapper types
+// are only non-Send/Sync because they hold raw pointers. All mutable
+// Rust-side state (the executable cache) is behind a Mutex.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
+
+impl Artifact {
+    /// Execute with host values; validates arity/shape/dtype against the
+    /// manifest and returns outputs in manifest order.
+    pub fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("{}: expected {} inputs, got {}",
+                  self.spec.name, self.spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, e) in inputs.iter().zip(&self.spec.inputs) {
+            if v.shape() != e.shape.as_slice() || v.dtype() != e.dtype {
+                bail!("{}: input {} expects {:?} {:?}, got {:?} {:?}",
+                      self.spec.name, e.name, e.dtype, e.shape,
+                      v.dtype(), v.shape());
+            }
+            literals.push(v.to_literal()?);
+        }
+        let bufs = self.exe.execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: expected {} outputs, got {}",
+                  self.spec.name, self.spec.outputs.len(), parts.len());
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, e)| HostValue::from_literal(lit, e))
+            .collect()
+    }
+
+    /// Outputs whose names mirror `prefix/…` inputs (loop-carried state).
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+}
+
+/// The runtime: PJRT client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+// SAFETY: see the note on [`Artifact`].
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let artifact = Arc::new(Artifact { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Names of all artifacts for a given model.
+    pub fn artifacts_for_model(&self, model: &str) -> Vec<String> {
+        self.manifest
+            .artifacts
+            .values()
+            .filter(|a| a.model == model)
+            .map(|a| a.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_shapes() {
+        let v = HostValue::scalar_f32(1.5);
+        assert_eq!(v.shape(), &[] as &[usize]);
+        assert_eq!(v.scalar().unwrap(), 1.5);
+        let t = HostValue::I32 { shape: vec![2, 2], data: vec![1, 2, 3, 4] };
+        assert_eq!(t.dtype(), Dtype::I32);
+        assert!(t.scalar().is_err());
+    }
+
+    // Integration tests that actually execute artifacts live in
+    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+}

@@ -1,0 +1,223 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The optimizer bank, trace capture, and checkpointing operate on host
+//! tensors; this module provides exactly the operations they need (shape
+//! bookkeeping, elementwise ops, axis reductions, the broadcast-min over
+//! co-dim-1 accumulators) without an external ndarray dependency (the
+//! registry is offline). Row-major (C) layout throughout, matching XLA's
+//! default literal layout so buffers round-trip with zero copies.
+
+use std::fmt;
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from parts; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// N(0, std) random tensor.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::rng::Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, 0.0, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D accessor (debug/test use).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise binary op into a new tensor.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Sum of squares (for grad-norm diagnostics).
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Maximum over all axes except `axis` — the co-dim-1 slice reduction.
+    /// Returns a vector of length `shape[axis]`.
+    pub fn max_over_codim1(&self, axis: usize, f: impl Fn(f32, f32) -> f32,
+                           init: f32) -> Vec<f32> {
+        assert!(axis < self.rank());
+        let n = self.shape[axis];
+        let mut out = vec![init; n];
+        // stride of `axis` and size of the inner block
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let outer: usize = self.shape[..axis].iter().product();
+        for o in 0..outer {
+            for a in 0..n {
+                let base = (o * n + a) * inner;
+                let acc = &mut out[a];
+                for v in &self.data[base..base + inner] {
+                    *acc = f(*acc, *v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Convenience: max |g| entry (diagnostics).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+/// Index iterator helper: flat index -> index along `axis` for a given shape.
+/// Used by the generic-cover code path.
+pub fn axis_index(shape: &[usize], flat: usize, axis: usize) -> usize {
+    let inner: usize = shape[axis + 1..].iter().product();
+    (flat / inner) % shape[axis]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn row_major_at2() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn max_over_codim1_matrix() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 5., 2., 7., 0., 3.]);
+        let rows = t.max_over_codim1(0, f32::max, f32::NEG_INFINITY);
+        assert_eq!(rows, vec![5.0, 7.0]);
+        let cols = t.max_over_codim1(1, f32::max, f32::NEG_INFINITY);
+        assert_eq!(cols, vec![7.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn max_over_codim1_rank3() {
+        // shape (2,2,2): values 0..8
+        let t = Tensor::from_vec(&[2, 2, 2],
+                                 (0..8).map(|v| v as f32).collect());
+        let a0 = t.max_over_codim1(0, f32::max, f32::NEG_INFINITY);
+        assert_eq!(a0, vec![3.0, 7.0]);
+        let a1 = t.max_over_codim1(1, f32::max, f32::NEG_INFINITY);
+        assert_eq!(a1, vec![5.0, 7.0]);
+        let a2 = t.max_over_codim1(2, f32::max, f32::NEG_INFINITY);
+        assert_eq!(a2, vec![6.0, 7.0]);
+    }
+
+    #[test]
+    fn axis_index_math() {
+        let shape = [2, 3, 4];
+        // flat 17 -> (1, 1, 1)
+        assert_eq!(axis_index(&shape, 17, 0), 1);
+        assert_eq!(axis_index(&shape, 17, 1), 1);
+        assert_eq!(axis_index(&shape, 17, 2), 1);
+    }
+
+    #[test]
+    fn zip_elementwise() {
+        let a = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![4., 5., 6.]);
+        assert_eq!(a.zip(&b, |x, y| x + y).data(), &[5., 7., 9.]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = crate::rng::Rng::new(1);
+        let mut r2 = crate::rng::Rng::new(1);
+        let a = Tensor::randn(&[4, 4], 1.0, &mut r1);
+        let b = Tensor::randn(&[4, 4], 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

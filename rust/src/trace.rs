@@ -1,0 +1,127 @@
+//! Optimizer-statistics tracing — the machinery behind Fig. 1 (activation
+//! patterns), Fig. 5 (accumulator tightness) and Fig. 7 (conv patterns).
+//!
+//! Runs replicate the paper's probes: train with Adagrad and capture its
+//! elementwise γ_t statistics per weight matrix (heatmaps), and run
+//! SM3-I/SM3-II on the *same* gradient sequence to compare their implied
+//! ν against γ (top-k tightness curves).
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::io::Write;
+
+/// Dump a matrix as CSV (one row per line) — heatmap source data.
+pub fn write_heatmap_csv(path: &str, t: &Tensor) -> Result<()> {
+    assert_eq!(t.rank(), 2, "heatmaps are 2-D");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    for i in 0..m {
+        let row: Vec<String> = (0..n)
+            .map(|j| format!("{:.6e}", t.at2(i, j)))
+            .collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Top-k values of a tensor, sorted descending — Fig. 5's x-axis is the
+/// rank of the k largest Adagrad accumulators.
+pub fn top_k(t: &Tensor, k: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = t.data().to_vec();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    v.truncate(k);
+    v
+}
+
+/// Indices of the top-k entries (descending) — used to read the SM3 ν at
+/// the same coordinates as Adagrad's largest γ.
+pub fn top_k_indices(t: &Tensor, k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..t.len()).collect();
+    let d = t.data();
+    idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Row/column structure score of a statistics matrix: the fraction of
+/// total variance explained by the best rank-1 row/col decomposition —
+/// high values are exactly the "activation patterns" of Fig. 1.
+/// Computed as 1 − ||G − r·cᵀ||² / ||G||² after one power-iteration sweep.
+pub fn activation_pattern_score(t: &Tensor) -> f64 {
+    assert_eq!(t.rank(), 2);
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    // power iteration for the dominant singular pair
+    let mut v = vec![1.0f64; n];
+    let mut u = vec![0.0f64; m];
+    for _ in 0..20 {
+        for i in 0..m {
+            u[i] = (0..n).map(|j| t.at2(i, j) as f64 * v[j]).sum();
+        }
+        let nu = u.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+        u.iter_mut().for_each(|x| *x /= nu);
+        for j in 0..n {
+            v[j] = (0..m).map(|i| t.at2(i, j) as f64 * u[i]).sum();
+        }
+        let nv = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-30);
+        v.iter_mut().for_each(|x| *x /= nv);
+    }
+    let sigma: f64 = (0..m)
+        .map(|i| u[i] * (0..n).map(|j| t.at2(i, j) as f64 * v[j]).sum::<f64>())
+        .sum();
+    let total: f64 = t.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    (sigma * sigma / total).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn top_k_sorted_desc() {
+        let t = Tensor::from_vec(&[5], vec![3.0, 1.0, 4.0, 1.5, 9.0]);
+        assert_eq!(top_k(&t, 3), vec![9.0, 4.0, 3.0]);
+        assert_eq!(top_k_indices(&t, 2), vec![4, 2]);
+    }
+
+    #[test]
+    fn rank1_matrix_scores_high() {
+        // γ = r·cᵀ exactly (a perfect activation pattern)
+        let r = [1.0f32, 2.0, 3.0];
+        let c = [0.5f32, 1.0, 1.5, 2.0];
+        let mut data = Vec::new();
+        for &ri in &r {
+            for &cj in &c {
+                data.push(ri * cj);
+            }
+        }
+        let t = Tensor::from_vec(&[3, 4], data);
+        assert!(activation_pattern_score(&t) > 0.999);
+    }
+
+    #[test]
+    fn random_matrix_scores_lower() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[24, 24], 1.0, &mut rng);
+        let s = activation_pattern_score(&t);
+        assert!(s < 0.6, "score {s}");
+    }
+
+    #[test]
+    fn heatmap_csv_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let dir = std::env::temp_dir().join("sm3_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("h.csv");
+        write_heatmap_csv(p.to_str().unwrap(), &t).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().contains(','));
+    }
+}

@@ -1,0 +1,140 @@
+//! Cross-module integration: the experiment workloads at miniature scale.
+//!
+//! These exercise every model kind (mt/mlm/img) through the full stack —
+//! data generator → grad artifact → optimizer → eval/BLEU — with a handful
+//! of steps each, asserting learnability signals rather than final quality
+//! (the benches run the full-length versions).
+
+use sm3::config::{ExecMode, TrainConfig};
+use sm3::coordinator::Trainer;
+use sm3::runtime::Runtime;
+use std::sync::{Arc, Mutex, OnceLock};
+
+fn runtime() -> Option<Arc<Runtime>> {
+    static RT: OnceLock<Option<Arc<Runtime>>> = OnceLock::new();
+    RT.get_or_init(|| {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Arc::new(Runtime::new("artifacts").unwrap()))
+        } else {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    })
+    .clone()
+}
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    // poison-tolerant: one failing test must not cascade into the rest
+    match L.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn cfg(model: &str, opt: &str, steps: u64, lr: f64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optim.name = opt.into();
+    c.optim.lr = lr;
+    c.optim.warmup_steps = steps / 5;
+    c.steps = steps;
+    c.eval_every = steps;
+    c.exec = ExecMode::Split;
+    c
+}
+
+#[test]
+fn translation_learns_and_bleu_is_scored() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("mt_small") {
+        eprintln!("SKIP: mt_small not built");
+        return;
+    }
+    let mut t = Trainer::with_runtime(cfg("mt_small", "sm3", 30, 0.2), rt).unwrap();
+    let b0 = t.bleu().unwrap();
+    let hist = t.train().unwrap();
+    let first = hist.steps.first().unwrap().loss;
+    let last = hist.steps.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+    let b1 = t.bleu().unwrap();
+    // BLEU is in range and decoding works both before and after training
+    assert!((0.0..=100.0).contains(&b0.bleu));
+    assert!((0.0..=100.0).contains(&b1.bleu));
+    // the eval record for mt carries BLEU as the metric
+    let e = hist.evals.last().unwrap();
+    assert!(e.metric.is_some());
+}
+
+#[test]
+fn masked_lm_accuracy_improves() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("mlm_small") {
+        eprintln!("SKIP: mlm_small not built");
+        return;
+    }
+    let mut t =
+        Trainer::with_runtime(cfg("mlm_small", "sm3", 60, 0.3), rt).unwrap();
+    let e0 = t.evaluate().unwrap();
+    let _ = t.train().unwrap();
+    let e1 = t.evaluate().unwrap();
+    let (a0, a1) = (e0.metric.unwrap(), e1.metric.unwrap());
+    assert!(a1 > a0, "masked-LM accuracy {a0} -> {a1}");
+    assert!(e1.loss < e0.loss);
+}
+
+#[test]
+fn image_classifier_beats_chance() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("img_small") {
+        eprintln!("SKIP: img_small not built");
+        return;
+    }
+    let mut t =
+        Trainer::with_runtime(cfg("img_small", "sm3", 80, 0.1), rt).unwrap();
+    let _ = t.train().unwrap();
+    let e = t.evaluate().unwrap();
+    let top1 = e.metric.unwrap();
+    let top5 = e.metric2.unwrap();
+    // 10 classes: chance is 0.10 top-1 / 0.50 top-5
+    assert!(top1 > 0.2, "top1 {top1}");
+    assert!(top5 >= top1);
+}
+
+#[test]
+fn sm3_trace_probes_capture_accumulators() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    let mut c = cfg("lm_tiny", "sm3", 10, 0.3);
+    c.eval_every = 10;
+    let mut t = Trainer::with_runtime(c, rt).unwrap();
+    let _ = t.train().unwrap();
+    // the split-path optimizer is introspectable: accumulators exist and
+    // are non-trivial after training
+    let opt = t.optimizer().unwrap();
+    let state = opt.state();
+    assert!(state.iter().any(|(_, slot, t)| *slot == "acc0"
+        && t.data().iter().any(|&v| v > 0.0)));
+}
+
+#[test]
+fn lm_small_one_step_all_fused_artifacts() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("lm_small") {
+        eprintln!("SKIP: lm_small not built");
+        return;
+    }
+    // every fused optimizer artifact must execute and produce finite loss
+    for opt in ["sm3", "sm3i", "adagrad", "adam", "adafactor", "sgdm"] {
+        let mut c = cfg("lm_small", opt, 1, 0.1);
+        c.exec = ExecMode::Fused;
+        c.eval_every = 1;
+        let mut t = Trainer::with_runtime(c, rt.clone()).unwrap();
+        let hist = t.train().unwrap();
+        assert!(hist.steps[0].loss.is_finite(), "{opt}");
+    }
+}
