@@ -1,0 +1,30 @@
+# Top-level targets. `make tier1` mirrors the repository's tier-1 gate
+# (and the build-test job in .github/workflows/ci.yml) exactly.
+
+.PHONY: tier1 build test lint fmt clippy bench-optim artifacts
+
+tier1:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release --workspace
+
+test:
+	cargo test -q --workspace
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+lint: fmt clippy
+
+# Serial-vs-parallel optimizer-step numbers (EXPERIMENTS.md §Perf).
+bench-optim:
+	cargo bench --bench bench_optim
+
+# AOT-lower the JAX models to HLO artifacts (needs the Python toolchain;
+# the Rust integration tests skip themselves when artifacts/ is absent).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -3,14 +3,19 @@
 //! comparison the paper reports ("a step of SM3 was faster than Adam's
 //! by 3%" — fewer state reads/writes).
 //!
-//! Also benchmarks the ring all-reduce and the abstract-cover SM3 (the
-//! O(Σ|S_r|) path) against the co-dim-1 fast path.
+//! Also benchmarks the ring all-reduce, the abstract-cover SM3 (the
+//! O(Σ|S_r|) path) against the co-dim-1 fast path, and the `ParallelStep`
+//! sharded update engine against serial stepping (serial-vs-parallel
+//! numbers for EXPERIMENTS.md §Perf; bitwise equality is asserted before
+//! timing).
 //!
-//! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv)
+//! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv and
+//! out/perf_optim_parallel.csv)
 
-use sm3::bench_util::{bench, CsvWriter};
+use sm3::bench_util::{bench, speedup, CsvWriter};
 use sm3::collectives::ring_allreduce;
-use sm3::optim::{self, cover::{Cover, CoverSm3II}, Optimizer, ParamSpec};
+use sm3::optim::{self, cover::{Cover, CoverSm3II}, Optimizer, ParamSpec,
+                 ParallelStep};
 use sm3::rng::Rng;
 use sm3::tensor::Tensor;
 use std::time::Duration;
@@ -28,6 +33,53 @@ fn block_specs() -> Vec<ParamSpec> {
         ParamSpec::new("b1", &[1024]),
         ParamSpec::new("b2", &[256]),
     ]
+}
+
+/// A transformer-scale parameter set (~17M params, 42 leaves) — big enough
+/// that the host-side update loop dominates and sharding pays off.
+fn transformer_specs(layers: usize) -> Vec<ParamSpec> {
+    let (v, d, ff) = (8192usize, 512usize, 2048usize);
+    let mut specs = vec![
+        ParamSpec::new("embed", &[v, d]),
+        ParamSpec::new("pos", &[1024, d]),
+    ];
+    for l in 0..layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            specs.push(ParamSpec::new(format!("l{l}/{w}"), &[d, d]));
+        }
+        specs.push(ParamSpec::new(format!("l{l}/ffn_w1"), &[d, ff]));
+        specs.push(ParamSpec::new(format!("l{l}/ffn_b1"), &[ff]));
+        specs.push(ParamSpec::new(format!("l{l}/ffn_w2"), &[ff, d]));
+        specs.push(ParamSpec::new(format!("l{l}/ffn_b2"), &[d]));
+        specs.push(ParamSpec::new(format!("l{l}/ln_scale"), &[d]));
+        specs.push(ParamSpec::new(format!("l{l}/ln_bias"), &[d]));
+    }
+    specs
+}
+
+/// Assert the parallel engine's output is bitwise identical to serial over
+/// a few steps (pre-flight gate for the timing runs below).
+fn assert_bitwise_equal(name: &str, specs: &[ParamSpec], grads: &[Tensor],
+                        threads: usize) -> anyhow::Result<()> {
+    let mut serial = optim::build(name, specs, 0.9, 0.98)?;
+    let mut par = ParallelStep::from_registry(name, specs, 0.9, 0.98,
+                                              threads)?;
+    let mut pa: Vec<Tensor> =
+        specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let mut pb = pa.clone();
+    for step in 0..3 {
+        serial.step(&mut pa, grads, 0.01);
+        par.step(&mut pb, grads, 0.01);
+        for (leaf, (a, b)) in pa.iter().zip(&pb).enumerate() {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                anyhow::ensure!(
+                    x.to_bits() == y.to_bits(),
+                    "{name} x{threads} diverged at step {step} leaf {leaf}: \
+                     {x} vs {y}");
+            }
+        }
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -84,6 +136,63 @@ fn main() -> anyhow::Result<()> {
     println!("  {s2}");
     println!("  speedup of the specialized path: {:.1}x",
              s2.median.as_secs_f64() / s1.median.as_secs_f64());
+
+    // ---- ParallelStep: serial vs sharded optimizer stepping --------------
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let big_specs = transformer_specs(4);
+    let dbig: usize = big_specs.iter().map(ParamSpec::numel).sum();
+    println!("\n=== ParallelStep — sharded update, transformer-scale set \
+              ({:.1}M params, {} leaves, {} host cores) ===",
+             dbig as f64 / 1e6, big_specs.len(), cores);
+    let grads_big: Vec<Tensor> = big_specs
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect();
+    let mut pcsv = CsvWriter::create(
+        "out/perf_optim_parallel.csv",
+        "optimizer,threads,median_ns,elements_per_sec,speedup_vs_serial")?;
+    let mut sm3_x4_speedup = None;
+    for name in ["sm3", "adam"] {
+        for threads in [2usize, 4, 8] {
+            assert_bitwise_equal(name, &big_specs, &grads_big, threads)?;
+        }
+        let mut serial = optim::build(name, &big_specs, 0.9, 0.98)?;
+        let mut params: Vec<Tensor> =
+            big_specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        let base = bench(&format!("{name} serial"), budget, 10, || {
+            serial.step(&mut params, &grads_big, 0.01);
+        });
+        println!("  {base}   {:.1}M elem/s", base.throughput(dbig) / 1e6);
+        pcsv.row(&[name.to_string(), "1".into(),
+                   format!("{:.0}", base.per_iter_ns()),
+                   format!("{:.0}", base.throughput(dbig)), "1.00".into()])?;
+        for threads in [2usize, 4, 8] {
+            let mut par = ParallelStep::from_registry(
+                name, &big_specs, 0.9, 0.98, threads)?;
+            let mut params: Vec<Tensor> =
+                big_specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let stats = bench(&format!("{name} x{threads} threads"), budget,
+                              10, || {
+                par.step(&mut params, &grads_big, 0.01);
+            });
+            let sp = speedup(&base, &stats);
+            println!("  {stats}   {:.1}M elem/s  ({sp:.2}x vs serial)",
+                     stats.throughput(dbig) / 1e6);
+            pcsv.row(&[name.to_string(), threads.to_string(),
+                       format!("{:.0}", stats.per_iter_ns()),
+                       format!("{:.0}", stats.throughput(dbig)),
+                       format!("{sp:.3}")])?;
+            if name == "sm3" && threads == 4 {
+                sm3_x4_speedup = Some(sp);
+            }
+        }
+    }
+    if let Some(sp) = sm3_x4_speedup {
+        println!("\n  sm3 step_threads=4 speedup: {sp:.2}x \
+                  (acceptance target >= 1.5x; bitwise-identical output)");
+    }
 
     // ---- ring all-reduce -------------------------------------------------
     println!("\n=== ring all-reduce ({:.2}M floats) ===", d as f64 / 1e6);

@@ -89,6 +89,11 @@ pub fn bench(name: &str, budget: Duration, min_iters: usize,
     }
 }
 
+/// Median-over-median speedup of `fast` relative to `base` (>1 ⇒ faster).
+pub fn speedup(base: &Stats, fast: &Stats) -> f64 {
+    base.median.as_secs_f64() / fast.median.as_secs_f64()
+}
+
 /// Simple CSV writer used by bench binaries to persist series for
 /// EXPERIMENTS.md (and external plotting).
 pub struct CsvWriter {
@@ -143,5 +148,19 @@ mod tests {
             mean: Duration::from_secs(2),
         };
         assert!((s.throughput(100) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let at = |ms: u64| Stats {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_millis(ms),
+            p10: Duration::from_millis(ms),
+            p90: Duration::from_millis(ms),
+            mean: Duration::from_millis(ms),
+        };
+        assert!((speedup(&at(400), &at(100)) - 4.0).abs() < 1e-9);
+        assert!(speedup(&at(100), &at(400)) < 1.0);
     }
 }

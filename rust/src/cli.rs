@@ -40,6 +40,14 @@ impl Args {
             },
         }
     }
+
+    /// Parse a count-like option, rejecting zero (thread/worker knobs).
+    pub fn opt_count(&self, name: &str) -> Result<Option<usize>> {
+        match self.opt_parse::<usize>(name)? {
+            Some(0) => bail!("--{name} must be >= 1"),
+            other => Ok(other),
+        }
+    }
 }
 
 /// Option/flag declaration for usage text + validation.
@@ -170,6 +178,15 @@ mod tests {
     #[test]
     fn missing_value_is_an_error() {
         assert!(cmd().parse(&argv(&["--config"])).is_err());
+    }
+
+    #[test]
+    fn opt_count_rejects_zero() {
+        let a = cmd().parse(&argv(&["--steps", "0"])).unwrap();
+        assert!(a.opt_count("steps").is_err());
+        let a = cmd().parse(&argv(&["--steps", "4"])).unwrap();
+        assert_eq!(a.opt_count("steps").unwrap(), Some(4));
+        assert_eq!(a.opt_count("config").unwrap(), None);
     }
 
     #[test]

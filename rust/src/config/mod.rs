@@ -72,6 +72,11 @@ pub struct TrainConfig {
     pub grad_accum: u64,
     /// data-parallel worker count (simulated cores)
     pub workers: usize,
+    /// host threads sharding the optimizer update (split path); 1 = serial.
+    /// Training results (parameter values) are bitwise identical at any
+    /// value; optimizer-state *checkpoint layout* differs from serial for
+    /// optimizers with global slots (Adam's `t`) — see `optim::parallel`.
+    pub step_threads: usize,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -90,6 +95,7 @@ impl Default for TrainConfig {
             eval_every: 20,
             grad_accum: 1,
             workers: 1,
+            step_threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -138,6 +144,8 @@ impl TrainConfig {
             eval_every: get_u64(&train_tbl, "eval_every", d.eval_every),
             grad_accum: get_u64(&train_tbl, "grad_accum", d.grad_accum),
             workers: get_u64(&train_tbl, "workers", d.workers as u64) as usize,
+            step_threads: get_u64(&train_tbl, "step_threads",
+                                  d.step_threads as u64) as usize,
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -163,6 +171,13 @@ impl TrainConfig {
         }
         if self.grad_accum == 0 || self.workers == 0 {
             bail!("grad_accum and workers must be > 0");
+        }
+        if self.step_threads == 0 {
+            bail!("step_threads must be > 0 (1 = serial)");
+        }
+        if self.step_threads > 1 && self.exec == ExecMode::Fused {
+            bail!("step_threads applies to the split path only (the fused \
+                   artifact already contains the optimizer)");
         }
         if !(0.0..1.0).contains(&self.optim.beta1) {
             bail!("beta1 out of range");
@@ -214,6 +229,19 @@ warmup_steps = 40
         assert_eq!(cfg.optim.name, "adafactor");
         assert!((cfg.optim.lr - 0.00045).abs() < 1e-12);
         assert_eq!(cfg.optim.schedule, "rsqrt");
+    }
+
+    #[test]
+    fn step_threads_parses_defaults_and_validates() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.step_threads, 1);
+        let cfg =
+            TrainConfig::from_toml("[train]\nstep_threads = 4\n").unwrap();
+        assert_eq!(cfg.step_threads, 4);
+        assert!(TrainConfig::from_toml("[train]\nstep_threads = 0\n").is_err());
+        // sharded stepping is a split-path feature; fused must reject it
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\nstep_threads = 4\n").is_err());
     }
 
     #[test]

@@ -11,7 +11,6 @@ use crate::optim::{self, schedule::Schedule, Optimizer};
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
 use crate::tensor::Tensor;
-use crate::vocab;
 
 /// One training-step record (the loss-curve CSV row).
 #[derive(Debug, Clone)]
@@ -112,9 +111,17 @@ impl Trainer {
                     .load(&format!("{}_grad", cfg.model))
                     .context("loading grad artifact")?;
                 let specs = meta.param_specs();
-                let opt = optim::build(&cfg.optim.name, &specs,
-                                       cfg.optim.beta1 as f32,
-                                       cfg.optim.beta2 as f32)?;
+                let (beta1, beta2) =
+                    (cfg.optim.beta1 as f32, cfg.optim.beta2 as f32);
+                // step_threads > 1 shards the update across host threads;
+                // results stay bitwise identical (see optim::parallel).
+                let opt: Box<dyn Optimizer> = if cfg.step_threads > 1 {
+                    Box::new(optim::ParallelStep::from_registry(
+                        &cfg.optim.name, &specs, beta1, beta2,
+                        cfg.step_threads)?)
+                } else {
+                    optim::build(&cfg.optim.name, &specs, beta1, beta2)?
+                };
                 Engine::Split { grad_art, params, opt }
             }
             ExecMode::Fused => {

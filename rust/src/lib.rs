@@ -15,9 +15,13 @@
 //!   memory accountant that reproduces the paper's Tables 1–2, metrics
 //!   (BLEU, perplexity, accuracy), checkpointing, and the PJRT runtime
 //!   that executes the AOT artifacts. Python never runs at training time.
+//!   On the split path the per-leaf optimizer update shards across host
+//!   threads ([`optim::parallel`]) with bitwise-identical results.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
-//! bench target) and `EXPERIMENTS.md` for measured results.
+//! bench target) and `EXPERIMENTS.md` for measured results. This offline
+//! build stubs the PJRT bindings (DESIGN.md §9): everything except HLO
+//! artifact *execution* builds, runs, and is tested without them.
 
 pub mod bench_util;
 pub mod checkpoint;

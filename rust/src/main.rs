@@ -29,6 +29,7 @@ fn commands() -> Vec<Command> {
             .option("lr", "base learning-rate override")
             .option("exec", "execution path: split | fused")
             .option("workers", "data-parallel worker count")
+            .option("step-threads", "host threads for the optimizer update (1 = serial; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
@@ -99,6 +100,9 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(w) = args.opt_parse::<usize>("workers")? {
         cfg.workers = w;
     }
+    if let Some(t) = args.opt_count("step-threads")? {
+        cfg.step_threads = t;
+    }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;
     }
@@ -117,9 +121,9 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
     let quiet = args.has_flag("quiet");
     println!(
         "sm3-train: model={} optimizer={} exec={:?} steps={} workers={} \
-         grad_accum={}",
+         grad_accum={} step_threads={}",
         cfg.model, cfg.optim.name, cfg.exec, cfg.steps, cfg.workers,
-        cfg.grad_accum
+        cfg.grad_accum, cfg.step_threads
     );
     let mut trainer = Trainer::new(cfg.clone())?;
     println!("  platform: {}", trainer.runtime().platform());

@@ -125,6 +125,12 @@ impl Optimizer for Adafactor {
                 }
             }
         }
+        // Release the scratch between steps: the resize above zero-fills
+        // either way, so retained capacity buys nothing, and ParallelStep
+        // holds one Adafactor per leaf — kept buffers would sum to Θ(d)
+        // resident scratch in a crate whose headline metric is optimizer
+        // memory.
+        self.scratch = Vec::new();
     }
 
     fn state_floats(&self) -> usize {

@@ -13,6 +13,7 @@ mod adafactor;
 mod adagrad;
 mod adam;
 pub mod cover;
+pub mod parallel;
 pub mod schedule;
 mod sgdm;
 mod sm3;
@@ -20,14 +21,21 @@ mod sm3;
 pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adam::Adam;
+pub use parallel::ParallelStep;
 pub use sgdm::SgdMomentum;
 pub use sm3::{Sm3, Sm3Variant};
 
 use crate::tensor::Tensor;
 
 /// `1/sqrt(nu)` with the paper's `0/0 = 0` convention (no epsilon), f32.
+///
+/// A NaN accumulator fails `nu > 0.0` and would silently map the update to
+/// 0.0 — masking NaN *gradients* instead of surfacing them; debug builds
+/// assert so the first poisoned step panics at its source.
 #[inline(always)]
 pub(crate) fn safe_rsqrt(nu: f32) -> f32 {
+    debug_assert!(!nu.is_nan(),
+                  "NaN second-moment accumulator (NaN gradient?)");
     if nu > 0.0 {
         1.0 / nu.sqrt()
     } else {
@@ -159,5 +167,27 @@ mod tests {
     #[test]
     fn unknown_name_errors() {
         assert!(build("nope", &quad_specs(), 0.9, 0.98).is_err());
+    }
+
+    /// Regression (debug builds): a NaN gradient must panic at the first
+    /// poisoned accumulator instead of being masked into a 0.0 update.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN second-moment accumulator")]
+    fn nan_gradients_are_surfaced_not_masked() {
+        let specs = vec![ParamSpec::new("w", &[4])];
+        let mut opt = build("sm3", &specs, 0.9, 0.98).unwrap();
+        let mut params = vec![Tensor::zeros(&[4])];
+        let g = vec![Tensor::full(&[4], f32::NAN)];
+        opt.step(&mut params, &g, 0.1);
+    }
+
+    /// Release builds keep the branchless 0/0 = 0 path; NaN maps to 0.0
+    /// there (documented), and non-NaN inputs behave identically in both.
+    #[test]
+    fn safe_rsqrt_convention() {
+        assert_eq!(safe_rsqrt(0.0), 0.0);
+        assert_eq!(safe_rsqrt(-1.0), 0.0);
+        assert_eq!(safe_rsqrt(4.0), 0.5);
     }
 }

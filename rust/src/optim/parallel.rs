@@ -1,0 +1,332 @@
+//! `ParallelStep` — deterministic sharded execution of `Optimizer::step`.
+//!
+//! SM3/Adafactor buy memory headroom so larger models and batches can be
+//! stepped; that makes the host-side update loop the next wall-clock
+//! bottleneck on the split execution path (grad artifact → Rust optimizer).
+//! Every optimizer in the bank updates each parameter leaf independently —
+//! leaf `i`'s update reads only `params[i]`, `grads[i]`, and leaf `i`'s
+//! state — so the leaf loop parallelizes with *no* change to the arithmetic:
+//! results are bitwise identical to serial execution regardless of thread
+//! count or scheduling (asserted by the property test in `crate::proptest`
+//! and measured by `benches/bench_optim.rs`).
+//!
+//! Design: one inner optimizer instance per leaf, built from the same
+//! registry entry (so per-step *global* scalars like Adam's bias-correction
+//! step count advance identically in every shard), and a static shard plan
+//! computed once by greedy bin-packing of leaves over `threads` bins by
+//! [`ParamSpec::numel`]. `step` hands each bin's disjoint
+//! `(param, grad, leaf state)` triples to a `std::thread::scope` worker.
+//!
+//! Checkpoint note: [`Optimizer::state`] emits slots leaf-by-leaf. For
+//! every optimizer except Adam this is byte-compatible with the serial
+//! layout; Adam's single global `t` slot becomes one `t` slot per leaf.
+//! Round-trips within one `step_threads` setting are exact; restoring
+//! across the knob is NOT supported for such optimizers — this engine's
+//! `load_state` pre-counts and fails fast on a layout mismatch, and a
+//! future PR can add layout translation if cross-knob restore is needed.
+
+use super::{Optimizer, ParamSpec};
+use crate::tensor::Tensor;
+
+/// Greedy bin-packing of leaf indices over at most `threads` bins:
+/// descending by `numel`, each leaf to the currently lightest bin (ties to
+/// the lowest bin id — fully deterministic). Bins keep their leaves in
+/// ascending index order; empty bins are dropped.
+pub fn shard_by_numel(specs: &[ParamSpec], threads: usize) -> Vec<Vec<usize>> {
+    let bins = threads.min(specs.len()).max(1);
+    let mut order: Vec<usize> = (0..specs.len()).collect();
+    order.sort_by(|&a, &b| {
+        specs[b].numel().cmp(&specs[a].numel()).then(a.cmp(&b))
+    });
+    let mut shards = vec![Vec::new(); bins];
+    let mut load = vec![0usize; bins];
+    for i in order {
+        let lightest = (0..bins).min_by_key(|&b| (load[b], b)).unwrap();
+        shards[lightest].push(i);
+        // max(1): zero-sized leaves still cost a dispatch
+        load[lightest] += specs[i].numel().max(1);
+    }
+    for s in shards.iter_mut() {
+        s.sort_unstable();
+    }
+    shards.retain(|s| !s.is_empty());
+    shards
+}
+
+/// A sharded optimizer-step engine over any registry optimizer.
+pub struct ParallelStep {
+    /// one inner optimizer per parameter leaf, index-aligned with `specs`
+    leaf_opts: Vec<Box<dyn Optimizer>>,
+    /// static shard plan: disjoint leaf-index sets, one per worker
+    shards: Vec<Vec<usize>>,
+    threads: usize,
+}
+
+impl ParallelStep {
+    /// Build with a custom per-leaf optimizer factory. The factory must be
+    /// deterministic (same spec → same initial state) for the bitwise
+    /// guarantee to hold.
+    pub fn new<F>(specs: &[ParamSpec], threads: usize, mut build_leaf: F)
+                  -> anyhow::Result<Self>
+    where
+        F: FnMut(&ParamSpec) -> anyhow::Result<Box<dyn Optimizer>>,
+    {
+        anyhow::ensure!(threads >= 1, "step_threads must be >= 1");
+        let leaf_opts = specs
+            .iter()
+            .map(|s| build_leaf(s))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { leaf_opts, shards: shard_by_numel(specs, threads), threads })
+    }
+
+    /// Build from the optimizer registry (the `optim::build` names).
+    pub fn from_registry(name: &str, specs: &[ParamSpec], beta1: f32,
+                         beta2: f32, threads: usize) -> anyhow::Result<Self> {
+        Self::new(specs, threads, |s| {
+            super::build(name, std::slice::from_ref(s), beta1, beta2)
+        })
+    }
+
+    /// Configured worker count (the shard count may be lower when there
+    /// are fewer leaves than threads).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The static shard plan (leaf indices per worker).
+    pub fn shards(&self) -> &[Vec<usize>] {
+        &self.shards
+    }
+}
+
+impl Optimizer for ParallelStep {
+    fn name(&self) -> &'static str {
+        self.leaf_opts.first().map(|o| o.name()).unwrap_or("parallel")
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.leaf_opts.len());
+        if self.shards.len() <= 1 {
+            // single shard: run inline, no thread-spawn overhead
+            for (i, opt) in self.leaf_opts.iter_mut().enumerate() {
+                opt.step(&mut params[i..i + 1],
+                         std::slice::from_ref(&grads[i]), lr);
+            }
+            return;
+        }
+        // Hand each worker its shard's disjoint (param, grad, state)
+        // triples. take() proves disjointness to the borrow checker; the
+        // shard plan guarantees it by construction.
+        let mut param_slots: Vec<Option<&mut Tensor>> =
+            params.iter_mut().map(Some).collect();
+        let mut opt_slots: Vec<Option<&mut Box<dyn Optimizer>>> =
+            self.leaf_opts.iter_mut().map(Some).collect();
+        let mut work: Vec<Vec<(usize, &mut Tensor, &mut Box<dyn Optimizer>)>> =
+            Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            work.push(
+                shard
+                    .iter()
+                    .map(|&i| {
+                        (i,
+                         param_slots[i].take().expect("leaf sharded twice"),
+                         opt_slots[i].take().expect("leaf sharded twice"))
+                    })
+                    .collect(),
+            );
+        }
+        std::thread::scope(|scope| {
+            for chunk in work {
+                scope.spawn(move || {
+                    for (i, w, opt) in chunk {
+                        opt.step(std::slice::from_mut(w),
+                                 std::slice::from_ref(&grads[i]), lr);
+                    }
+                });
+            }
+        });
+    }
+
+    fn state_floats(&self) -> usize {
+        self.leaf_opts.iter().map(|o| o.state_floats()).sum()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        let mut out = Vec::new();
+        for (i, opt) in self.leaf_opts.iter().enumerate() {
+            for (_, slot, t) in opt.state() {
+                out.push((i, slot, t));
+            }
+        }
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        // Slot counts via state() clone one leaf's tensors at a time —
+        // acceptable on this checkpoint path (see the Optimizer::state
+        // contract), and it lets the total be checked BEFORE any leaf is
+        // mutated: a layout mismatch (e.g. serial-Adam state, whose global
+        // `t` slot appears once instead of per leaf) must fail fast, not
+        // corrupt some leaves and then abort.
+        let lens: Vec<usize> =
+            self.leaf_opts.iter().map(|o| o.state().len()).collect();
+        let expect: usize = lens.iter().sum();
+        assert_eq!(state.len(), expect,
+                   "state layout mismatch: got {} tensors, this {}-leaf \
+                    ParallelStep expects {} (per-leaf slot layout differs \
+                    from serial for optimizers with global slots — see \
+                    module docs)",
+                   state.len(), self.leaf_opts.len(), expect);
+        let mut it = state.into_iter();
+        for (opt, n) in self.leaf_opts.iter_mut().zip(lens) {
+            let chunk: Vec<Tensor> = it.by_ref().take(n).collect();
+            opt.load_state(chunk);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim;
+    use crate::rng::Rng;
+
+    fn mixed_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("embed", &[40, 8]),
+            ParamSpec::new("w1", &[8, 16]),
+            ParamSpec::new("w2", &[16, 8]),
+            ParamSpec::new("conv", &[3, 3, 2, 4]),
+            ParamSpec::new("b", &[16]),
+        ]
+    }
+
+    #[test]
+    fn shard_plan_is_a_disjoint_cover_and_balanced() {
+        let specs = mixed_specs();
+        let shards = shard_by_numel(&specs, 2);
+        assert_eq!(shards.len(), 2);
+        let mut seen = vec![false; specs.len()];
+        for s in &shards {
+            for &i in s {
+                assert!(!seen[i], "leaf {i} sharded twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "not a cover");
+        // the 320-elem embedding dominates: greedy packing must not put
+        // every other leaf in the same bin with it
+        let loads: Vec<usize> = shards
+            .iter()
+            .map(|s| s.iter().map(|&i| specs[i].numel()).sum())
+            .collect();
+        let (max, min) = (*loads.iter().max().unwrap(),
+                          *loads.iter().min().unwrap());
+        assert!(max < 2 * min + specs[0].numel(),
+                "unbalanced shards: {loads:?}");
+    }
+
+    #[test]
+    fn more_threads_than_leaves_is_fine() {
+        let specs = vec![ParamSpec::new("w", &[4, 4])];
+        let shards = shard_by_numel(&specs, 8);
+        assert_eq!(shards, vec![vec![0]]);
+        let mut opt =
+            ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 8).unwrap();
+        let mut params = vec![Tensor::zeros(&[4, 4])];
+        let g = vec![Tensor::full(&[4, 4], 1.0)];
+        opt.step(&mut params, &g, 0.1);
+        assert!(params[0].data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bitwise_identical_to_serial_sm3() {
+        let specs = mixed_specs();
+        let mut serial = optim::build("sm3", &specs, 0.9, 0.98).unwrap();
+        let mut par =
+            ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 3).unwrap();
+        let mut rng = Rng::new(7);
+        let init: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let mut pa = init.clone();
+        let mut pb = init;
+        for _ in 0..5 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            serial.step(&mut pa, &grads, 0.1);
+            par.step(&mut pb, &grads, 0.1);
+        }
+        for (a, b) in pa.iter().zip(&pb) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_floats_and_name_delegate() {
+        let specs = mixed_specs();
+        let serial = optim::build("adam", &specs, 0.9, 0.98).unwrap();
+        let par =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 4).unwrap();
+        assert_eq!(par.state_floats(), serial.state_floats());
+        assert_eq!(par.name(), "adam");
+        assert_eq!(par.threads(), 4);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let specs = mixed_specs();
+        let mut par =
+            ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        par.step(&mut params, &grads, 0.1);
+        let saved: Vec<Tensor> =
+            par.state().into_iter().map(|(_, _, t)| t).collect();
+        let mut fresh =
+            ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 2).unwrap();
+        fresh.load_state(saved.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t).collect();
+        assert_eq!(saved, restored);
+    }
+
+    /// A state vector with the wrong tensor count (e.g. serial Adam's
+    /// layout, whose global `t` appears once instead of per leaf) must
+    /// fail fast before any leaf is mutated.
+    #[test]
+    #[should_panic(expected = "state layout mismatch")]
+    fn load_state_rejects_wrong_layout_before_mutating() {
+        let specs = mixed_specs();
+        let serial = optim::build("adam", &specs, 0.9, 0.98).unwrap();
+        // serial Adam: 1 global `t` + (m, v) per leaf = 11 tensors;
+        // per-leaf Adam expects (t, m, v) per leaf = 15.
+        let saved: Vec<Tensor> =
+            serial.state().into_iter().map(|(_, _, t)| t).collect();
+        let mut par =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 2).unwrap();
+        par.load_state(saved);
+    }
+
+    #[test]
+    fn empty_param_list_is_a_noop() {
+        let mut par =
+            ParallelStep::from_registry("sm3", &[], 0.9, 0.98, 4).unwrap();
+        par.step(&mut [], &[], 0.1);
+        assert_eq!(par.state_floats(), 0);
+        assert!(par.state().is_empty());
+    }
+}

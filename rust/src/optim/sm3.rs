@@ -286,11 +286,20 @@ impl Optimizer for Sm3 {
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
-        const AXIS_NAMES: [&str; 4] = ["acc0", "acc1", "acc2", "acc3"];
+        // One distinct name per axis — clamping (the old `a.min(3)`) made
+        // rank ≥ 5 tensors emit duplicate "acc3" slots, silently aliasing
+        // state across axes on checkpoint round-trips. The checkpoint
+        // format caps tensor rank at 8 (see `checkpoint.rs`), so eight
+        // static names cover every representable parameter.
+        const AXIS_NAMES: [&str; 8] =
+            ["acc0", "acc1", "acc2", "acc3", "acc4", "acc5", "acc6", "acc7"];
         let mut out = Vec::new();
         for (i, leaf) in self.leaves.iter().enumerate() {
+            assert!(leaf.accs.len() <= AXIS_NAMES.len(),
+                    "rank {} exceeds the {}-axis slot-name cap",
+                    leaf.accs.len(), AXIS_NAMES.len());
             for (a, acc) in leaf.accs.iter().enumerate() {
-                out.push((i, AXIS_NAMES[a.min(3)],
+                out.push((i, AXIS_NAMES[a],
                           Tensor::from_vec(&[acc.len()], acc.clone())));
             }
             out.push((i, "mom", leaf.mom.clone()));
@@ -455,6 +464,33 @@ mod tests {
         fresh.load_state(saved.clone());
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t.clone()).collect();
+        assert_eq!(saved, restored);
+    }
+
+    /// Regression: rank ≥ 5 tensors used to clamp axis slot names to
+    /// "acc3", so axes 3, 4, … aliased one checkpoint slot. Every axis
+    /// must get a distinct name and round-trip without aliasing.
+    #[test]
+    fn rank5_state_slots_are_distinct_and_roundtrip() {
+        let shape = [2usize, 3, 4, 5, 6];
+        let (_, opt) = run_steps(Sm3Variant::II, &shape, 2, 11);
+        let state = opt.state();
+        // 5 axis accumulators + momentum
+        assert_eq!(state.len(), 6);
+        let names: Vec<&str> = state.iter().map(|(_, n, _)| *n).collect();
+        assert_eq!(names, ["acc0", "acc1", "acc2", "acc3", "acc4", "mom"]);
+        // each axis slot has that axis's length, not an alias of another
+        for (a, &dim) in shape.iter().enumerate() {
+            assert_eq!(state[a].2.len(), dim, "axis {a}");
+        }
+        // round-trip restores bit-identical state
+        let saved: Vec<Tensor> =
+            state.into_iter().map(|(_, _, t)| t).collect();
+        let specs = vec![ParamSpec::new("w", &shape)];
+        let mut fresh = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        fresh.load_state(saved.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t).collect();
         assert_eq!(saved, restored);
     }
 

@@ -67,6 +67,18 @@ pub mod gen {
             .collect()
     }
 
+    /// A mixed-rank parameter list: 1..=max_leaves leaves with ranks in
+    /// [1, max_rank] and dims in [1, max_dim] (exercises the vector,
+    /// matrix, and generic-tensor optimizer paths together).
+    pub fn param_specs(rng: &mut Rng, max_leaves: usize, max_rank: usize,
+                       max_dim: usize) -> Vec<crate::optim::ParamSpec> {
+        let n = 1 + rng.index(max_leaves);
+        (0..n)
+            .map(|i| crate::optim::ParamSpec::new(
+                format!("p{i}"), &shape(rng, max_rank, max_dim)))
+            .collect()
+    }
+
     /// A random cover of [d]: random sets + a repair pass guaranteeing
     /// every index is covered.
     pub fn cover(rng: &mut Rng, d: usize, max_sets: usize) -> Vec<Vec<usize>> {
@@ -135,6 +147,63 @@ mod tests {
                 Err("not a cover".into())
             }
         });
+    }
+
+    /// ParallelStep must be *bitwise* identical to the serial optimizer —
+    /// for every registry optimizer, over mixed-rank parameter lists, at
+    /// 1, 2, and 4 threads, across multiple steps.
+    #[test]
+    fn parallel_step_is_bit_identical_to_serial() {
+        use crate::optim::{self, parallel::ParallelStep, Optimizer};
+        use crate::tensor::Tensor;
+        forall("ParallelStep == serial, bitwise", |rng| {
+            (gen::param_specs(rng, 5, 4, 6), rng.next_u64())
+        }, |(specs, seed)| {
+            for name in optim::ALL {
+                for threads in [1usize, 2, 4] {
+                    let mut serial = optim::build(name, specs, 0.9, 0.98)
+                        .map_err(|e| e.to_string())?;
+                    let mut par = ParallelStep::from_registry(
+                        name, specs, 0.9, 0.98, threads)
+                        .map_err(|e| e.to_string())?;
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let init: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                        .collect();
+                    let mut pa = init.clone();
+                    let mut pb = init;
+                    for step in 0..3 {
+                        let grads: Vec<Tensor> = specs
+                            .iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect();
+                        serial.step(&mut pa, &grads, 0.1);
+                        par.step(&mut pb, &grads, 0.1);
+                        for (leaf, (a, b)) in
+                            pa.iter().zip(&pb).enumerate()
+                        {
+                            for (x, y) in a.data().iter().zip(b.data()) {
+                                if x.to_bits() != y.to_bits() {
+                                    return Err(format!(
+                                        "{name} x{threads} step {step} \
+                                         leaf {leaf}: {x} != {y}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Gradients for the equivalence property: normal entries with
+    /// occasional sparsity/zeros (the 0/0 = 0 path must also agree).
+    fn gen_grad_tensor(shape: &[usize],
+                       rng: &mut crate::rng::Rng) -> crate::tensor::Tensor {
+        let n: usize = shape.iter().product();
+        crate::tensor::Tensor::from_vec(shape, gen::grad_vec(rng, n, 1.0))
     }
 
     #[test]
