@@ -1,7 +1,7 @@
 # Top-level targets. `make tier1` mirrors the repository's tier-1 gate
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
-.PHONY: tier1 build test lint fmt clippy bench-optim artifacts
+.PHONY: tier1 build test lint fmt clippy bench-optim benches artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -23,6 +23,11 @@ lint: fmt clippy
 # Serial-vs-parallel optimizer-step numbers (EXPERIMENTS.md §Perf).
 bench-optim:
 	cargo bench --bench bench_optim
+
+# Compile every harness=false bench target without running it (the CI
+# build-test job runs this too, so the benches cannot silently rot).
+benches:
+	cargo bench --no-run --workspace
 
 # AOT-lower the JAX models to HLO artifacts (needs the Python toolchain;
 # the Rust integration tests skip themselves when artifacts/ is absent).

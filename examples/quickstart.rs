@@ -58,8 +58,8 @@ fn main() -> Result<()> {
     //    Transformer-Big under Adam vs SM3.
     let big = inventory::transformer_big();
     let d: usize = big.iter().map(|s| s.numel()).sum();
-    let adam = opt_state_floats("adam", &big);
-    let sm3 = opt_state_floats("sm3", &big);
+    let adam = opt_state_floats("adam", &big)?;
+    let sm3 = opt_state_floats("sm3", &big)?;
     println!("\nTransformer-Big optimizer state: adam {:.1}M floats, \
               sm3 {:.1}M floats",
              adam as f64 / 1e6, sm3 as f64 / 1e6);

@@ -1,13 +1,16 @@
 //! E5 — regenerates paper Tables 1 & 2 memory columns from the *real*
 //! model inventories (Transformer-Big 375.4M, BERT-Large 340M params)
-//! plus the max-batch frontier the paper's batch-doubling relies on.
+//! plus the max-batch frontier the paper's batch-doubling relies on —
+//! and, past the paper, the bf16/q8 quantized-state columns
+//! (`optim::qstate`) with their recomputed frontier.
 //!
 //! Run: `cargo bench --bench bench_memory` (writes out/table1_memory.csv,
-//! out/table2_memory.csv, out/max_batch.csv)
+//! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv)
 
-use sm3::memory::{inventory, opt_state_floats, MemoryModel, GIB};
+use sm3::memory::{inventory, opt_state_bytes, opt_state_floats, MemoryModel,
+                  SlotLayout, GIB};
 use sm3::metrics::RunLogger;
-use sm3::optim::ParamSpec;
+use sm3::optim::{ParamSpec, StateDtype};
 
 fn report(name: &str, m: &MemoryModel, cells: &[(&str, usize, Option<f64>)],
           csv: &str) -> anyhow::Result<()> {
@@ -17,13 +20,15 @@ fn report(name: &str, m: &MemoryModel, cells: &[(&str, usize, Option<f64>)],
     let mut log = RunLogger::new(Some(csv),
         "optimizer,batch_per_core,predicted_gib,paper_gib,fits", false)?;
     for &(opt, b, paper) in cells {
-        let gib = m.gib_per_core(opt, b);
-        let fits = m.fits(opt, b);
+        let gib = m.gib_per_core(opt, b)?;
+        let fits = m.fits(opt, b)?;
         let paper_s = paper.map(|p| format!("{p:.2}"))
             .unwrap_or_else(|| "OOM".into());
         println!("  {opt:<11} {b:>7} {gib:>11.2} {paper_s:>10} {:>6}",
                  if fits { "yes" } else { "OOM" });
         if let Some(p) = paper {
+            // the f32 columns are the paper's cells — the qstate subsystem
+            // must leave them untouched (acceptance criterion)
             let err = (gib - p).abs() / p;
             assert!(err < 0.06, "{opt}@{b}: predicted {gib:.2} vs paper {p}");
         }
@@ -38,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Table 1: Transformer-Big on TPUv2 (8 GiB/core) ----------------
     let big = MemoryModel::calibrate(
         inventory::transformer_big(), 8.0 * GIB,
-        ("adam", 12, 6.88 * GIB), ("sm3", 24, 7.02 * GIB));
+        ("adam", 12, 6.88 * GIB), ("sm3", 24, 7.02 * GIB))?;
     report(
         "Table 1 — Transformer-Big (WMT'14 en→fr) memory per core",
         &big,
@@ -58,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Table 2: BERT-Large -------------------------------------------
     let bert = MemoryModel::calibrate(
         inventory::bert_large(), 8.0 * GIB,
-        ("adam", 8, 6.15 * GIB), ("sm3", 16, 6.02 * GIB));
+        ("adam", 8, 6.15 * GIB), ("sm3", 16, 6.02 * GIB))?;
     report(
         "\nTable 2 — BERT-Large memory per core",
         &bert,
@@ -77,12 +82,62 @@ fn main() -> anyhow::Result<()> {
                                  "model,optimizer,max_batch_per_core", false)?;
     for (model, m) in [("transformer_big", &big), ("bert_large", &bert)] {
         for opt in ["adam", "adagrad", "adafactor", "sm3"] {
-            let mb = m.max_batch(opt);
+            let mb = m.max_batch(opt)?;
             println!("  {model:<16} {opt:<10} {mb:>4}");
             log.row(&[model.into(), opt.into(), mb.to_string()])?;
         }
     }
     log.flush()?;
+
+    // ---- quantized-state columns (past the paper) ------------------------
+    // Optimizer-state bytes per dtype and the frontier they buy. The q8
+    // acceptance line: ≥ 3.5× second-moment reduction on Transformer-Big.
+    println!("\n=== quantized optimizer state (optim::qstate) ===");
+    println!("  {:<16} {:<11} {:>10} {:>10} {:>10} {:>7} {:>7} {:>7}",
+             "model", "optimizer", "f32 GiB", "bf16 GiB", "q8 GiB",
+             "mb@f32", "mb@bf16", "mb@q8");
+    let mut qlog = RunLogger::new(
+        Some("out/qstate_memory.csv"),
+        "model,optimizer,dtype,state_gib,second_moment_gib,max_batch_per_core",
+        false)?;
+    for (model, m) in [("transformer_big", &big), ("bert_large", &bert)] {
+        for opt in ["adam", "adagrad", "adafactor", "sm3", "sgdm"] {
+            let mut state_gib = Vec::new();
+            let mut frontier = Vec::new();
+            for dtype in StateDtype::ALL {
+                let layout = SlotLayout::for_optimizer(opt, &m.specs)?;
+                let bytes = opt_state_bytes(opt, &m.specs, dtype)?;
+                state_gib.push(bytes as f64 / GIB);
+                let mb = m.max_batch_dtype(opt, dtype)?;
+                frontier.push(mb);
+                qlog.row(&[model.into(), opt.into(), dtype.name().into(),
+                           format!("{:.4}", bytes as f64 / GIB),
+                           format!("{:.4}",
+                                   layout.second_moment_bytes(dtype) as f64
+                                       / GIB),
+                           mb.to_string()])?;
+            }
+            println!("  {model:<16} {opt:<11} {:>10.3} {:>10.3} {:>10.3} \
+                      {:>7} {:>7} {:>7}",
+                     state_gib[0], state_gib[1], state_gib[2],
+                     frontier[0], frontier[1], frontier[2]);
+        }
+    }
+    qlog.flush()?;
+    // acceptance: q8 second-moment bytes ≥ 3.5× smaller on Transformer-Big
+    for opt in ["adam", "adagrad", "adafactor", "sm3"] {
+        let layout = SlotLayout::for_optimizer(opt, &big.specs)?;
+        let red = layout.second_moment_bytes(StateDtype::F32) as f64
+            / layout.second_moment_bytes(StateDtype::Q8) as f64;
+        println!("  {opt:<11} second-moment q8 reduction: {red:.2}x");
+        assert!(red >= 3.5, "{opt}: q8 second-moment reduction {red:.2}x");
+    }
+    // and the frontier strictly widens for the 2d-state optimizers
+    for opt in ["adam", "adagrad"] {
+        let f = big.max_batch_dtype(opt, StateDtype::F32)?;
+        let q = big.max_batch_dtype(opt, StateDtype::Q8)?;
+        assert!(q > f, "{opt}: q8 frontier {q} must exceed f32 {f}");
+    }
 
     // ---- state breakdown (the quantity the paper's abstract claims) -----
     println!("\n=== optimizer-state floats (exact arithmetic) ===");
@@ -95,16 +150,16 @@ fn main() -> anyhow::Result<()> {
         let d: usize = specs.iter().map(ParamSpec::numel).sum();
         print!("  {model:<16} d={:>7.1}M |", d as f64 / 1e6);
         for opt in ["adam", "adagrad", "adafactor", "sm3", "sgdm"] {
-            let s = opt_state_floats(opt, &specs);
+            let s = opt_state_floats(opt, &specs)?;
             print!(" {opt} {:>7.1}M", s as f64 / 1e6);
         }
         // SM3's second-moment share
-        let sm3 = opt_state_floats("sm3", &specs);
+        let sm3 = opt_state_floats("sm3", &specs)?;
         println!("  (sm3 2nd-moment: {:.2}M = {:.2}% of d)",
                  (sm3 - d) as f64 / 1e6,
                  100.0 * (sm3 - d) as f64 / d as f64);
     }
     println!("\nCSV series: out/table1_memory.csv out/table2_memory.csv \
-              out/max_batch.csv");
+              out/max_batch.csv out/qstate_memory.csv");
     Ok(())
 }

@@ -4,18 +4,20 @@
 //! by 3%" — fewer state reads/writes).
 //!
 //! Also benchmarks the ring all-reduce, the abstract-cover SM3 (the
-//! O(Σ|S_r|) path) against the co-dim-1 fast path, and the `ParallelStep`
+//! O(Σ|S_r|) path) against the co-dim-1 fast path, the `ParallelStep`
 //! sharded update engine against serial stepping (serial-vs-parallel
 //! numbers for EXPERIMENTS.md §Perf; bitwise equality is asserted before
-//! timing).
+//! timing), and the quantized-state store (`optim::qstate`): measured
+//! state bytes and update throughput per dtype.
 //!
-//! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv and
-//! out/perf_optim_parallel.csv)
+//! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv,
+//! out/perf_optim_parallel.csv, out/perf_optim_qstate.csv)
 
 use sm3::bench_util::{bench, speedup, CsvWriter};
 use sm3::collectives::ring_allreduce;
+use sm3::memory::opt_state_bytes;
 use sm3::optim::{self, cover::{Cover, CoverSm3II}, Optimizer, ParamSpec,
-                 ParallelStep};
+                 ParallelStep, StateDtype};
 use sm3::rng::Rng;
 use sm3::tensor::Tensor;
 use std::time::Duration;
@@ -58,12 +60,14 @@ fn transformer_specs(layers: usize) -> Vec<ParamSpec> {
 }
 
 /// Assert the parallel engine's output is bitwise identical to serial over
-/// a few steps (pre-flight gate for the timing runs below).
-fn assert_bitwise_equal(name: &str, specs: &[ParamSpec], grads: &[Tensor],
-                        threads: usize) -> anyhow::Result<()> {
-    let mut serial = optim::build(name, specs, 0.9, 0.98)?;
-    let mut par = ParallelStep::from_registry(name, specs, 0.9, 0.98,
-                                              threads)?;
+/// a few steps (pre-flight gate for the timing runs below), at any state
+/// storage precision.
+fn assert_bitwise_equal_dtype(name: &str, specs: &[ParamSpec],
+                              grads: &[Tensor], threads: usize,
+                              dtype: StateDtype) -> anyhow::Result<()> {
+    let mut serial = optim::build_with_dtype(name, specs, 0.9, 0.98, dtype)?;
+    let mut par = ParallelStep::from_registry_dtype(name, specs, 0.9, 0.98,
+                                                    threads, dtype)?;
     let mut pa: Vec<Tensor> =
         specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut pb = pa.clone();
@@ -74,12 +78,17 @@ fn assert_bitwise_equal(name: &str, specs: &[ParamSpec], grads: &[Tensor],
             for (x, y) in a.data().iter().zip(b.data()) {
                 anyhow::ensure!(
                     x.to_bits() == y.to_bits(),
-                    "{name} x{threads} diverged at step {step} leaf {leaf}: \
-                     {x} vs {y}");
+                    "{name} x{threads} @ {dtype:?} diverged at step {step} \
+                     leaf {leaf}: {x} vs {y}");
             }
         }
     }
     Ok(())
+}
+
+fn assert_bitwise_equal(name: &str, specs: &[ParamSpec], grads: &[Tensor],
+                        threads: usize) -> anyhow::Result<()> {
+    assert_bitwise_equal_dtype(name, specs, grads, threads, StateDtype::F32)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -192,6 +201,51 @@ fn main() -> anyhow::Result<()> {
     if let Some(sp) = sm3_x4_speedup {
         println!("\n  sm3 step_threads=4 speedup: {sp:.2}x \
                   (acceptance target >= 1.5x; bitwise-identical output)");
+    }
+
+    // ---- quantized state: measured bytes + throughput per dtype ---------
+    // (EXPERIMENTS.md §Quantized state) q8 trades ~1.06 bytes/scalar of
+    // storage for one encode+decode pass per slot per step; this section
+    // measures what that pass costs next to the raw update arithmetic.
+    println!("\n=== quantized optimizer state (optim::qstate) — \
+              {:.2}M params ===", d as f64 / 1e6);
+    println!("  {:<11} {:<6} {:>12} {:>12} {:>10}",
+             "optimizer", "dtype", "state bytes", "ns/step", "Melem/s");
+    let mut qcsv = CsvWriter::create(
+        "out/perf_optim_qstate.csv",
+        "optimizer,dtype,state_bytes,median_ns,elements_per_sec,\
+         bytes_vs_f32")?;
+    for name in ["sm3", "adam"] {
+        // determinism gate first: serial == sharded at q8, like the f32
+        // ParallelStep section asserts before timing
+        assert_bitwise_equal_dtype(name, &specs, &grads, 4, StateDtype::Q8)?;
+        // arithmetic, not a live build: the accountant's static bytes are
+        // asserted equal to Optimizer::state_bytes in memory/mod.rs tests
+        let f32_bytes = opt_state_bytes(name, &specs, StateDtype::F32)?;
+        for dtype in StateDtype::ALL {
+            let mut opt =
+                optim::build_with_dtype(name, &specs, 0.9, 0.98, dtype)?;
+            let sb = opt.state_bytes();
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let stats = bench(&format!("{name} @ {}", dtype.name()), budget,
+                              10, || {
+                opt.step(&mut params, &grads, 0.01);
+            });
+            let eps = stats.throughput(d);
+            println!("  {name:<11} {:<6} {sb:>12} {:>12.0} {:>10.1}",
+                     dtype.name(), stats.per_iter_ns(), eps / 1e6);
+            qcsv.row(&[name.to_string(), dtype.name().to_string(),
+                       sb.to_string(),
+                       format!("{:.0}", stats.per_iter_ns()),
+                       format!("{eps:.0}"),
+                       format!("{:.3}", sb as f64 / f32_bytes as f64)])?;
+            if dtype == StateDtype::Q8 {
+                assert!((sb as f64) * 3.5 <= f32_bytes as f64,
+                        "{name}: q8 state {sb} B not ≥3.5x below f32 \
+                         {f32_bytes} B");
+            }
+        }
     }
 
     // ---- ring all-reduce -------------------------------------------------

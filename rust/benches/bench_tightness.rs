@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     let nu_i = sm3i.implied_nu_matrix(embed_idx);
     let nu_ii = sm3ii.implied_nu_matrix(embed_idx);
 
-    let order = trace::top_k_indices(gamma, TOP_K);
+    let order = trace::top_k_indices(&gamma, TOP_K);
     let mut log = RunLogger::new(Some("out/fig5_tightness.csv"),
                                  "rank,adagrad,sm3_ii,sm3_i", false)?;
     let (mut viol_bound, mut viol_order) = (0usize, 0usize);
@@ -105,11 +105,12 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== Fig. 1 — activation-pattern heatmaps (Adagrad γ) ===");
     // (γ in log scale is what the paper plots; we store raw values)
     trace::write_heatmap_csv("out/fig1_embed_gamma.csv",
-                             adagrad.accumulator(embed_idx))?;
+                             &adagrad.accumulator(embed_idx))?;
     trace::write_heatmap_csv("out/fig1_ffn_gamma.csv",
-                             adagrad.accumulator(ffn_idx))?;
-    let s_embed = trace::activation_pattern_score(adagrad.accumulator(embed_idx));
-    let s_ffn = trace::activation_pattern_score(adagrad.accumulator(ffn_idx));
+                             &adagrad.accumulator(ffn_idx))?;
+    let s_embed =
+        trace::activation_pattern_score(&adagrad.accumulator(embed_idx));
+    let s_ffn = trace::activation_pattern_score(&adagrad.accumulator(ffn_idx));
     println!("  rank-1 row/col structure score: embed {s_embed:.3}, \
               ffn {s_ffn:.3} (≈1 ⇒ strong pattern)");
 
@@ -131,7 +132,7 @@ fn main() -> anyhow::Result<()> {
         let (_, grads) = itrainer.compute_grads()?;
         iada.step(&mut ip, &grads, 0.05);
     }
-    let conv = iada.accumulator(conv_idx).clone();
+    let conv = iada.accumulator(conv_idx);
     let (s0, s1, s2, s3) = (conv.shape()[0], conv.shape()[1],
                             conv.shape()[2], conv.shape()[3]);
     let conv2d = conv.reshape(&[s0 * s1 * s2, s3]);

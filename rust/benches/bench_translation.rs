@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
               inventory) ===");
     let mm = MemoryModel::calibrate(
         inventory::transformer_big(), 8.0 * GIB,
-        ("adam", 12, 6.88 * GIB), ("sm3", 24, 7.02 * GIB));
+        ("adam", 12, 6.88 * GIB), ("sm3", 24, 7.02 * GIB))?;
     let mut t1 = RunLogger::new(Some("out/table1.csv"),
         "optimizer,batch_per_core,memory_gib,fits,bleu_small", false)?;
     println!("  {:<11} {:>7} {:>11} {:>6} {:>11}",
@@ -98,8 +98,8 @@ fn main() -> anyhow::Result<()> {
     for (opt, accum, b_core) in [("adam", 1, 12), ("adagrad", 1, 12),
                                  ("adafactor", 1, 12), ("sm3", 1, 12),
                                  ("adafactor", 2, 24), ("sm3", 2, 24)] {
-        let gib = mm.gib_per_core(opt, b_core);
-        let fits = mm.fits(opt, b_core);
+        let gib = mm.gib_per_core(opt, b_core)?;
+        let fits = mm.fits(opt, b_core)?;
         let bleu = finals.iter().find(|f| f.0 == opt && f.1 == accum)
             .map(|f| f.3).unwrap_or(f64::NAN);
         println!("  {opt:<11} {b_core:>7} {gib:>11.2} {:>6} {bleu:>11.2}",

@@ -4,23 +4,58 @@
 //! JAX train from bit-identical initializations), and (b) training
 //! save/restore of params + optimizer state.
 //!
-//! Format (little-endian):
+//! Two on-disk versions (DESIGN.md §8):
+//!
 //! ```text
-//! magic   8 bytes   "SM3CKPT1"
-//! count   u32
-//! entry*  name_len u32, name bytes (utf-8),
-//!         rank u32, dims u64 × rank,
-//!         f32 data × Π dims
+//! v1  magic   8 bytes   "SM3CKPT1"
+//!     count   u32
+//!     entry*  name_len u32, name bytes (utf-8),
+//!             rank u32, dims u64 × rank,
+//!             f32 data × Π dims
+//!
+//! v2  magic   8 bytes   "SM3CKPT2"
+//!     count   u32
+//!     entry*  name_len u32, name bytes (utf-8),
+//!             dtype u8 (0 = f32, 1 = bf16, 2 = q8),
+//!             rank u32, dims u64 × rank,
+//!             payload:
+//!               f32  → 4·n bytes (f32 LE)
+//!               bf16 → 2·n bytes (u16 LE)
+//!               q8   → ⌈n/64⌉ f32 LE block scales, then n u8 codes
 //! ```
+//!
+//! Loading always yields f32 tensors (quantized payloads are decoded);
+//! [`load_tagged`] additionally reports each entry's storage dtype. v1
+//! files keep loading forever — [`load`] sniffs the magic. Saving an
+//! already-quantized tensor (one read out of a `QSlot`) with its own
+//! dtype tag is lossless: the codecs are idempotent (`optim::qstate`),
+//! so save→load→save round-trips bit-for-bit. Integer-valued scalar
+//! slots (Adam's `t`) should be tagged f32 by the caller.
+//!
+//! The parser reads the whole file once and validates every entry's
+//! declared size against the bytes actually present *before* allocating
+//! tensor storage — a truncated or corrupt file fails with a message
+//! instead of requesting an absurd allocation. (Deliberate tradeoff: the
+//! slurp doubles transient peak memory during the one-shot load vs the
+//! old streaming reader; a streaming validator against the file-metadata
+//! length can restore that if checkpoint sizes ever make it matter.)
 
+use crate::optim::qstate::{codec, StateDtype};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"SM3CKPT1";
+const MAGIC_V1: &[u8; 8] = b"SM3CKPT1";
+const MAGIC_V2: &[u8; 8] = b"SM3CKPT2";
 
-/// Write named tensors to `path`.
+/// Longest accepted tensor name (matches the v1 format's historic cap).
+const MAX_NAME_LEN: usize = 4096;
+/// Highest accepted tensor rank (SM3 axis slots rely on this cap).
+const MAX_RANK: usize = 8;
+
+/// Write named tensors to `path` in the v1 (all-f32) format — the
+/// interchange format `aot.py` produces.
 pub fn save(path: impl AsRef<Path>, entries: &[(String, &Tensor)])
             -> Result<()> {
     let path = path.as_ref();
@@ -29,16 +64,10 @@ pub fn save(path: impl AsRef<Path>, entries: &[(String, &Tensor)])
     }
     let mut w = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_V1)?;
     w.write_all(&(entries.len() as u32).to_le_bytes())?;
     for (name, t) in entries {
-        let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
-        w.write_all(nb)?;
-        w.write_all(&(t.rank() as u32).to_le_bytes())?;
-        for &d in t.shape() {
-            w.write_all(&(d as u64).to_le_bytes())?;
-        }
+        write_entry_header(&mut w, name, t)?;
         for &v in t.data() {
             w.write_all(&v.to_le_bytes())?;
         }
@@ -47,61 +76,224 @@ pub fn save(path: impl AsRef<Path>, entries: &[(String, &Tensor)])
     Ok(())
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-/// Load all named tensors from `path` (in file order).
-pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+/// Write named tensors to `path` in the v2 format, encoding each entry's
+/// payload at its tag's precision.
+pub fn save_v2(path: impl AsRef<Path>,
+               entries: &[(String, &Tensor, StateDtype)]) -> Result<()> {
     let path = path.as_ref();
-    let mut r = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: bad magic (not an SM3 checkpoint)");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
     }
-    let count = read_u32(&mut r)? as usize;
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+    w.write_all(MAGIC_V2)?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    let (mut scales, mut codes) = (Vec::new(), Vec::new());
+    for (name, t, dtype) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[dtype.tag()])?;
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match dtype {
+            StateDtype::F32 => {
+                for &v in t.data() {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            StateDtype::Bf16 => {
+                for &v in t.data() {
+                    w.write_all(&codec::f32_to_bf16(v).to_le_bytes())?;
+                }
+            }
+            StateDtype::Q8 => {
+                codec::q8_encode_into(t.data(), &mut scales, &mut codes);
+                for &s in &scales {
+                    w.write_all(&s.to_le_bytes())?;
+                }
+                w.write_all(&codes)?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn write_entry_header(w: &mut impl Write, name: &str, t: &Tensor)
+                      -> Result<()> {
+    let nb = name.as_bytes();
+    w.write_all(&(nb.len() as u32).to_le_bytes())?;
+    w.write_all(nb)?;
+    w.write_all(&(t.rank() as u32).to_le_bytes())?;
+    for &d in t.shape() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Byte-slice cursor: every read is bounds-checked against the bytes the
+/// file actually contains, so declared sizes can never drive allocation.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("corrupt checkpoint: {what} needs {n} bytes but only {} \
+                   remain in the file", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6],
+                               b[7]]))
+    }
+}
+
+/// Load all named tensors from `path` (in file order), v1 or v2; v2
+/// payloads are dequantized to f32.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    Ok(load_tagged(path)?
+        .into_iter()
+        .map(|(name, t, _)| (name, t))
+        .collect())
+}
+
+/// Load with each entry's storage dtype (always `F32` for v1 files).
+pub fn load_tagged(path: impl AsRef<Path>)
+                   -> Result<Vec<(String, Tensor, StateDtype)>> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("{path:?}"))?;
+    parse(&bytes).with_context(|| format!("{path:?}"))
+}
+
+fn parse(bytes: &[u8]) -> Result<Vec<(String, Tensor, StateDtype)>> {
+    let mut cur = Cursor { buf: bytes, pos: 0 };
+    let magic = cur.take(8, "magic")?;
+    let versioned = if magic == MAGIC_V1 {
+        false
+    } else if magic == MAGIC_V2 {
+        true
+    } else {
+        bail!("bad magic (not an SM3 checkpoint)");
+    };
+    let count = cur.u32("entry count")? as usize;
+    // each entry needs at least name_len + rank (+ dtype tag in v2)
+    let min_entry = if versioned { 9 } else { 8 };
+    if count.saturating_mul(min_entry) > cur.remaining() {
+        bail!("corrupt checkpoint: {count} entries declared but only {} \
+               bytes follow the header", cur.remaining());
+    }
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 4096 {
-            bail!("corrupt checkpoint: name length {name_len}");
-        }
-        let mut nb = vec![0u8; name_len];
-        r.read_exact(&mut nb)?;
-        let name = String::from_utf8(nb).context("tensor name not utf-8")?;
-        let rank = read_u32(&mut r)? as usize;
-        if rank > 8 {
-            bail!("corrupt checkpoint: rank {rank}");
-        }
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u64(&mut r)? as usize);
-        }
-        let n: usize = shape.iter().product();
-        let mut bytes = vec![0u8; n * 4];
-        r.read_exact(&mut bytes)?;
-        let data: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        out.push((name, Tensor::from_vec(&shape, data)));
+    for e in 0..count {
+        let (name, tensor, dtype) = parse_entry(&mut cur, versioned)
+            .with_context(|| format!("entry {e}"))?;
+        out.push((name, tensor, dtype));
     }
     Ok(out)
+}
+
+fn parse_entry(cur: &mut Cursor, versioned: bool)
+               -> Result<(String, Tensor, StateDtype)> {
+    let name_len = cur.u32("name length")? as usize;
+    if name_len > MAX_NAME_LEN {
+        bail!("corrupt checkpoint: name length {name_len}");
+    }
+    let name = String::from_utf8(cur.take(name_len, "tensor name")?.to_vec())
+        .context("tensor name not utf-8")?;
+    let dtype = if versioned {
+        StateDtype::from_tag(cur.u8("dtype tag")?)?
+    } else {
+        StateDtype::F32
+    };
+    let rank = cur.u32("rank")? as usize;
+    if rank > MAX_RANK {
+        bail!("corrupt checkpoint: rank {rank}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let d = cur.u64("dimension")?;
+        // explicit narrowing: `as usize` would silently truncate a corrupt
+        // dim like 2^32+2 to 2 on a 32-bit target and dodge the checks
+        let d: usize = d.try_into().map_err(|_| anyhow::anyhow!(
+            "corrupt checkpoint: dimension {d} exceeds this platform's \
+             address space"))?;
+        shape.push(d);
+    }
+    // Validate the declared element count against the bytes actually
+    // present BEFORE allocating anything: a corrupt dims vector must not
+    // drive a huge (or overflowing) allocation request.
+    let n = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!(
+            "corrupt checkpoint: dims {shape:?} overflow the element count"))?;
+    let payload = payload_bytes(n, dtype).ok_or_else(|| anyhow::anyhow!(
+        "corrupt checkpoint: dims {shape:?} overflow the payload size"))?;
+    if payload > cur.remaining() {
+        bail!("corrupt checkpoint: tensor {name:?} ({n} elements as {}) \
+               declares {payload} payload bytes but only {} remain",
+              dtype.name(), cur.remaining());
+    }
+    let data = match dtype {
+        StateDtype::F32 => cur.take(payload, "f32 payload")?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        StateDtype::Bf16 => cur.take(payload, "bf16 payload")?
+            .chunks_exact(2)
+            .map(|c| codec::bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        StateDtype::Q8 => {
+            let nblocks = codec::q8_blocks(n);
+            let scales: Vec<f32> = cur.take(nblocks * 4, "q8 scales")?
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let codes = cur.take(n, "q8 codes")?;
+            let mut vals = Vec::new();
+            codec::q8_decode_into(&scales, codes, &mut vals);
+            vals
+        }
+    };
+    Ok((name, Tensor::from_vec(&shape, data), dtype))
+}
+
+/// Payload bytes for `n` elements at `dtype`, `None` on overflow.
+fn payload_bytes(n: usize, dtype: StateDtype) -> Option<usize> {
+    match dtype {
+        StateDtype::F32 => n.checked_mul(4),
+        StateDtype::Bf16 => n.checked_mul(2),
+        StateDtype::Q8 => codec::q8_blocks(n).checked_mul(4)?.checked_add(n),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::qstate::QSlot;
+    use crate::proptest::{forall, gen};
     use crate::rng::Rng;
 
     fn tmpfile(name: &str) -> std::path::PathBuf {
@@ -129,9 +321,99 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrip_all_dtypes_on_quantized_data() {
+        // values that already live in a QSlot (i.e. one quantization deep)
+        // must round-trip through save_v2/load bit-for-bit
+        let mut rng = Rng::new(5);
+        let raw = Tensor::randn(&[6, 21], 2.0, &mut rng);
+        let path = tmpfile("v2_roundtrip.ckpt");
+        for dtype in StateDtype::ALL {
+            let slot = QSlot::from_f32(dtype, raw.data());
+            let t = Tensor::from_vec(&[6, 21], slot.to_vec());
+            save_v2(&path, &[("x".into(), &t, dtype)]).unwrap();
+            let loaded = load_tagged(&path).unwrap();
+            assert_eq!(loaded.len(), 1);
+            assert_eq!(loaded[0].2, dtype);
+            assert_eq!(loaded[0].1.shape(), &[6, 21]);
+            for (a, b) in t.data().iter().zip(loaded[0].1.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
+            }
+        }
+    }
+
+    /// SM3CKPT1 → SM3CKPT2 cross-version round-trip: a state saved v1
+    /// loads, re-saves as v2 (f32 tags), and loads bit-identically.
+    #[test]
+    fn cross_version_roundtrip() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[70], 1.0, &mut rng);
+        let p1 = tmpfile("cross_v1.ckpt");
+        let p2 = tmpfile("cross_v2.ckpt");
+        save(&p1, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let v1 = load_tagged(&p1).unwrap();
+        assert!(v1.iter().all(|(_, _, d)| *d == StateDtype::F32));
+        let entries: Vec<(String, &Tensor, StateDtype)> = v1
+            .iter()
+            .map(|(n, t, d)| (n.clone(), t, *d))
+            .collect();
+        save_v2(&p2, &entries).unwrap();
+        let v2 = load_tagged(&p2).unwrap();
+        assert_eq!(v1.len(), v2.len());
+        for ((n1, t1, d1), (n2, t2, d2)) in v1.iter().zip(&v2) {
+            assert_eq!(n1, n2);
+            assert_eq!(d1, d2);
+            assert_eq!(t1.shape(), t2.shape());
+            for (x, y) in t1.data().iter().zip(t2.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// Property: cross-version equality over random shapes/payloads, and
+    /// v2 q8 save→load→save is byte-stable on disk.
+    #[test]
+    fn prop_cross_version_and_q8_stability() {
+        let p1 = tmpfile("prop_v1.ckpt");
+        let p2 = tmpfile("prop_v2.ckpt");
+        let p3 = tmpfile("prop_v2b.ckpt");
+        forall("ckpt v1 == v2(f32), q8 stable", |rng| {
+            let shape = gen::shape(rng, 3, 9);
+            let n: usize = shape.iter().product();
+            (shape, gen::grad_vec(rng, n, 1.0))
+        }, |(shape, vals)| {
+            let t = Tensor::from_vec(shape, vals.clone());
+            let run = || -> Result<()> {
+                save(&p1, &[("w".into(), &t)])?;
+                save_v2(&p2, &[("w".into(), &t, StateDtype::F32)])?;
+                let a = load(&p1)?;
+                let b = load(&p2)?;
+                for (x, y) in a[0].1.data().iter().zip(b[0].1.data()) {
+                    if x.to_bits() != y.to_bits() {
+                        bail!("v1/v2 f32 mismatch: {x} vs {y}");
+                    }
+                }
+                // q8: one save→load cycle, then a second save must emit
+                // the identical bytes (codec idempotence end to end)
+                save_v2(&p2, &[("w".into(), &t, StateDtype::Q8)])?;
+                let q = load(&p2)?;
+                save_v2(&p3, &[("w".into(), &q[0].1, StateDtype::Q8)])?;
+                if std::fs::read(&p2)? != std::fs::read(&p3)? {
+                    bail!("q8 re-save changed bytes");
+                }
+                Ok(())
+            };
+            run().map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
     fn rejects_bad_magic() {
         let path = tmpfile("bad.ckpt");
         std::fs::write(&path, b"NOTAMAGIC???").unwrap();
+        assert!(load(&path).is_err());
+        // too short for any magic
+        std::fs::write(&path, b"SM3").unwrap();
         assert!(load(&path).is_err());
     }
 
@@ -139,11 +421,107 @@ mod tests {
     fn rejects_truncated() {
         let mut rng = Rng::new(1);
         let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
-        let path = tmpfile("trunc.ckpt");
-        save(&path, &[("a".into(), &a)]).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(load(&path).is_err());
+        for (name, v2) in [("trunc1.ckpt", false), ("trunc2.ckpt", true)] {
+            let path = tmpfile(name);
+            if v2 {
+                save_v2(&path, &[("a".into(), &a, StateDtype::Q8)]).unwrap();
+            } else {
+                save(&path, &[("a".into(), &a)]).unwrap();
+            }
+            let bytes = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+            let err = load(&path).unwrap_err();
+            assert!(format!("{err:#}").contains("corrupt checkpoint"),
+                    "{err:#}");
+        }
+    }
+
+    /// Regression (ISSUE 2 satellite): a corrupt rank field fails with a
+    /// message instead of running off the format.
+    #[test]
+    fn rejects_bad_rank() {
+        let path = tmpfile("bad_rank.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SM3CKPT1");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len 1
+        bytes.push(b'w');
+        bytes.extend_from_slice(&9u32.to_le_bytes()); // rank 9 > cap 8
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("rank 9"), "{err:#}");
+    }
+
+    /// Regression (ISSUE 2 satellite): oversized dims must be rejected by
+    /// the byte-budget check before any allocation happens — both the
+    /// overflow case and the "huge but representable" case.
+    #[test]
+    fn rejects_oversized_dims_without_allocating() {
+        for dims in [
+            // product overflows usize
+            vec![u64::MAX / 2, 16],
+            // representable product (2^40 elements ⇒ 4 TiB payload)
+            vec![1u64 << 20, 1 << 20],
+        ] {
+            let path = tmpfile("oversized.ckpt");
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(b"SM3CKPT1");
+            bytes.extend_from_slice(&1u32.to_le_bytes());
+            bytes.extend_from_slice(&1u32.to_le_bytes());
+            bytes.push(b'w');
+            bytes.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                bytes.extend_from_slice(&d.to_le_bytes());
+            }
+            // a little trailing data so only the size check can reject
+            bytes.extend_from_slice(&[0u8; 64]);
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("corrupt checkpoint"), "{dims:?}: {msg}");
+        }
+        // the v2 q8 path must reject too (its block arithmetic is the
+        // overflow-prone one: dim near usize::MAX exercises q8_blocks)
+        let path = tmpfile("oversized_q8.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SM3CKPT2");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(2); // q8 tag
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 64]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt checkpoint"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_bad_dtype_tag() {
+        let path = tmpfile("bad_tag.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SM3CKPT2");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(7); // unknown dtype tag
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // rank 0
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype tag"), "{err:#}");
+    }
+
+    /// An absurd declared entry count must fail the up-front budget check.
+    #[test]
+    fn rejects_absurd_entry_count() {
+        let path = tmpfile("bad_count.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"SM3CKPT1");
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("entries declared"), "{err:#}");
     }
 
     #[test]
@@ -151,5 +529,22 @@ mod tests {
         let path = tmpfile("empty.ckpt");
         save(&path, &[]).unwrap();
         assert!(load(&path).unwrap().is_empty());
+        let path2 = tmpfile("empty_v2.ckpt");
+        save_v2(&path2, &[]).unwrap();
+        assert!(load(&path2).unwrap().is_empty());
+    }
+
+    /// The v2 q8 encoding actually shrinks the file (~4× for payloads).
+    #[test]
+    fn v2_q8_file_is_smaller() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let pf = tmpfile("size_f32.ckpt");
+        let pq = tmpfile("size_q8.ckpt");
+        save_v2(&pf, &[("a".into(), &a, StateDtype::F32)]).unwrap();
+        save_v2(&pq, &[("a".into(), &a, StateDtype::Q8)]).unwrap();
+        let sf = std::fs::metadata(&pf).unwrap().len() as f64;
+        let sq = std::fs::metadata(&pq).unwrap().len() as f64;
+        assert!(sf / sq > 3.0, "f32 {sf} vs q8 {sq}");
     }
 }

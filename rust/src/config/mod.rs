@@ -9,6 +9,7 @@
 pub mod toml;
 
 use self::toml::TomlValue;
+use crate::optim::StateDtype;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -77,6 +78,10 @@ pub struct TrainConfig {
     /// value; optimizer-state *checkpoint layout* differs from serial for
     /// optimizers with global slots (Adam's `t`) — see `optim::parallel`.
     pub step_threads: usize,
+    /// storage precision for optimizer-state slots (split path):
+    /// "f32" | "bf16" | "q8" — see `optim::qstate` / DESIGN.md §10.
+    /// Composes with `step_threads` (bitwise-identical at any count).
+    pub state_dtype: StateDtype,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -96,6 +101,7 @@ impl Default for TrainConfig {
             grad_accum: 1,
             workers: 1,
             step_threads: 1,
+            state_dtype: StateDtype::F32,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -146,6 +152,9 @@ impl TrainConfig {
             workers: get_u64(&train_tbl, "workers", d.workers as u64) as usize,
             step_threads: get_u64(&train_tbl, "step_threads",
                                   d.step_threads as u64) as usize,
+            state_dtype: StateDtype::parse(&get_str(
+                &train_tbl, "state_dtype", d.state_dtype.name()))
+                .context("[train] state_dtype")?,
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -178,6 +187,11 @@ impl TrainConfig {
         if self.step_threads > 1 && self.exec == ExecMode::Fused {
             bail!("step_threads applies to the split path only (the fused \
                    artifact already contains the optimizer)");
+        }
+        if self.state_dtype != StateDtype::F32 && self.exec == ExecMode::Fused {
+            bail!("state_dtype = {:?} applies to the split path only (the \
+                   fused artifact keeps its optimizer state in f32 device \
+                   buffers)", self.state_dtype.name());
         }
         if !(0.0..1.0).contains(&self.optim.beta1) {
             bail!("beta1 out of range");
@@ -242,6 +256,33 @@ warmup_steps = 40
         // sharded stepping is a split-path feature; fused must reject it
         assert!(TrainConfig::from_toml(
             "[train]\nexec = \"fused\"\nstep_threads = 4\n").is_err());
+    }
+
+    #[test]
+    fn state_dtype_parses_defaults_and_validates() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.state_dtype, StateDtype::F32);
+        let cfg =
+            TrainConfig::from_toml("[train]\nstate_dtype = \"q8\"\n").unwrap();
+        assert_eq!(cfg.state_dtype, StateDtype::Q8);
+        let cfg =
+            TrainConfig::from_toml("[train]\nstate_dtype = \"bf16\"\n")
+                .unwrap();
+        assert_eq!(cfg.state_dtype, StateDtype::Bf16);
+        // unknown dtype names must fail with a message, not default
+        assert!(TrainConfig::from_toml(
+            "[train]\nstate_dtype = \"fp8\"\n").is_err());
+        // quantized state is a split-path feature; fused must reject it
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\nstate_dtype = \"q8\"\n").is_err());
+        // fused + explicit f32 is fine (it is the fused behavior anyway)
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\nstate_dtype = \"f32\"\n").is_ok());
+        // quantized state composes with sharded stepping
+        let cfg = TrainConfig::from_toml(
+            "[train]\nstep_threads = 4\nstate_dtype = \"q8\"\n").unwrap();
+        assert_eq!((cfg.step_threads, cfg.state_dtype),
+                   (4, StateDtype::Q8));
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::collectives;
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
 use crate::metrics::{corpus_bleu, Ema};
-use crate::optim::{self, schedule::Schedule, Optimizer};
+use crate::optim::{self, schedule::Schedule, Optimizer, StateDtype};
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
 use crate::tensor::Tensor;
@@ -115,12 +115,16 @@ impl Trainer {
                     (cfg.optim.beta1 as f32, cfg.optim.beta2 as f32);
                 // step_threads > 1 shards the update across host threads;
                 // results stay bitwise identical (see optim::parallel).
+                // state_dtype selects the slot storage precision
+                // (optim::qstate); it composes with sharding because q8
+                // blocks never straddle shard boundaries.
                 let opt: Box<dyn Optimizer> = if cfg.step_threads > 1 {
-                    Box::new(optim::ParallelStep::from_registry(
+                    Box::new(optim::ParallelStep::from_registry_dtype(
                         &cfg.optim.name, &specs, beta1, beta2,
-                        cfg.step_threads)?)
+                        cfg.step_threads, cfg.state_dtype)?)
                 } else {
-                    optim::build(&cfg.optim.name, &specs, beta1, beta2)?
+                    optim::build_with_dtype(&cfg.optim.name, &specs, beta1,
+                                            beta2, cfg.state_dtype)?
                 };
                 Engine::Split { grad_art, params, opt }
             }
@@ -343,6 +347,42 @@ impl Trainer {
 
     pub fn current_step(&self) -> u64 {
         self.step
+    }
+
+    /// Save current params + optimizer state as a versioned `SM3CKPT2`
+    /// checkpoint (split mode; the fused engine's state lives inside the
+    /// artifact). Params are always f32-tagged; optimizer slots carry the
+    /// engine's storage dtype, so a `state_dtype = "q8"` run writes its
+    /// state ~4× smaller — except scalar slots (Adam's step counter `t`),
+    /// which stay f32 per the DESIGN.md §8 contract.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>)
+                           -> Result<()> {
+        let Engine::Split { params, opt, .. } = &self.engine else {
+            bail!("checkpoint save needs split mode (the fused artifact \
+                   owns its optimizer state)");
+        };
+        // params are borrowed, not cloned — only the optimizer-state
+        // tensors (already owned clones from `Optimizer::state`) need a
+        // side vec, so saving never doubles parameter memory
+        let dtype = opt.state_dtype();
+        let state: Vec<(String, Tensor, StateDtype)> = opt
+            .state()
+            .into_iter()
+            .map(|(leaf, slot, t)| {
+                let tag = if t.len() <= 1 { StateDtype::F32 } else { dtype };
+                (format!("opt/{leaf}/{slot}"), t, tag)
+            })
+            .collect();
+        let mut entries: Vec<(String, &Tensor, StateDtype)> =
+            Vec::with_capacity(params.len() + state.len());
+        for (i, t) in params.iter().enumerate() {
+            entries.push((format!("param/{}", self.meta.params[i].name), t,
+                          StateDtype::F32));
+        }
+        for (n, t, d) in &state {
+            entries.push((n.clone(), t, *d));
+        }
+        crate::checkpoint::save_v2(path, &entries)
     }
 
     /// Run the configured number of steps with periodic eval; logs curves

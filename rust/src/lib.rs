@@ -16,7 +16,9 @@
 //!   (BLEU, perplexity, accuracy), checkpointing, and the PJRT runtime
 //!   that executes the AOT artifacts. Python never runs at training time.
 //!   On the split path the per-leaf optimizer update shards across host
-//!   threads ([`optim::parallel`]) with bitwise-identical results.
+//!   threads ([`optim::parallel`]) with bitwise-identical results, and
+//!   optimizer state can be stored quantized ([`optim::qstate`]: f32,
+//!   bf16, or block-wise 8-bit) while the update arithmetic stays f32.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for measured results. This offline

@@ -30,10 +30,12 @@ fn commands() -> Vec<Command> {
             .option("exec", "execution path: split | fused")
             .option("workers", "data-parallel worker count")
             .option("step-threads", "host threads for the optimizer update (1 = serial; bitwise-identical results)")
+            .option("state-dtype", "optimizer-state storage precision: f32 | bf16 | q8 (split path)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
             .option("out", "CSV output path for the loss curve")
+            .option("save", "write final params + optimizer state here (SM3CKPT2; split path)")
             .flag("quiet", "suppress per-step output"),
         Command::new("eval", "evaluate at initialization")
             .option("model", "model key")
@@ -103,6 +105,9 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(t) = args.opt_count("step-threads")? {
         cfg.step_threads = t;
     }
+    if let Some(d) = args.opt("state-dtype") {
+        cfg.state_dtype = sm3::optim::StateDtype::parse(d)?;
+    }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;
     }
@@ -119,18 +124,26 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
 fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let quiet = args.has_flag("quiet");
+    // fail fast: a fused run cannot save (the artifact owns its optimizer
+    // state), and learning that after the full run would discard the work
+    if args.opt("save").is_some() && cfg.exec == sm3::config::ExecMode::Fused {
+        bail!("--save needs the split path (the fused artifact owns its \
+               optimizer state)");
+    }
     println!(
         "sm3-train: model={} optimizer={} exec={:?} steps={} workers={} \
-         grad_accum={} step_threads={}",
+         grad_accum={} step_threads={} state_dtype={}",
         cfg.model, cfg.optim.name, cfg.exec, cfg.steps, cfg.workers,
-        cfg.grad_accum, cfg.step_threads
+        cfg.grad_accum, cfg.step_threads, cfg.state_dtype.name()
     );
     let mut trainer = Trainer::new(cfg.clone())?;
     println!("  platform: {}", trainer.runtime().platform());
     println!("  params:   {:.2}M", trainer.meta.param_count as f64 / 1e6);
     if let Some(opt) = trainer.optimizer() {
-        println!("  opt state: {:.2}M floats ({})",
-                 opt.state_floats() as f64 / 1e6, opt.name());
+        println!("  opt state: {:.2}M floats / {:.2} MiB as {} ({})",
+                 opt.state_floats() as f64 / 1e6,
+                 opt.state_bytes() as f64 / (1024.0 * 1024.0),
+                 opt.state_dtype().name(), opt.name());
     }
     let mut logger = RunLogger::new(
         args.opt("out"), "step,loss,loss_ema,lr,wall_ms", false)?;
@@ -149,6 +162,11 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
         let metric = e.metric.map(|m| format!("  metric {m:.4}"))
             .unwrap_or_default();
         println!("  eval @ {:>6}: loss {:.4}{}", e.step, e.loss, metric);
+    }
+    if let Some(path) = args.opt("save") {
+        trainer.save_checkpoint(path)?;
+        println!("  checkpoint: {path} (params f32 + optimizer state as {})",
+                 cfg.state_dtype.name());
     }
     Ok(())
 }
@@ -169,21 +187,22 @@ fn cmd_eval(args: &sm3::cli::Args) -> Result<()> {
 }
 
 fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
+    use sm3::optim::StateDtype;
     // Table 1: Transformer-Big on TPUv2 (8 GiB/core), batch 12 & 24 per core
     let m = MemoryModel::calibrate(
         inventory::transformer_big(),
         8.0 * GIB,
         ("adam", 12, 6.88 * GIB),
         ("sm3", 24, 7.02 * GIB),
-    );
+    )?;
     println!("Table 1 — Transformer-Big (WMT'14 en→fr), GiB per TPUv2 core");
     println!("{:<12} {:>6} {:>10} {:>8}", "optimizer", "batch", "memory", "fits");
     let mut rows = Vec::new();
     for (opt, b) in [("adam", 12), ("adagrad", 12), ("adafactor", 12),
                      ("sm3", 12), ("adam", 24), ("adagrad", 24),
                      ("adafactor", 24), ("sm3", 24)] {
-        let gib = m.gib_per_core(opt, b);
-        let fits = m.fits(opt, b);
+        let gib = m.gib_per_core(opt, b)?;
+        let fits = m.fits(opt, b)?;
         println!("{opt:<12} {b:>6} {gib:>9.2} {:>8}",
                  if fits { "yes" } else { "OOM" });
         rows.push(format!("transformer_big,{opt},{b},{gib:.3},{fits}"));
@@ -194,14 +213,29 @@ fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
         8.0 * GIB,
         ("adam", 8, 6.15 * GIB),
         ("sm3", 16, 6.02 * GIB),
-    );
+    )?;
     println!("\nTable 2 — BERT-Large, GiB per TPUv2 core");
     for (opt, b) in [("adam", 8), ("sm3", 8), ("sm3", 16), ("adam", 16)] {
-        let gib = bert.gib_per_core(opt, b);
-        let fits = bert.fits(opt, b);
+        let gib = bert.gib_per_core(opt, b)?;
+        let fits = bert.fits(opt, b)?;
         println!("{opt:<12} {b:>6} {gib:>9.2} {:>8}",
                  if fits { "yes" } else { "OOM" });
         rows.push(format!("bert_large,{opt},{b},{gib:.3},{fits}"));
+    }
+    // Past the paper: the max-batch frontier with quantized optimizer
+    // state (optim::qstate; --state-dtype on the train command)
+    println!("\nQuantized-state max batch/core (8 GiB TPUv2)");
+    println!("{:<16} {:<12} {:>6} {:>6} {:>6}",
+             "model", "optimizer", "f32", "bf16", "q8");
+    for (model, mm) in [("transformer_big", &m), ("bert_large", &bert)] {
+        for opt in ["adam", "adagrad", "adafactor", "sm3"] {
+            let mut cells = Vec::new();
+            for dtype in StateDtype::ALL {
+                cells.push(mm.max_batch_dtype(opt, dtype)?);
+            }
+            println!("{model:<16} {opt:<12} {:>6} {:>6} {:>6}",
+                     cells[0], cells[1], cells[2]);
+        }
     }
     if let Some(path) = args.opt("out") {
         let mut logger = RunLogger::new(

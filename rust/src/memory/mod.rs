@@ -1,4 +1,5 @@
-//! The memory accountant — reproduces the paper's Tables 1 and 2.
+//! The memory accountant — reproduces the paper's Tables 1 and 2, and
+//! extends them past the paper with quantized-state columns.
 //!
 //! Per-core training memory is modeled as
 //!
@@ -6,69 +7,126 @@
 //! bytes/core = overhead                      (runtime + program constants)
 //!            + 4·P/cores_model               (fp32 parameters, replicated*)
 //!            + 4·P/cores_model               (fp32 gradients)
-//!            + 4·S_opt/cores_model           (optimizer slots — the paper's term)
+//!            + B(dtype)·S_opt/cores_model    (optimizer slots — the paper's
+//!                                            term; B(f32) = 4)
 //!            + A·batch_per_core              (activations, per example)
 //! ```
 //!
-//! The optimizer-slot arithmetic `S_opt` is *exact* (same code as the
-//! optimizer bank, cross-checked in tests); `overhead` and the per-example
-//! activation cost `A` are calibrated once against two published cells of
-//! Table 1 (Adam@384 and SM3@768) and then *predict* the remaining cells
-//! and all of Table 2. What the tables demonstrate — who fits, who OOMs,
-//! and the gap between Adam/Adagrad and Adafactor/SM3 — is driven entirely
-//! by the exact slot arithmetic.
+//! The optimizer-slot arithmetic `S_opt` is *exact* (same slot layout as
+//! the optimizer bank, cross-checked in tests); `overhead` and the
+//! per-example activation cost `A` are calibrated once against two
+//! published cells of Table 1 (Adam@384 and SM3@768) and then *predict*
+//! the remaining cells and all of Table 2. Calibration always runs at
+//! f32 — the published cells are f32 runs — so the f32 columns are
+//! unchanged by the qstate subsystem and the bf16/q8 columns (and their
+//! recomputed max-batch frontier) are pure predictions past the paper.
 //!
 //! (*) the paper's runs are data-parallel: parameters are replicated per
 //! core, so `cores_model = 1`.
 
 pub mod inventory;
 
-use crate::optim::ParamSpec;
+use crate::optim::{ParamSpec, StateDtype};
+use anyhow::{bail, Result};
 
 pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
-/// Exact optimizer-state scalar count for a parameter inventory —
-/// the static mirror of `Optimizer::state_floats`.
-pub fn opt_state_floats(opt: &str, specs: &[ParamSpec]) -> usize {
-    let d: usize = specs.iter().map(ParamSpec::numel).sum();
-    match opt {
-        // m + v
-        "adam" => 2 * d,
-        // γ + momentum
-        "adagrad" => 2 * d,
-        // momentum only
-        "sgdm" => d,
-        // co-dim-1 slice accumulators + momentum
-        "sm3" | "sm3i" => {
-            let covers: usize = specs
-                .iter()
-                .map(|s| {
+/// Storage bytes per optimizer-state scalar at `dtype` (amortized; the
+/// table arithmetic below uses the exact per-slot-vector accounting).
+pub fn bytes_per_slot(dtype: StateDtype) -> f64 {
+    dtype.bytes_per_slot()
+}
+
+/// The slot-vector layout of one optimizer over an inventory: lengths of
+/// every second-moment vector and every momentum vector, mirroring
+/// exactly how the live optimizer bank partitions its `QuantizedSlots`
+/// store (one q8 block sequence per vector — partial trailing blocks
+/// make per-vector granularity matter for exact byte accounting).
+pub struct SlotLayout {
+    /// second-moment statistics vectors (γ / v / covers / factored stats)
+    pub second_moment: Vec<usize>,
+    /// momentum vectors (and Adam's first moment)
+    pub momentum: Vec<usize>,
+}
+
+impl SlotLayout {
+    /// Slot-vector layout for a registry optimizer. Errors on unknown
+    /// names so config typos surface as messages, not panics.
+    pub fn for_optimizer(opt: &str, specs: &[ParamSpec]) -> Result<Self> {
+        let moms = |specs: &[ParamSpec]| -> Vec<usize> {
+            specs.iter().map(ParamSpec::numel).collect()
+        };
+        Ok(match opt {
+            // m + v, both elementwise
+            "adam" => Self { second_moment: moms(specs),
+                             momentum: moms(specs) },
+            // elementwise γ + momentum
+            "adagrad" => Self { second_moment: moms(specs),
+                                momentum: moms(specs) },
+            // momentum only
+            "sgdm" => Self { second_moment: Vec::new(),
+                             momentum: moms(specs) },
+            // co-dim-1 slice accumulators (per axis) + momentum
+            "sm3" | "sm3i" => {
+                let mut sm = Vec::new();
+                for s in specs {
                     if s.shape.len() <= 1 {
-                        s.numel() // singleton cover == full vector
+                        sm.push(s.numel()); // singleton cover == full vector
                     } else {
-                        s.shape.iter().sum()
+                        sm.extend(s.shape.iter().copied());
                     }
-                })
-                .sum();
-            covers + d
-        }
-        // factored row/col stats (full for vectors) + momentum
-        "adafactor" => {
-            let stats: usize = specs
-                .iter()
-                .map(|s| {
+                }
+                Self { second_moment: sm, momentum: moms(specs) }
+            }
+            // factored row/col stats (full for vectors) + momentum
+            "adafactor" => {
+                let mut sm = Vec::new();
+                for s in specs {
                     if s.shape.len() >= 2 {
                         let cols = *s.shape.last().unwrap();
-                        s.numel() / cols + cols
+                        sm.push(s.numel() / cols);
+                        sm.push(cols);
                     } else {
-                        s.numel()
+                        sm.push(s.numel());
                     }
-                })
-                .sum();
-            stats + d
-        }
-        other => panic!("unknown optimizer {other}"),
+                }
+                Self { second_moment: sm, momentum: moms(specs) }
+            }
+            other => bail!("unknown optimizer {other:?} in the memory \
+                            accountant (known: {:?})", crate::optim::ALL),
+        })
     }
+
+    pub fn total_floats(&self) -> usize {
+        self.second_moment.iter().sum::<usize>()
+            + self.momentum.iter().sum::<usize>()
+    }
+
+    pub fn total_bytes(&self, dtype: StateDtype) -> usize {
+        self.second_moment_bytes(dtype)
+            + self.momentum.iter().map(|&n| dtype.bytes_for(n)).sum::<usize>()
+    }
+
+    pub fn second_moment_floats(&self) -> usize {
+        self.second_moment.iter().sum()
+    }
+
+    pub fn second_moment_bytes(&self, dtype: StateDtype) -> usize {
+        self.second_moment.iter().map(|&n| dtype.bytes_for(n)).sum()
+    }
+}
+
+/// Exact optimizer-state scalar count for a parameter inventory —
+/// the static mirror of `Optimizer::state_floats`.
+pub fn opt_state_floats(opt: &str, specs: &[ParamSpec]) -> Result<usize> {
+    Ok(SlotLayout::for_optimizer(opt, specs)?.total_floats())
+}
+
+/// Exact optimizer-state storage bytes at `dtype` — the static mirror of
+/// `Optimizer::state_bytes` (per-slot-vector q8 block accounting).
+pub fn opt_state_bytes(opt: &str, specs: &[ParamSpec],
+                       dtype: StateDtype) -> Result<usize> {
+    Ok(SlotLayout::for_optimizer(opt, specs)?.total_bytes(dtype))
 }
 
 /// Calibrated activation/overhead model for one hardware+model setting.
@@ -85,56 +143,79 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
-    /// Per-core usage in bytes for `opt` at `batch_per_core`.
-    pub fn bytes_per_core(&self, opt: &str, batch_per_core: usize) -> f64 {
+    /// Per-core usage in bytes for `opt` at `batch_per_core`, f32 state.
+    pub fn bytes_per_core(&self, opt: &str,
+                          batch_per_core: usize) -> Result<f64> {
+        self.bytes_per_core_dtype(opt, batch_per_core, StateDtype::F32)
+    }
+
+    /// Per-core usage with the optimizer slots stored at `dtype`
+    /// (params/grads/activations stay f32 — only the qstate store
+    /// changes precision).
+    pub fn bytes_per_core_dtype(&self, opt: &str, batch_per_core: usize,
+                                dtype: StateDtype) -> Result<f64> {
         let p: usize = self.specs.iter().map(ParamSpec::numel).sum();
-        let slots = opt_state_floats(opt, &self.specs);
-        self.overhead
+        let slot_bytes = opt_state_bytes(opt, &self.specs, dtype)?;
+        Ok(self.overhead
             + 4.0 * p as f64          // params
             + 4.0 * p as f64          // grads
-            + 4.0 * slots as f64      // optimizer state
-            + self.act_per_example * batch_per_core as f64
+            + slot_bytes as f64       // optimizer state
+            + self.act_per_example * batch_per_core as f64)
     }
 
-    pub fn gib_per_core(&self, opt: &str, batch_per_core: usize) -> f64 {
-        self.bytes_per_core(opt, batch_per_core) / GIB
+    pub fn gib_per_core(&self, opt: &str,
+                        batch_per_core: usize) -> Result<f64> {
+        Ok(self.bytes_per_core(opt, batch_per_core)? / GIB)
     }
 
-    /// Does (optimizer, batch/core) fit on the device?
-    pub fn fits(&self, opt: &str, batch_per_core: usize) -> bool {
-        self.bytes_per_core(opt, batch_per_core) <= self.core_limit
+    pub fn gib_per_core_dtype(&self, opt: &str, batch_per_core: usize,
+                              dtype: StateDtype) -> Result<f64> {
+        Ok(self.bytes_per_core_dtype(opt, batch_per_core, dtype)? / GIB)
     }
 
-    /// Largest batch/core that fits (0 if even batch 1 does not).
-    pub fn max_batch(&self, opt: &str) -> usize {
-        let fixed = self.bytes_per_core(opt, 0);
+    /// Does (optimizer, batch/core) fit on the device? (f32 state)
+    pub fn fits(&self, opt: &str, batch_per_core: usize) -> Result<bool> {
+        Ok(self.bytes_per_core(opt, batch_per_core)? <= self.core_limit)
+    }
+
+    /// Largest batch/core that fits (0 if even batch 1 does not), f32.
+    pub fn max_batch(&self, opt: &str) -> Result<usize> {
+        self.max_batch_dtype(opt, StateDtype::F32)
+    }
+
+    /// Largest batch/core that fits with quantized optimizer state — the
+    /// frontier the qstate subsystem moves (bench_memory reports it).
+    pub fn max_batch_dtype(&self, opt: &str,
+                           dtype: StateDtype) -> Result<usize> {
+        let fixed = self.bytes_per_core_dtype(opt, 0, dtype)?;
         if fixed > self.core_limit {
-            return 0;
+            return Ok(0);
         }
-        ((self.core_limit - fixed) / self.act_per_example) as usize
+        Ok(((self.core_limit - fixed) / self.act_per_example) as usize)
     }
 
     /// Calibrate (overhead, act_per_example) from two published cells
     /// `(opt, batch_per_core, observed_bytes)` — a 2×2 linear solve.
+    /// Calibration is always against f32-state runs (the published ones).
     pub fn calibrate(
         specs: Vec<ParamSpec>,
         core_limit: f64,
         cell_a: (&str, usize, f64),
         cell_b: (&str, usize, f64),
-    ) -> Self {
+    ) -> Result<Self> {
         let p: usize = specs.iter().map(ParamSpec::numel).sum();
-        let fixed = |opt: &str| {
-            4.0 * p as f64 * 2.0
-                + 4.0 * opt_state_floats(opt, &specs) as f64
-        };
         let (oa, ba, ya) = cell_a;
         let (ob, bb, yb) = cell_b;
-        let ra = ya - fixed(oa);
-        let rb = yb - fixed(ob);
+        let fixed_a = 8.0 * p as f64
+            + 4.0 * opt_state_floats(oa, &specs)? as f64;
+        let fixed_b = 8.0 * p as f64
+            + 4.0 * opt_state_floats(ob, &specs)? as f64;
+        let ra = ya - fixed_a;
+        let rb = yb - fixed_b;
         // ra = overhead + A·ba ; rb = overhead + A·bb
         let act = (rb - ra) / (bb as f64 - ba as f64);
         let overhead = ra - act * ba as f64;
-        Self { specs, overhead, act_per_example: act, core_limit }
+        Ok(Self { specs, overhead, act_per_example: act, core_limit })
     }
 }
 
@@ -144,9 +225,11 @@ mod tests {
     use super::*;
     use crate::optim;
 
-    /// The static arithmetic must agree with the live optimizer bank.
+    /// The static arithmetic must agree with the live optimizer bank —
+    /// both the scalar counts and the per-dtype byte accounting (the
+    /// latter checks the per-slot-vector q8 block partitioning).
     #[test]
-    fn static_matches_dynamic_state_floats() {
+    fn static_matches_dynamic_state_floats_and_bytes() {
         let specs = vec![
             ParamSpec::new("emb", &[100, 16]),
             ParamSpec::new("w", &[16, 64]),
@@ -154,19 +237,44 @@ mod tests {
             ParamSpec::new("conv", &[3, 3, 4, 8]),
         ];
         for name in optim::ALL {
-            let opt = optim::build(name, &specs, 0.9, 0.98).unwrap();
-            assert_eq!(opt_state_floats(name, &specs), opt.state_floats(),
-                       "{name}");
+            for dtype in StateDtype::ALL {
+                let opt = optim::build_with_dtype(name, &specs, 0.9, 0.98,
+                                                  dtype).unwrap();
+                assert_eq!(opt_state_floats(name, &specs).unwrap(),
+                           opt.state_floats(), "{name}");
+                assert_eq!(opt_state_bytes(name, &specs, dtype).unwrap(),
+                           opt.state_bytes(), "{name} @ {dtype:?}");
+            }
         }
+    }
+
+    #[test]
+    fn unknown_optimizer_is_an_error_not_a_panic() {
+        let specs = vec![ParamSpec::new("w", &[4])];
+        let err = opt_state_floats("adamw", &specs).unwrap_err();
+        assert!(err.to_string().contains("adamw"), "{err}");
+        // and it propagates through the model methods
+        let m = MemoryModel {
+            specs,
+            overhead: 0.0,
+            act_per_example: 1.0,
+            core_limit: GIB,
+        };
+        assert!(m.bytes_per_core("adamw", 1).is_err());
+        assert!(m.fits("adamw", 1).is_err());
+        assert!(m.max_batch("adamw").is_err());
+        assert!(MemoryModel::calibrate(
+            vec![ParamSpec::new("w", &[4])], GIB,
+            ("nope", 1, GIB), ("sm3", 2, GIB)).is_err());
     }
 
     #[test]
     fn sm3_is_the_smallest_adaptive_state() {
         let specs = inventory::transformer_big();
-        let sm3 = opt_state_floats("sm3", &specs);
-        let ada = opt_state_floats("adagrad", &specs);
-        let adam = opt_state_floats("adam", &specs);
-        let af = opt_state_floats("adafactor", &specs);
+        let sm3 = opt_state_floats("sm3", &specs).unwrap();
+        let ada = opt_state_floats("adagrad", &specs).unwrap();
+        let adam = opt_state_floats("adam", &specs).unwrap();
+        let af = opt_state_floats("adafactor", &specs).unwrap();
         // SM3 ≤ Adafactor: for matrices both keep rows+cols (+ momentum);
         // the paper's 0.07 GiB gap between them is framework overhead noise
         assert!(sm3 <= af, "sm3 {sm3} <= adafactor {af}");
@@ -186,21 +294,21 @@ mod tests {
             8.0 * GIB,
             ("adam", 12, 6.88 * GIB),
             ("sm3", 24, 7.02 * GIB),
-        );
+        ).unwrap();
         // predicted cells, paper values in comments
-        let adagrad12 = m.gib_per_core("adagrad", 12);   // 6.85
-        let adafactor12 = m.gib_per_core("adafactor", 12); // 5.43
-        let sm3_12 = m.gib_per_core("sm3", 12);          // 5.36
-        let adafactor24 = m.gib_per_core("adafactor", 24); // 7.04
+        let adagrad12 = m.gib_per_core("adagrad", 12).unwrap();   // 6.85
+        let adafactor12 = m.gib_per_core("adafactor", 12).unwrap(); // 5.43
+        let sm3_12 = m.gib_per_core("sm3", 12).unwrap();          // 5.36
+        let adafactor24 = m.gib_per_core("adafactor", 24).unwrap(); // 7.04
         assert!((adagrad12 - 6.85).abs() < 0.15, "adagrad@12 {adagrad12}");
         assert!((adafactor12 - 5.43).abs() < 0.25, "adafactor@12 {adafactor12}");
         assert!((sm3_12 - 5.36).abs() < 0.25, "sm3@12 {sm3_12}");
         assert!((adafactor24 - 7.04).abs() < 0.25, "adafactor@24 {adafactor24}");
         // the qualitative claim: Adam/Adagrad OOM at 24/core, SM3/Adafactor fit
-        assert!(m.fits("sm3", 24));
-        assert!(m.fits("adafactor", 24));
-        assert!(!m.fits("adam", 24));
-        assert!(!m.fits("adagrad", 24));
+        assert!(m.fits("sm3", 24).unwrap());
+        assert!(m.fits("adafactor", 24).unwrap());
+        assert!(!m.fits("adam", 24).unwrap());
+        assert!(!m.fits("adagrad", 24).unwrap());
     }
 
     #[test]
@@ -210,14 +318,59 @@ mod tests {
             8.0 * GIB,
             ("adam", 12, 6.88 * GIB),
             ("sm3", 24, 7.02 * GIB),
-        );
-        let adam_max = m.max_batch("adam");
-        let sm3_max = m.max_batch("sm3");
+        ).unwrap();
+        let adam_max = m.max_batch("adam").unwrap();
+        let sm3_max = m.max_batch("sm3").unwrap();
         // the paper doubles 12 → 24; our calibrated activation model puts
         // Adam's ceiling at ~20 and SM3's at ~31 — SM3 fits 24, Adam not
         assert!(sm3_max >= 24, "sm3 {sm3_max}");
         assert!(adam_max < 24, "adam {adam_max}");
         assert!(sm3_max as f64 >= 1.5 * adam_max as f64,
                 "sm3 {sm3_max} vs adam {adam_max}");
+    }
+
+    /// The qstate acceptance lines: f32 cells are unchanged by the dtype
+    /// plumbing, and q8 cuts second-moment bytes ≥ 3.5× on the real
+    /// Transformer-Big inventory while raising the max-batch frontier.
+    #[test]
+    fn quantized_columns_extend_the_frontier() {
+        // amortized per-scalar accounting agrees with the headline claim…
+        assert_eq!(bytes_per_slot(StateDtype::F32), 4.0);
+        assert!(bytes_per_slot(StateDtype::F32)
+                / bytes_per_slot(StateDtype::Q8) >= 3.5);
+        // …and the exact per-slot-vector arithmetic below refines it
+        let specs = inventory::transformer_big();
+        // f32 via the dtype path == the legacy 4·floats arithmetic
+        for opt in ["adam", "adagrad", "adafactor", "sm3", "sgdm"] {
+            let floats = opt_state_floats(opt, &specs).unwrap();
+            let f32_bytes =
+                opt_state_bytes(opt, &specs, StateDtype::F32).unwrap();
+            assert_eq!(f32_bytes, 4 * floats, "{opt}");
+        }
+        // q8 second-moment reduction on Transformer-Big
+        for opt in ["adam", "adagrad", "sm3", "adafactor"] {
+            let layout = SlotLayout::for_optimizer(opt, &specs).unwrap();
+            let f32_sm = layout.second_moment_bytes(StateDtype::F32);
+            let q8_sm = layout.second_moment_bytes(StateDtype::Q8);
+            let red = f32_sm as f64 / q8_sm as f64;
+            assert!(red >= 3.5, "{opt}: second-moment reduction {red}");
+        }
+        // the frontier moves: quantized Adam state buys strictly larger
+        // max batch than f32 Adam state under the calibrated Table 1 model
+        let m = MemoryModel::calibrate(
+            specs,
+            8.0 * GIB,
+            ("adam", 12, 6.88 * GIB),
+            ("sm3", 24, 7.02 * GIB),
+        ).unwrap();
+        let f32_max = m.max_batch_dtype("adam", StateDtype::F32).unwrap();
+        let q8_max = m.max_batch_dtype("adam", StateDtype::Q8).unwrap();
+        let bf16_max = m.max_batch_dtype("adam", StateDtype::Bf16).unwrap();
+        assert!(q8_max > bf16_max && bf16_max > f32_max,
+                "frontier must move: f32 {f32_max}, bf16 {bf16_max}, \
+                 q8 {q8_max}");
+        // q8 Adam state (~2.8 GiB saved on 375M params) clears the
+        // paper's doubled batch
+        assert!(q8_max >= 24, "q8 adam max batch {q8_max}");
     }
 }

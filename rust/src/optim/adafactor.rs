@@ -8,46 +8,75 @@
 //! (the reference implementation's d=1.0) and β1 momentum, matching the
 //! paper's experimental setup (all methods run with momentum).
 
+use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
 const EPS: f32 = 1e-30;
 
-enum Slot {
-    Factored { vr: Vec<f32>, vc: Vec<f32>, rows: usize, cols: usize },
-    Full { v: Vec<f32> },
+/// Second-moment layout of one leaf; fields are slot ids in the store.
+#[derive(Clone, Copy)]
+enum SlotKind {
+    Factored { vr: usize, vc: usize, rows: usize, cols: usize },
+    Full { v: usize },
+}
+
+impl SlotKind {
+    /// Human-readable kind for mismatch diagnostics.
+    fn describe(&self) -> String {
+        match self {
+            SlotKind::Factored { rows, cols, .. } => {
+                format!("factored (vr[{rows}], vc[{cols}])")
+            }
+            SlotKind::Full { .. } => "full elementwise v".to_string(),
+        }
+    }
 }
 
 pub struct Adafactor {
     beta1: f32,
     beta2: f32,
-    slots: Vec<Slot>,
-    mom: Vec<Tensor>,
+    kinds: Vec<SlotKind>,
+    /// momentum slot id per leaf
+    mom_ids: Vec<usize>,
+    store: QuantizedSlots,
+    specs: Vec<ParamSpec>,
     /// scratch buffer for the unclipped update (reused across leaves)
     scratch: Vec<f32>,
 }
 
 impl Adafactor {
     pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32) -> Self {
-        let slots = specs
-            .iter()
-            .map(|s| {
-                if s.shape.len() >= 2 {
-                    let cols = *s.shape.last().unwrap();
-                    let rows = s.numel() / cols;
-                    Slot::Factored { vr: vec![0.0; rows], vc: vec![0.0; cols],
-                                     rows, cols }
-                } else {
-                    Slot::Full { v: vec![0.0; s.numel()] }
-                }
-            })
-            .collect();
-        Self {
-            beta1,
-            beta2,
-            slots,
-            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
-            scratch: Vec::new(),
+        Self::with_dtype(specs, beta1, beta2, StateDtype::F32)
+    }
+
+    pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32,
+                      dtype: StateDtype) -> Self {
+        let mut store = QuantizedSlots::new(dtype);
+        let mut kinds = Vec::with_capacity(specs.len());
+        let mut mom_ids = Vec::with_capacity(specs.len());
+        for s in specs {
+            if s.shape.len() >= 2 {
+                let cols = *s.shape.last().unwrap();
+                let rows = s.numel() / cols;
+                let vr = store.add_zeros(rows);
+                let vc = store.add_zeros(cols);
+                kinds.push(SlotKind::Factored { vr, vc, rows, cols });
+            } else {
+                let v = store.add_zeros(s.numel());
+                kinds.push(SlotKind::Full { v });
+            }
+            mom_ids.push(store.add_zeros(s.numel()));
+        }
+        Self { beta1, beta2, kinds, mom_ids, store,
+               specs: specs.to_vec(), scratch: Vec::new() }
+    }
+
+    /// (rows, cols) of a factored leaf, `None` for a full-v leaf (tests).
+    pub fn factored_dims(&self, idx: usize) -> Option<(usize, usize)> {
+        match self.kinds[idx] {
+            SlotKind::Factored { rows, cols, .. } => Some((rows, cols)),
+            SlotKind::Full { .. } => None,
         }
     }
 }
@@ -59,13 +88,21 @@ impl Optimizer for Adafactor {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let (b1, b2) = (self.beta1, self.beta2);
+        let mut mom = Vec::new();
+        let mut stat_a = Vec::new();
+        let mut stat_b = Vec::new();
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            let mom = self.mom[idx].data_mut();
-            match &mut self.slots[idx] {
-                Slot::Factored { vr, vc, rows, cols } => {
-                    let (m, n) = (*rows, *cols);
+            self.store.read_into(self.mom_ids[idx], &mut mom);
+            let kind = self.kinds[idx];
+            match kind {
+                SlotKind::Factored { vr: vr_id, vc: vc_id, rows, cols } => {
+                    let (m, n) = (rows, cols);
+                    self.store.read_into(vr_id, &mut stat_a);
+                    self.store.read_into(vc_id, &mut stat_b);
+                    let vr = &mut stat_a;
+                    let vc = &mut stat_b;
                     // update factored stats: row/col means of g² + eps
                     for i in 0..m {
                         let mut s = 0.0f32;
@@ -104,8 +141,12 @@ impl Optimizer for Adafactor {
                         mom[k] = b1 * mom[k] + (1.0 - b1) * u;
                         wd[k] -= lr * mom[k];
                     }
+                    self.store.write(vr_id, vr);
+                    self.store.write(vc_id, vc);
                 }
-                Slot::Full { v } => {
+                SlotKind::Full { v: v_id } => {
+                    self.store.read_into(v_id, &mut stat_a);
+                    let v = &mut stat_a;
                     self.scratch.clear();
                     self.scratch.resize(wd.len(), 0.0);
                     let mut sumsq = 0.0f32;
@@ -122,8 +163,10 @@ impl Optimizer for Adafactor {
                         mom[k] = b1 * mom[k] + (1.0 - b1) * u;
                         wd[k] -= lr * mom[k];
                     }
+                    self.store.write(v_id, v);
                 }
             }
+            self.store.write(self.mom_ids[idx], &mom);
         }
         // Release the scratch between steps: the resize above zero-fills
         // either way, so retained capacity buys nothing, and ParallelStep
@@ -134,49 +177,83 @@ impl Optimizer for Adafactor {
     }
 
     fn state_floats(&self) -> usize {
-        let stats: usize = self
-            .slots
-            .iter()
-            .map(|s| match s {
-                Slot::Factored { vr, vc, .. } => vr.len() + vc.len(),
-                Slot::Full { v } => v.len(),
-            })
-            .sum();
-        stats + self.mom.iter().map(Tensor::len).sum::<usize>()
+        self.store.state_floats()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.store.state_bytes()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.store.dtype()
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
         let mut out = Vec::new();
-        for (i, s) in self.slots.iter().enumerate() {
-            match s {
-                Slot::Factored { vr, vc, .. } => {
-                    out.push((i, "vr", Tensor::from_vec(&[vr.len()], vr.clone())));
-                    out.push((i, "vc", Tensor::from_vec(&[vc.len()], vc.clone())));
+        for (i, kind) in self.kinds.iter().enumerate() {
+            match *kind {
+                SlotKind::Factored { vr, vc, rows, cols } => {
+                    out.push((i, "vr", Tensor::from_vec(
+                        &[rows], self.store.to_vec(vr))));
+                    out.push((i, "vc", Tensor::from_vec(
+                        &[cols], self.store.to_vec(vc))));
                 }
-                Slot::Full { v } => {
-                    out.push((i, "v", Tensor::from_vec(&[v.len()], v.clone())));
+                SlotKind::Full { v } => {
+                    out.push((i, "v", Tensor::from_vec(
+                        &[self.store.slot_len(v)], self.store.to_vec(v))));
                 }
             }
-            out.push((i, "mom", self.mom[i].clone()));
+            out.push((i, "mom", Tensor::from_vec(
+                &self.specs[i].shape, self.store.to_vec(self.mom_ids[i]))));
         }
         out
     }
 
     fn load_state(&mut self, state: Vec<Tensor>) {
+        // Mismatch diagnostics name the leaf and its slot kind: a restore
+        // from a checkpoint written for a different parameter folding
+        // (e.g. a rank-3 leaf saved full-v but expected factored) must say
+        // *which* leaf and *what* layout was expected, not just "underrun".
+        fn take(it: &mut std::vec::IntoIter<Tensor>, leaf: &str,
+                slot: &str, kind: &str, want: usize) -> Tensor {
+            let t = it.next().unwrap_or_else(|| {
+                panic!("adafactor state underrun at leaf {leaf:?} slot \
+                        {slot:?} (leaf layout: {kind})")
+            });
+            assert_eq!(t.len(), want,
+                       "adafactor leaf {leaf:?} slot {slot:?}: checkpoint \
+                        tensor has {} elements, expected {want} (leaf \
+                        layout: {kind})",
+                       t.len());
+            t
+        }
         let mut it = state.into_iter();
-        for (i, s) in self.slots.iter_mut().enumerate() {
-            match s {
-                Slot::Factored { vr, vc, .. } => {
-                    vr.copy_from_slice(it.next().expect("underrun").data());
-                    vc.copy_from_slice(it.next().expect("underrun").data());
+        for i in 0..self.kinds.len() {
+            let kind = self.kinds[i];
+            let leaf = self.specs[i].name.clone();
+            let expect = kind.describe();
+            match kind {
+                SlotKind::Factored { vr, vc, rows, cols } => {
+                    let tr = take(&mut it, &leaf, "vr", &expect, rows);
+                    let tc = take(&mut it, &leaf, "vc", &expect, cols);
+                    self.store.write(vr, tr.data());
+                    self.store.write(vc, tc.data());
                 }
-                Slot::Full { v } => {
-                    v.copy_from_slice(it.next().expect("underrun").data());
+                SlotKind::Full { v } => {
+                    let n = self.store.slot_len(v);
+                    let tv = take(&mut it, &leaf, "v", &expect, n);
+                    self.store.write(v, tv.data());
                 }
             }
-            self.mom[i] = it.next().expect("underrun");
+            let tm = take(&mut it, &leaf, "mom", &expect,
+                          self.specs[i].numel());
+            assert_eq!(tm.shape(), self.specs[i].shape.as_slice(),
+                       "adafactor leaf {leaf:?} momentum: checkpoint shape \
+                        {:?} != parameter shape {:?} (leaf layout: {expect})",
+                       tm.shape(), self.specs[i].shape);
+            self.store.write(self.mom_ids[i], tm.data());
         }
-        assert!(it.next().is_none());
+        assert!(it.next().is_none(), "adafactor state overrun");
     }
 }
 
@@ -210,11 +287,52 @@ mod tests {
     fn rank3_is_folded_to_matrix() {
         let specs = vec![ParamSpec::new("conv", &[3, 3, 8])];
         let opt = Adafactor::new(&specs, 0.9, 0.98);
-        match &opt.slots[0] {
-            Slot::Factored { rows, cols, .. } => {
-                assert_eq!((*rows, *cols), (9, 8));
+        assert_eq!(opt.factored_dims(0), Some((9, 8)),
+                   "leaf \"conv\" must fold to a (9, 8) factored slot");
+        let specs = vec![ParamSpec::new("b", &[8])];
+        let opt = Adafactor::new(&specs, 0.9, 0.98);
+        assert_eq!(opt.factored_dims(0), None);
+    }
+
+    /// Regression (ISSUE 2 satellite): a mismatched restore must name the
+    /// offending leaf and its expected slot layout, so a checkpoint saved
+    /// for a different folding is diagnosable.
+    #[test]
+    #[should_panic(expected = "leaf \"enc0/ffn_w1\" slot \"vr\"")]
+    fn load_state_mismatch_names_leaf_and_kind() {
+        let specs = vec![ParamSpec::new("enc0/ffn_w1", &[6, 4])];
+        let mut opt = Adafactor::new(&specs, 0.9, 0.98);
+        // a full-v style state (one 24-elem v + mom) where factored
+        // (vr[6], vc[4], mom) is expected
+        let bad = vec![Tensor::zeros(&[24]), Tensor::zeros(&[6, 4])];
+        opt.load_state(bad);
+    }
+
+    #[test]
+    fn state_roundtrip_all_dtypes() {
+        let specs = vec![ParamSpec::new("w", &[5, 7]),
+                         ParamSpec::new("b", &[7])];
+        for dtype in StateDtype::ALL {
+            let mut opt = Adafactor::with_dtype(&specs, 0.9, 0.98, dtype);
+            let mut rng = Rng::new(11);
+            let mut params: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            for _ in 0..3 {
+                let grads: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                    .collect();
+                opt.step(&mut params, &grads, 0.1);
             }
-            _ => panic!("expected factored slot"),
+            let saved: Vec<Tensor> =
+                opt.state().into_iter().map(|(_, _, t)| t).collect();
+            let mut fresh = Adafactor::with_dtype(&specs, 0.9, 0.98, dtype);
+            fresh.load_state(saved.clone());
+            let restored: Vec<Tensor> =
+                fresh.state().into_iter().map(|(_, _, t)| t).collect();
+            assert_eq!(saved, restored, "{dtype:?}");
         }
     }
 }

@@ -1,28 +1,37 @@
 //! Adagrad (Duchi, Hazan & Singer) with heavy-ball momentum — the
 //! linear-memory method SM3 is measured against (paper Eq. 1–2).
 
+use super::qstate::{QuantizedSlots, StateDtype};
 use super::{safe_rsqrt, Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
 pub struct Adagrad {
     beta1: f32,
-    /// per-parameter elementwise accumulator γ (Eq. 1)
-    acc: Vec<Tensor>,
-    mom: Vec<Tensor>,
+    /// leaf `i`: slot `2i` is the elementwise accumulator γ (Eq. 1),
+    /// slot `2i + 1` is the momentum
+    slots: QuantizedSlots,
+    specs: Vec<ParamSpec>,
 }
 
 impl Adagrad {
     pub fn new(specs: &[ParamSpec], beta1: f32) -> Self {
-        Self {
-            beta1,
-            acc: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
-            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
-        }
+        Self::with_dtype(specs, beta1, StateDtype::F32)
     }
 
-    /// The full elementwise second-moment statistics γ_t (Fig. 1 / Fig. 5).
-    pub fn accumulator(&self, idx: usize) -> &Tensor {
-        &self.acc[idx]
+    pub fn with_dtype(specs: &[ParamSpec], beta1: f32,
+                      dtype: StateDtype) -> Self {
+        let mut slots = QuantizedSlots::new(dtype);
+        for s in specs {
+            slots.add_zeros(s.numel()); // acc
+            slots.add_zeros(s.numel()); // mom
+        }
+        Self { beta1, slots, specs: specs.to_vec() }
+    }
+
+    /// The full elementwise second-moment statistics γ_t (Fig. 1 / Fig. 5),
+    /// dequantized to f32.
+    pub fn accumulator(&self, idx: usize) -> Tensor {
+        Tensor::from_vec(&self.specs[idx].shape, self.slots.to_vec(2 * idx))
     }
 }
 
@@ -33,11 +42,12 @@ impl Optimizer for Adagrad {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let beta1 = self.beta1;
+        let (mut acc, mut mom) = (Vec::new(), Vec::new());
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            let acc = self.acc[idx].data_mut();
-            let mom = self.mom[idx].data_mut();
+            self.slots.read_into(2 * idx, &mut acc);
+            self.slots.read_into(2 * idx + 1, &mut mom);
             for k in 0..wd.len() {
                 let nu = acc[k] + gd[k] * gd[k];
                 let upd = gd[k] * safe_rsqrt(nu);
@@ -45,28 +55,43 @@ impl Optimizer for Adagrad {
                 wd[k] -= lr * mom[k];
                 acc[k] = nu;
             }
+            self.slots.write(2 * idx, &acc);
+            self.slots.write(2 * idx + 1, &mom);
         }
     }
 
     fn state_floats(&self) -> usize {
-        self.acc.iter().map(Tensor::len).sum::<usize>()
-            + self.mom.iter().map(Tensor::len).sum::<usize>()
+        self.slots.state_floats()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.state_bytes()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.slots.dtype()
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
         let mut out = Vec::new();
-        for i in 0..self.acc.len() {
-            out.push((i, "acc", self.acc[i].clone()));
-            out.push((i, "mom", self.mom[i].clone()));
+        for (i, s) in self.specs.iter().enumerate() {
+            out.push((i, "acc",
+                      Tensor::from_vec(&s.shape, self.slots.to_vec(2 * i))));
+            out.push((i, "mom",
+                      Tensor::from_vec(&s.shape,
+                                       self.slots.to_vec(2 * i + 1))));
         }
         out
     }
 
     fn load_state(&mut self, state: Vec<Tensor>) {
         let mut it = state.into_iter();
-        for i in 0..self.acc.len() {
-            self.acc[i] = it.next().expect("state underrun");
-            self.mom[i] = it.next().expect("state underrun");
+        for (i, s) in self.specs.iter().enumerate() {
+            for slot in [2 * i, 2 * i + 1] {
+                let t = it.next().expect("state underrun");
+                assert_eq!(t.shape(), s.shape.as_slice());
+                self.slots.write(slot, t.data());
+            }
         }
         assert!(it.next().is_none());
     }
@@ -111,5 +136,50 @@ mod tests {
             assert!(delta < prev);
             prev = delta;
         }
+    }
+
+    /// The f32 store must be bit-transparent: quantize-on-write with
+    /// `StateDtype::F32` is a plain copy, so the accumulator trajectory
+    /// matches exact f64-side bookkeeping as tightly as the seed code did.
+    #[test]
+    fn f32_store_roundtrip_is_exact() {
+        let specs = vec![ParamSpec::new("w", &[3, 5])];
+        let mut opt = Adagrad::new(&specs, 0.9);
+        let mut rng = Rng::new(7);
+        let mut params = vec![Tensor::randn(&[3, 5], 1.0, &mut rng)];
+        let g = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        opt.step(&mut params, std::slice::from_ref(&g), 0.1);
+        let acc = opt.accumulator(0);
+        for (a, gv) in acc.data().iter().zip(g.data()) {
+            assert_eq!(a.to_bits(), (gv * gv).to_bits());
+        }
+    }
+
+    #[test]
+    fn q8_state_roundtrips_through_state_api() {
+        let specs =
+            vec![ParamSpec::new("w", &[9, 8]), ParamSpec::new("b", &[70])];
+        let mut opt = Adagrad::with_dtype(&specs, 0.9, StateDtype::Q8);
+        let mut rng = Rng::new(3);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        for _ in 0..4 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            opt.step(&mut params, &grads, 0.1);
+        }
+        let saved: Vec<Tensor> =
+            opt.state().into_iter().map(|(_, _, t)| t).collect();
+        let mut fresh = Adagrad::with_dtype(&specs, 0.9, StateDtype::Q8);
+        fresh.load_state(saved.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t).collect();
+        // dequantized values re-quantize to the identical codes, so the
+        // round-trip is bitwise (the codec idempotence contract)
+        assert_eq!(saved, restored);
     }
 }

@@ -1,6 +1,7 @@
 //! Adam (Kingma & Ba) — the 2×d-state baseline whose memory footprint
 //! motivates the paper (Tables 1–2).
 
+use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
@@ -8,21 +9,29 @@ pub struct Adam {
     beta1: f32,
     beta2: f32,
     eps: f32,
+    /// global step count for bias correction — an integer-valued scalar,
+    /// deliberately NOT stored through the quantized slots (q8 would
+    /// perturb `beta^t`)
     t: f32,
-    m: Vec<Tensor>,
-    v: Vec<Tensor>,
+    /// leaf `i`: slot `2i` is the first moment m, slot `2i + 1` the
+    /// second moment v
+    slots: QuantizedSlots,
+    specs: Vec<ParamSpec>,
 }
 
 impl Adam {
     pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32) -> Self {
-        Self {
-            beta1,
-            beta2,
-            eps,
-            t: 0.0,
-            m: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
-            v: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+        Self::with_dtype(specs, beta1, beta2, eps, StateDtype::F32)
+    }
+
+    pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
+                      dtype: StateDtype) -> Self {
+        let mut slots = QuantizedSlots::new(dtype);
+        for s in specs {
+            slots.add_zeros(s.numel()); // m
+            slots.add_zeros(s.numel()); // v
         }
+        Self { beta1, beta2, eps, t: 0.0, slots, specs: specs.to_vec() }
     }
 }
 
@@ -37,11 +46,12 @@ impl Optimizer for Adam {
         // f32 powers, matching the kernel exactly
         let bc1 = 1.0 - b1.powf(self.t);
         let bc2 = 1.0 - b2.powf(self.t);
+        let (mut m, mut v) = (Vec::new(), Vec::new());
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            let m = self.m[idx].data_mut();
-            let v = self.v[idx].data_mut();
+            self.slots.read_into(2 * idx, &mut m);
+            self.slots.read_into(2 * idx + 1, &mut v);
             for k in 0..wd.len() {
                 m[k] = b1 * m[k] + (1.0 - b1) * gd[k];
                 v[k] = b2 * v[k] + (1.0 - b2) * gd[k] * gd[k];
@@ -49,21 +59,33 @@ impl Optimizer for Adam {
                 let vhat = v[k] / bc2;
                 wd[k] -= lr * mhat / (vhat.sqrt() + self.eps);
             }
+            self.slots.write(2 * idx, &m);
+            self.slots.write(2 * idx + 1, &v);
         }
     }
 
     fn state_floats(&self) -> usize {
-        self.m.iter().map(Tensor::len).sum::<usize>()
-            + self.v.iter().map(Tensor::len).sum::<usize>()
+        self.slots.state_floats()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.state_bytes()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.slots.dtype()
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
         let mut out = Vec::new();
         // step count rides along as a 1-element tensor on slot "t" of leaf 0
         out.push((0, "t", Tensor::from_vec(&[1], vec![self.t])));
-        for i in 0..self.m.len() {
-            out.push((i, "m", self.m[i].clone()));
-            out.push((i, "v", self.v[i].clone()));
+        for (i, s) in self.specs.iter().enumerate() {
+            out.push((i, "m",
+                      Tensor::from_vec(&s.shape, self.slots.to_vec(2 * i))));
+            out.push((i, "v",
+                      Tensor::from_vec(&s.shape,
+                                       self.slots.to_vec(2 * i + 1))));
         }
         out
     }
@@ -71,9 +93,12 @@ impl Optimizer for Adam {
     fn load_state(&mut self, state: Vec<Tensor>) {
         let mut it = state.into_iter();
         self.t = it.next().expect("state underrun").data()[0];
-        for i in 0..self.m.len() {
-            self.m[i] = it.next().expect("state underrun");
-            self.v[i] = it.next().expect("state underrun");
+        for (i, s) in self.specs.iter().enumerate() {
+            for slot in [2 * i, 2 * i + 1] {
+                let t = it.next().expect("state underrun");
+                assert_eq!(t.shape(), s.shape.as_slice());
+                self.slots.write(slot, t.data());
+            }
         }
         assert!(it.next().is_none());
     }
@@ -112,5 +137,36 @@ mod tests {
         let mut fresh = Adam::new(&specs, 0.9, 0.999, 1e-8);
         fresh.load_state(st);
         assert_eq!(fresh.t, 5.0);
+    }
+
+    /// The step counter must survive quantized-state round-trips exactly
+    /// (it is kept outside the quantized store).
+    #[test]
+    fn step_counter_is_exact_under_q8() {
+        let specs = vec![ParamSpec::new("w", &[70])];
+        let mut opt = Adam::with_dtype(&specs, 0.9, 0.999, 1e-8,
+                                       StateDtype::Q8);
+        let mut params = vec![Tensor::zeros(&[70])];
+        let g = Tensor::full(&[70], 1.0);
+        for _ in 0..7 {
+            opt.step(&mut params, std::slice::from_ref(&g), 0.01);
+        }
+        let st: Vec<Tensor> =
+            opt.state().into_iter().map(|(_, _, t)| t).collect();
+        assert_eq!(st[0].data()[0], 7.0);
+        let mut fresh = Adam::with_dtype(&specs, 0.9, 0.999, 1e-8,
+                                         StateDtype::Q8);
+        fresh.load_state(st);
+        assert_eq!(fresh.t, 7.0);
+    }
+
+    #[test]
+    fn q8_state_is_at_least_3_5x_smaller() {
+        let specs = vec![ParamSpec::new("emb", &[512, 64])];
+        let f = Adam::new(&specs, 0.9, 0.999, 1e-8);
+        let q = Adam::with_dtype(&specs, 0.9, 0.999, 1e-8, StateDtype::Q8);
+        assert_eq!(f.state_floats(), q.state_floats());
+        let red = f.state_bytes() as f64 / q.state_bytes() as f64;
+        assert!(red >= 3.5, "reduction {red}");
     }
 }

@@ -14,6 +14,7 @@ mod adagrad;
 mod adam;
 pub mod cover;
 pub mod parallel;
+pub mod qstate;
 pub mod schedule;
 mod sgdm;
 mod sm3;
@@ -22,6 +23,7 @@ pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adam::Adam;
 pub use parallel::ParallelStep;
+pub use qstate::{QuantizedSlots, StateDtype};
 pub use sgdm::SgdMomentum;
 pub use sm3::{Sm3, Sm3Variant};
 
@@ -74,6 +76,18 @@ pub trait Optimizer: Send {
     /// Total optimizer-state scalars (the paper's memory quantity).
     fn state_floats(&self) -> usize;
 
+    /// Exact storage bytes of the state (q8 includes per-block scales).
+    /// Defaults to 4 bytes/scalar — the f32 storage every optimizer used
+    /// before the qstate subsystem.
+    fn state_bytes(&self) -> usize {
+        self.state_floats() * 4
+    }
+
+    /// Storage precision of the state slots (DESIGN.md §10).
+    fn state_dtype(&self) -> qstate::StateDtype {
+        qstate::StateDtype::F32
+    }
+
     /// Named state tensors for checkpointing / introspection, in a stable
     /// order: `(param_index, slot_name, tensor)`. Tensors are cloned — this
     /// is a checkpoint/trace path, not the hot loop.
@@ -83,19 +97,29 @@ pub trait Optimizer: Send {
     fn load_state(&mut self, state: Vec<Tensor>);
 }
 
-/// Construct an optimizer by registry name.
+/// Construct an optimizer by registry name with f32 state storage.
 ///
 /// `beta1` is the momentum coefficient used by every method; Adam and
 /// Adafactor also take `beta2`.
 pub fn build(name: &str, specs: &[ParamSpec], beta1: f32, beta2: f32)
              -> anyhow::Result<Box<dyn Optimizer>> {
+    build_with_dtype(name, specs, beta1, beta2, StateDtype::F32)
+}
+
+/// Construct an optimizer by registry name with the given state-storage
+/// precision (config key `state_dtype`, DESIGN.md §10).
+pub fn build_with_dtype(name: &str, specs: &[ParamSpec], beta1: f32,
+                        beta2: f32, dtype: StateDtype)
+                        -> anyhow::Result<Box<dyn Optimizer>> {
     Ok(match name {
-        "sm3" => Box::new(Sm3::new(specs, Sm3Variant::II, beta1)),
-        "sm3i" => Box::new(Sm3::new(specs, Sm3Variant::I, beta1)),
-        "adagrad" => Box::new(Adagrad::new(specs, beta1)),
-        "adam" => Box::new(Adam::new(specs, beta1, beta2, 1e-8)),
-        "adafactor" => Box::new(Adafactor::new(specs, beta1, beta2)),
-        "sgdm" => Box::new(SgdMomentum::new(specs, beta1)),
+        "sm3" => Box::new(Sm3::with_dtype(specs, Sm3Variant::II, beta1, dtype)),
+        "sm3i" => Box::new(Sm3::with_dtype(specs, Sm3Variant::I, beta1, dtype)),
+        "adagrad" => Box::new(Adagrad::with_dtype(specs, beta1, dtype)),
+        "adam" => Box::new(Adam::with_dtype(specs, beta1, beta2, 1e-8, dtype)),
+        "adafactor" => {
+            Box::new(Adafactor::with_dtype(specs, beta1, beta2, dtype))
+        }
+        "sgdm" => Box::new(SgdMomentum::with_dtype(specs, beta1, dtype)),
         other => anyhow::bail!("unknown optimizer {other:?}"),
     })
 }
@@ -145,6 +169,66 @@ mod tests {
             }
             let l1 = loss(&params);
             assert!(l1 < 0.5 * l0, "{name}: {l0} -> {l1}");
+        }
+    }
+
+    /// Storage precision must not break optimization: every registry
+    /// optimizer still descends on the convex quadratic with bf16 and q8
+    /// state (the update arithmetic is f32 either way; only the state
+    /// carried between steps is rounded).
+    #[test]
+    fn all_optimizers_descend_with_quantized_state() {
+        for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+            for name in ALL {
+                let specs = quad_specs();
+                let mut opt =
+                    build_with_dtype(name, &specs, 0.9, 0.98, dtype).unwrap();
+                assert_eq!(opt.state_dtype(), dtype);
+                let mut rng = Rng::new(0);
+                let target_w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+                let target_b = Tensor::randn(&[6], 1.0, &mut rng);
+                let mut params =
+                    vec![Tensor::zeros(&[8, 6]), Tensor::zeros(&[6])];
+                let loss = |p: &[Tensor]| -> f64 {
+                    p[0].zip(&target_w, |a, b| (a - b) * (a - b))
+                        .sq_norm().sqrt()
+                        + p[1].zip(&target_b, |a, b| (a - b) * (a - b))
+                            .sq_norm().sqrt()
+                };
+                let l0 = loss(&params);
+                let lr = match *name {
+                    "sgdm" => 0.02,
+                    "adam" => 0.05,
+                    _ => 0.3,
+                };
+                for _ in 0..200 {
+                    let gw = params[0].zip(&target_w, |a, b| 2.0 * (a - b));
+                    let gb = params[1].zip(&target_b, |a, b| 2.0 * (a - b));
+                    let grads = vec![gw, gb];
+                    opt.step(&mut params, &grads, lr);
+                }
+                let l1 = loss(&params);
+                assert!(l1 < 0.6 * l0, "{name} @ {dtype:?}: {l0} -> {l1}");
+            }
+        }
+    }
+
+    /// The quantized stores really are smaller, on a live optimizer.
+    #[test]
+    fn state_bytes_shrink_with_dtype() {
+        let specs = quad_specs();
+        for name in ALL {
+            let f32b = build_with_dtype(name, &specs, 0.9, 0.98,
+                                        StateDtype::F32).unwrap()
+                .state_bytes();
+            let bf16b = build_with_dtype(name, &specs, 0.9, 0.98,
+                                         StateDtype::Bf16).unwrap()
+                .state_bytes();
+            let q8b = build_with_dtype(name, &specs, 0.9, 0.98,
+                                       StateDtype::Q8).unwrap()
+                .state_bytes();
+            assert_eq!(bf16b * 2, f32b, "{name}");
+            assert!(q8b < bf16b, "{name}: q8 {q8b} vs bf16 {bf16b}");
         }
     }
 

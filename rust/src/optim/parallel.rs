@@ -25,6 +25,7 @@
 //! `load_state` pre-counts and fails fast on a layout mismatch, and a
 //! future PR can add layout translation if cross-knob restore is needed.
 
+use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
@@ -79,11 +80,25 @@ impl ParallelStep {
         Ok(Self { leaf_opts, shards: shard_by_numel(specs, threads), threads })
     }
 
-    /// Build from the optimizer registry (the `optim::build` names).
+    /// Build from the optimizer registry (the `optim::build` names) with
+    /// f32 state storage.
     pub fn from_registry(name: &str, specs: &[ParamSpec], beta1: f32,
                          beta2: f32, threads: usize) -> anyhow::Result<Self> {
+        Self::from_registry_dtype(name, specs, beta1, beta2, threads,
+                                  StateDtype::F32)
+    }
+
+    /// Build from the registry with quantized state storage (DESIGN.md
+    /// §10). Sharding preserves the bitwise guarantee at any dtype: q8
+    /// blocks live inside one leaf's slot vectors and shards are whole
+    /// leaves, so a block never straddles a shard boundary and every
+    /// quantization sees the identical inputs serial stepping would.
+    pub fn from_registry_dtype(name: &str, specs: &[ParamSpec], beta1: f32,
+                               beta2: f32, threads: usize,
+                               dtype: StateDtype) -> anyhow::Result<Self> {
         Self::new(specs, threads, |s| {
-            super::build(name, std::slice::from_ref(s), beta1, beta2)
+            super::build_with_dtype(name, std::slice::from_ref(s), beta1,
+                                    beta2, dtype)
         })
     }
 
@@ -150,6 +165,17 @@ impl Optimizer for ParallelStep {
 
     fn state_floats(&self) -> usize {
         self.leaf_opts.iter().map(|o| o.state_floats()).sum()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.leaf_opts.iter().map(|o| o.state_bytes()).sum()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.leaf_opts
+            .first()
+            .map(|o| o.state_dtype())
+            .unwrap_or(StateDtype::F32)
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
@@ -319,6 +345,43 @@ mod tests {
         let mut par =
             ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 2).unwrap();
         par.load_state(saved);
+    }
+
+    /// The determinism contract at q8: sharded stepping with quantized
+    /// state is bitwise identical to serial quantized stepping (blocks
+    /// never straddle shard boundaries). The broader sweep lives in
+    /// `crate::proptest`.
+    #[test]
+    fn bitwise_identical_to_serial_with_q8_state() {
+        let specs = mixed_specs();
+        for name in ["sm3", "adam", "adafactor"] {
+            let mut serial = optim::build_with_dtype(
+                name, &specs, 0.9, 0.98, StateDtype::Q8).unwrap();
+            let mut par = ParallelStep::from_registry_dtype(
+                name, &specs, 0.9, 0.98, 3, StateDtype::Q8).unwrap();
+            assert_eq!(par.state_dtype(), StateDtype::Q8);
+            assert_eq!(par.state_bytes(), serial.state_bytes(), "{name}");
+            let mut rng = Rng::new(17);
+            let init: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let mut pa = init.clone();
+            let mut pb = init;
+            for _ in 0..4 {
+                let grads: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                    .collect();
+                serial.step(&mut pa, &grads, 0.1);
+                par.step(&mut pb, &grads, 0.1);
+            }
+            for (a, b) in pa.iter().zip(&pb) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name}: {x} != {y}");
+                }
+            }
+        }
     }
 
     #[test]

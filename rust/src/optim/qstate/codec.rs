@@ -1,0 +1,353 @@
+//! Scalar and block codecs for compressed optimizer-state storage.
+//!
+//! Two encodings below f32 (DESIGN.md §10):
+//!
+//! * **bf16** — round-to-nearest-even truncation of the f32 mantissa to
+//!   7 bits (the classic carry trick). 2 bytes/scalar.
+//! * **q8** — block-wise 8-bit: per [`Q8_BLOCK`]-element block one f32
+//!   scale field holding the block's max |v| (`amax`) plus one u8 code per
+//!   element. Codes are symmetric around [`Q8_ZERO_CODE`]:
+//!   `byte = clamp(rne(v / (amax/127)), -127, 127) + 127`. ~1.06
+//!   bytes/scalar amortized.
+//!
+//! Both codecs are deterministic pure functions of the input block, so
+//! quantized state is bitwise reproducible at any `step_threads` setting
+//! (blocks live inside one leaf's slot vector and shards are whole
+//! leaves — a block can never straddle a shard boundary).
+//!
+//! **Idempotence contract** (relied on by checkpoint round-trips): for
+//! both codecs, `encode(decode(e)) == e` bit-for-bit. For q8 this is why
+//! the scale field stores `amax` rather than `amax/127`: codes ±127
+//! decode to ±amax *exactly*, so a re-encode recovers the identical
+//! scale field, and every interior code `q` decodes to `s·q` whose
+//! re-quantization `rne((s·q)/s)` is `q` again (the two roundings move
+//! the quotient by ≤ 2⁻²²·127, far inside the rounding bucket). Blocks
+//! whose `amax/127` underflows to 0.0 are stored as all-zero blocks
+//! (scale field 0.0) to keep the contract for subnormal inputs.
+//!
+//! Non-finite state values are a bug upstream (see `safe_rsqrt`); the
+//! encoder debug-asserts on them, mirroring the optimizer bank's
+//! convention. Release builds stay defined and NaN-free: a block whose
+//! amax is infinite saturates (±inf → ±f32::MAX, finite → 0, still
+//! idempotent), and a stray NaN codes to 0.
+
+/// Elements per q8 block (one f32 scale per block).
+pub const Q8_BLOCK: usize = 64;
+
+/// The u8 code representing 0.0 (code space is `[0, 254]`, symmetric).
+pub const Q8_ZERO_CODE: u8 = 127;
+
+/// Round half-way cases to the nearest even integer (ties-to-even), the
+/// IEEE default rounding. Implemented manually: `f32::round` is
+/// ties-away-from-zero and `round_ties_even` is newer than our MSRV.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        // a tie implies |x| < 2^23, so the cast is exact
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even (carry trick). NaN payloads are
+/// quieted and truncated, never turned into infinities.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round_bit = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + round_bit) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: every bf16 value is an f32 value).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Number of q8 blocks (scale fields) covering `len` elements.
+/// Overflow-free on purpose: the checkpoint loader calls this with
+/// attacker-controlled lengths before any allocation happens.
+#[inline]
+pub fn q8_blocks(len: usize) -> usize {
+    len / Q8_BLOCK + usize::from(len % Q8_BLOCK != 0)
+}
+
+/// Quantize `vals` block-wise into `scales` (one f32 amax per block) and
+/// `codes` (one u8 per element). Output vectors are cleared first.
+pub fn q8_encode_into(vals: &[f32], scales: &mut Vec<f32>, codes: &mut Vec<u8>) {
+    scales.clear();
+    codes.clear();
+    scales.reserve(q8_blocks(vals.len()));
+    codes.reserve(vals.len());
+    for block in vals.chunks(Q8_BLOCK) {
+        let mut amax = 0.0f32;
+        for &v in block {
+            debug_assert!(v.is_finite(),
+                          "non-finite optimizer-state value reached the q8 \
+                           encoder (diverged accumulator?)");
+            let a = v.abs();
+            if a > amax {
+                amax = a;
+            }
+        }
+        if amax.is_infinite() {
+            // Diverged accumulator (g² overflowed upstream). Debug builds
+            // assert above; release saturates with defined, NaN-free
+            // semantics: infinities code to ±127 and decode to ±f32::MAX
+            // (the stored scale), finite values decode to 0. Re-encoding
+            // the decoded block takes the normal path with amax = MAX and
+            // reproduces these exact bytes, so idempotence still holds.
+            scales.push(f32::MAX);
+            for &v in block {
+                codes.push(if v == f32::INFINITY {
+                    254
+                } else if v == f32::NEG_INFINITY {
+                    0
+                } else {
+                    Q8_ZERO_CODE
+                });
+            }
+            continue;
+        }
+        let scale = amax / 127.0;
+        if scale == 0.0 {
+            // all-zero block, or amax so subnormal the step underflows:
+            // store a canonical zero block (keeps encode∘decode == id)
+            scales.push(0.0);
+            for _ in block {
+                codes.push(Q8_ZERO_CODE);
+            }
+            continue;
+        }
+        scales.push(amax);
+        for &v in block {
+            let q = (round_ties_even(v / scale) as i32).clamp(-127, 127);
+            codes.push((q + 127) as u8);
+        }
+    }
+}
+
+/// Dequantize q8 blocks into `out` (cleared first). Codes ±127 decode to
+/// ±amax exactly — see the idempotence contract in the module docs.
+pub fn q8_decode_into(scales: &[f32], codes: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(scales.len(), q8_blocks(codes.len()));
+    out.clear();
+    out.reserve(codes.len());
+    for (b, block) in codes.chunks(Q8_BLOCK).enumerate() {
+        let amax = scales[b];
+        let scale = amax / 127.0;
+        for &c in block {
+            let q = c as i32 - 127;
+            out.push(match q {
+                127 => amax,
+                -127 => -amax,
+                _ => scale * q as f32,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, gen};
+
+    #[test]
+    fn round_ties_even_matches_ieee() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        assert_eq!(round_ties_even(0.49), 0.0);
+        assert_eq!(round_ties_even(0.51), 1.0);
+        assert_eq!(round_ties_even(-126.5), -126.0);
+        assert_eq!(round_ties_even(126.5), 126.0);
+    }
+
+    #[test]
+    fn bf16_basics() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, f32::INFINITY,
+                  f32::NEG_INFINITY] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)).to_bits(), x.to_bits(),
+                       "{x} must be bf16-exact");
+        }
+        // 1 + 2^-8 is not representable: rounds to 1.0 (ties-to-even)
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 1.0 / 256.0)), 1.0);
+        // 1 + 3·2^-8 ties between 1 + 2^-7 (odd mantissa) and 1 + 2^-6
+        // (even mantissa): ties-to-even picks the latter
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 3.0 / 256.0)),
+                   1.0 + 1.0 / 64.0);
+        // NaN stays NaN (not an infinity)
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // beyond bf16-max rounds to infinity
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+    }
+
+    /// Property: bf16 round-trip error is within half an ulp
+    /// (relative 2^-8) and the codec is idempotent.
+    #[test]
+    fn prop_bf16_roundtrip_error_bound() {
+        forall("bf16 round-trip", |rng| {
+            let exp = rng.range(-30, 30) as f32;
+            rng.normal_f32(0.0, 1.0) * 10f32.powf(exp)
+        }, |&x| {
+            let b = f32_to_bf16(x);
+            let y = bf16_to_f32(b);
+            if x.abs() >= f32::MIN_POSITIVE && y.is_finite() {
+                let rel = (x - y).abs() / x.abs();
+                if rel > 1.0 / 256.0 {
+                    return Err(format!("rel err {rel} for {x} -> {y}"));
+                }
+            }
+            if f32_to_bf16(y) != b {
+                return Err(format!("not idempotent at {x}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property (ISSUE satellite): per block, quantize→dequantize error is
+    /// bounded by half a step, `|v - v̂| ≤ (amax/127)/2` (+ f32 slack).
+    #[test]
+    fn prop_q8_roundtrip_error_bound_per_block() {
+        forall("q8 per-block error bound", |rng| {
+            let n = 1 + rng.index(200);
+            let exp = rng.range(-8, 8) as f32;
+            gen::grad_vec(rng, n, 10f32.powf(exp))
+        }, |vals| {
+            let (mut scales, mut codes) = (Vec::new(), Vec::new());
+            q8_encode_into(vals, &mut scales, &mut codes);
+            let mut dec = Vec::new();
+            q8_decode_into(&scales, &codes, &mut dec);
+            if dec.len() != vals.len() {
+                return Err("length mismatch".into());
+            }
+            for (i, (&v, &d)) in vals.iter().zip(&dec).enumerate() {
+                let step = scales[i / Q8_BLOCK] / 127.0;
+                let bound = step * 0.5001 + 1e-30;
+                if (v - d).abs() > bound {
+                    return Err(format!(
+                        "elem {i}: |{v} - {d}| > {bound} (step {step})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: encode∘decode is the identity on codec outputs — the
+    /// contract checkpoint round-trips rely on.
+    #[test]
+    fn prop_q8_requantization_is_bitwise_idempotent() {
+        forall("q8 idempotence", |rng| {
+            let n = 1 + rng.index(200);
+            let exp = rng.range(-10, 10) as f32;
+            gen::grad_vec(rng, n, 10f32.powf(exp))
+        }, |vals| {
+            let (mut s1, mut c1) = (Vec::new(), Vec::new());
+            q8_encode_into(vals, &mut s1, &mut c1);
+            let mut dec = Vec::new();
+            q8_decode_into(&s1, &c1, &mut dec);
+            let (mut s2, mut c2) = (Vec::new(), Vec::new());
+            q8_encode_into(&dec, &mut s2, &mut c2);
+            if c1 != c2 {
+                return Err("codes changed on re-encode".into());
+            }
+            for (a, b) in s1.iter().zip(&s2) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("scale changed: {a} -> {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q8_zero_and_subnormal_blocks() {
+        let (mut s, mut c) = (Vec::new(), Vec::new());
+        q8_encode_into(&[0.0; 5], &mut s, &mut c);
+        assert_eq!(s, vec![0.0]);
+        assert_eq!(c, vec![Q8_ZERO_CODE; 5]);
+        // amax/127 underflows to zero → canonical zero block
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        q8_encode_into(&[tiny, -tiny], &mut s, &mut c);
+        assert_eq!(s, vec![0.0]);
+        assert_eq!(c, vec![Q8_ZERO_CODE; 2]);
+        let mut d = Vec::new();
+        q8_decode_into(&s, &c, &mut d);
+        assert_eq!(d, vec![0.0, 0.0]);
+    }
+
+    /// Debug builds surface non-finite state at the encoder, like
+    /// `safe_rsqrt` surfaces NaN accumulators.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn q8_nonfinite_asserts_in_debug() {
+        let (mut s, mut c) = (Vec::new(), Vec::new());
+        q8_encode_into(&[1.0, f32::INFINITY], &mut s, &mut c);
+    }
+
+    /// Release builds only (debug asserts above): an inf-poisoned block
+    /// saturates to ±f32::MAX / 0 with no NaNs, and stays idempotent.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn q8_infinite_blocks_saturate_without_nan() {
+        let vals = [f32::INFINITY, f32::NEG_INFINITY, 3.0, 0.0];
+        let (mut s, mut c) = (Vec::new(), Vec::new());
+        q8_encode_into(&vals, &mut s, &mut c);
+        assert_eq!(s, vec![f32::MAX]);
+        let mut d = Vec::new();
+        q8_decode_into(&s, &c, &mut d);
+        assert_eq!(d, vec![f32::MAX, -f32::MAX, 0.0, 0.0]);
+        // idempotence survives the degenerate path
+        let (mut s2, mut c2) = (Vec::new(), Vec::new());
+        q8_encode_into(&d, &mut s2, &mut c2);
+        assert_eq!(s2[0].to_bits(), s[0].to_bits());
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn q8_extremes_decode_exactly() {
+        let vals = [3.25f32, -3.25, 0.0, 1.625];
+        let (mut s, mut c) = (Vec::new(), Vec::new());
+        q8_encode_into(&vals, &mut s, &mut c);
+        assert_eq!(s, vec![3.25]);
+        let mut d = Vec::new();
+        q8_decode_into(&s, &c, &mut d);
+        // the max-magnitude elements decode bit-exactly
+        assert_eq!(d[0], 3.25);
+        assert_eq!(d[1], -3.25);
+        assert_eq!(d[2], 0.0);
+    }
+
+    #[test]
+    fn q8_block_partitioning() {
+        assert_eq!(q8_blocks(0), 0);
+        assert_eq!(q8_blocks(1), 1);
+        assert_eq!(q8_blocks(64), 1);
+        assert_eq!(q8_blocks(65), 2);
+        assert_eq!(q8_blocks(128), 2);
+        let vals: Vec<f32> = (0..130).map(|i| i as f32).collect();
+        let (mut s, mut c) = (Vec::new(), Vec::new());
+        q8_encode_into(&vals, &mut s, &mut c);
+        assert_eq!(s.len(), 3);
+        assert_eq!(c.len(), 130);
+        // per-block scales: blocks see different amax
+        assert_eq!(s[0], 63.0);
+        assert_eq!(s[1], 127.0);
+        assert_eq!(s[2], 129.0);
+    }
+}

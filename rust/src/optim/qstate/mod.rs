@@ -1,0 +1,134 @@
+//! Quantized optimizer-state storage (DESIGN.md §10).
+//!
+//! The paper shrinks second-moment state by changing the *statistics*
+//! (row/col covers); this subsystem shrinks it further by changing the
+//! *storage precision*: any registry optimizer can keep its slots in
+//! f32, bf16, or block-wise 8-bit (`q8`) while the update arithmetic
+//! itself stays bit-stable f32 (dequantize-on-read, quantize-on-write —
+//! see [`store::QuantizedSlots`]). Extends the memory accountant's
+//! Tables 1–2 past the paper's OOM frontier (`memory::opt_state_bytes`)
+//! and opens a storage-precision axis for the quality sweeps.
+//!
+//! Determinism contract: both codecs are pure per-block functions and a
+//! block always lives inside one leaf's slot vector, while `ParallelStep`
+//! shards whole leaves — so quantized state is bitwise identical between
+//! serial and sharded stepping at any thread count (property-tested in
+//! `crate::proptest`).
+
+pub mod codec;
+pub mod store;
+
+pub use store::{QSlot, QuantizedSlots};
+
+use anyhow::{bail, Result};
+
+/// Storage precision for optimizer-state slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateDtype {
+    /// 4 bytes/scalar — lossless, the seed behavior.
+    F32,
+    /// 2 bytes/scalar — round-to-nearest-even truncated f32.
+    Bf16,
+    /// ~1.06 bytes/scalar — per-64-element block f32 scale + u8 codes.
+    Q8,
+}
+
+impl StateDtype {
+    /// Every storage precision, in decreasing-size order.
+    pub const ALL: [StateDtype; 3] =
+        [StateDtype::F32, StateDtype::Bf16, StateDtype::Q8];
+
+    /// Parse a config/CLI name ("f32" | "bf16" | "q8").
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => StateDtype::F32,
+            "bf16" => StateDtype::Bf16,
+            "q8" => StateDtype::Q8,
+            other => bail!("unknown state dtype {other:?} (f32|bf16|q8)"),
+        })
+    }
+
+    /// Canonical name (inverse of [`StateDtype::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            StateDtype::F32 => "f32",
+            StateDtype::Bf16 => "bf16",
+            StateDtype::Q8 => "q8",
+        }
+    }
+
+    /// Amortized storage bytes per state scalar (q8 spreads the per-block
+    /// f32 scale over [`codec::Q8_BLOCK`] elements). The memory
+    /// accountant's per-dtype columns use [`StateDtype::bytes_for`],
+    /// which is exact about partial trailing blocks.
+    pub fn bytes_per_slot(self) -> f64 {
+        match self {
+            StateDtype::F32 => 4.0,
+            StateDtype::Bf16 => 2.0,
+            StateDtype::Q8 => 1.0 + 4.0 / codec::Q8_BLOCK as f64,
+        }
+    }
+
+    /// Exact storage bytes for one slot vector of `len` scalars.
+    pub fn bytes_for(self, len: usize) -> usize {
+        match self {
+            StateDtype::F32 => len * 4,
+            StateDtype::Bf16 => len * 2,
+            StateDtype::Q8 => codec::q8_blocks(len) * 4 + len,
+        }
+    }
+
+    /// The `SM3CKPT2` entry tag (see `checkpoint.rs`).
+    pub fn tag(self) -> u8 {
+        match self {
+            StateDtype::F32 => 0,
+            StateDtype::Bf16 => 1,
+            StateDtype::Q8 => 2,
+        }
+    }
+
+    /// Inverse of [`StateDtype::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => StateDtype::F32,
+            1 => StateDtype::Bf16,
+            2 => StateDtype::Q8,
+            other => bail!("unknown state-dtype tag {other}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for dtype in StateDtype::ALL {
+            assert_eq!(StateDtype::parse(dtype.name()).unwrap(), dtype);
+        }
+        assert!(StateDtype::parse("fp16").is_err());
+        assert!(StateDtype::parse("").is_err());
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        for dtype in StateDtype::ALL {
+            assert_eq!(StateDtype::from_tag(dtype.tag()).unwrap(), dtype);
+        }
+        assert!(StateDtype::from_tag(3).is_err());
+        assert!(StateDtype::from_tag(255).is_err());
+    }
+
+    #[test]
+    fn q8_beats_the_35x_reduction_target() {
+        // the acceptance line: ≥ 3.5× smaller than f32 per scalar
+        let red = StateDtype::F32.bytes_per_slot()
+            / StateDtype::Q8.bytes_per_slot();
+        assert!(red >= 3.5, "q8 amortized reduction {red}");
+        // and exact accounting agrees for block-aligned lengths
+        assert_eq!(StateDtype::Q8.bytes_for(64 * 100), 4 * 100 + 6400);
+        assert_eq!(StateDtype::Bf16.bytes_for(10), 20);
+        assert_eq!(StateDtype::F32.bytes_for(10), 40);
+    }
+}

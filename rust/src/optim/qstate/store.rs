@@ -1,0 +1,272 @@
+//! The quantized slot store: dtype-tagged storage for optimizer state
+//! vectors with dequantize-on-read / quantize-on-write semantics.
+//!
+//! A [`QSlot`] owns one state vector in its storage encoding; a
+//! [`QuantizedSlots`] is the per-optimizer collection the bank's
+//! optimizers allocate their accumulator and momentum slots from. The
+//! update arithmetic never sees the encoding: every step reads a slot
+//! into an f32 buffer, runs the exact f32 op sequence, and writes the
+//! result back (one deterministic quantization per slot per step). With
+//! [`StateDtype::F32`] read/write are plain copies, so the f32 path is
+//! bit-identical to the pre-qstate `Vec<f32>` fields it replaced.
+//!
+//! Known tradeoff: the uniform read/modify/write shape costs the f32
+//! path two sequential memcpys per slot per step that the old in-place
+//! fields did not pay. A zero-copy fast path (lending `&mut [f32]` out
+//! of `SlotData::F32`) would split every optimizer's update loop into
+//! two code paths; per this repo's perf-pass convention that rewrite
+//! should land only with `bench_optim` numbers showing the memcpy
+//! matters next to the sqrt/div-bound update arithmetic — the qstate
+//! section of that bench measures exactly this.
+
+use super::codec;
+use super::StateDtype;
+
+/// One state vector in its storage encoding.
+pub struct QSlot {
+    len: usize,
+    data: SlotData,
+}
+
+enum SlotData {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    Q8 { scales: Vec<f32>, codes: Vec<u8> },
+}
+
+impl QSlot {
+    /// A zero-initialized slot of `len` scalars.
+    pub fn zeros(len: usize, dtype: StateDtype) -> Self {
+        let data = match dtype {
+            StateDtype::F32 => SlotData::F32(vec![0.0; len]),
+            StateDtype::Bf16 => SlotData::Bf16(vec![0; len]),
+            StateDtype::Q8 => SlotData::Q8 {
+                scales: vec![0.0; codec::q8_blocks(len)],
+                codes: vec![codec::Q8_ZERO_CODE; len],
+            },
+        };
+        Self { len, data }
+    }
+
+    /// Quantize `vals` into a fresh slot.
+    pub fn from_f32(dtype: StateDtype, vals: &[f32]) -> Self {
+        let mut s = Self::zeros(vals.len(), dtype);
+        s.write(vals);
+        s
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match &self.data {
+            SlotData::F32(_) => StateDtype::F32,
+            SlotData::Bf16(_) => StateDtype::Bf16,
+            SlotData::Q8 { .. } => StateDtype::Q8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Dequantize into `out` (cleared first; `out.len()` becomes
+    /// `self.len()`).
+    pub fn read_into(&self, out: &mut Vec<f32>) {
+        match &self.data {
+            SlotData::F32(v) => {
+                out.clear();
+                out.extend_from_slice(v);
+            }
+            SlotData::Bf16(v) => {
+                out.clear();
+                out.reserve(v.len());
+                for &b in v {
+                    out.push(codec::bf16_to_f32(b));
+                }
+            }
+            SlotData::Q8 { scales, codes } => {
+                codec::q8_decode_into(scales, codes, out);
+            }
+        }
+    }
+
+    /// Dequantize into a fresh vector.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.read_into(&mut out);
+        out
+    }
+
+    /// Quantize `vals` into this slot (length must match).
+    pub fn write(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.len,
+                   "slot length mismatch: wrote {} into a {}-scalar slot",
+                   vals.len(), self.len);
+        match &mut self.data {
+            SlotData::F32(v) => v.copy_from_slice(vals),
+            SlotData::Bf16(v) => {
+                for (b, &x) in v.iter_mut().zip(vals) {
+                    *b = codec::f32_to_bf16(x);
+                }
+            }
+            SlotData::Q8 { scales, codes } => {
+                codec::q8_encode_into(vals, scales, codes);
+            }
+        }
+    }
+
+    /// Exact storage bytes of this slot (q8 includes the block scales).
+    pub fn state_bytes(&self) -> usize {
+        match &self.data {
+            SlotData::F32(v) => v.len() * 4,
+            SlotData::Bf16(v) => v.len() * 2,
+            SlotData::Q8 { scales, codes } => scales.len() * 4 + codes.len(),
+        }
+    }
+}
+
+/// A per-optimizer collection of [`QSlot`]s, all in one [`StateDtype`].
+///
+/// Optimizers allocate slots at construction ([`QuantizedSlots::add_zeros`]
+/// returns a stable integer id) and step through read/modify/write.
+pub struct QuantizedSlots {
+    dtype: StateDtype,
+    slots: Vec<QSlot>,
+}
+
+impl QuantizedSlots {
+    pub fn new(dtype: StateDtype) -> Self {
+        Self { dtype, slots: Vec::new() }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
+
+    /// Allocate a zero slot of `len` scalars; returns its id.
+    pub fn add_zeros(&mut self, len: usize) -> usize {
+        self.slots.push(QSlot::zeros(len, self.dtype));
+        self.slots.len() - 1
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot_len(&self, id: usize) -> usize {
+        self.slots[id].len()
+    }
+
+    /// Dequantize slot `id` into `out` (cleared first).
+    pub fn read_into(&self, id: usize, out: &mut Vec<f32>) {
+        self.slots[id].read_into(out);
+    }
+
+    /// Dequantize slot `id` into a fresh vector.
+    pub fn to_vec(&self, id: usize) -> Vec<f32> {
+        self.slots[id].to_vec()
+    }
+
+    /// Quantize `vals` into slot `id` (length must match).
+    pub fn write(&mut self, id: usize, vals: &[f32]) {
+        self.slots[id].write(vals);
+    }
+
+    /// Total state scalars across all slots (the paper's memory quantity).
+    pub fn state_floats(&self) -> usize {
+        self.slots.iter().map(QSlot::len).sum()
+    }
+
+    /// Exact storage bytes across all slots.
+    pub fn state_bytes(&self) -> usize {
+        self.slots.iter().map(QSlot::state_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_read_back_as_zeros() {
+        for dtype in StateDtype::ALL {
+            let s = QSlot::zeros(100, dtype);
+            assert_eq!(s.len(), 100);
+            assert_eq!(s.dtype(), dtype);
+            assert!(s.to_vec().iter().all(|&v| v == 0.0), "{dtype:?}");
+        }
+    }
+
+    #[test]
+    fn f32_slots_are_lossless() {
+        let vals = [1.0e-20f32, -3.7, 0.0, 2.5e17, f32::MIN_POSITIVE];
+        let s = QSlot::from_f32(StateDtype::F32, &vals);
+        let got = s.to_vec();
+        for (a, b) in vals.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn write_read_write_is_stable() {
+        // second write of the dequantized values must not drift (the
+        // codec idempotence contract, exercised through the store)
+        let vals: Vec<f32> = (0..200).map(|i| (i as f32 - 100.0) * 0.37).collect();
+        for dtype in StateDtype::ALL {
+            let mut s = QSlot::from_f32(dtype, &vals);
+            let once = s.to_vec();
+            s.write(&once);
+            let twice = s.to_vec();
+            for (a, b) in once.iter().zip(&twice) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "slot length mismatch")]
+    fn length_mismatch_panics() {
+        let mut s = QSlot::zeros(4, StateDtype::Q8);
+        s.write(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn state_bytes_exact() {
+        // 100 scalars: f32 400 B; bf16 200 B; q8 2 blocks·4 B + 100 B
+        assert_eq!(QSlot::zeros(100, StateDtype::F32).state_bytes(), 400);
+        assert_eq!(QSlot::zeros(100, StateDtype::Bf16).state_bytes(), 200);
+        assert_eq!(QSlot::zeros(100, StateDtype::Q8).state_bytes(), 108);
+        // exact block boundary
+        assert_eq!(QSlot::zeros(64, StateDtype::Q8).state_bytes(), 68);
+        assert_eq!(QSlot::zeros(0, StateDtype::Q8).state_bytes(), 0);
+    }
+
+    #[test]
+    fn store_allocates_sequential_ids() {
+        let mut st = QuantizedSlots::new(StateDtype::Q8);
+        assert_eq!(st.add_zeros(10), 0);
+        assert_eq!(st.add_zeros(64), 1);
+        assert_eq!(st.slot_count(), 2);
+        assert_eq!(st.slot_len(1), 64);
+        assert_eq!(st.state_floats(), 74);
+        assert_eq!(st.state_bytes(), (4 + 10) + (4 + 64));
+        st.write(0, &[1.0; 10]);
+        let mut buf = Vec::new();
+        st.read_into(0, &mut buf);
+        assert_eq!(buf.len(), 10);
+        // 1.0 is the block max → decodes exactly
+        assert!(buf.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn q8_quantization_error_is_small_relative() {
+        let vals: Vec<f32> = (1..=128).map(|i| i as f32).collect();
+        let s = QSlot::from_f32(StateDtype::Q8, &vals);
+        for (v, d) in vals.iter().zip(s.to_vec()) {
+            // error ≤ half a step = amax/254 per block
+            assert!((v - d).abs() <= 128.0 / 254.0 + 1e-6, "{v} vs {d}");
+        }
+    }
+}

@@ -1,20 +1,29 @@
 //! SGD with heavy-ball momentum — the non-adaptive baseline
 //! (paper §5.3, AmoebaNet).
 
+use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
 pub struct SgdMomentum {
     beta1: f32,
-    mom: Vec<Tensor>,
+    /// slot `i` holds leaf `i`'s momentum
+    slots: QuantizedSlots,
+    specs: Vec<ParamSpec>,
 }
 
 impl SgdMomentum {
     pub fn new(specs: &[ParamSpec], beta1: f32) -> Self {
-        Self {
-            beta1,
-            mom: specs.iter().map(|s| Tensor::zeros(&s.shape)).collect(),
+        Self::with_dtype(specs, beta1, StateDtype::F32)
+    }
+
+    pub fn with_dtype(specs: &[ParamSpec], beta1: f32,
+                      dtype: StateDtype) -> Self {
+        let mut slots = QuantizedSlots::new(dtype);
+        for s in specs {
+            slots.add_zeros(s.numel());
         }
+        Self { beta1, slots, specs: specs.to_vec() }
     }
 }
 
@@ -25,29 +34,47 @@ impl Optimizer for SgdMomentum {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let b1 = self.beta1;
+        let mut mom = Vec::new();
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            let mom = self.mom[idx].data_mut();
+            self.slots.read_into(idx, &mut mom);
             for k in 0..wd.len() {
                 mom[k] = b1 * mom[k] + gd[k];
                 wd[k] -= lr * mom[k];
             }
+            self.slots.write(idx, &mom);
         }
     }
 
     fn state_floats(&self) -> usize {
-        self.mom.iter().map(Tensor::len).sum()
+        self.slots.state_floats()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots.state_bytes()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.slots.dtype()
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
-        self.mom.iter().cloned().enumerate()
-            .map(|(i, t)| (i, "mom", t)).collect()
+        self.specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                (i, "mom", Tensor::from_vec(&s.shape, self.slots.to_vec(i)))
+            })
+            .collect()
     }
 
     fn load_state(&mut self, state: Vec<Tensor>) {
-        assert_eq!(state.len(), self.mom.len());
-        self.mom = state;
+        assert_eq!(state.len(), self.specs.len());
+        for (i, t) in state.into_iter().enumerate() {
+            assert_eq!(t.shape(), self.specs[i].shape.as_slice());
+            self.slots.write(i, t.data());
+        }
     }
 }
 
@@ -68,5 +95,23 @@ mod tests {
         let d2 = w1 - params[0].data()[0];
         assert!((d1 - 0.1).abs() < 1e-6);
         assert!((d2 - 0.19).abs() < 1e-6); // lr*(0.9*1 + 1)
+    }
+
+    #[test]
+    fn quantized_state_shrinks_and_still_descends() {
+        let specs = vec![ParamSpec::new("w", &[64, 4])];
+        let f32_bytes = SgdMomentum::new(&specs, 0.9).state_bytes();
+        let mut opt =
+            SgdMomentum::with_dtype(&specs, 0.9, StateDtype::Q8);
+        assert!(opt.state_bytes() * 3 < f32_bytes,
+                "q8 {} vs f32 {f32_bytes}", opt.state_bytes());
+        assert_eq!(opt.state_dtype(), StateDtype::Q8);
+        let mut params = vec![Tensor::full(&[64, 4], 1.0)];
+        let g = vec![Tensor::full(&[64, 4], 0.5)];
+        for _ in 0..10 {
+            opt.step(&mut params, &g, 0.1);
+        }
+        // constant positive gradient: every weight must have moved down
+        assert!(params[0].data().iter().all(|&v| v < 1.0));
     }
 }

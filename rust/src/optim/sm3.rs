@@ -9,7 +9,14 @@
 //! consumed immediately for the weight update, and folded into the *new*
 //! row/col accumulators without materializing the m×n `nu` matrix — this
 //! is the memory story of the paper executed literally.
+//!
+//! State lives in a [`QuantizedSlots`] store (DESIGN.md §10): each step
+//! dequantizes a leaf's accumulators and momentum to f32 buffers, runs
+//! the exact update arithmetic, and quantizes the results back. With
+//! `StateDtype::F32` the store is a plain copy and the trajectory is
+//! bit-identical to the pre-qstate `Vec<f32>` fields.
 
+use super::qstate::{QuantizedSlots, StateDtype};
 use super::{safe_rsqrt, Optimizer, ParamSpec};
 use crate::tensor::{axis_index, Tensor};
 
@@ -22,40 +29,49 @@ pub enum Sm3Variant {
     II,
 }
 
-struct LeafState {
-    /// One accumulator vector per tensor axis (rank-p ⇒ p vectors);
-    /// vectors (rank 1) store the full elementwise accumulator.
-    accs: Vec<Vec<f32>>,
-    mom: Tensor,
+/// Slot ids of one parameter leaf in the store.
+struct LeafIds {
+    /// one accumulator vector per tensor axis (rank-p ⇒ p ids);
+    /// vectors (rank ≤ 1) store the full elementwise accumulator
+    accs: Vec<usize>,
+    mom: usize,
 }
 
 /// SM3 optimizer state over a parameter list.
 pub struct Sm3 {
     variant: Sm3Variant,
     beta1: f32,
-    leaves: Vec<LeafState>,
+    store: QuantizedSlots,
+    leaves: Vec<LeafIds>,
     specs: Vec<ParamSpec>,
 }
 
 impl Sm3 {
     pub fn new(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32) -> Self {
+        Self::with_dtype(specs, variant, beta1, StateDtype::F32)
+    }
+
+    pub fn with_dtype(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
+                      dtype: StateDtype) -> Self {
+        let mut store = QuantizedSlots::new(dtype);
         let leaves = specs
             .iter()
             .map(|s| {
                 let accs = if s.shape.len() <= 1 {
-                    vec![vec![0.0; s.numel()]]
+                    vec![store.add_zeros(s.numel())]
                 } else {
-                    s.shape.iter().map(|&n| vec![0.0; n]).collect()
+                    s.shape.iter().map(|&n| store.add_zeros(n)).collect()
                 };
-                LeafState { accs, mom: Tensor::zeros(&s.shape) }
+                LeafIds { accs, mom: store.add_zeros(s.numel()) }
             })
             .collect();
-        Self { variant, beta1, leaves, specs: specs.to_vec() }
+        Self { variant, beta1, store, leaves, specs: specs.to_vec() }
     }
 
-    /// Read accumulator `axis` of parameter `idx` (trace / tests).
-    pub fn acc(&self, idx: usize, axis: usize) -> &[f32] {
-        &self.leaves[idx].accs[axis]
+    /// Read accumulator `axis` of parameter `idx`, dequantized
+    /// (trace / tests).
+    pub fn acc(&self, idx: usize, axis: usize) -> Vec<f32> {
+        self.store.to_vec(self.leaves[idx].accs[axis])
     }
 
     /// The implied per-entry `nu` (min over covering accumulators) for a
@@ -64,8 +80,8 @@ impl Sm3 {
         let shape = &self.specs[idx].shape;
         assert_eq!(shape.len(), 2);
         let (m, n) = (shape[0], shape[1]);
-        let row = &self.leaves[idx].accs[0];
-        let col = &self.leaves[idx].accs[1];
+        let row = self.store.to_vec(self.leaves[idx].accs[0]);
+        let col = self.store.to_vec(self.leaves[idx].accs[1]);
         let mut out = Tensor::zeros(&[m, n]);
         let data = out.data_mut();
         for i in 0..m {
@@ -75,179 +91,168 @@ impl Sm3 {
         }
         out
     }
+}
 
-    fn step_vector(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
-        let beta1 = self.beta1;
-        let leaf = &mut self.leaves[idx];
-        let acc = &mut leaf.accs[0];
-        let mom = leaf.mom.data_mut();
-        let wd = w.data_mut();
-        let gd = g.data();
-        for i in 0..wd.len() {
-            let nu = acc[i] + gd[i] * gd[i];
-            let upd = gd[i] * safe_rsqrt(nu);
-            mom[i] = beta1 * mom[i] + (1.0 - beta1) * upd;
-            wd[i] -= lr * mom[i];
-            acc[i] = nu;
-        }
+fn step_vector(acc: &mut [f32], mom: &mut [f32], w: &mut Tensor, g: &Tensor,
+               lr: f32, beta1: f32) {
+    let wd = w.data_mut();
+    let gd = g.data();
+    for i in 0..wd.len() {
+        let nu = acc[i] + gd[i] * gd[i];
+        let upd = gd[i] * safe_rsqrt(nu);
+        mom[i] = beta1 * mom[i] + (1.0 - beta1) * upd;
+        wd[i] -= lr * mom[i];
+        acc[i] = nu;
     }
+}
 
-    fn step_matrix_ii(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
-        let beta1 = self.beta1;
-        let (m, n) = (w.shape()[0], w.shape()[1]);
-        let leaf = &mut self.leaves[idx];
-        let mom = leaf.mom.data_mut();
-        let wd = w.data_mut();
-        let gd = g.data();
-        let (rows, cols) = leaf.accs.split_at_mut(1);
+fn step_matrix_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+                  g: &Tensor, lr: f32, beta1: f32) {
+    let (m, n) = (w.shape()[0], w.shape()[1]);
+    let wd = w.data_mut();
+    let gd = g.data();
+    let (rows, cols) = accs.split_at_mut(1);
+    let row = &mut rows[0];
+    let col = &mut cols[0];
+    let mut new_col = vec![f32::NEG_INFINITY; n];
+    // Single fused pass: nu is computed per element, consumed for the
+    // update, and folded into the new row/col maxima — the m×n nu
+    // matrix is never materialized (memory stays Θ(m+n)).
+    // Perf-pass note (EXPERIMENTS.md §Perf): a 5-way-zip variant and a
+    // 2-pass scratch-row variant both measured SLOWER on this
+    // toolchain; this indexed loop is the keeper.
+    for i in 0..m {
+        let ri = row[i];
+        let base = i * n;
+        let mut rmax = f32::NEG_INFINITY;
+        for j in 0..n {
+            let k = base + j;
+            let gv = gd[k];
+            let nu = ri.min(col[j]) + gv * gv;
+            let upd = gv * safe_rsqrt(nu);
+            mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+            wd[k] -= lr * mom[k];
+            if nu > rmax {
+                rmax = nu;
+            }
+            if nu > new_col[j] {
+                new_col[j] = nu;
+            }
+        }
+        row[i] = rmax;
+    }
+    *col = new_col;
+}
+
+fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+                 g: &Tensor, lr: f32, beta1: f32) {
+    let (m, n) = (w.shape()[0], w.shape()[1]);
+    let gd = g.data();
+    // pass 1: mu += max over slice of g²
+    {
+        let (rows, cols) = accs.split_at_mut(1);
         let row = &mut rows[0];
         let col = &mut cols[0];
-        let mut new_col = vec![f32::NEG_INFINITY; n];
-        // Single fused pass: nu is computed per element, consumed for the
-        // update, and folded into the new row/col maxima — the m×n nu
-        // matrix is never materialized (memory stays Θ(m+n)).
-        // Perf-pass note (EXPERIMENTS.md §Perf): a 5-way-zip variant and a
-        // 2-pass scratch-row variant both measured SLOWER on this
-        // toolchain; this indexed loop is the keeper.
-        for i in 0..m {
-            let ri = row[i];
-            let base = i * n;
-            let mut rmax = f32::NEG_INFINITY;
-            for j in 0..n {
-                let k = base + j;
-                let gv = gd[k];
-                let nu = ri.min(col[j]) + gv * gv;
-                let upd = gv * safe_rsqrt(nu);
-                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
-                wd[k] -= lr * mom[k];
-                if nu > rmax {
-                    rmax = nu;
-                }
-                if nu > new_col[j] {
-                    new_col[j] = nu;
-                }
-            }
-            row[i] = rmax;
-        }
-        *col = new_col;
-    }
-
-    fn step_matrix_i(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
-        let beta1 = self.beta1;
-        let (m, n) = (w.shape()[0], w.shape()[1]);
-        let leaf = &mut self.leaves[idx];
-        let gd = g.data();
-        // pass 1: mu += max over slice of g²
-        {
-            let (rows, cols) = leaf.accs.split_at_mut(1);
-            let row = &mut rows[0];
-            let col = &mut cols[0];
-            let mut rowmax = vec![0.0f32; m];
-            let mut colmax = vec![0.0f32; n];
-            for i in 0..m {
-                let base = i * n;
-                for j in 0..n {
-                    let g2 = gd[base + j] * gd[base + j];
-                    if g2 > rowmax[i] {
-                        rowmax[i] = g2;
-                    }
-                    if g2 > colmax[j] {
-                        colmax[j] = g2;
-                    }
-                }
-            }
-            for i in 0..m {
-                row[i] += rowmax[i];
-            }
-            for j in 0..n {
-                col[j] += colmax[j];
-            }
-        }
-        // pass 2: nu = min(mu_row, mu_col); update
-        let mom = leaf.mom.data_mut();
-        let wd = w.data_mut();
-        let row = &leaf.accs[0];
-        let col = &leaf.accs[1];
+        let mut rowmax = vec![0.0f32; m];
+        let mut colmax = vec![0.0f32; n];
         for i in 0..m {
             let base = i * n;
             for j in 0..n {
-                let k = base + j;
-                let nu = row[i].min(col[j]);
-                let upd = gd[k] * safe_rsqrt(nu);
-                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
-                wd[k] -= lr * mom[k];
+                let g2 = gd[base + j] * gd[base + j];
+                if g2 > rowmax[i] {
+                    rowmax[i] = g2;
+                }
+                if g2 > colmax[j] {
+                    colmax[j] = g2;
+                }
             }
+        }
+        for i in 0..m {
+            row[i] += rowmax[i];
+        }
+        for j in 0..n {
+            col[j] += colmax[j];
         }
     }
-
-    /// Generic rank-p path (conv kernels etc.). SM3-II semantics.
-    fn step_tensor_ii(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
-        let beta1 = self.beta1;
-        let shape = w.shape().to_vec();
-        let p = shape.len();
-        let leaf = &mut self.leaves[idx];
-        let mom = leaf.mom.data_mut();
-        let wd = w.data_mut();
-        let gd = g.data();
-        let mut new_accs: Vec<Vec<f32>> =
-            shape.iter().map(|&nn| vec![f32::NEG_INFINITY; nn]).collect();
-        for k in 0..wd.len() {
-            let mut nu = f32::INFINITY;
-            for a in 0..p {
-                let v = leaf.accs[a][axis_index(&shape, k, a)];
-                if v < nu {
-                    nu = v;
-                }
-            }
-            nu += gd[k] * gd[k];
-            let upd = gd[k] * safe_rsqrt(nu);
-            mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
-            wd[k] -= lr * mom[k];
-            for a in 0..p {
-                let ai = axis_index(&shape, k, a);
-                if nu > new_accs[a][ai] {
-                    new_accs[a][ai] = nu;
-                }
-            }
-        }
-        leaf.accs = new_accs;
-    }
-
-    fn step_tensor_i(&mut self, idx: usize, w: &mut Tensor, g: &Tensor, lr: f32) {
-        let beta1 = self.beta1;
-        let shape = w.shape().to_vec();
-        let p = shape.len();
-        let leaf = &mut self.leaves[idx];
-        let gd = g.data();
-        // pass 1: accumulate slice maxima of g²
-        for a in 0..p {
-            let mut mx = vec![0.0f32; shape[a]];
-            for k in 0..gd.len() {
-                let g2 = gd[k] * gd[k];
-                let ai = axis_index(&shape, k, a);
-                if g2 > mx[ai] {
-                    mx[ai] = g2;
-                }
-            }
-            for (acc, m) in leaf.accs[a].iter_mut().zip(mx) {
-                *acc += m;
-            }
-        }
-        // pass 2: update
-        let mom = leaf.mom.data_mut();
-        let wd = w.data_mut();
-        for k in 0..wd.len() {
-            let mut nu = f32::INFINITY;
-            for a in 0..p {
-                let v = leaf.accs[a][axis_index(&shape, k, a)];
-                if v < nu {
-                    nu = v;
-                }
-            }
+    // pass 2: nu = min(mu_row, mu_col); update
+    let wd = w.data_mut();
+    let row = &accs[0];
+    let col = &accs[1];
+    for i in 0..m {
+        let base = i * n;
+        for j in 0..n {
+            let k = base + j;
+            let nu = row[i].min(col[j]);
             let upd = gd[k] * safe_rsqrt(nu);
             mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
             wd[k] -= lr * mom[k];
         }
+    }
+}
+
+/// Generic rank-p path (conv kernels etc.). SM3-II semantics.
+fn step_tensor_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+                  g: &Tensor, lr: f32, beta1: f32) {
+    let shape = w.shape().to_vec();
+    let wd = w.data_mut();
+    let gd = g.data();
+    let mut new_accs: Vec<Vec<f32>> =
+        shape.iter().map(|&nn| vec![f32::NEG_INFINITY; nn]).collect();
+    for k in 0..wd.len() {
+        let mut nu = f32::INFINITY;
+        for (a, acc) in accs.iter().enumerate() {
+            let v = acc[axis_index(&shape, k, a)];
+            if v < nu {
+                nu = v;
+            }
+        }
+        nu += gd[k] * gd[k];
+        let upd = gd[k] * safe_rsqrt(nu);
+        mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+        wd[k] -= lr * mom[k];
+        for (a, na) in new_accs.iter_mut().enumerate() {
+            let ai = axis_index(&shape, k, a);
+            if nu > na[ai] {
+                na[ai] = nu;
+            }
+        }
+    }
+    for (dst, src) in accs.iter_mut().zip(new_accs) {
+        *dst = src;
+    }
+}
+
+fn step_tensor_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+                 g: &Tensor, lr: f32, beta1: f32) {
+    let shape = w.shape().to_vec();
+    let gd = g.data();
+    // pass 1: accumulate slice maxima of g²
+    for (a, acc) in accs.iter_mut().enumerate() {
+        let mut mx = vec![0.0f32; shape[a]];
+        for k in 0..gd.len() {
+            let g2 = gd[k] * gd[k];
+            let ai = axis_index(&shape, k, a);
+            if g2 > mx[ai] {
+                mx[ai] = g2;
+            }
+        }
+        for (av, m) in acc.iter_mut().zip(mx) {
+            *av += m;
+        }
+    }
+    // pass 2: update
+    let wd = w.data_mut();
+    for k in 0..wd.len() {
+        let mut nu = f32::INFINITY;
+        for (a, acc) in accs.iter().enumerate() {
+            let v = acc[axis_index(&shape, k, a)];
+            if v < nu {
+                nu = v;
+            }
+        }
+        let upd = gd[k] * safe_rsqrt(nu);
+        mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+        wd[k] -= lr * mom[k];
     }
 }
 
@@ -262,27 +267,62 @@ impl Optimizer for Sm3 {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.leaves.len());
+        let (beta1, variant) = (self.beta1, self.variant);
+        // Dequantize buffers hoisted out of the leaf loop (like the other
+        // bank optimizers): `read_into` reuses their capacity, so the f32
+        // path stays copy-only on the per-step hot path.
+        let mut acc_bufs: Vec<Vec<f32>> = Vec::new();
+        let mut mom = Vec::new();
         for idx in 0..params.len() {
             let rank = params[idx].rank();
             // Split borrows: temporarily move the tensor out.
             let mut w = std::mem::replace(&mut params[idx], Tensor::zeros(&[0]));
             let g = &grads[idx];
-            match (rank, self.variant) {
-                (0 | 1, _) => self.step_vector(idx, &mut w, g, lr),
-                (2, Sm3Variant::II) => self.step_matrix_ii(idx, &mut w, g, lr),
-                (2, Sm3Variant::I) => self.step_matrix_i(idx, &mut w, g, lr),
-                (_, Sm3Variant::II) => self.step_tensor_ii(idx, &mut w, g, lr),
-                (_, Sm3Variant::I) => self.step_tensor_i(idx, &mut w, g, lr),
+            // dequantize this leaf's state, step, re-quantize
+            let ids = &self.leaves[idx];
+            while acc_bufs.len() < ids.accs.len() {
+                acc_bufs.push(Vec::new());
             }
+            let accs = &mut acc_bufs[..ids.accs.len()];
+            for (buf, &id) in accs.iter_mut().zip(&ids.accs) {
+                self.store.read_into(id, buf);
+            }
+            self.store.read_into(ids.mom, &mut mom);
+            match (rank, variant) {
+                (0 | 1, _) => {
+                    step_vector(&mut accs[0], &mut mom, &mut w, g, lr, beta1)
+                }
+                (2, Sm3Variant::II) => {
+                    step_matrix_ii(accs, &mut mom, &mut w, g, lr, beta1)
+                }
+                (2, Sm3Variant::I) => {
+                    step_matrix_i(accs, &mut mom, &mut w, g, lr, beta1)
+                }
+                (_, Sm3Variant::II) => {
+                    step_tensor_ii(accs, &mut mom, &mut w, g, lr, beta1)
+                }
+                (_, Sm3Variant::I) => {
+                    step_tensor_i(accs, &mut mom, &mut w, g, lr, beta1)
+                }
+            }
+            for (buf, &id) in accs.iter().zip(&ids.accs) {
+                self.store.write(id, buf);
+            }
+            self.store.write(ids.mom, &mom);
             params[idx] = w;
         }
     }
 
     fn state_floats(&self) -> usize {
-        self.leaves
-            .iter()
-            .map(|l| l.accs.iter().map(Vec::len).sum::<usize>() + l.mom.len())
-            .sum()
+        self.store.state_floats()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.store.state_bytes()
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.store.dtype()
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
@@ -294,30 +334,34 @@ impl Optimizer for Sm3 {
         const AXIS_NAMES: [&str; 8] =
             ["acc0", "acc1", "acc2", "acc3", "acc4", "acc5", "acc6", "acc7"];
         let mut out = Vec::new();
-        for (i, leaf) in self.leaves.iter().enumerate() {
-            assert!(leaf.accs.len() <= AXIS_NAMES.len(),
+        for (i, ids) in self.leaves.iter().enumerate() {
+            assert!(ids.accs.len() <= AXIS_NAMES.len(),
                     "rank {} exceeds the {}-axis slot-name cap",
-                    leaf.accs.len(), AXIS_NAMES.len());
-            for (a, acc) in leaf.accs.iter().enumerate() {
+                    ids.accs.len(), AXIS_NAMES.len());
+            for (a, &id) in ids.accs.iter().enumerate() {
                 out.push((i, AXIS_NAMES[a],
-                          Tensor::from_vec(&[acc.len()], acc.clone())));
+                          Tensor::from_vec(&[self.store.slot_len(id)],
+                                           self.store.to_vec(id))));
             }
-            out.push((i, "mom", leaf.mom.clone()));
+            out.push((i, "mom",
+                      Tensor::from_vec(&self.specs[i].shape,
+                                       self.store.to_vec(ids.mom))));
         }
         out
     }
 
     fn load_state(&mut self, state: Vec<Tensor>) {
         let mut it = state.into_iter();
-        for leaf in self.leaves.iter_mut() {
-            for acc in leaf.accs.iter_mut() {
+        for i in 0..self.leaves.len() {
+            let ids = &self.leaves[i];
+            for &id in &ids.accs {
                 let t = it.next().expect("state underrun");
-                assert_eq!(t.len(), acc.len());
-                acc.copy_from_slice(t.data());
+                assert_eq!(t.len(), self.store.slot_len(id));
+                self.store.write(id, t.data());
             }
             let t = it.next().expect("state underrun");
-            assert_eq!(t.shape(), leaf.mom.shape());
-            leaf.mom = t;
+            assert_eq!(t.shape(), self.specs[i].shape.as_slice());
+            self.store.write(ids.mom, t.data());
         }
         assert!(it.next().is_none(), "state overrun");
     }
@@ -368,7 +412,7 @@ mod tests {
                 {
                     assert!(r + 1e-6 >= p, "row {i} not monotone");
                 }
-                prev_rows = opt.acc(0, 0).to_vec();
+                prev_rows = opt.acc(0, 0);
             }
         }
     }
@@ -407,6 +451,28 @@ mod tests {
         let mut p2 = vec![w0];
         for _ in 0..10 {
             let g = Tensor::randn(&[33], 1.0, &mut rng);
+            sm3.step(&mut p1, std::slice::from_ref(&g), 0.2);
+            ada.step(&mut p2, std::slice::from_ref(&g), 0.2);
+        }
+        assert_eq!(p1[0], p2[0]);
+    }
+
+    /// The singleton-cover equivalence must also hold quantized: both
+    /// optimizers see the same dequantized state and quantize the same
+    /// values, so the trajectories stay bitwise equal even at q8.
+    #[test]
+    fn vector_equals_adagrad_under_q8() {
+        let specs = vec![ParamSpec::new("b", &[70])];
+        let mut sm3 =
+            Sm3::with_dtype(&specs, Sm3Variant::II, 0.9, StateDtype::Q8);
+        let mut ada =
+            super::super::Adagrad::with_dtype(&specs, 0.9, StateDtype::Q8);
+        let mut rng = Rng::new(5);
+        let w0 = Tensor::randn(&[70], 1.0, &mut rng);
+        let mut p1 = vec![w0.clone()];
+        let mut p2 = vec![w0];
+        for _ in 0..10 {
+            let g = Tensor::randn(&[70], 1.0, &mut rng);
             sm3.step(&mut p1, std::slice::from_ref(&g), 0.2);
             ada.step(&mut p2, std::slice::from_ref(&g), 0.2);
         }
@@ -467,6 +533,33 @@ mod tests {
         assert_eq!(saved, restored);
     }
 
+    /// Quantized state round-trips bitwise through the state API: the
+    /// dequantized tensors re-quantize to identical codes (codec
+    /// idempotence contract).
+    #[test]
+    fn state_roundtrip_quantized_dtypes() {
+        for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+            let shape = [9usize, 13];
+            let specs = vec![ParamSpec::new("w", &shape)];
+            let mut opt =
+                Sm3::with_dtype(&specs, Sm3Variant::II, 0.9, dtype);
+            let mut rng = Rng::new(9);
+            let mut params = vec![Tensor::randn(&shape, 0.5, &mut rng)];
+            for _ in 0..4 {
+                let g = vec![Tensor::randn(&shape, 1.0, &mut rng)];
+                opt.step(&mut params, &g, 0.1);
+            }
+            let saved: Vec<Tensor> =
+                opt.state().into_iter().map(|(_, _, t)| t).collect();
+            let mut fresh =
+                Sm3::with_dtype(&specs, Sm3Variant::II, 0.9, dtype);
+            fresh.load_state(saved.clone());
+            let restored: Vec<Tensor> =
+                fresh.state().into_iter().map(|(_, _, t)| t).collect();
+            assert_eq!(saved, restored, "{dtype:?}");
+        }
+    }
+
     /// Regression: rank ≥ 5 tensors used to clamp axis slot names to
     /// "acc3", so axes 3, 4, … aliased one checkpoint slot. Every axis
     /// must get a distinct name and round-trip without aliasing.
@@ -501,5 +594,30 @@ mod tests {
         // acc floats only: 512 + 128 (mom is counted in state_floats)
         let acc_floats: usize = (0..2).map(|a| opt.acc(0, a).len()).sum();
         assert_eq!(acc_floats, 512 + 128);
+    }
+
+    /// The q8 second-moment state of a big matrix is ≥ 3.5× smaller than
+    /// f32 while the update still descends.
+    #[test]
+    fn q8_matrix_state_shrinks_and_descends() {
+        let specs = vec![ParamSpec::new("emb", &[256, 128])];
+        let f = Sm3::new(&specs, Sm3Variant::II, 0.9);
+        let mut q =
+            Sm3::with_dtype(&specs, Sm3Variant::II, 0.9, StateDtype::Q8);
+        assert_eq!(f.state_floats(), q.state_floats());
+        let red = f.state_bytes() as f64 / q.state_bytes() as f64;
+        assert!(red >= 3.5, "q8 reduction {red}");
+        let mut rng = Rng::new(13);
+        let target = Tensor::randn(&[256, 128], 1.0, &mut rng);
+        let mut params = vec![Tensor::zeros(&[256, 128])];
+        let loss = |p: &Tensor| p.zip(&target, |a, b| (a - b) * (a - b))
+            .sq_norm();
+        let l0 = loss(&params[0]);
+        for _ in 0..50 {
+            let g = params[0].zip(&target, |a, b| 2.0 * (a - b));
+            q.step(&mut params, &[g], 0.3);
+        }
+        let l1 = loss(&params[0]);
+        assert!(l1 < 0.5 * l0, "q8 SM3 failed to descend: {l0} -> {l1}");
     }
 }

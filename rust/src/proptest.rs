@@ -206,6 +206,59 @@ mod tests {
         crate::tensor::Tensor::from_vec(shape, gen::grad_vec(rng, n, 1.0))
     }
 
+    /// ISSUE 2 satellite: the bitwise serial == sharded guarantee must
+    /// survive quantized state. Quantization happens per slot vector of
+    /// one leaf and shards are whole leaves, so block boundaries never
+    /// straddle shard boundaries — every registry optimizer, q8 state,
+    /// 1/2/4 threads, multiple steps.
+    #[test]
+    fn parallel_step_is_bit_identical_to_serial_with_q8_state() {
+        use crate::optim::{self, parallel::ParallelStep, Optimizer,
+                           StateDtype};
+        use crate::tensor::Tensor;
+        forall("ParallelStep == serial @ q8, bitwise", |rng| {
+            (gen::param_specs(rng, 5, 4, 6), rng.next_u64())
+        }, |(specs, seed)| {
+            for name in optim::ALL {
+                for threads in [1usize, 2, 4] {
+                    let mut serial = optim::build_with_dtype(
+                        name, specs, 0.9, 0.98, StateDtype::Q8)
+                        .map_err(|e| e.to_string())?;
+                    let mut par = ParallelStep::from_registry_dtype(
+                        name, specs, 0.9, 0.98, threads, StateDtype::Q8)
+                        .map_err(|e| e.to_string())?;
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let init: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                        .collect();
+                    let mut pa = init.clone();
+                    let mut pb = init;
+                    for step in 0..3 {
+                        let grads: Vec<Tensor> = specs
+                            .iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect();
+                        serial.step(&mut pa, &grads, 0.1);
+                        par.step(&mut pb, &grads, 0.1);
+                        for (leaf, (a, b)) in
+                            pa.iter().zip(&pb).enumerate()
+                        {
+                            for (x, y) in a.data().iter().zip(b.data()) {
+                                if x.to_bits() != y.to_bits() {
+                                    return Err(format!(
+                                        "{name} x{threads} q8 step {step} \
+                                         leaf {leaf}: {x} != {y}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {

@@ -104,6 +104,42 @@ fn image_classifier_beats_chance() {
     assert!(top5 >= top1);
 }
 
+/// ISSUE 2 acceptance: q8 optimizer state must not cost measurable quality
+/// on the synthetic translation task — SM3 and Adam land within tolerance
+/// of their f32-state runs (same seed, same data stream), and still learn.
+#[test]
+fn q8_state_quality_matches_f32_on_translation() {
+    // |final_loss(q8) − final_loss(f32)| ≤ QSTATE_TOL · max(final_loss(f32), 1)
+    const QSTATE_TOL: f64 = 0.15;
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("mt_small") {
+        eprintln!("SKIP: mt_small not built");
+        return;
+    }
+    for (opt, lr) in [("sm3", 0.2), ("adam", 0.003)] {
+        let run = |dtype: sm3::optim::StateDtype| -> (f64, f64) {
+            let mut c = cfg("mt_small", opt, 30, lr);
+            c.state_dtype = dtype;
+            let mut t = Trainer::with_runtime(c, rt.clone()).unwrap();
+            let hist = t.train().unwrap();
+            (hist.steps.first().unwrap().loss,
+             hist.evals.last().unwrap().loss)
+        };
+        let (f0, f_final) = run(sm3::optim::StateDtype::F32);
+        let (q0, q_final) = run(sm3::optim::StateDtype::Q8);
+        // identical data + init ⇒ identical first step (state starts zero
+        // and the first quantization happens after the first update)
+        assert!((f0 - q0).abs() < 1e-9,
+                "{opt}: first-step loss must match ({f0} vs {q0})");
+        assert!(q_final < q0, "{opt} @ q8 failed to learn: {q0} -> {q_final}");
+        let tol = QSTATE_TOL * f_final.abs().max(1.0);
+        assert!((q_final - f_final).abs() <= tol,
+                "{opt}: q8 final eval loss {q_final:.4} vs f32 \
+                 {f_final:.4} (tol {tol:.4})");
+    }
+}
+
 #[test]
 fn sm3_trace_probes_capture_accumulators() {
     let _g = lock();
