@@ -1,7 +1,8 @@
 # Top-level targets. `make tier1` mirrors the repository's tier-1 gate
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
-.PHONY: tier1 build test lint fmt clippy bench-optim benches artifacts
+.PHONY: tier1 build test lint fmt clippy bench-optim bench-quick benches \
+	artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -23,6 +24,12 @@ lint: fmt clippy
 # Serial-vs-parallel optimizer-step numbers (EXPERIMENTS.md §Perf).
 bench-optim:
 	cargo bench --bench bench_optim
+
+# CI-sized bench_optim run: small spec set, short budgets, but every
+# bitwise equality assertion (chunked==whole-slot, serial==sharded)
+# executes. Mirrors the ci.yml step exactly.
+bench-quick:
+	BENCH_QUICK=1 cargo bench --bench bench_optim
 
 # Compile every harness=false bench target without running it (the CI
 # build-test job runs this too, so the benches cannot silently rot).

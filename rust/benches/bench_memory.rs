@@ -139,6 +139,69 @@ fn main() -> anyhow::Result<()> {
         assert!(q > f, "{opt}: q8 frontier {q} must exceed f32 {f}");
     }
 
+    // ---- step-path transient buffers (ISSUE 3 tentpole accounting) ------
+    // The PR 2 store dequantized EVERY slot of a leaf into full-length
+    // f32 buffers each step: the transient working set scaled with the
+    // largest leaf (Θ(leaf) — 2×33.5M floats for Adam's Transformer-Big
+    // embedding). The tiled kernels bound it by the streaming tile for
+    // element-wise leaves (and by the leaf only where reductions force
+    // it: SM3 matrix/tensor covers, Adafactor). f32 tiles lend storage
+    // outright — their scratch is zero; the figure below is the bf16/q8
+    // decode-scratch bound.
+    println!("\n=== step-path transient buffers (whole-slot vs tiled, \
+              tile {} elems) ===", sm3::optim::kernel::DEFAULT_CHUNK);
+    println!("  {:<16} {:<11} {:>16} {:>16} {:>9}",
+             "model", "optimizer", "whole-slot peak", "tiled bound",
+             "shrink");
+    let chunk = sm3::optim::kernel::DEFAULT_CHUNK;
+    let mut tlog = RunLogger::new(
+        Some("out/step_buffers.csv"),
+        "model,optimizer,whole_slot_peak_bytes,tiled_bound_bytes", false)?;
+    for (model, m) in [("transformer_big", &big), ("bert_large", &bert)] {
+        for opt in ["adam", "adagrad", "adafactor", "sm3", "sgdm"] {
+            let mut whole_peak = 0usize;
+            let mut tiled_peak = 0usize;
+            for s in &m.specs {
+                let leaf = SlotLayout::for_optimizer(
+                    opt, std::slice::from_ref(s))?.total_floats() * 4;
+                whole_peak = whole_peak.max(leaf);
+                let tiled = if sm3::optim::kernel::elementwise(
+                    opt, s.shape.len())
+                {
+                    2 * chunk * 4
+                } else {
+                    leaf
+                };
+                tiled_peak = tiled_peak.max(tiled);
+            }
+            println!("  {model:<16} {opt:<11} {:>13.2} MB {:>13.2} MB \
+                      {:>8.0}x",
+                     whole_peak as f64 / 1e6, tiled_peak as f64 / 1e6,
+                     whole_peak as f64 / tiled_peak as f64);
+            tlog.row(&[model.into(), opt.into(), whole_peak.to_string(),
+                       tiled_peak.to_string()])?;
+        }
+    }
+    tlog.flush()?;
+    // the memcpy the PR 2 store comment deferred: for the element-wise
+    // optimizers the transient working set must collapse from Θ(leaf) to
+    // Θ(tile) — orders of magnitude on a real inventory
+    for opt in ["adam", "adagrad", "sgdm"] {
+        let embed_peak = big
+            .specs
+            .iter()
+            .map(|s| SlotLayout::for_optimizer(opt, std::slice::from_ref(s))
+                .map(|l| l.total_floats() * 4))
+            .collect::<anyhow::Result<Vec<_>>>()?
+            .into_iter()
+            .max()
+            .unwrap();
+        let tiled = 2 * chunk * 4;
+        assert!(embed_peak >= 50 * tiled,
+                "{opt}: whole-slot peak {embed_peak} B not ≫ tiled \
+                 {tiled} B — inventory shrank?");
+    }
+
     // ---- state breakdown (the quantity the paper's abstract claims) -----
     println!("\n=== optimizer-state floats (exact arithmetic) ===");
     for (model, specs) in [
@@ -160,6 +223,6 @@ fn main() -> anyhow::Result<()> {
                  100.0 * (sm3 - d) as f64 / d as f64);
     }
     println!("\nCSV series: out/table1_memory.csv out/table2_memory.csv \
-              out/max_batch.csv out/qstate_memory.csv");
+              out/max_batch.csv out/qstate_memory.csv out/step_buffers.csv");
     Ok(())
 }

@@ -4,46 +4,64 @@
 //! by 3%" — fewer state reads/writes).
 //!
 //! Also benchmarks the ring all-reduce, the abstract-cover SM3 (the
-//! O(Σ|S_r|) path) against the co-dim-1 fast path, the `ParallelStep`
-//! sharded update engine against serial stepping (serial-vs-parallel
-//! numbers for EXPERIMENTS.md §Perf; bitwise equality is asserted before
-//! timing), and the quantized-state store (`optim::qstate`): measured
-//! state bytes and update throughput per dtype.
+//! O(Σ|S_r|) path) against the co-dim-1 fast path, the **chunked
+//! streaming kernels against the whole-slot path** (the memcpy the
+//! qstate store's PR 2 docs said to measure before removing), the
+//! `ParallelStep` sharded update engine against serial stepping —
+//! including a **skewed-leaf scenario** where one 32k×1024 embedding
+//! dominates and intra-leaf splitting is what keeps the workers busy —
+//! and the quantized-state store (`optim::qstate`).
+//!
+//! Every timed comparison asserts bitwise equality first, so this bench
+//! doubles as an execution gate: CI runs it with `BENCH_QUICK=1` (small
+//! spec set, short budgets), which keeps the equality assertions
+//! *executing* on every push instead of only compiling via `--no-run`.
 //!
 //! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv,
-//! out/perf_optim_parallel.csv, out/perf_optim_qstate.csv)
+//! out/perf_optim_chunked.csv, out/perf_optim_parallel.csv,
+//! out/perf_optim_qstate.csv); `BENCH_QUICK=1` or `make bench-quick`
+//! for the CI-sized variant.
 
 use sm3::bench_util::{bench, speedup, CsvWriter};
 use sm3::collectives::ring_allreduce;
 use sm3::memory::opt_state_bytes;
-use sm3::optim::{self, cover::{Cover, CoverSm3II}, Optimizer, ParamSpec,
-                 ParallelStep, StateDtype};
+use sm3::optim::{self, cover::{Cover, CoverSm3II}, kernel, Optimizer,
+                 ParamSpec, ParallelStep, SplitPolicy, StateDtype};
 use sm3::rng::Rng;
 use sm3::tensor::Tensor;
 use std::time::Duration;
 
-/// A transformer-block-shaped parameter set (~2.1M params).
-fn block_specs() -> Vec<ParamSpec> {
+/// One tile spanning any slot: the whole-slot reference configuration.
+const WHOLE_SLOT: usize = 1 << 30;
+
+/// A transformer-block-shaped parameter set (~2.1M params; quick: ~37k).
+fn block_specs(quick: bool) -> Vec<ParamSpec> {
+    let (v, d, ff) = if quick { (256, 64, 256) } else { (2048, 256, 1024) };
     vec![
-        ParamSpec::new("embed", &[2048, 256]),
-        ParamSpec::new("wq", &[256, 256]),
-        ParamSpec::new("wk", &[256, 256]),
-        ParamSpec::new("wv", &[256, 256]),
-        ParamSpec::new("wo", &[256, 256]),
-        ParamSpec::new("ffn_w1", &[256, 1024]),
-        ParamSpec::new("ffn_w2", &[1024, 256]),
-        ParamSpec::new("b1", &[1024]),
-        ParamSpec::new("b2", &[256]),
+        ParamSpec::new("embed", &[v, d]),
+        ParamSpec::new("wq", &[d, d]),
+        ParamSpec::new("wk", &[d, d]),
+        ParamSpec::new("wv", &[d, d]),
+        ParamSpec::new("wo", &[d, d]),
+        ParamSpec::new("ffn_w1", &[d, ff]),
+        ParamSpec::new("ffn_w2", &[ff, d]),
+        ParamSpec::new("b1", &[ff]),
+        ParamSpec::new("b2", &[d]),
     ]
 }
 
-/// A transformer-scale parameter set (~17M params, 42 leaves) — big enough
-/// that the host-side update loop dominates and sharding pays off.
-fn transformer_specs(layers: usize) -> Vec<ParamSpec> {
-    let (v, d, ff) = (8192usize, 512usize, 2048usize);
+/// A transformer-scale parameter set (~17M params, 42 leaves) — big
+/// enough that the host-side update loop dominates and sharding pays
+/// off. Quick mode shrinks every dimension (~170k params).
+fn transformer_specs(layers: usize, quick: bool) -> Vec<ParamSpec> {
+    let (v, d, ff) = if quick {
+        (1024usize, 64usize, 256usize)
+    } else {
+        (8192, 512, 2048)
+    };
     let mut specs = vec![
         ParamSpec::new("embed", &[v, d]),
-        ParamSpec::new("pos", &[1024, d]),
+        ParamSpec::new("pos", &[1024.min(v), d]),
     ];
     for l in 0..layers {
         for w in ["wq", "wk", "wv", "wo"] {
@@ -59,15 +77,31 @@ fn transformer_specs(layers: usize) -> Vec<ParamSpec> {
     specs
 }
 
-/// Assert the parallel engine's output is bitwise identical to serial over
-/// a few steps (pre-flight gate for the timing runs below), at any state
-/// storage precision.
-fn assert_bitwise_equal_dtype(name: &str, specs: &[ParamSpec],
-                              grads: &[Tensor], threads: usize,
-                              dtype: StateDtype) -> anyhow::Result<()> {
+/// The ISSUE 3 skewed scenario: one dominant embedding (32k×1024 ≈ 33.5M
+/// elements — quick: 2k×64) plus many small leaves. Under the whole-leaf
+/// plan the embedding serializes one worker; intra-leaf splitting is
+/// what buys parallel speedup here.
+fn skewed_specs(quick: bool) -> Vec<ParamSpec> {
+    let (rows, d) = if quick { (2048usize, 64usize) } else { (32768, 1024) };
+    let mut specs = vec![ParamSpec::new("embed", &[rows, d])];
+    for l in 0..8 {
+        specs.push(ParamSpec::new(format!("l{l}/w"), &[d, d]));
+        specs.push(ParamSpec::new(format!("l{l}/b"), &[d]));
+    }
+    specs
+}
+
+/// Assert the parallel engine's output is bitwise identical to serial
+/// over a few steps (pre-flight gate for the timing runs below), at any
+/// state storage precision and split policy.
+fn assert_parallel_bitwise(name: &str, specs: &[ParamSpec],
+                           grads: &[Tensor], threads: usize,
+                           dtype: StateDtype, policy: SplitPolicy)
+                           -> anyhow::Result<()> {
     let mut serial = optim::build_with_dtype(name, specs, 0.9, 0.98, dtype)?;
-    let mut par = ParallelStep::from_registry_dtype(name, specs, 0.9, 0.98,
-                                                    threads, dtype)?;
+    let mut par = ParallelStep::from_registry_opts(
+        name, specs, 0.9, 0.98, threads, dtype, kernel::DEFAULT_CHUNK,
+        policy)?;
     let mut pa: Vec<Tensor> =
         specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut pb = pa.clone();
@@ -78,21 +112,56 @@ fn assert_bitwise_equal_dtype(name: &str, specs: &[ParamSpec],
             for (x, y) in a.data().iter().zip(b.data()) {
                 anyhow::ensure!(
                     x.to_bits() == y.to_bits(),
-                    "{name} x{threads} @ {dtype:?} diverged at step {step} \
-                     leaf {leaf}: {x} vs {y}");
+                    "{name} x{threads} @ {dtype:?} {policy:?} diverged at \
+                     step {step} leaf {leaf}: {x} vs {y}");
             }
         }
     }
     Ok(())
 }
 
-fn assert_bitwise_equal(name: &str, specs: &[ParamSpec], grads: &[Tensor],
-                        threads: usize) -> anyhow::Result<()> {
-    assert_bitwise_equal_dtype(name, specs, grads, threads, StateDtype::F32)
+/// Assert the tiled streaming engine matches the whole-slot path bitwise
+/// (chunked-vs-whole pre-flight gate).
+fn assert_chunked_bitwise(name: &str, specs: &[ParamSpec], grads: &[Tensor],
+                          dtype: StateDtype, chunk: usize)
+                          -> anyhow::Result<()> {
+    let mut tiled = optim::build_with_opts(name, specs, 0.9, 0.98, dtype,
+                                           chunk)?;
+    let mut whole = optim::build_with_opts(name, specs, 0.9, 0.98, dtype,
+                                           WHOLE_SLOT)?;
+    let mut pa: Vec<Tensor> =
+        specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let mut pb = pa.clone();
+    for step in 0..2 {
+        tiled.step(&mut pa, grads, 0.01);
+        whole.step(&mut pb, grads, 0.01);
+        for (leaf, (a, b)) in pa.iter().zip(&pb).enumerate() {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                anyhow::ensure!(
+                    x.to_bits() == y.to_bits(),
+                    "{name} @ {dtype:?} chunk {chunk} diverged from \
+                     whole-slot at step {step} leaf {leaf}: {x} vs {y}");
+            }
+        }
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
-    let specs = block_specs();
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
+        .unwrap_or(false);
+    let budget = if quick {
+        Duration::from_millis(25)
+    } else {
+        Duration::from_millis(400)
+    };
+    let min_iters = if quick { 2 } else { 10 };
+    if quick {
+        println!("BENCH_QUICK=1 — small spec set, short budgets; equality \
+                  assertions run in full");
+    }
+
+    let specs = block_specs(quick);
     let d: usize = specs.iter().map(ParamSpec::numel).sum();
     println!("=== optimizer step throughput ({:.2}M params) ===",
              d as f64 / 1e6);
@@ -101,7 +170,6 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
         .collect();
-    let budget = Duration::from_millis(400);
 
     let mut csv = CsvWriter::create("out/perf_optim.csv",
                                     "optimizer,median_ns,elements_per_sec")?;
@@ -110,7 +178,7 @@ fn main() -> anyhow::Result<()> {
         let mut opt = optim::build(name, &specs, 0.9, 0.98)?;
         let mut params: Vec<Tensor> =
             specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-        let stats = bench(&format!("{name} step"), budget, 10, || {
+        let stats = bench(&format!("{name} step"), budget, min_iters, || {
             opt.step(&mut params, &grads, 0.01);
         });
         let eps = stats.throughput(d);
@@ -127,30 +195,87 @@ fn main() -> anyhow::Result<()> {
 
     // ---- abstract cover vs fast path ------------------------------------
     println!("\n=== abstract-cover SM3 (O(Σ|S_r|)) vs co-dim-1 fast path ===");
-    let (m, n) = (512, 512);
+    let (m, n) = if quick { (128, 128) } else { (512, 512) };
     let mut fast = optim::Sm3::new(&[ParamSpec::new("w", &[m, n])],
                                    optim::Sm3Variant::II, 0.0);
     let mut pf = vec![Tensor::zeros(&[m, n])];
     let g = Tensor::randn(&[m, n], 1.0, &mut rng);
-    let s1 = bench("fast path 512x512", budget, 10, || {
+    let s1 = bench(&format!("fast path {m}x{n}"), budget, min_iters, || {
         fast.step(&mut pf, std::slice::from_ref(&g), 0.01);
     });
     println!("  {s1}");
     let mut abs = CoverSm3II::new(Cover::rows_cols(m, n));
     let mut wa = Tensor::zeros(&[m * n]);
     let ga = g.clone().reshape(&[m * n]);
-    let s2 = bench("abstract cover 512x512", budget, 10, || {
+    let s2 = bench(&format!("abstract cover {m}x{n}"), budget, min_iters,
+                   || {
         abs.step(&mut wa, &ga, 0.01);
     });
     println!("  {s2}");
     println!("  speedup of the specialized path: {:.1}x",
              s2.median.as_secs_f64() / s1.median.as_secs_f64());
 
+    // ---- chunked streaming kernels vs whole-slot path --------------------
+    // (EXPERIMENTS.md §Step-kernel-tiling) The PR 2 store documented the
+    // whole-slot read/modify/write as a known tradeoff "to be removed
+    // with bench numbers": this section is those numbers. f32 measures
+    // the removed memcpys (tiles lend storage); bf16/q8 measure decoding
+    // into an O(tile) scratch vs a full-slot buffer.
+    println!("\n=== chunked step kernels vs whole-slot path \
+              ({:.2}M params, tile {}) ===", d as f64 / 1e6,
+             kernel::DEFAULT_CHUNK);
+    println!("  {:<11} {:<6} {:>14} {:>14} {:>9}",
+             "optimizer", "dtype", "whole ns/step", "tiled ns/step",
+             "speedup");
+    let mut ccsv = CsvWriter::create(
+        "out/perf_optim_chunked.csv",
+        "optimizer,dtype,chunk,median_ns,elements_per_sec,\
+         speedup_vs_whole_slot")?;
+    for name in ["adam", "adagrad", "sm3"] {
+        for dtype in StateDtype::ALL {
+            // bitwise equality gate before any timing (the acceptance
+            // criterion executes here under BENCH_QUICK=1 in CI)
+            assert_chunked_bitwise(name, &specs, &grads, dtype,
+                                   kernel::DEFAULT_CHUNK)?;
+            assert_chunked_bitwise(name, &specs, &grads, dtype, 64)?;
+            let mut whole = optim::build_with_opts(
+                name, &specs, 0.9, 0.98, dtype, WHOLE_SLOT)?;
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let base = bench(&format!("{name} @ {} whole-slot",
+                                      dtype.name()),
+                             budget, min_iters, || {
+                whole.step(&mut params, &grads, 0.01);
+            });
+            let mut tiled = optim::build_with_opts(
+                name, &specs, 0.9, 0.98, dtype, kernel::DEFAULT_CHUNK)?;
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let stats = bench(&format!("{name} @ {} tiled", dtype.name()),
+                              budget, min_iters, || {
+                tiled.step(&mut params, &grads, 0.01);
+            });
+            let sp = speedup(&base, &stats);
+            println!("  {name:<11} {:<6} {:>14.0} {:>14.0} {sp:>8.2}x",
+                     dtype.name(), base.per_iter_ns(),
+                     stats.per_iter_ns());
+            for (cfg, st, s) in [(WHOLE_SLOT, &base, 1.0),
+                                 (kernel::DEFAULT_CHUNK, &stats, sp)] {
+                ccsv.row(&[name.to_string(), dtype.name().to_string(),
+                           cfg.to_string(),
+                           format!("{:.0}", st.per_iter_ns()),
+                           format!("{:.0}", st.throughput(d)),
+                           format!("{s:.3}")])?;
+            }
+        }
+    }
+
     // ---- ParallelStep: serial vs sharded optimizer stepping --------------
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    let big_specs = transformer_specs(4);
+    let thread_list: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    let big_specs = transformer_specs(if quick { 1 } else { 4 }, quick);
     let dbig: usize = big_specs.iter().map(ParamSpec::numel).sum();
     println!("\n=== ParallelStep — sharded update, transformer-scale set \
               ({:.1}M params, {} leaves, {} host cores) ===",
@@ -161,35 +286,39 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut pcsv = CsvWriter::create(
         "out/perf_optim_parallel.csv",
-        "optimizer,threads,median_ns,elements_per_sec,speedup_vs_serial")?;
+        "optimizer,spec_set,plan,threads,median_ns,elements_per_sec,\
+         speedup_vs_serial")?;
     let mut sm3_x4_speedup = None;
     for name in ["sm3", "adam"] {
-        for threads in [2usize, 4, 8] {
-            assert_bitwise_equal(name, &big_specs, &grads_big, threads)?;
+        for &threads in thread_list {
+            assert_parallel_bitwise(name, &big_specs, &grads_big, threads,
+                                    StateDtype::F32,
+                                    SplitPolicy::IntraLeaf)?;
         }
         let mut serial = optim::build(name, &big_specs, 0.9, 0.98)?;
         let mut params: Vec<Tensor> =
             big_specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-        let base = bench(&format!("{name} serial"), budget, 10, || {
+        let base = bench(&format!("{name} serial"), budget, min_iters, || {
             serial.step(&mut params, &grads_big, 0.01);
         });
         println!("  {base}   {:.1}M elem/s", base.throughput(dbig) / 1e6);
-        pcsv.row(&[name.to_string(), "1".into(),
-                   format!("{:.0}", base.per_iter_ns()),
+        pcsv.row(&[name.to_string(), "transformer".into(), "serial".into(),
+                   "1".into(), format!("{:.0}", base.per_iter_ns()),
                    format!("{:.0}", base.throughput(dbig)), "1.00".into()])?;
-        for threads in [2usize, 4, 8] {
+        for &threads in thread_list {
             let mut par = ParallelStep::from_registry(
                 name, &big_specs, 0.9, 0.98, threads)?;
             let mut params: Vec<Tensor> =
                 big_specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
             let stats = bench(&format!("{name} x{threads} threads"), budget,
-                              10, || {
+                              min_iters, || {
                 par.step(&mut params, &grads_big, 0.01);
             });
             let sp = speedup(&base, &stats);
             println!("  {stats}   {:.1}M elem/s  ({sp:.2}x vs serial)",
                      stats.throughput(dbig) / 1e6);
-            pcsv.row(&[name.to_string(), threads.to_string(),
+            pcsv.row(&[name.to_string(), "transformer".into(),
+                       "intra_leaf".into(), threads.to_string(),
                        format!("{:.0}", stats.per_iter_ns()),
                        format!("{:.0}", stats.throughput(dbig)),
                        format!("{sp:.3}")])?;
@@ -203,9 +332,70 @@ fn main() -> anyhow::Result<()> {
                   (acceptance target >= 1.5x; bitwise-identical output)");
     }
 
+    // ---- skewed leaves: whole-leaf vs intra-leaf sharding ----------------
+    // (ISSUE 3) One embedding holds most of the elements. The whole-leaf
+    // plan caps speedup near total/dominant regardless of threads; the
+    // intra-leaf plan splits the embedding at q8-block boundaries.
+    let sk = skewed_specs(quick);
+    let dsk: usize = sk.iter().map(ParamSpec::numel).sum();
+    println!("\n=== skewed leaves — whole-leaf vs intra-leaf sharding \
+              ({:.1}M params, embedding = {:.0}% of elements) ===",
+             dsk as f64 / 1e6, 100.0 * sk[0].numel() as f64 / dsk as f64);
+    let grads_sk: Vec<Tensor> = sk
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+        .collect();
+    for name in ["adam"] {
+        for &threads in thread_list {
+            for policy in [SplitPolicy::WholeLeaf, SplitPolicy::IntraLeaf] {
+                assert_parallel_bitwise(name, &sk, &grads_sk, threads,
+                                        StateDtype::F32, policy)?;
+            }
+        }
+        let mut serial = optim::build(name, &sk, 0.9, 0.98)?;
+        let mut params: Vec<Tensor> =
+            sk.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        let base = bench(&format!("{name} serial (skewed)"), budget,
+                         min_iters, || {
+            serial.step(&mut params, &grads_sk, 0.01);
+        });
+        println!("  {base}");
+        pcsv.row(&[name.to_string(), "skewed".into(), "serial".into(),
+                   "1".into(), format!("{:.0}", base.per_iter_ns()),
+                   format!("{:.0}", base.throughput(dsk)), "1.00".into()])?;
+        for &threads in thread_list {
+            let mut pair = Vec::new();
+            for (plan, policy) in [("whole_leaf", SplitPolicy::WholeLeaf),
+                                   ("intra_leaf", SplitPolicy::IntraLeaf)] {
+                let mut par = ParallelStep::from_registry_opts(
+                    name, &sk, 0.9, 0.98, threads, StateDtype::F32,
+                    kernel::DEFAULT_CHUNK, policy)?;
+                let parts = par.parts_per_leaf()[0];
+                let mut params: Vec<Tensor> =
+                    sk.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+                let stats = bench(
+                    &format!("{name} x{threads} {plan} (embed parts: \
+                              {parts})"),
+                    budget, min_iters, || {
+                    par.step(&mut params, &grads_sk, 0.01);
+                });
+                let sp = speedup(&base, &stats);
+                println!("  {stats}   ({sp:.2}x vs serial)");
+                pcsv.row(&[name.to_string(), "skewed".into(), plan.into(),
+                           threads.to_string(),
+                           format!("{:.0}", stats.per_iter_ns()),
+                           format!("{:.0}", stats.throughput(dsk)),
+                           format!("{sp:.3}")])?;
+                pair.push(sp);
+            }
+            println!("    intra-leaf vs whole-leaf at x{threads}: {:.2}x",
+                     pair[1] / pair[0]);
+        }
+    }
+
     // ---- quantized state: measured bytes + throughput per dtype ---------
     // (EXPERIMENTS.md §Quantized state) q8 trades ~1.06 bytes/scalar of
-    // storage for one encode+decode pass per slot per step; this section
+    // storage for one encode+decode pass per tile per step; this section
     // measures what that pass costs next to the raw update arithmetic.
     println!("\n=== quantized optimizer state (optim::qstate) — \
               {:.2}M params ===", d as f64 / 1e6);
@@ -218,7 +408,8 @@ fn main() -> anyhow::Result<()> {
     for name in ["sm3", "adam"] {
         // determinism gate first: serial == sharded at q8, like the f32
         // ParallelStep section asserts before timing
-        assert_bitwise_equal_dtype(name, &specs, &grads, 4, StateDtype::Q8)?;
+        assert_parallel_bitwise(name, &specs, &grads, 4, StateDtype::Q8,
+                                SplitPolicy::IntraLeaf)?;
         // arithmetic, not a live build: the accountant's static bytes are
         // asserted equal to Optimizer::state_bytes in memory/mod.rs tests
         let f32_bytes = opt_state_bytes(name, &specs, StateDtype::F32)?;
@@ -229,7 +420,7 @@ fn main() -> anyhow::Result<()> {
             let mut params: Vec<Tensor> =
                 specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
             let stats = bench(&format!("{name} @ {}", dtype.name()), budget,
-                              10, || {
+                              min_iters, || {
                 opt.step(&mut params, &grads, 0.01);
             });
             let eps = stats.throughput(d);
@@ -250,11 +441,13 @@ fn main() -> anyhow::Result<()> {
 
     // ---- ring all-reduce -------------------------------------------------
     println!("\n=== ring all-reduce ({:.2}M floats) ===", d as f64 / 1e6);
-    for workers in [2usize, 4, 8] {
+    let worker_list: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    for &workers in worker_list {
         let base: Vec<Vec<f32>> = (0..workers)
             .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
             .collect();
-        let stats = bench(&format!("allreduce x{workers}"), budget, 5, || {
+        let stats = bench(&format!("allreduce x{workers}"), budget,
+                          if quick { 2 } else { 5 }, || {
             let mut ranks = base.clone();
             ring_allreduce(&mut ranks);
             std::hint::black_box(&ranks);

@@ -1,0 +1,77 @@
+//! Thread-local allocation counting for the steady-state
+//! allocation-free tests (ISSUE 3 satellite).
+//!
+//! Compiled into the lib's own test harness only (`#[cfg(test)]` at the
+//! `lib.rs` module declaration): release builds and integration tests
+//! use the plain system allocator. The counter is per-thread, so
+//! concurrently running unit tests on other harness threads cannot
+//! perturb a measurement — a test reads [`thread_allocs`] before and
+//! after the code under test on its own thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    // const-initialized: no lazy init and no Drop, so touching it from
+    // inside the allocator can itself never allocate
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap acquisitions (alloc / alloc_zeroed / realloc) observed on the
+/// calling thread since it started.
+pub fn thread_allocs() -> u64 {
+    ALLOCS.with(Cell::get)
+}
+
+pub struct CountingAlloc;
+
+#[inline]
+fn bump() {
+    // try_with: TLS may be unavailable during thread teardown — skip
+    // counting there rather than aborting inside the allocator
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_allocations_on_this_thread() {
+        let before = thread_allocs();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = thread_allocs();
+        assert!(after > before, "allocation not counted");
+        drop(v);
+        // pure arithmetic does not bump the counter
+        let b2 = thread_allocs();
+        let x = std::hint::black_box(3u64) * 7;
+        assert_eq!(thread_allocs(), b2);
+        assert_eq!(x, 21);
+    }
+}

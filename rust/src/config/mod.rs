@@ -21,9 +21,16 @@ pub struct OptimConfig {
     pub lr: f64,
     pub beta1: f64,
     pub beta2: f64,
-    /// "constant" | "rsqrt" | "linear" | "staircase" (Table 4)
+    /// "constant" | "rsqrt" | "linear" | "staircase" | "paper" (Table 4)
     pub schedule: String,
     pub warmup_steps: u64,
+    /// staircase floor η₀ (staircase schedule / sgdm "paper" default);
+    /// `None` derives `lr · 0.01` — the historically hard-coded value
+    pub lr_eta0: Option<f64>,
+    /// staircase per-stair decay α, must be in (0, 1)
+    pub lr_alpha: f64,
+    /// staircase stair width τ in steps; `None` derives `max(steps/10, 1)`
+    pub lr_tau: Option<u64>,
 }
 
 impl Default for OptimConfig {
@@ -35,6 +42,20 @@ impl Default for OptimConfig {
             beta2: 0.98,
             schedule: "constant".into(),
             warmup_steps: 100,
+            lr_eta0: None,
+            lr_alpha: 0.88,
+            lr_tau: None,
+        }
+    }
+}
+
+impl OptimConfig {
+    /// The staircase parameter bundle the schedule resolver consumes.
+    pub fn staircase_params(&self) -> crate::optim::schedule::StaircaseParams {
+        crate::optim::schedule::StaircaseParams {
+            eta0: self.lr_eta0,
+            alpha: self.lr_alpha,
+            tau: self.lr_tau,
         }
     }
 }
@@ -82,6 +103,11 @@ pub struct TrainConfig {
     /// "f32" | "bf16" | "q8" — see `optim::qstate` / DESIGN.md §10.
     /// Composes with `step_threads` (bitwise-identical at any count).
     pub state_dtype: StateDtype,
+    /// streaming tile for the chunked step kernels, in elements (split
+    /// path; must be a positive multiple of 64 — the q8 block). Affects
+    /// traversal granularity only: results are bitwise identical at any
+    /// value. See `optim::kernel` / DESIGN.md §10.
+    pub step_chunk: usize,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -102,6 +128,7 @@ impl Default for TrainConfig {
             workers: 1,
             step_threads: 1,
             state_dtype: StateDtype::F32,
+            step_chunk: crate::optim::kernel::DEFAULT_CHUNK,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -139,6 +166,16 @@ impl TrainConfig {
             beta2: get_f64(&optim_tbl, "beta2", od.beta2),
             schedule: get_str(&optim_tbl, "schedule", &od.schedule),
             warmup_steps: get_u64(&optim_tbl, "warmup_steps", od.warmup_steps),
+            lr_eta0: optim_tbl.get("lr_eta0").and_then(TomlValue::as_f64),
+            lr_alpha: get_f64(&optim_tbl, "lr_alpha", od.lr_alpha),
+            lr_tau: match optim_tbl.get("lr_tau").and_then(TomlValue::as_i64) {
+                // reject instead of casting: -1 as u64 would wrap to a
+                // huge stair width and "pass" the tau >= 1 check
+                Some(v) if v < 1 => bail!("[optim] lr_tau must be >= 1, \
+                                           got {v}"),
+                Some(v) => Some(v as u64),
+                None => None,
+            },
         };
 
         let train_tbl = root.get("train").cloned()
@@ -155,6 +192,16 @@ impl TrainConfig {
             state_dtype: StateDtype::parse(&get_str(
                 &train_tbl, "state_dtype", d.state_dtype.name()))
                 .context("[train] state_dtype")?,
+            step_chunk: match train_tbl.get("step_chunk")
+                .and_then(TomlValue::as_i64)
+            {
+                // reject instead of casting: -64 as u64 would wrap to a
+                // positive multiple of 64 and sail through check_chunk
+                Some(v) if v < 1 => bail!("[train] step_chunk must be \
+                                           >= 1, got {v}"),
+                Some(v) => v as usize,
+                None => d.step_chunk,
+            },
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -193,12 +240,31 @@ impl TrainConfig {
                    fused artifact keeps its optimizer state in f32 device \
                    buffers)", self.state_dtype.name());
         }
+        crate::optim::kernel::check_chunk(self.step_chunk)
+            .context("[train] step_chunk")?;
+        if self.step_chunk != crate::optim::kernel::DEFAULT_CHUNK
+            && self.exec == ExecMode::Fused
+        {
+            bail!("step_chunk applies to the split path only (the fused \
+                   artifact already contains the optimizer)");
+        }
         if !(0.0..1.0).contains(&self.optim.beta1) {
             bail!("beta1 out of range");
         }
         if self.optim.lr <= 0.0 {
             bail!("lr must be positive");
         }
+        if !matches!(self.optim.schedule.as_str(),
+                     "paper" | "constant" | "rsqrt" | "linear" | "staircase")
+        {
+            bail!("unknown schedule {:?} (paper|constant|rsqrt|linear|\
+                   staircase)", self.optim.schedule);
+        }
+        // staircase parameters: validated here so a bad config fails at
+        // parse time, not mid-run (resolve re-checks at schedule build)
+        self.optim.staircase_params()
+            .resolve(self.optim.lr, self.steps)
+            .context("[optim] lr_eta0 / lr_alpha / lr_tau")?;
         Ok(())
     }
 }
@@ -283,6 +349,61 @@ warmup_steps = 40
             "[train]\nstep_threads = 4\nstate_dtype = \"q8\"\n").unwrap();
         assert_eq!((cfg.step_threads, cfg.state_dtype),
                    (4, StateDtype::Q8));
+    }
+
+    #[test]
+    fn step_chunk_parses_defaults_and_validates() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.step_chunk, crate::optim::kernel::DEFAULT_CHUNK);
+        let cfg =
+            TrainConfig::from_toml("[train]\nstep_chunk = 128\n").unwrap();
+        assert_eq!(cfg.step_chunk, 128);
+        // must be a positive multiple of the q8 block; negatives must
+        // error rather than wrap through `as u64` (−64 would wrap to a
+        // huge multiple of 64)
+        assert!(TrainConfig::from_toml("[train]\nstep_chunk = 0\n").is_err());
+        assert!(TrainConfig::from_toml("[train]\nstep_chunk = 100\n").is_err());
+        assert!(TrainConfig::from_toml("[train]\nstep_chunk = -64\n").is_err());
+        // split-path knob: fused rejects a non-default tile
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\nstep_chunk = 128\n").is_err());
+        // composes with sharding and quantized state
+        let cfg = TrainConfig::from_toml(
+            "[train]\nstep_threads = 4\nstate_dtype = \"q8\"\n\
+             step_chunk = 256\n").unwrap();
+        assert_eq!((cfg.step_threads, cfg.state_dtype, cfg.step_chunk),
+                   (4, StateDtype::Q8, 256));
+    }
+
+    /// ISSUE 3 satellite: the staircase schedule's η₀/α/τ come from the
+    /// config (defaults preserved), and α is range-checked at parse time.
+    #[test]
+    fn staircase_lr_params_parse_and_validate() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.optim.lr_eta0, None);
+        assert_eq!(cfg.optim.lr_alpha, 0.88);
+        assert_eq!(cfg.optim.lr_tau, None);
+        let cfg = TrainConfig::from_toml(
+            "[optim]\nschedule = \"staircase\"\nlr_eta0 = 0.003\n\
+             lr_alpha = 0.5\nlr_tau = 400\n").unwrap();
+        assert_eq!(cfg.optim.lr_eta0, Some(0.003));
+        assert_eq!(cfg.optim.lr_alpha, 0.5);
+        assert_eq!(cfg.optim.lr_tau, Some(400));
+        let p = cfg.optim.staircase_params();
+        assert_eq!(p.resolve(cfg.optim.lr, cfg.steps).unwrap(),
+                   (0.003, 0.5, 400));
+        // 0 < alpha < 1 enforced at config parse, any schedule
+        assert!(TrainConfig::from_toml("[optim]\nlr_alpha = 1.0\n").is_err());
+        assert!(TrainConfig::from_toml("[optim]\nlr_alpha = 0.0\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[optim]\nschedule = \"staircase\"\nlr_alpha = 2.0\n").is_err());
+        // unknown schedule names now fail instead of silently falling
+        // back to constant
+        assert!(TrainConfig::from_toml(
+            "[optim]\nschedule = \"cosine\"\n").is_err());
+        // negative lr_tau must error, not wrap through `as u64`
+        assert!(TrainConfig::from_toml("[optim]\nlr_tau = -1\n").is_err());
+        assert!(TrainConfig::from_toml("[optim]\nlr_tau = 0\n").is_err());
     }
 
     #[test]

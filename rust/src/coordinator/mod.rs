@@ -25,19 +25,23 @@ mod trainer;
 pub use trainer::{EvalRecord, RunHistory, StepRecord, Trainer};
 
 use crate::config::TrainConfig;
-use crate::optim::schedule::{paper_default, Schedule};
+use crate::optim::schedule::{paper_default_with, Schedule};
 
 /// Resolve the schedule from config (paper Table 4 defaults by optimizer
-/// unless the config overrides the shape).
-pub fn schedule_for(cfg: &TrainConfig, d_model: usize) -> Schedule {
+/// unless the config overrides the shape). Staircase parameters come
+/// from `[optim] lr_eta0 / lr_alpha / lr_tau` (defaults preserved);
+/// unknown schedule names and out-of-range parameters are errors — the
+/// old silent fallback to a constant schedule hid config typos.
+pub fn schedule_for(cfg: &TrainConfig, d_model: usize)
+                    -> anyhow::Result<Schedule> {
+    let stair = cfg.optim.staircase_params();
     match cfg.optim.schedule.as_str() {
-        "paper" => paper_default(&cfg.optim.name, cfg.optim.lr,
-                                 cfg.optim.warmup_steps, d_model, cfg.steps),
-        name => Schedule::from_name(name, cfg.optim.lr,
-                                    cfg.optim.warmup_steps, d_model,
-                                    cfg.steps)
-            .unwrap_or_else(|_| Schedule::constant(cfg.optim.lr,
-                                                   cfg.optim.warmup_steps)),
+        "paper" => paper_default_with(&cfg.optim.name, cfg.optim.lr,
+                                      cfg.optim.warmup_steps, d_model,
+                                      cfg.steps, &stair),
+        name => Schedule::from_name_with(name, cfg.optim.lr,
+                                         cfg.optim.warmup_steps, d_model,
+                                         cfg.steps, &stair),
     }
 }
 
@@ -51,11 +55,33 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.optim.schedule = "paper".into();
         cfg.optim.name = "sm3".into();
-        let s = schedule_for(&cfg, 128);
+        let s = schedule_for(&cfg, 128).unwrap();
         assert_eq!(s.lr(10_000), cfg.optim.lr); // constant past warmup
 
         cfg.optim.name = "adam".into();
-        let s = schedule_for(&cfg, 128);
+        let s = schedule_for(&cfg, 128).unwrap();
         assert!(s.lr(50_000) < s.lr(200)); // rsqrt decays
+    }
+
+    #[test]
+    fn schedule_resolution_uses_config_staircase_params() {
+        let mut cfg = TrainConfig::default();
+        cfg.optim.schedule = "staircase".into();
+        cfg.optim.lr = 1.0;
+        cfg.optim.warmup_steps = 0;
+        cfg.optim.lr_alpha = 0.5;
+        cfg.optim.lr_tau = Some(100);
+        cfg.optim.lr_eta0 = Some(0.125);
+        let s = schedule_for(&cfg, 128).unwrap();
+        assert_eq!(s.lr(50), 1.0);
+        assert_eq!(s.lr(150), 0.5);
+        assert_eq!(s.lr(1_000_000), 0.125); // the configured floor
+        // invalid alpha is an error, not a silent constant schedule
+        cfg.optim.lr_alpha = 1.5;
+        assert!(schedule_for(&cfg, 128).is_err());
+        // unknown names error too
+        cfg.optim.lr_alpha = 0.5;
+        cfg.optim.schedule = "cosine".into();
+        assert!(schedule_for(&cfg, 128).is_err());
     }
 }

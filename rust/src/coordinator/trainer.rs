@@ -101,7 +101,8 @@ impl Trainer {
     /// the benches construct many trainers over the same artifacts.
     pub fn with_runtime(cfg: TrainConfig, runtime: Arc<Runtime>) -> Result<Self> {
         let meta = runtime.manifest.model(&cfg.model)?.clone();
-        let schedule = super::schedule_for(&cfg, meta.d_model.max(1));
+        let schedule = super::schedule_for(&cfg, meta.d_model.max(1))
+            .context("resolving the LR schedule")?;
 
         let params = load_init_params(&cfg.artifacts_dir, &meta)?;
 
@@ -113,18 +114,23 @@ impl Trainer {
                 let specs = meta.param_specs();
                 let (beta1, beta2) =
                     (cfg.optim.beta1 as f32, cfg.optim.beta2 as f32);
-                // step_threads > 1 shards the update across host threads;
-                // results stay bitwise identical (see optim::parallel).
-                // state_dtype selects the slot storage precision
-                // (optim::qstate); it composes with sharding because q8
-                // blocks never straddle shard boundaries.
+                // step_threads > 1 shards the update across host threads,
+                // splitting dominant element-wise leaves at q8-block
+                // boundaries (intra-leaf sharding); results stay bitwise
+                // identical (see optim::parallel). state_dtype selects
+                // the slot storage precision (optim::qstate) and
+                // step_chunk the streaming tile (optim::kernel); all
+                // three compose because q8 blocks never straddle tile or
+                // shard boundaries.
                 let opt: Box<dyn Optimizer> = if cfg.step_threads > 1 {
-                    Box::new(optim::ParallelStep::from_registry_dtype(
+                    Box::new(optim::ParallelStep::from_registry_opts(
                         &cfg.optim.name, &specs, beta1, beta2,
-                        cfg.step_threads, cfg.state_dtype)?)
+                        cfg.step_threads, cfg.state_dtype, cfg.step_chunk,
+                        optim::parallel::SplitPolicy::IntraLeaf)?)
                 } else {
-                    optim::build_with_dtype(&cfg.optim.name, &specs, beta1,
-                                            beta2, cfg.state_dtype)?
+                    optim::build_with_opts(&cfg.optim.name, &specs, beta1,
+                                           beta2, cfg.state_dtype,
+                                           cfg.step_chunk)?
                 };
                 Engine::Split { grad_art, params, opt }
             }

@@ -15,16 +15,21 @@
 //!   memory accountant that reproduces the paper's Tables 1–2, metrics
 //!   (BLEU, perplexity, accuracy), checkpointing, and the PJRT runtime
 //!   that executes the AOT artifacts. Python never runs at training time.
-//!   On the split path the per-leaf optimizer update shards across host
-//!   threads ([`optim::parallel`]) with bitwise-identical results, and
-//!   optimizer state can be stored quantized ([`optim::qstate`]: f32,
-//!   bf16, or block-wise 8-bit) while the update arithmetic stays f32.
+//!   On the split path the optimizer update streams through tiled step
+//!   kernels ([`optim::kernel`]: zero-copy at f32, O(tile) scratch at
+//!   bf16/q8) and shards across host threads ([`optim::parallel`], with
+//!   intra-leaf splitting of dominant element-wise leaves) with
+//!   bitwise-identical results; optimizer state can be stored quantized
+//!   ([`optim::qstate`]: f32, bf16, or block-wise 8-bit) while the
+//!   update arithmetic stays f32.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for measured results. This offline
 //! build stubs the PJRT bindings (DESIGN.md §9): everything except HLO
 //! artifact *execution* builds, runs, and is tested without them.
 
+#[cfg(test)]
+mod alloc_count;
 pub mod bench_util;
 pub mod checkpoint;
 pub mod cli;

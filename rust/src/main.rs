@@ -31,6 +31,7 @@ fn commands() -> Vec<Command> {
             .option("workers", "data-parallel worker count")
             .option("step-threads", "host threads for the optimizer update (1 = serial; bitwise-identical results)")
             .option("state-dtype", "optimizer-state storage precision: f32 | bf16 | q8 (split path)")
+            .option("step-chunk", "streaming tile for the chunked step kernels, in elements (multiple of 64; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
@@ -108,6 +109,9 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(d) = args.opt("state-dtype") {
         cfg.state_dtype = sm3::optim::StateDtype::parse(d)?;
     }
+    if let Some(c) = args.opt_count("step-chunk")? {
+        cfg.step_chunk = c; // cfg.validate() checks block alignment
+    }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;
     }
@@ -132,9 +136,10 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
     }
     println!(
         "sm3-train: model={} optimizer={} exec={:?} steps={} workers={} \
-         grad_accum={} step_threads={} state_dtype={}",
+         grad_accum={} step_threads={} state_dtype={} step_chunk={}",
         cfg.model, cfg.optim.name, cfg.exec, cfg.steps, cfg.workers,
-        cfg.grad_accum, cfg.step_threads, cfg.state_dtype.name()
+        cfg.grad_accum, cfg.step_threads, cfg.state_dtype.name(),
+        cfg.step_chunk
     );
     let mut trainer = Trainer::new(cfg.clone())?;
     println!("  platform: {}", trainer.runtime().platform());

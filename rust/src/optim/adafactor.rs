@@ -41,8 +41,21 @@ pub struct Adafactor {
     mom_ids: Vec<usize>,
     store: QuantizedSlots,
     specs: Vec<ParamSpec>,
-    /// scratch buffer for the unclipped update (reused across leaves)
+    /// Scratch for the unclipped update, plus dequantize buffers for the
+    /// momentum and the row/col (or full-v) statistics — all struct-held
+    /// and reused across leaves and steps, so steady-state `step()` calls
+    /// are allocation-free (asserted by the counting-allocator test in
+    /// `optim::tests`; ISSUE 3 satellite). Resident cost: Θ(largest
+    /// leaf) for a whole-model instance — free, since the RMS clip makes
+    /// that buffer live during every step anyway. Under `ParallelStep`
+    /// (one Adafactor per leaf — never split: the clip is a whole-leaf
+    /// reduction) the retained buffers sum to ~2·d floats across
+    /// instances, trading resident bytes for allocation-free steps; PR 2
+    /// made the opposite call, this PR's satellite reverses it.
     scratch: Vec<f32>,
+    mom_buf: Vec<f32>,
+    stat_a: Vec<f32>,
+    stat_b: Vec<f32>,
 }
 
 impl Adafactor {
@@ -69,7 +82,8 @@ impl Adafactor {
             mom_ids.push(store.add_zeros(s.numel()));
         }
         Self { beta1, beta2, kinds, mom_ids, store,
-               specs: specs.to_vec(), scratch: Vec::new() }
+               specs: specs.to_vec(), scratch: Vec::new(),
+               mom_buf: Vec::new(), stat_a: Vec::new(), stat_b: Vec::new() }
     }
 
     /// (rows, cols) of a factored leaf, `None` for a full-v leaf (tests).
@@ -88,21 +102,19 @@ impl Optimizer for Adafactor {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let (b1, b2) = (self.beta1, self.beta2);
-        let mut mom = Vec::new();
-        let mut stat_a = Vec::new();
-        let mut stat_b = Vec::new();
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            self.store.read_into(self.mom_ids[idx], &mut mom);
+            self.store.read_into(self.mom_ids[idx], &mut self.mom_buf);
+            let mom = &mut self.mom_buf;
             let kind = self.kinds[idx];
             match kind {
                 SlotKind::Factored { vr: vr_id, vc: vc_id, rows, cols } => {
                     let (m, n) = (rows, cols);
-                    self.store.read_into(vr_id, &mut stat_a);
-                    self.store.read_into(vc_id, &mut stat_b);
-                    let vr = &mut stat_a;
-                    let vc = &mut stat_b;
+                    self.store.read_into(vr_id, &mut self.stat_a);
+                    self.store.read_into(vc_id, &mut self.stat_b);
+                    let vr = &mut self.stat_a;
+                    let vc = &mut self.stat_b;
                     // update factored stats: row/col means of g² + eps
                     for i in 0..m {
                         let mut s = 0.0f32;
@@ -145,8 +157,8 @@ impl Optimizer for Adafactor {
                     self.store.write(vc_id, vc);
                 }
                 SlotKind::Full { v: v_id } => {
-                    self.store.read_into(v_id, &mut stat_a);
-                    let v = &mut stat_a;
+                    self.store.read_into(v_id, &mut self.stat_a);
+                    let v = &mut self.stat_a;
                     self.scratch.clear();
                     self.scratch.resize(wd.len(), 0.0);
                     let mut sumsq = 0.0f32;
@@ -166,14 +178,11 @@ impl Optimizer for Adafactor {
                     self.store.write(v_id, v);
                 }
             }
-            self.store.write(self.mom_ids[idx], &mom);
+            self.store.write(self.mom_ids[idx], &self.mom_buf);
         }
-        // Release the scratch between steps: the resize above zero-fills
-        // either way, so retained capacity buys nothing, and ParallelStep
-        // holds one Adafactor per leaf — kept buffers would sum to Θ(d)
-        // resident scratch in a crate whose headline metric is optimizer
-        // memory.
-        self.scratch = Vec::new();
+        // Scratch and dequantize buffers are retained between steps —
+        // see the field docs for the resident-memory tradeoff this makes
+        // under the per-leaf ParallelStep configuration.
     }
 
     fn state_floats(&self) -> usize {

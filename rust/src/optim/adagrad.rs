@@ -1,12 +1,16 @@
 //! Adagrad (Duchi, Hazan & Singer) with heavy-ball momentum — the
 //! linear-memory method SM3 is measured against (paper Eq. 1–2).
 
+use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
-use super::{safe_rsqrt, Optimizer, ParamSpec};
+use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
 pub struct Adagrad {
     beta1: f32,
+    /// streaming tile (elements; multiple of the q8 block)
+    chunk: usize,
+    scratch: ChunkScratch,
     /// leaf `i`: slot `2i` is the elementwise accumulator γ (Eq. 1),
     /// slot `2i + 1` is the momentum
     slots: QuantizedSlots,
@@ -20,12 +24,19 @@ impl Adagrad {
 
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32,
                       dtype: StateDtype) -> Self {
+        Self::with_opts(specs, beta1, dtype, kernel::DEFAULT_CHUNK)
+    }
+
+    pub fn with_opts(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+                     chunk: usize) -> Self {
+        kernel::check_chunk(chunk).unwrap();
         let mut slots = QuantizedSlots::new(dtype);
         for s in specs {
             slots.add_zeros(s.numel()); // acc
             slots.add_zeros(s.numel()); // mom
         }
-        Self { beta1, slots, specs: specs.to_vec() }
+        Self { beta1, chunk, scratch: ChunkScratch::default(), slots,
+               specs: specs.to_vec() }
     }
 
     /// The full elementwise second-moment statistics γ_t (Fig. 1 / Fig. 5),
@@ -42,22 +53,24 @@ impl Optimizer for Adagrad {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let beta1 = self.beta1;
-        let (mut acc, mut mom) = (Vec::new(), Vec::new());
         for idx in 0..params.len() {
-            let wd = params[idx].data_mut();
-            let gd = grads[idx].data();
-            self.slots.read_into(2 * idx, &mut acc);
-            self.slots.read_into(2 * idx + 1, &mut mom);
-            for k in 0..wd.len() {
-                let nu = acc[k] + gd[k] * gd[k];
-                let upd = gd[k] * safe_rsqrt(nu);
-                mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
-                wd[k] -= lr * mom[k];
-                acc[k] = nu;
-            }
-            self.slots.write(2 * idx, &acc);
-            self.slots.write(2 * idx + 1, &mom);
+            kernel::step_chunked2(
+                &mut self.slots, 2 * idx, 2 * idx + 1, self.chunk,
+                &mut self.scratch, params[idx].data_mut(), grads[idx].data(),
+                |w, g, acc, mom| {
+                    kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+                });
         }
+    }
+
+    fn step_flat(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(self.specs.len(), 1,
+                   "step_flat needs a single-leaf instance");
+        let beta1 = self.beta1;
+        kernel::step_chunked2(&mut self.slots, 0, 1, self.chunk,
+                              &mut self.scratch, w, g, |w, g, acc, mom| {
+            kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+        });
     }
 
     fn state_floats(&self) -> usize {

@@ -1,6 +1,7 @@
 //! Adam (Kingma & Ba) — the 2×d-state baseline whose memory footprint
 //! motivates the paper (Tables 1–2).
 
+use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
@@ -13,6 +14,9 @@ pub struct Adam {
     /// deliberately NOT stored through the quantized slots (q8 would
     /// perturb `beta^t`)
     t: f32,
+    /// streaming tile (elements; multiple of the q8 block)
+    chunk: usize,
+    scratch: ChunkScratch,
     /// leaf `i`: slot `2i` is the first moment m, slot `2i + 1` the
     /// second moment v
     slots: QuantizedSlots,
@@ -26,12 +30,28 @@ impl Adam {
 
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
                       dtype: StateDtype) -> Self {
+        Self::with_opts(specs, beta1, beta2, eps, dtype,
+                        kernel::DEFAULT_CHUNK)
+    }
+
+    pub fn with_opts(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
+                     dtype: StateDtype, chunk: usize) -> Self {
+        kernel::check_chunk(chunk).unwrap();
         let mut slots = QuantizedSlots::new(dtype);
         for s in specs {
             slots.add_zeros(s.numel()); // m
             slots.add_zeros(s.numel()); // v
         }
-        Self { beta1, beta2, eps, t: 0.0, slots, specs: specs.to_vec() }
+        Self { beta1, beta2, eps, t: 0.0, chunk,
+               scratch: ChunkScratch::default(), slots,
+               specs: specs.to_vec() }
+    }
+
+    /// Advance the step count and return this step's `(bc1, bc2)` bias
+    /// corrections — f32 powers, matching the kernel exactly.
+    fn advance(&mut self) -> (f32, f32) {
+        self.t += 1.0;
+        (1.0 - self.beta1.powf(self.t), 1.0 - self.beta2.powf(self.t))
     }
 }
 
@@ -41,27 +61,27 @@ impl Optimizer for Adam {
     }
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        self.t += 1.0;
-        let (b1, b2) = (self.beta1, self.beta2);
-        // f32 powers, matching the kernel exactly
-        let bc1 = 1.0 - b1.powf(self.t);
-        let bc2 = 1.0 - b2.powf(self.t);
-        let (mut m, mut v) = (Vec::new(), Vec::new());
+        let (bc1, bc2) = self.advance();
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
         for idx in 0..params.len() {
-            let wd = params[idx].data_mut();
-            let gd = grads[idx].data();
-            self.slots.read_into(2 * idx, &mut m);
-            self.slots.read_into(2 * idx + 1, &mut v);
-            for k in 0..wd.len() {
-                m[k] = b1 * m[k] + (1.0 - b1) * gd[k];
-                v[k] = b2 * v[k] + (1.0 - b2) * gd[k] * gd[k];
-                let mhat = m[k] / bc1;
-                let vhat = v[k] / bc2;
-                wd[k] -= lr * mhat / (vhat.sqrt() + self.eps);
-            }
-            self.slots.write(2 * idx, &m);
-            self.slots.write(2 * idx + 1, &v);
+            kernel::step_chunked2(
+                &mut self.slots, 2 * idx, 2 * idx + 1, self.chunk,
+                &mut self.scratch, params[idx].data_mut(), grads[idx].data(),
+                |w, g, m, v| {
+                    kernel::adam_chunk(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
+                });
         }
+    }
+
+    fn step_flat(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(self.specs.len(), 1,
+                   "step_flat needs a single-leaf instance");
+        let (bc1, bc2) = self.advance();
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        kernel::step_chunked2(&mut self.slots, 0, 1, self.chunk,
+                              &mut self.scratch, w, g, |w, g, m, v| {
+            kernel::adam_chunk(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
+        });
     }
 
     fn state_floats(&self) -> usize {

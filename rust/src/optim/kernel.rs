@@ -1,0 +1,218 @@
+//! The shared step-kernel layer: per-element update kernels and the
+//! tile-streaming drivers that run them over quantized state.
+//!
+//! Before this layer every optimizer in the bank carried its own copy of
+//! the `read_into` / loop / `write` scaffolding and paid a full-slot
+//! dequantize→buffer→requantize round trip per slot per step. The
+//! drivers here ([`step_chunked1`] / [`step_chunked2`]) stream a leaf's
+//! state through the `qstate` [`ChunkCursor`] in fixed tiles instead:
+//! f32 tiles lend the backing storage (zero copies), bf16/q8 tiles
+//! decode into an O(tile) scratch and commit on drop. The kernels
+//! themselves ([`adagrad_chunk`], [`adam_chunk`], [`sgdm_chunk`]) are the
+//! exact per-element f32 op sequences the optimizers inlined before, so
+//! the streamed trajectory is bitwise identical to the whole-slot path
+//! (property-tested in `crate::proptest`).
+//!
+//! Only *element-wise* updates fit this shape — [`elementwise`] says
+//! which (optimizer, leaf-rank) pairs qualify. SM3's matrix/tensor
+//! covers and Adafactor couple elements through row/col reductions and
+//! keep leaf-granular two-pass updates (with scratch hoisted into their
+//! structs so steady-state steps stay allocation-free). The same
+//! predicate gates `ParallelStep`'s intra-leaf sharding: element-wise
+//! leaves may be split at q8-block-aligned boundaries with no change to
+//! any element's arithmetic or quantization.
+
+use super::qstate::QuantizedSlots;
+use super::safe_rsqrt;
+use anyhow::ensure;
+
+/// Elements per q8 block — the alignment unit for tiles and shard splits.
+pub use super::qstate::codec::Q8_BLOCK;
+
+/// Default streaming tile: 4096 scalars = 64 q8 blocks = 16 KiB of f32
+/// scratch per slot — small enough to live in L1/L2 alongside the param
+/// and grad tiles, large enough to amortize the per-tile dispatch.
+pub const DEFAULT_CHUNK: usize = 4096;
+
+/// Validate a tile size (config key `step_chunk`): positive multiple of
+/// the q8 block, so tiles always start on block boundaries.
+pub fn check_chunk(chunk: usize) -> anyhow::Result<()> {
+    ensure!(chunk > 0 && chunk % Q8_BLOCK == 0,
+            "step_chunk must be a positive multiple of {Q8_BLOCK} \
+             (got {chunk})");
+    Ok(())
+}
+
+/// Can `name`'s update of a rank-`rank` leaf be expressed as a
+/// per-element kernel (and therefore sharded *inside* the leaf)?
+///
+/// Adagrad, Adam and SGD+momentum update every element independently at
+/// any rank. SM3 is element-wise only under the singleton cover
+/// (rank ≤ 1 — where it coincides with Adagrad); its matrix/tensor
+/// covers fold each `nu` into row/col maxima. Adafactor is never
+/// element-wise: even its full-`v` vector path ends in a whole-leaf RMS
+/// clip.
+pub fn elementwise(name: &str, rank: usize) -> bool {
+    match name {
+        "adagrad" | "adam" | "sgdm" => true,
+        "sm3" | "sm3i" => rank <= 1,
+        _ => false,
+    }
+}
+
+/// Reusable decode scratch for up to two streamed slots. Lives in the
+/// optimizer struct so steady-state steps allocate nothing; f32 stores
+/// never touch it.
+#[derive(Default)]
+pub struct ChunkScratch {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Stream one state slot alongside the leaf's param/grad data in `tile`-
+/// sized pieces, calling `f(w, g, s)` per tile. Slot, param and grad
+/// must have equal length.
+pub fn step_chunked1(
+    slots: &mut QuantizedSlots, id: usize, tile: usize,
+    scratch: &mut ChunkScratch, w: &mut [f32], g: &[f32],
+    mut f: impl FnMut(&mut [f32], &[f32], &mut [f32]),
+) {
+    debug_assert_eq!(slots.slot_len(id), w.len());
+    debug_assert_eq!(g.len(), w.len());
+    let mut cur = slots.slot_mut(id).chunks_mut(tile, &mut scratch.a);
+    while let Some(mut t) = cur.next_tile() {
+        let (off, n) = (t.offset(), t.len());
+        f(&mut w[off..off + n], &g[off..off + n], &mut t);
+    }
+}
+
+/// Stream two state slots (e.g. accumulator + momentum) in lockstep with
+/// the leaf's param/grad data, calling `f(w, g, a, b)` per tile.
+#[allow(clippy::too_many_arguments)]
+pub fn step_chunked2(
+    slots: &mut QuantizedSlots, id_a: usize, id_b: usize, tile: usize,
+    scratch: &mut ChunkScratch, w: &mut [f32], g: &[f32],
+    mut f: impl FnMut(&mut [f32], &[f32], &mut [f32], &mut [f32]),
+) {
+    debug_assert_eq!(slots.slot_len(id_a), w.len());
+    debug_assert_eq!(slots.slot_len(id_b), w.len());
+    debug_assert_eq!(g.len(), w.len());
+    let (sa, sb) = slots.slot_pair_mut(id_a, id_b);
+    let mut ca = sa.chunks_mut(tile, &mut scratch.a);
+    let mut cb = sb.chunks_mut(tile, &mut scratch.b);
+    while let Some(mut ta) = ca.next_tile() {
+        let mut tb = cb.next_tile().expect("slot lengths diverge");
+        let (off, n) = (ta.offset(), ta.len());
+        debug_assert_eq!(tb.len(), n);
+        f(&mut w[off..off + n], &g[off..off + n], &mut ta, &mut tb);
+    }
+}
+
+/// Adagrad with heavy-ball momentum, one tile (paper Eq. 1–2). Also
+/// SM3's singleton-cover (rank ≤ 1) update — under that cover the two
+/// methods coincide exactly (paper §3).
+#[inline]
+pub fn adagrad_chunk(beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                     acc: &mut [f32], mom: &mut [f32]) {
+    for k in 0..w.len() {
+        let nu = acc[k] + g[k] * g[k];
+        let upd = g[k] * safe_rsqrt(nu);
+        mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
+        w[k] -= lr * mom[k];
+        acc[k] = nu;
+    }
+}
+
+/// Adam, one tile. `bc1`/`bc2` are the step's bias corrections
+/// `1 - β^t`, computed once per step by the caller (the step count is a
+/// per-optimizer scalar, not tile state).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn adam_chunk(b1: f32, b2: f32, eps: f32, bc1: f32, bc2: f32, lr: f32,
+                  w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    for k in 0..w.len() {
+        m[k] = b1 * m[k] + (1.0 - b1) * g[k];
+        v[k] = b2 * v[k] + (1.0 - b2) * g[k] * g[k];
+        let mhat = m[k] / bc1;
+        let vhat = v[k] / bc2;
+        w[k] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+/// SGD with heavy-ball momentum, one tile.
+#[inline]
+pub fn sgdm_chunk(b1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                  mom: &mut [f32]) {
+    for k in 0..w.len() {
+        mom[k] = b1 * mom[k] + g[k];
+        w[k] -= lr * mom[k];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::StateDtype;
+
+    #[test]
+    fn chunk_validation() {
+        assert!(check_chunk(64).is_ok());
+        assert!(check_chunk(DEFAULT_CHUNK).is_ok());
+        assert!(check_chunk(0).is_err());
+        assert!(check_chunk(100).is_err());
+        assert!(check_chunk(65).is_err());
+    }
+
+    #[test]
+    fn elementwise_classification() {
+        for rank in 0..5 {
+            assert!(elementwise("adagrad", rank));
+            assert!(elementwise("adam", rank));
+            assert!(elementwise("sgdm", rank));
+            assert!(!elementwise("adafactor", rank));
+        }
+        for name in ["sm3", "sm3i"] {
+            assert!(elementwise(name, 0));
+            assert!(elementwise(name, 1));
+            assert!(!elementwise(name, 2));
+            assert!(!elementwise(name, 4));
+        }
+        assert!(!elementwise("nope", 1));
+    }
+
+    /// The drivers visit every element exactly once, in order, across
+    /// uneven final tiles, and commit quantized tiles.
+    #[test]
+    fn drivers_cover_the_slot_exactly_once() {
+        for dtype in StateDtype::ALL {
+            let n = 130;
+            let mut slots = QuantizedSlots::new(dtype);
+            let a = slots.add_zeros(n);
+            let b = slots.add_zeros(n);
+            let mut scratch = ChunkScratch::default();
+            let mut w = vec![0.0f32; n];
+            let g = vec![1.0f32; n];
+            let mut visited = 0usize;
+            step_chunked2(&mut slots, a, b, 64, &mut scratch, &mut w, &g,
+                          |w, g, a, b| {
+                for k in 0..w.len() {
+                    w[k] += g[k];
+                    a[k] = 2.0; // block max → decodes exactly at any dtype
+                    b[k] = 2.0;
+                }
+                visited += w.len();
+            });
+            assert_eq!(visited, n, "{dtype:?}");
+            assert!(w.iter().all(|&x| x == 1.0));
+            assert!(slots.to_vec(a).iter().all(|&x| x == 2.0), "{dtype:?}");
+            assert!(slots.to_vec(b).iter().all(|&x| x == 2.0), "{dtype:?}");
+            let mut seen = 0usize;
+            step_chunked1(&mut slots, a, 64, &mut scratch, &mut w, &g,
+                          |w, _, s| {
+                seen += w.len();
+                assert!(s.iter().all(|&x| x == 2.0));
+            });
+            assert_eq!(seen, n);
+        }
+    }
+}

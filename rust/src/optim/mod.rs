@@ -13,6 +13,7 @@ mod adafactor;
 mod adagrad;
 mod adam;
 pub mod cover;
+pub mod kernel;
 pub mod parallel;
 pub mod qstate;
 pub mod schedule;
@@ -22,7 +23,7 @@ mod sm3;
 pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adam::Adam;
-pub use parallel::ParallelStep;
+pub use parallel::{ParallelStep, SplitPolicy};
 pub use qstate::{QuantizedSlots, StateDtype};
 pub use sgdm::SgdMomentum;
 pub use sm3::{Sm3, Sm3Variant};
@@ -88,6 +89,16 @@ pub trait Optimizer: Send {
         qstate::StateDtype::F32
     }
 
+    /// Apply one update step to a **single-leaf** instance through flat
+    /// f32 views of its parameter and gradient data — the entry point
+    /// `ParallelStep`'s intra-leaf sharding drives, where one dominant
+    /// leaf is split into q8-block-aligned ranges each owned by a
+    /// sub-optimizer over a flat sub-spec. Only meaningful where
+    /// [`kernel::elementwise`] holds for the leaf; the default panics.
+    fn step_flat(&mut self, _w: &mut [f32], _g: &[f32], _lr: f32) {
+        panic!("step_flat: {} is not an element-wise optimizer", self.name());
+    }
+
     /// Named state tensors for checkpointing / introspection, in a stable
     /// order: `(param_index, slot_name, tensor)`. Tensors are cloned — this
     /// is a checkpoint/trace path, not the hot loop.
@@ -107,19 +118,38 @@ pub fn build(name: &str, specs: &[ParamSpec], beta1: f32, beta2: f32)
 }
 
 /// Construct an optimizer by registry name with the given state-storage
-/// precision (config key `state_dtype`, DESIGN.md §10).
+/// precision (config key `state_dtype`, DESIGN.md §10) and the default
+/// streaming tile.
 pub fn build_with_dtype(name: &str, specs: &[ParamSpec], beta1: f32,
                         beta2: f32, dtype: StateDtype)
                         -> anyhow::Result<Box<dyn Optimizer>> {
+    build_with_opts(name, specs, beta1, beta2, dtype, kernel::DEFAULT_CHUNK)
+}
+
+/// Construct an optimizer by registry name with explicit state-storage
+/// precision and streaming tile size (config key `step_chunk`; must be a
+/// positive multiple of the q8 block). The tile size only affects
+/// traversal granularity — trajectories are bitwise identical at any
+/// value (property-tested in `crate::proptest`). Adafactor keeps its
+/// leaf-granular two-pass update (reduction-coupled) and ignores the
+/// tile.
+pub fn build_with_opts(name: &str, specs: &[ParamSpec], beta1: f32,
+                       beta2: f32, dtype: StateDtype, chunk: usize)
+                       -> anyhow::Result<Box<dyn Optimizer>> {
+    kernel::check_chunk(chunk)?;
     Ok(match name {
-        "sm3" => Box::new(Sm3::with_dtype(specs, Sm3Variant::II, beta1, dtype)),
-        "sm3i" => Box::new(Sm3::with_dtype(specs, Sm3Variant::I, beta1, dtype)),
-        "adagrad" => Box::new(Adagrad::with_dtype(specs, beta1, dtype)),
-        "adam" => Box::new(Adam::with_dtype(specs, beta1, beta2, 1e-8, dtype)),
+        "sm3" => Box::new(Sm3::with_opts(specs, Sm3Variant::II, beta1, dtype,
+                                         chunk)),
+        "sm3i" => Box::new(Sm3::with_opts(specs, Sm3Variant::I, beta1, dtype,
+                                          chunk)),
+        "adagrad" => Box::new(Adagrad::with_opts(specs, beta1, dtype, chunk)),
+        "adam" => {
+            Box::new(Adam::with_opts(specs, beta1, beta2, 1e-8, dtype, chunk))
+        }
         "adafactor" => {
             Box::new(Adafactor::with_dtype(specs, beta1, beta2, dtype))
         }
-        "sgdm" => Box::new(SgdMomentum::with_dtype(specs, beta1, dtype)),
+        "sgdm" => Box::new(SgdMomentum::with_opts(specs, beta1, dtype, chunk)),
         other => anyhow::bail!("unknown optimizer {other:?}"),
     })
 }
@@ -251,6 +281,59 @@ mod tests {
     #[test]
     fn unknown_name_errors() {
         assert!(build("nope", &quad_specs(), 0.9, 0.98).is_err());
+    }
+
+    #[test]
+    fn bad_chunk_errors() {
+        assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
+                                StateDtype::F32, 0).is_err());
+        assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
+                                StateDtype::F32, 100).is_err());
+        assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
+                                StateDtype::F32, 64).is_ok());
+    }
+
+    /// ISSUE 3 satellite: after a few warmup steps every optimizer's
+    /// `step()` is allocation-free at every state dtype — the chunked
+    /// kernels stream through reused scratch, and the leaf-granular
+    /// paths (SM3 matrix/tensor, Adafactor) keep their buffers in the
+    /// struct. Verified with the thread-local counting allocator
+    /// (`crate::alloc_count`), so concurrent test threads cannot perturb
+    /// the count.
+    #[test]
+    fn steady_state_steps_are_allocation_free() {
+        // matrix, odd-length vector, and rank-4 tensor leaves together
+        // exercise the chunked, factored, and generic-cover paths
+        let specs = vec![ParamSpec::new("emb", &[40, 8]),
+                         ParamSpec::new("conv", &[3, 3, 2, 4]),
+                         ParamSpec::new("b", &[70])];
+        let mut rng = Rng::new(1);
+        let params0: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        for dtype in StateDtype::ALL {
+            for name in ALL {
+                let mut opt = build_with_opts(name, &specs, 0.9, 0.98,
+                                              dtype, 64).unwrap();
+                let mut params = params0.clone();
+                for _ in 0..3 {
+                    opt.step(&mut params, &grads, 0.1); // warm capacities
+                }
+                let before = crate::alloc_count::thread_allocs();
+                for _ in 0..2 {
+                    opt.step(&mut params, &grads, 0.1);
+                }
+                let allocs = crate::alloc_count::thread_allocs() - before;
+                assert_eq!(allocs, 0,
+                           "{name} @ {dtype:?}: {allocs} allocations in \
+                            steady-state steps");
+            }
+        }
     }
 
     /// Regression (debug builds): a NaN gradient must panic at the first

@@ -3,49 +3,74 @@
 //! SM3/Adafactor buy memory headroom so larger models and batches can be
 //! stepped; that makes the host-side update loop the next wall-clock
 //! bottleneck on the split execution path (grad artifact → Rust optimizer).
-//! Every optimizer in the bank updates each parameter leaf independently —
-//! leaf `i`'s update reads only `params[i]`, `grads[i]`, and leaf `i`'s
-//! state — so the leaf loop parallelizes with *no* change to the arithmetic:
-//! results are bitwise identical to serial execution regardless of thread
-//! count or scheduling (asserted by the property test in `crate::proptest`
-//! and measured by `benches/bench_optim.rs`).
+//! Every optimizer in the bank updates each parameter leaf independently,
+//! so the leaf loop parallelizes with *no* change to the arithmetic. On
+//! top of that, **element-wise** updates (`kernel::elementwise`: Adagrad,
+//! Adam, SGD+momentum at any rank; SM3 under the singleton cover) update
+//! each *element* independently — so a dominant leaf (a 32k×1024
+//! embedding under Adam) can be split into q8-block-aligned ranges and
+//! sharded **inside the leaf** instead of serializing one worker.
+//! Reduction-coupled optimizers (SM3 matrix/tensor covers, Adafactor)
+//! keep the whole-leaf plan.
 //!
-//! Design: one inner optimizer instance per leaf, built from the same
-//! registry entry (so per-step *global* scalars like Adam's bias-correction
-//! step count advance identically in every shard), and a static shard plan
-//! computed once by greedy bin-packing of leaves over `threads` bins by
-//! [`ParamSpec::numel`]. `step` hands each bin's disjoint
-//! `(param, grad, leaf state)` triples to a `std::thread::scope` worker.
+//! Results are bitwise identical to serial execution regardless of
+//! thread count, scheduling, split plan, or state dtype: element-wise
+//! updates touch disjoint elements, split boundaries sit on q8 block
+//! boundaries (a block never straddles two ranges, so every per-block
+//! quantization sees the identical inputs serial stepping would), and
+//! per-step scalars (Adam's bias-correction count) advance identically
+//! in every range. Property-tested in `crate::proptest`; measured by
+//! `benches/bench_optim.rs`.
 //!
-//! Checkpoint note: [`Optimizer::state`] emits slots leaf-by-leaf. For
-//! every optimizer except Adam this is byte-compatible with the serial
-//! layout; Adam's single global `t` slot becomes one `t` slot per leaf.
-//! Round-trips within one `step_threads` setting are exact; restoring
-//! across the knob is NOT supported for such optimizers — this engine's
-//! `load_state` pre-counts and fails fast on a layout mismatch, and a
-//! future PR can add layout translation if cross-knob restore is needed.
+//! Design: one inner optimizer instance per *task* — a whole leaf, or
+//! one block-aligned range of a split leaf viewed as a flat sub-spec —
+//! built from the same registry entry. A static plan assigns tasks to at
+//! most `threads` workers by greedy bin-packing on element count; `step`
+//! hands each worker its disjoint `(param view, grad view, task state)`
+//! triples under `std::thread::scope`. Range tasks run through
+//! [`Optimizer::step_flat`], whole leaves through `Optimizer::step`.
+//!
+//! Checkpoint note: [`Optimizer::state`] stitches split leaves back
+//! together (per-element slots are concatenated in range order; per-step
+//! scalars like Adam's `t`, identical in every range, are emitted once),
+//! so the layout equals the whole-leaf per-leaf layout at any thread
+//! count and any split plan. As in PR 1, the per-leaf layout still
+//! differs from *serial* for optimizers with global slots (Adam's `t`
+//! appears once per leaf instead of once); `load_state` pre-counts and
+//! fails fast on such a mismatch.
 
+use super::kernel;
+use super::qstate::codec::Q8_BLOCK;
 use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
-/// Greedy bin-packing of leaf indices over at most `threads` bins:
-/// descending by `numel`, each leaf to the currently lightest bin (ties to
-/// the lowest bin id — fully deterministic). Bins keep their leaves in
+/// How `ParallelStep` may divide the update across workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// One task per leaf (the PR 1 engine) — a dominant leaf serializes
+    /// its worker.
+    WholeLeaf,
+    /// Split dominant element-wise leaves into q8-block-aligned ranges
+    /// (the default; bitwise identical to `WholeLeaf` and to serial).
+    IntraLeaf,
+}
+
+/// Greedy bin-packing of task indices over at most `threads` bins:
+/// descending by weight, each task to the currently lightest bin (ties
+/// to the lowest bin id — fully deterministic). Bins keep their tasks in
 /// ascending index order; empty bins are dropped.
-pub fn shard_by_numel(specs: &[ParamSpec], threads: usize) -> Vec<Vec<usize>> {
-    let bins = threads.min(specs.len()).max(1);
-    let mut order: Vec<usize> = (0..specs.len()).collect();
-    order.sort_by(|&a, &b| {
-        specs[b].numel().cmp(&specs[a].numel()).then(a.cmp(&b))
-    });
+fn pack(weights: &[usize], threads: usize) -> Vec<Vec<usize>> {
+    let bins = threads.min(weights.len()).max(1);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
     let mut shards = vec![Vec::new(); bins];
     let mut load = vec![0usize; bins];
     for i in order {
         let lightest = (0..bins).min_by_key(|&b| (load[b], b)).unwrap();
         shards[lightest].push(i);
-        // max(1): zero-sized leaves still cost a dispatch
-        load[lightest] += specs[i].numel().max(1);
+        // max(1): zero-sized tasks still cost a dispatch
+        load[lightest] += weights[i].max(1);
     }
     for s in shards.iter_mut() {
         s.sort_unstable();
@@ -54,30 +79,70 @@ pub fn shard_by_numel(specs: &[ParamSpec], threads: usize) -> Vec<Vec<usize>> {
     shards
 }
 
+/// Leaf-level bin-packing by [`ParamSpec::numel`] (the whole-leaf plan).
+pub fn shard_by_numel(specs: &[ParamSpec], threads: usize) -> Vec<Vec<usize>> {
+    let weights: Vec<usize> = specs.iter().map(ParamSpec::numel).collect();
+    pack(&weights, threads)
+}
+
+/// Block-aligned range bounds splitting a leaf of `numel` elements into
+/// at most `threads` near-equal parts of at least one part each ~`target`
+/// elements. Every interior bound is a multiple of the q8 block, so a
+/// block never straddles two ranges. Returns `[0, ..., numel]`; a result
+/// of length 2 means "don't split".
+fn split_bounds(numel: usize, target: usize, threads: usize) -> Vec<usize> {
+    // manual ceil-div, like codec::q8_blocks (keeps the crate's MSRV)
+    let ceil_div = |a: usize, b: usize| a / b + usize::from(a % b != 0);
+    let k = ceil_div(numel, target.max(1)).clamp(1, threads);
+    let per = ceil_div(ceil_div(numel, k), Q8_BLOCK) * Q8_BLOCK;
+    let mut bounds = vec![0];
+    let mut lo = 0;
+    while lo + per < numel {
+        lo += per;
+        bounds.push(lo);
+    }
+    bounds.push(numel);
+    bounds
+}
+
+/// One block-aligned range of a split leaf, with its own sub-optimizer
+/// over the flat sub-spec `[hi - lo]`.
+struct Part {
+    lo: usize,
+    hi: usize,
+    opt: Box<dyn Optimizer>,
+}
+
+enum Leaf {
+    /// the whole leaf is one task (reduction-coupled, or small)
+    Whole(Box<dyn Optimizer>),
+    /// element-wise leaf split into block-aligned ranges
+    Split { spec: ParamSpec, parts: Vec<Part> },
+}
+
 /// A sharded optimizer-step engine over any registry optimizer.
 pub struct ParallelStep {
-    /// one inner optimizer per parameter leaf, index-aligned with `specs`
-    leaf_opts: Vec<Box<dyn Optimizer>>,
-    /// static shard plan: disjoint leaf-index sets, one per worker
-    shards: Vec<Vec<usize>>,
+    /// one entry per parameter leaf, index-aligned with the spec list
+    leaves: Vec<Leaf>,
+    /// worker id per task (task order: leaves in order, parts in order)
+    task_worker: Vec<usize>,
+    /// number of non-empty worker bins
+    workers: usize,
     threads: usize,
 }
 
 impl ParallelStep {
-    /// Build with a custom per-leaf optimizer factory. The factory must be
-    /// deterministic (same spec → same initial state) for the bitwise
-    /// guarantee to hold.
-    pub fn new<F>(specs: &[ParamSpec], threads: usize, mut build_leaf: F)
+    /// Build with a custom per-leaf optimizer factory. The factory must
+    /// be deterministic (same spec → same initial state) for the bitwise
+    /// guarantee to hold. Custom factories always get the whole-leaf
+    /// plan — the engine cannot prove their updates element-wise.
+    pub fn new<F>(specs: &[ParamSpec], threads: usize, build_leaf: F)
                   -> anyhow::Result<Self>
     where
         F: FnMut(&ParamSpec) -> anyhow::Result<Box<dyn Optimizer>>,
     {
-        anyhow::ensure!(threads >= 1, "step_threads must be >= 1");
-        let leaf_opts = specs
-            .iter()
-            .map(|s| build_leaf(s))
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(Self { leaf_opts, shards: shard_by_numel(specs, threads), threads })
+        Self::build_impl(specs, threads, SplitPolicy::WholeLeaf, |_| false,
+                         build_leaf)
     }
 
     /// Build from the optimizer registry (the `optim::build` names) with
@@ -89,74 +154,197 @@ impl ParallelStep {
     }
 
     /// Build from the registry with quantized state storage (DESIGN.md
-    /// §10). Sharding preserves the bitwise guarantee at any dtype: q8
-    /// blocks live inside one leaf's slot vectors and shards are whole
-    /// leaves, so a block never straddles a shard boundary and every
-    /// quantization sees the identical inputs serial stepping would.
+    /// §10), the default streaming tile, and intra-leaf splitting.
     pub fn from_registry_dtype(name: &str, specs: &[ParamSpec], beta1: f32,
                                beta2: f32, threads: usize,
                                dtype: StateDtype) -> anyhow::Result<Self> {
-        Self::new(specs, threads, |s| {
-            super::build_with_dtype(name, std::slice::from_ref(s), beta1,
-                                    beta2, dtype)
-        })
+        Self::from_registry_opts(name, specs, beta1, beta2, threads, dtype,
+                                 kernel::DEFAULT_CHUNK, SplitPolicy::IntraLeaf)
     }
 
-    /// Configured worker count (the shard count may be lower when there
-    /// are fewer leaves than threads).
+    /// Fully explicit registry constructor: state dtype, streaming tile
+    /// (`step_chunk`), and split policy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_registry_opts(name: &str, specs: &[ParamSpec], beta1: f32,
+                              beta2: f32, threads: usize, dtype: StateDtype,
+                              chunk: usize, policy: SplitPolicy)
+                              -> anyhow::Result<Self> {
+        Self::build_impl(
+            specs, threads, policy,
+            |s| kernel::elementwise(name, s.shape.len()),
+            |s| super::build_with_opts(name, std::slice::from_ref(s), beta1,
+                                       beta2, dtype, chunk))
+    }
+
+    fn build_impl<F>(specs: &[ParamSpec], threads: usize, policy: SplitPolicy,
+                     splittable: impl Fn(&ParamSpec) -> bool,
+                     mut build_leaf: F) -> anyhow::Result<Self>
+    where
+        F: FnMut(&ParamSpec) -> anyhow::Result<Box<dyn Optimizer>>,
+    {
+        anyhow::ensure!(threads >= 1, "step_threads must be >= 1");
+        let total: usize = specs.iter().map(ParamSpec::numel).sum();
+        // ideal per-worker load: leaves above it hog a worker, so (policy
+        // permitting) they get split
+        let target = (total / threads.max(1)).max(1);
+        let mut leaves = Vec::with_capacity(specs.len());
+        let mut weights = Vec::new(); // one weight per task
+        for s in specs {
+            let n = s.numel();
+            let bounds = if policy == SplitPolicy::IntraLeaf && threads > 1
+                && n > target && splittable(s)
+            {
+                split_bounds(n, target, threads)
+            } else {
+                vec![0, n]
+            };
+            if bounds.len() <= 2 {
+                leaves.push(Leaf::Whole(build_leaf(s)?));
+                weights.push(n);
+                continue;
+            }
+            let mut parts = Vec::with_capacity(bounds.len() - 1);
+            for w in bounds.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                let sub = ParamSpec::new(format!("{}[{lo}..{hi}]", s.name),
+                                         &[hi - lo]);
+                parts.push(Part { lo, hi, opt: build_leaf(&sub)? });
+                weights.push(hi - lo);
+            }
+            leaves.push(Leaf::Split { spec: s.clone(), parts });
+        }
+        let bins = pack(&weights, threads);
+        let mut task_worker = vec![0usize; weights.len()];
+        for (wid, bin) in bins.iter().enumerate() {
+            for &t in bin {
+                task_worker[t] = wid;
+            }
+        }
+        Ok(Self { leaves, task_worker, workers: bins.len(), threads })
+    }
+
+    /// Configured worker count (the live worker count may be lower when
+    /// there are fewer tasks than threads).
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// The static shard plan (leaf indices per worker).
-    pub fn shards(&self) -> &[Vec<usize>] {
-        &self.shards
+    /// Number of block-aligned ranges each leaf was split into (1 ⇒ the
+    /// leaf is one whole task). Introspection for tests and benches.
+    pub fn parts_per_leaf(&self) -> Vec<usize> {
+        self.leaves
+            .iter()
+            .map(|l| match l {
+                Leaf::Whole(_) => 1,
+                Leaf::Split { parts, .. } => parts.len(),
+            })
+            .collect()
+    }
+}
+
+/// One unit of sharded work: a whole leaf, or a flat range of one.
+enum Item<'a> {
+    Whole {
+        w: &'a mut Tensor,
+        g: &'a Tensor,
+        opt: &'a mut Box<dyn Optimizer>,
+    },
+    Range {
+        w: &'a mut [f32],
+        g: &'a [f32],
+        opt: &'a mut Box<dyn Optimizer>,
+    },
+}
+
+impl Item<'_> {
+    fn run(self, lr: f32) {
+        match self {
+            Item::Whole { w, g, opt } => {
+                opt.step(std::slice::from_mut(w), std::slice::from_ref(g), lr)
+            }
+            Item::Range { w, g, opt } => opt.step_flat(w, g, lr),
+        }
     }
 }
 
 impl Optimizer for ParallelStep {
     fn name(&self) -> &'static str {
-        self.leaf_opts.first().map(|o| o.name()).unwrap_or("parallel")
+        match self.leaves.first() {
+            Some(Leaf::Whole(o)) => o.name(),
+            Some(Leaf::Split { parts, .. }) => parts[0].opt.name(),
+            None => "parallel",
+        }
     }
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         assert_eq!(params.len(), grads.len());
-        assert_eq!(params.len(), self.leaf_opts.len());
-        if self.shards.len() <= 1 {
-            // single shard: run inline, no thread-spawn overhead
-            for (i, opt) in self.leaf_opts.iter_mut().enumerate() {
-                opt.step(&mut params[i..i + 1],
-                         std::slice::from_ref(&grads[i]), lr);
+        assert_eq!(params.len(), self.leaves.len());
+        if self.workers <= 1 {
+            // single worker: run every task inline in leaf/part order —
+            // no thread spawns and no per-step bucket allocations
+            for (i, leaf) in self.leaves.iter_mut().enumerate() {
+                match leaf {
+                    Leaf::Whole(opt) => {
+                        opt.step(&mut params[i..i + 1],
+                                 std::slice::from_ref(&grads[i]), lr);
+                    }
+                    Leaf::Split { parts, .. } => {
+                        let wd = params[i].data_mut();
+                        let gd = grads[i].data();
+                        for p in parts.iter_mut() {
+                            p.opt.step_flat(&mut wd[p.lo..p.hi],
+                                            &gd[p.lo..p.hi], lr);
+                        }
+                    }
+                }
             }
             return;
         }
-        // Hand each worker its shard's disjoint (param, grad, state)
-        // triples. take() proves disjointness to the borrow checker; the
-        // shard plan guarantees it by construction.
-        let mut param_slots: Vec<Option<&mut Tensor>> =
-            params.iter_mut().map(Some).collect();
-        let mut opt_slots: Vec<Option<&mut Box<dyn Optimizer>>> =
-            self.leaf_opts.iter_mut().map(Some).collect();
-        let mut work: Vec<Vec<(usize, &mut Tensor, &mut Box<dyn Optimizer>)>> =
-            Vec::with_capacity(self.shards.len());
-        for shard in &self.shards {
-            work.push(
-                shard
-                    .iter()
-                    .map(|&i| {
-                        (i,
-                         param_slots[i].take().expect("leaf sharded twice"),
-                         opt_slots[i].take().expect("leaf sharded twice"))
-                    })
-                    .collect(),
-            );
+        // Hand each worker its tasks' disjoint (param view, grad view,
+        // state) triples: split leaves are carved with split_at_mut in
+        // part order (parts tile the leaf exactly, by construction).
+        let mut buckets: Vec<Vec<Item>> =
+            (0..self.workers).map(|_| Vec::new()).collect();
+        let mut tid = 0usize;
+        let mut param_it = params.iter_mut();
+        for (i, leaf) in self.leaves.iter_mut().enumerate() {
+            let w = param_it.next().expect("params shorter than leaves");
+            let g = &grads[i];
+            match leaf {
+                Leaf::Whole(opt) => {
+                    buckets[self.task_worker[tid]]
+                        .push(Item::Whole { w, g, opt });
+                    tid += 1;
+                }
+                Leaf::Split { spec, parts } => {
+                    assert_eq!(w.len(), spec.numel(),
+                               "leaf {} shape drifted from its spec", i);
+                    let mut wrest: &mut [f32] = w.data_mut();
+                    let mut grest: &[f32] = g.data();
+                    for p in parts.iter_mut() {
+                        let n = p.hi - p.lo;
+                        // mem::take moves the full-lifetime slice out so
+                        // the split halves outlive this loop iteration
+                        let (wa, wb) =
+                            std::mem::take(&mut wrest).split_at_mut(n);
+                        let (ga, gb) = grest.split_at(n);
+                        wrest = wb;
+                        grest = gb;
+                        buckets[self.task_worker[tid]].push(Item::Range {
+                            w: wa,
+                            g: ga,
+                            opt: &mut p.opt,
+                        });
+                        tid += 1;
+                    }
+                }
+            }
         }
         std::thread::scope(|scope| {
-            for chunk in work {
+            for bucket in buckets {
                 scope.spawn(move || {
-                    for (i, w, opt) in chunk {
-                        opt.step(std::slice::from_mut(w),
-                                 std::slice::from_ref(&grads[i]), lr);
+                    for item in bucket {
+                        item.run(lr);
                     }
                 });
             }
@@ -164,50 +352,134 @@ impl Optimizer for ParallelStep {
     }
 
     fn state_floats(&self) -> usize {
-        self.leaf_opts.iter().map(|o| o.state_floats()).sum()
+        self.leaves
+            .iter()
+            .map(|l| match l {
+                Leaf::Whole(o) => o.state_floats(),
+                Leaf::Split { parts, .. } => {
+                    parts.iter().map(|p| p.opt.state_floats()).sum()
+                }
+            })
+            .sum()
     }
 
     fn state_bytes(&self) -> usize {
-        self.leaf_opts.iter().map(|o| o.state_bytes()).sum()
+        // block-aligned splits preserve the q8 block partitioning, so
+        // this equals the unsplit engine's bytes exactly
+        self.leaves
+            .iter()
+            .map(|l| match l {
+                Leaf::Whole(o) => o.state_bytes(),
+                Leaf::Split { parts, .. } => {
+                    parts.iter().map(|p| p.opt.state_bytes()).sum()
+                }
+            })
+            .sum()
     }
 
     fn state_dtype(&self) -> StateDtype {
-        self.leaf_opts
-            .first()
-            .map(|o| o.state_dtype())
-            .unwrap_or(StateDtype::F32)
+        match self.leaves.first() {
+            Some(Leaf::Whole(o)) => o.state_dtype(),
+            Some(Leaf::Split { parts, .. }) => parts[0].opt.state_dtype(),
+            None => StateDtype::F32,
+        }
     }
 
     fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
         let mut out = Vec::new();
-        for (i, opt) in self.leaf_opts.iter().enumerate() {
-            for (_, slot, t) in opt.state() {
-                out.push((i, slot, t));
+        for (i, leaf) in self.leaves.iter().enumerate() {
+            match leaf {
+                Leaf::Whole(opt) => {
+                    for (_, slot, t) in opt.state() {
+                        out.push((i, slot, t));
+                    }
+                }
+                Leaf::Split { spec, parts } => {
+                    // Stitch the ranges back into whole-leaf slots.
+                    // Part 0 spans >= one q8 block, so a 1-element tensor
+                    // there is unambiguously a per-step scalar (Adam's
+                    // `t`) — identical in every range, emitted once.
+                    let per: Vec<Vec<(usize, &'static str, Tensor)>> =
+                        parts.iter().map(|p| p.opt.state()).collect();
+                    for (j, (_, slot, t0)) in per[0].iter().enumerate() {
+                        if t0.len() <= 1 {
+                            out.push((i, *slot, t0.clone()));
+                            continue;
+                        }
+                        let mut data = Vec::with_capacity(spec.numel());
+                        for p in &per {
+                            data.extend_from_slice(p[j].2.data());
+                        }
+                        out.push((i, *slot,
+                                  Tensor::from_vec(&spec.shape, data)));
+                    }
+                }
             }
         }
         out
     }
 
     fn load_state(&mut self, state: Vec<Tensor>) {
-        // Slot counts via state() clone one leaf's tensors at a time —
-        // acceptable on this checkpoint path (see the Optimizer::state
-        // contract), and it lets the total be checked BEFORE any leaf is
-        // mutated: a layout mismatch (e.g. serial-Adam state, whose global
-        // `t` slot appears once instead of per leaf) must fail fast, not
-        // corrupt some leaves and then abort.
-        let lens: Vec<usize> =
-            self.leaf_opts.iter().map(|o| o.state().len()).collect();
+        // Pre-count so a layout mismatch (e.g. serial-Adam state, whose
+        // global `t` slot appears once instead of per leaf) fails fast
+        // BEFORE any leaf is mutated. Split leaves expect the *stitched*
+        // layout, which has exactly one part's slot count per leaf.
+        let lens: Vec<usize> = self
+            .leaves
+            .iter()
+            .map(|l| match l {
+                Leaf::Whole(o) => o.state().len(),
+                Leaf::Split { parts, .. } => parts[0].opt.state().len(),
+            })
+            .collect();
         let expect: usize = lens.iter().sum();
         assert_eq!(state.len(), expect,
                    "state layout mismatch: got {} tensors, this {}-leaf \
                     ParallelStep expects {} (per-leaf slot layout differs \
                     from serial for optimizers with global slots — see \
                     module docs)",
-                   state.len(), self.leaf_opts.len(), expect);
+                   state.len(), self.leaves.len(), expect);
         let mut it = state.into_iter();
-        for (opt, n) in self.leaf_opts.iter_mut().zip(lens) {
-            let chunk: Vec<Tensor> = it.by_ref().take(n).collect();
-            opt.load_state(chunk);
+        for (leaf, n) in self.leaves.iter_mut().zip(lens) {
+            match leaf {
+                Leaf::Whole(opt) => {
+                    let chunk: Vec<Tensor> = it.by_ref().take(n).collect();
+                    opt.load_state(chunk);
+                }
+                Leaf::Split { spec, parts } => {
+                    // slice each stitched slot back into range tensors
+                    let probe: Vec<usize> = parts[0]
+                        .opt
+                        .state()
+                        .iter()
+                        .map(|(_, _, t)| t.len())
+                        .collect();
+                    let mut per_part: Vec<Vec<Tensor>> =
+                        parts.iter().map(|_| Vec::with_capacity(n)).collect();
+                    for &len0 in &probe {
+                        let t = it.next().expect("pre-counted above");
+                        if len0 <= 1 {
+                            // per-step scalar: every range restores it
+                            for v in per_part.iter_mut() {
+                                v.push(t.clone());
+                            }
+                            continue;
+                        }
+                        assert_eq!(t.len(), spec.numel(),
+                                   "split leaf {:?}: stitched slot has {} \
+                                    elements, expected {}",
+                                   spec.name, t.len(), spec.numel());
+                        let data = t.data();
+                        for (p, v) in parts.iter().zip(per_part.iter_mut()) {
+                            v.push(Tensor::from_vec(
+                                &[p.hi - p.lo], data[p.lo..p.hi].to_vec()));
+                        }
+                    }
+                    for (p, st) in parts.iter_mut().zip(per_part) {
+                        p.opt.load_state(st);
+                    }
+                }
+            }
         }
     }
 }
@@ -225,6 +497,17 @@ mod tests {
             ParamSpec::new("w2", &[16, 8]),
             ParamSpec::new("conv", &[3, 3, 2, 4]),
             ParamSpec::new("b", &[16]),
+        ]
+    }
+
+    /// A skewed set where one embedding dominates: the intra-leaf planner
+    /// must split it (for element-wise optimizers).
+    fn skewed_specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("embed", &[256, 16]), // 4096 of ~4400 elements
+            ParamSpec::new("w", &[8, 16]),
+            ParamSpec::new("b1", &[100]),
+            ParamSpec::new("b2", &[70]),
         ]
     }
 
@@ -251,6 +534,27 @@ mod tests {
                           *loads.iter().min().unwrap());
         assert!(max < 2 * min + specs[0].numel(),
                 "unbalanced shards: {loads:?}");
+    }
+
+    #[test]
+    fn split_bounds_are_block_aligned_and_cover() {
+        for (n, target, threads) in
+            [(4096usize, 1100usize, 4usize), (390, 200, 2), (33_554_432, 8_388_608, 4),
+             (65, 10, 8), (128, 1, 16)]
+        {
+            let b = split_bounds(n, target, threads);
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), n);
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "empty range in {b:?}");
+            }
+            for &x in &b[1..b.len() - 1] {
+                assert_eq!(x % Q8_BLOCK, 0, "interior bound {x} misaligned");
+            }
+            assert!(b.len() - 1 <= threads.max(1));
+        }
+        // tiny leaves never split
+        assert_eq!(split_bounds(64, 1, 8), vec![0, 64]);
     }
 
     #[test]
@@ -292,6 +596,91 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
             }
         }
+    }
+
+    /// The intra-leaf planner splits the dominant leaf for element-wise
+    /// optimizers, keeps it whole for reduction-coupled ones, and the
+    /// results stay bitwise identical to serial either way.
+    #[test]
+    fn intra_leaf_split_is_bitwise_identical_to_serial() {
+        let specs = skewed_specs();
+        for (name, expect_split) in
+            [("adam", true), ("adagrad", true), ("sgdm", true),
+             ("sm3", false), ("adafactor", false)]
+        {
+            let mut par = ParallelStep::from_registry(
+                name, &specs, 0.9, 0.98, 4).unwrap();
+            let parts = par.parts_per_leaf();
+            assert_eq!(parts[0] > 1, expect_split,
+                       "{name}: embedding parts = {}", parts[0]);
+            assert!(parts[1..].iter().all(|&p| p == 1),
+                    "{name}: small leaves must stay whole");
+            let mut serial = optim::build(name, &specs, 0.9, 0.98).unwrap();
+            let mut rng = Rng::new(11);
+            let init: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let mut pa = init.clone();
+            let mut pb = init;
+            for _ in 0..4 {
+                let grads: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                    .collect();
+                serial.step(&mut pa, &grads, 0.1);
+                par.step(&mut pb, &grads, 0.1);
+            }
+            for (a, b) in pa.iter().zip(&pb) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name}: {x} != {y}");
+                }
+            }
+        }
+    }
+
+    /// Split-leaf state stitches back to the whole-leaf layout: same slot
+    /// count and shapes as an unsplit engine, bitwise round-trip, and
+    /// cross-loading between split and unsplit engines works.
+    #[test]
+    fn split_leaf_state_is_layout_compatible_and_roundtrips() {
+        let specs = skewed_specs();
+        let mut split = ParallelStep::from_registry(
+            "adam", &specs, 0.9, 0.98, 4).unwrap();
+        assert!(split.parts_per_leaf()[0] > 1);
+        let mut whole = ParallelStep::from_registry_opts(
+            "adam", &specs, 0.9, 0.98, 4, StateDtype::F32,
+            kernel::DEFAULT_CHUNK, SplitPolicy::WholeLeaf).unwrap();
+        assert_eq!(whole.parts_per_leaf(), vec![1; specs.len()]);
+        let mut rng = Rng::new(3);
+        let init: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let mut pa = init.clone();
+        let mut pb = init;
+        split.step(&mut pa, &grads, 0.1);
+        whole.step(&mut pb, &grads, 0.1);
+        let sa = split.state();
+        let sb = whole.state();
+        assert_eq!(sa.len(), sb.len());
+        for ((la, na, ta), (lb, nb, tb)) in sa.iter().zip(&sb) {
+            assert_eq!((la, na), (lb, nb));
+            assert_eq!(ta, tb, "slot {na} differs between split and whole");
+        }
+        // cross-load: whole-leaf state into the split engine and back
+        let tensors: Vec<Tensor> =
+            sb.into_iter().map(|(_, _, t)| t).collect();
+        let mut fresh = ParallelStep::from_registry(
+            "adam", &specs, 0.9, 0.98, 4).unwrap();
+        fresh.load_state(tensors.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t).collect();
+        assert_eq!(tensors, restored);
     }
 
     #[test]
@@ -349,7 +738,8 @@ mod tests {
 
     /// The determinism contract at q8: sharded stepping with quantized
     /// state is bitwise identical to serial quantized stepping (blocks
-    /// never straddle shard boundaries). The broader sweep lives in
+    /// never straddle shard OR split boundaries), and splitting preserves
+    /// the exact q8 byte accounting. The broader sweep lives in
     /// `crate::proptest`.
     #[test]
     fn bitwise_identical_to_serial_with_q8_state() {

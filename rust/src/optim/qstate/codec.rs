@@ -82,14 +82,16 @@ pub fn q8_blocks(len: usize) -> usize {
     len / Q8_BLOCK + usize::from(len % Q8_BLOCK != 0)
 }
 
-/// Quantize `vals` block-wise into `scales` (one f32 amax per block) and
-/// `codes` (one u8 per element). Output vectors are cleared first.
-pub fn q8_encode_into(vals: &[f32], scales: &mut Vec<f32>, codes: &mut Vec<u8>) {
-    scales.clear();
-    codes.clear();
-    scales.reserve(q8_blocks(vals.len()));
-    codes.reserve(vals.len());
-    for block in vals.chunks(Q8_BLOCK) {
+/// Quantize `vals` block-wise into pre-sized slices: one f32 amax per
+/// block into `scales`, one u8 per element into `codes`. This is the
+/// primitive the tile cursor re-encodes chunks with: because blocks are
+/// independent, encoding a block-aligned sub-range writes exactly the
+/// bytes a whole-slot encode would put there.
+pub fn q8_encode_slice(vals: &[f32], scales: &mut [f32], codes: &mut [u8]) {
+    debug_assert_eq!(scales.len(), q8_blocks(vals.len()));
+    debug_assert_eq!(codes.len(), vals.len());
+    for (bi, block) in vals.chunks(Q8_BLOCK).enumerate() {
+        let cb = &mut codes[bi * Q8_BLOCK..bi * Q8_BLOCK + block.len()];
         let mut amax = 0.0f32;
         for &v in block {
             debug_assert!(v.is_finite(),
@@ -107,15 +109,15 @@ pub fn q8_encode_into(vals: &[f32], scales: &mut Vec<f32>, codes: &mut Vec<u8>) 
             // (the stored scale), finite values decode to 0. Re-encoding
             // the decoded block takes the normal path with amax = MAX and
             // reproduces these exact bytes, so idempotence still holds.
-            scales.push(f32::MAX);
-            for &v in block {
-                codes.push(if v == f32::INFINITY {
+            scales[bi] = f32::MAX;
+            for (c, &v) in cb.iter_mut().zip(block) {
+                *c = if v == f32::INFINITY {
                     254
                 } else if v == f32::NEG_INFINITY {
                     0
                 } else {
                     Q8_ZERO_CODE
-                });
+                };
             }
             continue;
         }
@@ -123,38 +125,59 @@ pub fn q8_encode_into(vals: &[f32], scales: &mut Vec<f32>, codes: &mut Vec<u8>) 
         if scale == 0.0 {
             // all-zero block, or amax so subnormal the step underflows:
             // store a canonical zero block (keeps encode∘decode == id)
-            scales.push(0.0);
-            for _ in block {
-                codes.push(Q8_ZERO_CODE);
+            scales[bi] = 0.0;
+            for c in cb.iter_mut() {
+                *c = Q8_ZERO_CODE;
             }
             continue;
         }
-        scales.push(amax);
-        for &v in block {
+        scales[bi] = amax;
+        for (c, &v) in cb.iter_mut().zip(block) {
             let q = (round_ties_even(v / scale) as i32).clamp(-127, 127);
-            codes.push((q + 127) as u8);
+            *c = (q + 127) as u8;
         }
     }
 }
 
-/// Dequantize q8 blocks into `out` (cleared first). Codes ±127 decode to
-/// ±amax exactly — see the idempotence contract in the module docs.
-pub fn q8_decode_into(scales: &[f32], codes: &[u8], out: &mut Vec<f32>) {
+/// Quantize `vals` block-wise into `scales` (one f32 amax per block) and
+/// `codes` (one u8 per element). Output vectors are resized to fit (no
+/// reallocation once capacity is warm — the steady-state step path).
+pub fn q8_encode_into(vals: &[f32], scales: &mut Vec<f32>, codes: &mut Vec<u8>) {
+    // resize only (no clear): the encoder overwrites every element
+    scales.resize(q8_blocks(vals.len()), 0.0);
+    codes.resize(vals.len(), 0);
+    q8_encode_slice(vals, scales, codes);
+}
+
+/// Dequantize q8 blocks into a pre-sized slice (`out.len()` must equal
+/// `codes.len()`). Codes ±127 decode to ±amax exactly — see the
+/// idempotence contract in the module docs. Like [`q8_encode_slice`],
+/// block independence makes a block-aligned sub-range decode identical
+/// to the same positions of a whole-slot decode.
+pub fn q8_decode_slice(scales: &[f32], codes: &[u8], out: &mut [f32]) {
     debug_assert_eq!(scales.len(), q8_blocks(codes.len()));
-    out.clear();
-    out.reserve(codes.len());
+    debug_assert_eq!(out.len(), codes.len());
     for (b, block) in codes.chunks(Q8_BLOCK).enumerate() {
+        let ob = &mut out[b * Q8_BLOCK..b * Q8_BLOCK + block.len()];
         let amax = scales[b];
         let scale = amax / 127.0;
-        for &c in block {
+        for (o, &c) in ob.iter_mut().zip(block) {
             let q = c as i32 - 127;
-            out.push(match q {
+            *o = match q {
                 127 => amax,
                 -127 => -amax,
                 _ => scale * q as f32,
-            });
+            };
         }
     }
+}
+
+/// Dequantize q8 blocks into `out` (resized to fit; no reallocation once
+/// capacity is warm).
+pub fn q8_decode_into(scales: &[f32], codes: &[u8], out: &mut Vec<f32>) {
+    // resize only (no clear): the decoder overwrites every element
+    out.resize(codes.len(), 0.0);
+    q8_decode_slice(scales, codes, out);
 }
 
 #[cfg(test)]
@@ -331,6 +354,60 @@ mod tests {
         assert_eq!(d[0], 3.25);
         assert_eq!(d[1], -3.25);
         assert_eq!(d[2], 0.0);
+    }
+
+    /// Property (ISSUE 3 tentpole): the tile-cursor contract — encoding
+    /// and decoding block-aligned sub-ranges in any chunking produces
+    /// bit-identical bytes to one whole-slot pass. Chunk sizes are
+    /// multiples of [`Q8_BLOCK`]; lengths are deliberately odd.
+    #[test]
+    fn prop_q8_block_aligned_chunks_match_whole_slot() {
+        forall("q8 chunk locality", |rng| {
+            let n = 1 + rng.index(300);
+            let chunk = Q8_BLOCK * (1 + rng.index(3));
+            (gen::grad_vec(rng, n, 1.0), chunk)
+        }, |(vals, chunk)| {
+            let n = vals.len();
+            let (mut s_whole, mut c_whole) = (Vec::new(), Vec::new());
+            q8_encode_into(vals, &mut s_whole, &mut c_whole);
+            // chunked encode into pre-sized buffers
+            let mut s_chunk = vec![0.0f32; q8_blocks(n)];
+            let mut c_chunk = vec![0u8; n];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                let (b0, b1) = (lo / Q8_BLOCK, q8_blocks(hi));
+                q8_encode_slice(&vals[lo..hi], &mut s_chunk[b0..b1],
+                                &mut c_chunk[lo..hi]);
+                lo = hi;
+            }
+            if c_chunk != c_whole {
+                return Err("codes differ from whole-slot encode".into());
+            }
+            for (a, b) in s_chunk.iter().zip(&s_whole) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("scale differs: {a} vs {b}"));
+                }
+            }
+            // chunked decode matches whole-slot decode
+            let mut d_whole = Vec::new();
+            q8_decode_into(&s_whole, &c_whole, &mut d_whole);
+            let mut d_chunk = vec![0.0f32; n];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + chunk).min(n);
+                let (b0, b1) = (lo / Q8_BLOCK, q8_blocks(hi));
+                q8_decode_slice(&s_whole[b0..b1], &c_whole[lo..hi],
+                                &mut d_chunk[lo..hi]);
+                lo = hi;
+            }
+            for (a, b) in d_chunk.iter().zip(&d_whole) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("decode differs: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

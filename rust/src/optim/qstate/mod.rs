@@ -4,8 +4,10 @@
 //! (row/col covers); this subsystem shrinks it further by changing the
 //! *storage precision*: any registry optimizer can keep its slots in
 //! f32, bf16, or block-wise 8-bit (`q8`) while the update arithmetic
-//! itself stays bit-stable f32 (dequantize-on-read, quantize-on-write —
-//! see [`store::QuantizedSlots`]). Extends the memory accountant's
+//! itself stays bit-stable f32 — dequantize-on-read / quantize-on-write
+//! for whole-slot access, or tile-streamed through [`store::ChunkCursor`]
+//! on the step hot path (see [`store::QuantizedSlots`]). Extends the
+//! memory accountant's
 //! Tables 1–2 past the paper's OOM frontier (`memory::opt_state_bytes`)
 //! and opens a storage-precision axis for the quality sweeps.
 //!
@@ -18,7 +20,7 @@
 pub mod codec;
 pub mod store;
 
-pub use store::{QSlot, QuantizedSlots};
+pub use store::{ChunkCursor, QSlot, QuantizedSlots, TileMut};
 
 use anyhow::{bail, Result};
 

@@ -4,20 +4,27 @@
 //! A [`QSlot`] owns one state vector in its storage encoding; a
 //! [`QuantizedSlots`] is the per-optimizer collection the bank's
 //! optimizers allocate their accumulator and momentum slots from. The
-//! update arithmetic never sees the encoding: every step reads a slot
-//! into an f32 buffer, runs the exact f32 op sequence, and writes the
-//! result back (one deterministic quantization per slot per step). With
-//! [`StateDtype::F32`] read/write are plain copies, so the f32 path is
-//! bit-identical to the pre-qstate `Vec<f32>` fields it replaced.
+//! update arithmetic never sees the encoding. Two access shapes exist:
 //!
-//! Known tradeoff: the uniform read/modify/write shape costs the f32
-//! path two sequential memcpys per slot per step that the old in-place
-//! fields did not pay. A zero-copy fast path (lending `&mut [f32]` out
-//! of `SlotData::F32`) would split every optimizer's update loop into
-//! two code paths; per this repo's perf-pass convention that rewrite
-//! should land only with `bench_optim` numbers showing the memcpy
-//! matters next to the sqrt/div-bound update arithmetic — the qstate
-//! section of that bench measures exactly this.
+//! * **Whole-slot** ([`QSlot::read_into`] / [`QSlot::write`]) — dequantize
+//!   the full vector into an f32 buffer, mutate, re-quantize. The
+//!   checkpoint/introspection path, and the shape reduction-coupled
+//!   optimizers (SM3 matrix/tensor covers, Adafactor) keep.
+//! * **Tiled streaming** ([`QSlot::chunks_mut`]) — a [`ChunkCursor`]
+//!   walks the slot in fixed tiles (any multiple of the q8 64-element
+//!   block) and lends each tile as a [`TileMut`]: for f32 storage the
+//!   tile borrows the backing `Vec<f32>` directly (zero copies — the
+//!   memcpy the old whole-slot-only design paid on the hot path is
+//!   gone); for bf16/q8 it decodes into a small caller-owned scratch
+//!   and re-encodes into the backing bytes when the tile drops
+//!   (commit-on-drop). Because tile boundaries sit on q8 block
+//!   boundaries and both codecs are per-block pure functions, the
+//!   streamed result is bitwise identical to a whole-slot pass —
+//!   property-tested here and per optimizer in `crate::proptest`.
+//!
+//! `bench_optim`'s chunked-vs-whole-slot section measures what the
+//! removed memcpys and the O(tile) working set buy next to the
+//! sqrt/div-bound update arithmetic.
 
 use super::codec;
 use super::StateDtype;
@@ -125,6 +132,156 @@ impl QSlot {
             SlotData::Q8 { scales, codes } => scales.len() * 4 + codes.len(),
         }
     }
+
+    /// Borrow the raw f32 backing storage (`None` for quantized slots).
+    /// The zero-copy contract's observable: tiles from [`QSlot::chunks_mut`]
+    /// of an f32 slot alias this storage directly.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            SlotData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Stream the slot as mutable f32 tiles of at most `tile` scalars
+    /// (the last tile is the remainder). `tile` must be a positive
+    /// multiple of [`codec::Q8_BLOCK`] so every tile starts on a q8
+    /// block boundary — the invariant that makes per-tile re-encoding
+    /// bitwise identical to a whole-slot pass. `scratch` is the decode
+    /// buffer for bf16/q8 tiles, reused across tiles (and across calls:
+    /// hand the same buffer back and steady-state streaming allocates
+    /// nothing); f32 tiles never touch it.
+    pub fn chunks_mut<'s>(&'s mut self, tile: usize,
+                          scratch: &'s mut Vec<f32>) -> ChunkCursor<'s> {
+        assert!(tile > 0 && tile % codec::Q8_BLOCK == 0,
+                "tile size {} must be a positive multiple of the q8 block \
+                 ({})", tile, codec::Q8_BLOCK);
+        ChunkCursor { slot: self, scratch, tile, pos: 0 }
+    }
+}
+
+/// A cursor streaming one [`QSlot`] as fixed-size mutable f32 tiles.
+/// Obtain via [`QSlot::chunks_mut`]; drive with [`ChunkCursor::next_tile`]
+/// (a lending iterator — each [`TileMut`] must drop before the next is
+/// taken, which is what commits quantized tiles in order).
+pub struct ChunkCursor<'s> {
+    slot: &'s mut QSlot,
+    scratch: &'s mut Vec<f32>,
+    tile: usize,
+    pos: usize,
+}
+
+impl ChunkCursor<'_> {
+    /// The next tile, or `None` once the slot is exhausted.
+    pub fn next_tile(&mut self) -> Option<TileMut<'_>> {
+        let len = self.slot.len;
+        if self.pos >= len {
+            return None;
+        }
+        let start = self.pos;
+        let n = self.tile.min(len - start);
+        self.pos = start + n;
+        Some(match &mut self.slot.data {
+            SlotData::F32(v) => TileMut {
+                offset: start,
+                buf: TileBuf::Lent(&mut v[start..start + n]),
+            },
+            SlotData::Bf16(v) => {
+                let back = &mut v[start..start + n];
+                self.scratch.clear();
+                self.scratch.extend(back.iter().map(|&b| codec::bf16_to_f32(b)));
+                TileMut {
+                    offset: start,
+                    buf: TileBuf::Bf16 { scratch: &mut self.scratch[..n], back },
+                }
+            }
+            SlotData::Q8 { scales, codes } => {
+                // tiles start block-aligned, so the covering scale range
+                // is exactly [start/B, blocks(start + n))
+                let b0 = start / codec::Q8_BLOCK;
+                let b1 = codec::q8_blocks(start + n);
+                let scales = &mut scales[b0..b1];
+                let codes = &mut codes[start..start + n];
+                // resize only (no clear): the decoder overwrites every
+                // element, so zero-filling would just double the writes
+                self.scratch.resize(n, 0.0);
+                codec::q8_decode_slice(scales, codes, self.scratch);
+                TileMut {
+                    offset: start,
+                    buf: TileBuf::Q8 { scratch: &mut self.scratch[..n],
+                                       scales, codes },
+                }
+            }
+        })
+    }
+}
+
+/// One mutable f32 tile of a slot. Dereferences to `[f32]`. For f32
+/// storage this *is* the backing storage (zero-copy lend); for bf16/q8
+/// it is the decoded scratch, re-encoded into the backing bytes when the
+/// tile drops (commit-on-drop) — so mutations are durable exactly once,
+/// with one deterministic quantization per tile.
+pub struct TileMut<'a> {
+    offset: usize,
+    buf: TileBuf<'a>,
+}
+
+enum TileBuf<'a> {
+    Lent(&'a mut [f32]),
+    Bf16 { scratch: &'a mut [f32], back: &'a mut [u16] },
+    Q8 { scratch: &'a mut [f32], scales: &'a mut [f32], codes: &'a mut [u8] },
+}
+
+impl TileMut<'_> {
+    /// Element offset of this tile within its slot.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Does this tile lend the backing f32 storage directly (no copy)?
+    pub fn is_lent(&self) -> bool {
+        matches!(self.buf, TileBuf::Lent(_))
+    }
+}
+
+impl std::ops::Deref for TileMut<'_> {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match &self.buf {
+            TileBuf::Lent(v) => v,
+            TileBuf::Bf16 { scratch, .. } | TileBuf::Q8 { scratch, .. } => {
+                scratch
+            }
+        }
+    }
+}
+
+impl std::ops::DerefMut for TileMut<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        match &mut self.buf {
+            TileBuf::Lent(v) => v,
+            TileBuf::Bf16 { scratch, .. } | TileBuf::Q8 { scratch, .. } => {
+                scratch
+            }
+        }
+    }
+}
+
+impl Drop for TileMut<'_> {
+    fn drop(&mut self) {
+        match &mut self.buf {
+            TileBuf::Lent(_) => {} // mutations landed in place
+            TileBuf::Bf16 { scratch, back } => {
+                for (b, &x) in back.iter_mut().zip(scratch.iter()) {
+                    *b = codec::f32_to_bf16(x);
+                }
+            }
+            TileBuf::Q8 { scratch, scales, codes } => {
+                codec::q8_encode_slice(scratch, scales, codes);
+            }
+        }
+    }
 }
 
 /// A per-optimizer collection of [`QSlot`]s, all in one [`StateDtype`].
@@ -172,6 +329,25 @@ impl QuantizedSlots {
     /// Quantize `vals` into slot `id` (length must match).
     pub fn write(&mut self, id: usize, vals: &[f32]) {
         self.slots[id].write(vals);
+    }
+
+    /// Mutable access to one slot (the tile-streaming entry point).
+    pub fn slot_mut(&mut self, id: usize) -> &mut QSlot {
+        &mut self.slots[id]
+    }
+
+    /// Disjoint mutable access to two distinct slots — lets the kernel
+    /// layer stream e.g. an accumulator and its momentum in lockstep.
+    pub fn slot_pair_mut(&mut self, a: usize, b: usize)
+                         -> (&mut QSlot, &mut QSlot) {
+        assert_ne!(a, b, "slot_pair_mut needs distinct slot ids");
+        if a < b {
+            let (lo, hi) = self.slots.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.slots.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
     }
 
     /// Total state scalars across all slots (the paper's memory quantity).
@@ -258,6 +434,113 @@ mod tests {
         assert_eq!(buf.len(), 10);
         // 1.0 is the block max → decodes exactly
         assert!(buf.iter().all(|&v| v == 1.0));
+    }
+
+    /// Acceptance line (ISSUE 3): the f32 fast path performs zero slot
+    /// copies — every tile aliases the backing storage directly and the
+    /// scratch buffer is never touched.
+    #[test]
+    fn f32_tiles_lend_backing_storage_zero_copy() {
+        let vals: Vec<f32> = (0..300).map(|i| i as f32 * 0.5).collect();
+        let mut s = QSlot::from_f32(StateDtype::F32, &vals);
+        let base = s.as_f32().unwrap().as_ptr() as usize;
+        let mut scratch = Vec::new();
+        let mut cur = s.chunks_mut(64, &mut scratch);
+        let mut seen = 0;
+        while let Some(tile) = cur.next_tile() {
+            assert!(tile.is_lent());
+            assert_eq!(tile.as_ptr() as usize, base + 4 * tile.offset(),
+                       "tile at {} does not alias storage", tile.offset());
+            seen += tile.len();
+        }
+        assert_eq!(seen, 300);
+        assert_eq!(scratch.capacity(), 0, "f32 path must not touch scratch");
+    }
+
+    /// Tiled mutation == whole-slot mutation, bitwise, for every dtype
+    /// and odd lengths (tiles of 64 and 128 against one full-slot pass).
+    #[test]
+    fn chunked_mutation_matches_whole_slot_bitwise() {
+        let f = |i: usize, x: f32| x * 1.25 + (i % 7) as f32 * 0.125 - 0.5;
+        for dtype in StateDtype::ALL {
+            for len in [1usize, 63, 64, 65, 130, 257] {
+                let vals: Vec<f32> =
+                    (0..len).map(|i| (i as f32 - 40.0) * 0.37).collect();
+                for tile in [64usize, 128] {
+                    // whole-slot reference: read, mutate, write
+                    let mut whole = QSlot::from_f32(dtype, &vals);
+                    let mut buf = whole.to_vec();
+                    for (i, x) in buf.iter_mut().enumerate() {
+                        *x = f(i, *x);
+                    }
+                    whole.write(&buf);
+                    // tiled: mutate through the cursor, commit on drop
+                    let mut tiled = QSlot::from_f32(dtype, &vals);
+                    let mut scratch = Vec::new();
+                    let mut cur = tiled.chunks_mut(tile, &mut scratch);
+                    while let Some(mut t) = cur.next_tile() {
+                        let off = t.offset();
+                        for (i, x) in t.iter_mut().enumerate() {
+                            *x = f(off + i, *x);
+                        }
+                    }
+                    let (a, b) = (whole.to_vec(), tiled.to_vec());
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "{dtype:?} len {len} tile {tile}: \
+                                    {x} != {y}");
+                    }
+                    assert_eq!(whole.state_bytes(), tiled.state_bytes());
+                }
+            }
+        }
+    }
+
+    /// Quantized tiles only become durable when they drop (commit-on-drop),
+    /// and scratch capacity is bounded by one tile, not the slot.
+    #[test]
+    fn quantized_tiles_commit_on_drop() {
+        let vals = [2.0f32; 200];
+        let mut s = QSlot::from_f32(StateDtype::Q8, &vals);
+        let mut scratch = Vec::new();
+        {
+            let mut cur = s.chunks_mut(64, &mut scratch);
+            let mut t = cur.next_tile().unwrap();
+            assert!(!t.is_lent());
+            for x in t.iter_mut() {
+                *x = 4.0;
+            }
+            drop(t); // first tile committed
+            let t2 = cur.next_tile().unwrap();
+            // second tile still sees the original encoding
+            assert_eq!(t2[0], 2.0);
+        }
+        let got = s.to_vec();
+        assert_eq!(got[0], 4.0); // amax element decodes exactly
+        assert_eq!(got[63], 4.0);
+        assert_eq!(got[64], 2.0);
+        assert!(scratch.capacity() >= 64 && scratch.capacity() < 200,
+                "scratch should hold one tile, got capacity {}",
+                scratch.capacity());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of the q8 block")]
+    fn misaligned_tile_size_panics() {
+        let mut s = QSlot::zeros(128, StateDtype::Q8);
+        let mut scratch = Vec::new();
+        let _ = s.chunks_mut(96, &mut scratch);
+    }
+
+    #[test]
+    fn slot_pair_mut_is_disjoint_either_order() {
+        let mut st = QuantizedSlots::new(StateDtype::F32);
+        let a = st.add_zeros(10);
+        let b = st.add_zeros(20);
+        let (sa, sb) = st.slot_pair_mut(a, b);
+        assert_eq!((sa.len(), sb.len()), (10, 20));
+        let (sb2, sa2) = st.slot_pair_mut(b, a);
+        assert_eq!((sb2.len(), sa2.len()), (20, 10));
     }
 
     #[test]

@@ -50,15 +50,27 @@ impl Schedule {
         Self { base, warmup, decay: Decay::Staircase { eta0, alpha, tau } }
     }
 
-    /// Parse from config: "constant" | "rsqrt" | "linear" | "staircase".
+    /// Parse from config: "constant" | "rsqrt" | "linear" | "staircase",
+    /// with the default staircase parameters.
     pub fn from_name(name: &str, base: f64, warmup: u64, d_model: usize,
                      t_total: u64) -> anyhow::Result<Self> {
+        Self::from_name_with(name, base, warmup, d_model, t_total,
+                             &StaircaseParams::default())
+    }
+
+    /// [`Schedule::from_name`] with explicit staircase parameters
+    /// (config keys `lr_eta0` / `lr_alpha` / `lr_tau`; validated here).
+    pub fn from_name_with(name: &str, base: f64, warmup: u64, d_model: usize,
+                          t_total: u64, stair: &StaircaseParams)
+                          -> anyhow::Result<Self> {
         Ok(match name {
             "constant" => Self::constant(base, warmup),
             "rsqrt" => Self::rsqrt(base, warmup, d_model),
             "linear" => Self::linear(base, warmup, t_total),
-            "staircase" => Self::staircase(base, warmup, base * 0.01, 0.88,
-                                           (t_total / 10).max(1)),
+            "staircase" => {
+                let (eta0, alpha, tau) = stair.resolve(base, t_total)?;
+                Self::staircase(base, warmup, eta0, alpha, tau)
+            }
             other => anyhow::bail!("unknown schedule {other:?}"),
         })
     }
@@ -89,16 +101,65 @@ impl Schedule {
     }
 }
 
+/// Staircase-decay parameters (AmoebaNet SGD, Table 4). The defaults are
+/// the values `Schedule::from_name` used to hard-code; a config can now
+/// override each (`lr_eta0` / `lr_alpha` / `lr_tau` under `[optim]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StaircaseParams {
+    /// floor η₀; `None` derives the old default, `base · 0.01`
+    pub eta0: Option<f64>,
+    /// per-stair decay factor α, must satisfy 0 < α < 1
+    pub alpha: f64,
+    /// stair width τ in steps; `None` derives `max(t_total / 10, 1)`
+    pub tau: Option<u64>,
+}
+
+impl Default for StaircaseParams {
+    fn default() -> Self {
+        Self { eta0: None, alpha: 0.88, tau: None }
+    }
+}
+
+impl StaircaseParams {
+    /// Resolve against the run's base LR and total steps, validating
+    /// ranges (a decay factor outside (0, 1) would grow the LR or stall
+    /// it — reject loudly instead of training with it).
+    pub fn resolve(&self, base: f64, t_total: u64)
+                   -> anyhow::Result<(f64, f64, u64)> {
+        anyhow::ensure!(self.alpha > 0.0 && self.alpha < 1.0,
+                        "lr_alpha must be in (0, 1), got {}", self.alpha);
+        let eta0 = self.eta0.unwrap_or(base * 0.01);
+        anyhow::ensure!(eta0.is_finite() && eta0 >= 0.0,
+                        "lr_eta0 must be a finite non-negative floor, \
+                         got {eta0}");
+        let tau = self.tau.unwrap_or((t_total / 10).max(1));
+        anyhow::ensure!(tau >= 1, "lr_tau must be >= 1 step");
+        Ok((eta0, self.alpha, tau))
+    }
+}
+
 /// The paper's default schedule per optimizer name (Table 4).
 pub fn paper_default(opt: &str, base: f64, warmup: u64, d_model: usize,
                      t_total: u64) -> Schedule {
-    match opt {
+    paper_default_with(opt, base, warmup, d_model, t_total,
+                       &StaircaseParams::default())
+        .expect("default staircase parameters are valid")
+}
+
+/// [`paper_default`] with explicit staircase parameters (only the sgdm
+/// row uses them).
+pub fn paper_default_with(opt: &str, base: f64, warmup: u64, d_model: usize,
+                          t_total: u64, stair: &StaircaseParams)
+                          -> anyhow::Result<Schedule> {
+    Ok(match opt {
         "adam" | "adafactor" => Schedule::rsqrt(base, warmup, d_model),
-        "sgdm" => Schedule::staircase(base, warmup, base * 0.01, 0.88,
-                                      (t_total / 10).max(1)),
+        "sgdm" => {
+            let (eta0, alpha, tau) = stair.resolve(base, t_total)?;
+            Schedule::staircase(base, warmup, eta0, alpha, tau)
+        }
         // Adagrad and both SM3 variants: constant past warmup
         _ => Schedule::constant(base, warmup),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -147,6 +208,44 @@ mod tests {
         assert_eq!(s.lr(250), 0.25);
         // floor
         assert_eq!(s.lr(10_000), 0.05);
+    }
+
+    /// ISSUE 3 satellite: the staircase parameters are configurable, the
+    /// old hard-coded values remain the defaults, and α is validated.
+    #[test]
+    fn staircase_params_resolve_and_validate() {
+        // defaults reproduce the historical hard-coding
+        let d = StaircaseParams::default();
+        let (eta0, alpha, tau) = d.resolve(0.5, 1000).unwrap();
+        assert_eq!(eta0, 0.5 * 0.01);
+        assert_eq!(alpha, 0.88);
+        assert_eq!(tau, 100);
+        // t_total < 10 floors tau at 1
+        assert_eq!(d.resolve(0.5, 3).unwrap().2, 1);
+        // explicit overrides pass through
+        let p = StaircaseParams { eta0: Some(0.02), alpha: 0.5,
+                                  tau: Some(250) };
+        assert_eq!(p.resolve(1.0, 1000).unwrap(), (0.02, 0.5, 250));
+        let s = Schedule::from_name_with("staircase", 1.0, 0, 512, 1000, &p)
+            .unwrap();
+        assert_eq!(s.lr(100), 1.0);
+        assert_eq!(s.lr(300), 0.5);
+        assert_eq!(s.lr(100_000), 0.02); // the configured floor
+        // 0 < alpha < 1 is enforced
+        for bad in [0.0, 1.0, 1.5, -0.1] {
+            let p = StaircaseParams { alpha: bad, ..Default::default() };
+            assert!(p.resolve(1.0, 1000).is_err(), "alpha {bad} accepted");
+            assert!(Schedule::from_name_with(
+                "staircase", 1.0, 0, 512, 1000, &p).is_err());
+        }
+        // non-staircase schedules ignore the params entirely
+        assert!(Schedule::from_name_with(
+            "constant", 1.0, 0, 512, 1000,
+            &StaircaseParams { alpha: 0.88, eta0: Some(-1.0), tau: Some(0) })
+            .is_ok());
+        // negative floor rejected on the staircase path
+        let p = StaircaseParams { eta0: Some(-1.0), ..Default::default() };
+        assert!(p.resolve(1.0, 1000).is_err());
     }
 
     #[test]

@@ -1,12 +1,16 @@
 //! SGD with heavy-ball momentum — the non-adaptive baseline
 //! (paper §5.3, AmoebaNet).
 
+use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
 pub struct SgdMomentum {
     beta1: f32,
+    /// streaming tile (elements; multiple of the q8 block)
+    chunk: usize,
+    scratch: ChunkScratch,
     /// slot `i` holds leaf `i`'s momentum
     slots: QuantizedSlots,
     specs: Vec<ParamSpec>,
@@ -19,11 +23,18 @@ impl SgdMomentum {
 
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32,
                       dtype: StateDtype) -> Self {
+        Self::with_opts(specs, beta1, dtype, kernel::DEFAULT_CHUNK)
+    }
+
+    pub fn with_opts(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+                     chunk: usize) -> Self {
+        kernel::check_chunk(chunk).unwrap();
         let mut slots = QuantizedSlots::new(dtype);
         for s in specs {
             slots.add_zeros(s.numel());
         }
-        Self { beta1, slots, specs: specs.to_vec() }
+        Self { beta1, chunk, scratch: ChunkScratch::default(), slots,
+               specs: specs.to_vec() }
     }
 }
 
@@ -34,17 +45,21 @@ impl Optimizer for SgdMomentum {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let b1 = self.beta1;
-        let mut mom = Vec::new();
         for idx in 0..params.len() {
-            let wd = params[idx].data_mut();
-            let gd = grads[idx].data();
-            self.slots.read_into(idx, &mut mom);
-            for k in 0..wd.len() {
-                mom[k] = b1 * mom[k] + gd[k];
-                wd[k] -= lr * mom[k];
-            }
-            self.slots.write(idx, &mom);
+            kernel::step_chunked1(
+                &mut self.slots, idx, self.chunk, &mut self.scratch,
+                params[idx].data_mut(), grads[idx].data(),
+                |w, g, mom| kernel::sgdm_chunk(b1, lr, w, g, mom));
         }
+    }
+
+    fn step_flat(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(self.specs.len(), 1,
+                   "step_flat needs a single-leaf instance");
+        let b1 = self.beta1;
+        kernel::step_chunked1(&mut self.slots, 0, self.chunk,
+                              &mut self.scratch, w, g,
+                              |w, g, mom| kernel::sgdm_chunk(b1, lr, w, g, mom));
     }
 
     fn state_floats(&self) -> usize {

@@ -10,15 +10,30 @@
 //! row/col accumulators without materializing the m×n `nu` matrix — this
 //! is the memory story of the paper executed literally.
 //!
-//! State lives in a [`QuantizedSlots`] store (DESIGN.md §10): each step
-//! dequantizes a leaf's accumulators and momentum to f32 buffers, runs
-//! the exact update arithmetic, and quantizes the results back. With
-//! `StateDtype::F32` the store is a plain copy and the trajectory is
-//! bit-identical to the pre-qstate `Vec<f32>` fields.
+//! State lives in a [`QuantizedSlots`] store (DESIGN.md §10). Vector
+//! leaves (rank ≤ 1, the singleton cover — where SM3 coincides with
+//! Adagrad) stream through the tiled kernel layer (`optim::kernel`):
+//! zero-copy at f32, O(tile) scratch at bf16/q8. Matrix/tensor leaves
+//! are reduction-coupled (each `nu` folds into row/col maxima), so they
+//! keep the leaf-granular two-pass shape: dequantize the leaf's
+//! accumulators and momentum into struct-held buffers (no per-step
+//! allocation), run the exact update arithmetic, quantize back. Either
+//! way the trajectory is bit-identical to the pre-qstate `Vec<f32>`
+//! fields at `StateDtype::F32`.
 
+use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{safe_rsqrt, Optimizer, ParamSpec};
 use crate::tensor::{axis_index, Tensor};
+
+/// Ensure `bufs` holds at least `k` buffer shells (capacity inside each
+/// shell grows to the lengths seen and is then reused — steady-state
+/// steps allocate nothing).
+fn ensure_bufs(bufs: &mut Vec<Vec<f32>>, k: usize) {
+    while bufs.len() < k {
+        bufs.push(Vec::new());
+    }
+}
 
 /// Which algorithm from the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,6 +56,15 @@ struct LeafIds {
 pub struct Sm3 {
     variant: Sm3Variant,
     beta1: f32,
+    /// streaming tile for vector (singleton-cover) leaves
+    chunk: usize,
+    scratch: ChunkScratch,
+    /// reduction-coupled leaves: dequantized accumulator buffers (one per
+    /// axis), momentum buffer, and per-axis reduction scratch — all
+    /// struct-held so steady-state steps are allocation-free
+    acc_bufs: Vec<Vec<f32>>,
+    mom_buf: Vec<f32>,
+    axis_scratch: Vec<Vec<f32>>,
     store: QuantizedSlots,
     leaves: Vec<LeafIds>,
     specs: Vec<ParamSpec>,
@@ -53,6 +77,12 @@ impl Sm3 {
 
     pub fn with_dtype(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
                       dtype: StateDtype) -> Self {
+        Self::with_opts(specs, variant, beta1, dtype, kernel::DEFAULT_CHUNK)
+    }
+
+    pub fn with_opts(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
+                     dtype: StateDtype, chunk: usize) -> Self {
+        kernel::check_chunk(chunk).unwrap();
         let mut store = QuantizedSlots::new(dtype);
         let leaves = specs
             .iter()
@@ -65,7 +95,10 @@ impl Sm3 {
                 LeafIds { accs, mom: store.add_zeros(s.numel()) }
             })
             .collect();
-        Self { variant, beta1, store, leaves, specs: specs.to_vec() }
+        Self { variant, beta1, chunk, scratch: ChunkScratch::default(),
+               acc_bufs: Vec::new(), mom_buf: Vec::new(),
+               axis_scratch: Vec::new(), store, leaves,
+               specs: specs.to_vec() }
     }
 
     /// Read accumulator `axis` of parameter `idx`, dequantized
@@ -93,28 +126,19 @@ impl Sm3 {
     }
 }
 
-fn step_vector(acc: &mut [f32], mom: &mut [f32], w: &mut Tensor, g: &Tensor,
-               lr: f32, beta1: f32) {
-    let wd = w.data_mut();
-    let gd = g.data();
-    for i in 0..wd.len() {
-        let nu = acc[i] + gd[i] * gd[i];
-        let upd = gd[i] * safe_rsqrt(nu);
-        mom[i] = beta1 * mom[i] + (1.0 - beta1) * upd;
-        wd[i] -= lr * mom[i];
-        acc[i] = nu;
-    }
-}
-
 fn step_matrix_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                  g: &Tensor, lr: f32, beta1: f32) {
+                  g: &Tensor, lr: f32, beta1: f32,
+                  scratch: &mut Vec<Vec<f32>>) {
     let (m, n) = (w.shape()[0], w.shape()[1]);
     let wd = w.data_mut();
     let gd = g.data();
     let (rows, cols) = accs.split_at_mut(1);
     let row = &mut rows[0];
     let col = &mut cols[0];
-    let mut new_col = vec![f32::NEG_INFINITY; n];
+    ensure_bufs(scratch, 1);
+    let new_col = &mut scratch[0];
+    new_col.clear();
+    new_col.resize(n, f32::NEG_INFINITY);
     // Single fused pass: nu is computed per element, consumed for the
     // update, and folded into the new row/col maxima — the m×n nu
     // matrix is never materialized (memory stays Θ(m+n)).
@@ -141,11 +165,12 @@ fn step_matrix_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         }
         row[i] = rmax;
     }
-    *col = new_col;
+    col.copy_from_slice(new_col);
 }
 
 fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                 g: &Tensor, lr: f32, beta1: f32) {
+                 g: &Tensor, lr: f32, beta1: f32,
+                 scratch: &mut Vec<Vec<f32>>) {
     let (m, n) = (w.shape()[0], w.shape()[1]);
     let gd = g.data();
     // pass 1: mu += max over slice of g²
@@ -153,8 +178,14 @@ fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         let (rows, cols) = accs.split_at_mut(1);
         let row = &mut rows[0];
         let col = &mut cols[0];
-        let mut rowmax = vec![0.0f32; m];
-        let mut colmax = vec![0.0f32; n];
+        ensure_bufs(scratch, 2);
+        let (rm, cm) = scratch.split_at_mut(1);
+        let rowmax = &mut rm[0];
+        let colmax = &mut cm[0];
+        rowmax.clear();
+        rowmax.resize(m, 0.0);
+        colmax.clear();
+        colmax.resize(n, 0.0);
         for i in 0..m {
             let base = i * n;
             for j in 0..n {
@@ -192,16 +223,21 @@ fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
 
 /// Generic rank-p path (conv kernels etc.). SM3-II semantics.
 fn step_tensor_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                  g: &Tensor, lr: f32, beta1: f32) {
-    let shape = w.shape().to_vec();
+                  g: &Tensor, lr: f32, beta1: f32,
+                  scratch: &mut Vec<Vec<f32>>) {
+    let shape = g.shape();
     let wd = w.data_mut();
     let gd = g.data();
-    let mut new_accs: Vec<Vec<f32>> =
-        shape.iter().map(|&nn| vec![f32::NEG_INFINITY; nn]).collect();
+    ensure_bufs(scratch, shape.len());
+    let new_accs = &mut scratch[..shape.len()];
+    for (na, &nn) in new_accs.iter_mut().zip(shape) {
+        na.clear();
+        na.resize(nn, f32::NEG_INFINITY);
+    }
     for k in 0..wd.len() {
         let mut nu = f32::INFINITY;
         for (a, acc) in accs.iter().enumerate() {
-            let v = acc[axis_index(&shape, k, a)];
+            let v = acc[axis_index(shape, k, a)];
             if v < nu {
                 nu = v;
             }
@@ -211,32 +247,36 @@ fn step_tensor_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         mom[k] = beta1 * mom[k] + (1.0 - beta1) * upd;
         wd[k] -= lr * mom[k];
         for (a, na) in new_accs.iter_mut().enumerate() {
-            let ai = axis_index(&shape, k, a);
+            let ai = axis_index(shape, k, a);
             if nu > na[ai] {
                 na[ai] = nu;
             }
         }
     }
-    for (dst, src) in accs.iter_mut().zip(new_accs) {
-        *dst = src;
+    for (dst, src) in accs.iter_mut().zip(new_accs.iter()) {
+        dst.copy_from_slice(src);
     }
 }
 
 fn step_tensor_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                 g: &Tensor, lr: f32, beta1: f32) {
-    let shape = w.shape().to_vec();
+                 g: &Tensor, lr: f32, beta1: f32,
+                 scratch: &mut Vec<Vec<f32>>) {
+    let shape = g.shape();
     let gd = g.data();
     // pass 1: accumulate slice maxima of g²
+    ensure_bufs(scratch, 1);
+    let mx = &mut scratch[0];
     for (a, acc) in accs.iter_mut().enumerate() {
-        let mut mx = vec![0.0f32; shape[a]];
+        mx.clear();
+        mx.resize(shape[a], 0.0);
         for k in 0..gd.len() {
             let g2 = gd[k] * gd[k];
-            let ai = axis_index(&shape, k, a);
+            let ai = axis_index(shape, k, a);
             if g2 > mx[ai] {
                 mx[ai] = g2;
             }
         }
-        for (av, m) in acc.iter_mut().zip(mx) {
+        for (av, &m) in acc.iter_mut().zip(mx.iter()) {
             *av += m;
         }
     }
@@ -245,7 +285,7 @@ fn step_tensor_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
     for k in 0..wd.len() {
         let mut nu = f32::INFINITY;
         for (a, acc) in accs.iter().enumerate() {
-            let v = acc[axis_index(&shape, k, a)];
+            let v = acc[axis_index(shape, k, a)];
             if v < nu {
                 nu = v;
             }
@@ -267,50 +307,71 @@ impl Optimizer for Sm3 {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.leaves.len());
-        let (beta1, variant) = (self.beta1, self.variant);
-        // Dequantize buffers hoisted out of the leaf loop (like the other
-        // bank optimizers): `read_into` reuses their capacity, so the f32
-        // path stays copy-only on the per-step hot path.
-        let mut acc_bufs: Vec<Vec<f32>> = Vec::new();
-        let mut mom = Vec::new();
+        let (beta1, variant, chunk) = (self.beta1, self.variant, self.chunk);
         for idx in 0..params.len() {
             let rank = params[idx].rank();
-            // Split borrows: temporarily move the tensor out.
-            let mut w = std::mem::replace(&mut params[idx], Tensor::zeros(&[0]));
-            let g = &grads[idx];
-            // dequantize this leaf's state, step, re-quantize
-            let ids = &self.leaves[idx];
-            while acc_bufs.len() < ids.accs.len() {
-                acc_bufs.push(Vec::new());
+            if rank <= 1 {
+                // Singleton cover == Adagrad (paper §3): element-wise,
+                // streamed through the tiled kernel layer — zero-copy at
+                // f32, O(tile) scratch at bf16/q8.
+                let (acc_id, mom_id) =
+                    (self.leaves[idx].accs[0], self.leaves[idx].mom);
+                kernel::step_chunked2(
+                    &mut self.store, acc_id, mom_id, chunk,
+                    &mut self.scratch, params[idx].data_mut(),
+                    grads[idx].data(), |w, g, acc, mom| {
+                        kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+                    });
+                continue;
             }
-            let accs = &mut acc_bufs[..ids.accs.len()];
+            // Reduction-coupled covers: dequantize this leaf's state into
+            // the struct-held buffers, run the two-pass update, quantize
+            // back. `read_into`/`resize` reuse capacity, so steady-state
+            // steps stay allocation-free.
+            let w = &mut params[idx];
+            let g = &grads[idx];
+            let ids = &self.leaves[idx];
+            ensure_bufs(&mut self.acc_bufs, ids.accs.len());
+            let accs = &mut self.acc_bufs[..ids.accs.len()];
             for (buf, &id) in accs.iter_mut().zip(&ids.accs) {
                 self.store.read_into(id, buf);
             }
-            self.store.read_into(ids.mom, &mut mom);
+            self.store.read_into(ids.mom, &mut self.mom_buf);
+            let mom = &mut self.mom_buf;
+            let scratch = &mut self.axis_scratch;
             match (rank, variant) {
-                (0 | 1, _) => {
-                    step_vector(&mut accs[0], &mut mom, &mut w, g, lr, beta1)
-                }
                 (2, Sm3Variant::II) => {
-                    step_matrix_ii(accs, &mut mom, &mut w, g, lr, beta1)
+                    step_matrix_ii(accs, mom, w, g, lr, beta1, scratch)
                 }
                 (2, Sm3Variant::I) => {
-                    step_matrix_i(accs, &mut mom, &mut w, g, lr, beta1)
+                    step_matrix_i(accs, mom, w, g, lr, beta1, scratch)
                 }
                 (_, Sm3Variant::II) => {
-                    step_tensor_ii(accs, &mut mom, &mut w, g, lr, beta1)
+                    step_tensor_ii(accs, mom, w, g, lr, beta1, scratch)
                 }
                 (_, Sm3Variant::I) => {
-                    step_tensor_i(accs, &mut mom, &mut w, g, lr, beta1)
+                    step_tensor_i(accs, mom, w, g, lr, beta1, scratch)
                 }
             }
             for (buf, &id) in accs.iter().zip(&ids.accs) {
                 self.store.write(id, buf);
             }
-            self.store.write(ids.mom, &mom);
-            params[idx] = w;
+            self.store.write(ids.mom, &self.mom_buf);
         }
+    }
+
+    fn step_flat(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(self.specs.len(), 1,
+                   "step_flat needs a single-leaf instance");
+        assert!(self.specs[0].shape.len() <= 1,
+                "step_flat: SM3 is element-wise only under the singleton \
+                 cover (rank <= 1)");
+        let beta1 = self.beta1;
+        let (acc_id, mom_id) = (self.leaves[0].accs[0], self.leaves[0].mom);
+        kernel::step_chunked2(&mut self.store, acc_id, mom_id, self.chunk,
+                              &mut self.scratch, w, g, |w, g, acc, mom| {
+            kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+        });
     }
 
     fn state_floats(&self) -> usize {

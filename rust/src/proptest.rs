@@ -259,6 +259,151 @@ mod tests {
         });
     }
 
+    /// ISSUE 3 tentpole: the chunked streaming kernels are bitwise
+    /// identical to the whole-slot path — all five registry optimizers ×
+    /// {f32, bf16, q8} × slot lengths that are NOT multiples of the tile
+    /// (odd vectors longer than one tile, plus matrix/tensor leaves).
+    /// "Whole-slot" is the same engine at a single tile covering any
+    /// slot, which performs exactly one decode → full update → one
+    /// encode per slot, i.e. the pre-tiling semantics.
+    #[test]
+    fn chunked_kernels_match_whole_slot_bitwise() {
+        use crate::optim::{self, Optimizer, StateDtype};
+        use crate::tensor::Tensor;
+        const WHOLE: usize = 1 << 30; // one tile spans every slot
+        forall("chunked == whole-slot, bitwise", |rng| {
+            // an odd-length vector spanning several tiles, plus a couple
+            // of random leaves (any rank: matrix/tensor paths ride along)
+            let mut specs = vec![crate::optim::ParamSpec::new(
+                "v", &[65 + rng.index(140)])];
+            specs.extend(gen::param_specs(rng, 2, 3, 6));
+            (specs, rng.next_u64())
+        }, |(specs, seed)| {
+            for dtype in StateDtype::ALL {
+                for name in optim::ALL {
+                    for chunk in [64usize, 128] {
+                        let mut tiled = optim::build_with_opts(
+                            name, specs, 0.9, 0.98, dtype, chunk)
+                            .map_err(|e| e.to_string())?;
+                        let mut whole = optim::build_with_opts(
+                            name, specs, 0.9, 0.98, dtype, WHOLE)
+                            .map_err(|e| e.to_string())?;
+                        let mut rng = crate::rng::Rng::new(*seed);
+                        let init: Vec<Tensor> = specs
+                            .iter()
+                            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                            .collect();
+                        let mut pa = init.clone();
+                        let mut pb = init;
+                        for step in 0..3 {
+                            let grads: Vec<Tensor> = specs
+                                .iter()
+                                .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                                .collect();
+                            tiled.step(&mut pa, &grads, 0.1);
+                            whole.step(&mut pb, &grads, 0.1);
+                            for (leaf, (a, b)) in
+                                pa.iter().zip(&pb).enumerate()
+                            {
+                                for (x, y) in a.data().iter().zip(b.data()) {
+                                    if x.to_bits() != y.to_bits() {
+                                        return Err(format!(
+                                            "{name} @ {dtype:?} chunk \
+                                             {chunk} step {step} leaf \
+                                             {leaf}: {x} != {y}"));
+                                    }
+                                }
+                            }
+                        }
+                        // the carried state must agree too, not just the
+                        // visible parameters
+                        for ((_, sa, ta), (_, sb, tb)) in
+                            tiled.state().iter().zip(&whole.state())
+                        {
+                            if sa != sb || ta != tb {
+                                return Err(format!(
+                                    "{name} @ {dtype:?} chunk {chunk}: \
+                                     state slot {sa} diverged"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 3 tentpole: intra-leaf sharded `ParallelStep` == serial,
+    /// bitwise, at 1/2/4 threads on a skewed spec set whose dominant
+    /// embedding leaf actually gets split (asserted) — all five registry
+    /// optimizers, f32 and q8 state, small tiles inside the ranges.
+    #[test]
+    fn intra_leaf_sharded_step_is_bit_identical_to_serial() {
+        use crate::optim::{self, parallel::ParallelStep, Optimizer,
+                           SplitPolicy, StateDtype};
+        use crate::tensor::Tensor;
+        forall("intra-leaf ParallelStep == serial, bitwise", |rng| {
+            // one dominant embedding + a few small leaves
+            let rows = 120 + rng.index(80);
+            let mut specs =
+                vec![crate::optim::ParamSpec::new("embed", &[rows, 3])];
+            specs.extend(gen::param_specs(rng, 3, 2, 6));
+            (specs, rng.next_u64())
+        }, |(specs, seed)| {
+            for dtype in [StateDtype::F32, StateDtype::Q8] {
+                for name in optim::ALL {
+                    for threads in [1usize, 2, 4] {
+                        let mut serial = optim::build_with_dtype(
+                            name, specs, 0.9, 0.98, dtype)
+                            .map_err(|e| e.to_string())?;
+                        let mut par = ParallelStep::from_registry_opts(
+                            name, specs, 0.9, 0.98, threads, dtype, 64,
+                            SplitPolicy::IntraLeaf)
+                            .map_err(|e| e.to_string())?;
+                        // the planner must really split the dominant leaf
+                        // for element-wise optimizers at threads > 1
+                        let split = par.parts_per_leaf()[0] > 1;
+                        let expect = threads > 1
+                            && crate::optim::kernel::elementwise(name, 2);
+                        if split != expect {
+                            return Err(format!(
+                                "{name} x{threads}: embedding split = \
+                                 {split}, expected {expect}"));
+                        }
+                        let mut rng = crate::rng::Rng::new(*seed);
+                        let init: Vec<Tensor> = specs
+                            .iter()
+                            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                            .collect();
+                        let mut pa = init.clone();
+                        let mut pb = init;
+                        for step in 0..3 {
+                            let grads: Vec<Tensor> = specs
+                                .iter()
+                                .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                                .collect();
+                            serial.step(&mut pa, &grads, 0.1);
+                            par.step(&mut pb, &grads, 0.1);
+                            for (leaf, (a, b)) in
+                                pa.iter().zip(&pb).enumerate()
+                            {
+                                for (x, y) in a.data().iter().zip(b.data()) {
+                                    if x.to_bits() != y.to_bits() {
+                                        return Err(format!(
+                                            "{name} x{threads} @ {dtype:?} \
+                                             step {step} leaf {leaf}: \
+                                             {x} != {y}"));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {
