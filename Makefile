@@ -2,7 +2,7 @@
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
 .PHONY: tier1 build test lint fmt clippy bench-optim bench-quick benches \
-	artifacts
+	docs artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -20,6 +20,12 @@ clippy:
 	cargo clippy --workspace --all-targets -- -D warnings
 
 lint: fmt clippy
+
+# API docs with warnings promoted to errors (the `optim` module carries
+# #![warn(missing_docs)], so the redesigned public API ships fully
+# documented). Mirrors the docs job in .github/workflows/ci.yml.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 
 # Serial-vs-parallel optimizer-step numbers (EXPERIMENTS.md §Perf).
 bench-optim:

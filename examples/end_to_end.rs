@@ -35,6 +35,25 @@ fn main() -> Result<()> {
              trainer.meta.param_count as f64 / 1e6,
              trainer.meta.batch, trainer.meta.seq);
 
+    // The split path builds its optimizer through the composable
+    // OptimSpec API (DESIGN.md §11) — same model, with gradient clipping
+    // and decoupled weight decay chained around SM3. The fused artifact
+    // below bakes the bare SM3 kernel instead, so the spec is only
+    // *described* here (the static accountant prices it without
+    // allocating any state); `--exec split --clip-norm 1.0
+    // --weight-decay 0.01` trains through it.
+    let split_spec = sm3::optim::OptimSpec::named("sm3")?
+        .clip_by_global_norm(1.0)
+        .weight_decay(0.01);
+    let split_floats = sm3::memory::opt_state_floats(
+        split_spec.method().registry_name(),
+        &trainer.meta.param_specs())?
+        + sm3::memory::TRANSFORM_STATE_FLOATS;
+    println!("  split-path spec: {} + clip(1.0) + decay(0.01) — \
+              {:.2}M state floats",
+             split_spec.method().registry_name(),
+             split_floats as f64 / 1e6);
+
     let t0 = std::time::Instant::now();
     let hist = trainer.train()?;
     let wall = t0.elapsed().as_secs_f64();

@@ -17,16 +17,22 @@
 //! spec set, short budgets), which keeps the equality assertions
 //! *executing* on every push instead of only compiling via `--no-run`.
 //!
+//! Also measures the **composable transform pipeline** (DESIGN.md §11):
+//! clip-by-global-norm + decoupled weight decay over Adam/SM3 against
+//! the bare optimizer and a hand-fused baseline, gated on bitwise
+//! equality with the latter.
+//!
 //! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv,
 //! out/perf_optim_chunked.csv, out/perf_optim_parallel.csv,
-//! out/perf_optim_qstate.csv); `BENCH_QUICK=1` or `make bench-quick`
-//! for the CI-sized variant.
+//! out/perf_optim_qstate.csv, out/perf_optim_transforms.csv);
+//! `BENCH_QUICK=1` or `make bench-quick` for the CI-sized variant.
 
 use sm3::bench_util::{bench, speedup, CsvWriter};
 use sm3::collectives::ring_allreduce;
 use sm3::memory::opt_state_bytes;
-use sm3::optim::{self, cover::{Cover, CoverSm3II}, kernel, Optimizer,
-                 ParamSpec, ParallelStep, SplitPolicy, StateDtype};
+use sm3::optim::{self, cover::{Cover, CoverSm3II}, kernel, transform,
+                 OptimSpec, Optimizer, ParamSpec, ParallelStep, SplitPolicy,
+                 StateDtype};
 use sm3::rng::Rng;
 use sm3::tensor::Tensor;
 use std::time::Duration;
@@ -98,7 +104,8 @@ fn assert_parallel_bitwise(name: &str, specs: &[ParamSpec],
                            grads: &[Tensor], threads: usize,
                            dtype: StateDtype, policy: SplitPolicy)
                            -> anyhow::Result<()> {
-    let mut serial = optim::build_with_dtype(name, specs, 0.9, 0.98, dtype)?;
+    let mut serial =
+        OptimSpec::named(name)?.state_dtype(dtype).build(specs)?;
     let mut par = ParallelStep::from_registry_opts(
         name, specs, 0.9, 0.98, threads, dtype, kernel::DEFAULT_CHUNK,
         policy)?;
@@ -125,10 +132,10 @@ fn assert_parallel_bitwise(name: &str, specs: &[ParamSpec],
 fn assert_chunked_bitwise(name: &str, specs: &[ParamSpec], grads: &[Tensor],
                           dtype: StateDtype, chunk: usize)
                           -> anyhow::Result<()> {
-    let mut tiled = optim::build_with_opts(name, specs, 0.9, 0.98, dtype,
-                                           chunk)?;
-    let mut whole = optim::build_with_opts(name, specs, 0.9, 0.98, dtype,
-                                           WHOLE_SLOT)?;
+    let mut tiled = OptimSpec::named(name)?
+        .state_dtype(dtype).step_chunk(chunk).build(specs)?;
+    let mut whole = OptimSpec::named(name)?
+        .state_dtype(dtype).step_chunk(WHOLE_SLOT).build(specs)?;
     let mut pa: Vec<Tensor> =
         specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut pb = pa.clone();
@@ -145,6 +152,35 @@ fn assert_chunked_bitwise(name: &str, specs: &[ParamSpec], grads: &[Tensor],
         }
     }
     Ok(())
+}
+
+/// Hand-rolled twin of the clip(+decay) pipeline for the transform-
+/// overhead section, built on the pipeline's own helpers so the
+/// arithmetic is bitwise identical: rescale (or copy) the gradients into
+/// `tg`, decay `params`; the caller then runs the bare step on `tg`.
+/// One definition serves both the bitwise gate and the timed baseline,
+/// so they cannot desynchronize.
+fn apply_manual_transforms(tg: &mut [Tensor], grads: &[Tensor],
+                           params: &mut [Tensor], clip_c: f32, wd: f32,
+                           lr: f32) {
+    let scale =
+        transform::clip_scale(transform::global_sq_norm(grads), clip_c);
+    for (t, g) in tg.iter_mut().zip(grads) {
+        match scale {
+            Some(s) => {
+                for (o, &v) in t.data_mut().iter_mut().zip(g.data()) {
+                    *o = v * s;
+                }
+            }
+            None => t.data_mut().copy_from_slice(g.data()),
+        }
+    }
+    // exactly the pipeline's decay factor expression (lr·scale)·wd with
+    // the uniform scale 1.0
+    let f = 1.0 - lr * 1.0 * wd;
+    for t in params.iter_mut() {
+        t.map_inplace(|v| v * f);
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -175,7 +211,7 @@ fn main() -> anyhow::Result<()> {
                                     "optimizer,median_ns,elements_per_sec")?;
     let mut per_opt = Vec::new();
     for name in optim::ALL {
-        let mut opt = optim::build(name, &specs, 0.9, 0.98)?;
+        let mut opt = OptimSpec::named(name)?.build(&specs)?;
         let mut params: Vec<Tensor> =
             specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
         let stats = bench(&format!("{name} step"), budget, min_iters, || {
@@ -238,8 +274,8 @@ fn main() -> anyhow::Result<()> {
             assert_chunked_bitwise(name, &specs, &grads, dtype,
                                    kernel::DEFAULT_CHUNK)?;
             assert_chunked_bitwise(name, &specs, &grads, dtype, 64)?;
-            let mut whole = optim::build_with_opts(
-                name, &specs, 0.9, 0.98, dtype, WHOLE_SLOT)?;
+            let mut whole = OptimSpec::named(name)?
+                .state_dtype(dtype).step_chunk(WHOLE_SLOT).build(&specs)?;
             let mut params: Vec<Tensor> =
                 specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
             let base = bench(&format!("{name} @ {} whole-slot",
@@ -247,8 +283,8 @@ fn main() -> anyhow::Result<()> {
                              budget, min_iters, || {
                 whole.step(&mut params, &grads, 0.01);
             });
-            let mut tiled = optim::build_with_opts(
-                name, &specs, 0.9, 0.98, dtype, kernel::DEFAULT_CHUNK)?;
+            let mut tiled = OptimSpec::named(name)?
+                .state_dtype(dtype).build(&specs)?;
             let mut params: Vec<Tensor> =
                 specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
             let stats = bench(&format!("{name} @ {} tiled", dtype.name()),
@@ -295,7 +331,7 @@ fn main() -> anyhow::Result<()> {
                                     StateDtype::F32,
                                     SplitPolicy::IntraLeaf)?;
         }
-        let mut serial = optim::build(name, &big_specs, 0.9, 0.98)?;
+        let mut serial = OptimSpec::named(name)?.build(&big_specs)?;
         let mut params: Vec<Tensor> =
             big_specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
         let base = bench(&format!("{name} serial"), budget, min_iters, || {
@@ -352,7 +388,7 @@ fn main() -> anyhow::Result<()> {
                                         StateDtype::F32, policy)?;
             }
         }
-        let mut serial = optim::build(name, &sk, 0.9, 0.98)?;
+        let mut serial = OptimSpec::named(name)?.build(&sk)?;
         let mut params: Vec<Tensor> =
             sk.iter().map(|s| Tensor::zeros(&s.shape)).collect();
         let base = bench(&format!("{name} serial (skewed)"), budget,
@@ -415,7 +451,7 @@ fn main() -> anyhow::Result<()> {
         let f32_bytes = opt_state_bytes(name, &specs, StateDtype::F32)?;
         for dtype in StateDtype::ALL {
             let mut opt =
-                optim::build_with_dtype(name, &specs, 0.9, 0.98, dtype)?;
+                OptimSpec::named(name)?.state_dtype(dtype).build(&specs)?;
             let sb = opt.state_bytes();
             let mut params: Vec<Tensor> =
                 specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
@@ -435,6 +471,123 @@ fn main() -> anyhow::Result<()> {
                 assert!((sb as f64) * 3.5 <= f32_bytes as f64,
                         "{name}: q8 state {sb} B not ≥3.5x below f32 \
                          {f32_bytes} B");
+            }
+        }
+    }
+
+    // ---- transform overhead: bare vs hand-rolled vs pipeline -------------
+    // (ISSUE 4) The composable pipeline (clip_by_global_norm(1.0) +
+    // decoupled_weight_decay(0.01), optim::OptimSpec) against two
+    // baselines: the bare optimizer (what the transforms inherently
+    // cost) and the same transforms hand-fused around the bare step
+    // (what the *composition machinery* costs — the ≤10% assertion
+    // target). The pipeline-vs-manual comparison is also a bitwise
+    // equality gate, so CI executes the semantic contract under
+    // BENCH_QUICK=1. Zero steady-state allocations are asserted by the
+    // counting-allocator unit test in optim::transform.
+    println!("\n=== transform overhead — bare vs hand-rolled vs pipeline \
+              ({:.2}M params, clip_norm 1.0 + weight_decay 0.01) ===",
+             d as f64 / 1e6);
+    println!("  {:<11} {:<6} {:>12} {:>12} {:>12} {:>9}",
+             "optimizer", "dtype", "bare ns", "manual ns", "pipeline ns",
+             "pipe/man");
+    let mut tcsv = CsvWriter::create(
+        "out/perf_optim_transforms.csv",
+        "optimizer,dtype,variant,median_ns,elements_per_sec,\
+         ratio_vs_bare,ratio_vs_manual")?;
+    let (clip_c, wd) = (1.0f32, 0.01f32);
+    for name in ["adam", "sm3"] {
+        for dtype in [StateDtype::F32, StateDtype::Q8] {
+            // bitwise gate first: pipeline == hand-applied transforms
+            {
+                let mut pipe = OptimSpec::named(name)?
+                    .state_dtype(dtype)
+                    .clip_by_global_norm(clip_c)
+                    .weight_decay(wd)
+                    .build(&specs)?;
+                let mut bare = OptimSpec::named(name)?
+                    .state_dtype(dtype).build(&specs)?;
+                let mut pa: Vec<Tensor> =
+                    specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+                let mut pb = pa.clone();
+                let mut tg: Vec<Tensor> = grads.clone();
+                for step in 0..3 {
+                    pipe.step(&mut pa, &grads, 0.01);
+                    apply_manual_transforms(&mut tg, &grads, &mut pb,
+                                            clip_c, wd, 0.01);
+                    bare.step(&mut pb, &tg, 0.01);
+                    for (leaf, (a, b)) in pa.iter().zip(&pb).enumerate() {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            anyhow::ensure!(
+                                x.to_bits() == y.to_bits(),
+                                "{name} @ {dtype:?}: pipeline diverged \
+                                 from hand-rolled transforms at step \
+                                 {step} leaf {leaf}: {x} vs {y}");
+                        }
+                    }
+                }
+            }
+            // timings
+            let mut bare = OptimSpec::named(name)?
+                .state_dtype(dtype).build(&specs)?;
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let base = bench(&format!("{name} @ {} bare", dtype.name()),
+                             budget, min_iters, || {
+                bare.step(&mut params, &grads, 0.01);
+            });
+            let mut inner = OptimSpec::named(name)?
+                .state_dtype(dtype).build(&specs)?;
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let mut tg: Vec<Tensor> = grads.clone();
+            let manual = bench(&format!("{name} @ {} manual",
+                                        dtype.name()),
+                               budget, min_iters, || {
+                apply_manual_transforms(&mut tg, &grads, &mut params,
+                                        clip_c, wd, 0.01);
+                inner.step(&mut params, &tg, 0.01);
+            });
+            let mut pipe = OptimSpec::named(name)?
+                .state_dtype(dtype)
+                .clip_by_global_norm(clip_c)
+                .weight_decay(wd)
+                .build(&specs)?;
+            let mut params: Vec<Tensor> =
+                specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+            let pstats = bench(&format!("{name} @ {} pipeline",
+                                        dtype.name()),
+                               budget, min_iters, || {
+                pipe.step(&mut params, &grads, 0.01);
+            });
+            let vs_bare =
+                pstats.median.as_secs_f64() / base.median.as_secs_f64();
+            let vs_manual =
+                pstats.median.as_secs_f64() / manual.median.as_secs_f64();
+            println!("  {name:<11} {:<6} {:>12.0} {:>12.0} {:>12.0} \
+                      {vs_manual:>8.2}x",
+                     dtype.name(), base.per_iter_ns(),
+                     manual.per_iter_ns(), pstats.per_iter_ns());
+            for (variant, st) in [("bare", &base), ("manual", &manual),
+                                  ("pipeline", &pstats)] {
+                let rb = st.median.as_secs_f64()
+                    / base.median.as_secs_f64();
+                let rm = st.median.as_secs_f64()
+                    / manual.median.as_secs_f64();
+                tcsv.row(&[name.to_string(), dtype.name().to_string(),
+                           variant.to_string(),
+                           format!("{:.0}", st.per_iter_ns()),
+                           format!("{:.0}", st.throughput(d)),
+                           format!("{rb:.3}"), format!("{rm:.3}")])?;
+            }
+            // the composition machinery must stay within 10% of the
+            // hand-fused transforms (quick mode skips: 25ms budgets on a
+            // noisy CI box cannot resolve 10%)
+            if !quick {
+                anyhow::ensure!(
+                    vs_manual <= 1.10,
+                    "{name} @ {dtype:?}: pipeline is {vs_manual:.2}x the \
+                     hand-rolled transform baseline (target <= 1.10x)");
             }
         }
     }

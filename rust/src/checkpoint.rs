@@ -341,6 +341,85 @@ mod tests {
         }
     }
 
+    /// ISSUE 4 acceptance: a clip + weight-decay pipeline over Adam
+    /// (q8 state) round-trips through an `SM3CKPT2` file exactly the way
+    /// the trainer writes one — transform slots (`tx_step`/`tx_norm`)
+    /// lead the layout as f32-tagged scalars, slot tensors carry the
+    /// engine dtype, and a fresh pipeline restored from the file
+    /// continues bit-identically to the original.
+    #[test]
+    fn transform_pipeline_roundtrips_through_v2() {
+        use crate::optim::{OptimSpec, Optimizer, ParamSpec};
+        let specs = vec![ParamSpec::new("emb", &[12, 6]),
+                        ParamSpec::new("b", &[70])];
+        let build = || {
+            OptimSpec::named("adam").unwrap()
+                .clip_by_global_norm(1.0)
+                .weight_decay(0.01)
+                .state_dtype(StateDtype::Q8)
+                .build(&specs)
+                .unwrap()
+        };
+        let mut opt = build();
+        let mut rng = Rng::new(31);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        for _ in 0..3 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            opt.step(&mut params, &grads, 0.1);
+        }
+        // trainer tagging rule: scalar slots f32, the rest engine dtype
+        let dtype = opt.state_dtype();
+        let state = opt.state();
+        assert_eq!((state[0].0, state[0].1), (0, "tx_step"));
+        assert_eq!((state[1].0, state[1].1), (0, "tx_norm"));
+        let named: Vec<(String, Tensor, StateDtype)> = state
+            .into_iter()
+            .map(|(leaf, slot, t)| {
+                let tag = if t.len() <= 1 { StateDtype::F32 } else { dtype };
+                (format!("opt/{leaf}/{slot}"), t, tag)
+            })
+            .collect();
+        let entries: Vec<(String, &Tensor, StateDtype)> = named
+            .iter()
+            .map(|(n, t, d)| (n.clone(), t, *d))
+            .collect();
+        let path = tmpfile("pipeline_v2.ckpt");
+        save_v2(&path, &entries).unwrap();
+        let loaded = load_tagged(&path).unwrap();
+        assert_eq!(loaded.len(), entries.len());
+        assert_eq!(loaded[0].0, "opt/0/tx_step");
+        // scalar slots (tx_step, tx_norm, Adam's t) stay f32; the real
+        // state tensors carry the engine dtype
+        for (n, t, d) in &loaded {
+            let expect = if t.len() <= 1 { StateDtype::F32 }
+                         else { StateDtype::Q8 };
+            assert_eq!(*d, expect, "{n}");
+        }
+        // restore into a fresh pipeline; trajectories must not diverge
+        let mut fresh = build();
+        fresh.load_state(loaded.into_iter().map(|(_, t, _)| t).collect());
+        let mut pb = params.clone();
+        for _ in 0..2 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            opt.step(&mut params, &grads, 0.1);
+            fresh.step(&mut pb, &grads, 0.1);
+        }
+        for (a, b) in params.iter().zip(&pb) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+            }
+        }
+    }
+
     /// SM3CKPT1 → SM3CKPT2 cross-version round-trip: a state saved v1
     /// loads, re-saves as v2 (f32 tags), and loads bit-identically.
     #[test]

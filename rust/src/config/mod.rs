@@ -9,20 +9,44 @@
 pub mod toml;
 
 use self::toml::TomlValue;
-use crate::optim::StateDtype;
+use crate::optim::{GroupSpec, OptimSpec, SplitPolicy, StateDtype};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// Adam's historic denominator stabilizer — the value that was pinned
+/// inside the constructors before `[optim] eps` existed.
+pub const DEFAULT_EPS: f64 = 1e-8;
+
+/// One `[[optim.group]]` entry: per-parameter-group overrides resolved
+/// against leaf names at build time (see `optim::GroupSpec` for the
+/// pattern grammar and the most-specific-wins rule).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupConfig {
+    /// Name-prefix or `*`-glob over parameter names (required).
+    pub pattern: String,
+    /// LR multiplier for matched leaves (default 1.0).
+    pub lr_scale: f64,
+    /// Weight-decay override for matched leaves (e.g. 0.0 on biases).
+    pub weight_decay: Option<f64>,
+}
 
 /// Optimizer selection + hyperparameters (paper Table 3).
 #[derive(Clone, Debug)]
 pub struct OptimConfig {
     /// "sm3" | "sm3i" | "adagrad" | "adam" | "adafactor" | "sgdm"
     pub name: String,
+    /// Base learning rate (pre-schedule).
     pub lr: f64,
+    /// Momentum / first-moment decay β₁ (every method).
     pub beta1: f64,
+    /// Second-moment decay β₂ (Adam, Adafactor).
     pub beta2: f64,
+    /// Adam's denominator stabilizer ε (split path; default 1e-8 — the
+    /// historically hard-coded value). Ignored by the other methods.
+    pub eps: f64,
     /// "constant" | "rsqrt" | "linear" | "staircase" | "paper" (Table 4)
     pub schedule: String,
+    /// Linear LR warmup steps.
     pub warmup_steps: u64,
     /// staircase floor η₀ (staircase schedule / sgdm "paper" default);
     /// `None` derives `lr · 0.01` — the historically hard-coded value
@@ -31,6 +55,16 @@ pub struct OptimConfig {
     pub lr_alpha: f64,
     /// staircase stair width τ in steps; `None` derives `max(steps/10, 1)`
     pub lr_tau: Option<u64>,
+    /// `clip_by_global_norm` threshold (split path; None = no clipping).
+    pub clip_norm: Option<f64>,
+    /// `clip_by_value` threshold, applied before the norm clip (split
+    /// path; None = no clamping).
+    pub clip_value: Option<f64>,
+    /// Decoupled (AdamW-style) weight-decay base rate (split path;
+    /// 0 = off).
+    pub weight_decay: f64,
+    /// `[[optim.group]]` per-parameter-group overrides (split path).
+    pub groups: Vec<GroupConfig>,
 }
 
 impl Default for OptimConfig {
@@ -40,11 +74,16 @@ impl Default for OptimConfig {
             lr: 0.1,
             beta1: 0.9,
             beta2: 0.98,
+            eps: DEFAULT_EPS,
             schedule: "constant".into(),
             warmup_steps: 100,
             lr_eta0: None,
             lr_alpha: 0.88,
             lr_tau: None,
+            clip_norm: None,
+            clip_value: None,
+            weight_decay: 0.0,
+            groups: Vec::new(),
         }
     }
 }
@@ -57,6 +96,13 @@ impl OptimConfig {
             alpha: self.lr_alpha,
             tau: self.lr_tau,
         }
+    }
+
+    /// Does this config ask for any update transform or group override
+    /// (the split-path-only pipeline features)?
+    pub fn has_transforms(&self) -> bool {
+        self.clip_norm.is_some() || self.clip_value.is_some()
+            || self.weight_decay != 0.0 || !self.groups.is_empty()
     }
 }
 
@@ -150,6 +196,118 @@ fn get_u64(t: &TomlValue, key: &str, default: u64) -> u64 {
         .unwrap_or(default)
 }
 
+/// Numeric key that must error when present with a non-numeric value —
+/// `clip_norm = "1.0"` must not silently run with clipping off. (The
+/// new-in-PR-4 keys are strict; the legacy keys keep their lenient
+/// defaulting for compatibility.)
+fn strict_f64(t: &TomlValue, key: &str, section: &str)
+              -> Result<Option<f64>> {
+    match t.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(x) => Ok(Some(x)),
+            None => bail!("{section} {key} must be a number, got {v:?}"),
+        },
+    }
+}
+
+/// Levenshtein edit distance (for "did you mean" on unknown keys).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(),
+                                          b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Reject unknown keys in `tbl`, naming the nearest valid key — a
+/// `beta_1` typo must fail loudly instead of silently running with the
+/// default (ISSUE 4 satellite).
+fn reject_unknown_keys(tbl: &TomlValue, allowed: &[&str], section: &str)
+                       -> Result<()> {
+    let TomlValue::Table(m) = tbl else {
+        return Ok(());
+    };
+    for key in m.keys() {
+        if !allowed.contains(&key.as_str()) {
+            let nearest = allowed
+                .iter()
+                .min_by_key(|a| edit_distance(key, a))
+                .expect("allowlist is never empty");
+            bail!("unknown key {key:?} in {section} — did you mean \
+                   {nearest:?}? (valid keys: {allowed:?})");
+        }
+    }
+    Ok(())
+}
+
+/// Keys accepted in `[optim]`.
+const OPTIM_KEYS: &[&str] = &[
+    "name", "lr", "beta1", "beta2", "eps", "schedule", "warmup_steps",
+    "lr_eta0", "lr_alpha", "lr_tau", "clip_norm", "clip_value",
+    "weight_decay", "group",
+];
+
+/// Keys accepted in `[train]`.
+const TRAIN_KEYS: &[&str] = &[
+    "model", "exec", "steps", "eval_every", "grad_accum", "workers",
+    "step_threads", "state_dtype", "step_chunk", "seed", "artifacts_dir",
+    "out_dir",
+];
+
+/// Keys accepted in each `[[optim.group]]`.
+const GROUP_KEYS: &[&str] = &["pattern", "lr_scale", "weight_decay"];
+
+/// Fetch a top-level section, erroring when it exists as anything but a
+/// table — `[[optim]]` (array-of-tables) would otherwise make every
+/// `get()` return `None` and silently run the whole section on defaults.
+fn section_table(root: &TomlValue, key: &str) -> Result<TomlValue> {
+    match root.get(key) {
+        None => Ok(TomlValue::empty_table()),
+        Some(t @ TomlValue::Table(_)) => Ok(t.clone()),
+        Some(_) => bail!("[{key}] must be a table — did you write \
+                          [[{key}]]? (double brackets declare an array \
+                          of tables)"),
+    }
+}
+
+/// Parse the `[[optim.group]]` array.
+fn parse_groups(optim_tbl: &TomlValue) -> Result<Vec<GroupConfig>> {
+    let Some(raw) = optim_tbl.get("group") else {
+        return Ok(Vec::new());
+    };
+    let items = raw.as_array().ok_or_else(|| {
+        anyhow::anyhow!("[optim] group must be an array of tables \
+                         ([[optim.group]] sections)")
+    })?;
+    let mut groups = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        reject_unknown_keys(item, GROUP_KEYS,
+                            &format!("[[optim.group]] #{}", i + 1))?;
+        let pattern = item
+            .get("pattern")
+            .and_then(TomlValue::as_str)
+            .ok_or_else(|| anyhow::anyhow!(
+                "[[optim.group]] #{} needs a string `pattern`", i + 1))?
+            .to_string();
+        let section = format!("[[optim.group]] #{}", i + 1);
+        groups.push(GroupConfig {
+            pattern,
+            lr_scale: strict_f64(item, "lr_scale", &section)?.unwrap_or(1.0),
+            weight_decay: strict_f64(item, "weight_decay", &section)?,
+        });
+    }
+    Ok(groups)
+}
+
 impl TrainConfig {
     /// Parse from TOML text.
     pub fn from_toml(text: &str) -> Result<Self> {
@@ -157,13 +315,17 @@ impl TrainConfig {
         let d = TrainConfig::default();
         let od = OptimConfig::default();
 
-        let optim_tbl = root.get("optim").cloned()
-            .unwrap_or(TomlValue::empty_table());
+        // unknown sections and keys are errors naming the nearest valid
+        // key — a `beta_1` typo must not run with the default
+        reject_unknown_keys(&root, &["optim", "train"], "the config root")?;
+        let optim_tbl = section_table(&root, "optim")?;
+        reject_unknown_keys(&optim_tbl, OPTIM_KEYS, "[optim]")?;
         let optim = OptimConfig {
             name: get_str(&optim_tbl, "name", &od.name),
             lr: get_f64(&optim_tbl, "lr", od.lr),
             beta1: get_f64(&optim_tbl, "beta1", od.beta1),
             beta2: get_f64(&optim_tbl, "beta2", od.beta2),
+            eps: strict_f64(&optim_tbl, "eps", "[optim]")?.unwrap_or(od.eps),
             schedule: get_str(&optim_tbl, "schedule", &od.schedule),
             warmup_steps: get_u64(&optim_tbl, "warmup_steps", od.warmup_steps),
             lr_eta0: optim_tbl.get("lr_eta0").and_then(TomlValue::as_f64),
@@ -176,10 +338,15 @@ impl TrainConfig {
                 Some(v) => Some(v as u64),
                 None => None,
             },
+            clip_norm: strict_f64(&optim_tbl, "clip_norm", "[optim]")?,
+            clip_value: strict_f64(&optim_tbl, "clip_value", "[optim]")?,
+            weight_decay: strict_f64(&optim_tbl, "weight_decay", "[optim]")?
+                .unwrap_or(od.weight_decay),
+            groups: parse_groups(&optim_tbl)?,
         };
 
-        let train_tbl = root.get("train").cloned()
-            .unwrap_or(TomlValue::empty_table());
+        let train_tbl = section_table(&root, "train")?;
+        reject_unknown_keys(&train_tbl, TRAIN_KEYS, "[train]")?;
         let cfg = Self {
             model: get_str(&train_tbl, "model", &d.model),
             exec: ExecMode::parse(&get_str(&train_tbl, "exec", "split"))?,
@@ -254,6 +421,31 @@ impl TrainConfig {
         if self.optim.lr <= 0.0 {
             bail!("lr must be positive");
         }
+        if !(self.optim.eps.is_finite() && self.optim.eps > 0.0) {
+            bail!("[optim] eps must be finite and > 0, got {}",
+                  self.optim.eps);
+        }
+        if self.optim.eps != DEFAULT_EPS
+            && !crate::optim::Method::from_name(&self.optim.name)?.has_eps()
+        {
+            // same fail-loudly rule as the fused-path checks below: a
+            // knob Method::set_eps would silently drop is a config error
+            bail!("[optim] eps applies to Adam only ({:?} has no eps)",
+                  self.optim.name);
+        }
+        if self.exec == ExecMode::Fused {
+            // the fused artifact bakes its own hyperparameters and has no
+            // update-pipeline seam; reject knobs it would silently ignore
+            if self.optim.eps != DEFAULT_EPS {
+                bail!("[optim] eps applies to the split path only (the \
+                       fused artifact bakes its own eps)");
+            }
+            if self.optim.has_transforms() {
+                bail!("[optim] clip_norm / clip_value / weight_decay / \
+                       group apply to the split path only (the fused \
+                       artifact contains the optimizer)");
+            }
+        }
         if !matches!(self.optim.schedule.as_str(),
                      "paper" | "constant" | "rsqrt" | "linear" | "staircase")
         {
@@ -265,7 +457,48 @@ impl TrainConfig {
         self.optim.staircase_params()
             .resolve(self.optim.lr, self.steps)
             .context("[optim] lr_eta0 / lr_alpha / lr_tau")?;
+        // hyperparameters, transforms, and groups: assemble the OptimSpec
+        // so eps > 0, clip > 0, wd >= 0, lr_scale > 0 etc. fail at config
+        // parse time with the builder's own messages (group-vs-parameter
+        // matching needs the model's leaf names and happens at build)
+        self.optim_spec().context("[optim]")?;
         Ok(())
+    }
+
+    /// Assemble the composable construction spec (`optim::OptimSpec`,
+    /// DESIGN.md §11) this config describes: typed method
+    /// hyperparameters, state-storage options, transform stages in
+    /// canonical order (`clip_value` → `clip_norm` → `weight_decay`),
+    /// param groups, and the sharding plan. The trainer builds the
+    /// split-path optimizer from exactly this.
+    pub fn optim_spec(&self) -> Result<OptimSpec> {
+        let mut spec = OptimSpec::named(&self.optim.name)?
+            .beta1(self.optim.beta1 as f32)
+            .beta2(self.optim.beta2 as f32)
+            .eps(self.optim.eps as f32)
+            .state_dtype(self.state_dtype)
+            .step_chunk(self.step_chunk)
+            .threads(self.step_threads)
+            .split_policy(SplitPolicy::IntraLeaf);
+        if let Some(c) = self.optim.clip_value {
+            spec = spec.clip_by_value(c as f32);
+        }
+        if let Some(c) = self.optim.clip_norm {
+            spec = spec.clip_by_global_norm(c as f32);
+        }
+        if self.optim.weight_decay != 0.0 {
+            spec = spec.weight_decay(self.optim.weight_decay as f32);
+        }
+        for g in &self.optim.groups {
+            let mut gs = GroupSpec::new(g.pattern.clone())
+                .lr_scale(g.lr_scale as f32);
+            if let Some(wd) = g.weight_decay {
+                gs = gs.weight_decay(wd as f32);
+            }
+            spec = spec.group(gs);
+        }
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -404,6 +637,139 @@ warmup_steps = 40
         // negative lr_tau must error, not wrap through `as u64`
         assert!(TrainConfig::from_toml("[optim]\nlr_tau = -1\n").is_err());
         assert!(TrainConfig::from_toml("[optim]\nlr_tau = 0\n").is_err());
+    }
+
+    /// ISSUE 4 satellite: Adam's eps is a config knob (default
+    /// preserved, validated > 0, split-path only).
+    #[test]
+    fn eps_parses_defaults_and_validates() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.optim.eps, DEFAULT_EPS);
+        let cfg = TrainConfig::from_toml(
+            "[optim]\nname = \"adam\"\neps = 1e-6\n").unwrap();
+        assert_eq!(cfg.optim.eps, 1e-6);
+        assert!(TrainConfig::from_toml(
+            "[optim]\nname = \"adam\"\neps = 0.0\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[optim]\nname = \"adam\"\neps = -1e-8\n").is_err());
+        // a non-default eps on an eps-less method is silently ignored by
+        // the update rule, so it must be a config error (fail loudly)
+        let err = TrainConfig::from_toml(
+            "[optim]\nname = \"sm3\"\neps = 1e-6\n").unwrap_err();
+        assert!(err.to_string().contains("Adam only"), "{err}");
+        assert!(TrainConfig::from_toml(
+            "[optim]\nname = \"sm3\"\neps = 1e-8\n").is_ok());
+        // split-path knob: fused rejects a non-default eps
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\n[optim]\nname = \"adam\"\n\
+             eps = 1e-6\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\n[optim]\nname = \"adam\"\n\
+             eps = 1e-8\n").is_ok());
+    }
+
+    /// ISSUE 4 satellite: unknown keys in [optim]/[train] are rejected
+    /// with the nearest valid key named — a `beta_1` typo must not run
+    /// silently with the default.
+    #[test]
+    fn unknown_keys_rejected_with_suggestion() {
+        let err =
+            TrainConfig::from_toml("[optim]\nbeta_1 = 0.95\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("beta_1") && msg.contains("beta1"), "{msg}");
+        let err = TrainConfig::from_toml("[train]\nstep_thread = 4\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("step_thread") && msg.contains("step_threads"),
+                "{msg}");
+        // unknown sections too
+        let err = TrainConfig::from_toml("[optimizer]\nlr = 0.1\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("optim"), "{err}");
+        // and unknown keys inside [[optim.group]]
+        let err = TrainConfig::from_toml(
+            "[[optim.group]]\npattern = \"b\"\nlr_scal = 0.5\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("lr_scal") && msg.contains("lr_scale"),
+                "{msg}");
+        // [[optim]] / [[train]] (array-of-tables typo) must error, not
+        // silently run the whole section on defaults
+        let err = TrainConfig::from_toml(
+            "[[optim]]\nname = \"adam\"\nlr = 0.5\n").unwrap_err();
+        assert!(err.to_string().contains("array of tables"), "{err}");
+        assert!(TrainConfig::from_toml("[[train]]\nsteps = 5\n").is_err());
+    }
+
+    /// Transforms parse, validate, and are fused-path-rejected; the
+    /// config assembles an OptimSpec the trainer can build from.
+    #[test]
+    fn transform_keys_parse_and_validate() {
+        let cfg = TrainConfig::from_toml(
+            "[optim]\nname = \"adam\"\nclip_norm = 1.0\nclip_value = 0.5\n\
+             weight_decay = 0.01\n\n[[optim.group]]\npattern = \"*bias*\"\n\
+             weight_decay = 0.0\n\n[[optim.group]]\npattern = \"embed\"\n\
+             lr_scale = 0.5\n").unwrap();
+        assert_eq!(cfg.optim.clip_norm, Some(1.0));
+        assert_eq!(cfg.optim.clip_value, Some(0.5));
+        assert_eq!(cfg.optim.weight_decay, 0.01);
+        assert_eq!(cfg.optim.groups.len(), 2);
+        assert_eq!(cfg.optim.groups[0],
+                   GroupConfig { pattern: "*bias*".into(), lr_scale: 1.0,
+                                 weight_decay: Some(0.0) });
+        assert_eq!(cfg.optim.groups[1].lr_scale, 0.5);
+        let spec = cfg.optim_spec().unwrap();
+        let specs = vec![crate::optim::ParamSpec::new("embed", &[10, 4]),
+                         crate::optim::ParamSpec::new("l0/bias", &[4])];
+        let opt = spec.build(&specs).unwrap();
+        assert_eq!(opt.name(), "adam");
+        // bad values fail at parse time
+        assert!(TrainConfig::from_toml("[optim]\nclip_norm = 0.0\n")
+            .is_err());
+        assert!(TrainConfig::from_toml("[optim]\nweight_decay = -0.1\n")
+            .is_err());
+        assert!(TrainConfig::from_toml(
+            "[[optim.group]]\nlr_scale = 0.5\n").is_err(),
+            "group without pattern must fail");
+        assert!(TrainConfig::from_toml(
+            "[[optim.group]]\npattern = \"b\"\nlr_scale = 0.0\n").is_err());
+        // split-path only
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\n[optim]\nclip_norm = 1.0\n")
+            .is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\n[optim]\nweight_decay = 0.01\n")
+            .is_err());
+    }
+
+    /// The new keys are strictly typed: a wrong-typed value must error,
+    /// not silently run with the feature off or the default.
+    #[test]
+    fn wrong_typed_transform_keys_are_rejected() {
+        for bad in ["clip_norm = \"1.0\"", "clip_norm = true",
+                    "clip_value = \"x\"", "weight_decay = \"0.01\"",
+                    "eps = \"1e-6\""] {
+            let toml = format!("[optim]\nname = \"adam\"\n{bad}\n");
+            let err = TrainConfig::from_toml(&toml).unwrap_err();
+            assert!(err.to_string().contains("must be a number"),
+                    "{bad}: {err}");
+        }
+        let err = TrainConfig::from_toml(
+            "[[optim.group]]\npattern = \"b\"\nlr_scale = \"0.5\"\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("must be a number"), "{err}");
+        // integer literals still coerce (as_f64 accepts both)
+        let cfg = TrainConfig::from_toml(
+            "[optim]\nname = \"adam\"\nclip_norm = 1\n").unwrap();
+        assert_eq!(cfg.optim.clip_norm, Some(1.0));
+    }
+
+    #[test]
+    fn edit_distance_sanity() {
+        assert_eq!(edit_distance("beta_1", "beta1"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

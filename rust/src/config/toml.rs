@@ -1,10 +1,13 @@
 //! TOML-subset parser (serde/toml crates unavailable offline).
 //!
 //! Supports the subset the config system uses: `[table]` and
-//! `[nested.table]` headers, `key = value` pairs with string / integer /
-//! float / boolean / array values, comments, and blank lines. Unsupported
-//! TOML (multi-line strings, dotted keys, inline tables, dates) is
-//! rejected with a line-numbered error rather than mis-parsed.
+//! `[nested.table]` headers, `[[array.of.tables]]` headers (each opens a
+//! fresh table appended to the array — the `[[optim.group]]` param-group
+//! syntax), `key = value` pairs with string / integer / float / boolean /
+//! array values, comments, and blank lines. Path components that name an
+//! array of tables resolve to its *last* element, per the TOML spec.
+//! Unsupported TOML (multi-line strings, dotted keys, inline tables,
+//! dates) is rejected with a line-numbered error rather than mis-parsed.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -98,16 +101,62 @@ pub fn parse(text: &str) -> Result<TomlValue, TomlError> {
         if line.is_empty() {
             continue;
         }
+        if let Some(header) = line.strip_prefix("[[") {
+            // array-of-tables header: append a fresh table to the array
+            // at `path`; subsequent keys land in that element
+            let header = header
+                .strip_suffix("]]")
+                .ok_or_else(|| err(lineno, "unclosed array-of-tables \
+                                            header"))?;
+            current = header.split('.').map(|p| p.trim().to_string()).collect();
+            if current.iter().any(String::is_empty) {
+                return Err(err(lineno, "empty table-name component"));
+            }
+            let (parent, last) = current.split_at(current.len() - 1);
+            let tbl = table_at(&mut root, parent, lineno)?;
+            let entry = tbl
+                .entry(last[0].clone())
+                .or_insert_with(|| TomlValue::Array(Vec::new()));
+            match entry {
+                TomlValue::Array(items) => {
+                    // appending to a statically-defined array of scalars
+                    // (`xs = [1]` then `[[xs]]`) is a TOML error — reject
+                    // instead of building a heterogeneous array
+                    if items.iter()
+                        .any(|it| !matches!(it, TomlValue::Table(_)))
+                    {
+                        return Err(err(lineno, format!(
+                            "{:?} is an array of values, not of tables",
+                            last[0])));
+                    }
+                    items.push(TomlValue::empty_table());
+                }
+                _ => {
+                    return Err(err(lineno, format!(
+                        "{:?} is not an array of tables", last[0])));
+                }
+            }
+            continue;
+        }
         if let Some(header) = line.strip_prefix('[') {
             let header = header
                 .strip_suffix(']')
                 .ok_or_else(|| err(lineno, "unclosed table header"))?;
-            if header.starts_with('[') {
-                return Err(err(lineno, "array-of-tables not supported"));
-            }
             current = header.split('.').map(|p| p.trim().to_string()).collect();
             if current.iter().any(String::is_empty) {
                 return Err(err(lineno, "empty table-name component"));
+            }
+            // a single-bracket header must not name an existing array of
+            // tables — TOML rejects `[x]` after `[[x]]`, and silently
+            // resolving to the last element would merge the keys into
+            // the previous array entry (parent components may still
+            // traverse arrays: `[job.opts]` after `[[job]]` is fine)
+            let (parent, last) = current.split_at(current.len() - 1);
+            let tbl = table_at(&mut root, parent, lineno)?;
+            if matches!(tbl.get(&last[0]), Some(TomlValue::Array(_))) {
+                return Err(err(lineno, format!(
+                    "{:?} is an array of tables — append entries with \
+                     [[{header}]]", last[0])));
             }
             // ensure the table exists
             table_at(&mut root, &current, lineno)?;
@@ -158,6 +207,15 @@ fn table_at<'a>(
             .or_insert_with(TomlValue::empty_table);
         match entry {
             TomlValue::Table(m) => cur = m,
+            // a path component naming an array of tables resolves to
+            // its most recent element (TOML semantics)
+            TomlValue::Array(items) => match items.last_mut() {
+                Some(TomlValue::Table(m)) => cur = m,
+                _ => {
+                    return Err(err(lineno, format!(
+                        "{part:?} is not an array of tables")));
+                }
+            },
             _ => return Err(err(lineno, format!("{part:?} is not a table"))),
         }
     }
@@ -292,7 +350,55 @@ mod tests {
 
     #[test]
     fn unsupported_syntax_rejected_not_misparsed() {
-        assert!(parse("[[array.of.tables]]\n").is_err());
         assert!(parse("a.b = 1\n").is_err());
+        assert!(parse("[[unclosed.array\n").is_err());
+        // a scalar key cannot become an array of tables
+        assert!(parse("x = 1\n[[x]]\n").is_err());
+        // nor can [[x]] append to a statically-defined scalar array
+        assert!(parse("xs = [1, 2]\n[[xs]]\na = 1\n").is_err());
+        // ...and a plain [x] header must not open (and merge into) the
+        // last element of an existing [[x]] array
+        assert!(parse("[[x]]\na = 1\n[x]\nb = 2\n").is_err());
+        // nor can keys land under an array of scalars
+        assert!(parse("xs = [1, 2]\n[xs.y]\nz = 1\n").is_err());
+    }
+
+    /// `[[optim.group]]` — each header opens a fresh table appended to
+    /// the array; keys after it land in that element.
+    #[test]
+    fn array_of_tables_parses() {
+        let t = parse(
+            "[optim]\nname = \"adam\"\n\n[[optim.group]]\n\
+             pattern = \"*bias*\"\nweight_decay = 0.0\n\n\
+             [[optim.group]]\npattern = \"embed\"\nlr_scale = 0.5\n")
+            .unwrap();
+        let groups = t.get("optim").unwrap().get("group").unwrap()
+            .as_array().unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].get("pattern").unwrap().as_str(),
+                   Some("*bias*"));
+        assert_eq!(groups[0].get("weight_decay").unwrap().as_f64(),
+                   Some(0.0));
+        assert_eq!(groups[1].get("pattern").unwrap().as_str(),
+                   Some("embed"));
+        assert_eq!(groups[1].get("lr_scale").unwrap().as_f64(), Some(0.5));
+        // the sibling scalar key is untouched
+        assert_eq!(t.get("optim").unwrap().get("name").unwrap().as_str(),
+                   Some("adam"));
+    }
+
+    /// Top-level arrays of tables and nested tables under the last
+    /// array element both resolve per the TOML spec.
+    #[test]
+    fn array_of_tables_nesting() {
+        let t = parse("[[job]]\nid = 1\n[job.opts]\nfast = true\n\
+                       [[job]]\nid = 2\n").unwrap();
+        let jobs = t.get("job").unwrap().as_array().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("id").unwrap().as_i64(), Some(1));
+        assert_eq!(jobs[0].get("opts").unwrap().get("fast").unwrap()
+                       .as_bool(), Some(true));
+        assert_eq!(jobs[1].get("id").unwrap().as_i64(), Some(2));
+        assert!(jobs[1].get("opts").is_none());
     }
 }

@@ -7,7 +7,7 @@ use crate::collectives;
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
 use crate::metrics::{corpus_bleu, Ema};
-use crate::optim::{self, schedule::Schedule, Optimizer, StateDtype};
+use crate::optim::{schedule::Schedule, Optimizer, StateDtype};
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
 use crate::tensor::Tensor;
@@ -112,26 +112,19 @@ impl Trainer {
                     .load(&format!("{}_grad", cfg.model))
                     .context("loading grad artifact")?;
                 let specs = meta.param_specs();
-                let (beta1, beta2) =
-                    (cfg.optim.beta1 as f32, cfg.optim.beta2 as f32);
-                // step_threads > 1 shards the update across host threads,
-                // splitting dominant element-wise leaves at q8-block
-                // boundaries (intra-leaf sharding); results stay bitwise
-                // identical (see optim::parallel). state_dtype selects
-                // the slot storage precision (optim::qstate) and
-                // step_chunk the streaming tile (optim::kernel); all
-                // three compose because q8 blocks never straddle tile or
-                // shard boundaries.
-                let opt: Box<dyn Optimizer> = if cfg.step_threads > 1 {
-                    Box::new(optim::ParallelStep::from_registry_opts(
-                        &cfg.optim.name, &specs, beta1, beta2,
-                        cfg.step_threads, cfg.state_dtype, cfg.step_chunk,
-                        optim::parallel::SplitPolicy::IntraLeaf)?)
-                } else {
-                    optim::build_with_opts(&cfg.optim.name, &specs, beta1,
-                                           beta2, cfg.state_dtype,
-                                           cfg.step_chunk)?
-                };
+                // The composable construction path (optim::OptimSpec,
+                // DESIGN.md §11): the config's typed hyperparameters,
+                // state-storage options (state_dtype / step_chunk),
+                // update transforms (clip_value → clip_norm →
+                // weight_decay), param groups, and the sharding plan
+                // (step_threads; intra-leaf splitting) all resolve here
+                // against the model's parameter list. Results stay
+                // bitwise identical at any thread count, tile size, and
+                // dtype (optim::parallel / optim::transform).
+                let opt = cfg
+                    .optim_spec()?
+                    .build(&specs)
+                    .context("building the optimizer from [optim]")?;
                 Engine::Split { grad_art, params, opt }
             }
             ExecMode::Fused => {

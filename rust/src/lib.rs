@@ -15,10 +15,14 @@
 //!   memory accountant that reproduces the paper's Tables 1–2, metrics
 //!   (BLEU, perplexity, accuracy), checkpointing, and the PJRT runtime
 //!   that executes the AOT artifacts. Python never runs at training time.
-//!   On the split path the optimizer update streams through tiled step
-//!   kernels ([`optim::kernel`]: zero-copy at f32, O(tile) scratch at
-//!   bf16/q8) and shards across host threads ([`optim::parallel`], with
-//!   intra-leaf splitting of dominant element-wise leaves) with
+//!   On the split path the optimizer is constructed through the typed,
+//!   composable [`optim::OptimSpec`] builder (per-method
+//!   hyperparameters, chainable update transforms — gradient clipping
+//!   and decoupled weight decay via [`optim::transform`] — and
+//!   per-parameter-group overrides); the update streams through tiled
+//!   step kernels ([`optim::kernel`]: zero-copy at f32, O(tile) scratch
+//!   at bf16/q8) and shards across host threads ([`optim::parallel`],
+//!   with intra-leaf splitting of dominant element-wise leaves) with
 //!   bitwise-identical results; optimizer state can be stored quantized
 //!   ([`optim::qstate`]: f32, bf16, or block-wise 8-bit) while the
 //!   update arithmetic stays f32.

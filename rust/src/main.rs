@@ -27,6 +27,10 @@ fn commands() -> Vec<Command> {
             .option("optimizer", "optimizer override (sm3|sm3i|adagrad|adam|adafactor|sgdm)")
             .option("steps", "step-count override")
             .option("lr", "base learning-rate override")
+            .option("eps", "Adam eps override (split path; default 1e-8)")
+            .option("clip-norm", "clip gradients to this global L2 norm (split path)")
+            .option("clip-value", "clamp each gradient entry to [-c, c] (split path)")
+            .option("weight-decay", "decoupled (AdamW-style) weight decay rate (split path; [[optim.group]] in TOML for per-group overrides)")
             .option("exec", "execution path: split | fused")
             .option("workers", "data-parallel worker count")
             .option("step-threads", "host threads for the optimizer update (1 = serial; bitwise-identical results)")
@@ -97,6 +101,18 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(lr) = args.opt_parse::<f64>("lr")? {
         cfg.optim.lr = lr;
     }
+    if let Some(e) = args.opt_parse::<f64>("eps")? {
+        cfg.optim.eps = e;
+    }
+    if let Some(c) = args.opt_parse::<f64>("clip-norm")? {
+        cfg.optim.clip_norm = Some(c);
+    }
+    if let Some(c) = args.opt_parse::<f64>("clip-value")? {
+        cfg.optim.clip_value = Some(c);
+    }
+    if let Some(w) = args.opt_parse::<f64>("weight-decay")? {
+        cfg.optim.weight_decay = w;
+    }
     if let Some(e) = args.opt("exec") {
         cfg.exec = sm3::config::ExecMode::parse(e)?;
     }
@@ -141,6 +157,15 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
         cfg.grad_accum, cfg.step_threads, cfg.state_dtype.name(),
         cfg.step_chunk
     );
+    if cfg.optim.has_transforms() {
+        println!(
+            "  pipeline: clip_value={} clip_norm={} weight_decay={} \
+             groups={}",
+            cfg.optim.clip_value.map_or("-".into(), |v| v.to_string()),
+            cfg.optim.clip_norm.map_or("-".into(), |v| v.to_string()),
+            cfg.optim.weight_decay, cfg.optim.groups.len()
+        );
+    }
     let mut trainer = Trainer::new(cfg.clone())?;
     println!("  platform: {}", trainer.runtime().platform());
     println!("  params:   {:.2}M", trainer.meta.param_count as f64 / 1e6);

@@ -116,6 +116,12 @@ impl SlotLayout {
     }
 }
 
+/// Optimizer-state scalars a transform pipeline adds on top of the bare
+/// method (the `tx_step` / `tx_norm` slots) — re-exported from the one
+/// definition next to the pipeline so the live engine and the static
+/// accountant cannot drift.
+pub use crate::optim::transform::TRANSFORM_STATE_FLOATS;
+
 /// Exact optimizer-state scalar count for a parameter inventory —
 /// the static mirror of `Optimizer::state_floats`.
 pub fn opt_state_floats(opt: &str, specs: &[ParamSpec]) -> Result<usize> {
@@ -238,12 +244,42 @@ mod tests {
         ];
         for name in optim::ALL {
             for dtype in StateDtype::ALL {
-                let opt = optim::build_with_dtype(name, &specs, 0.9, 0.98,
-                                                  dtype).unwrap();
+                let opt = optim::OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype).build(&specs).unwrap();
                 assert_eq!(opt_state_floats(name, &specs).unwrap(),
                            opt.state_floats(), "{name}");
                 assert_eq!(opt_state_bytes(name, &specs, dtype).unwrap(),
                            opt.state_bytes(), "{name} @ {dtype:?}");
+            }
+        }
+    }
+
+    /// ISSUE 4 acceptance: a live transform pipeline's bytes are exactly
+    /// the accountant's static arithmetic plus the fixed two-scalar
+    /// transform overhead — the accountant stays exact for pipelines.
+    #[test]
+    fn pipeline_bytes_are_static_plus_transform_overhead() {
+        let specs = vec![
+            ParamSpec::new("emb", &[100, 16]),
+            ParamSpec::new("b", &[64]),
+        ];
+        for name in optim::ALL {
+            for dtype in StateDtype::ALL {
+                let pipe = optim::OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype)
+                    .clip_by_global_norm(1.0)
+                    .weight_decay(0.01)
+                    .build(&specs).unwrap();
+                assert_eq!(
+                    pipe.state_floats(),
+                    opt_state_floats(name, &specs).unwrap()
+                        + TRANSFORM_STATE_FLOATS,
+                    "{name}");
+                assert_eq!(
+                    pipe.state_bytes(),
+                    opt_state_bytes(name, &specs, dtype).unwrap()
+                        + 4 * TRANSFORM_STATE_FLOATS,
+                    "{name} @ {dtype:?}");
             }
         }
     }

@@ -33,6 +33,8 @@ impl SlotKind {
     }
 }
 
+/// Adafactor optimizer state over a parameter list (factored row/col
+/// second moments for matrices, full vector otherwise).
 pub struct Adafactor {
     beta1: f32,
     beta2: f32,
@@ -59,10 +61,13 @@ pub struct Adafactor {
 }
 
 impl Adafactor {
+    /// f32-state instance (see [`Adafactor::with_dtype`]).
     pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32) -> Self {
         Self::with_dtype(specs, beta1, beta2, StateDtype::F32)
     }
 
+    /// Instance with explicit state-storage precision (Adafactor is
+    /// leaf-granular — no streaming tile).
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32,
                       dtype: StateDtype) -> Self {
         let mut store = QuantizedSlots::new(dtype);

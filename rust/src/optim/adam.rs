@@ -6,6 +6,10 @@ use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
+/// Adam optimizer state over a parameter list (see [`AdamHp`] for the
+/// hyperparameters; `eps` is configurable — `[optim] eps` / `--eps`).
+///
+/// [`AdamHp`]: super::AdamHp
 pub struct Adam {
     beta1: f32,
     beta2: f32,
@@ -24,16 +28,21 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// f32-state instance (see [`Adam::with_opts`]).
     pub fn new(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32) -> Self {
         Self::with_dtype(specs, beta1, beta2, eps, StateDtype::F32)
     }
 
+    /// Instance with explicit state-storage precision.
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
                       dtype: StateDtype) -> Self {
         Self::with_opts(specs, beta1, beta2, eps, dtype,
                         kernel::DEFAULT_CHUNK)
     }
 
+    /// Fully explicit instance: hyperparameters, storage precision, and
+    /// streaming tile (panics on an invalid tile — `OptimSpec` validates
+    /// upstream).
     pub fn with_opts(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
                      dtype: StateDtype, chunk: usize) -> Self {
         kernel::check_chunk(chunk).unwrap();

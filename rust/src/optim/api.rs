@@ -1,0 +1,799 @@
+//! The typed, composable optimizer-construction API (DESIGN.md §11).
+//!
+//! Replaces the telescoping free-function constructors (`build` →
+//! `build_with_dtype` → `build_with_opts`, six positional arguments and
+//! counting) with a builder: an [`OptimSpec`] carries a typed [`Method`]
+//! (per-method hyperparameters — Adam's `eps` exists only where Adam
+//! does), shared [`StateOpts`] (slot storage precision + streaming
+//! tile), a chain of [`UpdateTransform`] stages, per-parameter
+//! [`GroupSpec`] overrides, and the execution plan (`threads`,
+//! [`SplitPolicy`]). `build` resolves everything against the parameter
+//! list and returns one `Box<dyn Optimizer>`:
+//!
+//! ```no_run
+//! use sm3::optim::{AdamHp, Method, OptimSpec, ParamSpec, GroupSpec};
+//! let specs = [ParamSpec::new("embed", &[1024, 64]),
+//!              ParamSpec::new("ln_bias", &[64])];
+//! let opt = OptimSpec::new(Method::Adam(AdamHp { eps: 1e-9, ..AdamHp::default() }))
+//!     .clip_by_global_norm(1.0)
+//!     .weight_decay(0.01)
+//!     .group(GroupSpec::new("*bias*").weight_decay(0.0))
+//!     .threads(4)
+//!     .build(&specs)
+//!     .unwrap();
+//! # drop(opt);
+//! ```
+//!
+//! Construction rules (all bitwise-stable, property-tested):
+//!
+//! * `threads == 1` and uniform LR scales ⇒ one serial registry
+//!   optimizer — the exact seed construction, same checkpoint layout.
+//! * `threads > 1` *or* any per-group LR scale ⇒ a
+//!   [`ParallelStep`] engine (per-leaf sub-optimizers; `threads = 1`
+//!   runs them inline with no spawns). Per-leaf LR scales are applied by
+//!   the engine as `lr · s_i`, leaving the update arithmetic otherwise
+//!   untouched.
+//! * Any gradient transform or weight decay ⇒ the engine is wrapped in a
+//!   [`Pipeline`] (see [`super::transform`] for the stage order and the
+//!   two-phase global-norm reduce).
+
+use super::kernel;
+use super::parallel::{ParallelStep, SplitPolicy};
+use super::qstate::StateDtype;
+use super::transform::{Pipeline, UpdateTransform};
+use super::{Adafactor, Adagrad, Adam, Optimizer, ParamSpec, SgdMomentum,
+            Sm3, Sm3Variant};
+use anyhow::{bail, ensure, Result};
+
+/// Adam hyperparameters (Kingma & Ba). `eps` was hard-pinned to `1e-8`
+/// inside the legacy constructors; it is a first-class field here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdamHp {
+    /// First-moment decay β₁.
+    pub beta1: f32,
+    /// Second-moment decay β₂.
+    pub beta2: f32,
+    /// Denominator stabilizer ε (added to `sqrt(v̂)`).
+    pub eps: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.98, eps: 1e-8 }
+    }
+}
+
+/// SM3 hyperparameters (paper §3–4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sm3Hp {
+    /// Heavy-ball momentum β₁.
+    pub beta1: f32,
+    /// SM3-I or SM3-II (the tighter variant; registry name "sm3").
+    pub variant: Sm3Variant,
+}
+
+impl Default for Sm3Hp {
+    fn default() -> Self {
+        Self { beta1: 0.9, variant: Sm3Variant::II }
+    }
+}
+
+/// Adagrad hyperparameters (paper Eq. 1–2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdagradHp {
+    /// Heavy-ball momentum β₁.
+    pub beta1: f32,
+}
+
+impl Default for AdagradHp {
+    fn default() -> Self {
+        Self { beta1: 0.9 }
+    }
+}
+
+/// Adafactor hyperparameters (Shazeer & Stern).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdafactorHp {
+    /// Momentum β₁ (the paper's experiments run all methods with it).
+    pub beta1: f32,
+    /// Factored second-moment decay β₂.
+    pub beta2: f32,
+}
+
+impl Default for AdafactorHp {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.98 }
+    }
+}
+
+/// SGD-with-momentum hyperparameters (the non-adaptive baseline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SgdmHp {
+    /// Heavy-ball momentum β₁.
+    pub beta1: f32,
+}
+
+impl Default for SgdmHp {
+    fn default() -> Self {
+        Self { beta1: 0.9 }
+    }
+}
+
+/// A typed optimizer choice: the method plus exactly its own
+/// hyperparameters — no more forcing `beta2` on SM3 or `eps` on SGD.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Adam — the 2·d-state baseline of Tables 1–2.
+    Adam(AdamHp),
+    /// SM3 (I or II per [`Sm3Hp::variant`]) — the paper's method.
+    Sm3(Sm3Hp),
+    /// Adagrad with momentum — the linear-memory comparator.
+    Adagrad(AdagradHp),
+    /// Adafactor — the sublinear-memory comparator.
+    Adafactor(AdafactorHp),
+    /// SGD with heavy-ball momentum.
+    SgdMomentum(SgdmHp),
+}
+
+impl Method {
+    /// Typed method for a registry name (`optim::ALL`), with the
+    /// repository-default hyperparameters.
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "adam" => Method::Adam(AdamHp::default()),
+            "sm3" => Method::Sm3(Sm3Hp::default()),
+            "sm3i" => Method::Sm3(Sm3Hp { variant: Sm3Variant::I,
+                                          ..Sm3Hp::default() }),
+            "adagrad" => Method::Adagrad(AdagradHp::default()),
+            "adafactor" => Method::Adafactor(AdafactorHp::default()),
+            "sgdm" => Method::SgdMomentum(SgdmHp::default()),
+            other => bail!("unknown optimizer {other:?} (known: {:?})",
+                           super::ALL),
+        })
+    }
+
+    /// The registry/artifact name this method builds ("sm3", "adam", …).
+    pub fn registry_name(&self) -> &'static str {
+        match self {
+            Method::Adam(_) => "adam",
+            Method::Sm3(hp) => match hp.variant {
+                Sm3Variant::II => "sm3",
+                Sm3Variant::I => "sm3i",
+            },
+            Method::Adagrad(_) => "adagrad",
+            Method::Adafactor(_) => "adafactor",
+            Method::SgdMomentum(_) => "sgdm",
+        }
+    }
+
+    /// Set β₁ (every method has one).
+    pub fn set_beta1(&mut self, beta1: f32) {
+        match self {
+            Method::Adam(hp) => hp.beta1 = beta1,
+            Method::Sm3(hp) => hp.beta1 = beta1,
+            Method::Adagrad(hp) => hp.beta1 = beta1,
+            Method::Adafactor(hp) => hp.beta1 = beta1,
+            Method::SgdMomentum(hp) => hp.beta1 = beta1,
+        }
+    }
+
+    /// Set β₂ where the method defines one (Adam, Adafactor); a no-op
+    /// elsewhere — the typed structs are the place to be strict, this
+    /// setter exists for the name-based config bridge.
+    pub fn set_beta2(&mut self, beta2: f32) {
+        match self {
+            Method::Adam(hp) => hp.beta2 = beta2,
+            Method::Adafactor(hp) => hp.beta2 = beta2,
+            _ => {}
+        }
+    }
+
+    /// Set Adam's ε; a no-op for every other method (same rationale as
+    /// [`Method::set_beta2`]).
+    pub fn set_eps(&mut self, eps: f32) {
+        if let Method::Adam(hp) = self {
+            hp.eps = eps;
+        }
+    }
+
+    /// Does this method have an ε hyperparameter? The config layer asks
+    /// this to reject an `[optim] eps` override that [`Method::set_eps`]
+    /// would silently drop.
+    pub fn has_eps(&self) -> bool {
+        matches!(self, Method::Adam(_))
+    }
+
+    /// β₁ of the method (for validation and introspection).
+    pub fn beta1(&self) -> f32 {
+        match self {
+            Method::Adam(hp) => hp.beta1,
+            Method::Sm3(hp) => hp.beta1,
+            Method::Adagrad(hp) => hp.beta1,
+            Method::Adafactor(hp) => hp.beta1,
+            Method::SgdMomentum(hp) => hp.beta1,
+        }
+    }
+
+    /// Validate the method's own hyperparameters.
+    pub fn validate(&self) -> Result<()> {
+        ensure!((0.0..1.0).contains(&self.beta1()),
+                "{}: beta1 must be in [0, 1), got {}",
+                self.registry_name(), self.beta1());
+        match self {
+            Method::Adam(hp) => {
+                ensure!((0.0..1.0).contains(&hp.beta2),
+                        "adam: beta2 must be in [0, 1), got {}", hp.beta2);
+                ensure!(hp.eps.is_finite() && hp.eps > 0.0,
+                        "adam: eps must be finite and > 0, got {}", hp.eps);
+            }
+            Method::Adafactor(hp) => {
+                ensure!((0.0..1.0).contains(&hp.beta2),
+                        "adafactor: beta2 must be in [0, 1), got {}",
+                        hp.beta2);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Construct one serial optimizer instance over `specs` (the leaf
+    /// factory `ParallelStep` and the legacy shims share). `opts.chunk`
+    /// must already be validated ([`kernel::check_chunk`]).
+    pub fn build_serial(&self, specs: &[ParamSpec], opts: &StateOpts)
+                        -> Box<dyn Optimizer> {
+        match self {
+            Method::Adam(hp) => {
+                Box::new(Adam::with_opts(specs, hp.beta1, hp.beta2, hp.eps,
+                                         opts.dtype, opts.chunk))
+            }
+            Method::Sm3(hp) => {
+                Box::new(Sm3::with_opts(specs, hp.variant, hp.beta1,
+                                        opts.dtype, opts.chunk))
+            }
+            Method::Adagrad(hp) => {
+                Box::new(Adagrad::with_opts(specs, hp.beta1, opts.dtype,
+                                            opts.chunk))
+            }
+            Method::Adafactor(hp) => {
+                // leaf-granular two-pass update: no streaming tile
+                Box::new(Adafactor::with_dtype(specs, hp.beta1, hp.beta2,
+                                               opts.dtype))
+            }
+            Method::SgdMomentum(hp) => {
+                Box::new(SgdMomentum::with_opts(specs, hp.beta1, opts.dtype,
+                                                opts.chunk))
+            }
+        }
+    }
+}
+
+/// Shared optimizer-state storage options, orthogonal to the method.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StateOpts {
+    /// Slot storage precision (config `state_dtype`, DESIGN.md §10).
+    pub dtype: StateDtype,
+    /// Streaming tile in elements — a positive multiple of the q8 block
+    /// (config `step_chunk`; traversal granularity only, bitwise-stable).
+    pub chunk: usize,
+}
+
+impl Default for StateOpts {
+    fn default() -> Self {
+        Self { dtype: StateDtype::F32, chunk: kernel::DEFAULT_CHUNK }
+    }
+}
+
+/// A parameter group: every leaf whose name matches `pattern` gets this
+/// group's LR scale and (optionally) weight-decay override.
+///
+/// Patterns without `*` match as **name prefixes** ("l0/" covers the
+/// whole layer); patterns with `*` are globs ("*bias*", "*/ln_*"). When
+/// several groups match one leaf, the most specific wins — most literal
+/// (non-`*`) characters; ties go to the later group. A group matching
+/// zero parameters is a build error (it is always a config typo).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupSpec {
+    /// Name-prefix or `*`-glob over [`ParamSpec::name`].
+    pub pattern: String,
+    /// Multiplies the post-schedule LR for matched leaves (default 1).
+    pub lr_scale: f32,
+    /// Overrides the pipeline's base weight-decay rate for matched
+    /// leaves (`Some(0.0)` = "no decay here", the bias/LayerNorm case).
+    pub weight_decay: Option<f32>,
+}
+
+impl GroupSpec {
+    /// A group matching `pattern` with no overrides yet.
+    pub fn new(pattern: impl Into<String>) -> Self {
+        Self { pattern: pattern.into(), lr_scale: 1.0, weight_decay: None }
+    }
+
+    /// Set the group's LR scale.
+    pub fn lr_scale(mut self, s: f32) -> Self {
+        self.lr_scale = s;
+        self
+    }
+
+    /// Set the group's weight-decay override.
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = Some(wd);
+        self
+    }
+}
+
+/// Does `pat` (prefix, or glob when it contains `*`) match `name`?
+pub(crate) fn pattern_matches(pat: &str, name: &str) -> bool {
+    if !pat.contains('*') {
+        return name.starts_with(pat);
+    }
+    let parts: Vec<&str> = pat.split('*').collect();
+    let mut pos = 0usize;
+    for (k, part) in parts.iter().enumerate() {
+        if part.is_empty() {
+            continue;
+        }
+        if k == 0 {
+            if !name.starts_with(part) {
+                return false;
+            }
+            pos = part.len();
+        } else if k == parts.len() - 1 {
+            return name.len() >= pos + part.len()
+                && name[pos..].ends_with(part);
+        } else {
+            match name[pos..].find(part) {
+                Some(i) => pos += i + part.len(),
+                None => return false,
+            }
+        }
+    }
+    true
+}
+
+/// Specificity of a pattern: its literal (non-`*`) character count.
+fn specificity(pat: &str) -> usize {
+    pat.chars().filter(|&c| c != '*').count()
+}
+
+/// The typed, composable optimizer builder. See the module docs for the
+/// grammar and [`OptimSpec::build`] for the resolution rules.
+#[derive(Clone, Debug)]
+pub struct OptimSpec {
+    method: Method,
+    state: StateOpts,
+    transforms: Vec<UpdateTransform>,
+    groups: Vec<GroupSpec>,
+    threads: usize,
+    policy: SplitPolicy,
+}
+
+impl OptimSpec {
+    /// A spec for a typed method with default state options, no
+    /// transforms, no groups, serial execution.
+    pub fn new(method: Method) -> Self {
+        Self {
+            method,
+            state: StateOpts::default(),
+            transforms: Vec::new(),
+            groups: Vec::new(),
+            threads: 1,
+            policy: SplitPolicy::IntraLeaf,
+        }
+    }
+
+    /// A spec from a registry name with default hyperparameters — the
+    /// bridge from configs and CLI flags to the typed world.
+    pub fn named(name: &str) -> Result<Self> {
+        Ok(Self::new(Method::from_name(name)?))
+    }
+
+    /// The method (for introspection).
+    pub fn method(&self) -> &Method {
+        &self.method
+    }
+
+    /// Set β₁ on the method.
+    pub fn beta1(mut self, beta1: f32) -> Self {
+        self.method.set_beta1(beta1);
+        self
+    }
+
+    /// Set β₂ where the method has one (no-op elsewhere — see
+    /// [`Method::set_beta2`]).
+    pub fn beta2(mut self, beta2: f32) -> Self {
+        self.method.set_beta2(beta2);
+        self
+    }
+
+    /// Set Adam's ε (no-op for other methods).
+    pub fn eps(mut self, eps: f32) -> Self {
+        self.method.set_eps(eps);
+        self
+    }
+
+    /// Set the state-slot storage precision.
+    pub fn state_dtype(mut self, dtype: StateDtype) -> Self {
+        self.state.dtype = dtype;
+        self
+    }
+
+    /// Set the streaming tile (positive multiple of the q8 block).
+    pub fn step_chunk(mut self, chunk: usize) -> Self {
+        self.state.chunk = chunk;
+        self
+    }
+
+    /// Shard the update across host threads (1 = serial; results are
+    /// bitwise identical at any count — `optim::parallel`).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// How `ParallelStep` may divide leaves across workers.
+    pub fn split_policy(mut self, policy: SplitPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Append a transform stage (stages run in chained order).
+    pub fn transform(mut self, t: UpdateTransform) -> Self {
+        self.transforms.push(t);
+        self
+    }
+
+    /// Append a `clip_by_global_norm(c)` stage.
+    pub fn clip_by_global_norm(self, c: f32) -> Self {
+        self.transform(UpdateTransform::ClipByGlobalNorm(c))
+    }
+
+    /// Append a `clip_by_value(c)` stage.
+    pub fn clip_by_value(self, c: f32) -> Self {
+        self.transform(UpdateTransform::ClipByValue(c))
+    }
+
+    /// Enable decoupled (AdamW-style) weight decay at base rate `wd`.
+    pub fn weight_decay(self, wd: f32) -> Self {
+        self.transform(UpdateTransform::DecoupledWeightDecay(wd))
+    }
+
+    /// Add a parameter group (see [`GroupSpec`]).
+    pub fn group(mut self, g: GroupSpec) -> Self {
+        self.groups.push(g);
+        self
+    }
+
+    /// Validate everything that can be checked without a parameter list
+    /// (group matching needs the specs and happens in [`OptimSpec::build`]).
+    pub fn validate(&self) -> Result<()> {
+        self.method.validate()?;
+        kernel::check_chunk(self.state.chunk)?;
+        ensure!(self.threads >= 1, "threads must be >= 1 (1 = serial)");
+        let mut decays = 0usize;
+        for t in &self.transforms {
+            match *t {
+                UpdateTransform::ClipByValue(c) => {
+                    ensure!(c.is_finite() && c > 0.0,
+                            "clip_by_value threshold must be finite and \
+                             > 0, got {c}");
+                }
+                UpdateTransform::ClipByGlobalNorm(c) => {
+                    ensure!(c.is_finite() && c > 0.0,
+                            "clip_by_global_norm threshold must be finite \
+                             and > 0, got {c}");
+                }
+                UpdateTransform::DecoupledWeightDecay(w) => {
+                    ensure!(w.is_finite() && w >= 0.0,
+                            "weight_decay must be finite and >= 0, got {w}");
+                    decays += 1;
+                }
+                UpdateTransform::Identity => {}
+            }
+        }
+        ensure!(decays <= 1,
+                "at most one weight_decay stage (got {decays}); use param \
+                 groups for per-leaf rates");
+        for g in &self.groups {
+            ensure!(!g.pattern.is_empty(), "group pattern must be non-empty");
+            ensure!(g.lr_scale.is_finite() && g.lr_scale > 0.0,
+                    "group {:?}: lr_scale must be finite and > 0, got {}",
+                    g.pattern, g.lr_scale);
+            if let Some(w) = g.weight_decay {
+                ensure!(w.is_finite() && w >= 0.0,
+                        "group {:?}: weight_decay must be finite and >= 0, \
+                         got {w}", g.pattern);
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the groups against a parameter list into per-leaf
+    /// `(weight_decay, lr_scale)` vectors. Most-specific match wins;
+    /// a group matching zero leaves is an error.
+    pub fn resolve_groups(&self, specs: &[ParamSpec])
+                          -> Result<(Vec<f32>, Vec<f32>)> {
+        let base_wd = self
+            .transforms
+            .iter()
+            .find_map(|t| match t {
+                UpdateTransform::DecoupledWeightDecay(w) => Some(*w),
+                _ => None,
+            })
+            .unwrap_or(0.0);
+        let mut wd = vec![base_wd; specs.len()];
+        let mut scale = vec![1.0f32; specs.len()];
+        if self.groups.is_empty() {
+            return Ok((wd, scale));
+        }
+        let mut matched = vec![0usize; self.groups.len()];
+        for (i, s) in specs.iter().enumerate() {
+            let mut best: Option<(usize, usize)> = None; // (specificity, gi)
+            for (gi, g) in self.groups.iter().enumerate() {
+                if pattern_matches(&g.pattern, &s.name) {
+                    matched[gi] += 1;
+                    let spec_len = specificity(&g.pattern);
+                    // >= : the later of two equally specific groups wins
+                    if best.map_or(true, |(b, _)| spec_len >= b) {
+                        best = Some((spec_len, gi));
+                    }
+                }
+            }
+            if let Some((_, gi)) = best {
+                let g = &self.groups[gi];
+                scale[i] = g.lr_scale;
+                if let Some(w) = g.weight_decay {
+                    wd[i] = w;
+                }
+            }
+        }
+        for (g, &m) in self.groups.iter().zip(&matched) {
+            ensure!(m > 0,
+                    "param group {:?} matches zero parameters (leaves: \
+                     {:?})", g.pattern,
+                    specs.iter().map(|s| s.name.as_str())
+                        .collect::<Vec<_>>());
+        }
+        Ok((wd, scale))
+    }
+
+    /// Build the optimizer over `specs`. See the module docs for which
+    /// engine (serial / `ParallelStep`) and wrapper ([`Pipeline`]) the
+    /// resolved spec produces.
+    pub fn build(&self, specs: &[ParamSpec]) -> Result<Box<dyn Optimizer>> {
+        self.validate()?;
+        let (wd, scale) = self.resolve_groups(specs)?;
+        let uniform_scale = scale.iter().all(|&s| s == 1.0);
+        let inner: Box<dyn Optimizer> = if self.threads > 1 || !uniform_scale
+        {
+            let name = self.method.registry_name();
+            let (method, state) = (self.method, self.state);
+            let mut engine = ParallelStep::with_leaf_factory(
+                specs, self.threads, self.policy,
+                |s| kernel::elementwise(name, s.shape.len()),
+                |s| Ok(method.build_serial(std::slice::from_ref(s), &state)),
+            )?;
+            if !uniform_scale {
+                engine.set_lr_scales(&scale)?;
+            }
+            Box::new(engine)
+        } else {
+            self.method.build_serial(specs, &self.state)
+        };
+        let stages: Vec<UpdateTransform> = self
+            .transforms
+            .iter()
+            .filter(|t| !matches!(t, UpdateTransform::Identity))
+            .cloned()
+            .collect();
+        let needs_pipeline = stages.iter().any(UpdateTransform::is_grad_stage)
+            || wd.iter().any(|&w| w != 0.0);
+        Ok(if needs_pipeline {
+            Box::new(Pipeline::with_overrides(inner, specs, stages, wd,
+                                              scale, self.threads)?)
+        } else {
+            inner
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![ParamSpec::new("embed", &[30, 8]),
+             ParamSpec::new("l0/w", &[8, 8]),
+             ParamSpec::new("l0/bias", &[8]),
+             ParamSpec::new("l0/ln_scale", &[8]),
+             ParamSpec::new("l1/w", &[8, 4]),
+             ParamSpec::new("l1/bias", &[4])]
+    }
+
+    #[test]
+    fn pattern_matching_semantics() {
+        // no '*': name-prefix
+        assert!(pattern_matches("l0/", "l0/w"));
+        assert!(pattern_matches("l0/w", "l0/w"));
+        assert!(!pattern_matches("l0/", "l1/w"));
+        // globs
+        assert!(pattern_matches("*bias*", "l0/bias"));
+        assert!(pattern_matches("*/ln_*", "l0/ln_scale"));
+        assert!(!pattern_matches("*/ln_*", "ln_scale"));
+        assert!(pattern_matches("*", "anything"));
+        assert!(pattern_matches("l*/w", "l1/w"));
+        assert!(!pattern_matches("l*/w", "l1/bias"));
+        // anchored tail must not reuse head characters
+        assert!(!pattern_matches("ab*ba", "aba"));
+        assert!(pattern_matches("ab*ba", "abba"));
+    }
+
+    /// Satellite: group resolution picks the most-specific match, ties
+    /// go to the later group, and the classic "no decay on biases and
+    /// LayerNorm" setup resolves as intended.
+    #[test]
+    fn group_resolution_most_specific_wins() {
+        let spec = OptimSpec::named("adam").unwrap()
+            .weight_decay(0.01)
+            .group(GroupSpec::new("*bias*").weight_decay(0.0))
+            .group(GroupSpec::new("*/ln_*").weight_decay(0.0))
+            .group(GroupSpec::new("l0/").lr_scale(0.5))
+            .group(GroupSpec::new("l0/bias").lr_scale(0.25));
+        let specs = specs();
+        let (wd, scale) = spec.resolve_groups(&specs).unwrap();
+        // embed: no group → base decay, unit scale
+        assert_eq!((wd[0], scale[0]), (0.01, 1.0));
+        // l0/w: "l0/" (3 literals) beats nothing else → scaled, decayed
+        assert_eq!((wd[1], scale[1]), (0.01, 0.5));
+        // l0/bias: "l0/bias" (7) beats "*bias*" (4) and "l0/" (3) —
+        // most-specific wins, so the decay-off override does NOT apply
+        assert_eq!((wd[2], scale[2]), (0.01, 0.25));
+        // l0/ln_scale: "*/ln_*" (4) beats "l0/" (3)
+        assert_eq!((wd[3], scale[3]), (0.0, 1.0));
+        // l1/w: nothing but base
+        assert_eq!((wd[4], scale[4]), (0.01, 1.0));
+        // l1/bias: "*bias*"
+        assert_eq!((wd[5], scale[5]), (0.0, 1.0));
+    }
+
+    /// Satellite: a group that matches nothing is a build-time error
+    /// naming the pattern.
+    #[test]
+    fn group_matching_zero_params_errors() {
+        let spec = OptimSpec::named("adam").unwrap()
+            .group(GroupSpec::new("decoder/*").weight_decay(0.0));
+        let err = spec.build(&specs()).unwrap_err();
+        assert!(err.to_string().contains("decoder/*"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let specs = specs();
+        assert!(OptimSpec::named("nope").is_err());
+        assert!(OptimSpec::named("adam").unwrap().eps(0.0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().eps(-1e-8)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().beta1(1.0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().step_chunk(100)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().threads(0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().clip_by_global_norm(0.0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().clip_by_value(-1.0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().weight_decay(-0.1)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap()
+            .weight_decay(0.1).weight_decay(0.2).build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap()
+            .group(GroupSpec::new("embed").lr_scale(0.0))
+            .build(&specs).is_err());
+        // identity-only spec builds the bare optimizer
+        assert!(OptimSpec::named("adam").unwrap()
+            .transform(UpdateTransform::Identity).build(&specs).is_ok());
+    }
+
+    #[test]
+    fn method_names_roundtrip() {
+        for name in crate::optim::ALL {
+            let m = Method::from_name(name).unwrap();
+            assert_eq!(m.registry_name(), *name);
+        }
+        assert!(Method::from_name("adamw").is_err());
+    }
+
+    /// The typed path is bitwise identical to the legacy shim for every
+    /// registry method (the deprecation contract: the shim is a thin
+    /// wrapper, not a second implementation).
+    #[test]
+    fn typed_build_matches_legacy_shim_bitwise() {
+        let specs = specs();
+        for name in crate::optim::ALL {
+            #[allow(deprecated)]
+            let mut legacy =
+                crate::optim::build(name, &specs, 0.9, 0.98).unwrap();
+            let mut typed =
+                OptimSpec::named(name).unwrap().build(&specs).unwrap();
+            let mut rng = Rng::new(11);
+            let init: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let mut pa = init.clone();
+            let mut pb = init;
+            for _ in 0..3 {
+                let grads: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                    .collect();
+                legacy.step(&mut pa, &grads, 0.1);
+                typed.step(&mut pb, &grads, 0.1);
+            }
+            for (a, b) in pa.iter().zip(&pb) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+                }
+            }
+        }
+    }
+
+    /// Per-group LR scaling: a scaled leaf follows exactly the
+    /// trajectory of a bare single-leaf optimizer stepped at `lr·s`.
+    #[test]
+    fn group_lr_scale_scales_the_leaf_lr() {
+        let specs = vec![ParamSpec::new("w", &[6, 4]),
+                         ParamSpec::new("b", &[20])];
+        let mut scaled = OptimSpec::named("adam").unwrap()
+            .group(GroupSpec::new("b").lr_scale(0.5))
+            .build(&specs).unwrap();
+        // reference: each leaf as its own bare optimizer at its own lr
+        let mut ref_w = OptimSpec::named("adam").unwrap()
+            .build(&specs[..1]).unwrap();
+        let mut ref_b = OptimSpec::named("adam").unwrap()
+            .build(&specs[1..]).unwrap();
+        let mut rng = Rng::new(3);
+        let mut pa: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let mut pw = vec![pa[0].clone()];
+        let mut pb = vec![pa[1].clone()];
+        for _ in 0..3 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            scaled.step(&mut pa, &grads, 0.1);
+            ref_w.step(&mut pw, &grads[..1], 0.1);
+            ref_b.step(&mut pb, &grads[1..], 0.1 * 0.5);
+        }
+        for (x, y) in pa[0].data().iter().zip(pw[0].data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "unscaled leaf drifted");
+        }
+        for (x, y) in pa[1].data().iter().zip(pb[0].data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "scaled leaf != lr*0.5");
+        }
+    }
+
+    /// Builder knobs reach the engine: dtype, chunk, threads, policy.
+    #[test]
+    fn builder_knobs_flow_through() {
+        let specs = specs();
+        let opt = OptimSpec::named("adam").unwrap()
+            .state_dtype(StateDtype::Q8)
+            .step_chunk(128)
+            .threads(3)
+            .build(&specs).unwrap();
+        assert_eq!(opt.state_dtype(), StateDtype::Q8);
+        assert_eq!(opt.name(), "adam");
+        #[allow(deprecated)]
+        let serial = crate::optim::build_with_dtype(
+            "adam", &specs, 0.9, 0.98, StateDtype::Q8).unwrap();
+        assert_eq!(opt.state_floats(), serial.state_floats());
+        assert_eq!(opt.state_bytes(), serial.state_bytes());
+    }
+}

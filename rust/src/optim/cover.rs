@@ -16,6 +16,7 @@ use crate::tensor::Tensor;
 /// A cover of `[d]`: a list of non-empty index sets whose union is `[d]`.
 #[derive(Clone, Debug)]
 pub struct Cover {
+    /// the cover sets S_r (non-empty, union = [d])
     pub sets: Vec<Vec<usize>>,
     /// inverse index: for each i, which sets contain it
     covering: Vec<Vec<usize>>,
@@ -23,6 +24,8 @@ pub struct Cover {
 }
 
 impl Cover {
+    /// Build a cover of `[d]` from its sets, validating non-emptiness
+    /// and coverage.
     pub fn new(d: usize, sets: Vec<Vec<usize>>) -> Self {
         assert!(!sets.is_empty(), "cover must be non-empty");
         let mut covering = vec![Vec::new(); d];
@@ -62,10 +65,12 @@ impl Cover {
         Self::new(m * n, sets)
     }
 
+    /// Number of cover sets k (the paper's memory quantity).
     pub fn k(&self) -> usize {
         self.sets.len()
     }
 
+    /// Dimension d of the covered index space.
     pub fn d(&self) -> usize {
         self.d
     }
@@ -78,12 +83,14 @@ impl Cover {
 
 /// Abstract SM3-I (Algorithm SM3-I, verbatim).
 pub struct CoverSm3I {
+    /// the cover the accumulators live on
     pub cover: Cover,
     /// μ_t(r), one per cover set — the O(k) memory of the paper
     pub mu: Vec<f32>,
 }
 
 impl CoverSm3I {
+    /// Fresh optimizer state (μ = 0) over `cover`.
     pub fn new(cover: Cover) -> Self {
         let k = cover.k();
         Self { cover, mu: vec![0.0; k] }
@@ -114,12 +121,14 @@ impl CoverSm3I {
 
 /// Abstract SM3-II (Algorithm SM3-II, verbatim).
 pub struct CoverSm3II {
+    /// the cover the accumulators live on
     pub cover: Cover,
     /// μ'_t(r)
     pub mu: Vec<f32>,
 }
 
 impl CoverSm3II {
+    /// Fresh optimizer state (μ' = 0) over `cover`.
     pub fn new(cover: Cover) -> Self {
         let k = cover.k();
         Self { cover, mu: vec![0.0; k] }

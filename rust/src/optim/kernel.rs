@@ -65,7 +65,9 @@ pub fn elementwise(name: &str, rank: usize) -> bool {
 /// never touch it.
 #[derive(Default)]
 pub struct ChunkScratch {
+    /// decode scratch for the first streamed slot
     pub a: Vec<f32>,
+    /// decode scratch for the second streamed slot
     pub b: Vec<f32>,
 }
 

@@ -8,10 +8,20 @@
 //!
 //! The fused path (optimizer inside the HLO artifact) bypasses this module
 //! entirely; cross-path equality is asserted in `rust/tests/`.
+//!
+//! Construction goes through the typed, composable [`OptimSpec`] builder
+//! ([`api`], DESIGN.md §11): per-method hyperparameters, state-storage
+//! options, chainable update transforms ([`transform`]: clipping,
+//! decoupled weight decay), and per-parameter-group overrides. The
+//! free-function constructors ([`build`] and friends) remain as thin
+//! deprecated shims for one release.
+
+#![warn(missing_docs)]
 
 mod adafactor;
 mod adagrad;
 mod adam;
+pub mod api;
 pub mod cover;
 pub mod kernel;
 pub mod parallel;
@@ -19,14 +29,20 @@ pub mod qstate;
 pub mod schedule;
 mod sgdm;
 mod sm3;
+pub mod transform;
 
 pub use adafactor::Adafactor;
 pub use adagrad::Adagrad;
 pub use adam::Adam;
+pub use api::{AdafactorHp, AdagradHp, AdamHp, GroupSpec, Method, OptimSpec,
+              SgdmHp, Sm3Hp, StateOpts};
 pub use parallel::{ParallelStep, SplitPolicy};
 pub use qstate::{QuantizedSlots, StateDtype};
 pub use sgdm::SgdMomentum;
 pub use sm3::{Sm3, Sm3Variant};
+pub use transform::{clip_by_global_norm, clip_by_value,
+                    decoupled_weight_decay, identity, Pipeline,
+                    UpdateTransform};
 
 use crate::tensor::Tensor;
 
@@ -49,15 +65,19 @@ pub(crate) fn safe_rsqrt(nu: f32) -> f32 {
 /// Shape-and-name description of one parameter tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamSpec {
+    /// Leaf name ("embed", "l0/wq", …) — what param-group patterns match.
     pub name: String,
+    /// Tensor shape; rank decides the SM3 cover and split eligibility.
     pub shape: Vec<usize>,
 }
 
 impl ParamSpec {
+    /// Build a spec from a name and shape.
     pub fn new(name: impl Into<String>, shape: &[usize]) -> Self {
         Self { name: name.into(), shape: shape.to_vec() }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -110,48 +130,52 @@ pub trait Optimizer: Send {
 
 /// Construct an optimizer by registry name with f32 state storage.
 ///
-/// `beta1` is the momentum coefficient used by every method; Adam and
-/// Adafactor also take `beta2`.
+/// Deprecated shim over [`OptimSpec`]: `beta2` applies only where the
+/// method has one (Adam, Adafactor), Adam's `eps` stays at the historic
+/// `1e-8`. Use the builder for anything beyond that.
+#[deprecated(note = "use optim::OptimSpec (DESIGN.md §11); this shim \
+                     remains for one release")]
 pub fn build(name: &str, specs: &[ParamSpec], beta1: f32, beta2: f32)
              -> anyhow::Result<Box<dyn Optimizer>> {
-    build_with_dtype(name, specs, beta1, beta2, StateDtype::F32)
+    shim_build(name, specs, beta1, beta2, StateDtype::F32,
+               kernel::DEFAULT_CHUNK)
 }
 
 /// Construct an optimizer by registry name with the given state-storage
 /// precision (config key `state_dtype`, DESIGN.md §10) and the default
-/// streaming tile.
+/// streaming tile. Deprecated shim over [`OptimSpec`].
+#[deprecated(note = "use optim::OptimSpec (DESIGN.md §11); this shim \
+                     remains for one release")]
 pub fn build_with_dtype(name: &str, specs: &[ParamSpec], beta1: f32,
                         beta2: f32, dtype: StateDtype)
                         -> anyhow::Result<Box<dyn Optimizer>> {
-    build_with_opts(name, specs, beta1, beta2, dtype, kernel::DEFAULT_CHUNK)
+    shim_build(name, specs, beta1, beta2, dtype, kernel::DEFAULT_CHUNK)
 }
 
 /// Construct an optimizer by registry name with explicit state-storage
 /// precision and streaming tile size (config key `step_chunk`; must be a
-/// positive multiple of the q8 block). The tile size only affects
-/// traversal granularity — trajectories are bitwise identical at any
-/// value (property-tested in `crate::proptest`). Adafactor keeps its
-/// leaf-granular two-pass update (reduction-coupled) and ignores the
-/// tile.
+/// positive multiple of the q8 block). Deprecated shim over
+/// [`OptimSpec`] — the end of the telescoping-constructor line this
+/// builder replaces.
+#[deprecated(note = "use optim::OptimSpec (DESIGN.md §11); this shim \
+                     remains for one release")]
 pub fn build_with_opts(name: &str, specs: &[ParamSpec], beta1: f32,
                        beta2: f32, dtype: StateDtype, chunk: usize)
                        -> anyhow::Result<Box<dyn Optimizer>> {
-    kernel::check_chunk(chunk)?;
-    Ok(match name {
-        "sm3" => Box::new(Sm3::with_opts(specs, Sm3Variant::II, beta1, dtype,
-                                         chunk)),
-        "sm3i" => Box::new(Sm3::with_opts(specs, Sm3Variant::I, beta1, dtype,
-                                          chunk)),
-        "adagrad" => Box::new(Adagrad::with_opts(specs, beta1, dtype, chunk)),
-        "adam" => {
-            Box::new(Adam::with_opts(specs, beta1, beta2, 1e-8, dtype, chunk))
-        }
-        "adafactor" => {
-            Box::new(Adafactor::with_dtype(specs, beta1, beta2, dtype))
-        }
-        "sgdm" => Box::new(SgdMomentum::with_opts(specs, beta1, dtype, chunk)),
-        other => anyhow::bail!("unknown optimizer {other:?}"),
-    })
+    shim_build(name, specs, beta1, beta2, dtype, chunk)
+}
+
+/// The one implementation behind the deprecated shims: exactly
+/// `OptimSpec` with the legacy positional arguments applied.
+fn shim_build(name: &str, specs: &[ParamSpec], beta1: f32, beta2: f32,
+              dtype: StateDtype, chunk: usize)
+              -> anyhow::Result<Box<dyn Optimizer>> {
+    OptimSpec::named(name)?
+        .beta1(beta1)
+        .beta2(beta2)
+        .state_dtype(dtype)
+        .step_chunk(chunk)
+        .build(specs)
 }
 
 /// All registry names, in the order the paper's tables list them.
@@ -171,7 +195,8 @@ mod tests {
     fn all_optimizers_descend_on_quadratic() {
         for name in ALL {
             let specs = quad_specs();
-            let mut opt = build(name, &specs, 0.9, 0.98).unwrap();
+            let mut opt =
+                OptimSpec::named(name).unwrap().build(&specs).unwrap();
             let mut rng = Rng::new(0);
             let target_w = Tensor::randn(&[8, 6], 1.0, &mut rng);
             let target_b = Tensor::randn(&[6], 1.0, &mut rng);
@@ -211,8 +236,8 @@ mod tests {
         for dtype in [StateDtype::Bf16, StateDtype::Q8] {
             for name in ALL {
                 let specs = quad_specs();
-                let mut opt =
-                    build_with_dtype(name, &specs, 0.9, 0.98, dtype).unwrap();
+                let mut opt = OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype).build(&specs).unwrap();
                 assert_eq!(opt.state_dtype(), dtype);
                 let mut rng = Rng::new(0);
                 let target_w = Tensor::randn(&[8, 6], 1.0, &mut rng);
@@ -248,15 +273,11 @@ mod tests {
     fn state_bytes_shrink_with_dtype() {
         let specs = quad_specs();
         for name in ALL {
-            let f32b = build_with_dtype(name, &specs, 0.9, 0.98,
-                                        StateDtype::F32).unwrap()
-                .state_bytes();
-            let bf16b = build_with_dtype(name, &specs, 0.9, 0.98,
-                                         StateDtype::Bf16).unwrap()
-                .state_bytes();
-            let q8b = build_with_dtype(name, &specs, 0.9, 0.98,
-                                       StateDtype::Q8).unwrap()
-                .state_bytes();
+            let by = |d: StateDtype| OptimSpec::named(name).unwrap()
+                .state_dtype(d).build(&specs).unwrap().state_bytes();
+            let (f32b, bf16b, q8b) = (by(StateDtype::F32),
+                                      by(StateDtype::Bf16),
+                                      by(StateDtype::Q8));
             assert_eq!(bf16b * 2, f32b, "{name}");
             assert!(q8b < bf16b, "{name}: q8 {q8b} vs bf16 {bf16b}");
         }
@@ -269,7 +290,8 @@ mod tests {
         let specs = vec![ParamSpec::new("emb", &[1000, 64]),
                          ParamSpec::new("b", &[64])];
         let d: usize = specs.iter().map(|s| s.numel()).sum();
-        let f = |n: &str| build(n, &specs, 0.9, 0.98).unwrap().state_floats();
+        let f = |n: &str| OptimSpec::named(n).unwrap()
+            .build(&specs).unwrap().state_floats();
         assert_eq!(f("adam"), 2 * d);
         assert_eq!(f("adagrad"), 2 * d);
         assert_eq!(f("sgdm"), d);
@@ -278,19 +300,34 @@ mod tests {
         assert!(f("sm3") < f("adam"));
     }
 
+    /// The deprecated shims stay behaviorally intact for one release:
+    /// same errors, same defaults.
     #[test]
-    fn unknown_name_errors() {
+    #[allow(deprecated)]
+    fn deprecated_shims_still_validate() {
         assert!(build("nope", &quad_specs(), 0.9, 0.98).is_err());
-    }
-
-    #[test]
-    fn bad_chunk_errors() {
         assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
                                 StateDtype::F32, 0).is_err());
         assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
                                 StateDtype::F32, 100).is_err());
         assert!(build_with_opts("adam", &quad_specs(), 0.9, 0.98,
                                 StateDtype::F32, 64).is_ok());
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(OptimSpec::named("nope").is_err());
+    }
+
+    #[test]
+    fn bad_chunk_errors() {
+        let specs = quad_specs();
+        assert!(OptimSpec::named("adam").unwrap().step_chunk(0)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().step_chunk(100)
+            .build(&specs).is_err());
+        assert!(OptimSpec::named("adam").unwrap().step_chunk(64)
+            .build(&specs).is_ok());
     }
 
     /// ISSUE 3 satellite: after a few warmup steps every optimizer's
@@ -318,8 +355,9 @@ mod tests {
             .collect();
         for dtype in StateDtype::ALL {
             for name in ALL {
-                let mut opt = build_with_opts(name, &specs, 0.9, 0.98,
-                                              dtype, 64).unwrap();
+                let mut opt = OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype).step_chunk(64)
+                    .build(&specs).unwrap();
                 let mut params = params0.clone();
                 for _ in 0..3 {
                     opt.step(&mut params, &grads, 0.1); // warm capacities
@@ -343,7 +381,8 @@ mod tests {
     #[should_panic(expected = "NaN second-moment accumulator")]
     fn nan_gradients_are_surfaced_not_masked() {
         let specs = vec![ParamSpec::new("w", &[4])];
-        let mut opt = build("sm3", &specs, 0.9, 0.98).unwrap();
+        let mut opt =
+            OptimSpec::named("sm3").unwrap().build(&specs).unwrap();
         let mut params = vec![Tensor::zeros(&[4])];
         let g = vec![Tensor::full(&[4], f32::NAN)];
         opt.step(&mut params, &g, 0.1);

@@ -39,11 +39,24 @@
 //! appears once per leaf instead of once); `load_state` pre-counts and
 //! fails fast on such a mismatch.
 
+use super::api::{Method, StateOpts};
 use super::kernel;
 use super::qstate::codec::Q8_BLOCK;
 use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
+
+/// `lr · s` skipping the multiply when `s == 1` (the uniform case keeps
+/// the exact historical arithmetic; `x · 1.0` is exact anyway, but the
+/// skip makes the invariance obvious).
+#[inline(always)]
+fn eff_lr(lr: f32, s: f32) -> f32 {
+    if s == 1.0 {
+        lr
+    } else {
+        lr * s
+    }
+}
 
 /// How `ParallelStep` may divide the update across workers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -129,6 +142,9 @@ pub struct ParallelStep {
     /// number of non-empty worker bins
     workers: usize,
     threads: usize,
+    /// per-leaf LR multipliers (`OptimSpec` param groups); empty =
+    /// uniform 1.0 — the historical arithmetic, skip the multiply
+    lr_scales: Vec<f32>,
 }
 
 impl ParallelStep {
@@ -145,7 +161,7 @@ impl ParallelStep {
                          build_leaf)
     }
 
-    /// Build from the optimizer registry (the `optim::build` names) with
+    /// Build from the optimizer registry (the `optim::ALL` names) with
     /// f32 state storage.
     pub fn from_registry(name: &str, specs: &[ParamSpec], beta1: f32,
                          beta2: f32, threads: usize) -> anyhow::Result<Self> {
@@ -169,11 +185,43 @@ impl ParallelStep {
                               beta2: f32, threads: usize, dtype: StateDtype,
                               chunk: usize, policy: SplitPolicy)
                               -> anyhow::Result<Self> {
-        Self::build_impl(
+        kernel::check_chunk(chunk)?;
+        let mut method = Method::from_name(name)?;
+        method.set_beta1(beta1);
+        method.set_beta2(beta2);
+        let opts = StateOpts { dtype, chunk };
+        Self::with_leaf_factory(
             specs, threads, policy,
             |s| kernel::elementwise(name, s.shape.len()),
-            |s| super::build_with_opts(name, std::slice::from_ref(s), beta1,
-                                       beta2, dtype, chunk))
+            |s| Ok(method.build_serial(std::slice::from_ref(s), &opts)))
+    }
+
+    /// Fully generic constructor: a deterministic per-leaf factory plus
+    /// a predicate saying which leaves may be split at q8-block-aligned
+    /// bounds (they must be element-wise — see [`kernel::elementwise`]).
+    /// This is the entry point `OptimSpec::build` drives.
+    pub fn with_leaf_factory<F>(specs: &[ParamSpec], threads: usize,
+                                policy: SplitPolicy,
+                                splittable: impl Fn(&ParamSpec) -> bool,
+                                build_leaf: F) -> anyhow::Result<Self>
+    where
+        F: FnMut(&ParamSpec) -> anyhow::Result<Box<dyn Optimizer>>,
+    {
+        Self::build_impl(specs, threads, policy, splittable, build_leaf)
+    }
+
+    /// Attach per-leaf LR multipliers (`OptimSpec` param groups): leaf
+    /// `i` steps at `lr · scales[i]`. Splitting and sharding are
+    /// unaffected — every range of a split leaf inherits its leaf's
+    /// scale, so results stay bitwise identical at any thread count.
+    pub fn set_lr_scales(&mut self, scales: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(scales.len() == self.leaves.len(),
+                        "lr_scales has {} entries, engine has {} leaves",
+                        scales.len(), self.leaves.len());
+        anyhow::ensure!(scales.iter().all(|s| s.is_finite() && *s > 0.0),
+                        "lr_scales must be finite and > 0");
+        self.lr_scales = scales.to_vec();
+        Ok(())
     }
 
     fn build_impl<F>(specs: &[ParamSpec], threads: usize, policy: SplitPolicy,
@@ -220,7 +268,8 @@ impl ParallelStep {
                 task_worker[t] = wid;
             }
         }
-        Ok(Self { leaves, task_worker, workers: bins.len(), threads })
+        Ok(Self { leaves, task_worker, workers: bins.len(), threads,
+                  lr_scales: Vec::new() })
     }
 
     /// Configured worker count (the live worker count may be lower when
@@ -243,26 +292,32 @@ impl ParallelStep {
 }
 
 /// One unit of sharded work: a whole leaf, or a flat range of one.
+/// `lr_mul` is the owning leaf's LR multiplier (1.0 = uniform).
 enum Item<'a> {
     Whole {
         w: &'a mut Tensor,
         g: &'a Tensor,
         opt: &'a mut Box<dyn Optimizer>,
+        lr_mul: f32,
     },
     Range {
         w: &'a mut [f32],
         g: &'a [f32],
         opt: &'a mut Box<dyn Optimizer>,
+        lr_mul: f32,
     },
 }
 
 impl Item<'_> {
     fn run(self, lr: f32) {
         match self {
-            Item::Whole { w, g, opt } => {
-                opt.step(std::slice::from_mut(w), std::slice::from_ref(g), lr)
+            Item::Whole { w, g, opt, lr_mul } => {
+                opt.step(std::slice::from_mut(w), std::slice::from_ref(g),
+                         eff_lr(lr, lr_mul))
             }
-            Item::Range { w, g, opt } => opt.step_flat(w, g, lr),
+            Item::Range { w, g, opt, lr_mul } => {
+                opt.step_flat(w, g, eff_lr(lr, lr_mul))
+            }
         }
     }
 }
@@ -282,18 +337,21 @@ impl Optimizer for ParallelStep {
         if self.workers <= 1 {
             // single worker: run every task inline in leaf/part order —
             // no thread spawns and no per-step bucket allocations
+            let scales = &self.lr_scales;
             for (i, leaf) in self.leaves.iter_mut().enumerate() {
+                let lr_i =
+                    eff_lr(lr, scales.get(i).copied().unwrap_or(1.0));
                 match leaf {
                     Leaf::Whole(opt) => {
                         opt.step(&mut params[i..i + 1],
-                                 std::slice::from_ref(&grads[i]), lr);
+                                 std::slice::from_ref(&grads[i]), lr_i);
                     }
                     Leaf::Split { parts, .. } => {
                         let wd = params[i].data_mut();
                         let gd = grads[i].data();
                         for p in parts.iter_mut() {
                             p.opt.step_flat(&mut wd[p.lo..p.hi],
-                                            &gd[p.lo..p.hi], lr);
+                                            &gd[p.lo..p.hi], lr_i);
                         }
                     }
                 }
@@ -307,13 +365,15 @@ impl Optimizer for ParallelStep {
             (0..self.workers).map(|_| Vec::new()).collect();
         let mut tid = 0usize;
         let mut param_it = params.iter_mut();
+        let scales = &self.lr_scales;
         for (i, leaf) in self.leaves.iter_mut().enumerate() {
             let w = param_it.next().expect("params shorter than leaves");
             let g = &grads[i];
+            let lr_mul = scales.get(i).copied().unwrap_or(1.0);
             match leaf {
                 Leaf::Whole(opt) => {
                     buckets[self.task_worker[tid]]
-                        .push(Item::Whole { w, g, opt });
+                        .push(Item::Whole { w, g, opt, lr_mul });
                     tid += 1;
                 }
                 Leaf::Split { spec, parts } => {
@@ -334,6 +394,7 @@ impl Optimizer for ParallelStep {
                             w: wa,
                             g: ga,
                             opt: &mut p.opt,
+                            lr_mul,
                         });
                         tid += 1;
                     }
@@ -573,7 +634,8 @@ mod tests {
     #[test]
     fn bitwise_identical_to_serial_sm3() {
         let specs = mixed_specs();
-        let mut serial = optim::build("sm3", &specs, 0.9, 0.98).unwrap();
+        let mut serial =
+            optim::OptimSpec::named("sm3").unwrap().build(&specs).unwrap();
         let mut par =
             ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 3).unwrap();
         let mut rng = Rng::new(7);
@@ -615,7 +677,8 @@ mod tests {
                        "{name}: embedding parts = {}", parts[0]);
             assert!(parts[1..].iter().all(|&p| p == 1),
                     "{name}: small leaves must stay whole");
-            let mut serial = optim::build(name, &specs, 0.9, 0.98).unwrap();
+            let mut serial = optim::OptimSpec::named(name).unwrap()
+                .build(&specs).unwrap();
             let mut rng = Rng::new(11);
             let init: Vec<Tensor> = specs
                 .iter()
@@ -686,7 +749,8 @@ mod tests {
     #[test]
     fn state_floats_and_name_delegate() {
         let specs = mixed_specs();
-        let serial = optim::build("adam", &specs, 0.9, 0.98).unwrap();
+        let serial =
+            optim::OptimSpec::named("adam").unwrap().build(&specs).unwrap();
         let par =
             ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 4).unwrap();
         assert_eq!(par.state_floats(), serial.state_floats());
@@ -726,7 +790,8 @@ mod tests {
     #[should_panic(expected = "state layout mismatch")]
     fn load_state_rejects_wrong_layout_before_mutating() {
         let specs = mixed_specs();
-        let serial = optim::build("adam", &specs, 0.9, 0.98).unwrap();
+        let serial =
+            optim::OptimSpec::named("adam").unwrap().build(&specs).unwrap();
         // serial Adam: 1 global `t` + (m, v) per leaf = 11 tensors;
         // per-leaf Adam expects (t, m, v) per leaf = 15.
         let saved: Vec<Tensor> =
@@ -745,8 +810,8 @@ mod tests {
     fn bitwise_identical_to_serial_with_q8_state() {
         let specs = mixed_specs();
         for name in ["sm3", "adam", "adafactor"] {
-            let mut serial = optim::build_with_dtype(
-                name, &specs, 0.9, 0.98, StateDtype::Q8).unwrap();
+            let mut serial = optim::OptimSpec::named(name).unwrap()
+                .state_dtype(StateDtype::Q8).build(&specs).unwrap();
             let mut par = ParallelStep::from_registry_dtype(
                 name, &specs, 0.9, 0.98, 3, StateDtype::Q8).unwrap();
             assert_eq!(par.state_dtype(), StateDtype::Q8);
@@ -772,6 +837,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Per-leaf LR scales: the multi-worker path (including split-leaf
+    /// ranges, which inherit their leaf's scale) is bitwise identical to
+    /// the single-worker inline path, and bad scale vectors are
+    /// rejected.
+    #[test]
+    fn lr_scales_are_split_and_shard_invariant() {
+        let specs = skewed_specs();
+        let scales = [0.5f32, 1.0, 2.0, 1.0];
+        let mut one =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 1)
+                .unwrap();
+        one.set_lr_scales(&scales).unwrap();
+        let mut four =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 4)
+                .unwrap();
+        assert!(four.parts_per_leaf()[0] > 1, "embedding must split");
+        four.set_lr_scales(&scales).unwrap();
+        let mut rng = Rng::new(23);
+        let init: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let mut pa = init.clone();
+        let mut pb = init;
+        for _ in 0..4 {
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            one.step(&mut pa, &grads, 0.1);
+            four.step(&mut pb, &grads, 0.1);
+        }
+        for (a, b) in pa.iter().zip(&pb) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+            }
+        }
+        // wrong length / non-positive scales are rejected
+        assert!(one.set_lr_scales(&[1.0]).is_err());
+        assert!(one.set_lr_scales(&[0.5, 1.0, 0.0, 1.0]).is_err());
     }
 
     #[test]

@@ -62,6 +62,7 @@ impl QSlot {
         s
     }
 
+    /// Storage precision of this slot.
     pub fn dtype(&self) -> StateDtype {
         match &self.data {
             SlotData::F32(_) => StateDtype::F32,
@@ -70,10 +71,12 @@ impl QSlot {
         }
     }
 
+    /// Logical length in scalars.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Is the slot zero-length?
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -294,10 +297,12 @@ pub struct QuantizedSlots {
 }
 
 impl QuantizedSlots {
+    /// An empty store whose future slots use `dtype`.
     pub fn new(dtype: StateDtype) -> Self {
         Self { dtype, slots: Vec::new() }
     }
 
+    /// Storage precision of every slot in the store.
     pub fn dtype(&self) -> StateDtype {
         self.dtype
     }
@@ -308,10 +313,12 @@ impl QuantizedSlots {
         self.slots.len() - 1
     }
 
+    /// Number of slots allocated.
     pub fn slot_count(&self) -> usize {
         self.slots.len()
     }
 
+    /// Logical length of slot `id` in scalars.
     pub fn slot_len(&self, id: usize) -> usize {
         self.slots[id].len()
     }

@@ -17,34 +17,54 @@ pub enum Decay {
     /// η (SM3/Adagrad: no decay schedule to tune).
     Constant,
     /// η·√(d/t) — the Transformer schedule; `d` is the model dimension.
-    Rsqrt { d: f64 },
+    Rsqrt {
+        /// model dimension d
+        d: f64,
+    },
     /// η·(1 − t/T) — the BERT schedule; `t_total` is T.
-    Linear { t_total: u64 },
+    Linear {
+        /// total step count T
+        t_total: u64,
+    },
     /// max{η₀, η·α^⌊t/τ⌋} — staircase exponential (AmoebaNet SGD).
-    Staircase { eta0: f64, alpha: f64, tau: u64 },
+    Staircase {
+        /// LR floor η₀
+        eta0: f64,
+        /// per-stair decay factor α
+        alpha: f64,
+        /// stair width τ in steps
+        tau: u64,
+    },
 }
 
 /// A complete schedule: base rate, warmup, decay.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// base learning rate η
     pub base: f64,
+    /// linear-warmup steps T₀
     pub warmup: u64,
+    /// post-warmup decay shape
     pub decay: Decay,
 }
 
 impl Schedule {
+    /// Constant η after warmup.
     pub fn constant(base: f64, warmup: u64) -> Self {
         Self { base, warmup, decay: Decay::Constant }
     }
 
+    /// Inverse-sqrt decay (the Transformer schedule).
     pub fn rsqrt(base: f64, warmup: u64, d: usize) -> Self {
         Self { base, warmup, decay: Decay::Rsqrt { d: d as f64 } }
     }
 
+    /// Linear decay to zero at `t_total` (the BERT schedule).
     pub fn linear(base: f64, warmup: u64, t_total: u64) -> Self {
         Self { base, warmup, decay: Decay::Linear { t_total } }
     }
 
+    /// Staircase exponential decay with floor η₀ (AmoebaNet SGD).
     pub fn staircase(base: f64, warmup: u64, eta0: f64, alpha: f64, tau: u64)
                      -> Self {
         Self { base, warmup, decay: Decay::Staircase { eta0, alpha, tau } }

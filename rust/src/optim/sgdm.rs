@@ -6,6 +6,7 @@ use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
 
+/// SGD-with-momentum optimizer state over a parameter list.
 pub struct SgdMomentum {
     beta1: f32,
     /// streaming tile (elements; multiple of the q8 block)
@@ -17,15 +18,19 @@ pub struct SgdMomentum {
 }
 
 impl SgdMomentum {
+    /// f32-state instance (see [`SgdMomentum::with_opts`]).
     pub fn new(specs: &[ParamSpec], beta1: f32) -> Self {
         Self::with_dtype(specs, beta1, StateDtype::F32)
     }
 
+    /// Instance with explicit state-storage precision.
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32,
                       dtype: StateDtype) -> Self {
         Self::with_opts(specs, beta1, dtype, kernel::DEFAULT_CHUNK)
     }
 
+    /// Fully explicit instance: hyperparameters, storage precision, and
+    /// streaming tile.
     pub fn with_opts(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
                      chunk: usize) -> Self {
         kernel::check_chunk(chunk).unwrap();

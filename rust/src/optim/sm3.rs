@@ -71,15 +71,20 @@ pub struct Sm3 {
 }
 
 impl Sm3 {
+    /// f32-state instance (see [`Sm3::with_opts`]).
     pub fn new(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32) -> Self {
         Self::with_dtype(specs, variant, beta1, StateDtype::F32)
     }
 
+    /// Instance with explicit state-storage precision.
     pub fn with_dtype(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
                       dtype: StateDtype) -> Self {
         Self::with_opts(specs, variant, beta1, dtype, kernel::DEFAULT_CHUNK)
     }
 
+    /// Fully explicit instance: variant, momentum, storage precision,
+    /// and streaming tile (vector leaves only — matrix/tensor covers are
+    /// reduction-coupled and leaf-granular).
     pub fn with_opts(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
                      dtype: StateDtype, chunk: usize) -> Self {
         kernel::check_chunk(chunk).unwrap();

@@ -1,0 +1,725 @@
+//! Chainable update transforms and the [`Pipeline`] that applies them
+//! around any inner [`Optimizer`] (DESIGN.md §11).
+//!
+//! Adafactor and CAME frame their methods as *stages* of an update
+//! pipeline; this module gives the optimizer bank the same seam. A
+//! [`Pipeline`] wraps an inner optimizer (a serial registry optimizer or
+//! a [`crate::optim::ParallelStep`] engine) and runs three stages per
+//! step, in this fixed order:
+//!
+//! 1. **Gradient stages**, in the order the transforms were chained:
+//!    [`clip_by_value`] clamps each gradient entry to `[-c, c]`;
+//!    [`clip_by_global_norm`] rescales all gradients by `c / ‖g‖₂` when
+//!    the global norm exceeds `c`. Gradients are copied once into
+//!    struct-held scratch (the caller's tensors are never mutated);
+//!    serial (`threads == 1`) steady-state steps allocate nothing
+//!    (counting-allocator-tested). With `threads > 1` each pass spawns
+//!    scoped workers, which heap-allocates per step — the same tradeoff
+//!    `ParallelStep`'s multi-worker path already makes.
+//! 2. **Decoupled weight decay** (the AdamW convention): each leaf `i`
+//!    with a non-zero rate is multiplied by `1 − (lr·s_i)·wd_i` *before*
+//!    the inner update, where `s_i` is the leaf's per-group LR scale.
+//!    The decay never enters the gradient, so the adaptive statistics
+//!    are untouched.
+//! 3. The **inner update** on the (possibly transformed) gradients.
+//!
+//! **`ParallelStep` correctness.** Global-norm clipping is a two-phase
+//! reduce: the gradient set is partitioned into fixed [`NORM_TILE`]-sized
+//! tiles (a partition that depends only on the parameter shapes, never on
+//! the thread count), per-tile partial squared norms are computed —
+//! in parallel when the pipeline is built with `threads > 1` — and the
+//! partials are combined in tile order on one thread. The combine order
+//! is therefore deterministic, so the clip factor, and with it the whole
+//! trajectory, is bitwise identical between serial, sharded, and
+//! intra-leaf-sharded execution at any thread count and state dtype
+//! (property-tested in `crate::proptest`).
+//!
+//! **Checkpoint contract.** A pipeline prepends two stable transform
+//! slots to the inner state — `tx_step` (its step count) and `tx_norm`
+//! (the last pre-clip global gradient norm) — both 1-element tensors, so
+//! the trainer's `SM3CKPT2` writer tags them f32 like every scalar slot
+//! (DESIGN.md §8). `state_floats`/`state_bytes` flow through to the
+//! memory accountant with the two extra scalars added.
+
+use super::{Optimizer, ParamSpec, StateDtype};
+use crate::tensor::Tensor;
+
+/// Fixed tile size (elements) of the global-norm reduction partition.
+///
+/// The partition depends only on the parameter shapes, so the combined
+/// f64 sum — and the clip factor derived from it — is identical at any
+/// thread count.
+pub const NORM_TILE: usize = 4096;
+
+/// Optimizer-state scalars a [`Pipeline`] adds on top of its inner
+/// optimizer: the `tx_step` / `tx_norm` slots, stored f32 per the
+/// scalar-slot rule (so `4 · TRANSFORM_STATE_FLOATS` bytes). Clipping
+/// and decoupled weight decay carry no per-parameter state, which is
+/// why composing them is memory-free at model scale. The memory
+/// accountant re-exports this (`memory::TRANSFORM_STATE_FLOATS`).
+pub const TRANSFORM_STATE_FLOATS: usize = 2;
+
+/// One composable stage of the update pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateTransform {
+    /// No-op stage (dropped at build; useful as a config placeholder).
+    Identity,
+    /// Clamp every gradient entry to `[-c, c]`.
+    ClipByValue(f32),
+    /// Rescale all gradients by `c / ‖g‖₂` when the global L2 norm
+    /// exceeds `c` (two-phase deterministic reduce, see module docs).
+    ClipByGlobalNorm(f32),
+    /// Decoupled (AdamW-style) weight decay at the given base rate;
+    /// per-group overrides come from `OptimSpec` param groups.
+    DecoupledWeightDecay(f32),
+}
+
+impl UpdateTransform {
+    /// Does this stage read or rewrite gradients? (Weight decay acts on
+    /// parameters; identity acts on nothing.)
+    pub fn is_grad_stage(&self) -> bool {
+        matches!(self,
+                 UpdateTransform::ClipByValue(_)
+                 | UpdateTransform::ClipByGlobalNorm(_))
+    }
+}
+
+/// Clamp every gradient entry to `[-c, c]`.
+pub fn clip_by_value(c: f32) -> UpdateTransform {
+    UpdateTransform::ClipByValue(c)
+}
+
+/// Rescale all gradients so the global L2 norm never exceeds `c`.
+pub fn clip_by_global_norm(c: f32) -> UpdateTransform {
+    UpdateTransform::ClipByGlobalNorm(c)
+}
+
+/// Decoupled (AdamW-style) weight decay at base rate `wd`.
+pub fn decoupled_weight_decay(wd: f32) -> UpdateTransform {
+    UpdateTransform::DecoupledWeightDecay(wd)
+}
+
+/// The no-op transform.
+pub fn identity() -> UpdateTransform {
+    UpdateTransform::Identity
+}
+
+/// Global squared L2 norm over a gradient set, computed with the same
+/// fixed [`NORM_TILE`] partition and f64 tile-order combine the
+/// [`Pipeline`] uses — so a hand-rolled transform built on this helper
+/// is bitwise identical to the pipeline (the bench's fairness gate).
+pub fn global_sq_norm(grads: &[Tensor]) -> f64 {
+    let mut total = 0.0f64;
+    for t in grads {
+        for chunk in t.data().chunks(NORM_TILE) {
+            let mut part = 0.0f64;
+            for &v in chunk {
+                part += (v as f64) * (v as f64);
+            }
+            total += part;
+        }
+    }
+    total
+}
+
+/// The gradient scale factor implied by `clip_by_global_norm(max_norm)`
+/// for a gradient set with squared norm `sq_norm`; `None` when the norm
+/// is within bounds (no rescale pass runs at all).
+pub fn clip_scale(sq_norm: f64, max_norm: f32) -> Option<f32> {
+    let norm = sq_norm.sqrt();
+    if norm > max_norm as f64 {
+        Some((max_norm as f64 / norm) as f32)
+    } else {
+        None
+    }
+}
+
+/// `ceil(a / b)` without the 1.73-stabilized `usize::div_ceil` (MSRV).
+fn ceil_div(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}
+
+/// Run `f(index, &mut items[index])` over every element, splitting the
+/// slice into contiguous chunks across up to `threads` scoped workers
+/// (inline when `threads <= 1`). Callers only do index-independent
+/// per-element work, so the result is identical at any thread count.
+/// Shared by the gradient/decay passes (over leaf tensors) and the
+/// norm reduce's partial phase (over per-tile f64 slots).
+fn for_each_indexed_mut<T: Send>(threads: usize, items: &mut [T],
+                                 f: &(impl Fn(usize, &mut T) + Sync)) {
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        for (i, t) in items.iter_mut().enumerate() {
+            f(i, t);
+        }
+        return;
+    }
+    let per = ceil_div(n, threads.min(n));
+    std::thread::scope(|scope| {
+        let mut rest: &mut [T] = items;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (chunk, rem) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = rem;
+            let start = base;
+            base += take;
+            scope.spawn(move || {
+                for (j, t) in chunk.iter_mut().enumerate() {
+                    f(start + j, t);
+                }
+            });
+        }
+    });
+}
+
+/// One tile of the global-norm partition: `(leaf, offset, len)`.
+type NormTile = (usize, usize, usize);
+
+fn tile_sq_norm(src: &[Tensor], (leaf, off, len): NormTile) -> f64 {
+    let mut acc = 0.0f64;
+    for &v in &src[leaf].data()[off..off + len] {
+        acc += (v as f64) * (v as f64);
+    }
+    acc
+}
+
+/// A composable update pipeline around any inner optimizer.
+///
+/// Built by `OptimSpec::build` whenever a spec carries gradient
+/// transforms or weight decay; constructible directly for tests. See the
+/// module docs for the stage order and determinism contracts.
+pub struct Pipeline {
+    inner: Box<dyn Optimizer>,
+    stages: Vec<UpdateTransform>,
+    /// per-leaf decoupled weight-decay rate (0 ⇒ no decay on that leaf)
+    wd: Vec<f32>,
+    /// per-leaf LR scale (group overrides; the engine applies it to the
+    /// update — the copy here feeds the decay factor)
+    lr_scale: Vec<f32>,
+    threads: usize,
+    /// fixed global-norm partition (shapes only — never thread count)
+    tiles: Vec<NormTile>,
+    /// per-tile partial squared norms, combined in tile order
+    partials: Vec<f64>,
+    /// transformed-gradient buffers, allocated once when any grad stage
+    /// exists; the caller's gradient tensors are never mutated
+    scratch: Vec<Tensor>,
+    /// pipeline step count (the `tx_step` checkpoint slot)
+    steps: f32,
+    /// last pre-clip global gradient norm (the `tx_norm` slot)
+    last_norm: f32,
+}
+
+impl Pipeline {
+    /// Wrap `inner` with uniform transform parameters (no per-group
+    /// overrides): every leaf gets the stage-declared weight-decay rate
+    /// and LR scale 1.
+    pub fn new(inner: Box<dyn Optimizer>, specs: &[ParamSpec],
+               stages: Vec<UpdateTransform>, threads: usize)
+               -> anyhow::Result<Self> {
+        let base_wd = stages
+            .iter()
+            .find_map(|s| match s {
+                UpdateTransform::DecoupledWeightDecay(w) => Some(*w),
+                _ => None,
+            })
+            .unwrap_or(0.0);
+        let n = specs.len();
+        Self::with_overrides(inner, specs, stages, vec![base_wd; n],
+                             vec![1.0; n], threads)
+    }
+
+    /// Wrap `inner` with resolved per-leaf weight decay and LR scales
+    /// (the `OptimSpec` param-group path). `lr_scale` must match the
+    /// scales baked into the inner engine — `OptimSpec::build` guarantees
+    /// this; direct constructors must too, or the decay factor and the
+    /// update would disagree about the effective LR.
+    pub fn with_overrides(inner: Box<dyn Optimizer>, specs: &[ParamSpec],
+                          stages: Vec<UpdateTransform>, wd: Vec<f32>,
+                          lr_scale: Vec<f32>, threads: usize)
+                          -> anyhow::Result<Self> {
+        anyhow::ensure!(wd.len() == specs.len()
+                        && lr_scale.len() == specs.len(),
+                        "per-leaf override lengths must match the spec \
+                         list ({} leaves)", specs.len());
+        anyhow::ensure!(threads >= 1, "pipeline threads must be >= 1");
+        for s in &stages {
+            match *s {
+                UpdateTransform::ClipByValue(c)
+                | UpdateTransform::ClipByGlobalNorm(c) => {
+                    anyhow::ensure!(c.is_finite() && c > 0.0,
+                                    "clip threshold must be finite and \
+                                     > 0, got {c}");
+                }
+                UpdateTransform::DecoupledWeightDecay(w) => {
+                    anyhow::ensure!(w.is_finite() && w >= 0.0,
+                                    "weight decay must be finite and \
+                                     >= 0, got {w}");
+                }
+                UpdateTransform::Identity => {}
+            }
+        }
+        // the norm partition only exists when a global-norm stage will
+        // read it — a decay-only pipeline holds no per-tile state
+        let any_norm_stage = stages
+            .iter()
+            .any(|s| matches!(s, UpdateTransform::ClipByGlobalNorm(_)));
+        let mut tiles = Vec::new();
+        if any_norm_stage {
+            for (leaf, s) in specs.iter().enumerate() {
+                let n = s.numel();
+                let mut off = 0;
+                while off < n {
+                    let len = NORM_TILE.min(n - off);
+                    tiles.push((leaf, off, len));
+                    off += len;
+                }
+            }
+        }
+        let partials = vec![0.0; tiles.len()];
+        let any_grad_stage = stages.iter().any(UpdateTransform::is_grad_stage);
+        let scratch = if any_grad_stage {
+            specs.iter().map(|s| Tensor::zeros(&s.shape)).collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Self { inner, stages, wd, lr_scale, threads, tiles, partials,
+                  scratch, steps: 0.0, last_norm: 0.0 })
+    }
+
+    /// The global gradient norm observed by the most recent
+    /// `clip_by_global_norm` stage, *before* clipping (0 until the first
+    /// step, or when no global-norm stage is configured).
+    pub fn last_grad_norm(&self) -> f64 {
+        self.last_norm as f64
+    }
+
+    /// Steps taken through this pipeline (the `tx_step` slot).
+    pub fn step_count(&self) -> u64 {
+        self.steps as u64
+    }
+
+    /// Two-phase deterministic squared-norm reduce over `src`: per-tile
+    /// partials (parallel across scoped workers when `threads > 1`),
+    /// combined in tile order on this thread.
+    fn two_phase_sq_norm(&mut self, src: &[Tensor]) -> f64 {
+        sq_norm_over(&self.tiles, &mut self.partials, src, self.threads)
+    }
+
+    /// Apply the gradient stages, filling `self.scratch` on the first
+    /// rewriting stage. Returns whether scratch now holds the gradients.
+    fn run_grad_stages(&mut self, grads: &[Tensor]) -> bool {
+        let mut copied = false;
+        for k in 0..self.stages.len() {
+            match self.stages[k] {
+                UpdateTransform::ClipByValue(c) => {
+                    if copied {
+                        for_each_indexed_mut(self.threads, &mut self.scratch,
+                                          &|_, t| {
+                            for v in t.data_mut() {
+                                *v = v.clamp(-c, c);
+                            }
+                        });
+                    } else {
+                        for_each_indexed_mut(self.threads, &mut self.scratch,
+                                          &|i, t| {
+                            for (o, &g) in
+                                t.data_mut().iter_mut().zip(grads[i].data())
+                            {
+                                *o = g.clamp(-c, c);
+                            }
+                        });
+                        copied = true;
+                    }
+                }
+                UpdateTransform::ClipByGlobalNorm(c) => {
+                    let sq = if copied {
+                        sq_norm_over(&self.tiles, &mut self.partials,
+                                     &self.scratch, self.threads)
+                    } else {
+                        self.two_phase_sq_norm(grads)
+                    };
+                    self.last_norm = sq.sqrt() as f32;
+                    if let Some(s) = clip_scale(sq, c) {
+                        if copied {
+                            for_each_indexed_mut(self.threads,
+                                              &mut self.scratch, &|_, t| {
+                                for v in t.data_mut() {
+                                    *v *= s;
+                                }
+                            });
+                        } else {
+                            for_each_indexed_mut(self.threads,
+                                              &mut self.scratch, &|i, t| {
+                                for (o, &g) in t.data_mut()
+                                    .iter_mut()
+                                    .zip(grads[i].data())
+                                {
+                                    *o = g * s;
+                                }
+                            });
+                            copied = true;
+                        }
+                    }
+                }
+                UpdateTransform::Identity
+                | UpdateTransform::DecoupledWeightDecay(_) => {}
+            }
+        }
+        copied
+    }
+}
+
+/// The two-phase reduce itself: fill `partials` (one per tile — in
+/// parallel over contiguous tile ranges when `threads > 1`), then
+/// combine in tile order on the calling thread. The partition and the
+/// combine order never depend on `threads`, so the result is bitwise
+/// identical at any thread count.
+fn sq_norm_over(tiles: &[NormTile], partials: &mut [f64], src: &[Tensor],
+                threads: usize) -> f64 {
+    debug_assert_eq!(partials.len(), tiles.len());
+    for_each_indexed_mut(threads, partials,
+                         &|i, p| *p = tile_sq_norm(src, tiles[i]));
+    partials.iter().fold(0.0f64, |a, &b| a + b)
+}
+
+impl Optimizer for Pipeline {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.wd.len(),
+                   "pipeline built over {} leaves, stepped with {}",
+                   self.wd.len(), params.len());
+        self.steps += 1.0;
+        // 1. gradient stages (into struct-held scratch; zero-copy when no
+        //    stage fires)
+        let copied = self.run_grad_stages(grads);
+        // 2. decoupled weight decay — before the inner update, AdamW
+        //    order: w ← w·(1 − (lr·s_i)·wd_i)
+        if self.wd.iter().any(|&w| w != 0.0) {
+            let (wd, scale) = (&self.wd, &self.lr_scale);
+            for_each_indexed_mut(self.threads, params, &|i, t| {
+                if wd[i] != 0.0 {
+                    let eff = lr * scale[i];
+                    let f = 1.0 - eff * wd[i];
+                    for v in t.data_mut() {
+                        *v *= f;
+                    }
+                }
+            });
+        }
+        // 3. the inner update on the (possibly transformed) gradients
+        let g = if copied { &self.scratch[..] } else { grads };
+        self.inner.step(params, g, lr);
+    }
+
+    fn state_floats(&self) -> usize {
+        self.inner.state_floats() + TRANSFORM_STATE_FLOATS
+    }
+
+    fn state_bytes(&self) -> usize {
+        // the transform scalars are stored f32 (scalar-slot rule)
+        self.inner.state_bytes() + 4 * TRANSFORM_STATE_FLOATS
+    }
+
+    fn state_dtype(&self) -> StateDtype {
+        self.inner.state_dtype()
+    }
+
+    fn state(&self) -> Vec<(usize, &'static str, Tensor)> {
+        let mut out = vec![
+            (0, "tx_step", Tensor::from_vec(&[1], vec![self.steps])),
+            (0, "tx_norm", Tensor::from_vec(&[1], vec![self.last_norm])),
+        ];
+        out.extend(self.inner.state());
+        out
+    }
+
+    fn load_state(&mut self, state: Vec<Tensor>) {
+        assert!(state.len() >= 2,
+                "pipeline state underrun: {} tensors, expected the \
+                 tx_step/tx_norm slots plus the inner layout", state.len());
+        let mut it = state.into_iter();
+        let step_t = it.next().unwrap();
+        let norm_t = it.next().unwrap();
+        assert_eq!(step_t.len(), 1, "tx_step must be a 1-element tensor");
+        assert_eq!(norm_t.len(), 1, "tx_norm must be a 1-element tensor");
+        self.steps = step_t.data()[0];
+        self.last_norm = norm_t.data()[0];
+        self.inner.load_state(it.collect());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{OptimSpec, SgdmHp};
+    use crate::optim::{self, Method};
+    use crate::rng::Rng;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![ParamSpec::new("embed", &[20, 6]),
+             ParamSpec::new("w", &[6, 6]),
+             ParamSpec::new("b", &[70])]
+    }
+
+    fn rand_params(specs: &[ParamSpec], rng: &mut Rng) -> Vec<Tensor> {
+        specs.iter().map(|s| Tensor::randn(&s.shape, 0.5, rng)).collect()
+    }
+
+    fn assert_bitwise(a: &[Tensor], b: &[Tensor], what: &str) {
+        for (ta, tb) in a.iter().zip(b) {
+            for (x, y) in ta.data().iter().zip(tb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} != {y}");
+            }
+        }
+    }
+
+    /// Satellite: an identity pipeline (explicit wrapper, no effective
+    /// stages) is bitwise identical to the bare optimizer across the
+    /// whole registry × every state dtype.
+    #[test]
+    fn identity_pipeline_is_bitwise_identical_to_bare() {
+        for dtype in StateDtype::ALL {
+            for name in optim::ALL {
+                let specs = specs();
+                let mut bare = OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype).build(&specs).unwrap();
+                let inner = OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype).build(&specs).unwrap();
+                let mut pipe = Pipeline::new(
+                    inner, &specs, vec![identity()], 1).unwrap();
+                let mut rng = Rng::new(5);
+                let init = rand_params(&specs, &mut rng);
+                let mut pa = init.clone();
+                let mut pb = init;
+                for _ in 0..4 {
+                    let grads = rand_params(&specs, &mut rng);
+                    bare.step(&mut pa, &grads, 0.1);
+                    pipe.step(&mut pb, &grads, 0.1);
+                }
+                assert_bitwise(&pa, &pb, &format!("{name} @ {dtype:?}"));
+            }
+        }
+    }
+
+    /// clip_by_value bounds every gradient entry; observed through a
+    /// momentum-free SGD step at lr 1 from w = 0 (so w₁ = −g′ exactly).
+    #[test]
+    fn clip_by_value_bounds_entries() {
+        let specs = vec![ParamSpec::new("w", &[4])];
+        let inner = OptimSpec::new(
+            Method::SgdMomentum(SgdmHp { beta1: 0.0 }))
+            .build(&specs).unwrap();
+        let mut pipe = Pipeline::new(inner, &specs,
+                                     vec![clip_by_value(0.5)], 1).unwrap();
+        let mut params = vec![Tensor::zeros(&[4])];
+        let g = vec![Tensor::from_vec(&[4], vec![2.0, -3.0, 0.25, -0.5])];
+        pipe.step(&mut params, &g, 1.0);
+        assert_eq!(params[0].data(), &[-0.5, 0.5, -0.25, 0.5]);
+        // the caller's gradient tensor is untouched
+        assert_eq!(g[0].data(), &[2.0, -3.0, 0.25, -0.5]);
+    }
+
+    /// clip_by_global_norm actually bounds the global norm: a gradient
+    /// set with ‖g‖ = 5 is scaled onto the norm-1 sphere, and a set
+    /// already inside the ball is passed through bit-for-bit.
+    #[test]
+    fn clip_by_global_norm_bounds_the_norm() {
+        let specs = vec![ParamSpec::new("a", &[1]),
+                         ParamSpec::new("b", &[1])];
+        let build = || {
+            let inner = OptimSpec::new(
+                Method::SgdMomentum(SgdmHp { beta1: 0.0 }))
+                .build(&specs).unwrap();
+            Pipeline::new(inner, &specs,
+                          vec![clip_by_global_norm(1.0)], 1).unwrap()
+        };
+        // ‖(3, 4)‖ = 5 > 1 ⇒ scale 0.2
+        let mut pipe = build();
+        let mut params = vec![Tensor::zeros(&[1]), Tensor::zeros(&[1])];
+        let g = vec![Tensor::from_vec(&[1], vec![3.0]),
+                     Tensor::from_vec(&[1], vec![4.0])];
+        pipe.step(&mut params, &g, 1.0);
+        let clipped = ((params[0].data()[0] as f64).powi(2)
+                       + (params[1].data()[0] as f64).powi(2)).sqrt();
+        assert!((clipped - 1.0).abs() < 1e-6, "post-clip norm {clipped}");
+        assert!((pipe.last_grad_norm() - 5.0).abs() < 1e-6);
+        // inside the ball: bitwise pass-through of the gradients
+        let mut pipe = build();
+        let mut pa = vec![Tensor::zeros(&[1]), Tensor::zeros(&[1])];
+        let g_small = vec![Tensor::from_vec(&[1], vec![0.3]),
+                           Tensor::from_vec(&[1], vec![0.4])];
+        pipe.step(&mut pa, &g_small, 1.0);
+        assert_eq!(pa[0].data()[0].to_bits(), (-0.3f32).to_bits());
+        assert_eq!(pa[1].data()[0].to_bits(), (-0.4f32).to_bits());
+    }
+
+    /// Satellite: decoupled weight decay matches a NumPy f32 oracle for
+    /// Adam (the AdamW trajectory). Inputs are literal so the oracle
+    /// script (same f32 op order) is exactly reproducible.
+    #[test]
+    fn decoupled_weight_decay_matches_numpy_oracle_adam() {
+        let specs = vec![ParamSpec::new("w", &[5])];
+        let mut pipe = OptimSpec::named("adam").unwrap()
+            .weight_decay(0.01)
+            .build(&specs).unwrap();
+        let mut params =
+            vec![Tensor::from_vec(&[5], vec![0.5, -0.3, 0.8, -1.2, 0.1])];
+        let gs = [vec![0.4, -0.2, 0.1, 0.5, -0.3],
+                  vec![-0.1, 0.3, -0.4, 0.2, 0.6],
+                  vec![0.2, 0.2, -0.1, -0.3, 0.1]];
+        for g in &gs {
+            let g = vec![Tensor::from_vec(&[5], g.clone())];
+            pipe.step(&mut params, &g, 0.1);
+        }
+        // python3 oracle: AdamW (decay first, lr 0.1, wd 0.01,
+        // β₁ 0.9, β₂ 0.98, eps 1e-8), all-f32 arithmetic
+        let expect = [0.290_720_82f32, -0.271_745_53, 0.810_559_33,
+                      -1.415_960_2, 0.125_552_59];
+        for (a, e) in params[0].data().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-5, "{a} vs oracle {e}");
+        }
+    }
+
+    /// Satellite: the same oracle check for SM3 (vector leaf — the
+    /// singleton cover, where SM3 runs the Adagrad kernel).
+    #[test]
+    fn decoupled_weight_decay_matches_numpy_oracle_sm3() {
+        let specs = vec![ParamSpec::new("w", &[5])];
+        let mut pipe = OptimSpec::named("sm3").unwrap()
+            .weight_decay(0.01)
+            .build(&specs).unwrap();
+        let mut params =
+            vec![Tensor::from_vec(&[5], vec![0.5, -0.3, 0.8, -1.2, 0.1])];
+        let gs = [vec![0.4, -0.2, 0.1, 0.5, -0.3],
+                  vec![-0.1, 0.3, -0.4, 0.2, 0.6],
+                  vec![0.2, 0.2, -0.1, -0.3, 0.1]];
+        for g in &gs {
+            let g = vec![Tensor::from_vec(&[5], g.clone())];
+            pipe.step(&mut params, &g, 0.1);
+        }
+        let expect = [0.471_671_9f32, -0.292_681_28, 0.791_311_44,
+                      -1.225_660_7, 0.108_311_73];
+        for (a, e) in params[0].data().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-5, "{a} vs oracle {e}");
+        }
+    }
+
+    /// The pipeline's transform slots round-trip through
+    /// `state`/`load_state`, and the inner layout rides behind them.
+    #[test]
+    fn transform_slots_roundtrip() {
+        let specs = specs();
+        let build = || {
+            OptimSpec::named("adam").unwrap()
+                .clip_by_global_norm(1.0)
+                .weight_decay(0.01)
+                .state_dtype(StateDtype::Q8)
+                .build(&specs)
+        };
+        let mut pipe = build().unwrap();
+        let mut rng = Rng::new(9);
+        let mut params = rand_params(&specs, &mut rng);
+        for _ in 0..3 {
+            let grads = rand_params(&specs, &mut rng);
+            pipe.step(&mut params, &grads, 0.1);
+        }
+        let st = pipe.state();
+        assert_eq!((st[0].0, st[0].1), (0, "tx_step"));
+        assert_eq!((st[1].0, st[1].1), (0, "tx_norm"));
+        assert_eq!(st[0].2.data()[0], 3.0);
+        assert!(st[1].2.data()[0] > 0.0);
+        let tensors: Vec<Tensor> =
+            st.into_iter().map(|(_, _, t)| t).collect();
+        let mut fresh = build().unwrap();
+        fresh.load_state(tensors.clone());
+        let restored: Vec<Tensor> =
+            fresh.state().into_iter().map(|(_, _, t)| t).collect();
+        assert_eq!(tensors, restored);
+    }
+
+    /// State accounting flows through: pipeline = inner + 2 scalars.
+    #[test]
+    fn state_accounting_adds_two_scalars() {
+        let specs = specs();
+        let bare = OptimSpec::named("adam").unwrap().build(&specs).unwrap();
+        let pipe = OptimSpec::named("adam").unwrap()
+            .clip_by_global_norm(1.0).weight_decay(0.01)
+            .build(&specs).unwrap();
+        assert_eq!(pipe.state_floats(), bare.state_floats() + 2);
+        assert_eq!(pipe.state_bytes(), bare.state_bytes() + 8);
+        assert_eq!(pipe.name(), "adam");
+    }
+
+    /// Steady-state pipeline steps are allocation-free at every state
+    /// dtype (threads = 1 — the serial path; the counting allocator is
+    /// thread-local, see `crate::alloc_count`).
+    #[test]
+    fn steady_state_pipeline_steps_are_allocation_free() {
+        let specs = specs();
+        let mut rng = Rng::new(2);
+        let params0 = rand_params(&specs, &mut rng);
+        let grads = rand_params(&specs, &mut rng);
+        for dtype in StateDtype::ALL {
+            for name in optim::ALL {
+                let mut pipe = OptimSpec::named(name).unwrap()
+                    .state_dtype(dtype)
+                    .clip_by_value(0.8)
+                    .clip_by_global_norm(1.0)
+                    .weight_decay(0.01)
+                    .build(&specs).unwrap();
+                let mut params = params0.clone();
+                for _ in 0..3 {
+                    pipe.step(&mut params, &grads, 0.1);
+                }
+                let before = crate::alloc_count::thread_allocs();
+                for _ in 0..2 {
+                    pipe.step(&mut params, &grads, 0.1);
+                }
+                let allocs = crate::alloc_count::thread_allocs() - before;
+                assert_eq!(allocs, 0,
+                           "{name} @ {dtype:?}: {allocs} allocations in \
+                            steady-state pipeline steps");
+            }
+        }
+    }
+
+    /// The two-phase reduce helpers agree with each other and with a
+    /// plain f64 sum over multi-tile inputs.
+    #[test]
+    fn norm_helpers_agree() {
+        let specs = vec![ParamSpec::new("big", &[NORM_TILE + 300]),
+                         ParamSpec::new("b", &[33])];
+        let mut rng = Rng::new(4);
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        let plain: f64 = grads
+            .iter()
+            .map(|t| t.data().iter()
+                 .map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum();
+        let tiled = global_sq_norm(&grads);
+        assert!((plain - tiled).abs() <= 1e-9 * plain.max(1.0));
+        // pipeline-internal reduce == free function, at 1 and 4 threads
+        for threads in [1usize, 4] {
+            let inner = OptimSpec::named("sgdm").unwrap()
+                .build(&specs).unwrap();
+            let mut pipe = Pipeline::new(
+                inner, &specs, vec![clip_by_global_norm(1.0)],
+                threads).unwrap();
+            let got = pipe.two_phase_sq_norm(&grads);
+            assert_eq!(got.to_bits(), tiled.to_bits(),
+                       "x{threads}: {got} != {tiled}");
+        }
+        assert_eq!(clip_scale(4.0, 3.0), None);
+        let s = clip_scale(25.0, 1.0).unwrap();
+        assert!((s - 0.2).abs() < 1e-7);
+    }
+}

@@ -161,7 +161,8 @@ mod tests {
         }, |(specs, seed)| {
             for name in optim::ALL {
                 for threads in [1usize, 2, 4] {
-                    let mut serial = optim::build(name, specs, 0.9, 0.98)
+                    let mut serial = optim::OptimSpec::named(name)
+                        .and_then(|s| s.build(specs))
                         .map_err(|e| e.to_string())?;
                     let mut par = ParallelStep::from_registry(
                         name, specs, 0.9, 0.98, threads)
@@ -221,8 +222,9 @@ mod tests {
         }, |(specs, seed)| {
             for name in optim::ALL {
                 for threads in [1usize, 2, 4] {
-                    let mut serial = optim::build_with_dtype(
-                        name, specs, 0.9, 0.98, StateDtype::Q8)
+                    let mut serial = optim::OptimSpec::named(name)
+                        .and_then(|s| s.state_dtype(StateDtype::Q8)
+                            .build(specs))
                         .map_err(|e| e.to_string())?;
                     let mut par = ParallelStep::from_registry_dtype(
                         name, specs, 0.9, 0.98, threads, StateDtype::Q8)
@@ -282,11 +284,13 @@ mod tests {
             for dtype in StateDtype::ALL {
                 for name in optim::ALL {
                     for chunk in [64usize, 128] {
-                        let mut tiled = optim::build_with_opts(
-                            name, specs, 0.9, 0.98, dtype, chunk)
+                        let mut tiled = optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype)
+                                .step_chunk(chunk).build(specs))
                             .map_err(|e| e.to_string())?;
-                        let mut whole = optim::build_with_opts(
-                            name, specs, 0.9, 0.98, dtype, WHOLE)
+                        let mut whole = optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype)
+                                .step_chunk(WHOLE).build(specs))
                             .map_err(|e| e.to_string())?;
                         let mut rng = crate::rng::Rng::new(*seed);
                         let init: Vec<Tensor> = specs
@@ -353,8 +357,8 @@ mod tests {
             for dtype in [StateDtype::F32, StateDtype::Q8] {
                 for name in optim::ALL {
                     for threads in [1usize, 2, 4] {
-                        let mut serial = optim::build_with_dtype(
-                            name, specs, 0.9, 0.98, dtype)
+                        let mut serial = optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype).build(specs))
                             .map_err(|e| e.to_string())?;
                         let mut par = ParallelStep::from_registry_opts(
                             name, specs, 0.9, 0.98, threads, dtype, 64,
@@ -395,6 +399,168 @@ mod tests {
                                              {x} != {y}"));
                                     }
                                 }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 4 acceptance: a `clip_by_global_norm(1.0)` +
+    /// `decoupled_weight_decay(0.01)` pipeline over Adam (and SM3)
+    /// trains under `ParallelStep` bitwise identical to serial — f32 and
+    /// q8 state, 1/2/4 threads, whole-leaf and intra-leaf split plans,
+    /// on spec sets whose dominant leaf really splits. The global-norm
+    /// clip's two-phase reduce uses a thread-count-independent tile
+    /// partition, so the clip factor (and the whole trajectory) cannot
+    /// drift across engines.
+    #[test]
+    fn transform_pipeline_is_bit_identical_serial_vs_sharded() {
+        use crate::optim::{self, Optimizer, SplitPolicy, StateDtype};
+        use crate::tensor::Tensor;
+        forall("clip+decay pipeline == serial, bitwise", |rng| {
+            let rows = 120 + rng.index(80);
+            let mut specs =
+                vec![crate::optim::ParamSpec::new("embed", &[rows, 3])];
+            specs.extend(gen::param_specs(rng, 3, 2, 6));
+            (specs, rng.next_u64())
+        }, |(specs, seed)| {
+            let build = |name: &str, dtype: StateDtype, threads: usize,
+                         policy: SplitPolicy|
+             -> Result<Box<dyn Optimizer>, String> {
+                optim::OptimSpec::named(name)
+                    .and_then(|s| {
+                        s.state_dtype(dtype)
+                            .step_chunk(64)
+                            .threads(threads)
+                            .split_policy(policy)
+                            .clip_by_global_norm(1.0)
+                            .weight_decay(0.01)
+                            .build(specs)
+                    })
+                    .map_err(|e| e.to_string())
+            };
+            for name in ["adam", "sm3"] {
+                for dtype in [StateDtype::F32, StateDtype::Q8] {
+                    let mut serial = build(name, dtype, 1,
+                                           SplitPolicy::IntraLeaf)?;
+                    for threads in [2usize, 4] {
+                        for policy in [SplitPolicy::WholeLeaf,
+                                       SplitPolicy::IntraLeaf] {
+                            let mut par =
+                                build(name, dtype, threads, policy)?;
+                            let mut rng = crate::rng::Rng::new(*seed);
+                            let init: Vec<Tensor> = specs
+                                .iter()
+                                .map(|s| Tensor::randn(&s.shape, 0.5,
+                                                       &mut rng))
+                                .collect();
+                            let mut pa = init.clone();
+                            let mut pb = init;
+                            for step in 0..3 {
+                                let grads: Vec<Tensor> = specs
+                                    .iter()
+                                    .map(|s| gen_grad_tensor(&s.shape,
+                                                             &mut rng))
+                                    .collect();
+                                serial.step(&mut pa, &grads, 0.1);
+                                par.step(&mut pb, &grads, 0.1);
+                                for (leaf, (a, b)) in
+                                    pa.iter().zip(&pb).enumerate()
+                                {
+                                    for (x, y) in
+                                        a.data().iter().zip(b.data())
+                                    {
+                                        if x.to_bits() != y.to_bits() {
+                                            return Err(format!(
+                                                "{name} x{threads} \
+                                                 {policy:?} @ {dtype:?} \
+                                                 step {step} leaf {leaf}: \
+                                                 {x} != {y}"));
+                                        }
+                                    }
+                                }
+                            }
+                            // reset the serial reference for the next
+                            // (threads, policy) combination
+                            serial = build(name, dtype, 1,
+                                           SplitPolicy::IntraLeaf)?;
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The pipeline is exactly "hand-applied transforms + bare
+    /// optimizer": clamp, two-phase-norm rescale, and decoupled decay
+    /// applied manually with the same arithmetic reproduce the pipeline
+    /// trajectory bit-for-bit. (This is the semantic contract the bench
+    /// uses as its fairness baseline.)
+    #[test]
+    fn pipeline_equals_hand_applied_transforms() {
+        use crate::optim::{self, transform, Optimizer};
+        use crate::tensor::Tensor;
+        forall("pipeline == manual transforms, bitwise", |rng| {
+            (gen::param_specs(rng, 4, 3, 7), rng.next_u64())
+        }, |(specs, seed)| {
+            let (cv, cn, wd, lr) = (0.5f32, 1.0f32, 0.01f32, 0.1f32);
+            for name in ["adam", "sm3", "adafactor"] {
+                let mut pipe = optim::OptimSpec::named(name)
+                    .and_then(|s| {
+                        s.clip_by_value(cv)
+                            .clip_by_global_norm(cn)
+                            .weight_decay(wd)
+                            .build(specs)
+                    })
+                    .map_err(|e| e.to_string())?;
+                let mut bare = optim::OptimSpec::named(name)
+                    .and_then(|s| s.build(specs))
+                    .map_err(|e| e.to_string())?;
+                let mut rng = crate::rng::Rng::new(*seed);
+                let init: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                    .collect();
+                let mut pa = init.clone();
+                let mut pb = init;
+                for step in 0..3 {
+                    let grads: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                        .collect();
+                    pipe.step(&mut pa, &grads, lr);
+                    // manual: clamp → norm-rescale → decay → bare step,
+                    // with the pipeline's own helpers and f32 op order
+                    let mut tg: Vec<Tensor> = grads
+                        .iter()
+                        .map(|t| {
+                            let mut t = t.clone();
+                            t.map_inplace(|v| v.clamp(-cv, cv));
+                            t
+                        })
+                        .collect();
+                    if let Some(s) = transform::clip_scale(
+                        transform::global_sq_norm(&tg), cn)
+                    {
+                        for t in tg.iter_mut() {
+                            t.map_inplace(|v| v * s);
+                        }
+                    }
+                    let f = 1.0 - lr * 1.0 * wd;
+                    for t in pb.iter_mut() {
+                        t.map_inplace(|v| v * f);
+                    }
+                    bare.step(&mut pb, &tg, lr);
+                    for (leaf, (a, b)) in pa.iter().zip(&pb).enumerate() {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            if x.to_bits() != y.to_bits() {
+                                return Err(format!(
+                                    "{name} step {step} leaf {leaf}: \
+                                     {x} != {y}"));
                             }
                         }
                     }
