@@ -1,8 +1,8 @@
 # Top-level targets. `make tier1` mirrors the repository's tier-1 gate
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
-.PHONY: tier1 build test lint fmt clippy bench-optim bench-quick benches \
-	docs artifacts
+.PHONY: tier1 build test lint fmt clippy bench-optim bench-quick \
+	bench-comms bench-comms-quick benches docs artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -36,6 +36,17 @@ bench-optim:
 # executes. Mirrors the ci.yml step exactly.
 bench-quick:
 	BENCH_QUICK=1 cargo bench --bench bench_optim
+
+# Compressed-collectives numbers: ring all-reduce over ranks x wire
+# dtype x comm threads (EXPERIMENTS.md §Compressed-collectives).
+bench-comms:
+	cargo bench --bench bench_collectives
+
+# CI-sized bench_collectives run: small gradient set, short budgets, but
+# every bitwise gate (f32 == legacy collectives, serial == threaded,
+# rank agreement) executes. Mirrors the ci.yml step exactly.
+bench-comms-quick:
+	BENCH_QUICK=1 cargo bench --bench bench_collectives
 
 # Compile every harness=false bench target without running it (the CI
 # build-test job runs this too, so the benches cannot silently rot).

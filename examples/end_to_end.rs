@@ -59,11 +59,13 @@ fn main() -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     let mut log = RunLogger::new(Some("out/end_to_end_loss.csv"),
-                                 "step,loss,loss_ema,lr,wall_ms", false)?;
+                                 "step,loss,loss_ema,lr,wall_ms,comm_ms",
+                                 false)?;
     for s in &hist.steps {
         log.row(&[s.step.to_string(), format!("{:.6}", s.loss),
                   format!("{:.6}", s.loss_ema), format!("{:.6e}", s.lr),
-                  format!("{:.2}", s.wall_ms)])?;
+                  format!("{:.2}", s.wall_ms),
+                  format!("{:.4}", s.comm_ms)])?;
     }
     log.flush()?;
 

@@ -1,0 +1,193 @@
+//! E-comm — the compressed-collectives bench (EXPERIMENTS.md
+//! §Compressed-collectives): ring all-reduce throughput and simulated
+//! pod cost over ranks × wire dtype × comm threads, with the
+//! subsystem's bitwise determinism gates executed before any timing.
+//!
+//! Gates (always run, including under `BENCH_QUICK=1` in CI):
+//!   * the f32 engine reproduces the legacy `collectives::allreduce_mean`
+//!     reference bit for bit (so the new path cannot silently change
+//!     pre-comms trajectories),
+//!   * serial == 2 == 4 comm threads, bitwise, at every wire dtype —
+//!     outputs AND carried error-feedback residuals,
+//!   * all ranks leave an exchange with identical buffers (pod sync).
+//!
+//! Run: `cargo bench --bench bench_collectives` (writes
+//! out/perf_collectives.csv); `BENCH_QUICK=1` or `make bench-comms-quick`
+//! for the CI-sized variant.
+
+use sm3::bench_util::{bench, speedup, CsvWriter, Stats};
+use sm3::collectives;
+use sm3::comms::{CommEngine, TimingModel};
+use sm3::memory::comm_wire_bytes;
+use sm3::optim::{ParamSpec, StateDtype};
+use sm3::rng::Rng;
+use sm3::tensor::Tensor;
+use std::time::Duration;
+
+/// A transformer-block-shaped gradient set (~2.1M elements; quick ~37k).
+fn block_specs(quick: bool) -> Vec<ParamSpec> {
+    let (v, d, ff) = if quick { (256, 64, 256) } else { (2048, 256, 1024) };
+    vec![
+        ParamSpec::new("embed", &[v, d]),
+        ParamSpec::new("wq", &[d, d]),
+        ParamSpec::new("wk", &[d, d]),
+        ParamSpec::new("wv", &[d, d]),
+        ParamSpec::new("wo", &[d, d]),
+        ParamSpec::new("ffn_w1", &[d, ff]),
+        ParamSpec::new("ffn_w2", &[ff, d]),
+        ParamSpec::new("b1", &[ff]),
+        ParamSpec::new("b2", &[d]),
+    ]
+}
+
+fn rank_grads(specs: &[ParamSpec], ranks: usize, seed: u64)
+              -> Vec<Vec<Tensor>> {
+    let mut rng = Rng::new(seed);
+    (0..ranks)
+        .map(|_| {
+            specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_bitwise(a: &[Vec<Tensor>], b: &[Vec<Tensor>], what: &str) {
+    for (ra, rb) in a.iter().zip(b) {
+        for (ta, tb) in ra.iter().zip(rb) {
+            for (x, y) in ta.data().iter().zip(tb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} != {y}");
+            }
+        }
+    }
+}
+
+/// The bitwise determinism gates — the point of running this bench in
+/// CI quick mode at all.
+fn run_gates(specs: &[ParamSpec]) -> anyhow::Result<()> {
+    println!("=== determinism gates (bitwise) ===");
+    // 1. f32 path == legacy collectives reference
+    for ranks in [2usize, 4] {
+        let mut legacy = rank_grads(specs, ranks, 42);
+        let mut new = legacy.clone();
+        collectives::allreduce_mean(&mut legacy)?;
+        CommEngine::new(specs, ranks, StateDtype::F32, 64, 1)?
+            .allreduce_mean(&mut new)?;
+        assert_bitwise(&legacy, &new, &format!("f32 vs legacy x{ranks}"));
+    }
+    println!("  f32 == legacy collectives          OK (x2, x4)");
+    // 2. serial == 2 == 4 comm threads at every dtype, incl residuals
+    for dtype in StateDtype::ALL {
+        let ranks = 4;
+        let base = rank_grads(specs, ranks, 7);
+        let mut ref_eng = CommEngine::new(specs, ranks, dtype, 64, 1)?;
+        let mut ref_out = base.clone();
+        ref_eng.allreduce_mean(&mut ref_out)?;
+        for threads in [2usize, 4] {
+            let mut eng = CommEngine::new(specs, ranks, dtype, 64, threads)?;
+            let mut out = base.clone();
+            eng.allreduce_mean(&mut out)?;
+            assert_bitwise(&ref_out, &out,
+                           &format!("{} x{threads}", dtype.name()));
+            for ((_, a), (_, b)) in ref_eng.state().iter().zip(&eng.state())
+            {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{} x{threads} residual", dtype.name());
+                }
+            }
+        }
+        // 3. all ranks agree after the exchange
+        for r in 1..ranks {
+            for (a, b) in ref_out[0].iter().zip(&ref_out[r]) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{} rank {r} diverged", dtype.name());
+                }
+            }
+        }
+    }
+    println!("  serial == 2 == 4 threads           OK (f32, bf16, q8)");
+    println!("  rank agreement after exchange      OK");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
+        .unwrap_or(false);
+    let budget = if quick {
+        Duration::from_millis(25)
+    } else {
+        Duration::from_millis(300)
+    };
+    let min_iters = if quick { 2 } else { 5 };
+    if quick {
+        println!("BENCH_QUICK=1 — small gradient set, short budgets; \
+                  bitwise gates run in full");
+    }
+    let specs = block_specs(quick);
+    let d: usize = specs.iter().map(ParamSpec::numel).sum();
+
+    run_gates(&specs)?;
+
+    println!("\n=== ring all-reduce ({:.2}M floats) — ranks × dtype × \
+              threads ===", d as f64 / 1e6);
+    let timing = TimingModel::default();
+    let mut csv = CsvWriter::create(
+        "out/perf_collectives.csv",
+        "ranks,dtype,threads,elements,median_ns,wire_bytes,sim_ms,\
+         speedup_vs_serial")?;
+    let rank_list: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+    for &ranks in rank_list {
+        for dtype in StateDtype::ALL {
+            let mut serial_stats: Option<Stats> = None;
+            for threads in [1usize, 2, 4] {
+                let mut eng =
+                    CommEngine::new(&specs, ranks, dtype, 16 * 1024,
+                                    threads)?;
+                // reuse one gradient set across iterations: the exchange
+                // rewrites it with means, which keeps the work identical
+                // without per-iteration clone noise
+                let mut g = rank_grads(&specs, ranks, 3);
+                let stats = bench(
+                    &format!("x{ranks} {} t{threads}", dtype.name()),
+                    budget, min_iters,
+                    || {
+                        eng.allreduce_mean(&mut g).unwrap();
+                    });
+                let wire = eng.wire_bytes_per_exchange();
+                // hard assert: benches run in release, where a
+                // debug_assert would make this cross-check dead code
+                assert_eq!(wire, comm_wire_bytes(&specs, ranks, dtype),
+                           "live schedule vs static mirror drifted");
+                let sim_ms = timing.exchange_seconds(wire, ranks) * 1e3;
+                let vs_serial = serial_stats
+                    .as_ref()
+                    .map(|s| speedup(s, &stats))
+                    .unwrap_or(1.0);
+                println!("  {stats}  wire {:>8.2} MB  sim {:>7.4} ms  \
+                          {vs_serial:>5.2}x",
+                         wire as f64 / 1e6, sim_ms);
+                csv.row(&[ranks.to_string(), dtype.name().into(),
+                          threads.to_string(), d.to_string(),
+                          stats.per_iter_ns().to_string(),
+                          wire.to_string(), format!("{sim_ms:.4}"),
+                          format!("{vs_serial:.3}")])?;
+                if threads == 1 {
+                    serial_stats = Some(stats);
+                }
+            }
+        }
+    }
+
+    // wire-compression headline (also asserted in bench_memory on the
+    // real Transformer-Big inventory)
+    let f = comm_wire_bytes(&specs, 4, StateDtype::F32);
+    let q = comm_wire_bytes(&specs, 4, StateDtype::Q8);
+    println!("\n  q8 wire reduction vs f32: {:.2}x (x4 ranks)",
+             f as f64 / q as f64);
+    assert!(f as f64 / q as f64 >= 3.5);
+    println!("\nCSV series: out/perf_collectives.csv");
+    Ok(())
+}

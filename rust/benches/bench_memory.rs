@@ -7,7 +7,9 @@
 //! Run: `cargo bench --bench bench_memory` (writes out/table1_memory.csv,
 //! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv)
 
-use sm3::memory::{inventory, opt_state_bytes, opt_state_floats, MemoryModel,
+use sm3::comms::TimingModel;
+use sm3::memory::{comm_buffer_bytes, comm_wire_bytes, inventory,
+                  opt_state_bytes, opt_state_floats, MemoryModel,
                   SlotLayout, GIB};
 use sm3::metrics::RunLogger;
 use sm3::optim::{ParamSpec, StateDtype};
@@ -139,6 +141,49 @@ fn main() -> anyhow::Result<()> {
         assert!(q > f, "{opt}: q8 frontier {q} must exceed f32 {f}");
     }
 
+    // ---- compressed-collectives wire accounting (ISSUE 5 tentpole) ------
+    // Bytes one ring all-reduce moves over pod links per optimizer step,
+    // by wire dtype, plus the persistent comm buffers (staging + error-
+    // feedback residuals) and the TimingModel's simulated exchange cost.
+    println!("\n=== gradient-exchange wire bytes (comms, ring all-reduce) \
+              ===");
+    println!("  {:<16} {:>5} {:<6} {:>12} {:>12} {:>9} {:>9}",
+             "model", "ranks", "dtype", "wire MB/step", "buffers MB",
+             "sim ms", "vs f32");
+    let timing = TimingModel::default();
+    let mut clog = RunLogger::new(
+        Some("out/comm_wire.csv"),
+        "model,ranks,dtype,wire_bytes_per_step,buffer_bytes,sim_ms", false)?;
+    for (model, m) in [("transformer_big", &big), ("bert_large", &bert)] {
+        for ranks in [4usize, 16] {
+            let f32_wire =
+                comm_wire_bytes(&m.specs, ranks, StateDtype::F32);
+            for dtype in StateDtype::ALL {
+                let wire = comm_wire_bytes(&m.specs, ranks, dtype);
+                let bufs = comm_buffer_bytes(&m.specs, ranks, dtype);
+                let ms = timing.exchange_seconds(wire, ranks) * 1e3;
+                println!("  {model:<16} {ranks:>5} {:<6} {:>12.1} \
+                          {:>12.1} {:>9.3} {:>8.2}x",
+                         dtype.name(), wire as f64 / 1e6,
+                         bufs as f64 / 1e6, ms,
+                         f32_wire as f64 / wire as f64);
+                clog.row(&[model.into(), ranks.to_string(),
+                           dtype.name().into(), wire.to_string(),
+                           bufs.to_string(), format!("{ms:.4}")])?;
+            }
+        }
+    }
+    clog.flush()?;
+    // acceptance: q8 wire payloads cut all-reduce bytes ≥ 3.5× (≈ 3.7×)
+    // below f32 on Transformer-Big, at pod-scale rank counts
+    for ranks in [4usize, 16] {
+        let f = comm_wire_bytes(&big.specs, ranks, StateDtype::F32);
+        let q = comm_wire_bytes(&big.specs, ranks, StateDtype::Q8);
+        let red = f as f64 / q as f64;
+        println!("  transformer_big x{ranks} q8 wire reduction: {red:.2}x");
+        assert!(red >= 3.5, "x{ranks}: q8 wire reduction {red:.2}x");
+    }
+
     // ---- step-path transient buffers (ISSUE 3 tentpole accounting) ------
     // The PR 2 store dequantized EVERY slot of a leaf into full-length
     // f32 buffers each step: the transient working set scaled with the
@@ -223,6 +268,7 @@ fn main() -> anyhow::Result<()> {
                  100.0 * (sm3 - d) as f64 / d as f64);
     }
     println!("\nCSV series: out/table1_memory.csv out/table2_memory.csv \
-              out/max_batch.csv out/qstate_memory.csv out/step_buffers.csv");
+              out/max_batch.csv out/qstate_memory.csv out/comm_wire.csv \
+              out/step_buffers.csv");
     Ok(())
 }

@@ -602,7 +602,7 @@ fn main() -> anyhow::Result<()> {
         let stats = bench(&format!("allreduce x{workers}"), budget,
                           if quick { 2 } else { 5 }, || {
             let mut ranks = base.clone();
-            ring_allreduce(&mut ranks);
+            ring_allreduce(&mut ranks).unwrap();
             std::hint::black_box(&ranks);
         });
         println!("  {stats}");

@@ -1,28 +1,46 @@
-//! Simulated collectives for the data-parallel coordinator.
+//! Reference collectives: the serial, clone-per-leaf ring all-reduce.
 //!
-//! The paper trains data-parallel on 4×4 / 8×8 TPU-v2 pods; gradients are
-//! all-reduced across cores every step. This environment has one CPU, so
-//! the coordinator runs workers as threads and reduces their gradients
-//! through this module, which implements a *real chunked ring all-reduce*
-//! (reduce-scatter + all-gather over N ranks, the classic 2(N−1)/N-bytes
-//! schedule) rather than a naive sum — both so the arithmetic matches a
-//! pod run (same reduction order ⇒ same floating-point result every run)
-//! and so the attached [`TimingModel`] can report what each step *would*
-//! cost on TPU-pod interconnect for the wall-time experiments.
+//! This module is the *oracle*, not the production path. The trainer's
+//! gradient exchange goes through [`crate::comms`] — persistent flat
+//! buffers, compressed wire payloads, error feedback, thread-parallel
+//! execution — whose f32 path is property-tested bitwise against the
+//! functions here (the two share the exact chunk partition and
+//! accumulation order, so they cannot drift apart silently).
+//!
+//! [`ring_allreduce`] implements the classic chunked ring schedule
+//! (reduce-scatter + all-gather over N ranks, the 2(N−1)/N-bytes plan)
+//! rather than a naive sum, both so the arithmetic matches a pod run
+//! (fixed reduction order ⇒ same floating-point result every run) and
+//! so tests have an independently-written reference for the `comms`
+//! ring. The [`TimingModel`] that estimates pod interconnect cost lives
+//! in `comms` now (where it is load-bearing: it feeds the trainer's
+//! `comm_ms` column) and is re-exported here for compatibility.
+//!
+//! Mismatched rank geometries are **errors**, not panics — a worker
+//! handing over a short gradient list surfaces as a step failure the
+//! trainer propagates, like every other `anyhow::Result` on that path.
 
 use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+pub use crate::comms::TimingModel;
 
 /// Ring all-reduce (sum) over per-rank flat gradient buffers, in place.
-/// All buffers must be the same length. After the call every rank holds
-/// the elementwise sum.
-pub fn ring_allreduce(ranks: &mut [Vec<f32>]) {
+/// All buffers must be the same length; after the call every rank holds
+/// the elementwise sum. Errors on an empty rank list or mismatched
+/// buffer lengths.
+pub fn ring_allreduce(ranks: &mut [Vec<f32>]) -> Result<()> {
     let n = ranks.len();
-    assert!(n > 0);
+    ensure!(n > 0, "ring_allreduce needs at least one rank");
     if n == 1 {
-        return;
+        return Ok(());
     }
     let len = ranks[0].len();
-    assert!(ranks.iter().all(|r| r.len() == len));
+    for (r, buf) in ranks.iter().enumerate() {
+        ensure!(buf.len() == len,
+                "rank {r} buffer has {} elements, rank 0 has {len}",
+                buf.len());
+    }
     // chunk boundaries (chunk c: [starts[c], starts[c+1]))
     let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
     // reduce-scatter: step s, rank r sends chunk (r - s) to rank r+1
@@ -62,22 +80,38 @@ pub fn ring_allreduce(ranks: &mut [Vec<f32>]) {
             b[lo..hi].copy_from_slice(&a[lo..hi]);
         }
     }
+    Ok(())
 }
 
 /// All-reduce tensors leaf-by-leaf and average (data-parallel gradient
-/// combine). Every rank's tensor list is updated to the mean.
-pub fn allreduce_mean(ranks: &mut [Vec<Tensor>]) {
+/// combine). Every rank's tensor list is updated to the mean. Errors on
+/// mismatched leaf counts or leaf lengths across ranks; all geometry is
+/// validated **before** any leaf is reduced, so an error leaves every
+/// buffer untouched (the same contract as `ring_allreduce`).
+pub fn allreduce_mean(ranks: &mut [Vec<Tensor>]) -> Result<()> {
     let n = ranks.len();
+    ensure!(n > 0, "allreduce_mean needs at least one rank");
     if n == 1 {
-        return;
+        return Ok(());
     }
     let leaves = ranks[0].len();
+    for (r, list) in ranks.iter().enumerate() {
+        ensure!(list.len() == leaves,
+                "rank {r} has {} gradient leaves, rank 0 has {leaves}",
+                list.len());
+        for (leaf, t) in list.iter().enumerate() {
+            ensure!(t.len() == ranks[0][leaf].len(),
+                    "rank {r} leaf {leaf} has {} elements, rank 0 has {}",
+                    t.len(), ranks[0][leaf].len());
+        }
+    }
     for leaf in 0..leaves {
         let mut flat: Vec<Vec<f32>> = ranks
             .iter()
             .map(|r| r[leaf].data().to_vec())
             .collect();
-        ring_allreduce(&mut flat);
+        ring_allreduce(&mut flat)
+            .map_err(|e| e.context(format!("leaf {leaf}")))?;
         let inv = 1.0 / n as f32;
         for (r, f) in ranks.iter_mut().zip(flat) {
             let dst = r[leaf].data_mut();
@@ -86,35 +120,7 @@ pub fn allreduce_mean(ranks: &mut [Vec<Tensor>]) {
             }
         }
     }
-}
-
-/// Interconnect timing model (TPU-v2 pod defaults).
-#[derive(Debug, Clone)]
-pub struct TimingModel {
-    /// per-link bandwidth, bytes/s
-    pub link_bandwidth: f64,
-    /// per-hop latency, seconds
-    pub hop_latency: f64,
-}
-
-impl Default for TimingModel {
-    fn default() -> Self {
-        // TPU-v2 ICI: ~60 GB/s per link, ~1 µs hop latency
-        Self { link_bandwidth: 60e9, hop_latency: 1e-6 }
-    }
-}
-
-impl TimingModel {
-    /// Estimated wall time of a ring all-reduce of `bytes` over `n` ranks:
-    /// 2(n−1) steps, each moving `bytes/n` per link.
-    pub fn allreduce_seconds(&self, bytes: usize, n: usize) -> f64 {
-        if n <= 1 {
-            return 0.0;
-        }
-        let steps = 2 * (n - 1);
-        steps as f64
-            * (self.hop_latency + bytes as f64 / n as f64 / self.link_bandwidth)
-    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -134,7 +140,7 @@ mod tests {
                     .map(|k| data.iter().map(|r| r[k]).sum())
                     .collect();
                 let mut ranks = data.clone();
-                ring_allreduce(&mut ranks);
+                ring_allreduce(&mut ranks).unwrap();
                 for r in &ranks {
                     for (a, e) in r.iter().zip(&expect) {
                         assert!((a - e).abs() < 1e-4,
@@ -154,8 +160,8 @@ mod tests {
             .collect();
         let mut a = data.clone();
         let mut b = data;
-        ring_allreduce(&mut a);
-        ring_allreduce(&mut b);
+        ring_allreduce(&mut a).unwrap();
+        ring_allreduce(&mut b).unwrap();
         assert_eq!(a, b);
     }
 
@@ -163,7 +169,7 @@ mod tests {
     fn mean_combine() {
         let t = |v: f32| Tensor::full(&[3], v);
         let mut ranks = vec![vec![t(1.0)], vec![t(3.0)]];
-        allreduce_mean(&mut ranks);
+        allreduce_mean(&mut ranks).unwrap();
         for r in &ranks {
             assert_eq!(r[0], t(2.0));
         }
@@ -172,20 +178,39 @@ mod tests {
     #[test]
     fn single_rank_is_noop() {
         let mut ranks = vec![vec![1.0f32, 2.0]];
-        ring_allreduce(&mut ranks);
+        ring_allreduce(&mut ranks).unwrap();
         assert_eq!(ranks[0], vec![1.0, 2.0]);
     }
 
+    /// Regression (ISSUE 5 satellite): mismatched geometries are errors
+    /// with a message naming the offender — not assert panics.
     #[test]
-    fn timing_scales_with_ranks_and_bytes() {
-        let t = TimingModel::default();
-        let small = t.allreduce_seconds(1 << 20, 4);
-        let big = t.allreduce_seconds(1 << 24, 4);
-        assert!(big > small);
-        // bandwidth-bound regime: time approaches 2·bytes/bw independent
-        // of n for large n
-        let t16 = t.allreduce_seconds(1 << 30, 16);
-        let t64 = t.allreduce_seconds(1 << 30, 64);
-        assert!((t16 / t64 - 1.0).abs() < 0.1, "{t16} vs {t64}");
+    fn mismatched_rank_geometry_is_an_error() {
+        let mut empty: Vec<Vec<f32>> = Vec::new();
+        assert!(ring_allreduce(&mut empty).is_err());
+        let mut ranks = vec![vec![1.0f32, 2.0], vec![3.0f32]];
+        let err = ring_allreduce(&mut ranks).unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err}");
+        // the original buffers must be untouched on error
+        assert_eq!(ranks[0], vec![1.0, 2.0]);
+
+        let mut empty: Vec<Vec<Tensor>> = Vec::new();
+        assert!(allreduce_mean(&mut empty).is_err());
+        let mut ranks = vec![vec![Tensor::full(&[2], 1.0)],
+                             vec![Tensor::full(&[2], 1.0),
+                                  Tensor::full(&[2], 1.0)]];
+        let err = allreduce_mean(&mut ranks).unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err}");
+        // mismatched leaf *lengths* inside matching leaf counts —
+        // detected up front, so EVERY leaf (including well-formed ones
+        // ordered before the offender) is left untouched
+        let mut ranks = vec![vec![Tensor::full(&[2], 1.0),
+                                  Tensor::full(&[2], 1.0)],
+                             vec![Tensor::full(&[2], 3.0),
+                                  Tensor::full(&[3], 3.0)]];
+        let err = allreduce_mean(&mut ranks).unwrap_err();
+        assert!(format!("{err:#}").contains("leaf 1"), "{err:#}");
+        assert_eq!(ranks[0][0], Tensor::full(&[2], 1.0));
+        assert_eq!(ranks[1][0], Tensor::full(&[2], 3.0));
     }
 }

@@ -1,0 +1,659 @@
+//! [`CommEngine`] — buffer lifecycle, error feedback, and the exchange
+//! entry point the trainer drives.
+//!
+//! One engine is built per training run from the model's parameter
+//! inventory. It owns, per rank: a persistent flat f32 gradient buffer
+//! (leaves packed contiguously in spec order) and — for compressed wire
+//! dtypes — a persistent flat **error-feedback residual**. Every
+//! exchange runs:
+//!
+//! 1. **pack** — each rank's leaf tensors are copied into its flat
+//!    buffer (no allocation; the buffers are sized at construction).
+//! 2. **error feedback** (compressed dtypes only) — per rank,
+//!    `u = grad + residual` is wire round-tripped to `v = Q(u)`; the
+//!    buffer continues with `v` and the residual becomes `u − v`
+//!    exactly (f32 subtraction). What one step's quantizer drops, the
+//!    next step's send re-injects — the MicroAdam-style error-feedback
+//!    contract that keeps compressed training convergent. The q8 block
+//!    grid here is the global 64-aligned grid of the flat buffer, so
+//!    the tiling (`comm_chunk`) and the thread count never shift a
+//!    block boundary.
+//! 3. **ring exchange** — the precomputed [`ring::Schedule`], serial or
+//!    across `comm_threads` workers (bitwise identical either way).
+//! 4. **unpack** — each rank's buffer is written back to its leaf
+//!    tensors times `1/ranks` (the data-parallel mean), exactly the
+//!    historical `collectives::allreduce_mean` arithmetic.
+//!
+//! At `comm_dtype = f32` steps 2 is skipped entirely and the wire is
+//! the identity, so the whole path reproduces pre-`comms` trajectories
+//! bit for bit. Residuals are exposed through [`CommEngine::state`] /
+//! [`CommEngine::load_state`] and ride the `SM3CKPT2` checkpoint as
+//! f32-tagged tensors (they must stay exact for resume to be bitwise).
+
+use super::ring::{self, Schedule, WireScratch};
+use super::{check_comm_chunk, TimingModel};
+use crate::optim::{ParamSpec, StateDtype};
+use crate::tensor::Tensor;
+use anyhow::{bail, ensure, Result};
+
+/// What one exchange cost: exact wire bytes moved and the simulated pod
+/// interconnect time from the engine's [`TimingModel`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommStats {
+    /// bytes that crossed links (wire-encoded payloads, both phases)
+    pub wire_bytes: usize,
+    /// simulated exchange wall time (0.0 for a single rank)
+    pub sim_seconds: f64,
+}
+
+/// The communication engine: persistent buffers + residuals + schedule.
+pub struct CommEngine {
+    /// per-leaf flat lengths, in pack order
+    lens: Vec<usize>,
+    /// total flat elements per rank
+    total: usize,
+    ranks: usize,
+    dtype: StateDtype,
+    chunk: usize,
+    threads: usize,
+    /// per-rank flat gradient staging buffers (empty when ranks == 1)
+    bufs: Vec<Vec<f32>>,
+    /// per-rank error-feedback residuals (empty at f32 or ranks == 1)
+    residual: Vec<Vec<f32>>,
+    /// per-thread wire scratch
+    scratch: Vec<WireScratch>,
+    schedule: Schedule,
+    timing: TimingModel,
+}
+
+impl CommEngine {
+    /// Build an engine for `ranks` data-parallel workers exchanging
+    /// gradients over the given parameter inventory.
+    pub fn new(specs: &[ParamSpec], ranks: usize, dtype: StateDtype,
+               chunk: usize, threads: usize) -> Result<Self> {
+        let lens: Vec<usize> = specs.iter().map(ParamSpec::numel).collect();
+        Self::with_lens(lens, ranks, dtype, chunk, threads)
+    }
+
+    /// Core constructor over raw per-leaf flat lengths.
+    pub fn with_lens(lens: Vec<usize>, ranks: usize, dtype: StateDtype,
+                     chunk: usize, threads: usize) -> Result<Self> {
+        ensure!(ranks >= 1, "comm engine needs at least one rank");
+        ensure!(threads >= 1, "comm_threads must be >= 1 (1 = serial)");
+        check_comm_chunk(chunk)?;
+        let total: usize = lens.iter().sum();
+        let (bufs, residual, scratch) = if ranks > 1 {
+            (
+                (0..ranks).map(|_| vec![0.0f32; total]).collect(),
+                if dtype != StateDtype::F32 {
+                    (0..ranks).map(|_| vec![0.0f32; total]).collect()
+                } else {
+                    Vec::new()
+                },
+                (0..threads).map(|_| WireScratch::new(chunk)).collect(),
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        let schedule = Schedule::build(&lens, ranks, dtype);
+        Ok(Self {
+            lens,
+            total,
+            ranks,
+            dtype,
+            chunk,
+            threads,
+            bufs,
+            residual,
+            scratch,
+            schedule,
+            timing: TimingModel::default(),
+        })
+    }
+
+    /// Override the interconnect model (defaults to the TPU-v2 pod).
+    pub fn set_timing(&mut self, timing: TimingModel) {
+        self.timing = timing;
+    }
+
+    /// Configured rank count.
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Wire dtype of every link payload.
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
+
+    /// Exact bytes crossing links in one full exchange (0 for one rank).
+    /// `crate::memory::comm_wire_bytes` is the static mirror.
+    pub fn wire_bytes_per_exchange(&self) -> usize {
+        self.schedule.wire_bytes
+    }
+
+    /// Persistent per-run comm buffer bytes: staging + residuals
+    /// (excludes the Θ(comm_chunk) per-thread scratch).
+    /// `crate::memory::comm_buffer_bytes` is the static mirror.
+    pub fn buffer_bytes(&self) -> usize {
+        (self.bufs.len() + self.residual.len()) * self.total * 4
+    }
+
+    /// Error-feedback residual scalars carried across steps.
+    pub fn residual_floats(&self) -> usize {
+        self.residual.len() * self.total
+    }
+
+    /// All-reduce every rank's gradient leaves to their data-parallel
+    /// mean, in place, through the compressed ring. Validates the rank
+    /// and leaf geometry (mismatches are errors, not panics — the
+    /// trainer propagates them like every other step failure).
+    pub fn allreduce_mean(&mut self, ranks: &mut [Vec<Tensor>])
+                          -> Result<CommStats> {
+        ensure!(ranks.len() == self.ranks,
+                "comm engine built for {} ranks, got {}",
+                self.ranks, ranks.len());
+        for (r, leaves) in ranks.iter().enumerate() {
+            ensure!(leaves.len() == self.lens.len(),
+                    "rank {r}: {} gradient leaves, engine expects {}",
+                    leaves.len(), self.lens.len());
+            for (i, t) in leaves.iter().enumerate() {
+                ensure!(t.len() == self.lens[i],
+                        "rank {r} leaf {i}: {} elements, engine expects {}",
+                        t.len(), self.lens[i]);
+            }
+        }
+        if self.ranks == 1 {
+            return Ok(CommStats::default());
+        }
+        self.pack(ranks);
+        if self.dtype != StateDtype::F32 {
+            self.apply_error_feedback();
+        }
+        for si in 0..self.schedule.steps.len() {
+            // split-borrow the schedule away from the buffers
+            let (phase, regions) = {
+                let (p, r) = &self.schedule.steps[si];
+                (*p, r)
+            };
+            if self.threads <= 1 {
+                ring::run_step_serial(&mut self.bufs, phase, regions,
+                                      self.dtype, self.chunk,
+                                      &mut self.scratch[0]);
+            } else {
+                ring::run_step_threaded(&mut self.bufs, phase, regions,
+                                        self.dtype, self.chunk,
+                                        self.threads, &mut self.scratch);
+            }
+        }
+        self.unpack(ranks);
+        Ok(CommStats {
+            wire_bytes: self.schedule.wire_bytes,
+            sim_seconds: self
+                .timing
+                .exchange_seconds(self.schedule.wire_bytes, self.ranks),
+        })
+    }
+
+    /// Copy every rank's leaves into its flat staging buffer.
+    fn pack(&mut self, ranks: &[Vec<Tensor>]) {
+        for (buf, leaves) in self.bufs.iter_mut().zip(ranks) {
+            let mut off = 0;
+            for t in leaves {
+                buf[off..off + t.len()].copy_from_slice(t.data());
+                off += t.len();
+            }
+        }
+    }
+
+    /// Write the summed buffers back as the mean (`· 1/ranks` — the
+    /// historical `collectives::allreduce_mean` arithmetic, verbatim).
+    fn unpack(&self, ranks: &mut [Vec<Tensor>]) {
+        let inv = 1.0 / self.ranks as f32;
+        for (buf, leaves) in self.bufs.iter().zip(ranks.iter_mut()) {
+            let mut off = 0;
+            for t in leaves {
+                let dst = t.data_mut();
+                let n = dst.len();
+                for (d, &s) in dst.iter_mut().zip(&buf[off..off + n]) {
+                    *d = s * inv;
+                }
+                off += n;
+            }
+        }
+    }
+
+    /// Per rank: `u = grad + residual`, send `v = Q(u)`, carry
+    /// `u − v`. Tiled on the flat buffer's global `comm_chunk` grid
+    /// (64-aligned, so the q8 block grid is tiling- and
+    /// thread-invariant); rank tasks round-robin over threads.
+    fn apply_error_feedback(&mut self) {
+        let (dtype, chunk) = (self.dtype, self.chunk);
+        if self.threads <= 1 {
+            let sc = &mut self.scratch[0];
+            for (buf, res) in self.bufs.iter_mut().zip(&mut self.residual) {
+                error_feedback_rank(buf, res, dtype, chunk, sc);
+            }
+            return;
+        }
+        let threads = self.threads;
+        let mut buckets: Vec<Vec<(&mut Vec<f32>, &mut Vec<f32>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (r, (b, q)) in self
+            .bufs
+            .iter_mut()
+            .zip(self.residual.iter_mut())
+            .enumerate()
+        {
+            buckets[r % threads].push((b, q));
+        }
+        std::thread::scope(|scope| {
+            for (bucket, sc) in
+                buckets.into_iter().zip(self.scratch.iter_mut())
+            {
+                scope.spawn(move || {
+                    for (buf, res) in bucket {
+                        error_feedback_rank(buf, res, dtype, chunk, sc);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Error-feedback residual tensors for checkpointing, one flat
+    /// `[total]` tensor per rank (empty at f32 / single rank — the
+    /// checkpoint layout of an uncompressed run is unchanged). Tagged
+    /// f32 by the trainer: residuals must round-trip exactly for resume
+    /// to be bitwise.
+    pub fn state(&self) -> Vec<(usize, Tensor)> {
+        self.residual
+            .iter()
+            .enumerate()
+            .map(|(r, q)| (r, Tensor::from_vec(&[q.len()], q.clone())))
+            .collect()
+    }
+
+    /// Restore residuals saved by [`CommEngine::state`] (same order).
+    pub fn load_state(&mut self, state: Vec<Tensor>) -> Result<()> {
+        ensure!(state.len() == self.residual.len(),
+                "comm residual state has {} tensors, engine expects {} \
+                 (ranks × compressed dtype)",
+                state.len(), self.residual.len());
+        for (r, (res, t)) in
+            self.residual.iter_mut().zip(&state).enumerate()
+        {
+            if t.len() != res.len() {
+                bail!("comm residual {r}: {} elements, engine expects {}",
+                      t.len(), res.len());
+            }
+            res.copy_from_slice(t.data());
+        }
+        Ok(())
+    }
+}
+
+/// One rank's error-feedback pass (see [`CommEngine`] docs).
+fn error_feedback_rank(buf: &mut [f32], res: &mut [f32], dtype: StateDtype,
+                       chunk: usize, scratch: &mut WireScratch) {
+    let n = buf.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let len = hi - lo;
+        for (s, (&b, &q)) in scratch.stage[..len]
+            .iter_mut()
+            .zip(buf[lo..hi].iter().zip(&res[lo..hi]))
+        {
+            *s = b + q;
+        }
+        ring::wire_roundtrip_staged(scratch, len, dtype);
+        for k in 0..len {
+            let v = scratch.decode[k];
+            res[lo + k] = scratch.stage[k] - v;
+            buf[lo + k] = v;
+        }
+        lo = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives;
+    use crate::rng::Rng;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("embed", &[30, 7]),
+            ParamSpec::new("w", &[11, 5]),
+            ParamSpec::new("b", &[70]),
+        ]
+    }
+
+    fn grads(specs: &[ParamSpec], ranks: usize, seed: u64)
+             -> Vec<Vec<Tensor>> {
+        let mut rng = Rng::new(seed);
+        (0..ranks)
+            .map(|_| {
+                specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn assert_bitwise(a: &[Vec<Tensor>], b: &[Vec<Tensor>], what: &str) {
+        for (ra, rb) in a.iter().zip(b) {
+            for (ta, tb) in ra.iter().zip(rb) {
+                for (x, y) in ta.data().iter().zip(tb.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} != {y}");
+                }
+            }
+        }
+    }
+
+    /// The acceptance line: the f32 engine reproduces the pre-`comms`
+    /// `collectives::allreduce_mean` bit for bit.
+    #[test]
+    fn f32_path_matches_legacy_collectives_bitwise() {
+        let specs = specs();
+        for ranks in [2usize, 3, 4, 7] {
+            let mut legacy = grads(&specs, ranks, 42);
+            let mut new = legacy.clone();
+            collectives::allreduce_mean(&mut legacy).unwrap();
+            let mut eng = CommEngine::new(&specs, ranks, StateDtype::F32,
+                                          64, 1).unwrap();
+            let stats = eng.allreduce_mean(&mut new).unwrap();
+            assert_bitwise(&legacy, &new, &format!("ranks {ranks}"));
+            assert!(stats.wire_bytes > 0 && stats.sim_seconds > 0.0);
+        }
+    }
+
+    /// serial == 2 == 4 comm threads, bitwise, at every wire dtype —
+    /// gradients AND carried residuals.
+    #[test]
+    fn thread_count_is_bitwise_invisible() {
+        let specs = specs();
+        for dtype in StateDtype::ALL {
+            for ranks in [2usize, 4] {
+                let base = grads(&specs, ranks, 7);
+                let mut ref_out = base.clone();
+                let mut ref_eng = CommEngine::new(&specs, ranks, dtype,
+                                                  64, 1).unwrap();
+                ref_eng.allreduce_mean(&mut ref_out).unwrap();
+                for threads in [2usize, 4] {
+                    let mut out = base.clone();
+                    let mut eng = CommEngine::new(&specs, ranks, dtype, 64,
+                                                  threads).unwrap();
+                    eng.allreduce_mean(&mut out).unwrap();
+                    assert_bitwise(&ref_out, &out,
+                                   &format!("{dtype:?} x{threads}"));
+                    for ((_, a), (_, b)) in
+                        ref_eng.state().iter().zip(&eng.state())
+                    {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            assert_eq!(x.to_bits(), y.to_bits(),
+                                       "{dtype:?} x{threads} residual");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `comm_chunk` is a tiling knob only — any multiple of 64 yields
+    /// identical bits.
+    #[test]
+    fn comm_chunk_is_bitwise_invisible() {
+        let specs = specs();
+        for dtype in StateDtype::ALL {
+            let base = grads(&specs, 3, 11);
+            let mut ref_out = base.clone();
+            CommEngine::new(&specs, 3, dtype, 64, 1)
+                .unwrap()
+                .allreduce_mean(&mut ref_out)
+                .unwrap();
+            for chunk in [128usize, 4096, super::super::DEFAULT_COMM_CHUNK] {
+                let mut out = base.clone();
+                CommEngine::new(&specs, 3, dtype, chunk, 2)
+                    .unwrap()
+                    .allreduce_mean(&mut out)
+                    .unwrap();
+                assert_bitwise(&ref_out, &out,
+                               &format!("{dtype:?} chunk {chunk}"));
+            }
+        }
+    }
+
+    /// Every rank leaves the exchange with identical values — the pod
+    /// sync contract (the finalize step makes this hold under
+    /// compression too).
+    #[test]
+    fn all_ranks_agree_after_exchange() {
+        let specs = specs();
+        for dtype in StateDtype::ALL {
+            for ranks in [2usize, 3, 5] {
+                let mut g = grads(&specs, ranks, 23);
+                CommEngine::new(&specs, ranks, dtype, 64, 1)
+                    .unwrap()
+                    .allreduce_mean(&mut g)
+                    .unwrap();
+                for r in 1..ranks {
+                    for (a, b) in g[0].iter().zip(&g[r]) {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            assert_eq!(x.to_bits(), y.to_bits(),
+                                       "{dtype:?} rank {r} diverged");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The error-feedback identity: after an exchange,
+    /// `residual == (grad + old_residual) − sent`, exactly — so no
+    /// gradient mass is ever silently dropped.
+    #[test]
+    fn residual_carries_exactly_what_the_wire_dropped() {
+        let specs = specs();
+        let ranks = 2;
+        let g0 = grads(&specs, ranks, 31);
+        let mut eng =
+            CommEngine::new(&specs, ranks, StateDtype::Q8, 64, 1).unwrap();
+        // two exchanges: the second starts from a non-zero residual
+        let mut g = g0.clone();
+        eng.allreduce_mean(&mut g).unwrap();
+        let res1: Vec<Tensor> =
+            eng.state().into_iter().map(|(_, t)| t).collect();
+        let g1 = grads(&specs, ranks, 32);
+        let mut g = g1.clone();
+        eng.allreduce_mean(&mut g).unwrap();
+        let res2: Vec<Tensor> =
+            eng.state().into_iter().map(|(_, t)| t).collect();
+        // replay rank 0's feedback by hand on the flat layout
+        let flat = |leaves: &[Tensor]| -> Vec<f32> {
+            leaves.iter().flat_map(|t| t.data().to_vec()).collect()
+        };
+        let (f1, r1) = (flat(&g1[0]), res1[0].data());
+        let mut sc = WireScratch::new(64);
+        let mut expect = vec![0.0f32; f1.len()];
+        let mut lo = 0;
+        while lo < f1.len() {
+            let hi = (lo + 64).min(f1.len());
+            for k in lo..hi {
+                sc.stage[k - lo] = f1[k] + r1[k];
+            }
+            ring::wire_roundtrip_staged(&mut sc, hi - lo, StateDtype::Q8);
+            for k in lo..hi {
+                expect[k] = sc.stage[k - lo] - sc.decode[k - lo];
+            }
+            lo = hi;
+        }
+        for (x, y) in expect.iter().zip(res2[0].data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+        }
+    }
+
+    /// Compressed means stay close to the exact mean (per-block q8 error
+    /// bound propagated through the ring), and f32 is exact.
+    #[test]
+    fn compressed_mean_is_close_to_exact() {
+        let specs = specs();
+        let ranks = 4;
+        let base = grads(&specs, ranks, 5);
+        let mut exact = base.clone();
+        collectives::allreduce_mean(&mut exact).unwrap();
+        for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+            let mut out = base.clone();
+            CommEngine::new(&specs, ranks, dtype, 64, 1)
+                .unwrap()
+                .allreduce_mean(&mut out)
+                .unwrap();
+            for (le, lo) in exact[0].iter().zip(&out[0]) {
+                for (&e, &o) in le.data().iter().zip(lo.data()) {
+                    // blocks see |v| up to ~4σ; a handful of per-hop
+                    // roundings each ≤ step/2 ≈ 4/254
+                    assert!((e - o).abs() < 0.2,
+                            "{dtype:?}: mean {o} vs exact {e}");
+                }
+            }
+        }
+    }
+
+    /// Residual state round-trips through save/restore and the restored
+    /// engine continues bitwise (the checkpoint-resume contract; the
+    /// SM3CKPT2 file round-trip lives in `crate::proptest`).
+    #[test]
+    fn residual_state_roundtrip_continues_bitwise() {
+        let specs = specs();
+        let ranks = 3;
+        let mut a =
+            CommEngine::new(&specs, ranks, StateDtype::Q8, 64, 1).unwrap();
+        let mut g = grads(&specs, ranks, 51);
+        a.allreduce_mean(&mut g).unwrap();
+        let saved: Vec<Tensor> =
+            a.state().into_iter().map(|(_, t)| t).collect();
+        let mut b =
+            CommEngine::new(&specs, ranks, StateDtype::Q8, 64, 1).unwrap();
+        b.load_state(saved).unwrap();
+        let g2 = grads(&specs, ranks, 52);
+        let mut ga = g2.clone();
+        let mut gb = g2;
+        a.allreduce_mean(&mut ga).unwrap();
+        b.allreduce_mean(&mut gb).unwrap();
+        assert_bitwise(&ga, &gb, "restored engine");
+        // f32 engines carry no residual state
+        let e = CommEngine::new(&specs, ranks, StateDtype::F32, 64, 1)
+            .unwrap();
+        assert!(e.state().is_empty());
+        assert_eq!(e.residual_floats(), 0);
+    }
+
+    /// Geometry mismatches are errors, not panics (ISSUE 5 satellite,
+    /// same contract as the reworked `collectives`).
+    #[test]
+    fn geometry_mismatches_are_errors() {
+        let specs = specs();
+        let mut eng =
+            CommEngine::new(&specs, 2, StateDtype::F32, 64, 1).unwrap();
+        // wrong rank count
+        let mut g = grads(&specs, 3, 1);
+        assert!(eng.allreduce_mean(&mut g).is_err());
+        // wrong leaf count
+        let mut g = grads(&specs, 2, 1);
+        g[1].pop();
+        assert!(eng.allreduce_mean(&mut g).is_err());
+        // wrong leaf length
+        let mut g = grads(&specs, 2, 1);
+        g[1][0] = Tensor::zeros(&[3]);
+        let err = eng.allreduce_mean(&mut g).unwrap_err();
+        assert!(err.to_string().contains("leaf 0"), "{err}");
+        // bad construction parameters
+        assert!(CommEngine::new(&specs, 0, StateDtype::F32, 64, 1).is_err());
+        assert!(CommEngine::new(&specs, 2, StateDtype::F32, 0, 1).is_err());
+        assert!(CommEngine::new(&specs, 2, StateDtype::F32, 100, 1).is_err());
+        assert!(CommEngine::new(&specs, 2, StateDtype::F32, 64, 0).is_err());
+        // residual load with the wrong shape
+        let mut eng =
+            CommEngine::new(&specs, 2, StateDtype::Q8, 64, 1).unwrap();
+        assert!(eng.load_state(vec![Tensor::zeros(&[1])]).is_err());
+        let total: usize = specs.iter().map(ParamSpec::numel).sum();
+        assert!(eng
+            .load_state(vec![Tensor::zeros(&[total]), Tensor::zeros(&[3])])
+            .is_err());
+        assert!(eng
+            .load_state(vec![Tensor::zeros(&[total]);2])
+            .is_ok());
+    }
+
+    /// Single rank: a no-op with zero cost (and no buffers held).
+    #[test]
+    fn single_rank_is_a_free_noop() {
+        let specs = specs();
+        let mut eng =
+            CommEngine::new(&specs, 1, StateDtype::Q8, 64, 4).unwrap();
+        let mut g = grads(&specs, 1, 3);
+        let before = g.clone();
+        let stats = eng.allreduce_mean(&mut g).unwrap();
+        assert_eq!(stats.wire_bytes, 0);
+        assert_eq!(stats.sim_seconds, 0.0);
+        assert_eq!(eng.buffer_bytes(), 0);
+        assert_bitwise(&before, &g, "single rank");
+    }
+
+    /// ISSUE 5 tentpole: the steady-state exchange performs zero
+    /// allocations on the serial path (buffers, residuals, scratch, and
+    /// the schedule are all construction-time) — asserted with the
+    /// counting allocator like the step kernels.
+    #[test]
+    fn steady_state_exchange_is_allocation_free() {
+        let specs = specs();
+        for dtype in StateDtype::ALL {
+            let mut eng =
+                CommEngine::new(&specs, 4, dtype, 64, 1).unwrap();
+            let mut g = grads(&specs, 4, 9);
+            for _ in 0..2 {
+                eng.allreduce_mean(&mut g).unwrap(); // warm
+            }
+            let before = crate::alloc_count::thread_allocs();
+            for _ in 0..3 {
+                eng.allreduce_mean(&mut g).unwrap();
+            }
+            let allocs = crate::alloc_count::thread_allocs() - before;
+            assert_eq!(allocs, 0,
+                       "{dtype:?}: {allocs} allocations in steady-state \
+                        exchanges");
+        }
+    }
+
+    /// Wire bytes shrink with the dtype; q8 clears the ≥ 3.5× line on
+    /// realistically-sized leaves (tiny chunk classes pay more per-block
+    /// scale overhead — the tiny-leaf sets above stay under it).
+    #[test]
+    fn wire_bytes_shrink_with_dtype() {
+        let specs = vec![
+            ParamSpec::new("embed", &[128, 64]),
+            ParamSpec::new("w", &[64, 64]),
+            ParamSpec::new("b", &[257]),
+        ];
+        let by = |d: StateDtype| {
+            CommEngine::new(&specs, 4, d, 64, 1)
+                .unwrap()
+                .wire_bytes_per_exchange()
+        };
+        let (f, b, q) = (by(StateDtype::F32), by(StateDtype::Bf16),
+                         by(StateDtype::Q8));
+        assert_eq!(f, 2 * b);
+        assert!(f as f64 / q as f64 >= 3.5, "q8 wire reduction {f}/{q}");
+        // buffer accounting: staging per rank, residuals only compressed
+        let total: usize = specs.iter().map(ParamSpec::numel).sum();
+        let eng = CommEngine::new(&specs, 4, StateDtype::F32, 64, 1)
+            .unwrap();
+        assert_eq!(eng.buffer_bytes(), 4 * total * 4);
+        let eng =
+            CommEngine::new(&specs, 4, StateDtype::Q8, 64, 1).unwrap();
+        assert_eq!(eng.buffer_bytes(), 2 * 4 * total * 4);
+        assert_eq!(eng.residual_floats(), 4 * total);
+    }
+}

@@ -1,0 +1,529 @@
+//! The chunked ring all-reduce schedule and its tiled executor.
+//!
+//! A ring all-reduce over `n` ranks splits every leaf into `n` chunk
+//! classes (class `c` of a leaf of `len` elements covers
+//! `[c·len/n, (c+1)·len/n)` — the exact partition the pre-`comms`
+//! `collectives::ring_allreduce` used) and runs two phases of `n−1`
+//! steps each:
+//!
+//! * **reduce-scatter** — at step `s`, rank `r` sends class `(r−s) mod n`
+//!   to rank `r+1`, which accumulates it (`dst += wire(src)`). After
+//!   `n−1` steps rank `(c−1) mod n` holds the complete sum of class `c`.
+//! * **all-gather** — at step `s`, rank `r` sends its completed class
+//!   `(r+1−s) mod n` onward; receivers overwrite
+//!   (`dst = wire(src)`).
+//!
+//! Between the phases, compressed schedules insert a **finalize** step:
+//! each owner replaces its completed class by the wire round-trip
+//! `decode(encode(·))` of itself. The all-gather then forwards a
+//! wire-exact value, and — because the qstate codecs are idempotent
+//! (`encode∘decode == id` on codec outputs) — every hop re-encodes to
+//! the *identical* bytes, so all `n` ranks finish with bitwise-equal
+//! buffers. (At f32 the wire is the identity and the step is elided.)
+//!
+//! # Determinism
+//!
+//! Within one step every region's reads and writes are disjoint (the
+//! written class and the forwarded class differ by one position around
+//! the ring), and all arithmetic is element-independent, so regions may
+//! be tiled into `comm_chunk`-element pieces and distributed over any
+//! number of worker threads without changing a single bit. Tile
+//! boundaries are multiples of the q8 wire block *relative to the
+//! region head*, so per-block codec purity makes the tiled encode
+//! byte-identical to a whole-region encode — the same argument as the
+//! step-kernel tile cursor (DESIGN.md §10), applied to the wire.
+
+use super::wire_bytes_for;
+use crate::optim::qstate::codec;
+use crate::optim::StateDtype;
+
+/// Which operation a schedule step applies to its regions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `dst += wire(src)` (reduce-scatter hop)
+    Reduce,
+    /// `buf = wire(buf)` on the owner (compressed schedules only)
+    Finalize,
+    /// `dst = wire(src)` (all-gather hop)
+    Gather,
+}
+
+/// One contiguous flat-buffer range moving between two ranks in a step.
+/// `src == dst` only in [`Phase::Finalize`].
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    /// sending rank
+    pub src: usize,
+    /// receiving rank
+    pub dst: usize,
+    /// absolute flat-buffer start (inclusive)
+    pub lo: usize,
+    /// absolute flat-buffer end (exclusive)
+    pub hi: usize,
+}
+
+/// The full, precomputed exchange plan for a fixed
+/// (leaf lengths, ranks, wire dtype) triple.
+pub struct Schedule {
+    /// steps in execution order; regions within a step are disjoint
+    pub steps: Vec<(Phase, Vec<Region>)>,
+    /// total bytes crossing links in one exchange (finalize is local)
+    pub wire_bytes: usize,
+}
+
+/// Chunk-class bounds of one leaf: class `c` covers
+/// `[bounds(c), bounds(c+1))` — the historical
+/// `collectives::ring_allreduce` partition, kept verbatim so the f32
+/// path reproduces pre-`comms` trajectories bitwise.
+#[inline]
+pub fn class_lo(len: usize, n: usize, c: usize) -> usize {
+    c * len / n
+}
+
+impl Schedule {
+    /// Build the plan. `lens` are the per-leaf flat lengths, laid out
+    /// contiguously in order in every rank's flat buffer.
+    pub fn build(lens: &[usize], ranks: usize, dtype: StateDtype) -> Self {
+        let n = ranks;
+        if n <= 1 {
+            return Self { steps: Vec::new(), wire_bytes: 0 };
+        }
+        // leaf base offsets in the flat buffer
+        let mut offsets = Vec::with_capacity(lens.len());
+        let mut total = 0usize;
+        for &l in lens {
+            offsets.push(total);
+            total += l;
+        }
+        let mut wire_bytes = 0usize;
+        let mut steps = Vec::with_capacity(2 * (n - 1) + 1);
+        let mut push_hops = |steps: &mut Vec<(Phase, Vec<Region>)>,
+                             phase: Phase,
+                             class_of: &dyn Fn(usize, usize) -> usize| {
+            for s in 0..n - 1 {
+                let mut regs = Vec::new();
+                for r in 0..n {
+                    let dst = (r + 1) % n;
+                    let c = class_of(r, s);
+                    for (leaf, &len) in lens.iter().enumerate() {
+                        let (lo, hi) =
+                            (class_lo(len, n, c), class_lo(len, n, c + 1));
+                        if hi > lo {
+                            wire_bytes += wire_bytes_for(hi - lo, dtype);
+                            regs.push(Region {
+                                src: r,
+                                dst,
+                                lo: offsets[leaf] + lo,
+                                hi: offsets[leaf] + hi,
+                            });
+                        }
+                    }
+                }
+                steps.push((phase, regs));
+            }
+        };
+        // reduce-scatter: step s, rank r forwards class (r − s) mod n
+        push_hops(&mut steps, Phase::Reduce, &|r, s| (r + n - s) % n);
+        if dtype != StateDtype::F32 {
+            // owners self-quantize their completed class (r + 1) mod n so
+            // the all-gather forwards a wire-exact value everywhere
+            let mut regs = Vec::new();
+            for r in 0..n {
+                let c = (r + 1) % n;
+                for (leaf, &len) in lens.iter().enumerate() {
+                    let (lo, hi) =
+                        (class_lo(len, n, c), class_lo(len, n, c + 1));
+                    if hi > lo {
+                        regs.push(Region {
+                            src: r,
+                            dst: r,
+                            lo: offsets[leaf] + lo,
+                            hi: offsets[leaf] + hi,
+                        });
+                    }
+                }
+            }
+            steps.push((Phase::Finalize, regs));
+        }
+        // all-gather: step s, rank r forwards class (r + 1 − s) mod n
+        push_hops(&mut steps, Phase::Gather, &|r, s| (r + 1 + n - s) % n);
+        Self { steps, wire_bytes }
+    }
+}
+
+/// Reusable per-thread wire scratch, sized for one `comm_chunk` tile.
+/// All buffers are allocated once at engine construction, so the
+/// steady-state exchange path performs zero allocations (serial path;
+/// thread *spawns* on the multi-thread path allocate, as in
+/// `optim::parallel`).
+pub struct WireScratch {
+    /// staging copy (finalize / error-feedback sum)
+    pub stage: Vec<f32>,
+    /// decoded wire values
+    pub decode: Vec<f32>,
+    /// q8 per-block scale fields
+    pub scales: Vec<f32>,
+    /// q8 codes
+    pub codes: Vec<u8>,
+}
+
+impl WireScratch {
+    /// Scratch for tiles of at most `chunk` elements.
+    pub fn new(chunk: usize) -> Self {
+        Self {
+            stage: vec![0.0; chunk],
+            decode: vec![0.0; chunk],
+            scales: vec![0.0; codec::q8_blocks(chunk)],
+            codes: vec![0; chunk],
+        }
+    }
+}
+
+/// Encode `vals` at `dtype` and decode the wire bytes back into
+/// `scratch.decode[..vals.len()]` — the value the receiving side of a
+/// link observes. `vals.len()` must not exceed the scratch tile size.
+/// (The f32 wire is the identity; callers skip the call entirely.)
+pub fn wire_roundtrip(vals: &[f32], dtype: StateDtype,
+                      scratch: &mut WireScratch) {
+    let n = vals.len();
+    debug_assert!(n <= scratch.decode.len(), "tile exceeds scratch");
+    match dtype {
+        StateDtype::F32 => scratch.decode[..n].copy_from_slice(vals),
+        StateDtype::Bf16 => {
+            for (d, &v) in scratch.decode[..n].iter_mut().zip(vals) {
+                *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
+            }
+        }
+        StateDtype::Q8 => {
+            let blocks = codec::q8_blocks(n);
+            codec::q8_encode_slice(vals, &mut scratch.scales[..blocks],
+                                   &mut scratch.codes[..n]);
+            codec::q8_decode_slice(&scratch.scales[..blocks],
+                                   &scratch.codes[..n],
+                                   &mut scratch.decode[..n]);
+        }
+    }
+}
+
+/// Like [`wire_roundtrip`], but reading the input from
+/// `scratch.stage[..len]` (field-disjoint borrows let a caller fill the
+/// stage from sums it is still holding mutably — the error-feedback
+/// path). Output lands in `scratch.decode[..len]`.
+pub fn wire_roundtrip_staged(scratch: &mut WireScratch, len: usize,
+                             dtype: StateDtype) {
+    let WireScratch { stage, decode, scales, codes } = scratch;
+    match dtype {
+        StateDtype::F32 => decode[..len].copy_from_slice(&stage[..len]),
+        StateDtype::Bf16 => {
+            for (d, &v) in decode[..len].iter_mut().zip(&stage[..len]) {
+                *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
+            }
+        }
+        StateDtype::Q8 => {
+            let blocks = codec::q8_blocks(len);
+            codec::q8_encode_slice(&stage[..len], &mut scales[..blocks],
+                                   &mut codes[..len]);
+            codec::q8_decode_slice(&scales[..blocks], &codes[..len],
+                                   &mut decode[..len]);
+        }
+    }
+}
+
+/// Run one region through the wire in `chunk`-element tiles, given the
+/// sender's and receiver's views of the range. `src` and `dst` must be
+/// the same length (the region length); `phase` must not be
+/// [`Phase::Finalize`] (which has one buffer — see [`run_finalize`]).
+pub fn run_pair(phase: Phase, src: &[f32], dst: &mut [f32],
+                dtype: StateDtype, chunk: usize,
+                scratch: &mut WireScratch) {
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert_ne!(phase, Phase::Finalize);
+    let n = src.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let (s, d) = (&src[lo..hi], &mut dst[lo..hi]);
+        match (phase, dtype) {
+            // f32 wire is the identity — accumulate / copy directly
+            // (this is the historical `collectives` arithmetic verbatim)
+            (Phase::Reduce, StateDtype::F32) => {
+                for (x, y) in d.iter_mut().zip(s) {
+                    *x += y;
+                }
+            }
+            (Phase::Gather, StateDtype::F32) => d.copy_from_slice(s),
+            (Phase::Reduce, _) => {
+                wire_roundtrip(s, dtype, scratch);
+                for (x, y) in d.iter_mut().zip(&scratch.decode[..s.len()]) {
+                    *x += y;
+                }
+            }
+            (Phase::Gather, _) => {
+                wire_roundtrip(s, dtype, scratch);
+                d.copy_from_slice(&scratch.decode[..s.len()]);
+            }
+            (Phase::Finalize, _) => unreachable!("finalize has one buffer"),
+        }
+        lo = hi;
+    }
+}
+
+/// In-place wire round-trip of an owner's completed class (the finalize
+/// step of compressed schedules), tiled like [`run_pair`].
+pub fn run_finalize(buf: &mut [f32], dtype: StateDtype, chunk: usize,
+                    scratch: &mut WireScratch) {
+    debug_assert_ne!(dtype, StateDtype::F32, "f32 schedules elide finalize");
+    let n = buf.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let len = hi - lo;
+        scratch.stage[..len].copy_from_slice(&buf[lo..hi]);
+        // field-disjoint borrows: stage is the input, scales/codes the
+        // wire bytes, buf the output
+        let stage = &scratch.stage[..len];
+        match dtype {
+            StateDtype::F32 => unreachable!(),
+            StateDtype::Bf16 => {
+                for (d, &v) in buf[lo..hi].iter_mut().zip(stage) {
+                    *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
+                }
+            }
+            StateDtype::Q8 => {
+                let blocks = codec::q8_blocks(len);
+                codec::q8_encode_slice(stage, &mut scratch.scales[..blocks],
+                                       &mut scratch.codes[..len]);
+                codec::q8_decode_slice(&scratch.scales[..blocks],
+                                       &scratch.codes[..len],
+                                       &mut buf[lo..hi]);
+            }
+        }
+        lo = hi;
+    }
+}
+
+/// Raw per-rank buffer pointers for the multi-thread executor. Safety
+/// rests on the schedule invariant: within one step, every region's
+/// write range is touched by exactly one task, and no task reads a
+/// range any task writes (forwarded and written classes differ by one
+/// ring position, finalize regions are per-owner). The engine asserts
+/// the invariant over every built schedule in debug builds.
+pub struct RankBufs {
+    ptrs: Vec<*mut f32>,
+    len: usize,
+}
+
+unsafe impl Send for RankBufs {}
+unsafe impl Sync for RankBufs {}
+
+impl RankBufs {
+    /// Capture the (stable) data pointers of every rank's flat buffer.
+    pub fn new(bufs: &mut [Vec<f32>]) -> Self {
+        let len = bufs.first().map_or(0, Vec::len);
+        debug_assert!(bufs.iter().all(|b| b.len() == len));
+        Self { ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(), len }
+    }
+
+    /// # Safety
+    /// `[lo, hi)` must be in bounds and disjoint from every concurrently
+    /// written range (schedule invariant above).
+    unsafe fn range(&self, rank: usize, lo: usize, hi: usize) -> &[f32] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts(self.ptrs[rank].add(lo), hi - lo)
+    }
+
+    /// # Safety
+    /// `[lo, hi)` must be in bounds, written by this task only, and
+    /// disjoint from every concurrently read range (schedule invariant).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn range_mut(&self, rank: usize, lo: usize, hi: usize)
+                        -> &mut [f32] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptrs[rank].add(lo), hi - lo)
+    }
+}
+
+/// Execute one schedule step's regions with `threads` workers (tasks
+/// round-robin over region index — the assignment is irrelevant to the
+/// result, which is bitwise identical at any thread count).
+pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
+                         regions: &[Region], dtype: StateDtype,
+                         chunk: usize, threads: usize,
+                         scratch: &mut [WireScratch]) {
+    let shared = RankBufs::new(bufs);
+    std::thread::scope(|scope| {
+        for (tid, sc) in scratch.iter_mut().enumerate().take(threads) {
+            let shared = &shared;
+            scope.spawn(move || {
+                for (i, reg) in regions.iter().enumerate() {
+                    if i % threads != tid {
+                        continue;
+                    }
+                    // SAFETY: schedule invariant — this task exclusively
+                    // owns the write range; read ranges are never written
+                    // in the same step (see RankBufs docs).
+                    unsafe {
+                        if phase == Phase::Finalize {
+                            let b = shared.range_mut(reg.src, reg.lo, reg.hi);
+                            run_finalize(b, dtype, chunk, sc);
+                        } else {
+                            let s = shared.range(reg.src, reg.lo, reg.hi);
+                            let d = shared.range_mut(reg.dst, reg.lo, reg.hi);
+                            run_pair(phase, s, d, dtype, chunk, sc);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Execute one schedule step serially with safe split borrows (the
+/// steady-state allocation-free path; bitwise identical to
+/// [`run_step_threaded`]).
+pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
+                       regions: &[Region], dtype: StateDtype, chunk: usize,
+                       scratch: &mut WireScratch) {
+    for reg in regions {
+        if phase == Phase::Finalize {
+            run_finalize(&mut bufs[reg.src][reg.lo..reg.hi], dtype, chunk,
+                         scratch);
+            continue;
+        }
+        // split-borrow src and dst rank buffers (always distinct ranks)
+        let (a, b) = if reg.src < reg.dst {
+            let (left, right) = bufs.split_at_mut(reg.dst);
+            (&left[reg.src], &mut right[0])
+        } else {
+            let (left, right) = bufs.split_at_mut(reg.src);
+            (&right[0], &mut left[reg.dst])
+        };
+        run_pair(phase, &a[reg.lo..reg.hi], &mut b[reg.lo..reg.hi], dtype,
+                 chunk, scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_bounds_match_the_historical_partition() {
+        // same arithmetic as the pre-comms collectives starts vector
+        for (len, n) in [(100usize, 4usize), (7, 3), (64, 8), (5, 8)] {
+            let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+            for c in 0..=n {
+                assert_eq!(class_lo(len, n, c), starts[c]);
+            }
+            assert_eq!(class_lo(len, n, 0), 0);
+            assert_eq!(class_lo(len, n, n), len);
+        }
+    }
+
+    #[test]
+    fn schedule_shape_and_wire_bytes() {
+        let lens = [100usize, 37];
+        for n in [2usize, 3, 4, 8] {
+            let s = Schedule::build(&lens, n, StateDtype::F32);
+            // 2(n-1) hop steps, no finalize at f32
+            assert_eq!(s.steps.len(), 2 * (n - 1));
+            assert!(s.steps.iter().all(|(p, _)| *p != Phase::Finalize));
+            // every hop step forwards each class once ⇒ full buffer bytes
+            let per_sweep: usize = 4 * (100 + 37);
+            assert_eq!(s.wire_bytes, 2 * (n - 1) * per_sweep);
+
+            let b = Schedule::build(&lens, n, StateDtype::Bf16);
+            assert_eq!(2 * b.wire_bytes, s.wire_bytes, "bf16 halves f32");
+            let q = Schedule::build(&lens, n, StateDtype::Q8);
+            assert_eq!(q.steps.len(), 2 * (n - 1) + 1);
+            assert!(q.steps.iter().any(|(p, _)| *p == Phase::Finalize));
+            // small chunk classes pay proportionally more per-block
+            // scale overhead — the ≥ 3.5× line is asserted on real
+            // (large-leaf) inventories in crate::memory / bench_memory
+            assert!(q.wire_bytes < b.wire_bytes,
+                    "q8 {} vs bf16 {}", q.wire_bytes, b.wire_bytes);
+        }
+        // single rank: nothing to exchange
+        let s = Schedule::build(&lens, 1, StateDtype::Q8);
+        assert!(s.steps.is_empty());
+        assert_eq!(s.wire_bytes, 0);
+    }
+
+    /// The safety contract of the threaded executor: within any step, no
+    /// write range overlaps another write range or any read range.
+    #[test]
+    fn schedule_steps_have_disjoint_reads_and_writes() {
+        for dtype in StateDtype::ALL {
+            for n in [2usize, 3, 4, 8] {
+                let s = Schedule::build(&[130, 7, 64], n, dtype);
+                for (phase, regs) in &s.steps {
+                    let mut writes: Vec<(usize, usize, usize)> = Vec::new();
+                    for r in regs {
+                        let w = if *phase == Phase::Finalize {
+                            (r.src, r.lo, r.hi)
+                        } else {
+                            (r.dst, r.lo, r.hi)
+                        };
+                        for &(wr, lo, hi) in &writes {
+                            assert!(wr != w.0 || hi <= w.1 || w.2 <= lo,
+                                    "overlapping writes in {phase:?}");
+                        }
+                        writes.push(w);
+                    }
+                    if *phase != Phase::Finalize {
+                        for r in regs {
+                            for &(wr, lo, hi) in &writes {
+                                assert!(wr != r.src || hi <= r.lo
+                                        || r.hi <= lo,
+                                        "read/write overlap in {phase:?}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A wire round-trip is idempotent at every dtype (the finalize /
+    /// all-gather stability argument).
+    #[test]
+    fn wire_roundtrip_is_idempotent() {
+        let mut rng = crate::rng::Rng::new(3);
+        let vals: Vec<f32> =
+            (0..200).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for dtype in StateDtype::ALL {
+            let mut sc = WireScratch::new(256);
+            wire_roundtrip(&vals, dtype, &mut sc);
+            let once: Vec<f32> = sc.decode[..vals.len()].to_vec();
+            wire_roundtrip(&once, dtype, &mut sc);
+            for (a, b) in once.iter().zip(&sc.decode[..vals.len()]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
+            }
+        }
+    }
+
+    /// Tiling is bitwise invisible: any block-aligned chunk produces the
+    /// same receiver-side values as one whole-region pass.
+    #[test]
+    fn run_pair_chunking_is_bitwise_invisible() {
+        let mut rng = crate::rng::Rng::new(9);
+        let src: Vec<f32> =
+            (0..333).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for dtype in StateDtype::ALL {
+            for phase in [Phase::Reduce, Phase::Gather] {
+                let mut whole = vec![0.5f32; src.len()];
+                let mut sc = WireScratch::new(512);
+                run_pair(phase, &src, &mut whole, dtype, 512, &mut sc);
+                for chunk in [64usize, 128, 256] {
+                    let mut tiled = vec![0.5f32; src.len()];
+                    let mut sc = WireScratch::new(chunk);
+                    run_pair(phase, &src, &mut tiled, dtype, chunk, &mut sc);
+                    for (a, b) in whole.iter().zip(&tiled) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "{dtype:?} {phase:?} chunk {chunk}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -154,6 +154,19 @@ pub struct TrainConfig {
     /// traversal granularity only: results are bitwise identical at any
     /// value. See `optim::kernel` / DESIGN.md §10.
     pub step_chunk: usize,
+    /// wire precision of the data-parallel gradient exchange (split
+    /// path, `workers > 1`): "f32" | "bf16" | "q8". Compressed dtypes
+    /// add per-rank error-feedback residual state so training stays
+    /// convergent. See `comms` / DESIGN.md §12.
+    pub comm_dtype: StateDtype,
+    /// wire tile for the ring collectives, in elements (split path;
+    /// must be a positive multiple of 64 — the q8 wire block). Affects
+    /// message tiling only: results are bitwise identical at any value.
+    pub comm_chunk: usize,
+    /// host threads executing the ring collectives (split path); 1 =
+    /// serial. Results are bitwise identical at any value and any
+    /// `comm_dtype` — the ring schedule fixes the reduction order.
+    pub comm_threads: usize,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -175,6 +188,9 @@ impl Default for TrainConfig {
             step_threads: 1,
             state_dtype: StateDtype::F32,
             step_chunk: crate::optim::kernel::DEFAULT_CHUNK,
+            comm_dtype: StateDtype::F32,
+            comm_chunk: crate::comms::DEFAULT_COMM_CHUNK,
+            comm_threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -259,8 +275,8 @@ const OPTIM_KEYS: &[&str] = &[
 /// Keys accepted in `[train]`.
 const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
-    "step_threads", "state_dtype", "step_chunk", "seed", "artifacts_dir",
-    "out_dir",
+    "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
+    "comm_threads", "seed", "artifacts_dir", "out_dir",
 ];
 
 /// Keys accepted in each `[[optim.group]]`.
@@ -369,6 +385,29 @@ impl TrainConfig {
                 Some(v) => v as usize,
                 None => d.step_chunk,
             },
+            comm_dtype: StateDtype::parse(&get_str(
+                &train_tbl, "comm_dtype", d.comm_dtype.name()))
+                .context("[train] comm_dtype")?,
+            comm_chunk: match train_tbl.get("comm_chunk")
+                .and_then(TomlValue::as_i64)
+            {
+                // reject instead of casting: a negative would wrap
+                // through `as u64` to a positive multiple of 64
+                Some(v) if v < 1 => bail!("[train] comm_chunk must be \
+                                           >= 1, got {v}"),
+                Some(v) => v as usize,
+                None => d.comm_chunk,
+            },
+            comm_threads: match train_tbl.get("comm_threads")
+                .and_then(TomlValue::as_i64)
+            {
+                // reject instead of casting: -1 as u64 would wrap to a
+                // huge thread count and sail past the > 0 check
+                Some(v) if v < 1 => bail!("[train] comm_threads must be \
+                                           >= 1, got {v}"),
+                Some(v) => v as usize,
+                None => d.comm_threads,
+            },
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -414,6 +453,28 @@ impl TrainConfig {
         {
             bail!("step_chunk applies to the split path only (the fused \
                    artifact already contains the optimizer)");
+        }
+        if self.comm_threads == 0 {
+            bail!("comm_threads must be > 0 (1 = serial)");
+        }
+        crate::comms::check_comm_chunk(self.comm_chunk)
+            .context("[train] comm_chunk")?;
+        if self.exec == ExecMode::Fused {
+            // the fused artifact runs single-worker with no gradient
+            // exchange; reject comm knobs it would silently ignore
+            if self.comm_dtype != StateDtype::F32 {
+                bail!("comm_dtype = {:?} applies to the split path only \
+                       (the fused artifact has no gradient exchange)",
+                      self.comm_dtype.name());
+            }
+            if self.comm_threads > 1 {
+                bail!("comm_threads applies to the split path only (the \
+                       fused artifact has no gradient exchange)");
+            }
+            if self.comm_chunk != crate::comms::DEFAULT_COMM_CHUNK {
+                bail!("comm_chunk applies to the split path only (the \
+                       fused artifact has no gradient exchange)");
+            }
         }
         if !(0.0..1.0).contains(&self.optim.beta1) {
             bail!("beta1 out of range");
@@ -606,6 +667,51 @@ warmup_steps = 40
              step_chunk = 256\n").unwrap();
         assert_eq!((cfg.step_threads, cfg.state_dtype, cfg.step_chunk),
                    (4, StateDtype::Q8, 256));
+    }
+
+    /// ISSUE 5 tentpole: the comm knobs parse, default, validate, and
+    /// are fused-path-rejected like the step knobs.
+    #[test]
+    fn comm_knobs_parse_defaults_and_validate() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.comm_dtype, StateDtype::F32);
+        assert_eq!(cfg.comm_chunk, crate::comms::DEFAULT_COMM_CHUNK);
+        assert_eq!(cfg.comm_threads, 1);
+        let cfg = TrainConfig::from_toml(
+            "[train]\nworkers = 4\ncomm_dtype = \"q8\"\ncomm_chunk = 128\n\
+             comm_threads = 4\n").unwrap();
+        assert_eq!((cfg.comm_dtype, cfg.comm_chunk, cfg.comm_threads),
+                   (StateDtype::Q8, 128, 4));
+        // unknown dtype names must fail with a message, not default
+        assert!(TrainConfig::from_toml(
+            "[train]\ncomm_dtype = \"fp8\"\n").is_err());
+        // comm_chunk: positive multiple of 64, no negative wrapping
+        assert!(TrainConfig::from_toml("[train]\ncomm_chunk = 0\n").is_err());
+        assert!(TrainConfig::from_toml("[train]\ncomm_chunk = 100\n")
+            .is_err());
+        assert!(TrainConfig::from_toml("[train]\ncomm_chunk = -64\n")
+            .is_err());
+        assert!(TrainConfig::from_toml("[train]\ncomm_threads = 0\n")
+            .is_err());
+        // negative comm_threads must error, not wrap through `as u64`
+        assert!(TrainConfig::from_toml("[train]\ncomm_threads = -1\n")
+            .is_err());
+        // split-path knobs: the fused artifact has no gradient exchange
+        for bad in ["comm_dtype = \"q8\"", "comm_threads = 4",
+                    "comm_chunk = 128"] {
+            let toml = format!("[train]\nexec = \"fused\"\n{bad}\n");
+            assert!(TrainConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+        // fused + explicit defaults is fine
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\ncomm_dtype = \"f32\"\n\
+             comm_threads = 1\n").is_ok());
+        // a typo'd comm key names the nearest valid one
+        let err = TrainConfig::from_toml("[train]\ncomm_dtpye = \"q8\"\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("comm_dtpye") && msg.contains("comm_dtype"),
+                "{msg}");
     }
 
     /// ISSUE 3 satellite: the staircase schedule's η₀/α/τ come from the

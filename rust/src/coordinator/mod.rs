@@ -15,10 +15,15 @@
 //! * **Fused** — the artifact is the whole train step with the Layer-1
 //!   Pallas optimizer kernel inside; host code only shuttles state.
 //!
-//! Workers are *logical ranks*: each has an independent data shard and its
-//! gradients join through `collectives::ring_allreduce` in rank order, so
-//! the arithmetic (and hence the loss curve) is exactly what a pod run
-//! would produce; with one physical CPU the ranks execute sequentially.
+//! Workers are *logical ranks*: each has an independent data shard and
+//! its gradients join through the `comms` subsystem's chunked ring
+//! all-reduce (DESIGN.md §12) in schedule order, so the arithmetic (and
+//! hence the loss curve) is exactly what a pod run would produce; the
+//! exchange itself can compress its wire payloads (`comm_dtype`) and
+//! fan out over host threads (`comm_threads`) without changing a bit.
+//! The forward/backward passes of the ranks execute sequentially on the
+//! one physical CPU; the simulated interconnect cost of each exchange
+//! is reported per step as `comm_ms` (`comms::TimingModel`).
 
 mod trainer;
 

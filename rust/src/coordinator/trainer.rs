@@ -3,7 +3,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::Arc;
 
-use crate::collectives;
+use crate::comms::CommEngine;
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
 use crate::metrics::{corpus_bleu, Ema};
@@ -20,6 +20,9 @@ pub struct StepRecord {
     pub loss_ema: f64,
     pub lr: f64,
     pub wall_ms: f64,
+    /// simulated pod-interconnect cost of this step's gradient exchange
+    /// (`comms::TimingModel`; 0.0 single-worker and on the fused path)
+    pub comm_ms: f64,
 }
 
 /// One evaluation record.
@@ -69,6 +72,9 @@ enum Engine {
         grad_art: Arc<Artifact>,
         params: Vec<Tensor>,
         opt: Box<dyn Optimizer>,
+        /// the gradient exchange (comms subsystem, DESIGN.md §12):
+        /// persistent ring buffers + wire codec + error feedback
+        comms: CommEngine,
     },
     Fused {
         train_art: Arc<Artifact>,
@@ -86,9 +92,15 @@ pub struct Trainer {
     eval_art: Arc<Artifact>,
     decode_art: Option<Arc<Artifact>>,
     sources: Vec<Box<dyn BatchSource>>,
+    /// out-of-band data stream for `compute_grads` trace probes — forked
+    /// from the same seed at shard index `cfg.workers`, so probing never
+    /// advances (or collides with) any training worker's stream
+    probe_source: Box<dyn BatchSource>,
     schedule: Schedule,
     step: u64,
     ema: Ema,
+    /// simulated interconnect cost of the most recent `train_step`
+    last_comm_ms: f64,
 }
 
 impl Trainer {
@@ -125,7 +137,13 @@ impl Trainer {
                     .optim_spec()?
                     .build(&specs)
                     .context("building the optimizer from [optim]")?;
-                Engine::Split { grad_art, params, opt }
+                // the gradient exchange: buffers, residuals, and the
+                // ring schedule are all sized once, here
+                let comms = CommEngine::new(
+                    &specs, cfg.workers, cfg.comm_dtype, cfg.comm_chunk,
+                    cfg.comm_threads)
+                    .context("building the comm engine from [train]")?;
+                Engine::Split { grad_art, params, opt, comms }
             }
             ExecMode::Fused => {
                 let name = format!("{}_train_{}", cfg.model, cfg.optim.name);
@@ -149,6 +167,10 @@ impl Trainer {
         let sources: Vec<Box<dyn BatchSource>> = (0..cfg.workers)
             .map(|w| source_for_model(&meta, cfg.seed, w, cfg.workers))
             .collect::<Result<_>>()?;
+        // shard index cfg.workers is outside every training worker's
+        // range, so the probe stream is independent of all of them
+        let probe_source =
+            source_for_model(&meta, cfg.seed, cfg.workers, cfg.workers + 1)?;
 
         Ok(Self {
             cfg,
@@ -158,9 +180,11 @@ impl Trainer {
             eval_art,
             decode_art,
             sources,
+            probe_source,
             schedule,
             step: 0,
             ema: Ema::new(0.9),
+            last_comm_ms: 0.0,
         })
     }
 
@@ -188,9 +212,33 @@ impl Trainer {
         }
     }
 
-    /// Gradient-only pass on one training batch of worker 0 (trace probes).
+    /// Introspect the gradient-exchange engine (split mode only).
+    pub fn comms(&self) -> Option<&CommEngine> {
+        match &self.engine {
+            Engine::Split { comms, .. } => Some(comms),
+            Engine::Fused { .. } => None,
+        }
+    }
+
+    /// Restore the error-feedback residuals a compressed-comm checkpoint
+    /// carries (`comm/residual/<rank>` entries, in rank order) so a
+    /// resumed run continues bit-identically to the uninterrupted one.
+    pub fn load_comm_residuals(&mut self, state: Vec<Tensor>) -> Result<()> {
+        match &mut self.engine {
+            Engine::Split { comms, .. } => comms.load_state(state),
+            Engine::Fused { .. } => {
+                bail!("comm residuals need split mode")
+            }
+        }
+    }
+
+    /// Gradient-only pass on one training batch (trace probes). Draws
+    /// from the trainer's dedicated probe stream — NOT worker 0's — so
+    /// interleaving probes with `train_step` never perturbs the
+    /// training trajectory (regression-tested in
+    /// `tests/runtime_integration.rs`).
     pub fn compute_grads(&mut self) -> Result<(f64, Vec<Tensor>)> {
-        let batch = self.sources[0].next_train();
+        let batch = self.probe_source.next_train();
         match &self.engine {
             Engine::Split { grad_art, params, .. } => {
                 grad_pass(grad_art, params, &batch.values)
@@ -204,7 +252,7 @@ impl Trainer {
         self.step += 1;
         let lr = self.schedule.lr(self.step) as f32;
         match &mut self.engine {
-            Engine::Split { grad_art, params, opt } => {
+            Engine::Split { grad_art, params, opt, comms } => {
                 // per-worker gradient (averaged over grad_accum microbatches)
                 let mut worker_grads: Vec<Vec<Tensor>> =
                     Vec::with_capacity(self.cfg.workers);
@@ -240,13 +288,19 @@ impl Trainer {
                     loss_sum += wloss / self.cfg.grad_accum as f64;
                     worker_grads.push(grads);
                 }
-                // data-parallel combine (ring all-reduce, rank order)
-                collectives::allreduce_mean(&mut worker_grads);
+                // data-parallel combine: the compressed ring all-reduce
+                // (comms subsystem — wire codec, error feedback, and
+                // the simulated interconnect cost it reports)
+                let stats = comms
+                    .allreduce_mean(&mut worker_grads)
+                    .context("gradient all-reduce")?;
+                self.last_comm_ms = stats.sim_seconds * 1e3;
                 let grads = worker_grads.into_iter().next().unwrap();
                 opt.step(params, &grads, lr);
                 Ok(loss_sum / self.cfg.workers as f64)
             }
             Engine::Fused { train_art, state, n_params } => {
+                self.last_comm_ms = 0.0;
                 if self.cfg.workers != 1 || self.cfg.grad_accum != 1 {
                     bail!("fused mode runs single-worker, no accumulation \
                            (the optimizer lives inside the artifact)");
@@ -353,10 +407,15 @@ impl Trainer {
     /// artifact). Params are always f32-tagged; optimizer slots carry the
     /// engine's storage dtype, so a `state_dtype = "q8"` run writes its
     /// state ~4× smaller — except scalar slots (Adam's step counter `t`),
-    /// which stay f32 per the DESIGN.md §8 contract.
+    /// which stay f32 per the DESIGN.md §8 contract. Compressed-comm
+    /// runs additionally write their per-rank error-feedback residuals
+    /// (`comm/residual/<rank>`, f32-tagged — residuals must stay exact
+    /// for resume to be bitwise; see DESIGN.md §12). Residuals only
+    /// mutate inside the all-reduce, so any between-steps save — during
+    /// gradient accumulation included — captures a consistent snapshot.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>)
                            -> Result<()> {
-        let Engine::Split { params, opt, .. } = &self.engine else {
+        let Engine::Split { params, opt, comms, .. } = &self.engine else {
             bail!("checkpoint save needs split mode (the fused artifact \
                    owns its optimizer state)");
         };
@@ -372,14 +431,23 @@ impl Trainer {
                 (format!("opt/{leaf}/{slot}"), t, tag)
             })
             .collect();
+        let residuals: Vec<(String, Tensor)> = comms
+            .state()
+            .into_iter()
+            .map(|(rank, t)| (format!("comm/residual/{rank}"), t))
+            .collect();
         let mut entries: Vec<(String, &Tensor, StateDtype)> =
-            Vec::with_capacity(params.len() + state.len());
+            Vec::with_capacity(params.len() + state.len()
+                               + residuals.len());
         for (i, t) in params.iter().enumerate() {
             entries.push((format!("param/{}", self.meta.params[i].name), t,
                           StateDtype::F32));
         }
         for (n, t, d) in &state {
             entries.push((n.clone(), t, *d));
+        }
+        for (n, t) in &residuals {
+            entries.push((n.clone(), t, StateDtype::F32));
         }
         crate::checkpoint::save_v2(path, &entries)
     }
@@ -399,6 +467,7 @@ impl Trainer {
                 loss_ema: ema,
                 lr: self.schedule.lr(self.step),
                 wall_ms,
+                comm_ms: self.last_comm_ms,
             });
             if self.step % self.cfg.eval_every == 0
                 || self.step == self.cfg.steps

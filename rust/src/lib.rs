@@ -25,7 +25,13 @@
 //!   with intra-leaf splitting of dominant element-wise leaves) with
 //!   bitwise-identical results; optimizer state can be stored quantized
 //!   ([`optim::qstate`]: f32, bf16, or block-wise 8-bit) while the
-//!   update arithmetic stays f32.
+//!   update arithmetic stays f32. The data-parallel gradient exchange
+//!   runs through the [`comms`] subsystem (DESIGN.md §12): a
+//!   thread-parallel chunked ring all-reduce over persistent flat
+//!   buffers whose wire payloads can be compressed to bf16 or
+//!   block-wise 8-bit with per-rank error-feedback residuals —
+//!   bitwise-deterministic at any `comm_threads`, with the simulated
+//!   pod interconnect cost reported per step.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for measured results. This offline
@@ -38,6 +44,7 @@ pub mod bench_util;
 pub mod checkpoint;
 pub mod cli;
 pub mod collectives;
+pub mod comms;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -36,6 +36,9 @@ fn commands() -> Vec<Command> {
             .option("step-threads", "host threads for the optimizer update (1 = serial; bitwise-identical results)")
             .option("state-dtype", "optimizer-state storage precision: f32 | bf16 | q8 (split path)")
             .option("step-chunk", "streaming tile for the chunked step kernels, in elements (multiple of 64; bitwise-identical results)")
+            .option("comm-dtype", "wire precision of the gradient exchange: f32 | bf16 | q8 (split path; compressed dtypes carry error-feedback residuals)")
+            .option("comm-threads", "host threads for the ring collectives (1 = serial; bitwise-identical results)")
+            .option("comm-chunk", "wire tile for the ring collectives, in elements (multiple of 64; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
@@ -128,6 +131,15 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(c) = args.opt_count("step-chunk")? {
         cfg.step_chunk = c; // cfg.validate() checks block alignment
     }
+    if let Some(d) = args.opt("comm-dtype") {
+        cfg.comm_dtype = sm3::optim::StateDtype::parse(d)?;
+    }
+    if let Some(t) = args.opt_count("comm-threads")? {
+        cfg.comm_threads = t;
+    }
+    if let Some(c) = args.opt_count("comm-chunk")? {
+        cfg.comm_chunk = c; // cfg.validate() checks block alignment
+    }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;
     }
@@ -157,6 +169,18 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
         cfg.grad_accum, cfg.step_threads, cfg.state_dtype.name(),
         cfg.step_chunk
     );
+    if cfg.workers > 1 {
+        println!(
+            "  comms: dtype={} threads={} chunk={} (ring all-reduce, \
+             error feedback {})",
+            cfg.comm_dtype.name(), cfg.comm_threads, cfg.comm_chunk,
+            if cfg.comm_dtype == sm3::optim::StateDtype::F32 {
+                "off"
+            } else {
+                "on"
+            }
+        );
+    }
     if cfg.optim.has_transforms() {
         println!(
             "  pipeline: clip_value={} clip_norm={} weight_decay={} \
@@ -176,12 +200,13 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
                  opt.state_dtype().name(), opt.name());
     }
     let mut logger = RunLogger::new(
-        args.opt("out"), "step,loss,loss_ema,lr,wall_ms", false)?;
+        args.opt("out"), "step,loss,loss_ema,lr,wall_ms,comm_ms", false)?;
     let hist = trainer.train()?;
     for s in &hist.steps {
         logger.row(&[s.step.to_string(), format!("{:.6}", s.loss),
                      format!("{:.6}", s.loss_ema), format!("{:.6e}", s.lr),
-                     format!("{:.2}", s.wall_ms)])?;
+                     format!("{:.2}", s.wall_ms),
+                     format!("{:.4}", s.comm_ms)])?;
         if !quiet && (s.step % 10 == 0 || s.step == 1) {
             println!("  step {:>6}  loss {:.4}  (ema {:.4})  lr {:.3e}  {:.0} ms",
                      s.step, s.loss, s.loss_ema, s.lr, s.wall_ms);

@@ -570,6 +570,231 @@ mod tests {
         });
     }
 
+    /// ISSUE 5 satellite: encode∘reduce determinism — the compressed
+    /// ring produces bitwise-identical means AND residuals at 1/2/4
+    /// comm threads and any block-aligned comm_chunk, for every wire
+    /// dtype, over ranks ∈ {1, 2, 3, 4, 8}.
+    #[test]
+    fn compressed_ring_is_thread_and_chunk_invariant() {
+        use crate::comms::CommEngine;
+        use crate::optim::StateDtype;
+        use crate::tensor::Tensor;
+        forall("comm ring thread/chunk invariance", |rng| {
+            (gen::param_specs(rng, 4, 3, 7), rng.next_u64())
+        }, |(specs, seed)| {
+            for ranks in [1usize, 2, 3, 4, 8] {
+                for dtype in StateDtype::ALL {
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let base: Vec<Vec<Tensor>> = (0..ranks)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect())
+                        .collect();
+                    let mut ref_eng =
+                        CommEngine::new(specs, ranks, dtype, 64, 1)
+                            .map_err(|e| e.to_string())?;
+                    let mut ref_out = base.clone();
+                    ref_eng.allreduce_mean(&mut ref_out)
+                        .map_err(|e| e.to_string())?;
+                    for (threads, chunk) in
+                        [(2usize, 64usize), (4, 64), (2, 128), (4, 4096)]
+                    {
+                        let mut eng = CommEngine::new(
+                            specs, ranks, dtype, chunk, threads)
+                            .map_err(|e| e.to_string())?;
+                        let mut out = base.clone();
+                        eng.allreduce_mean(&mut out)
+                            .map_err(|e| e.to_string())?;
+                        for (r, (la, lb)) in
+                            ref_out.iter().zip(&out).enumerate()
+                        {
+                            for (a, b) in la.iter().zip(lb) {
+                                for (x, y) in
+                                    a.data().iter().zip(b.data())
+                                {
+                                    if x.to_bits() != y.to_bits() {
+                                        return Err(format!(
+                                            "{dtype:?} x{ranks} t{threads} \
+                                             c{chunk} rank {r}: {x} != {y}"));
+                                    }
+                                }
+                            }
+                        }
+                        for ((_, a), (_, b)) in
+                            ref_eng.state().iter().zip(&eng.state())
+                        {
+                            for (x, y) in a.data().iter().zip(b.data()) {
+                                if x.to_bits() != y.to_bits() {
+                                    return Err(format!(
+                                        "{dtype:?} x{ranks} t{threads}: \
+                                         residual {x} != {y}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 5 satellite: the f32 ring is bitwise equal to a naive sum
+    /// oracle — for each element, fold the ranks left-to-right starting
+    /// at its chunk class's origin (for class-0 elements that IS the
+    /// plain rank-0-first sum; f32 addition commutes, so the ring's
+    /// `dst += src` order telescopes to exactly this fold) — and to the
+    /// legacy `collectives::allreduce_mean` reference.
+    #[test]
+    fn f32_ring_matches_rank0_sum_oracle() {
+        use crate::comms::CommEngine;
+        use crate::optim::StateDtype;
+        use crate::tensor::Tensor;
+        forall("f32 ring == rank-0 sum oracle", |rng| {
+            (gen::param_specs(rng, 4, 3, 7),
+             2 + rng.index(7), // ranks in [2, 8]
+             rng.next_u64())
+        }, |(specs, ranks, seed)| {
+            let n = *ranks;
+            let mut rng = crate::rng::Rng::new(*seed);
+            let base: Vec<Vec<Tensor>> = (0..n)
+                .map(|_| specs.iter()
+                    .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                    .collect())
+                .collect();
+            let mut out = base.clone();
+            CommEngine::new(specs, n, StateDtype::F32, 64, 1)
+                .and_then(|mut e| e.allreduce_mean(&mut out))
+                .map_err(|e| e.to_string())?;
+            // the legacy reference must agree bitwise
+            let mut legacy = base.clone();
+            crate::collectives::allreduce_mean(&mut legacy)
+                .map_err(|e| e.to_string())?;
+            let inv = 1.0 / n as f32;
+            for (leaf, spec) in specs.iter().enumerate() {
+                let len = spec.numel();
+                for k in 0..len {
+                    // chunk class of element k: largest c with
+                    // c·len/n <= k (the historical partition)
+                    let c = (0..n)
+                        .rfind(|&c| c * len / n <= k)
+                        .expect("class 0 starts at 0");
+                    let mut acc = base[c][leaf].data()[k];
+                    for i in 1..n {
+                        acc = base[(c + i) % n][leaf].data()[k] + acc;
+                    }
+                    let expect = acc * inv;
+                    if c == 0 {
+                        // class 0 is literally the rank-0-first naive sum
+                        let mut naive = base[0][leaf].data()[k];
+                        for r in base.iter().take(n).skip(1) {
+                            naive += r[leaf].data()[k];
+                        }
+                        if (naive * inv).to_bits() != expect.to_bits() {
+                            return Err(format!(
+                                "oracle self-check leaf {leaf} elem {k}"));
+                        }
+                    }
+                    for (r, rank_out) in out.iter().enumerate() {
+                        let got = rank_out[leaf].data()[k];
+                        if got.to_bits() != expect.to_bits() {
+                            return Err(format!(
+                                "x{n} leaf {leaf} elem {k} (class {c}) \
+                                 rank {r}: {got} != oracle {expect}"));
+                        }
+                    }
+                    let leg = legacy[0][leaf].data()[k];
+                    if leg.to_bits() != expect.to_bits() {
+                        return Err(format!(
+                            "legacy mismatch leaf {leaf} elem {k}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 5 satellite: error-feedback residuals round-trip through an
+    /// `SM3CKPT2` file exactly as the trainer writes them (f32-tagged),
+    /// and the restored engine continues bit-identically to the
+    /// uninterrupted one.
+    #[test]
+    fn comm_residuals_roundtrip_through_sm3ckpt2() {
+        use crate::comms::CommEngine;
+        use crate::optim::StateDtype;
+        use crate::tensor::Tensor;
+        let dir = std::env::temp_dir().join("sm3_comm_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("residuals.ckpt");
+        forall("comm residual SM3CKPT2 round-trip", |rng| {
+            (gen::param_specs(rng, 3, 3, 7), rng.next_u64())
+        }, |(specs, seed)| {
+            for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+                let ranks = 3;
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut gen_round = |rng: &mut crate::rng::Rng| {
+                    (0..ranks)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, rng))
+                            .collect::<Vec<Tensor>>())
+                        .collect::<Vec<_>>()
+                };
+                let mut a = CommEngine::new(specs, ranks, dtype, 64, 1)
+                    .map_err(|e| e.to_string())?;
+                for _ in 0..2 {
+                    let mut g = gen_round(&mut rng);
+                    a.allreduce_mean(&mut g)
+                        .map_err(|e| e.to_string())?;
+                }
+                // save exactly the way the trainer does: f32-tagged
+                let named: Vec<(String, Tensor)> = a
+                    .state()
+                    .into_iter()
+                    .map(|(r, t)| (format!("comm/residual/{r}"), t))
+                    .collect();
+                let entries: Vec<(String, &Tensor, StateDtype)> = named
+                    .iter()
+                    .map(|(n, t)| (n.clone(), t, StateDtype::F32))
+                    .collect();
+                crate::checkpoint::save_v2(&path, &entries)
+                    .map_err(|e| e.to_string())?;
+                let loaded = crate::checkpoint::load_tagged(&path)
+                    .map_err(|e| e.to_string())?;
+                if loaded.len() != ranks {
+                    return Err("entry count".into());
+                }
+                let mut b = CommEngine::new(specs, ranks, dtype, 64, 1)
+                    .map_err(|e| e.to_string())?;
+                b.load_state(
+                    loaded.into_iter().map(|(_, t, _)| t).collect())
+                    .map_err(|e| e.to_string())?;
+                // both engines must continue bitwise from here
+                for round in 0..2 {
+                    let g = gen_round(&mut rng);
+                    let mut ga = g.clone();
+                    let mut gb = g;
+                    a.allreduce_mean(&mut ga)
+                        .map_err(|e| e.to_string())?;
+                    b.allreduce_mean(&mut gb)
+                        .map_err(|e| e.to_string())?;
+                    for (la, lb) in ga.iter().zip(&gb) {
+                        for (ta, tb) in la.iter().zip(lb) {
+                            for (x, y) in
+                                ta.data().iter().zip(tb.data())
+                            {
+                                if x.to_bits() != y.to_bits() {
+                                    return Err(format!(
+                                        "{dtype:?} round {round}: \
+                                         {x} != {y}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {

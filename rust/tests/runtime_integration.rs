@@ -203,6 +203,90 @@ fn all_optimizers_train_tiny_model() {
     }
 }
 
+/// Regression (ISSUE 5 satellite): `compute_grads` draws from its own
+/// forked probe stream, so interleaving trace probes with `train_step`
+/// must not perturb the training trajectory at all — bitwise.
+#[test]
+fn compute_grads_probe_does_not_perturb_training() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(ExecMode::Split);
+    let mut plain = Trainer::with_runtime(cfg.clone(), rt.clone()).unwrap();
+    let mut probed = Trainer::with_runtime(cfg, rt).unwrap();
+    for step in 0..4 {
+        // probe before (and mid-run, repeatedly): worker streams and the
+        // parameter trajectory must be unaffected
+        let (l, g) = probed.compute_grads().unwrap();
+        assert!(l.is_finite() && !g.is_empty());
+        if step == 2 {
+            probed.compute_grads().unwrap();
+        }
+        let la = plain.train_step().unwrap();
+        let lb = probed.train_step().unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "step {step} loss diverged");
+    }
+    for (a, b) in plain.params().iter().zip(&probed.params()) {
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "params diverged: {x} {y}");
+        }
+    }
+    // probes are deterministic too: two fresh trainers see the same
+    // probe stream
+    let mut c1 = Trainer::with_runtime(tiny_cfg(ExecMode::Split),
+                                       plain.runtime().clone()).unwrap();
+    let mut c2 = Trainer::with_runtime(tiny_cfg(ExecMode::Split),
+                                       plain.runtime().clone()).unwrap();
+    let (l1, _) = c1.compute_grads().unwrap();
+    let (l2, _) = c2.compute_grads().unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits());
+}
+
+/// ISSUE 5 tentpole, end to end: comm thread count is invisible to the
+/// trajectory at every wire dtype, the f32 comm path equals the default
+/// config bitwise, q8 still converges, and comm_ms is reported for
+/// multi-worker runs.
+#[test]
+fn comm_dtype_and_threads_train_end_to_end() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    for dtype in ["f32", "bf16", "q8"] {
+        let run = |threads: usize| {
+            let mut cfg = tiny_cfg(ExecMode::Split);
+            cfg.workers = 2;
+            cfg.steps = 10;
+            cfg.comm_dtype = sm3::optim::StateDtype::parse(dtype).unwrap();
+            cfg.comm_threads = threads;
+            let mut t = Trainer::with_runtime(cfg, rt.clone()).unwrap();
+            let hist = t.train().unwrap();
+            assert!(hist.steps.iter().all(|s| s.comm_ms > 0.0),
+                    "{dtype}: comm_ms must be reported multi-worker");
+            hist
+        };
+        let serial = run(1);
+        let threaded = run(2);
+        for (a, b) in serial.steps.iter().zip(&threaded.steps) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(),
+                       "{dtype}: comm_threads changed step {}", a.step);
+        }
+        let first = serial.steps.first().unwrap().loss;
+        let last = serial.steps.last().unwrap().loss;
+        assert!(last < first, "{dtype}: {first} -> {last}");
+        // compressed wire must report fewer simulated ms than f32 would
+        if dtype == "q8" {
+            let f32_hist = {
+                let mut cfg = tiny_cfg(ExecMode::Split);
+                cfg.workers = 2;
+                cfg.steps = 10;
+                let mut t =
+                    Trainer::with_runtime(cfg, rt.clone()).unwrap();
+                t.train().unwrap()
+            };
+            assert!(serial.steps[0].comm_ms < f32_hist.steps[0].comm_ms,
+                    "q8 exchange must be cheaper than f32 on the wire");
+        }
+    }
+}
+
 #[test]
 fn init_checkpoint_matches_manifest_shapes() {
     let _g = lock();
