@@ -22,17 +22,22 @@
 //! the bare optimizer and a hand-fused baseline, gated on bitwise
 //! equality with the latter.
 //!
+//! Also times the **kernel backends** (DESIGN.md §13): the scalar
+//! reference lanes against the 8-lane unrolled `simd` backend on
+//! Adam/SM3 × f32/q8, gated on bitwise equality of the trajectories.
+//!
 //! Run: `cargo bench --bench bench_optim` (writes out/perf_optim.csv,
 //! out/perf_optim_chunked.csv, out/perf_optim_parallel.csv,
-//! out/perf_optim_qstate.csv, out/perf_optim_transforms.csv);
+//! out/perf_optim_qstate.csv, out/perf_optim_transforms.csv,
+//! out/perf_optim_backends.csv);
 //! `BENCH_QUICK=1` or `make bench-quick` for the CI-sized variant.
 
 use sm3::bench_util::{bench, speedup, CsvWriter};
 use sm3::collectives::ring_allreduce;
 use sm3::memory::opt_state_bytes;
 use sm3::optim::{self, cover::{Cover, CoverSm3II}, kernel, transform,
-                 OptimSpec, Optimizer, ParamSpec, ParallelStep, SplitPolicy,
-                 StateDtype};
+                 Backend, OptimSpec, Optimizer, ParamSpec, ParallelStep,
+                 SplitPolicy, StateDtype};
 use sm3::rng::Rng;
 use sm3::tensor::Tensor;
 use std::time::Duration;
@@ -148,6 +153,33 @@ fn assert_chunked_bitwise(name: &str, specs: &[ParamSpec], grads: &[Tensor],
                     x.to_bits() == y.to_bits(),
                     "{name} @ {dtype:?} chunk {chunk} diverged from \
                      whole-slot at step {step} leaf {leaf}: {x} vs {y}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Assert the simd backend's trajectory is bitwise identical to scalar
+/// over a few steps (ISSUE 6 acceptance gate; executes under
+/// BENCH_QUICK=1 in CI before any backend timing).
+fn assert_backend_bitwise(name: &str, specs: &[ParamSpec], grads: &[Tensor],
+                          dtype: StateDtype) -> anyhow::Result<()> {
+    let mut sc = OptimSpec::named(name)?
+        .state_dtype(dtype).kernel_backend(Backend::Scalar).build(specs)?;
+    let mut si = OptimSpec::named(name)?
+        .state_dtype(dtype).kernel_backend(Backend::Simd).build(specs)?;
+    let mut pa: Vec<Tensor> =
+        specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let mut pb = pa.clone();
+    for step in 0..3 {
+        sc.step(&mut pa, grads, 0.01);
+        si.step(&mut pb, grads, 0.01);
+        for (leaf, (a, b)) in pa.iter().zip(&pb).enumerate() {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                anyhow::ensure!(
+                    x.to_bits() == y.to_bits(),
+                    "{name} @ {dtype:?}: simd diverged from scalar at \
+                     step {step} leaf {leaf}: {x} vs {y}");
             }
         }
     }
@@ -471,6 +503,61 @@ fn main() -> anyhow::Result<()> {
                 assert!((sb as f64) * 3.5 <= f32_bytes as f64,
                         "{name}: q8 state {sb} B not ≥3.5x below f32 \
                          {f32_bytes} B");
+            }
+        }
+    }
+
+    // ---- kernel backends: scalar reference vs 8-lane unrolled lanes ------
+    // (ISSUE 6 / DESIGN.md §13) Same KernelBackend trait, two
+    // implementations; the bitwise gate runs before any timing, so CI
+    // (BENCH_QUICK=1, both feature sets) executes the acceptance
+    // criterion — `--kernel-backend simd == scalar` — on every push.
+    println!("\n=== kernel backends — scalar vs simd lanes \
+              ({:.2}M params) ===", d as f64 / 1e6);
+    println!("  {:<11} {:<6} {:>15} {:>14} {:>9}",
+             "optimizer", "dtype", "scalar ns/step", "simd ns/step",
+             "speedup");
+    let mut bcsv = CsvWriter::create(
+        "out/perf_optim_backends.csv",
+        "optimizer,dtype,backend,median_ns,elements_per_sec,\
+         speedup_vs_scalar")?;
+    for name in ["adam", "sm3"] {
+        for dtype in [StateDtype::F32, StateDtype::Q8] {
+            assert_backend_bitwise(name, &specs, &grads, dtype)?;
+            let mut stats_by = Vec::new();
+            for backend in Backend::ALL {
+                let mut opt = OptimSpec::named(name)?
+                    .state_dtype(dtype).kernel_backend(backend)
+                    .build(&specs)?;
+                let mut params: Vec<Tensor> =
+                    specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+                let st = bench(&format!("{name} @ {} {}", dtype.name(),
+                                        backend.name()),
+                               budget, min_iters, || {
+                    opt.step(&mut params, &grads, 0.01);
+                });
+                stats_by.push((backend, st));
+            }
+            let sp = speedup(&stats_by[0].1, &stats_by[1].1);
+            println!("  {name:<11} {:<6} {:>15.0} {:>14.0} {sp:>8.2}x",
+                     dtype.name(), stats_by[0].1.per_iter_ns(),
+                     stats_by[1].1.per_iter_ns());
+            for (backend, st) in &stats_by {
+                let s = speedup(&stats_by[0].1, st);
+                bcsv.row(&[name.to_string(), dtype.name().to_string(),
+                           backend.name().to_string(),
+                           format!("{:.0}", st.per_iter_ns()),
+                           format!("{:.0}", st.throughput(d)),
+                           format!("{s:.3}")])?;
+            }
+            // loose perf floor, full runs only: the unrolled lanes must
+            // not badly regress the scalar reference (25ms quick budgets
+            // on a noisy CI box cannot resolve timing)
+            if !quick {
+                anyhow::ensure!(
+                    sp >= 0.8,
+                    "{name} @ {dtype:?}: simd runs at {sp:.2}x scalar \
+                     throughput (floor 0.8x)");
             }
         }
     }

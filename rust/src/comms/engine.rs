@@ -32,7 +32,7 @@
 
 use super::ring::{self, Schedule, WireScratch};
 use super::{check_comm_chunk, TimingModel};
-use crate::optim::{ParamSpec, StateDtype};
+use crate::optim::{Backend, ParamSpec, StateDtype};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
 
@@ -56,6 +56,10 @@ pub struct CommEngine {
     dtype: StateDtype,
     chunk: usize,
     threads: usize,
+    /// kernel backend for the wire codec, reduce, and unpack lanes
+    /// (bitwise identical across backends — DESIGN.md §13); pack stays a
+    /// plain memcpy in every backend
+    backend: Backend,
     /// per-rank flat gradient staging buffers (empty when ranks == 1)
     bufs: Vec<Vec<f32>>,
     /// per-rank error-feedback residuals (empty at f32 or ranks == 1)
@@ -103,6 +107,7 @@ impl CommEngine {
             dtype,
             chunk,
             threads,
+            backend: Backend::default(),
             bufs,
             residual,
             scratch,
@@ -114,6 +119,12 @@ impl CommEngine {
     /// Override the interconnect model (defaults to the TPU-v2 pod).
     pub fn set_timing(&mut self, timing: TimingModel) {
         self.timing = timing;
+    }
+
+    /// Route the wire codec, reduce, and unpack lanes through `backend`
+    /// (config `kernel_backend`; bitwise identical across backends).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
     }
 
     /// Configured rank count.
@@ -178,11 +189,11 @@ impl CommEngine {
             };
             if self.threads <= 1 {
                 ring::run_step_serial(&mut self.bufs, phase, regions,
-                                      self.dtype, self.chunk,
+                                      self.dtype, self.chunk, self.backend,
                                       &mut self.scratch[0]);
             } else {
                 ring::run_step_threaded(&mut self.bufs, phase, regions,
-                                        self.dtype, self.chunk,
+                                        self.dtype, self.chunk, self.backend,
                                         self.threads, &mut self.scratch);
             }
         }
@@ -210,14 +221,13 @@ impl CommEngine {
     /// historical `collectives::allreduce_mean` arithmetic, verbatim).
     fn unpack(&self, ranks: &mut [Vec<Tensor>]) {
         let inv = 1.0 / self.ranks as f32;
+        let be = self.backend.imp();
         for (buf, leaves) in self.bufs.iter().zip(ranks.iter_mut()) {
             let mut off = 0;
             for t in leaves {
                 let dst = t.data_mut();
                 let n = dst.len();
-                for (d, &s) in dst.iter_mut().zip(&buf[off..off + n]) {
-                    *d = s * inv;
-                }
+                be.scale_into(dst, &buf[off..off + n], inv);
                 off += n;
             }
         }
@@ -228,11 +238,11 @@ impl CommEngine {
     /// (64-aligned, so the q8 block grid is tiling- and
     /// thread-invariant); rank tasks round-robin over threads.
     fn apply_error_feedback(&mut self) {
-        let (dtype, chunk) = (self.dtype, self.chunk);
+        let (dtype, chunk, backend) = (self.dtype, self.chunk, self.backend);
         if self.threads <= 1 {
             let sc = &mut self.scratch[0];
             for (buf, res) in self.bufs.iter_mut().zip(&mut self.residual) {
-                error_feedback_rank(buf, res, dtype, chunk, sc);
+                error_feedback_rank(buf, res, dtype, chunk, backend, sc);
             }
             return;
         }
@@ -253,7 +263,8 @@ impl CommEngine {
             {
                 scope.spawn(move || {
                     for (buf, res) in bucket {
-                        error_feedback_rank(buf, res, dtype, chunk, sc);
+                        error_feedback_rank(buf, res, dtype, chunk, backend,
+                                            sc);
                     }
                 });
             }
@@ -294,19 +305,19 @@ impl CommEngine {
 
 /// One rank's error-feedback pass (see [`CommEngine`] docs).
 fn error_feedback_rank(buf: &mut [f32], res: &mut [f32], dtype: StateDtype,
-                       chunk: usize, scratch: &mut WireScratch) {
+                       chunk: usize, backend: Backend,
+                       scratch: &mut WireScratch) {
+    let be = backend.imp();
     let n = buf.len();
     let mut lo = 0;
     while lo < n {
         let hi = (lo + chunk).min(n);
         let len = hi - lo;
-        for (s, (&b, &q)) in scratch.stage[..len]
-            .iter_mut()
-            .zip(buf[lo..hi].iter().zip(&res[lo..hi]))
-        {
-            *s = b + q;
-        }
-        ring::wire_roundtrip_staged(scratch, len, dtype);
+        // u = grad + residual, staged through the backend's add lane
+        // (same element order as the historical zip loop)
+        scratch.stage[..len].copy_from_slice(&buf[lo..hi]);
+        be.add_assign(&mut scratch.stage[..len], &res[lo..hi]);
+        ring::wire_roundtrip_staged(scratch, len, dtype, backend);
         for k in 0..len {
             let v = scratch.decode[k];
             res[lo + k] = scratch.stage[k] - v;
@@ -484,7 +495,8 @@ mod tests {
             for k in lo..hi {
                 sc.stage[k - lo] = f1[k] + r1[k];
             }
-            ring::wire_roundtrip_staged(&mut sc, hi - lo, StateDtype::Q8);
+            ring::wire_roundtrip_staged(&mut sc, hi - lo, StateDtype::Q8,
+                                        Backend::Scalar);
             for k in lo..hi {
                 expect[k] = sc.stage[k - lo] - sc.decode[k - lo];
             }

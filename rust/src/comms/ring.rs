@@ -35,7 +35,7 @@
 
 use super::wire_bytes_for;
 use crate::optim::qstate::codec;
-use crate::optim::StateDtype;
+use crate::optim::{Backend, StateDtype};
 
 /// Which operation a schedule step applies to its regions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,6 +165,8 @@ pub struct WireScratch {
     pub scales: Vec<f32>,
     /// q8 codes
     pub codes: Vec<u8>,
+    /// bf16 wire words
+    pub half: Vec<u16>,
 }
 
 impl WireScratch {
@@ -175,6 +177,7 @@ impl WireScratch {
             decode: vec![0.0; chunk],
             scales: vec![0.0; codec::q8_blocks(chunk)],
             codes: vec![0; chunk],
+            half: vec![0; chunk],
         }
     }
 }
@@ -183,24 +186,25 @@ impl WireScratch {
 /// `scratch.decode[..vals.len()]` — the value the receiving side of a
 /// link observes. `vals.len()` must not exceed the scratch tile size.
 /// (The f32 wire is the identity; callers skip the call entirely.)
-pub fn wire_roundtrip(vals: &[f32], dtype: StateDtype,
+/// Codec lanes dispatch through `backend` (bitwise identical across
+/// backends — DESIGN.md §13).
+pub fn wire_roundtrip(vals: &[f32], dtype: StateDtype, backend: Backend,
                       scratch: &mut WireScratch) {
     let n = vals.len();
     debug_assert!(n <= scratch.decode.len(), "tile exceeds scratch");
+    let be = backend.imp();
     match dtype {
         StateDtype::F32 => scratch.decode[..n].copy_from_slice(vals),
         StateDtype::Bf16 => {
-            for (d, &v) in scratch.decode[..n].iter_mut().zip(vals) {
-                *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
-            }
+            be.bf16_encode(vals, &mut scratch.half[..n]);
+            be.bf16_decode(&scratch.half[..n], &mut scratch.decode[..n]);
         }
         StateDtype::Q8 => {
             let blocks = codec::q8_blocks(n);
-            codec::q8_encode_slice(vals, &mut scratch.scales[..blocks],
-                                   &mut scratch.codes[..n]);
-            codec::q8_decode_slice(&scratch.scales[..blocks],
-                                   &scratch.codes[..n],
-                                   &mut scratch.decode[..n]);
+            be.q8_encode(vals, &mut scratch.scales[..blocks],
+                         &mut scratch.codes[..n]);
+            be.q8_decode(&scratch.scales[..blocks], &scratch.codes[..n],
+                         &mut scratch.decode[..n]);
         }
     }
 }
@@ -210,21 +214,21 @@ pub fn wire_roundtrip(vals: &[f32], dtype: StateDtype,
 /// stage from sums it is still holding mutably — the error-feedback
 /// path). Output lands in `scratch.decode[..len]`.
 pub fn wire_roundtrip_staged(scratch: &mut WireScratch, len: usize,
-                             dtype: StateDtype) {
-    let WireScratch { stage, decode, scales, codes } = scratch;
+                             dtype: StateDtype, backend: Backend) {
+    let be = backend.imp();
+    let WireScratch { stage, decode, scales, codes, half } = scratch;
     match dtype {
         StateDtype::F32 => decode[..len].copy_from_slice(&stage[..len]),
         StateDtype::Bf16 => {
-            for (d, &v) in decode[..len].iter_mut().zip(&stage[..len]) {
-                *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
-            }
+            be.bf16_encode(&stage[..len], &mut half[..len]);
+            be.bf16_decode(&half[..len], &mut decode[..len]);
         }
         StateDtype::Q8 => {
             let blocks = codec::q8_blocks(len);
-            codec::q8_encode_slice(&stage[..len], &mut scales[..blocks],
-                                   &mut codes[..len]);
-            codec::q8_decode_slice(&scales[..blocks], &codes[..len],
-                                   &mut decode[..len]);
+            be.q8_encode(&stage[..len], &mut scales[..blocks],
+                         &mut codes[..len]);
+            be.q8_decode(&scales[..blocks], &codes[..len],
+                         &mut decode[..len]);
         }
     }
 }
@@ -234,10 +238,11 @@ pub fn wire_roundtrip_staged(scratch: &mut WireScratch, len: usize,
 /// the same length (the region length); `phase` must not be
 /// [`Phase::Finalize`] (which has one buffer — see [`run_finalize`]).
 pub fn run_pair(phase: Phase, src: &[f32], dst: &mut [f32],
-                dtype: StateDtype, chunk: usize,
+                dtype: StateDtype, chunk: usize, backend: Backend,
                 scratch: &mut WireScratch) {
     debug_assert_eq!(src.len(), dst.len());
     debug_assert_ne!(phase, Phase::Finalize);
+    let be = backend.imp();
     let n = src.len();
     let mut lo = 0;
     while lo < n {
@@ -246,20 +251,14 @@ pub fn run_pair(phase: Phase, src: &[f32], dst: &mut [f32],
         match (phase, dtype) {
             // f32 wire is the identity — accumulate / copy directly
             // (this is the historical `collectives` arithmetic verbatim)
-            (Phase::Reduce, StateDtype::F32) => {
-                for (x, y) in d.iter_mut().zip(s) {
-                    *x += y;
-                }
-            }
+            (Phase::Reduce, StateDtype::F32) => be.add_assign(d, s),
             (Phase::Gather, StateDtype::F32) => d.copy_from_slice(s),
             (Phase::Reduce, _) => {
-                wire_roundtrip(s, dtype, scratch);
-                for (x, y) in d.iter_mut().zip(&scratch.decode[..s.len()]) {
-                    *x += y;
-                }
+                wire_roundtrip(s, dtype, backend, scratch);
+                be.add_assign(d, &scratch.decode[..s.len()]);
             }
             (Phase::Gather, _) => {
-                wire_roundtrip(s, dtype, scratch);
+                wire_roundtrip(s, dtype, backend, scratch);
                 d.copy_from_slice(&scratch.decode[..s.len()]);
             }
             (Phase::Finalize, _) => unreachable!("finalize has one buffer"),
@@ -271,31 +270,30 @@ pub fn run_pair(phase: Phase, src: &[f32], dst: &mut [f32],
 /// In-place wire round-trip of an owner's completed class (the finalize
 /// step of compressed schedules), tiled like [`run_pair`].
 pub fn run_finalize(buf: &mut [f32], dtype: StateDtype, chunk: usize,
-                    scratch: &mut WireScratch) {
+                    backend: Backend, scratch: &mut WireScratch) {
     debug_assert_ne!(dtype, StateDtype::F32, "f32 schedules elide finalize");
+    let be = backend.imp();
     let n = buf.len();
     let mut lo = 0;
     while lo < n {
         let hi = (lo + chunk).min(n);
         let len = hi - lo;
         scratch.stage[..len].copy_from_slice(&buf[lo..hi]);
-        // field-disjoint borrows: stage is the input, scales/codes the
-        // wire bytes, buf the output
+        // field-disjoint borrows: stage is the input, scales/codes/half
+        // the wire bytes, buf the output
         let stage = &scratch.stage[..len];
         match dtype {
             StateDtype::F32 => unreachable!(),
             StateDtype::Bf16 => {
-                for (d, &v) in buf[lo..hi].iter_mut().zip(stage) {
-                    *d = codec::bf16_to_f32(codec::f32_to_bf16(v));
-                }
+                be.bf16_encode(stage, &mut scratch.half[..len]);
+                be.bf16_decode(&scratch.half[..len], &mut buf[lo..hi]);
             }
             StateDtype::Q8 => {
                 let blocks = codec::q8_blocks(len);
-                codec::q8_encode_slice(stage, &mut scratch.scales[..blocks],
-                                       &mut scratch.codes[..len]);
-                codec::q8_decode_slice(&scratch.scales[..blocks],
-                                       &scratch.codes[..len],
-                                       &mut buf[lo..hi]);
+                be.q8_encode(stage, &mut scratch.scales[..blocks],
+                             &mut scratch.codes[..len]);
+                be.q8_decode(&scratch.scales[..blocks],
+                             &scratch.codes[..len], &mut buf[lo..hi]);
             }
         }
         lo = hi;
@@ -346,9 +344,10 @@ impl RankBufs {
 /// Execute one schedule step's regions with `threads` workers (tasks
 /// round-robin over region index — the assignment is irrelevant to the
 /// result, which is bitwise identical at any thread count).
+#[allow(clippy::too_many_arguments)]
 pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
                          regions: &[Region], dtype: StateDtype,
-                         chunk: usize, threads: usize,
+                         chunk: usize, backend: Backend, threads: usize,
                          scratch: &mut [WireScratch]) {
     let shared = RankBufs::new(bufs);
     std::thread::scope(|scope| {
@@ -365,11 +364,11 @@ pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
                     unsafe {
                         if phase == Phase::Finalize {
                             let b = shared.range_mut(reg.src, reg.lo, reg.hi);
-                            run_finalize(b, dtype, chunk, sc);
+                            run_finalize(b, dtype, chunk, backend, sc);
                         } else {
                             let s = shared.range(reg.src, reg.lo, reg.hi);
                             let d = shared.range_mut(reg.dst, reg.lo, reg.hi);
-                            run_pair(phase, s, d, dtype, chunk, sc);
+                            run_pair(phase, s, d, dtype, chunk, backend, sc);
                         }
                     }
                 }
@@ -383,11 +382,11 @@ pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
 /// [`run_step_threaded`]).
 pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
                        regions: &[Region], dtype: StateDtype, chunk: usize,
-                       scratch: &mut WireScratch) {
+                       backend: Backend, scratch: &mut WireScratch) {
     for reg in regions {
         if phase == Phase::Finalize {
             run_finalize(&mut bufs[reg.src][reg.lo..reg.hi], dtype, chunk,
-                         scratch);
+                         backend, scratch);
             continue;
         }
         // split-borrow src and dst rank buffers (always distinct ranks)
@@ -399,7 +398,7 @@ pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
             (&right[0], &mut left[reg.dst])
         };
         run_pair(phase, &a[reg.lo..reg.hi], &mut b[reg.lo..reg.hi], dtype,
-                 chunk, scratch);
+                 chunk, backend, scratch);
     }
 }
 
@@ -484,26 +483,30 @@ mod tests {
         }
     }
 
-    /// A wire round-trip is idempotent at every dtype (the finalize /
-    /// all-gather stability argument).
+    /// A wire round-trip is idempotent at every dtype and backend (the
+    /// finalize / all-gather stability argument).
     #[test]
     fn wire_roundtrip_is_idempotent() {
         let mut rng = crate::rng::Rng::new(3);
         let vals: Vec<f32> =
             (0..200).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        for dtype in StateDtype::ALL {
-            let mut sc = WireScratch::new(256);
-            wire_roundtrip(&vals, dtype, &mut sc);
-            let once: Vec<f32> = sc.decode[..vals.len()].to_vec();
-            wire_roundtrip(&once, dtype, &mut sc);
-            for (a, b) in once.iter().zip(&sc.decode[..vals.len()]) {
-                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?}");
+        for backend in Backend::ALL {
+            for dtype in StateDtype::ALL {
+                let mut sc = WireScratch::new(256);
+                wire_roundtrip(&vals, dtype, backend, &mut sc);
+                let once: Vec<f32> = sc.decode[..vals.len()].to_vec();
+                wire_roundtrip(&once, dtype, backend, &mut sc);
+                for (a, b) in once.iter().zip(&sc.decode[..vals.len()]) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{dtype:?} {}", backend.name());
+                }
             }
         }
     }
 
     /// Tiling is bitwise invisible: any block-aligned chunk produces the
-    /// same receiver-side values as one whole-region pass.
+    /// same receiver-side values as one whole-region pass — and the
+    /// backend never shows through either.
     #[test]
     fn run_pair_chunking_is_bitwise_invisible() {
         let mut rng = crate::rng::Rng::new(9);
@@ -513,14 +516,19 @@ mod tests {
             for phase in [Phase::Reduce, Phase::Gather] {
                 let mut whole = vec![0.5f32; src.len()];
                 let mut sc = WireScratch::new(512);
-                run_pair(phase, &src, &mut whole, dtype, 512, &mut sc);
+                run_pair(phase, &src, &mut whole, dtype, 512,
+                         Backend::Scalar, &mut sc);
                 for chunk in [64usize, 128, 256] {
-                    let mut tiled = vec![0.5f32; src.len()];
-                    let mut sc = WireScratch::new(chunk);
-                    run_pair(phase, &src, &mut tiled, dtype, chunk, &mut sc);
-                    for (a, b) in whole.iter().zip(&tiled) {
-                        assert_eq!(a.to_bits(), b.to_bits(),
-                                   "{dtype:?} {phase:?} chunk {chunk}");
+                    for backend in Backend::ALL {
+                        let mut tiled = vec![0.5f32; src.len()];
+                        let mut sc = WireScratch::new(chunk);
+                        run_pair(phase, &src, &mut tiled, dtype, chunk,
+                                 backend, &mut sc);
+                        for (a, b) in whole.iter().zip(&tiled) {
+                            assert_eq!(a.to_bits(), b.to_bits(),
+                                       "{dtype:?} {phase:?} chunk {chunk} {}",
+                                       backend.name());
+                        }
                     }
                 }
             }

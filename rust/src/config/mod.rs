@@ -9,7 +9,7 @@
 pub mod toml;
 
 use self::toml::TomlValue;
-use crate::optim::{GroupSpec, OptimSpec, SplitPolicy, StateDtype};
+use crate::optim::{Backend, GroupSpec, OptimSpec, SplitPolicy, StateDtype};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
@@ -167,6 +167,12 @@ pub struct TrainConfig {
     /// serial. Results are bitwise identical at any value and any
     /// `comm_dtype` — the ring schedule fixes the reduction order.
     pub comm_threads: usize,
+    /// kernel backend for the split-path hot loops (step kernels, state
+    /// codecs, global-norm partials, comm wire lanes): "scalar" |
+    /// "simd". A pure performance knob — every backend is bitwise
+    /// identical (DESIGN.md §13). The default tracks the `simd` cargo
+    /// feature.
+    pub kernel_backend: Backend,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -191,6 +197,7 @@ impl Default for TrainConfig {
             comm_dtype: StateDtype::F32,
             comm_chunk: crate::comms::DEFAULT_COMM_CHUNK,
             comm_threads: 1,
+            kernel_backend: Backend::default(),
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -276,7 +283,7 @@ const OPTIM_KEYS: &[&str] = &[
 const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
     "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
-    "comm_threads", "seed", "artifacts_dir", "out_dir",
+    "comm_threads", "kernel_backend", "seed", "artifacts_dir", "out_dir",
 ];
 
 /// Keys accepted in each `[[optim.group]]`.
@@ -408,6 +415,9 @@ impl TrainConfig {
                 Some(v) => v as usize,
                 None => d.comm_threads,
             },
+            kernel_backend: Backend::parse(&get_str(
+                &train_tbl, "kernel_backend", d.kernel_backend.name()))
+                .context("[train] kernel_backend")?,
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -445,6 +455,13 @@ impl TrainConfig {
             bail!("state_dtype = {:?} applies to the split path only (the \
                    fused artifact keeps its optimizer state in f32 device \
                    buffers)", self.state_dtype.name());
+        }
+        if self.kernel_backend != Backend::default()
+            && self.exec == ExecMode::Fused
+        {
+            bail!("kernel_backend = {:?} applies to the split path only \
+                   (the fused artifact contains its own kernels)",
+                  self.kernel_backend.name());
         }
         crate::optim::kernel::check_chunk(self.step_chunk)
             .context("[train] step_chunk")?;
@@ -540,6 +557,7 @@ impl TrainConfig {
             .state_dtype(self.state_dtype)
             .step_chunk(self.step_chunk)
             .threads(self.step_threads)
+            .kernel_backend(self.kernel_backend)
             .split_policy(SplitPolicy::IntraLeaf);
         if let Some(c) = self.optim.clip_value {
             spec = spec.clip_by_value(c as f32);
@@ -711,6 +729,49 @@ warmup_steps = 40
             .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("comm_dtpye") && msg.contains("comm_dtype"),
+                "{msg}");
+    }
+
+    /// ISSUE 6 tentpole: the kernel backend parses, defaults to the
+    /// feature-selected backend, and is fused-path-rejected like the
+    /// other split knobs.
+    #[test]
+    fn kernel_backend_parses_defaults_and_validates() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.kernel_backend, Backend::default());
+        let cfg = TrainConfig::from_toml(
+            "[train]\nkernel_backend = \"simd\"\n").unwrap();
+        assert_eq!(cfg.kernel_backend, Backend::Simd);
+        let cfg = TrainConfig::from_toml(
+            "[train]\nkernel_backend = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.kernel_backend, Backend::Scalar);
+        // unknown backend names must fail with a message, not default
+        assert!(TrainConfig::from_toml(
+            "[train]\nkernel_backend = \"avx512\"\n").is_err());
+        // split-path knob: fused rejects a non-default backend, but
+        // accepts the explicit default (whichever the feature picked)
+        let other = Backend::ALL.iter().copied()
+            .find(|b| *b != Backend::default()).unwrap();
+        let toml = format!(
+            "[train]\nexec = \"fused\"\nkernel_backend = \"{}\"\n",
+            other.name());
+        assert!(TrainConfig::from_toml(&toml).is_err());
+        let toml = format!(
+            "[train]\nexec = \"fused\"\nkernel_backend = \"{}\"\n",
+            Backend::default().name());
+        assert!(TrainConfig::from_toml(&toml).is_ok());
+        // composes with the other split-path knobs
+        let cfg = TrainConfig::from_toml(
+            "[train]\nstep_threads = 4\nstate_dtype = \"q8\"\n\
+             kernel_backend = \"simd\"\n").unwrap();
+        assert_eq!((cfg.step_threads, cfg.state_dtype, cfg.kernel_backend),
+                   (4, StateDtype::Q8, Backend::Simd));
+        // a typo'd key names the nearest valid one
+        let err = TrainConfig::from_toml(
+            "[train]\nkernel_backened = \"simd\"\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("kernel_backened")
+                    && msg.contains("kernel_backend"),
                 "{msg}");
     }
 

@@ -139,10 +139,14 @@ impl Trainer {
                     .context("building the optimizer from [optim]")?;
                 // the gradient exchange: buffers, residuals, and the
                 // ring schedule are all sized once, here
-                let comms = CommEngine::new(
+                let mut comms = CommEngine::new(
                     &specs, cfg.workers, cfg.comm_dtype, cfg.comm_chunk,
                     cfg.comm_threads)
                     .context("building the comm engine from [train]")?;
+                // the optimizer side gets its backend via optim_spec();
+                // the wire side is set here so both halves of the split
+                // engine run the same kernels
+                comms.set_backend(cfg.kernel_backend);
                 Engine::Split { grad_art, params, opt, comms }
             }
             ExecMode::Fused => {

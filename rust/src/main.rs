@@ -39,6 +39,7 @@ fn commands() -> Vec<Command> {
             .option("comm-dtype", "wire precision of the gradient exchange: f32 | bf16 | q8 (split path; compressed dtypes carry error-feedback residuals)")
             .option("comm-threads", "host threads for the ring collectives (1 = serial; bitwise-identical results)")
             .option("comm-chunk", "wire tile for the ring collectives, in elements (multiple of 64; bitwise-identical results)")
+            .option("kernel-backend", "tile-kernel implementation: scalar | simd (split path; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
@@ -139,6 +140,9 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     }
     if let Some(c) = args.opt_count("comm-chunk")? {
         cfg.comm_chunk = c; // cfg.validate() checks block alignment
+    }
+    if let Some(b) = args.opt("kernel-backend") {
+        cfg.kernel_backend = sm3::optim::Backend::parse(b)?;
     }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;

@@ -8,6 +8,7 @@
 //! (the reference implementation's d=1.0) and β1 momentum, matching the
 //! paper's experimental setup (all methods run with momentum).
 
+use super::backend::Backend;
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
 use crate::tensor::Tensor;
@@ -89,6 +90,14 @@ impl Adafactor {
         Self { beta1, beta2, kinds, mom_ids, store,
                specs: specs.to_vec(), scratch: Vec::new(),
                mom_buf: Vec::new(), stat_a: Vec::new(), stat_b: Vec::new() }
+    }
+
+    /// Route the state store's codec lanes through `backend` (bitwise
+    /// identical across backends — DESIGN.md §13). Adafactor's update
+    /// loops are reduction-coupled (row/col means, whole-leaf RMS clip)
+    /// and stay leaf-granular indexed code.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.store.set_backend(backend);
     }
 
     /// (rows, cols) of a factored leaf, `None` for a full-v leaf (tests).

@@ -1,6 +1,7 @@
 //! Adagrad (Duchi, Hazan & Singer) with heavy-ball momentum — the
 //! linear-memory method SM3 is measured against (paper Eq. 1–2).
 
+use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
@@ -11,6 +12,9 @@ pub struct Adagrad {
     beta1: f32,
     /// streaming tile (elements; multiple of the q8 block)
     chunk: usize,
+    /// kernel backend for the update lanes (bitwise identical across
+    /// backends — DESIGN.md §13)
+    backend: Backend,
     scratch: ChunkScratch,
     /// leaf `i`: slot `2i` is the elementwise accumulator γ (Eq. 1),
     /// slot `2i + 1` is the momentum
@@ -40,8 +44,16 @@ impl Adagrad {
             slots.add_zeros(s.numel()); // acc
             slots.add_zeros(s.numel()); // mom
         }
-        Self { beta1, chunk, scratch: ChunkScratch::default(), slots,
+        Self { beta1, chunk, backend: Backend::default(),
+               scratch: ChunkScratch::default(), slots,
                specs: specs.to_vec() }
+    }
+
+    /// Route the update lanes and the state store's codec lanes through
+    /// `backend` (bitwise identical across backends).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+        self.slots.set_backend(backend);
     }
 
     /// The full elementwise second-moment statistics γ_t (Fig. 1 / Fig. 5),
@@ -58,12 +70,13 @@ impl Optimizer for Adagrad {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let beta1 = self.beta1;
+        let be = self.backend.imp();
         for idx in 0..params.len() {
             kernel::step_chunked2(
                 &mut self.slots, 2 * idx, 2 * idx + 1, self.chunk,
                 &mut self.scratch, params[idx].data_mut(), grads[idx].data(),
                 |w, g, acc, mom| {
-                    kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+                    be.adagrad_update(beta1, lr, w, g, acc, mom)
                 });
         }
     }
@@ -72,9 +85,10 @@ impl Optimizer for Adagrad {
         assert_eq!(self.specs.len(), 1,
                    "step_flat needs a single-leaf instance");
         let beta1 = self.beta1;
+        let be = self.backend.imp();
         kernel::step_chunked2(&mut self.slots, 0, 1, self.chunk,
                               &mut self.scratch, w, g, |w, g, acc, mom| {
-            kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+            be.adagrad_update(beta1, lr, w, g, acc, mom)
         });
     }
 

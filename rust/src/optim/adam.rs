@@ -1,6 +1,7 @@
 //! Adam (Kingma & Ba) — the 2×d-state baseline whose memory footprint
 //! motivates the paper (Tables 1–2).
 
+use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
@@ -20,6 +21,9 @@ pub struct Adam {
     t: f32,
     /// streaming tile (elements; multiple of the q8 block)
     chunk: usize,
+    /// kernel backend for the update lanes (bitwise identical across
+    /// backends — DESIGN.md §13)
+    backend: Backend,
     scratch: ChunkScratch,
     /// leaf `i`: slot `2i` is the first moment m, slot `2i + 1` the
     /// second moment v
@@ -52,8 +56,16 @@ impl Adam {
             slots.add_zeros(s.numel()); // v
         }
         Self { beta1, beta2, eps, t: 0.0, chunk,
+               backend: Backend::default(),
                scratch: ChunkScratch::default(), slots,
                specs: specs.to_vec() }
+    }
+
+    /// Route the update lanes and the state store's codec lanes through
+    /// `backend` (bitwise identical across backends).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+        self.slots.set_backend(backend);
     }
 
     /// Advance the step count and return this step's `(bc1, bc2)` bias
@@ -72,12 +84,13 @@ impl Optimizer for Adam {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let (bc1, bc2) = self.advance();
         let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let be = self.backend.imp();
         for idx in 0..params.len() {
             kernel::step_chunked2(
                 &mut self.slots, 2 * idx, 2 * idx + 1, self.chunk,
                 &mut self.scratch, params[idx].data_mut(), grads[idx].data(),
                 |w, g, m, v| {
-                    kernel::adam_chunk(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
+                    be.adam_update(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
                 });
         }
     }
@@ -87,9 +100,10 @@ impl Optimizer for Adam {
                    "step_flat needs a single-leaf instance");
         let (bc1, bc2) = self.advance();
         let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let be = self.backend.imp();
         kernel::step_chunked2(&mut self.slots, 0, 1, self.chunk,
                               &mut self.scratch, w, g, |w, g, m, v| {
-            kernel::adam_chunk(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
+            be.adam_update(b1, b2, eps, bc1, bc2, lr, w, g, m, v)
         });
     }
 

@@ -37,6 +37,7 @@
 //!   [`Pipeline`] (see [`super::transform`] for the stage order and the
 //!   two-phase global-norm reduce).
 
+use super::backend::Backend;
 use super::kernel;
 use super::parallel::{ParallelStep, SplitPolicy};
 use super::qstate::StateDtype;
@@ -203,6 +204,33 @@ impl Method {
         matches!(self, Method::Adam(_))
     }
 
+    /// Can this method's update of a rank-`rank` leaf be expressed as a
+    /// per-element kernel (and therefore sharded *inside* the leaf and
+    /// streamed through the chunked drivers)?
+    ///
+    /// This is the registry's capability declaration — the match is
+    /// deliberately exhaustive (no `_` arm), so adding a [`Method`]
+    /// variant without declaring its chunking capability is a compile
+    /// error rather than a silent fall-through to the leaf-granular
+    /// path (a perf trap, not a correctness one). The name-based
+    /// [`kernel::elementwise`] is a thin bridge over this method.
+    ///
+    /// Adagrad, Adam and SGD+momentum update every element independently
+    /// at any rank. SM3 is element-wise only under the singleton cover
+    /// (rank ≤ 1 — where it coincides with Adagrad); its matrix/tensor
+    /// covers fold each `nu` into row/col maxima. Adafactor is never
+    /// element-wise: even its full-`v` vector path ends in a whole-leaf
+    /// RMS clip.
+    pub fn elementwise_at_rank(&self, rank: usize) -> bool {
+        match self {
+            Method::Adam(_) | Method::Adagrad(_) | Method::SgdMomentum(_) => {
+                true
+            }
+            Method::Sm3(_) => rank <= 1,
+            Method::Adafactor(_) => false,
+        }
+    }
+
     /// β₁ of the method (for validation and introspection).
     pub fn beta1(&self) -> f32 {
         match self {
@@ -243,25 +271,35 @@ impl Method {
                         -> Box<dyn Optimizer> {
         match self {
             Method::Adam(hp) => {
-                Box::new(Adam::with_opts(specs, hp.beta1, hp.beta2, hp.eps,
-                                         opts.dtype, opts.chunk))
+                let mut o = Adam::with_opts(specs, hp.beta1, hp.beta2,
+                                            hp.eps, opts.dtype, opts.chunk);
+                o.set_backend(opts.backend);
+                Box::new(o)
             }
             Method::Sm3(hp) => {
-                Box::new(Sm3::with_opts(specs, hp.variant, hp.beta1,
-                                        opts.dtype, opts.chunk))
+                let mut o = Sm3::with_opts(specs, hp.variant, hp.beta1,
+                                           opts.dtype, opts.chunk);
+                o.set_backend(opts.backend);
+                Box::new(o)
             }
             Method::Adagrad(hp) => {
-                Box::new(Adagrad::with_opts(specs, hp.beta1, opts.dtype,
-                                            opts.chunk))
+                let mut o = Adagrad::with_opts(specs, hp.beta1, opts.dtype,
+                                               opts.chunk);
+                o.set_backend(opts.backend);
+                Box::new(o)
             }
             Method::Adafactor(hp) => {
                 // leaf-granular two-pass update: no streaming tile
-                Box::new(Adafactor::with_dtype(specs, hp.beta1, hp.beta2,
-                                               opts.dtype))
+                let mut o = Adafactor::with_dtype(specs, hp.beta1, hp.beta2,
+                                                  opts.dtype);
+                o.set_backend(opts.backend);
+                Box::new(o)
             }
             Method::SgdMomentum(hp) => {
-                Box::new(SgdMomentum::with_opts(specs, hp.beta1, opts.dtype,
-                                                opts.chunk))
+                let mut o = SgdMomentum::with_opts(specs, hp.beta1,
+                                                   opts.dtype, opts.chunk);
+                o.set_backend(opts.backend);
+                Box::new(o)
             }
         }
     }
@@ -275,11 +313,16 @@ pub struct StateOpts {
     /// Streaming tile in elements — a positive multiple of the q8 block
     /// (config `step_chunk`; traversal granularity only, bitwise-stable).
     pub chunk: usize,
+    /// Kernel backend the hot loops dispatch to (config `kernel_backend`,
+    /// DESIGN.md §13; every backend is bitwise identical, so this is a
+    /// pure performance knob).
+    pub backend: Backend,
 }
 
 impl Default for StateOpts {
     fn default() -> Self {
-        Self { dtype: StateDtype::F32, chunk: kernel::DEFAULT_CHUNK }
+        Self { dtype: StateDtype::F32, chunk: kernel::DEFAULT_CHUNK,
+               backend: Backend::default() }
     }
 }
 
@@ -420,6 +463,13 @@ impl OptimSpec {
     /// Set the streaming tile (positive multiple of the q8 block).
     pub fn step_chunk(mut self, chunk: usize) -> Self {
         self.state.chunk = chunk;
+        self
+    }
+
+    /// Set the kernel backend the hot loops dispatch to (bitwise
+    /// identical across backends — a pure performance knob).
+    pub fn kernel_backend(mut self, backend: Backend) -> Self {
+        self.state.backend = backend;
         self
     }
 
@@ -565,11 +615,10 @@ impl OptimSpec {
         let uniform_scale = scale.iter().all(|&s| s == 1.0);
         let inner: Box<dyn Optimizer> = if self.threads > 1 || !uniform_scale
         {
-            let name = self.method.registry_name();
             let (method, state) = (self.method, self.state);
             let mut engine = ParallelStep::with_leaf_factory(
                 specs, self.threads, self.policy,
-                |s| kernel::elementwise(name, s.shape.len()),
+                |s| method.elementwise_at_rank(s.shape.len()),
                 |s| Ok(method.build_serial(std::slice::from_ref(s), &state)),
             )?;
             if !uniform_scale {
@@ -588,8 +637,10 @@ impl OptimSpec {
         let needs_pipeline = stages.iter().any(UpdateTransform::is_grad_stage)
             || wd.iter().any(|&w| w != 0.0);
         Ok(if needs_pipeline {
-            Box::new(Pipeline::with_overrides(inner, specs, stages, wd,
-                                              scale, self.threads)?)
+            let mut pipe = Pipeline::with_overrides(inner, specs, stages, wd,
+                                                    scale, self.threads)?;
+            pipe.set_backend(self.state.backend);
+            Box::new(pipe)
         } else {
             inner
         })
@@ -704,6 +755,69 @@ mod tests {
             assert_eq!(m.registry_name(), *name);
         }
         assert!(Method::from_name("adamw").is_err());
+    }
+
+    /// Satellite (ISSUE 6): every registry entry declares its chunking
+    /// capability explicitly through [`Method::elementwise_at_rank`]
+    /// (the match is exhaustive, so a new method cannot silently fall to
+    /// the leaf-granular path), and the name-based `kernel::elementwise`
+    /// bridge agrees with the typed declaration everywhere.
+    #[test]
+    fn every_registry_method_declares_chunking_capability() {
+        for name in crate::optim::ALL {
+            let m = Method::from_name(name).unwrap();
+            for rank in 0..5 {
+                assert_eq!(m.elementwise_at_rank(rank),
+                           kernel::elementwise(name, rank),
+                           "{name} @ rank {rank}: typed capability and \
+                            name bridge disagree");
+            }
+            // vectors are chunkable for everything but Adafactor
+            assert_eq!(m.elementwise_at_rank(1),
+                       *name != "adafactor", "{name}");
+        }
+        // unknown names are never element-wise through the bridge
+        assert!(!kernel::elementwise("nope", 1));
+    }
+
+    /// The backend knob flows through the builder to the engine without
+    /// changing the trajectory (backends are bitwise identical).
+    #[test]
+    fn kernel_backend_knob_flows_through() {
+        use crate::optim::Backend;
+        let specs = specs();
+        let mut rng = Rng::new(7);
+        let init: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        for name in crate::optim::ALL {
+            let mut pa = init.clone();
+            let mut pb = init.clone();
+            let mut scalar = OptimSpec::named(name).unwrap()
+                .state_dtype(StateDtype::Q8)
+                .kernel_backend(Backend::Scalar)
+                .clip_by_global_norm(1.0)
+                .build(&specs).unwrap();
+            let mut simd = OptimSpec::named(name).unwrap()
+                .state_dtype(StateDtype::Q8)
+                .kernel_backend(Backend::Simd)
+                .clip_by_global_norm(1.0)
+                .build(&specs).unwrap();
+            for _ in 0..3 {
+                scalar.step(&mut pa, &grads, 0.1);
+                simd.step(&mut pb, &grads, 0.1);
+            }
+            for (a, b) in pa.iter().zip(&pb) {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+                }
+            }
+        }
     }
 
     /// The typed path is bitwise identical to the legacy shim for every

@@ -1,0 +1,219 @@
+//! Kernel backend layering (DESIGN.md §13): one [`KernelBackend`] trait
+//! under every tile-granular inner loop in the crate — step-kernel update
+//! lanes, q8/bf16 codecs, block amax, global-norm partials, and the comms
+//! reduce/unpack lanes — with two implementations gated bitwise against
+//! each other:
+//!
+//! * [`ScalarBackend`] — the reference semantics. Delegates to the same
+//!   named loops the crate has always run (`kernel::adam_chunk`,
+//!   `codec::q8_encode_slice`, …), so "scalar" *is* the seed behavior.
+//! * [`SimdBackend`] — explicit 8-lane unrolling of the same loops in
+//!   stable Rust (fixed-size inner blocks the autovectorizer maps onto
+//!   vector units), written so every primitive is bitwise identical to
+//!   scalar: elementwise lanes keep the exact per-element op sequence
+//!   (no FMA contraction, no reassociation), block amax exploits that
+//!   max over NaN-free absolute values is order-invariant, and the f64
+//!   sum-of-squares partial deliberately stays a single sequential
+//!   accumulator because float addition does *not* reassociate.
+//!
+//! Dispatch is by the [`Backend`] enum — a `Copy` token threaded through
+//! [`StateOpts`](crate::optim::StateOpts), the optimizer structs, the
+//! comm engine, `TrainConfig::kernel_backend`, and the `--kernel-backend`
+//! CLI flag. [`Backend::imp`] resolves it to a `&'static dyn
+//! KernelBackend`; one virtual call per *tile* (4096 elements on the step
+//! path, 64-element blocks only inside a slice call) is noise next to the
+//! sqrt/div arithmetic it amortizes.
+//!
+//! The `simd` cargo feature does not gate compilation — both backends
+//! always build and are proptest-gated against each other — it only
+//! flips [`Backend::default`] from `Scalar` to `Simd`, so a
+//! `--features simd` build exercises the vectorized lanes everywhere
+//! without touching any call site.
+
+pub mod scalar;
+pub mod simd;
+
+pub use scalar::ScalarBackend;
+pub use simd::SimdBackend;
+
+use anyhow::{bail, Result};
+
+/// Which [`KernelBackend`] implementation the hot loops dispatch to.
+///
+/// Parsed from `TrainConfig::kernel_backend` / `--kernel-backend`;
+/// defaults to [`Backend::Scalar`] (reference semantics) unless the crate
+/// is built with `--features simd`, which flips the default to
+/// [`Backend::Simd`]. Every implementation is bitwise identical on every
+/// primitive (property-tested in `crate::proptest`), so the choice is a
+/// pure performance knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Reference scalar loops — the seed semantics, verbatim.
+    Scalar,
+    /// Explicit 8-lane unrolled loops, bitwise identical to scalar.
+    Simd,
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        if cfg!(feature = "simd") {
+            Backend::Simd
+        } else {
+            Backend::Scalar
+        }
+    }
+}
+
+impl Backend {
+    /// Every backend, scalar (reference) first.
+    pub const ALL: [Backend; 2] = [Backend::Scalar, Backend::Simd];
+
+    /// Parse a config/CLI name ("scalar" | "simd").
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "scalar" => Backend::Scalar,
+            "simd" => Backend::Simd,
+            other => bail!("unknown kernel backend {other:?} (scalar|simd)"),
+        })
+    }
+
+    /// Canonical name (inverse of [`Backend::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Simd => "simd",
+        }
+    }
+
+    /// Resolve the token to its implementation. `&'static` because both
+    /// backends are stateless unit structs; callers hoist this out of
+    /// per-element loops and pay one virtual dispatch per tile.
+    #[inline]
+    pub fn imp(self) -> &'static dyn KernelBackend {
+        match self {
+            Backend::Scalar => &ScalarBackend,
+            Backend::Simd => &SimdBackend,
+        }
+    }
+}
+
+/// The primitive tile operations every hot loop in the crate is built
+/// from. One implementation = one uniform answer to "how does this crate
+/// run an inner loop" — swapping it accelerates the step kernels, the
+/// qstate codecs, the global-norm reduction, and the comms wire path at
+/// once.
+///
+/// # Contract
+///
+/// Every method is a pure function of its arguments (no hidden state —
+/// implementations are stateless unit structs) and every implementation
+/// must be **bitwise identical** to [`ScalarBackend`] on every input the
+/// crate can produce (finite values; the q8 encoder additionally
+/// debug-asserts finiteness like the reference codec). Concretely that
+/// means: identical per-element operation sequence for elementwise lanes
+/// (no FMA, no strength reduction that changes rounding), identical
+/// combine order for order-sensitive reductions ([`KernelBackend::sq_norm_partial`]
+/// must keep one sequential f64 accumulator), and order-*invariant*
+/// reductions (max of absolute values) may reassociate freely. Slice
+/// length handling must match the reference exactly — lanes are unrolled,
+/// never padded, and remainders run the identical scalar op sequence.
+pub trait KernelBackend: Sync {
+    /// Canonical backend name (matches [`Backend::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Adagrad-with-momentum update lanes over one tile:
+    /// `nu = acc + g²; mom = β₁·mom + (1−β₁)·g·rsqrt(nu); w −= lr·mom;
+    /// acc = nu` per element (see `kernel::adagrad_chunk`).
+    fn adagrad_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                      acc: &mut [f32], mom: &mut [f32]);
+
+    /// Adam update lanes over one tile: EWMA moments, bias correction by
+    /// the precomputed `bc1`/`bc2`, then `w −= lr·m̂/(√v̂+ε)` per element
+    /// (see `kernel::adam_chunk`).
+    #[allow(clippy::too_many_arguments)]
+    fn adam_update(&self, b1: f32, b2: f32, eps: f32, bc1: f32, bc2: f32,
+                   lr: f32, w: &mut [f32], g: &[f32], m: &mut [f32],
+                   v: &mut [f32]);
+
+    /// Heavy-ball momentum SGD lanes over one tile:
+    /// `mom = β₁·mom + g; w −= lr·mom` per element
+    /// (see `kernel::sgdm_chunk`).
+    fn sgdm_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                   mom: &mut [f32]);
+
+    /// Elementwise `dst[k] += src[k]` over `min(dst.len(), src.len())`
+    /// elements — the f32 ring-reduce hop.
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]);
+
+    /// Elementwise `dst[k] = src[k] * s` over `min(dst.len(), src.len())`
+    /// elements — the comms unpack (mean-finalize) lane.
+    fn scale_into(&self, dst: &mut [f32], src: &[f32], s: f32);
+
+    /// Maximum absolute value of `v` (0.0 for an empty slice). The q8
+    /// block-scale scan. NaN-free contract: callers feed optimizer state,
+    /// which the codec debug-asserts finite; ±0 and infinities are fine
+    /// (|−0| = +0, and max over non-negative values is order-invariant,
+    /// which is what lets the 8-lane split reduce bitwise-identically).
+    fn block_amax(&self, v: &[f32]) -> f32;
+
+    /// q8-encode `vals` per 64-element block (see
+    /// `codec::q8_encode_slice` for the wire format and the canonical
+    /// zero / saturated-block semantics, which implementations must
+    /// reproduce exactly). `scales` holds one f32 per block, `codes` one
+    /// byte per element; both must already be sized.
+    fn q8_encode(&self, vals: &[f32], scales: &mut [f32], codes: &mut [u8]);
+
+    /// Decode q8 blocks back to f32 (see `codec::q8_decode_slice`;
+    /// ±127 codes decode to ±amax exactly — the idempotence contract).
+    fn q8_decode(&self, scales: &[f32], codes: &[u8], out: &mut [f32]);
+
+    /// Round-to-nearest-even truncate each f32 to bf16
+    /// (see `codec::f32_to_bf16`).
+    fn bf16_encode(&self, vals: &[f32], out: &mut [u16]);
+
+    /// Widen each bf16 back to f32 (exact; see `codec::bf16_to_f32`).
+    fn bf16_decode(&self, vals: &[u16], out: &mut [f32]);
+
+    /// Partial sum of squares of one tile, accumulated in f64 —
+    /// **sequentially, in index order, in every implementation**: f64
+    /// addition does not reassociate, and the global-norm determinism
+    /// argument (DESIGN.md §13) leans on every backend producing the
+    /// same per-tile partial. A reassociation-tolerant mode is
+    /// documented design space, not implemented.
+    fn sq_norm_partial(&self, v: &[f32]) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+            assert_eq!(b.imp().name(), b.name());
+        }
+        assert!(Backend::parse("avx2").is_err());
+        assert!(Backend::parse("").is_err());
+    }
+
+    #[test]
+    fn default_tracks_the_simd_feature() {
+        let want = if cfg!(feature = "simd") {
+            Backend::Simd
+        } else {
+            Backend::Scalar
+        };
+        assert_eq!(Backend::default(), want);
+    }
+
+    #[test]
+    fn dispatch_is_stateless_and_static() {
+        // same token → same implementation object, usable from anywhere
+        let a = Backend::Simd.imp();
+        let b = Backend::Simd.imp();
+        assert_eq!(a.name(), b.name());
+        assert_eq!(a.block_amax(&[-3.0, 2.0]), 3.0);
+        assert_eq!(b.block_amax(&[]), 0.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! The reference backend: today's loops, verbatim.
+//!
+//! Where a primitive already exists as a named, documented, tested
+//! function (`kernel::adam_chunk`, `codec::q8_encode_slice`, …) this
+//! backend delegates to it rather than copying the loop body — so the
+//! reference semantics live in exactly one place and can never drift
+//! from the seed behavior. The primitives that only ever existed inline
+//! (the comms reduce/unpack lanes, the block amax scan, the norm
+//! partial) are extracted here with their original op sequences intact.
+
+use super::KernelBackend;
+use crate::optim::kernel;
+use crate::optim::qstate::codec;
+
+/// The scalar (reference) implementation of [`KernelBackend`].
+///
+/// Stateless; obtain via `Backend::Scalar.imp()` or use the unit value
+/// directly in tests.
+pub struct ScalarBackend;
+
+impl KernelBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn adagrad_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                      acc: &mut [f32], mom: &mut [f32]) {
+        kernel::adagrad_chunk(beta1, lr, w, g, acc, mom);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn adam_update(&self, b1: f32, b2: f32, eps: f32, bc1: f32, bc2: f32,
+                   lr: f32, w: &mut [f32], g: &[f32], m: &mut [f32],
+                   v: &mut [f32]) {
+        kernel::adam_chunk(b1, b2, eps, bc1, bc2, lr, w, g, m, v);
+    }
+
+    fn sgdm_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                   mom: &mut [f32]) {
+        kernel::sgdm_chunk(beta1, lr, w, g, mom);
+    }
+
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]) {
+        for (x, y) in dst.iter_mut().zip(src) {
+            *x += y;
+        }
+    }
+
+    fn scale_into(&self, dst: &mut [f32], src: &[f32], s: f32) {
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = x * s;
+        }
+    }
+
+    fn block_amax(&self, v: &[f32]) -> f32 {
+        // the q8 encoder's scale scan, extracted: strict `>` keeps the
+        // first maximum and |−0| = +0, so the result is order-invariant
+        let mut amax = 0.0f32;
+        for &x in v {
+            let a = x.abs();
+            if a > amax {
+                amax = a;
+            }
+        }
+        amax
+    }
+
+    fn q8_encode(&self, vals: &[f32], scales: &mut [f32], codes: &mut [u8]) {
+        codec::q8_encode_slice(vals, scales, codes);
+    }
+
+    fn q8_decode(&self, scales: &[f32], codes: &[u8], out: &mut [f32]) {
+        codec::q8_decode_slice(scales, codes, out);
+    }
+
+    fn bf16_encode(&self, vals: &[f32], out: &mut [u16]) {
+        for (b, &x) in out.iter_mut().zip(vals) {
+            *b = codec::f32_to_bf16(x);
+        }
+    }
+
+    fn bf16_decode(&self, vals: &[u16], out: &mut [f32]) {
+        for (o, &b) in out.iter_mut().zip(vals) {
+            *o = codec::bf16_to_f32(b);
+        }
+    }
+
+    fn sq_norm_partial(&self, v: &[f32]) -> f64 {
+        // transform.rs's tile partial, verbatim: one sequential f64
+        // accumulator in index order (the combine-order contract)
+        let mut acc = 0.0f64;
+        for &x in v {
+            acc += (x as f64) * (x as f64);
+        }
+        acc
+    }
+}

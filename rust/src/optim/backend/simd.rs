@@ -1,0 +1,289 @@
+//! The vectorized backend: explicit 8-lane unrolling in stable Rust.
+//!
+//! Each primitive processes `chunks_exact(8)` bodies with a fixed-bound
+//! inner loop — the shape LLVM's autovectorizer reliably maps onto
+//! 8-wide vector units (AVX/NEON; the same 8-lane granularity the
+//! VPU-style accelerators use for elementwise work) — and runs the
+//! *identical scalar op sequence* over the remainder. Nothing here may
+//! change numerics:
+//!
+//! * elementwise lanes keep the reference per-element expression exactly
+//!   (no `mul_add` — FMA skips the intermediate rounding and would break
+//!   the bitwise gate);
+//! * the amax scan may lane-split because max over NaN-free absolute
+//!   values is order-invariant (every non-negative f32 has one bit
+//!   pattern, so "same value" is "same bits");
+//! * the f64 sum-of-squares partial stays sequential — float addition
+//!   does not reassociate, and the global-norm determinism argument
+//!   needs every backend to produce the same per-tile partial.
+//!
+//! Equivalence with [`ScalarBackend`] is enforced bitwise per primitive
+//! and end-to-end in `crate::proptest` (lengths off the 8- and 64-grids,
+//! denormals, ±0).
+
+use super::{KernelBackend, ScalarBackend};
+use crate::optim::qstate::codec;
+use crate::optim::safe_rsqrt;
+
+/// Unroll width (f32 lanes per inner block).
+const LANES: usize = 8;
+
+/// The 8-lane unrolled implementation of [`KernelBackend`], bitwise
+/// identical to [`ScalarBackend`] on every primitive.
+///
+/// Stateless; obtain via `Backend::Simd.imp()` or use the unit value
+/// directly in tests.
+pub struct SimdBackend;
+
+impl KernelBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn adagrad_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                      acc: &mut [f32], mom: &mut [f32]) {
+        let mut wi = w.chunks_exact_mut(LANES);
+        let mut gi = g.chunks_exact(LANES);
+        let mut ai = acc.chunks_exact_mut(LANES);
+        let mut mi = mom.chunks_exact_mut(LANES);
+        for (((wc, gc), ac), mc) in
+            (&mut wi).zip(&mut gi).zip(&mut ai).zip(&mut mi)
+        {
+            for k in 0..LANES {
+                let nu = ac[k] + gc[k] * gc[k];
+                let upd = gc[k] * safe_rsqrt(nu);
+                mc[k] = beta1 * mc[k] + (1.0 - beta1) * upd;
+                wc[k] -= lr * mc[k];
+                ac[k] = nu;
+            }
+        }
+        let (wr, gr) = (wi.into_remainder(), gi.remainder());
+        let (ar, mr) = (ai.into_remainder(), mi.into_remainder());
+        for k in 0..wr.len() {
+            let nu = ar[k] + gr[k] * gr[k];
+            let upd = gr[k] * safe_rsqrt(nu);
+            mr[k] = beta1 * mr[k] + (1.0 - beta1) * upd;
+            wr[k] -= lr * mr[k];
+            ar[k] = nu;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn adam_update(&self, b1: f32, b2: f32, eps: f32, bc1: f32, bc2: f32,
+                   lr: f32, w: &mut [f32], g: &[f32], m: &mut [f32],
+                   v: &mut [f32]) {
+        let mut wi = w.chunks_exact_mut(LANES);
+        let mut gi = g.chunks_exact(LANES);
+        let mut mi = m.chunks_exact_mut(LANES);
+        let mut vi = v.chunks_exact_mut(LANES);
+        for (((wc, gc), mc), vc) in
+            (&mut wi).zip(&mut gi).zip(&mut mi).zip(&mut vi)
+        {
+            for k in 0..LANES {
+                mc[k] = b1 * mc[k] + (1.0 - b1) * gc[k];
+                vc[k] = b2 * vc[k] + (1.0 - b2) * gc[k] * gc[k];
+                let mhat = mc[k] / bc1;
+                let vhat = vc[k] / bc2;
+                wc[k] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        let (wr, gr) = (wi.into_remainder(), gi.remainder());
+        let (mr, vr) = (mi.into_remainder(), vi.into_remainder());
+        for k in 0..wr.len() {
+            mr[k] = b1 * mr[k] + (1.0 - b1) * gr[k];
+            vr[k] = b2 * vr[k] + (1.0 - b2) * gr[k] * gr[k];
+            let mhat = mr[k] / bc1;
+            let vhat = vr[k] / bc2;
+            wr[k] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+
+    fn sgdm_update(&self, beta1: f32, lr: f32, w: &mut [f32], g: &[f32],
+                   mom: &mut [f32]) {
+        let mut wi = w.chunks_exact_mut(LANES);
+        let mut gi = g.chunks_exact(LANES);
+        let mut mi = mom.chunks_exact_mut(LANES);
+        for ((wc, gc), mc) in (&mut wi).zip(&mut gi).zip(&mut mi) {
+            for k in 0..LANES {
+                mc[k] = beta1 * mc[k] + gc[k];
+                wc[k] -= lr * mc[k];
+            }
+        }
+        let (wr, gr, mr) =
+            (wi.into_remainder(), gi.remainder(), mi.into_remainder());
+        for k in 0..wr.len() {
+            mr[k] = beta1 * mr[k] + gr[k];
+            wr[k] -= lr * mr[k];
+        }
+    }
+
+    fn add_assign(&self, dst: &mut [f32], src: &[f32]) {
+        let mut di = dst.chunks_exact_mut(LANES);
+        let mut si = src.chunks_exact(LANES);
+        for (dc, sc) in (&mut di).zip(&mut si) {
+            for k in 0..LANES {
+                dc[k] += sc[k];
+            }
+        }
+        for (x, y) in di.into_remainder().iter_mut().zip(si.remainder()) {
+            *x += y;
+        }
+    }
+
+    fn scale_into(&self, dst: &mut [f32], src: &[f32], s: f32) {
+        let mut di = dst.chunks_exact_mut(LANES);
+        let mut si = src.chunks_exact(LANES);
+        for (dc, sc) in (&mut di).zip(&mut si) {
+            for k in 0..LANES {
+                dc[k] = sc[k] * s;
+            }
+        }
+        for (d, &x) in di.into_remainder().iter_mut().zip(si.remainder()) {
+            *d = x * s;
+        }
+    }
+
+    fn block_amax(&self, v: &[f32]) -> f32 {
+        // max over |v| is order-invariant (NaN-free contract, |−0| = +0,
+        // one bit pattern per non-negative value), so lane maxima plus a
+        // horizontal reduce are bitwise identical to the sequential scan
+        let mut it = v.chunks_exact(LANES);
+        let mut lanes = [0.0f32; LANES];
+        for c in &mut it {
+            for k in 0..LANES {
+                let a = c[k].abs();
+                if a > lanes[k] {
+                    lanes[k] = a;
+                }
+            }
+        }
+        let mut amax = 0.0f32;
+        for &l in &lanes {
+            if l > amax {
+                amax = l;
+            }
+        }
+        for &x in it.remainder() {
+            let a = x.abs();
+            if a > amax {
+                amax = a;
+            }
+        }
+        amax
+    }
+
+    fn q8_encode(&self, vals: &[f32], scales: &mut [f32], codes: &mut [u8]) {
+        debug_assert_eq!(scales.len(), codec::q8_blocks(vals.len()));
+        debug_assert_eq!(codes.len(), vals.len());
+        for (bi, block) in vals.chunks(codec::Q8_BLOCK).enumerate() {
+            let lo = bi * codec::Q8_BLOCK;
+            let cb = &mut codes[lo..lo + block.len()];
+            debug_assert!(block.iter().all(|x| x.is_finite()),
+                          "non-finite optimizer-state value reached the q8 \
+                           encoder (diverged accumulator?)");
+            let amax = self.block_amax(block);
+            if amax.is_infinite() {
+                // reference saturation semantics, see codec::q8_encode_slice
+                scales[bi] = f32::MAX;
+                for (c, &x) in cb.iter_mut().zip(block) {
+                    *c = if x == f32::INFINITY {
+                        254
+                    } else if x == f32::NEG_INFINITY {
+                        0
+                    } else {
+                        codec::Q8_ZERO_CODE
+                    };
+                }
+                continue;
+            }
+            let scale = amax / 127.0;
+            if scale == 0.0 {
+                scales[bi] = 0.0;
+                for c in cb.iter_mut() {
+                    *c = codec::Q8_ZERO_CODE;
+                }
+                continue;
+            }
+            scales[bi] = amax;
+            let mut vi = block.chunks_exact(LANES);
+            let mut ci = cb.chunks_exact_mut(LANES);
+            for (vc, cc) in (&mut vi).zip(&mut ci) {
+                for k in 0..LANES {
+                    let q = (codec::round_ties_even(vc[k] / scale) as i32)
+                        .clamp(-127, 127);
+                    cc[k] = (q + 127) as u8;
+                }
+            }
+            for (c, &x) in ci.into_remainder().iter_mut().zip(vi.remainder())
+            {
+                let q = (codec::round_ties_even(x / scale) as i32)
+                    .clamp(-127, 127);
+                *c = (q + 127) as u8;
+            }
+        }
+    }
+
+    fn q8_decode(&self, scales: &[f32], codes: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(scales.len(), codec::q8_blocks(codes.len()));
+        debug_assert_eq!(out.len(), codes.len());
+        for (b, block) in codes.chunks(codec::Q8_BLOCK).enumerate() {
+            let lo = b * codec::Q8_BLOCK;
+            let ob = &mut out[lo..lo + block.len()];
+            let amax = scales[b];
+            let scale = amax / 127.0;
+            let mut ci = block.chunks_exact(LANES);
+            let mut oi = ob.chunks_exact_mut(LANES);
+            for (cc, oc) in (&mut ci).zip(&mut oi) {
+                for k in 0..LANES {
+                    let q = cc[k] as i32 - 127;
+                    oc[k] = match q {
+                        127 => amax,
+                        -127 => -amax,
+                        _ => scale * q as f32,
+                    };
+                }
+            }
+            for (o, &c) in oi.into_remainder().iter_mut().zip(ci.remainder())
+            {
+                let q = c as i32 - 127;
+                *o = match q {
+                    127 => amax,
+                    -127 => -amax,
+                    _ => scale * q as f32,
+                };
+            }
+        }
+    }
+
+    fn bf16_encode(&self, vals: &[f32], out: &mut [u16]) {
+        let mut vi = vals.chunks_exact(LANES);
+        let mut oi = out.chunks_exact_mut(LANES);
+        for (vc, oc) in (&mut vi).zip(&mut oi) {
+            for k in 0..LANES {
+                oc[k] = codec::f32_to_bf16(vc[k]);
+            }
+        }
+        for (b, &x) in oi.into_remainder().iter_mut().zip(vi.remainder()) {
+            *b = codec::f32_to_bf16(x);
+        }
+    }
+
+    fn bf16_decode(&self, vals: &[u16], out: &mut [f32]) {
+        let mut vi = vals.chunks_exact(LANES);
+        let mut oi = out.chunks_exact_mut(LANES);
+        for (vc, oc) in (&mut vi).zip(&mut oi) {
+            for k in 0..LANES {
+                oc[k] = codec::bf16_to_f32(vc[k]);
+            }
+        }
+        for (o, &b) in oi.into_remainder().iter_mut().zip(vi.remainder()) {
+            *o = codec::bf16_to_f32(b);
+        }
+    }
+
+    fn sq_norm_partial(&self, v: &[f32]) -> f64 {
+        // deliberately NOT unrolled: f64 addition is order-sensitive and
+        // the determinism contract fixes the combine order (DESIGN.md §13)
+        ScalarBackend.sq_norm_partial(v)
+    }
+}

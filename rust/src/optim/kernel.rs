@@ -13,6 +13,13 @@
 //! the streamed trajectory is bitwise identical to the whole-slot path
 //! (property-tested in `crate::proptest`).
 //!
+//! The named kernels here are the *reference* lanes: the optimizers
+//! dispatch per tile through [`super::backend::KernelBackend`]
+//! (DESIGN.md §13), whose scalar implementation delegates straight back
+//! to these functions and whose `simd` implementation is gated bitwise
+//! against them — so this file stays the single source of truth for the
+//! update arithmetic.
+//!
 //! Only *element-wise* updates fit this shape — [`elementwise`] says
 //! which (optimizer, leaf-rank) pairs qualify. SM3's matrix/tensor
 //! covers and Adafactor couple elements through row/col reductions and
@@ -46,18 +53,16 @@ pub fn check_chunk(chunk: usize) -> anyhow::Result<()> {
 /// Can `name`'s update of a rank-`rank` leaf be expressed as a
 /// per-element kernel (and therefore sharded *inside* the leaf)?
 ///
-/// Adagrad, Adam and SGD+momentum update every element independently at
-/// any rank. SM3 is element-wise only under the singleton cover
-/// (rank ≤ 1 — where it coincides with Adagrad); its matrix/tensor
-/// covers fold each `nu` into row/col maxima. Adafactor is never
-/// element-wise: even its full-`v` vector path ends in a whole-leaf RMS
-/// clip.
+/// A thin name-based bridge over the typed capability declaration
+/// [`super::api::Method::elementwise_at_rank`] — the registry's single
+/// source of truth (its match is exhaustive, so a new method must
+/// declare itself). Unknown names are never element-wise. Kept for the
+/// name-indexed callers (benches, proptests, docs); typed code should
+/// ask the [`super::api::Method`] directly.
 pub fn elementwise(name: &str, rank: usize) -> bool {
-    match name {
-        "adagrad" | "adam" | "sgdm" => true,
-        "sm3" | "sm3i" => rank <= 1,
-        _ => false,
-    }
+    super::api::Method::from_name(name)
+        .map(|m| m.elementwise_at_rank(rank))
+        .unwrap_or(false)
 }
 
 /// Reusable decode scratch for up to two streamed slots. Lives in the

@@ -22,6 +22,7 @@ mod adafactor;
 mod adagrad;
 mod adam;
 pub mod api;
+pub mod backend;
 pub mod cover;
 pub mod kernel;
 pub mod parallel;
@@ -36,6 +37,7 @@ pub use adagrad::Adagrad;
 pub use adam::Adam;
 pub use api::{AdafactorHp, AdagradHp, AdamHp, GroupSpec, Method, OptimSpec,
               SgdmHp, Sm3Hp, StateOpts};
+pub use backend::{Backend, KernelBackend, ScalarBackend, SimdBackend};
 pub use parallel::{ParallelStep, SplitPolicy};
 pub use qstate::{QuantizedSlots, StateDtype};
 pub use sgdm::SgdMomentum;

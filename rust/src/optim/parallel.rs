@@ -189,7 +189,7 @@ impl ParallelStep {
         let mut method = Method::from_name(name)?;
         method.set_beta1(beta1);
         method.set_beta2(beta2);
-        let opts = StateOpts { dtype, chunk };
+        let opts = StateOpts { dtype, chunk, ..StateOpts::default() };
         Self::with_leaf_factory(
             specs, threads, policy,
             |s| kernel::elementwise(name, s.shape.len()),

@@ -410,6 +410,50 @@ mod tests {
         });
     }
 
+    /// Satellite (ISSUE 6): `q8_encode_into` / `q8_decode_into` are thin
+    /// resize+delegate wrappers over the slice versions — this gate pins
+    /// the two paths bitwise together (including stale oversized / wrong-
+    /// length output buffers, which the wrappers must resize) so a
+    /// reimplemented block loop can never drift again.
+    #[test]
+    fn prop_into_wrappers_match_slice_versions_bitwise() {
+        forall("q8 into == slice", |rng| {
+            let n = 1 + rng.index(300);
+            let exp = rng.range(-6, 6) as f32;
+            // stale garbage length forces the resize path both ways
+            (gen::grad_vec(rng, n, 10f32.powf(exp)), rng.index(400))
+        }, |(vals, stale)| {
+            let n = vals.len();
+            let (mut s_into, mut c_into) =
+                (vec![9.0f32; *stale], vec![9u8; *stale]);
+            q8_encode_into(vals, &mut s_into, &mut c_into);
+            let mut s_slice = vec![0.0f32; q8_blocks(n)];
+            let mut c_slice = vec![0u8; n];
+            q8_encode_slice(vals, &mut s_slice, &mut c_slice);
+            if c_into != c_slice {
+                return Err("encode codes drifted from slice path".into());
+            }
+            for (a, b) in s_into.iter().zip(&s_slice) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("encode scale drifted: {a} vs {b}"));
+                }
+            }
+            let mut d_into = vec![9.0f32; *stale];
+            q8_decode_into(&s_into, &c_into, &mut d_into);
+            let mut d_slice = vec![0.0f32; n];
+            q8_decode_slice(&s_into, &c_into, &mut d_slice);
+            if d_into.len() != n {
+                return Err("decode_into did not resize".into());
+            }
+            for (a, b) in d_into.iter().zip(&d_slice) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("decode drifted: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn q8_block_partitioning() {
         assert_eq!(q8_blocks(0), 0);

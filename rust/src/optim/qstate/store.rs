@@ -28,11 +28,15 @@
 
 use super::codec;
 use super::StateDtype;
+use crate::optim::backend::Backend;
 
 /// One state vector in its storage encoding.
 pub struct QSlot {
     len: usize,
     data: SlotData,
+    /// kernel backend the codec lanes dispatch through (bitwise
+    /// identical across backends — DESIGN.md §13)
+    backend: Backend,
 }
 
 enum SlotData {
@@ -52,7 +56,14 @@ impl QSlot {
                 codes: vec![codec::Q8_ZERO_CODE; len],
             },
         };
-        Self { len, data }
+        Self { len, data, backend: Backend::default() }
+    }
+
+    /// Route this slot's encode/decode lanes through `backend` (bitwise
+    /// identical across backends; stores propagate this via
+    /// [`QuantizedSlots::set_backend`]).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
     }
 
     /// Quantize `vals` into a fresh slot.
@@ -90,14 +101,14 @@ impl QSlot {
                 out.extend_from_slice(v);
             }
             SlotData::Bf16(v) => {
-                out.clear();
-                out.reserve(v.len());
-                for &b in v {
-                    out.push(codec::bf16_to_f32(b));
-                }
+                // resize only (no clear): the decoder overwrites every
+                // element
+                out.resize(v.len(), 0.0);
+                self.backend.imp().bf16_decode(v, out);
             }
             SlotData::Q8 { scales, codes } => {
-                codec::q8_decode_into(scales, codes, out);
+                out.resize(codes.len(), 0.0);
+                self.backend.imp().q8_decode(scales, codes, out);
             }
         }
     }
@@ -117,12 +128,12 @@ impl QSlot {
         match &mut self.data {
             SlotData::F32(v) => v.copy_from_slice(vals),
             SlotData::Bf16(v) => {
-                for (b, &x) in v.iter_mut().zip(vals) {
-                    *b = codec::f32_to_bf16(x);
-                }
+                self.backend.imp().bf16_encode(vals, v);
             }
             SlotData::Q8 { scales, codes } => {
-                codec::q8_encode_into(vals, scales, codes);
+                // scales/codes were sized at construction and lengths
+                // are asserted above, so the slice encode fits exactly
+                self.backend.imp().q8_encode(vals, scales, codes);
             }
         }
     }
@@ -184,17 +195,22 @@ impl ChunkCursor<'_> {
         let start = self.pos;
         let n = self.tile.min(len - start);
         self.pos = start + n;
+        let backend = self.slot.backend;
         Some(match &mut self.slot.data {
             SlotData::F32(v) => TileMut {
                 offset: start,
+                backend,
                 buf: TileBuf::Lent(&mut v[start..start + n]),
             },
             SlotData::Bf16(v) => {
                 let back = &mut v[start..start + n];
-                self.scratch.clear();
-                self.scratch.extend(back.iter().map(|&b| codec::bf16_to_f32(b)));
+                // resize only (no clear): the decoder overwrites every
+                // element
+                self.scratch.resize(n, 0.0);
+                backend.imp().bf16_decode(back, self.scratch);
                 TileMut {
                     offset: start,
+                    backend,
                     buf: TileBuf::Bf16 { scratch: &mut self.scratch[..n], back },
                 }
             }
@@ -208,9 +224,10 @@ impl ChunkCursor<'_> {
                 // resize only (no clear): the decoder overwrites every
                 // element, so zero-filling would just double the writes
                 self.scratch.resize(n, 0.0);
-                codec::q8_decode_slice(scales, codes, self.scratch);
+                backend.imp().q8_decode(scales, codes, self.scratch);
                 TileMut {
                     offset: start,
+                    backend,
                     buf: TileBuf::Q8 { scratch: &mut self.scratch[..n],
                                        scales, codes },
                 }
@@ -226,6 +243,7 @@ impl ChunkCursor<'_> {
 /// with one deterministic quantization per tile.
 pub struct TileMut<'a> {
     offset: usize,
+    backend: Backend,
     buf: TileBuf<'a>,
 }
 
@@ -276,12 +294,10 @@ impl Drop for TileMut<'_> {
         match &mut self.buf {
             TileBuf::Lent(_) => {} // mutations landed in place
             TileBuf::Bf16 { scratch, back } => {
-                for (b, &x) in back.iter_mut().zip(scratch.iter()) {
-                    *b = codec::f32_to_bf16(x);
-                }
+                self.backend.imp().bf16_encode(scratch, back);
             }
             TileBuf::Q8 { scratch, scales, codes } => {
-                codec::q8_encode_slice(scratch, scales, codes);
+                self.backend.imp().q8_encode(scratch, scales, codes);
             }
         }
     }
@@ -293,13 +309,14 @@ impl Drop for TileMut<'_> {
 /// returns a stable integer id) and step through read/modify/write.
 pub struct QuantizedSlots {
     dtype: StateDtype,
+    backend: Backend,
     slots: Vec<QSlot>,
 }
 
 impl QuantizedSlots {
     /// An empty store whose future slots use `dtype`.
     pub fn new(dtype: StateDtype) -> Self {
-        Self { dtype, slots: Vec::new() }
+        Self { dtype, backend: Backend::default(), slots: Vec::new() }
     }
 
     /// Storage precision of every slot in the store.
@@ -307,9 +324,26 @@ impl QuantizedSlots {
         self.dtype
     }
 
+    /// Kernel backend the store's codec lanes dispatch through.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Route every slot's encode/decode lanes (current and future)
+    /// through `backend`. Bitwise identical across backends — a pure
+    /// performance knob, safe to flip on a live store.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+        for s in &mut self.slots {
+            s.set_backend(backend);
+        }
+    }
+
     /// Allocate a zero slot of `len` scalars; returns its id.
     pub fn add_zeros(&mut self, len: usize) -> usize {
-        self.slots.push(QSlot::zeros(len, self.dtype));
+        let mut slot = QSlot::zeros(len, self.dtype);
+        slot.set_backend(self.backend);
+        self.slots.push(slot);
         self.slots.len() - 1
     }
 
@@ -548,6 +582,40 @@ mod tests {
         assert_eq!((sa.len(), sb.len()), (10, 20));
         let (sb2, sa2) = st.slot_pair_mut(b, a);
         assert_eq!((sb2.len(), sa2.len()), (20, 10));
+    }
+
+    /// ISSUE 6: the backend knob changes no stored byte — writing and
+    /// tile-mutating a slot through the simd lanes is bitwise identical
+    /// to the scalar reference, at every dtype and off-grid lengths.
+    #[test]
+    fn backend_is_bitwise_invisible_in_storage() {
+        let f = |i: usize, x: f32| x * 1.0625 + (i % 5) as f32 * 0.25 - 0.5;
+        for dtype in StateDtype::ALL {
+            for len in [1usize, 7, 63, 64, 65, 130, 257] {
+                let vals: Vec<f32> =
+                    (0..len).map(|i| (i as f32 - 40.0) * 0.37).collect();
+                let mut sc = QSlot::from_f32(dtype, &vals);
+                sc.set_backend(Backend::Scalar);
+                let mut sv = QSlot::zeros(len, dtype);
+                sv.set_backend(Backend::Simd);
+                sv.write(&vals);
+                for slot in [&mut sc, &mut sv] {
+                    let mut scratch = Vec::new();
+                    let mut cur = slot.chunks_mut(64, &mut scratch);
+                    while let Some(mut t) = cur.next_tile() {
+                        let off = t.offset();
+                        for (i, x) in t.iter_mut().enumerate() {
+                            *x = f(off + i, *x);
+                        }
+                    }
+                }
+                let (a, b) = (sc.to_vec(), sv.to_vec());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{dtype:?} len {len}: {x} != {y}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! SGD with heavy-ball momentum — the non-adaptive baseline
 //! (paper §5.3, AmoebaNet).
 
+use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
@@ -11,6 +12,9 @@ pub struct SgdMomentum {
     beta1: f32,
     /// streaming tile (elements; multiple of the q8 block)
     chunk: usize,
+    /// kernel backend for the update lanes (bitwise identical across
+    /// backends — DESIGN.md §13)
+    backend: Backend,
     scratch: ChunkScratch,
     /// slot `i` holds leaf `i`'s momentum
     slots: QuantizedSlots,
@@ -38,8 +42,16 @@ impl SgdMomentum {
         for s in specs {
             slots.add_zeros(s.numel());
         }
-        Self { beta1, chunk, scratch: ChunkScratch::default(), slots,
+        Self { beta1, chunk, backend: Backend::default(),
+               scratch: ChunkScratch::default(), slots,
                specs: specs.to_vec() }
+    }
+
+    /// Route the update lanes and the state store's codec lanes through
+    /// `backend` (bitwise identical across backends).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+        self.slots.set_backend(backend);
     }
 }
 
@@ -50,11 +62,12 @@ impl Optimizer for SgdMomentum {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
         let b1 = self.beta1;
+        let be = self.backend.imp();
         for idx in 0..params.len() {
             kernel::step_chunked1(
                 &mut self.slots, idx, self.chunk, &mut self.scratch,
                 params[idx].data_mut(), grads[idx].data(),
-                |w, g, mom| kernel::sgdm_chunk(b1, lr, w, g, mom));
+                |w, g, mom| be.sgdm_update(b1, lr, w, g, mom));
         }
     }
 
@@ -62,9 +75,10 @@ impl Optimizer for SgdMomentum {
         assert_eq!(self.specs.len(), 1,
                    "step_flat needs a single-leaf instance");
         let b1 = self.beta1;
+        let be = self.backend.imp();
         kernel::step_chunked1(&mut self.slots, 0, self.chunk,
                               &mut self.scratch, w, g,
-                              |w, g, mom| kernel::sgdm_chunk(b1, lr, w, g, mom));
+                              |w, g, mom| be.sgdm_update(b1, lr, w, g, mom));
     }
 
     fn state_floats(&self) -> usize {

@@ -21,6 +21,7 @@
 //! way the trajectory is bit-identical to the pre-qstate `Vec<f32>`
 //! fields at `StateDtype::F32`.
 
+use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{safe_rsqrt, Optimizer, ParamSpec};
@@ -58,6 +59,12 @@ pub struct Sm3 {
     beta1: f32,
     /// streaming tile for vector (singleton-cover) leaves
     chunk: usize,
+    /// kernel backend for the singleton-cover update lanes and the state
+    /// store's codec lanes (bitwise identical across backends —
+    /// DESIGN.md §13); the reduction-coupled matrix/tensor loops stay
+    /// leaf-granular indexed code (a lane-unrolled variant measured
+    /// slower — see the perf note in `step_matrix_ii`)
+    backend: Backend,
     scratch: ChunkScratch,
     /// reduction-coupled leaves: dequantized accumulator buffers (one per
     /// axis), momentum buffer, and per-axis reduction scratch — all
@@ -100,10 +107,18 @@ impl Sm3 {
                 LeafIds { accs, mom: store.add_zeros(s.numel()) }
             })
             .collect();
-        Self { variant, beta1, chunk, scratch: ChunkScratch::default(),
+        Self { variant, beta1, chunk, backend: Backend::default(),
+               scratch: ChunkScratch::default(),
                acc_bufs: Vec::new(), mom_buf: Vec::new(),
                axis_scratch: Vec::new(), store, leaves,
                specs: specs.to_vec() }
+    }
+
+    /// Route the singleton-cover update lanes and the state store's codec
+    /// lanes through `backend` (bitwise identical across backends).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
+        self.store.set_backend(backend);
     }
 
     /// Read accumulator `axis` of parameter `idx`, dequantized
@@ -313,6 +328,7 @@ impl Optimizer for Sm3 {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.leaves.len());
         let (beta1, variant, chunk) = (self.beta1, self.variant, self.chunk);
+        let be = self.backend.imp();
         for idx in 0..params.len() {
             let rank = params[idx].rank();
             if rank <= 1 {
@@ -325,7 +341,7 @@ impl Optimizer for Sm3 {
                     &mut self.store, acc_id, mom_id, chunk,
                     &mut self.scratch, params[idx].data_mut(),
                     grads[idx].data(), |w, g, acc, mom| {
-                        kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+                        be.adagrad_update(beta1, lr, w, g, acc, mom)
                     });
                 continue;
             }
@@ -372,10 +388,11 @@ impl Optimizer for Sm3 {
                 "step_flat: SM3 is element-wise only under the singleton \
                  cover (rank <= 1)");
         let beta1 = self.beta1;
+        let be = self.backend.imp();
         let (acc_id, mom_id) = (self.leaves[0].accs[0], self.leaves[0].mom);
         kernel::step_chunked2(&mut self.store, acc_id, mom_id, self.chunk,
                               &mut self.scratch, w, g, |w, g, acc, mom| {
-            kernel::adagrad_chunk(beta1, lr, w, g, acc, mom)
+            be.adagrad_update(beta1, lr, w, g, acc, mom)
         });
     }
 

@@ -41,6 +41,7 @@
 //! (DESIGN.md §8). `state_floats`/`state_bytes` flow through to the
 //! memory accountant with the two extra scalars added.
 
+use super::backend::Backend;
 use super::{Optimizer, ParamSpec, StateDtype};
 use crate::tensor::Tensor;
 
@@ -109,14 +110,15 @@ pub fn identity() -> UpdateTransform {
 /// [`Pipeline`] uses — so a hand-rolled transform built on this helper
 /// is bitwise identical to the pipeline (the bench's fairness gate).
 pub fn global_sq_norm(grads: &[Tensor]) -> f64 {
+    // The per-tile partial is `KernelBackend::sq_norm_partial`, which is
+    // a sequential f64 fold in *every* backend (f64 addition does not
+    // reassociate — DESIGN.md §13), so this helper is bitwise identical
+    // to the pipeline regardless of which backend either side uses.
+    let be = Backend::default().imp();
     let mut total = 0.0f64;
     for t in grads {
         for chunk in t.data().chunks(NORM_TILE) {
-            let mut part = 0.0f64;
-            for &v in chunk {
-                part += (v as f64) * (v as f64);
-            }
-            total += part;
+            total += be.sq_norm_partial(chunk);
         }
     }
     total
@@ -176,12 +178,9 @@ fn for_each_indexed_mut<T: Send>(threads: usize, items: &mut [T],
 /// One tile of the global-norm partition: `(leaf, offset, len)`.
 type NormTile = (usize, usize, usize);
 
-fn tile_sq_norm(src: &[Tensor], (leaf, off, len): NormTile) -> f64 {
-    let mut acc = 0.0f64;
-    for &v in &src[leaf].data()[off..off + len] {
-        acc += (v as f64) * (v as f64);
-    }
-    acc
+fn tile_sq_norm(backend: Backend, src: &[Tensor],
+                (leaf, off, len): NormTile) -> f64 {
+    backend.imp().sq_norm_partial(&src[leaf].data()[off..off + len])
 }
 
 /// A composable update pipeline around any inner optimizer.
@@ -198,6 +197,9 @@ pub struct Pipeline {
     /// update — the copy here feeds the decay factor)
     lr_scale: Vec<f32>,
     threads: usize,
+    /// kernel backend for the norm reduce's per-tile partials (bitwise
+    /// identical across backends — DESIGN.md §13)
+    backend: Backend,
     /// fixed global-norm partition (shapes only — never thread count)
     tiles: Vec<NormTile>,
     /// per-tile partial squared norms, combined in tile order
@@ -284,8 +286,17 @@ impl Pipeline {
         } else {
             Vec::new()
         };
-        Ok(Self { inner, stages, wd, lr_scale, threads, tiles, partials,
+        Ok(Self { inner, stages, wd, lr_scale, threads,
+                  backend: Backend::default(), tiles, partials,
                   scratch, steps: 0.0, last_norm: 0.0 })
+    }
+
+    /// Route the norm reduce's per-tile partials through `backend`
+    /// (bitwise identical across backends — the partial is a sequential
+    /// f64 fold in every backend). The inner optimizer's backend is set
+    /// separately by `OptimSpec::build`.
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend;
     }
 
     /// The global gradient norm observed by the most recent
@@ -304,7 +315,8 @@ impl Pipeline {
     /// partials (parallel across scoped workers when `threads > 1`),
     /// combined in tile order on this thread.
     fn two_phase_sq_norm(&mut self, src: &[Tensor]) -> f64 {
-        sq_norm_over(&self.tiles, &mut self.partials, src, self.threads)
+        sq_norm_over(self.backend, &self.tiles, &mut self.partials, src,
+                     self.threads)
     }
 
     /// Apply the gradient stages, filling `self.scratch` on the first
@@ -335,8 +347,9 @@ impl Pipeline {
                 }
                 UpdateTransform::ClipByGlobalNorm(c) => {
                     let sq = if copied {
-                        sq_norm_over(&self.tiles, &mut self.partials,
-                                     &self.scratch, self.threads)
+                        sq_norm_over(self.backend, &self.tiles,
+                                     &mut self.partials, &self.scratch,
+                                     self.threads)
                     } else {
                         self.two_phase_sq_norm(grads)
                     };
@@ -376,11 +389,11 @@ impl Pipeline {
 /// combine in tile order on the calling thread. The partition and the
 /// combine order never depend on `threads`, so the result is bitwise
 /// identical at any thread count.
-fn sq_norm_over(tiles: &[NormTile], partials: &mut [f64], src: &[Tensor],
-                threads: usize) -> f64 {
+fn sq_norm_over(backend: Backend, tiles: &[NormTile], partials: &mut [f64],
+                src: &[Tensor], threads: usize) -> f64 {
     debug_assert_eq!(partials.len(), tiles.len());
     for_each_indexed_mut(threads, partials,
-                         &|i, p| *p = tile_sq_norm(src, tiles[i]));
+                         &|i, p| *p = tile_sq_norm(backend, src, tiles[i]));
     partials.iter().fold(0.0f64, |a, &b| a + b)
 }
 

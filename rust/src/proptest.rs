@@ -795,6 +795,228 @@ mod tests {
         });
     }
 
+    /// Values for the backend-equivalence properties: normals plus the
+    /// edge cases the codec lanes care about — ±0, f32 denormals, and
+    /// huge magnitudes (never NaN/∞: the trait contract is NaN-free).
+    fn special_vec(rng: &mut crate::rng::Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.index(8) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::from_bits(1 + rng.index(0x007f_ffff) as u32),
+                3 => -f32::from_bits(1 + rng.index(0x007f_ffff) as u32),
+                4 => rng.normal_f32(0.0, 1e30),
+                _ => rng.normal_f32(0.0, 1.0),
+            })
+            .collect()
+    }
+
+    fn bits_eq(what: &str, a: &[f32], b: &[f32]) -> Result<(), String> {
+        for (k, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{what} elem {k}: {x} != {y}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// ISSUE 6 satellite: every [`crate::optim::KernelBackend`] primitive
+    /// is bitwise identical across the backends — random lengths
+    /// straddling the 8-lane and 64-block boundaries (including
+    /// non-multiples of both), denormals, ±0, and huge magnitudes.
+    #[test]
+    fn backend_primitives_agree_bitwise() {
+        use crate::optim::qstate::codec::Q8_BLOCK;
+        use crate::optim::Backend;
+        forall("SimdBackend == ScalarBackend per primitive", |rng| {
+            let n = 1 + rng.index(200); // covers n % 8 != 0, n % 64 != 0
+            (special_vec(rng, n), special_vec(rng, n),
+             special_vec(rng, n), special_vec(rng, n))
+        }, |(w0, g, acc0, mom0)| {
+            let n = w0.len();
+            let (sc, si) = (Backend::Scalar.imp(), Backend::Simd.imp());
+            // adagrad lanes
+            let (mut wa, mut aa, mut ma) =
+                (w0.clone(), acc0.clone(), mom0.clone());
+            let (mut wb, mut ab, mut mb) =
+                (w0.clone(), acc0.clone(), mom0.clone());
+            sc.adagrad_update(0.9, 0.1, &mut wa, g, &mut aa, &mut ma);
+            si.adagrad_update(0.9, 0.1, &mut wb, g, &mut ab, &mut mb);
+            bits_eq("adagrad w", &wa, &wb)?;
+            bits_eq("adagrad acc", &aa, &ab)?;
+            bits_eq("adagrad mom", &ma, &mb)?;
+            // adam lanes (bc1/bc2 as the step-1 bias corrections)
+            let (bc1, bc2) = (1.0 / (1.0 - 0.9f32), 1.0 / (1.0 - 0.98f32));
+            let (mut wa, mut ma2, mut va) =
+                (w0.clone(), mom0.clone(), acc0.clone());
+            let (mut wb, mut mb2, mut vb) =
+                (w0.clone(), mom0.clone(), acc0.clone());
+            sc.adam_update(0.9, 0.98, 1e-8, bc1, bc2, 0.1, &mut wa, g,
+                           &mut ma2, &mut va);
+            si.adam_update(0.9, 0.98, 1e-8, bc1, bc2, 0.1, &mut wb, g,
+                           &mut mb2, &mut vb);
+            bits_eq("adam w", &wa, &wb)?;
+            bits_eq("adam m", &ma2, &mb2)?;
+            bits_eq("adam v", &va, &vb)?;
+            // sgdm lanes
+            let (mut wa, mut ma3) = (w0.clone(), mom0.clone());
+            let (mut wb, mut mb3) = (w0.clone(), mom0.clone());
+            sc.sgdm_update(0.9, 0.1, &mut wa, g, &mut ma3);
+            si.sgdm_update(0.9, 0.1, &mut wb, g, &mut mb3);
+            bits_eq("sgdm w", &wa, &wb)?;
+            bits_eq("sgdm mom", &ma3, &mb3)?;
+            // reduce / unpack lanes
+            let (mut da, mut db) = (w0.clone(), w0.clone());
+            sc.add_assign(&mut da, g);
+            si.add_assign(&mut db, g);
+            bits_eq("add_assign", &da, &db)?;
+            sc.scale_into(&mut da, g, 1.0 / 3.0);
+            si.scale_into(&mut db, g, 1.0 / 3.0);
+            bits_eq("scale_into", &da, &db)?;
+            // block amax (order-invariant reduce)
+            if sc.block_amax(g).to_bits() != si.block_amax(g).to_bits() {
+                return Err(format!("block_amax: {} != {}",
+                                   sc.block_amax(g), si.block_amax(g)));
+            }
+            // q8 codec (one scale per 64-block, one code per element)
+            // ceil-div by hand: usize::div_ceil needs 1.73, MSRV is 1.70
+            let blocks = n / Q8_BLOCK + usize::from(n % Q8_BLOCK != 0);
+            let (mut sa2, mut ca) = (vec![0.0f32; blocks], vec![0u8; n]);
+            let (mut sb2, mut cb) = (vec![0.0f32; blocks], vec![0u8; n]);
+            sc.q8_encode(g, &mut sa2, &mut ca);
+            si.q8_encode(g, &mut sb2, &mut cb);
+            bits_eq("q8 scales", &sa2, &sb2)?;
+            if ca != cb {
+                return Err("q8 codes diverged".into());
+            }
+            let (mut oa, mut ob) = (vec![0.0f32; n], vec![0.0f32; n]);
+            sc.q8_decode(&sa2, &ca, &mut oa);
+            si.q8_decode(&sb2, &cb, &mut ob);
+            bits_eq("q8 decode", &oa, &ob)?;
+            // bf16 codec
+            let (mut ha, mut hb) = (vec![0u16; n], vec![0u16; n]);
+            sc.bf16_encode(g, &mut ha);
+            si.bf16_encode(g, &mut hb);
+            if ha != hb {
+                return Err("bf16 words diverged".into());
+            }
+            sc.bf16_decode(&ha, &mut oa);
+            si.bf16_decode(&hb, &mut ob);
+            bits_eq("bf16 decode", &oa, &ob)?;
+            // f64 sum-of-squares partial (sequential in both backends)
+            if sc.sq_norm_partial(g).to_bits()
+                != si.sq_norm_partial(g).to_bits()
+            {
+                return Err(format!("sq_norm_partial: {} != {}",
+                                   sc.sq_norm_partial(g),
+                                   si.sq_norm_partial(g)));
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 6 acceptance: the backend knob is bitwise invisible end to
+    /// end — every registry optimizer (f32 and q8 state, with the
+    /// global-norm clip pipeline riding along so the f64 partials are
+    /// exercised) and the compressed comm ring (wire codec + reduce +
+    /// unpack + error-feedback residuals) produce identical results
+    /// under `scalar` and `simd`.
+    #[test]
+    fn kernel_backend_is_bitwise_invisible_end_to_end() {
+        use crate::comms::CommEngine;
+        use crate::optim::{self, Backend, Optimizer, StateDtype};
+        use crate::tensor::Tensor;
+        forall("simd == scalar end-to-end", |rng| {
+            (gen::param_specs(rng, 4, 3, 7), rng.next_u64())
+        }, |(specs, seed)| {
+            for name in optim::ALL {
+                for dtype in [StateDtype::F32, StateDtype::Q8] {
+                    let build = |backend: Backend| {
+                        optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype)
+                                .kernel_backend(backend)
+                                .clip_by_global_norm(1.0)
+                                .build(specs))
+                            .map_err(|e| e.to_string())
+                    };
+                    let mut sc = build(Backend::Scalar)?;
+                    let mut si = build(Backend::Simd)?;
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let init: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                        .collect();
+                    let mut pa = init.clone();
+                    let mut pb = init;
+                    for step in 0..3 {
+                        let grads: Vec<Tensor> = specs
+                            .iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect();
+                        sc.step(&mut pa, &grads, 0.1);
+                        si.step(&mut pb, &grads, 0.1);
+                        for (leaf, (a, b)) in
+                            pa.iter().zip(&pb).enumerate()
+                        {
+                            bits_eq(&format!(
+                                "{name} @ {dtype:?} step {step} leaf \
+                                 {leaf}"), a.data(), b.data())?;
+                        }
+                    }
+                    for ((_, sa, ta), (_, sb, tb)) in
+                        sc.state().iter().zip(&si.state())
+                    {
+                        if sa != sb || ta != tb {
+                            return Err(format!(
+                                "{name} @ {dtype:?}: state slot {sa} \
+                                 diverged across backends"));
+                        }
+                    }
+                }
+            }
+            // the comm ring, 2 threads so the scoped-thread path carries
+            // the backend token too; two rounds over the same inputs so
+            // round 2 consumes round 1's residuals
+            for dtype in StateDtype::ALL {
+                let ranks = 3;
+                let mut rng = crate::rng::Rng::new(*seed);
+                let base: Vec<Vec<Tensor>> = (0..ranks)
+                    .map(|_| specs.iter()
+                        .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                        .collect())
+                    .collect();
+                let run = |backend: Backend| {
+                    let mut eng =
+                        CommEngine::new(specs, ranks, dtype, 64, 2)
+                            .map_err(|e| e.to_string())?;
+                    eng.set_backend(backend);
+                    let mut out = base.clone();
+                    for _ in 0..2 {
+                        let mut g = base.clone();
+                        eng.allreduce_mean(&mut g)
+                            .map_err(|e| e.to_string())?;
+                        out = g;
+                    }
+                    Ok::<_, String>((out, eng.state()))
+                };
+                let (oa, ra) = run(Backend::Scalar)?;
+                let (ob, rb) = run(Backend::Simd)?;
+                for (r, (la, lb)) in oa.iter().zip(&ob).enumerate() {
+                    for (leaf, (a, b)) in la.iter().zip(lb).enumerate() {
+                        bits_eq(&format!(
+                            "{dtype:?} ring rank {r} leaf {leaf}"),
+                            a.data(), b.data())?;
+                    }
+                }
+                for ((_, a), (_, b)) in ra.iter().zip(&rb) {
+                    bits_eq(&format!("{dtype:?} ring residuals"),
+                            a.data(), b.data())?;
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {
