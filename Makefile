@@ -2,7 +2,7 @@
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
 .PHONY: tier1 build test lint fmt clippy bench-optim bench-quick \
-	bench-comms bench-comms-quick benches docs artifacts
+	bench-comms bench-comms-quick bench-telemetry benches docs artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -47,6 +47,17 @@ bench-comms:
 # rank agreement) executes. Mirrors the ci.yml step exactly.
 bench-comms-quick:
 	BENCH_QUICK=1 cargo bench --bench bench_collectives
+
+# Quick benches with telemetry export: writes out/BENCH_optim.json,
+# out/BENCH_comms.json, out/BENCH_memory.json and validates them with
+# the in-repo checker (EXPERIMENTS.md §Telemetry). Mirrors the ci.yml
+# telemetry job.
+bench-telemetry:
+	BENCH_QUICK=1 cargo bench --bench bench_optim -- --telemetry
+	BENCH_QUICK=1 cargo bench --bench bench_collectives -- --telemetry
+	BENCH_QUICK=1 cargo bench --bench bench_memory -- --telemetry
+	cargo run --release --bin sm3-train -- bench-check \
+		out/BENCH_optim.json out/BENCH_comms.json out/BENCH_memory.json
 
 # Compile every harness=false bench target without running it (the CI
 # build-test job runs this too, so the benches cannot silently rot).

@@ -13,14 +13,19 @@
 //!
 //! Run: `cargo bench --bench bench_collectives` (writes
 //! out/perf_collectives.csv); `BENCH_QUICK=1` or `make bench-comms-quick`
-//! for the CI-sized variant.
+//! for the CI-sized variant. Pass `-- --telemetry` (or `SM3_TELEMETRY=1`)
+//! to emit out/BENCH_comms.json: per-hop span stats, wire-byte counters
+//! cross-checked against the static accountant, and the measured-vs-
+//! modeled `TimingModel` delta per configuration (DESIGN.md §14).
 
-use sm3::bench_util::{bench, speedup, CsvWriter, Stats};
+use sm3::bench_util::{bench, speedup, telemetry_requested,
+                      write_bench_json, CsvWriter, Stats};
 use sm3::collectives;
 use sm3::comms::{CommEngine, TimingModel};
 use sm3::memory::comm_wire_bytes;
 use sm3::optim::{ParamSpec, StateDtype};
 use sm3::rng::Rng;
+use sm3::telemetry::{self, Counter, Probe, Registry};
 use sm3::tensor::Tensor;
 use std::time::Duration;
 
@@ -116,6 +121,12 @@ fn run_gates(specs: &[ParamSpec]) -> anyhow::Result<()> {
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
         .unwrap_or(false);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let tele = telemetry_requested(&argv);
+    let _tele_guard = tele.then(telemetry::enable);
+    if tele {
+        println!("telemetry on — writing out/BENCH_comms.json at exit");
+    }
     let budget = if quick {
         Duration::from_millis(25)
     } else {
@@ -139,6 +150,9 @@ fn main() -> anyhow::Result<()> {
         "ranks,dtype,threads,elements,median_ns,wire_bytes,sim_ms,\
          speedup_vs_serial")?;
     let rank_list: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+    // measured-vs-modeled TimingModel entries, merged into the bench
+    // registry (and so into BENCH_comms.json) at the end
+    let mut treg = Registry::new();
     for &ranks in rank_list {
         for dtype in StateDtype::ALL {
             let mut serial_stats: Option<Stats> = None;
@@ -150,6 +164,7 @@ fn main() -> anyhow::Result<()> {
                 // rewrites it with means, which keeps the work identical
                 // without per-iteration clone noise
                 let mut g = rank_grads(&specs, ranks, 3);
+                let before = tele.then(telemetry::thread_totals);
                 let stats = bench(
                     &format!("x{ranks} {} t{threads}", dtype.name()),
                     budget, min_iters,
@@ -162,6 +177,39 @@ fn main() -> anyhow::Result<()> {
                 assert_eq!(wire, comm_wire_bytes(&specs, ranks, dtype),
                            "live schedule vs static mirror drifted");
                 let sim_ms = timing.exchange_seconds(wire, ranks) * 1e3;
+                if let Some(before) = before {
+                    // measured per-hop latencies (the calibration source
+                    // for TimingModel) vs the model's simulated exchange:
+                    // reported, not asserted — the model prices pod links,
+                    // the measurement prices in-process memory traffic
+                    let after = telemetry::thread_totals();
+                    let exch = after.counter(Counter::CommExchanges)
+                        .saturating_sub(
+                            before.counter(Counter::CommExchanges));
+                    let wired = after.counter(Counter::CommWireBytes)
+                        .saturating_sub(
+                            before.counter(Counter::CommWireBytes));
+                    assert_eq!(wired, wire as u64 * exch,
+                               "wire-byte counter drifted from the \
+                                schedule's per-exchange bytes");
+                    if exch > 0 {
+                        let hop_ms = after.ms_since(
+                            &before,
+                            &[Probe::CommHopReduce, Probe::CommHopEncode,
+                              Probe::CommHopGather]) / exch as f64;
+                        let delta_pct =
+                            100.0 * (hop_ms - sim_ms) / sim_ms;
+                        println!("    hops measured {hop_ms:.4} ms vs \
+                                  modeled {sim_ms:.4} ms \
+                                  ({delta_pct:+.0}%)");
+                        let key = format!("timing_model/x{ranks}_{}_t\
+                                           {threads}", dtype.name());
+                        treg.gauge(&format!("{key}/measured_hop_ns"),
+                                   (hop_ms * 1e6) as u64);
+                        treg.gauge(&format!("{key}/modeled_ns"),
+                                   (sim_ms * 1e6) as u64);
+                    }
+                }
                 let vs_serial = serial_stats
                     .as_ref()
                     .map(|s| speedup(s, &stats))
@@ -189,5 +237,12 @@ fn main() -> anyhow::Result<()> {
              f as f64 / q as f64);
     assert!(f as f64 / q as f64 >= 3.5);
     println!("\nCSV series: out/perf_collectives.csv");
+
+    if tele {
+        telemetry::with_bench_registry(|r| r.merge(&treg));
+        write_bench_json("bench_collectives", quick,
+                         "out/BENCH_comms.json")?;
+        println!("telemetry document: out/BENCH_comms.json");
+    }
     Ok(())
 }

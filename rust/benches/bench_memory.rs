@@ -5,8 +5,12 @@
 //! (`optim::qstate`) with their recomputed frontier.
 //!
 //! Run: `cargo bench --bench bench_memory` (writes out/table1_memory.csv,
-//! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv)
+//! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv).
+//! Pass `-- --telemetry` (or `SM3_TELEMETRY=1`) to emit
+//! out/BENCH_memory.json: the table's state/wire byte figures as
+//! telemetry gauges, one standing document per run (DESIGN.md §14).
 
+use sm3::bench_util::{telemetry_requested, write_bench_json};
 use sm3::comms::TimingModel;
 use sm3::memory::{comm_buffer_bytes, comm_wire_bytes, inventory,
                   opt_state_bytes, opt_state_floats, MemoryModel,
@@ -42,6 +46,11 @@ fn report(name: &str, m: &MemoryModel, cells: &[(&str, usize, Option<f64>)],
 }
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
+        .unwrap_or(false);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let tele = telemetry_requested(&argv);
+
     // ---- Table 1: Transformer-Big on TPUv2 (8 GiB/core) ----------------
     let big = MemoryModel::calibrate(
         inventory::transformer_big(), 8.0 * GIB,
@@ -270,5 +279,37 @@ fn main() -> anyhow::Result<()> {
     println!("\nCSV series: out/table1_memory.csv out/table2_memory.csv \
               out/max_batch.csv out/qstate_memory.csv out/comm_wire.csv \
               out/step_buffers.csv");
+
+    // ---- telemetry export: the byte tables as standing gauges -----------
+    // This bench is pure accounting arithmetic (no timed sections), so
+    // its BENCH_memory.json carries gauges only: state bytes per
+    // optimizer×dtype and ring wire bytes per dtype on both inventories.
+    if tele {
+        let mut reg = sm3::telemetry::Registry::new();
+        for (model, m) in [("transformer_big", &big), ("bert_large", &bert)]
+        {
+            for opt in ["adam", "adagrad", "adafactor", "sm3", "sgdm"] {
+                for dtype in StateDtype::ALL {
+                    let bytes = opt_state_bytes(opt, &m.specs, dtype)?;
+                    reg.gauge(
+                        &format!("mem/{model}/{opt}/{}_state_bytes",
+                                 dtype.name()),
+                        bytes as u64);
+                }
+            }
+            for ranks in [4usize, 16] {
+                for dtype in StateDtype::ALL {
+                    let wire = comm_wire_bytes(&m.specs, ranks, dtype);
+                    reg.gauge(
+                        &format!("comm/{model}/x{ranks}/{}_wire_bytes",
+                                 dtype.name()),
+                        wire as u64);
+                }
+            }
+        }
+        sm3::telemetry::with_bench_registry(|r| r.merge(&reg));
+        write_bench_json("bench_memory", quick, "out/BENCH_memory.json")?;
+        println!("telemetry document: out/BENCH_memory.json");
+    }
     Ok(())
 }

@@ -31,14 +31,19 @@
 //! out/perf_optim_qstate.csv, out/perf_optim_transforms.csv,
 //! out/perf_optim_backends.csv);
 //! `BENCH_QUICK=1` or `make bench-quick` for the CI-sized variant.
+//! Pass `-- --telemetry` (or set `SM3_TELEMETRY=1`) to additionally
+//! emit the standing perf-trajectory document out/BENCH_optim.json
+//! from the telemetry registry (DESIGN.md §14).
 
-use sm3::bench_util::{bench, speedup, CsvWriter};
+use sm3::bench_util::{bench, speedup, telemetry_requested,
+                      write_bench_json, CsvWriter};
 use sm3::collectives::ring_allreduce;
 use sm3::memory::opt_state_bytes;
 use sm3::optim::{self, cover::{Cover, CoverSm3II}, kernel, transform,
                  Backend, OptimSpec, Optimizer, ParamSpec, ParallelStep,
                  SplitPolicy, StateDtype};
 use sm3::rng::Rng;
+use sm3::telemetry::{self, Gauge};
 use sm3::tensor::Tensor;
 use std::time::Duration;
 
@@ -218,6 +223,14 @@ fn apply_manual_transforms(tg: &mut [Tensor], grads: &[Tensor],
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
         .unwrap_or(false);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let tele = telemetry_requested(&argv);
+    // Holding the guard flips every telemetry::span/count/gauge in the
+    // measured code paths live; bench() itself records unconditionally.
+    let _tele_guard = tele.then(telemetry::enable);
+    if tele {
+        println!("telemetry on — writing out/BENCH_optim.json at exit");
+    }
     let budget = if quick {
         Duration::from_millis(25)
     } else {
@@ -485,6 +498,18 @@ fn main() -> anyhow::Result<()> {
             let mut opt =
                 OptimSpec::named(name)?.state_dtype(dtype).build(&specs)?;
             let sb = opt.state_bytes();
+            if tele {
+                // live gauge must round-trip to the static accountant's
+                // number — the BENCH_optim.json byte gauges are asserted,
+                // not just reported
+                telemetry::gauge(Gauge::OptStateBytes, sb as u64);
+                let stat = opt_state_bytes(name, &specs, dtype)?;
+                anyhow::ensure!(
+                    telemetry::thread_gauge(Gauge::OptStateBytes).last
+                        == stat as u64,
+                    "{name} @ {dtype:?}: telemetry state-bytes gauge \
+                     {sb} disagrees with the static accountant {stat}");
+            }
             let mut params: Vec<Tensor> =
                 specs.iter().map(|s| Tensor::zeros(&s.shape)).collect();
             let stats = bench(&format!("{name} @ {}", dtype.name()), budget,
@@ -693,6 +718,11 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(&ranks);
         });
         println!("  {stats}");
+    }
+
+    if tele {
+        write_bench_json("bench_optim", quick, "out/BENCH_optim.json")?;
+        println!("\ntelemetry document: out/BENCH_optim.json");
     }
     Ok(())
 }

@@ -1,20 +1,29 @@
 //! Thread-local allocation counting for the steady-state
-//! allocation-free tests (ISSUE 3 satellite).
+//! allocation-free tests (ISSUE 3 satellite) and live/peak heap-byte
+//! tracking for the telemetry memory-gauge cross-checks (ISSUE 7).
 //!
 //! Compiled into the lib's own test harness only (`#[cfg(test)]` at the
 //! `lib.rs` module declaration): release builds and integration tests
-//! use the plain system allocator. The counter is per-thread, so
+//! use the plain system allocator. All counters are per-thread, so
 //! concurrently running unit tests on other harness threads cannot
-//! perturb a measurement — a test reads [`thread_allocs`] before and
-//! after the code under test on its own thread.
+//! perturb a measurement — a test reads [`thread_allocs`] /
+//! [`thread_live_bytes`] before and after the code under test on its
+//! own thread.
+//!
+//! Byte accounting is a lower-bound bracket, not an exact mirror:
+//! `dealloc` of memory allocated before counting started (or handed
+//! across threads) saturates at zero rather than underflowing, and the
+//! peak resets only via [`reset_thread_peak_bytes`].
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 thread_local! {
-    // const-initialized: no lazy init and no Drop, so touching it from
-    // inside the allocator can itself never allocate
+    // const-initialized: no lazy init and no Drop, so touching these
+    // from inside the allocator can itself never allocate
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static LIVE_BYTES: Cell<u64> = const { Cell::new(0) };
+    static PEAK_BYTES: Cell<u64> = const { Cell::new(0) };
 }
 
 /// Heap acquisitions (alloc / alloc_zeroed / realloc) observed on the
@@ -23,33 +32,69 @@ pub fn thread_allocs() -> u64 {
     ALLOCS.with(Cell::get)
 }
 
+/// Bytes currently held by allocations made (and not yet freed) on the
+/// calling thread.
+pub fn thread_live_bytes() -> u64 {
+    LIVE_BYTES.with(Cell::get)
+}
+
+/// High-water mark of [`thread_live_bytes`] since thread start or the
+/// last [`reset_thread_peak_bytes`].
+pub fn thread_peak_bytes() -> u64 {
+    PEAK_BYTES.with(Cell::get)
+}
+
+/// Re-arm the peak tracker at the current live level so a test can
+/// measure the high-water mark of just the code under test.
+pub fn reset_thread_peak_bytes() {
+    let live = LIVE_BYTES.with(Cell::get);
+    PEAK_BYTES.with(|c| c.set(live));
+}
+
 pub struct CountingAlloc;
 
 #[inline]
-fn bump() {
+fn bump(bytes: u64) {
     // try_with: TLS may be unavailable during thread teardown — skip
     // counting there rather than aborting inside the allocator
     let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = LIVE_BYTES.try_with(|c| {
+        let live = c.get() + bytes;
+        c.set(live);
+        let _ = PEAK_BYTES.try_with(|p| p.set(p.get().max(live)));
+    });
+}
+
+#[inline]
+fn shrink(bytes: u64) {
+    let _ = LIVE_BYTES.try_with(|c| c.set(c.get().saturating_sub(bytes)));
 }
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        bump();
+        bump(layout.size() as u64);
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        bump();
+        bump(layout.size() as u64);
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
                       -> *mut u8 {
-        bump();
+        // count as one acquisition; live bytes move by the size delta
+        if new_size >= layout.size() {
+            bump((new_size - layout.size()) as u64);
+        } else {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            shrink((layout.size() - new_size) as u64);
+        }
         System.realloc(ptr, layout, new_size)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        shrink(layout.size() as u64);
         System.dealloc(ptr, layout)
     }
 }
@@ -73,5 +118,23 @@ mod tests {
         let x = std::hint::black_box(3u64) * 7;
         assert_eq!(thread_allocs(), b2);
         assert_eq!(x, 21);
+    }
+
+    #[test]
+    fn tracks_live_and_peak_bytes() {
+        reset_thread_peak_bytes();
+        let live0 = thread_live_bytes();
+        let v: Vec<u8> = Vec::with_capacity(1 << 16);
+        assert!(thread_live_bytes() >= live0 + (1 << 16),
+                "64 KiB allocation must show up in live bytes");
+        assert!(thread_peak_bytes() >= thread_live_bytes());
+        drop(v);
+        assert!(thread_live_bytes() < live0 + (1 << 16),
+                "freeing must shrink live bytes");
+        // the peak keeps the high-water mark after the free
+        assert!(thread_peak_bytes() >= live0 + (1 << 16));
+        // re-arming brings the peak back down to the live level
+        reset_thread_peak_bytes();
+        assert_eq!(thread_peak_bytes(), thread_live_bytes());
     }
 }

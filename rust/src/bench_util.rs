@@ -4,8 +4,16 @@
 //! throughput helper. Bench binaries (`rust/benches/*.rs`, harness=false)
 //! use this to print the rows that regenerate the paper's tables/figures;
 //! output is plain text + CSV so EXPERIMENTS.md can quote it directly.
+//!
+//! Timing runs on the telemetry clock ([`telemetry::now_ns`]) and every
+//! sample is recorded into the process-wide bench registry
+//! ([`telemetry::with_bench_registry`]) under the section name, so one
+//! code path feeds the printed tables, the CSV series, AND the
+//! end-of-run `BENCH_*.json` perf-trajectory documents
+//! ([`write_bench_json`], DESIGN.md §14).
 
-use std::time::{Duration, Instant};
+use crate::telemetry::{self, now_ns, Registry};
+use std::time::Duration;
 
 /// One measured statistic set.
 #[derive(Debug, Clone)]
@@ -57,36 +65,78 @@ pub fn fmt_dur(d: Duration) -> String {
 }
 
 /// Time `f` with automatic warmup; targets ~`budget` of measurement wall
-/// time, at least `min_iters` iterations.
+/// time, at least `min_iters` iterations. Every sample also lands in the
+/// process-wide bench registry under `name`, so [`write_bench_json`]
+/// sees exactly the distribution the printed table came from.
 pub fn bench(name: &str, budget: Duration, min_iters: usize,
              mut f: impl FnMut()) -> Stats {
+    let budget_ns = budget.as_nanos() as u64;
     // warmup: run until ~10% of budget spent or 3 iters
-    let warm_start = Instant::now();
+    let warm_start = now_ns();
     let mut warm = 0;
-    while warm < 3 || (warm_start.elapsed() < budget / 10 && warm < 1000) {
+    while warm < 3
+        || (now_ns().saturating_sub(warm_start) < budget_ns / 10
+            && warm < 1000)
+    {
         f();
         warm += 1;
     }
-    let mut samples = Vec::new();
-    let start = Instant::now();
+    // samples accumulate in a section-local registry and merge into the
+    // global one at the end — one lock per section, not per iteration
+    let mut section = Registry::new();
+    let mut samples: Vec<u64> = Vec::new();
+    let start = now_ns();
     while samples.len() < min_iters
-        || (start.elapsed() < budget && samples.len() < 10_000)
+        || (now_ns().saturating_sub(start) < budget_ns
+            && samples.len() < 10_000)
     {
-        let t0 = Instant::now();
+        let t0 = now_ns();
         f();
-        samples.push(t0.elapsed());
+        let ns = now_ns().saturating_sub(t0);
+        section.record_ns(name, ns);
+        samples.push(ns);
     }
-    samples.sort();
+    telemetry::with_bench_registry(|reg| reg.merge(&section));
+    samples.sort_unstable();
     let n = samples.len();
-    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let mean_ns = samples.iter().sum::<u64>() / n as u64;
+    let at = |i: usize| Duration::from_nanos(samples[i]);
     Stats {
         name: name.to_string(),
         iters: n,
-        median: samples[n / 2],
-        p10: samples[n / 10],
-        p90: samples[(n * 9) / 10],
-        mean,
+        median: at(n / 2),
+        p10: at(n / 10),
+        p90: at((n * 9) / 10),
+        mean: Duration::from_nanos(mean_ns),
     }
+}
+
+/// True when the bench invocation asked for telemetry export: a
+/// `--telemetry` argument (`cargo bench --bench X -- --telemetry`) or
+/// `SM3_TELEMETRY=1` in the environment.
+pub fn telemetry_requested(args: &[String]) -> bool {
+    args.iter().any(|a| a == "--telemetry")
+        || std::env::var("SM3_TELEMETRY").map_or(false, |v| v == "1")
+}
+
+/// Write the accumulated bench registry — every [`bench`] section run so
+/// far in this process, plus whatever the calling thread's telemetry
+/// cells hold (trainer phases, comm counters, memory gauges) — as a
+/// `BENCH_*.json` document at `path`. The document is self-validated
+/// against the schema before writing, so CI's `sm3-train bench-check`
+/// can never fail on a file this function produced.
+pub fn write_bench_json(bench: &str, quick: bool, path: &str)
+                        -> anyhow::Result<()> {
+    let mut reg = telemetry::with_bench_registry(|r| r.clone());
+    telemetry::thread_snapshot_into(&mut reg);
+    let doc = telemetry::bench_doc(bench, quick, &reg);
+    telemetry::validate_bench_doc(&doc)
+        .map_err(|e| anyhow::anyhow!("telemetry self-check failed: {e}"))?;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, format!("{doc}\n"))?;
+    Ok(())
 }
 
 /// Median-over-median speedup of `fast` relative to `base` (>1 ⇒ faster).
@@ -129,6 +179,52 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.median > Duration::ZERO);
         assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn bench_samples_land_in_the_global_registry() {
+        let prev = telemetry::with_bench_registry(|r| {
+            r.span("bu_registry_section").map_or(0, |s| s.count)
+        });
+        let s = bench("bu_registry_section", Duration::from_millis(10), 4,
+                      || {
+                          std::hint::black_box((0..500).sum::<u64>());
+                      });
+        let agg = telemetry::with_bench_registry(|r| {
+            *r.span("bu_registry_section").unwrap()
+        });
+        assert_eq!(agg.count - prev, s.iters as u64,
+                   "every sample must reach the bench registry");
+        assert!(agg.min_ns <= agg.max_ns);
+    }
+
+    #[test]
+    fn write_bench_json_round_trips_through_the_checker() {
+        bench("bu_json_section", Duration::from_millis(5), 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let dir = std::env::temp_dir().join("sm3_bench_util_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        write_bench_json("bench_unit", true, path.to_str().unwrap())
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::json::Json::parse(&text).unwrap();
+        telemetry::validate_bench_doc(&doc).unwrap();
+        assert_eq!(doc.get("bench").and_then(|b| b.as_str()),
+                   Some("bench_unit"));
+        assert!(doc.get("spans").unwrap().get("bu_json_section").is_some(),
+                "the measured section must appear in the document");
+    }
+
+    #[test]
+    fn telemetry_request_parses_bench_args() {
+        let argv = |s: &[&str]| -> Vec<String> {
+            s.iter().map(|x| x.to_string()).collect()
+        };
+        assert!(telemetry_requested(&argv(&["--telemetry"])));
+        assert!(telemetry_requested(&argv(&["--bench", "--telemetry"])));
+        assert!(!telemetry_requested(&argv(&["--bench"])));
     }
 
     #[test]

@@ -30,9 +30,10 @@
 //! [`CommEngine::load_state`] and ride the `SM3CKPT2` checkpoint as
 //! f32-tagged tensors (they must stay exact for resume to be bitwise).
 
-use super::ring::{self, Schedule, WireScratch};
+use super::ring::{self, Phase, Schedule, WireScratch};
 use super::{check_comm_chunk, TimingModel};
 use crate::optim::{Backend, ParamSpec, StateDtype};
+use crate::telemetry::{self, Counter, Gauge, Probe};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
 
@@ -177,9 +178,13 @@ impl CommEngine {
         if self.ranks == 1 {
             return Ok(CommStats::default());
         }
+        let pack_span = telemetry::span(Probe::CommPack);
         self.pack(ranks);
+        drop(pack_span);
         if self.dtype != StateDtype::F32 {
+            let fb_span = telemetry::span(Probe::CommFeedback);
             self.apply_error_feedback();
+            drop(fb_span);
         }
         for si in 0..self.schedule.steps.len() {
             // split-borrow the schedule away from the buffers
@@ -187,6 +192,16 @@ impl CommEngine {
                 let (p, r) = &self.schedule.steps[si];
                 (*p, r)
             };
+            // hop timing on the calling thread: one span per schedule
+            // step (a full ring sweep), classified by phase. These
+            // measured latencies are the calibration source for
+            // TimingModel (DESIGN.md §14; bench_collectives reports
+            // measured-vs-modeled).
+            let _hop = telemetry::span(match phase {
+                Phase::Reduce => Probe::CommHopReduce,
+                Phase::Finalize => Probe::CommHopEncode,
+                Phase::Gather => Probe::CommHopGather,
+            });
             if self.threads <= 1 {
                 ring::run_step_serial(&mut self.bufs, phase, regions,
                                       self.dtype, self.chunk, self.backend,
@@ -197,7 +212,21 @@ impl CommEngine {
                                         self.threads, &mut self.scratch);
             }
         }
+        let unpack_span = telemetry::span(Probe::CommUnpack);
         self.unpack(ranks);
+        drop(unpack_span);
+        if telemetry::enabled() {
+            telemetry::count(Counter::CommWireBytes,
+                             self.schedule.wire_bytes as u64);
+            telemetry::count(Counter::CommExchanges, 1);
+            // live memory gauges; the static accountant
+            // (memory::comm_buffer_bytes) must agree — cross-checked in
+            // the tests below
+            telemetry::gauge(Gauge::CommBufferBytes,
+                             self.buffer_bytes() as u64);
+            telemetry::gauge(Gauge::CommResidualBytes,
+                             (self.residual_floats() * 4) as u64);
+        }
         Ok(CommStats {
             wire_bytes: self.schedule.wire_bytes,
             sim_seconds: self
@@ -637,6 +666,67 @@ mod tests {
                        "{dtype:?}: {allocs} allocations in steady-state \
                         exchanges");
         }
+    }
+
+    /// ISSUE 7: the live telemetry gauges agree with the object's own
+    /// accounting AND the static accountant AND the counting
+    /// allocator's live-byte view — the three-way memory cross-check.
+    #[test]
+    fn telemetry_gauges_match_static_accountant_and_allocator() {
+        let specs = specs();
+        let ranks = 4;
+        let _g = telemetry::enable();
+        telemetry::reset_thread();
+        let live0 = crate::alloc_count::thread_live_bytes();
+        let mut eng =
+            CommEngine::new(&specs, ranks, StateDtype::Q8, 64, 1).unwrap();
+        let held = crate::alloc_count::thread_live_bytes() - live0;
+        let mut g = grads(&specs, ranks, 13);
+        let before = telemetry::thread_totals();
+        eng.allreduce_mean(&mut g).unwrap();
+        let after = telemetry::thread_totals();
+
+        // gauge == engine == static accountant
+        let buf_gauge = telemetry::thread_gauge(Gauge::CommBufferBytes);
+        assert_eq!(buf_gauge.last as usize, eng.buffer_bytes());
+        assert_eq!(buf_gauge.last as usize,
+                   crate::memory::comm_buffer_bytes(&specs, ranks,
+                                                    StateDtype::Q8));
+        let res_gauge = telemetry::thread_gauge(Gauge::CommResidualBytes);
+        assert_eq!(res_gauge.last as usize, eng.residual_floats() * 4);
+        assert_eq!(buf_gauge.peak, buf_gauge.last);
+
+        // the allocator actually saw those buffers get allocated:
+        // construction grew live bytes by at least the gauge (plus
+        // schedule/scratch overhead), and the peak brackets the live
+        assert!(held as u64 >= buf_gauge.last,
+                "allocator saw {held} live bytes, gauge claims {}",
+                buf_gauge.last);
+        assert!(crate::alloc_count::thread_peak_bytes()
+                    >= crate::alloc_count::thread_live_bytes());
+
+        // wire counter advanced by exactly the schedule's wire bytes,
+        // matching the static accountant's mirror
+        let wire =
+            after.counter(telemetry::Counter::CommWireBytes)
+                - before.counter(telemetry::Counter::CommWireBytes);
+        assert_eq!(wire as usize, eng.wire_bytes_per_exchange());
+        assert_eq!(wire as usize,
+                   crate::memory::comm_wire_bytes(&specs, ranks,
+                                                  StateDtype::Q8));
+        assert_eq!(after.counter(telemetry::Counter::CommExchanges)
+                       - before.counter(telemetry::Counter::CommExchanges),
+                   1);
+
+        // per-hop spans landed under the right probes (q8 schedules
+        // carry reduce, finalize-encode, and gather sweeps)
+        for p in [Probe::CommPack, Probe::CommFeedback,
+                  Probe::CommHopReduce, Probe::CommHopEncode,
+                  Probe::CommHopGather, Probe::CommUnpack] {
+            assert!(after.spans(p) > before.spans(p),
+                    "{p:?} recorded no span");
+        }
+        telemetry::reset_thread();
     }
 
     /// Wire bytes shrink with the dtype; q8 clears the ≥ 3.5× line on

@@ -173,6 +173,15 @@ pub struct TrainConfig {
     /// identical (DESIGN.md §13). The default tracks the `simd` cargo
     /// feature.
     pub kernel_backend: Backend,
+    /// enable the telemetry subsystem (split path): per-phase span
+    /// timings widen the step CSV (grad/opt/comm pack/hop/unpack/ckpt
+    /// ms columns) and live memory gauges are sampled at step
+    /// boundaries. Determinism-neutral — trajectories are bitwise
+    /// identical on or off (DESIGN.md §14).
+    pub telemetry: bool,
+    /// optional JSONL event-stream path (one `step` event per training
+    /// step plus a final `summary` event). Requires `telemetry = true`.
+    pub telemetry_jsonl: Option<String>,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -198,6 +207,8 @@ impl Default for TrainConfig {
             comm_chunk: crate::comms::DEFAULT_COMM_CHUNK,
             comm_threads: 1,
             kernel_backend: Backend::default(),
+            telemetry: false,
+            telemetry_jsonl: None,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -283,7 +294,8 @@ const OPTIM_KEYS: &[&str] = &[
 const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
     "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
-    "comm_threads", "kernel_backend", "seed", "artifacts_dir", "out_dir",
+    "comm_threads", "kernel_backend", "telemetry", "telemetry_jsonl", "seed",
+    "artifacts_dir", "out_dir",
 ];
 
 /// Keys accepted in each `[[optim.group]]`.
@@ -418,6 +430,24 @@ impl TrainConfig {
             kernel_backend: Backend::parse(&get_str(
                 &train_tbl, "kernel_backend", d.kernel_backend.name()))
                 .context("[train] kernel_backend")?,
+            telemetry: match train_tbl.get("telemetry") {
+                // strict: `telemetry = "on"` must error, not silently
+                // run unmeasured
+                None => d.telemetry,
+                Some(v) => match v.as_bool() {
+                    Some(b) => b,
+                    None => bail!("[train] telemetry must be a boolean, \
+                                   got {v:?}"),
+                },
+            },
+            telemetry_jsonl: match train_tbl.get("telemetry_jsonl") {
+                None => d.telemetry_jsonl.clone(),
+                Some(v) => match v.as_str() {
+                    Some(s) => Some(s.to_string()),
+                    None => bail!("[train] telemetry_jsonl must be a \
+                                   string path, got {v:?}"),
+                },
+            },
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -492,6 +522,16 @@ impl TrainConfig {
                 bail!("comm_chunk applies to the split path only (the \
                        fused artifact has no gradient exchange)");
             }
+        }
+        if self.telemetry_jsonl.is_some() && !self.telemetry {
+            bail!("[train] telemetry_jsonl requires telemetry = true \
+                   (the event stream is fed by the telemetry cells)");
+        }
+        if self.telemetry && self.exec == ExecMode::Fused {
+            // the fused artifact exposes no phase seams to instrument;
+            // reject rather than emit all-zero phase columns
+            bail!("telemetry applies to the split path only (the fused \
+                   artifact has no grad/comm/opt phase boundaries)");
         }
         if !(0.0..1.0).contains(&self.optim.beta1) {
             bail!("beta1 out of range");
@@ -772,6 +812,53 @@ warmup_steps = 40
         let msg = err.to_string();
         assert!(msg.contains("kernel_backened")
                     && msg.contains("kernel_backend"),
+                "{msg}");
+    }
+
+    /// ISSUE 7 tentpole: the telemetry knobs parse, default off,
+    /// validate, and are fused-path-rejected like the other split knobs.
+    #[test]
+    fn telemetry_knobs_parse_defaults_and_validate() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert!(!cfg.telemetry);
+        assert_eq!(cfg.telemetry_jsonl, None);
+        let cfg = TrainConfig::from_toml(
+            "[train]\ntelemetry = true\n\
+             telemetry_jsonl = \"out/events.jsonl\"\n").unwrap();
+        assert!(cfg.telemetry);
+        assert_eq!(cfg.telemetry_jsonl.as_deref(), Some("out/events.jsonl"));
+        // strict typing: a wrong-typed value errors, never defaults
+        assert!(TrainConfig::from_toml(
+            "[train]\ntelemetry = \"on\"\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\ntelemetry = 1\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\ntelemetry = true\ntelemetry_jsonl = 7\n").is_err());
+        // the event stream needs the cells recording
+        let err = TrainConfig::from_toml(
+            "[train]\ntelemetry_jsonl = \"out/e.jsonl\"\n").unwrap_err();
+        assert!(err.to_string().contains("requires telemetry"), "{err}");
+        // split-path knob: the fused artifact has no phase seams
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\ntelemetry = true\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\ntelemetry = false\n").is_ok());
+        // composes with the other split-path knobs
+        let cfg = TrainConfig::from_toml(
+            "[train]\ntelemetry = true\nworkers = 4\nstep_threads = 2\n\
+             comm_dtype = \"q8\"\nstate_dtype = \"q8\"\n").unwrap();
+        assert!(cfg.telemetry);
+        // a typo'd key names the nearest valid one
+        let err = TrainConfig::from_toml(
+            "[train]\ntelemetyr = true\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("telemetyr") && msg.contains("telemetry"),
+                "{msg}");
+        let err = TrainConfig::from_toml(
+            "[train]\ntelemetry_json = \"x\"\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("telemetry_json")
+                    && msg.contains("telemetry_jsonl"),
                 "{msg}");
     }
 

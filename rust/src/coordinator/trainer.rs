@@ -6,13 +6,18 @@ use std::sync::Arc;
 use crate::comms::CommEngine;
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
+use crate::json::Json;
 use crate::metrics::{corpus_bleu, Ema};
 use crate::optim::{schedule::Schedule, Optimizer, StateDtype};
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
+use crate::telemetry::{self, Gauge, Probe};
 use crate::tensor::Tensor;
 
-/// One training-step record (the loss-curve CSV row).
+/// One training-step record (the loss-curve CSV row). The per-phase
+/// `*_ms` columns are measured by the telemetry subsystem (DESIGN.md
+/// §14) and are 0.0 while telemetry is disabled — `comm_ms` stays the
+/// *modeled* interconnect cost either way.
 #[derive(Debug, Clone)]
 pub struct StepRecord {
     pub step: u64,
@@ -23,6 +28,19 @@ pub struct StepRecord {
     /// simulated pod-interconnect cost of this step's gradient exchange
     /// (`comms::TimingModel`; 0.0 single-worker and on the fused path)
     pub comm_ms: f64,
+    /// measured forward+backward time (all workers, all grad-accum
+    /// microbatches)
+    pub grad_ms: f64,
+    /// measured optimizer-update time (`Optimizer::step`)
+    pub opt_ms: f64,
+    /// measured comm pack + error-feedback staging time
+    pub comm_pack_ms: f64,
+    /// measured ring-hop time (reduce + finalize-encode + gather sweeps)
+    pub comm_hop_ms: f64,
+    /// measured comm unpack (scatter + mean-scale) time
+    pub comm_unpack_ms: f64,
+    /// measured checkpoint-I/O time attributable to this step
+    pub ckpt_ms: f64,
 }
 
 /// One evaluation record.
@@ -101,6 +119,10 @@ pub struct Trainer {
     ema: Ema,
     /// simulated interconnect cost of the most recent `train_step`
     last_comm_ms: f64,
+    /// keeps the process-wide telemetry flag raised for this trainer's
+    /// lifetime when `cfg.telemetry` is set (guards nest across
+    /// concurrent trainers)
+    _telemetry: Option<telemetry::Enabled>,
 }
 
 impl Trainer {
@@ -176,6 +198,8 @@ impl Trainer {
         let probe_source =
             source_for_model(&meta, cfg.seed, cfg.workers, cfg.workers + 1)?;
 
+        let tele_guard = cfg.telemetry.then(telemetry::enable);
+
         Ok(Self {
             cfg,
             meta,
@@ -189,6 +213,7 @@ impl Trainer {
             step: 0,
             ema: Ema::new(0.9),
             last_comm_ms: 0.0,
+            _telemetry: tele_guard,
         })
     }
 
@@ -261,6 +286,7 @@ impl Trainer {
                 let mut worker_grads: Vec<Vec<Tensor>> =
                     Vec::with_capacity(self.cfg.workers);
                 let mut loss_sum = 0.0;
+                let grad_span = telemetry::span(Probe::Grad);
                 for src in self.sources.iter_mut() {
                     let mut acc: Option<Vec<Tensor>> = None;
                     let mut wloss = 0.0;
@@ -292,15 +318,37 @@ impl Trainer {
                     loss_sum += wloss / self.cfg.grad_accum as f64;
                     worker_grads.push(grads);
                 }
+                drop(grad_span);
                 // data-parallel combine: the compressed ring all-reduce
                 // (comms subsystem — wire codec, error feedback, and
-                // the simulated interconnect cost it reports)
+                // the simulated interconnect cost it reports); the
+                // engine records its own pack/hop/unpack spans
                 let stats = comms
                     .allreduce_mean(&mut worker_grads)
                     .context("gradient all-reduce")?;
                 self.last_comm_ms = stats.sim_seconds * 1e3;
                 let grads = worker_grads.into_iter().next().unwrap();
+                let opt_span = telemetry::span(Probe::OptStep);
                 opt.step(params, &grads, lr);
+                drop(opt_span);
+                if telemetry::enabled() {
+                    // live memory gauges, sampled at the step boundary
+                    // and cross-checked against the static accountant
+                    // (memory::opt_state_bytes mirrors state_bytes())
+                    telemetry::gauge(Gauge::OptStateBytes,
+                                     opt.state_bytes() as u64);
+                    // tiled step-kernel decode/encode scratch: O(tile)
+                    // per step thread at bf16/q8, zero at f32 (the f32
+                    // kernels lend slot storage outright)
+                    let scratch = if self.cfg.state_dtype == StateDtype::F32
+                    {
+                        0
+                    } else {
+                        2 * self.cfg.step_chunk * 4 * self.cfg.step_threads
+                    };
+                    telemetry::gauge(Gauge::StepScratchBytes,
+                                     scratch as u64);
+                }
                 Ok(loss_sum / self.cfg.workers as f64)
             }
             Engine::Fused { train_art, state, n_params } => {
@@ -419,6 +467,7 @@ impl Trainer {
     /// gradient accumulation included — captures a consistent snapshot.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>)
                            -> Result<()> {
+        let _span = telemetry::span(Probe::CkptIo);
         let Engine::Split { params, opt, comms, .. } = &self.engine else {
             bail!("checkpoint save needs split mode (the fused artifact \
                    owns its optimizer state)");
@@ -456,31 +505,103 @@ impl Trainer {
         crate::checkpoint::save_v2(path, &entries)
     }
 
-    /// Run the configured number of steps with periodic eval; logs curves
-    /// through `log` (step → CSV row) when provided.
+    /// Snapshot of everything this trainer's thread has measured so far
+    /// (per-phase spans, comm counters, memory gauges), under canonical
+    /// probe names. Benches fold this into their `BENCH_*.json` docs.
+    pub fn telemetry_registry(&self) -> telemetry::Registry {
+        let mut reg = telemetry::Registry::new();
+        telemetry::thread_snapshot_into(&mut reg);
+        reg
+    }
+
+    /// Run the configured number of steps with periodic eval. Fills the
+    /// per-phase `*_ms` columns from telemetry snapshot deltas around
+    /// each step, and — when `cfg.telemetry_jsonl` is set — streams one
+    /// JSONL event per step plus a final aggregate summary event.
     pub fn train(&mut self) -> Result<RunHistory> {
         let mut hist = RunHistory::default();
+        let mut jsonl = match &self.cfg.telemetry_jsonl {
+            Some(path) => Some(telemetry::JsonlWriter::create(path)
+                .context("opening telemetry_jsonl")?),
+            None => None,
+        };
         for _ in 0..self.cfg.steps {
+            let before = telemetry::thread_totals();
             let t0 = std::time::Instant::now();
             let loss = self.train_step()?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             let ema = self.ema.update(loss);
-            hist.steps.push(StepRecord {
+            let after = telemetry::thread_totals();
+            let rec = StepRecord {
                 step: self.step,
                 loss,
                 loss_ema: ema,
                 lr: self.schedule.lr(self.step),
                 wall_ms,
                 comm_ms: self.last_comm_ms,
-            });
+                grad_ms: after.ms_since(&before, &[Probe::Grad]),
+                opt_ms: after.ms_since(&before, &[Probe::OptStep]),
+                comm_pack_ms: after.ms_since(
+                    &before, &[Probe::CommPack, Probe::CommFeedback]),
+                comm_hop_ms: after.ms_since(
+                    &before,
+                    &[Probe::CommHopReduce, Probe::CommHopEncode,
+                      Probe::CommHopGather]),
+                comm_unpack_ms: after.ms_since(
+                    &before, &[Probe::CommUnpack]),
+                ckpt_ms: after.ms_since(&before, &[Probe::CkptIo]),
+            };
+            if let Some(w) = jsonl.as_mut() {
+                w.event(&step_event(&rec))
+                    .context("writing telemetry_jsonl step event")?;
+            }
+            hist.steps.push(rec);
             if self.step % self.cfg.eval_every == 0
                 || self.step == self.cfg.steps
             {
-                hist.evals.push(self.evaluate()?);
+                let eval_span = telemetry::span(Probe::Eval);
+                let ev = self.evaluate()?;
+                drop(eval_span);
+                hist.evals.push(ev);
             }
+        }
+        if let Some(w) = jsonl.as_mut() {
+            // end-of-run aggregate: every span/counter/gauge this thread
+            // accumulated, under canonical names
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("type".to_string(),
+                       Json::String("summary".to_string()));
+            obj.insert("registry".to_string(),
+                       self.telemetry_registry().to_json());
+            w.event(&Json::Object(obj))
+                .context("writing telemetry_jsonl summary event")?;
+            w.flush().context("flushing telemetry_jsonl")?;
         }
         Ok(hist)
     }
+}
+
+/// The per-step JSONL event (`{"type":"step",...}`) mirroring the
+/// loss-curve CSV row — schema documented in EXPERIMENTS.md §Telemetry.
+fn step_event(r: &StepRecord) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        o.insert(k.to_string(), v);
+    };
+    put("type", Json::String("step".to_string()));
+    put("step", Json::Number(r.step as f64));
+    put("loss", Json::Number(r.loss));
+    put("loss_ema", Json::Number(r.loss_ema));
+    put("lr", Json::Number(r.lr));
+    put("wall_ms", Json::Number(r.wall_ms));
+    put("comm_ms", Json::Number(r.comm_ms));
+    put("grad_ms", Json::Number(r.grad_ms));
+    put("opt_ms", Json::Number(r.opt_ms));
+    put("comm_pack_ms", Json::Number(r.comm_pack_ms));
+    put("comm_hop_ms", Json::Number(r.comm_hop_ms));
+    put("comm_unpack_ms", Json::Number(r.comm_unpack_ms));
+    put("ckpt_ms", Json::Number(r.ckpt_ms));
+    Json::Object(o)
 }
 
 /// Execute a grad artifact: inputs `params ++ batch`, outputs

@@ -1,8 +1,11 @@
-//! Minimal JSON parser (serde is unavailable offline).
+//! Minimal JSON parser and serializer (serde is unavailable offline).
 //!
-//! Parses the artifact `manifest.json` emitted by `python/compile/aot.py`.
-//! Full JSON value model, recursive-descent parser, no external deps.
-//! Numbers are f64; the manifest only uses integers within f64 range.
+//! Parses the artifact `manifest.json` emitted by `python/compile/aot.py`
+//! and serializes telemetry exports (`BENCH_*.json`, JSONL event
+//! streams — see `telemetry::jsonl`). Full JSON value model,
+//! recursive-descent parser, no external deps. Numbers are f64; the
+//! manifest only uses integers within f64 range, and `Display` prints
+//! integral values without a fraction so counters round-trip exactly.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -64,6 +67,72 @@ impl Json {
     /// Object field access.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_object().and_then(|m| m.get(key))
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+/// Compact (single-line) serialization; output re-parses to an equal
+/// value. Object keys keep `BTreeMap` order, so serialization is
+/// deterministic. Non-finite numbers (which valid parses never produce)
+/// serialize as `null`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Number(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
+                    // integral and exactly representable: no fraction,
+                    // so u64-derived counters round-trip bit-exactly
+                    write!(f, "{}", *n as i64)
+                } else {
+                    // Rust's f64 Display is shortest-round-trip
+                    write!(f, "{n}")
+                }
+            }
+            Json::String(s) => write_escaped(f, s),
+            Json::Array(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Object(map) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
     }
 }
 
@@ -292,6 +361,33 @@ mod tests {
         let shape: Vec<usize> = v.get("shape").unwrap().as_array().unwrap()
             .iter().map(|x| x.as_usize().unwrap()).collect();
         assert_eq!(shape, vec![64, 32]);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let cases = [
+            "null",
+            "true",
+            r#"{"a":[1,2.5,{"b":"c"}],"d":{},"e":-150,"f":"x\ny \"q\""}"#,
+            r#"[0,9007199254740992,1e300,"héllo → ok",""]"#,
+        ];
+        for text in cases {
+            let v = Json::parse(text).unwrap();
+            let printed = v.to_string();
+            let reparsed = Json::parse(&printed).unwrap();
+            assert_eq!(reparsed, v, "round-trip failed for {text}");
+        }
+    }
+
+    #[test]
+    fn display_prints_integers_without_fraction() {
+        assert_eq!(Json::Number(42.0).to_string(), "42");
+        assert_eq!(Json::Number(-3.0).to_string(), "-3");
+        assert_eq!(Json::Number(0.25).to_string(), "0.25");
+        assert_eq!(Json::Number(f64::NAN).to_string(), "null");
+        let mut m = BTreeMap::new();
+        m.insert("k".to_string(), Json::Array(vec![Json::Bool(false)]));
+        assert_eq!(Json::Object(m).to_string(), r#"{"k":[false]}"#);
     }
 
     #[test]

@@ -31,7 +31,14 @@
 //!   buffers whose wire payloads can be compressed to bf16 or
 //!   block-wise 8-bit with per-rank error-feedback residuals —
 //!   bitwise-deterministic at any `comm_threads`, with the simulated
-//!   pod interconnect cost reported per step.
+//!   pod interconnect cost reported per step. Live measurement runs
+//!   through the determinism-neutral [`telemetry`] subsystem
+//!   (DESIGN.md §14): per-phase spans, wire-byte counters, and memory
+//!   gauges recorded into thread-local cells, aggregated into a
+//!   [`telemetry::Registry`], and exported as per-phase `StepRecord`
+//!   columns, an optional JSONL event stream, and the benches'
+//!   `BENCH_*.json` perf trajectory — bitwise-invisible to training
+//!   whether enabled or disabled.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for measured results. This offline
@@ -55,6 +62,7 @@ pub mod optim;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod trace;
 

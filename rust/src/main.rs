@@ -45,6 +45,8 @@ fn commands() -> Vec<Command> {
             .option("artifacts", "artifacts directory (default: artifacts)")
             .option("out", "CSV output path for the loss curve")
             .option("save", "write final params + optimizer state here (SM3CKPT2; split path)")
+            .option("telemetry-jsonl", "stream per-step telemetry events to this JSONL file (implies --telemetry semantics must hold: split path)")
+            .flag("telemetry", "measure per-phase spans / counters / gauges (split path; bitwise-invisible to the trajectory)")
             .flag("quiet", "suppress per-step output"),
         Command::new("eval", "evaluate at initialization")
             .option("model", "model key")
@@ -53,6 +55,9 @@ fn commands() -> Vec<Command> {
             .option("out", "CSV output path"),
         Command::new("list", "list artifacts in the manifest")
             .option("artifacts", "artifacts directory"),
+        Command::new("bench-check",
+                     "validate BENCH_*.json telemetry documents (positional \
+                      file paths; exits non-zero on schema violations)"),
     ]
 }
 
@@ -84,6 +89,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "memory-report" => cmd_memory_report(&args),
         "list" => cmd_list(&args),
+        "bench-check" => cmd_bench_check(&args),
         _ => unreachable!(),
     }
 }
@@ -153,6 +159,15 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts_dir = a.to_string();
     }
+    if args.has_flag("telemetry") {
+        cfg.telemetry = true;
+    }
+    if let Some(p) = args.opt("telemetry-jsonl") {
+        // the JSONL stream implies measurement (validate() enforces the
+        // pairing for TOML configs; the CLI just does the obvious thing)
+        cfg.telemetry = true;
+        cfg.telemetry_jsonl = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -204,19 +219,43 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
                  opt.state_dtype().name(), opt.name());
     }
     let mut logger = RunLogger::new(
-        args.opt("out"), "step,loss,loss_ema,lr,wall_ms,comm_ms", false)?;
+        args.opt("out"),
+        "step,loss,loss_ema,lr,wall_ms,comm_ms,grad_ms,opt_ms,\
+         comm_pack_ms,comm_hop_ms,comm_unpack_ms,ckpt_ms",
+        false)?;
     let hist = trainer.train()?;
     for s in &hist.steps {
         logger.row(&[s.step.to_string(), format!("{:.6}", s.loss),
                      format!("{:.6}", s.loss_ema), format!("{:.6e}", s.lr),
                      format!("{:.2}", s.wall_ms),
-                     format!("{:.4}", s.comm_ms)])?;
+                     format!("{:.4}", s.comm_ms),
+                     format!("{:.4}", s.grad_ms),
+                     format!("{:.4}", s.opt_ms),
+                     format!("{:.4}", s.comm_pack_ms),
+                     format!("{:.4}", s.comm_hop_ms),
+                     format!("{:.4}", s.comm_unpack_ms),
+                     format!("{:.4}", s.ckpt_ms)])?;
         if !quiet && (s.step % 10 == 0 || s.step == 1) {
             println!("  step {:>6}  loss {:.4}  (ema {:.4})  lr {:.3e}  {:.0} ms",
                      s.step, s.loss, s.loss_ema, s.lr, s.wall_ms);
         }
     }
     logger.flush()?;
+    if cfg.telemetry {
+        let reg = trainer.telemetry_registry();
+        println!("  telemetry (per-phase, whole run):");
+        for (name, s) in reg.spans() {
+            println!("    {name:<18} n={:<6} total {:>9.3} ms  \
+                      mean {:>9.1} us",
+                     s.count, s.total_ns as f64 / 1e6, s.mean_ns() / 1e3);
+        }
+        for (name, v) in reg.counters() {
+            println!("    {name:<18} {v}");
+        }
+        for (name, g) in reg.gauges() {
+            println!("    {name:<18} last={} peak={}", g.last, g.peak);
+        }
+    }
     for e in &hist.evals {
         let metric = e.metric.map(|m| format!("  metric {m:.4}"))
             .unwrap_or_default();
@@ -303,6 +342,39 @@ fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
             logger.row(&[r])?;
         }
         logger.flush()?;
+    }
+    Ok(())
+}
+
+/// Validate `BENCH_*.json` telemetry documents (the CI gate behind
+/// `make bench-telemetry`): every file must parse as JSON and satisfy
+/// `telemetry::validate_bench_doc` — schema tag, internally consistent
+/// span stats, numeric counters/gauges.
+fn cmd_bench_check(args: &sm3::cli::Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("bench-check needs at least one BENCH_*.json path");
+    }
+    let mut bad = 0usize;
+    for path in &args.positional {
+        let verdict = std::fs::read_to_string(path)
+            .map_err(|e| format!("read error: {e}"))
+            .and_then(|text| {
+                sm3::json::Json::parse(&text)
+                    .map_err(|e| format!("parse error: {e}"))
+            })
+            .and_then(|doc| {
+                sm3::telemetry::validate_bench_doc(&doc)
+            });
+        match verdict {
+            Ok(()) => println!("  {path}: ok"),
+            Err(e) => {
+                println!("  {path}: INVALID — {e}");
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        bail!("{bad} invalid telemetry document(s)");
     }
     Ok(())
 }

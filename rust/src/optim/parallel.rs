@@ -44,7 +44,9 @@ use super::kernel;
 use super::qstate::codec::Q8_BLOCK;
 use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
+use crate::telemetry::{self, Gauge, Probe};
 use crate::tensor::Tensor;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// `lr · s` skipping the multiply when `s == 1` (the uniform case keeps
 /// the exact historical arithmetic; `x · 1.0` is exact anyway, but the
@@ -145,6 +147,11 @@ pub struct ParallelStep {
     /// per-leaf LR multipliers (`OptimSpec` param groups); empty =
     /// uniform 1.0 — the historical arithmetic, skip the multiply
     lr_scales: Vec<f32>,
+    /// telemetry: one preallocated slot per worker. Scoped workers die
+    /// inside the step, so each measures its own elapsed time here and
+    /// the owning thread folds the slots — in worker-index order — into
+    /// its thread-local cells after the scope joins (DESIGN.md §14).
+    worker_ns: Vec<AtomicU64>,
 }
 
 impl ParallelStep {
@@ -268,8 +275,9 @@ impl ParallelStep {
                 task_worker[t] = wid;
             }
         }
+        let worker_ns = (0..bins.len()).map(|_| AtomicU64::new(0)).collect();
         Ok(Self { leaves, task_worker, workers: bins.len(), threads,
-                  lr_scales: Vec::new() })
+                  lr_scales: Vec::new(), worker_ns })
     }
 
     /// Configured worker count (the live worker count may be lower when
@@ -401,15 +409,44 @@ impl Optimizer for ParallelStep {
                 }
             }
         }
+        // Sample the flag once so every worker this step agrees; the
+        // slots are preallocated, so measuring adds no allocations.
+        let tele = telemetry::enabled();
+        let worker_ns = &self.worker_ns;
         std::thread::scope(|scope| {
-            for bucket in buckets {
+            for (wid, bucket) in buckets.into_iter().enumerate() {
+                let slot = &worker_ns[wid];
                 scope.spawn(move || {
+                    let t0 = if tele { telemetry::now_ns() } else { 0 };
                     for item in bucket {
                         item.run(lr);
+                    }
+                    if tele {
+                        slot.store(
+                            telemetry::now_ns().saturating_sub(t0),
+                            Ordering::Relaxed);
                     }
                 });
             }
         });
+        if tele {
+            // fold in worker-index order: deterministic aggregate
+            // regardless of which worker finished first
+            let mut sum = 0u64;
+            let mut max = 0u64;
+            for slot in worker_ns {
+                let ns = slot.load(Ordering::Relaxed);
+                telemetry::record_ns(Probe::OptWorker, ns);
+                sum += ns;
+                max = max.max(ns);
+            }
+            if sum > 0 {
+                // slowest worker over the mean, permille (1000 = balanced)
+                let permille =
+                    max * self.workers as u64 * 1000 / sum;
+                telemetry::gauge(Gauge::OptImbalancePermille, permille);
+            }
+        }
     }
 
     fn state_floats(&self) -> usize {
@@ -879,6 +916,52 @@ mod tests {
         // wrong length / non-positive scales are rejected
         assert!(one.set_lr_scales(&[1.0]).is_err());
         assert!(one.set_lr_scales(&[0.5, 1.0, 0.0, 1.0]).is_err());
+    }
+
+    /// ISSUE 7: sharded steps record one `opt_worker` span per live
+    /// worker (folded in index order on the owning thread) plus a load
+    /// -imbalance gauge — and the measurement changes no parameter bit.
+    #[test]
+    fn sharded_step_records_per_worker_spans_and_imbalance() {
+        let specs = skewed_specs();
+        let mut rng = Rng::new(29);
+        let init: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        // reference trajectory, telemetry off (modulo parallel tests'
+        // overlapping guards — measurement never touches f32 math)
+        let mut quiet =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 3)
+                .unwrap();
+        let mut pa = init.clone();
+        quiet.step(&mut pa, &grads, 0.1);
+
+        let _g = telemetry::enable();
+        let mut loud =
+            ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 3)
+                .unwrap();
+        let before = telemetry::thread_totals();
+        let mut pb = init;
+        loud.step(&mut pb, &grads, 0.1);
+        let after = telemetry::thread_totals();
+        assert_eq!(after.spans(Probe::OptWorker)
+                       - before.spans(Probe::OptWorker),
+                   loud.workers as u64,
+                   "one folded span per live worker");
+        let imb = telemetry::thread_gauge(Gauge::OptImbalancePermille);
+        assert!(imb.last >= 1000,
+                "slowest/mean is >= 1 by construction, got {}", imb.last);
+        for (a, b) in pa.iter().zip(&pb) {
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "telemetry changed the trajectory: {x} != {y}");
+            }
+        }
     }
 
     #[test]

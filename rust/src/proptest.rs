@@ -1017,6 +1017,138 @@ mod tests {
         });
     }
 
+    /// PR 7 tentpole gate: telemetry is bitwise invisible. The same
+    /// seeded trajectory — every registry optimizer × {f32, q8} state ×
+    /// {serial, whole-leaf sharded, intra-leaf sharded} engines ×
+    /// {scalar, simd} backends, and the compressed comm ring at every
+    /// wire dtype (outputs AND error-feedback residuals) — produces
+    /// identical bits with telemetry enabled and disabled. Telemetry
+    /// only reads clocks and writes integer cells, so this holds
+    /// structurally; the property pins it against regressions.
+    #[test]
+    fn telemetry_is_bitwise_invisible() {
+        use crate::comms::CommEngine;
+        use crate::optim::{self, parallel::ParallelStep, Backend,
+                           Optimizer, SplitPolicy, StateDtype};
+        use crate::telemetry;
+        use crate::tensor::Tensor;
+        forall("telemetry on == off, bitwise", |rng| {
+            (gen::param_specs(rng, 3, 3, 6), rng.next_u64())
+        }, |(specs, seed)| {
+            let bits = |params: &[Tensor]| -> Vec<u32> {
+                params
+                    .iter()
+                    .flat_map(|t| t.data().iter().map(|v| v.to_bits()))
+                    .collect()
+            };
+            // mode 0: serial (honouring `backend`); 1: whole-leaf
+            // sharded; 2: intra-leaf sharded (default backend)
+            let traj = |name: &str, dtype: StateDtype, backend: Backend,
+                        mode: u8, tele: bool| -> Result<Vec<u32>, String> {
+                let _guard = tele.then(telemetry::enable);
+                let mut serial: Option<Box<dyn Optimizer>> = None;
+                let mut par: Option<ParallelStep> = None;
+                if mode == 0 {
+                    serial = Some(
+                        optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype)
+                                .kernel_backend(backend).build(specs))
+                            .map_err(|e| e.to_string())?);
+                } else {
+                    let policy = if mode == 1 {
+                        SplitPolicy::WholeLeaf
+                    } else {
+                        SplitPolicy::IntraLeaf
+                    };
+                    par = Some(ParallelStep::from_registry_opts(
+                        name, specs, 0.9, 0.98, 2, dtype, 64, policy)
+                        .map_err(|e| e.to_string())?);
+                }
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut params: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                    .collect();
+                for _step in 0..2 {
+                    let grads: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                        .collect();
+                    if let Some(o) = serial.as_mut() {
+                        o.step(&mut params, &grads, 0.1);
+                    }
+                    if let Some(p) = par.as_mut() {
+                        p.step(&mut params, &grads, 0.1);
+                    }
+                }
+                Ok(bits(&params))
+            };
+            for name in optim::ALL {
+                for dtype in [StateDtype::F32, StateDtype::Q8] {
+                    for (backend, mode) in [(Backend::Scalar, 0u8),
+                                            (Backend::Simd, 0),
+                                            (Backend::Scalar, 1),
+                                            (Backend::Scalar, 2)] {
+                        let off = traj(name, dtype, backend, mode, false)?;
+                        let on = traj(name, dtype, backend, mode, true)?;
+                        if off != on {
+                            return Err(format!(
+                                "{name} @ {dtype:?} mode {mode} \
+                                 {backend:?}: telemetry changed the \
+                                 trajectory"));
+                        }
+                    }
+                }
+            }
+            // the comm ring: outputs and carried residuals, 2 comm
+            // threads so the hop spans run on the instrumented path
+            for dtype in StateDtype::ALL {
+                let ranks = 3;
+                let run = |tele: bool|
+                 -> Result<(Vec<u32>, Vec<u32>), String> {
+                    let _guard = tele.then(telemetry::enable);
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let base: Vec<Vec<Tensor>> = (0..ranks)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect())
+                        .collect();
+                    let mut eng =
+                        CommEngine::new(specs, ranks, dtype, 64, 2)
+                            .map_err(|e| e.to_string())?;
+                    let mut out = base.clone();
+                    for _round in 0..2 {
+                        let mut g = base.clone();
+                        eng.allreduce_mean(&mut g)
+                            .map_err(|e| e.to_string())?;
+                        out = g;
+                    }
+                    let out_bits = out
+                        .iter()
+                        .flat_map(|rank| bits(rank))
+                        .collect();
+                    let res_bits = eng
+                        .state()
+                        .iter()
+                        .flat_map(|(_, t)| {
+                            t.data()
+                                .iter()
+                                .map(|v| v.to_bits())
+                                .collect::<Vec<u32>>()
+                        })
+                        .collect();
+                    Ok((out_bits, res_bits))
+                };
+                if run(false)? != run(true)? {
+                    return Err(format!(
+                        "{dtype:?} ring: telemetry changed the exchange \
+                         or its residuals"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {

@@ -1,0 +1,102 @@
+//! Clock abstraction for the telemetry subsystem (DESIGN.md §14).
+//!
+//! Production spans read a process-wide monotonic clock; tests inject a
+//! [`FakeClock`] so span semantics (nesting, min/max, totals) are
+//! asserted against exact, deterministic timestamps instead of wall
+//! time. Timestamps are `u64` nanoseconds since an arbitrary per-process
+//! origin — only differences are meaningful.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// A monotonic nanosecond source. Object-safe so instrumented code can
+/// hold `&dyn Clock` and tests can swap in a [`FakeClock`].
+pub trait Clock {
+    /// Nanoseconds since this clock's origin. Must be monotone
+    /// non-decreasing on a given clock instance.
+    fn now_ns(&self) -> u64;
+}
+
+// Anchor for the process-wide monotonic clock. OnceLock stores the
+// Instant inline, so initializing it on first use never allocates —
+// required because spans fire inside allocation-free steady-state paths.
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the first telemetry clock read in this process.
+/// The global monotonic source behind [`MonotonicClock`] and the
+/// hot-path span API in [`crate::telemetry`].
+#[inline]
+pub fn now_ns() -> u64 {
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// The production clock: [`std::time::Instant`] against a process-wide
+/// origin, shared by every span so timestamps are comparable across
+/// threads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MonotonicClock;
+
+impl Clock for MonotonicClock {
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        now_ns()
+    }
+}
+
+/// Deterministic test clock: time advances only when the test says so.
+/// Deliberately `!Sync` (interior `Cell`) — a fake clock belongs to one
+/// test thread; cross-thread tests use per-thread instances.
+#[derive(Debug, Default)]
+pub struct FakeClock {
+    ns: Cell<u64>,
+}
+
+impl FakeClock {
+    /// A fake clock starting at t = 0 ns.
+    pub fn new() -> Self {
+        FakeClock { ns: Cell::new(0) }
+    }
+
+    /// Jump to an absolute timestamp (must not go backwards in tests
+    /// that assert monotonicity; the clock itself does not check).
+    pub fn set(&self, ns: u64) {
+        self.ns.set(ns);
+    }
+
+    /// Advance time by `ns` nanoseconds.
+    pub fn advance(&self, ns: u64) {
+        self.ns.set(self.ns.get() + ns);
+    }
+}
+
+impl Clock for FakeClock {
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.ns.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_is_nondecreasing() {
+        let c = MonotonicClock;
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn fake_clock_advances_only_on_demand() {
+        let c = FakeClock::new();
+        assert_eq!(c.now_ns(), 0);
+        assert_eq!(c.now_ns(), 0);
+        c.advance(250);
+        assert_eq!(c.now_ns(), 250);
+        c.set(1_000);
+        assert_eq!(c.now_ns(), 1_000);
+    }
+}

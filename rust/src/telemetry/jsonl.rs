@@ -1,0 +1,84 @@
+//! Optional JSONL event stream: one JSON object per line, serialized
+//! through the crate's own [`crate::json`] value model so the schema
+//! round-trips through the same parser that reads artifact manifests.
+//!
+//! The trainer emits one `step` event per training step (per-phase
+//! millisecond deltas) and a final `summary` event holding the folded
+//! [`super::Registry`]. The stream is opt-in (`telemetry_jsonl` /
+//! `--telemetry-jsonl`) and lives entirely off the hot path: events are
+//! built and written on the coordinator thread between steps.
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+/// Line-oriented JSON event writer (`*.jsonl`).
+#[derive(Debug)]
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    /// Create (truncate) the event stream at `path`, creating parent
+    /// directories as needed.
+    pub fn create(path: &str) -> Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating telemetry jsonl {path}"))?;
+        Ok(JsonlWriter { out: BufWriter::new(f) })
+    }
+
+    /// Append one event as a single line.
+    pub fn event(&mut self, v: &Json) -> Result<()> {
+        writeln!(self.out, "{v}").context("writing telemetry jsonl event")
+    }
+
+    /// Flush buffered events to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().context("flushing telemetry jsonl")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn events_round_trip_through_the_parser() {
+        let dir = std::env::temp_dir().join("sm3_telemetry_jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let path = path.to_str().unwrap();
+
+        let mut events = Vec::new();
+        for step in 0..3u64 {
+            let mut o = BTreeMap::new();
+            o.insert("type".into(), Json::String("step".into()));
+            o.insert("step".into(), Json::Number(step as f64));
+            o.insert("grad_ms".into(), Json::Number(0.25 * step as f64));
+            o.insert("note".into(),
+                     Json::String("quotes \" and \\ and\nnewlines".into()));
+            events.push(Json::Object(o));
+        }
+        let mut w = JsonlWriter::create(path).unwrap();
+        for e in &events {
+            w.event(e).unwrap();
+        }
+        w.flush().unwrap();
+        drop(w);
+
+        let text = std::fs::read_to_string(path).unwrap();
+        let parsed: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(parsed, events, "JSONL must round-trip bit-exactly");
+    }
+}

@@ -1,0 +1,468 @@
+//! Run-level aggregation: string-keyed per-phase stats, counters, and
+//! gauges, plus the `BENCH_*.json` document builder and its schema
+//! checker (DESIGN.md §14, EXPERIMENTS.md §Telemetry).
+//!
+//! The [`Registry`] is the *cold* side of telemetry: hot paths record
+//! into fixed thread-local cells (`telemetry::span` / `count` /
+//! `gauge`), and those cells are folded into a registry at step or run
+//! boundaries. Benches also record into a registry directly through
+//! `bench_util::bench`, so the per-phase CSV tables and the
+//! `BENCH_*.json` trajectory are produced by one code path.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// Aggregated timing stats for one named phase: count / total / min /
+/// max (mean is derived). Merging is commutative and associative, so
+/// per-worker partials folded in any grouping yield the same aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanStats {
+    /// Number of recorded spans.
+    pub count: u64,
+    /// Sum of span durations, nanoseconds.
+    pub total_ns: u64,
+    /// Shortest span, nanoseconds (`u64::MAX` while `count == 0`).
+    pub min_ns: u64,
+    /// Longest span, nanoseconds.
+    pub max_ns: u64,
+}
+
+impl SpanStats {
+    /// Empty stats (identity element for [`SpanStats::merge`]).
+    pub const fn new() -> Self {
+        SpanStats { count: 0, total_ns: 0, min_ns: u64::MAX, max_ns: 0 }
+    }
+
+    /// Fold one span duration in.
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.total_ns += ns;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another partial aggregate in (order-independent).
+    pub fn merge(&mut self, other: &SpanStats) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.total_ns += other.total_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Mean span duration in nanoseconds (0.0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+
+    /// `min_ns` as reported externally: 0 for an empty aggregate so the
+    /// JSON export never leaks the `u64::MAX` sentinel.
+    pub fn min_ns_or_zero(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+}
+
+impl Default for SpanStats {
+    fn default() -> Self {
+        SpanStats::new()
+    }
+}
+
+/// A sampled quantity with a high-water mark: `last` is the most recent
+/// sample, `peak` the maximum ever set.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GaugeStats {
+    /// Most recent sample.
+    pub last: u64,
+    /// High-water mark across all samples.
+    pub peak: u64,
+}
+
+impl GaugeStats {
+    /// Record a sample, keeping the high-water mark.
+    pub fn set(&mut self, v: u64) {
+        self.last = v;
+        self.peak = self.peak.max(v);
+    }
+
+    /// Fold another gauge in: the peak is the max of both, and `last`
+    /// takes the other side's value (callers merge in a deterministic
+    /// worker-index order, so `last` is well-defined).
+    pub fn merge(&mut self, other: &GaugeStats) {
+        self.last = other.last;
+        self.peak = self.peak.max(other.peak);
+    }
+}
+
+/// String-keyed run aggregate: per-phase [`SpanStats`], monotone
+/// counters, and [`GaugeStats`]. BTreeMap keys give deterministic
+/// iteration and JSON field order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    spans: BTreeMap<String, SpanStats>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, GaugeStats>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub const fn new() -> Self {
+        Registry {
+            spans: BTreeMap::new(),
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.counters.is_empty()
+            && self.gauges.is_empty()
+    }
+
+    /// Record one span duration under `name`.
+    pub fn record_ns(&mut self, name: &str, ns: u64) {
+        if let Some(s) = self.spans.get_mut(name) {
+            s.record(ns);
+        } else {
+            let mut s = SpanStats::new();
+            s.record(ns);
+            self.spans.insert(name.to_string(), s);
+        }
+    }
+
+    /// Fold a partial span aggregate (e.g. one thread's cells) under
+    /// `name`.
+    pub fn merge_span(&mut self, name: &str, stats: &SpanStats) {
+        if let Some(s) = self.spans.get_mut(name) {
+            s.merge(stats);
+        } else {
+            let mut s = SpanStats::new();
+            s.merge(stats);
+            self.spans.insert(name.to_string(), s);
+        }
+    }
+
+    /// Add `n` to the counter `name`.
+    pub fn add(&mut self, name: &str, n: u64) {
+        if let Some(c) = self.counters.get_mut(name) {
+            *c += n;
+        } else {
+            self.counters.insert(name.to_string(), n);
+        }
+    }
+
+    /// Set gauge `name` to `v`, keeping its high-water mark.
+    pub fn gauge(&mut self, name: &str, v: u64) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            g.set(v);
+        } else {
+            let mut g = GaugeStats::default();
+            g.set(v);
+            self.gauges.insert(name.to_string(), g);
+        }
+    }
+
+    /// Fold a gauge aggregate under `name`.
+    pub fn merge_gauge(&mut self, name: &str, stats: &GaugeStats) {
+        if let Some(g) = self.gauges.get_mut(name) {
+            g.merge(stats);
+        } else {
+            self.gauges.insert(name.to_string(), *stats);
+        }
+    }
+
+    /// Fold an entire registry in (used to combine per-worker or
+    /// per-section partials; commutative for spans/counters, `last`
+    /// of equal-named gauges takes `other`'s value).
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, s) in &other.spans {
+            self.merge_span(k, s);
+        }
+        for (k, n) in &other.counters {
+            self.add(k, *n);
+        }
+        for (k, g) in &other.gauges {
+            self.merge_gauge(k, g);
+        }
+    }
+
+    /// Look up a phase aggregate.
+    pub fn span(&self, name: &str) -> Option<&SpanStats> {
+        self.spans.get(name)
+    }
+
+    /// Look up a counter.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Look up a gauge.
+    pub fn gauge_stats(&self, name: &str) -> Option<&GaugeStats> {
+        self.gauges.get(name)
+    }
+
+    /// Iterate phases in name order.
+    pub fn spans(&self) -> impl Iterator<Item = (&str, &SpanStats)> {
+        self.spans.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Iterate counters in name order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Iterate gauges in name order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, &GaugeStats)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// The registry as a JSON object `{spans, counters, gauges}` —
+    /// the payload section of a `BENCH_*.json` document and of the
+    /// end-of-run JSONL summary event.
+    pub fn to_json(&self) -> Json {
+        let mut spans = BTreeMap::new();
+        for (name, s) in &self.spans {
+            let mut o = BTreeMap::new();
+            o.insert("count".into(), Json::Number(s.count as f64));
+            o.insert("total_ns".into(), Json::Number(s.total_ns as f64));
+            o.insert("min_ns".into(),
+                     Json::Number(s.min_ns_or_zero() as f64));
+            o.insert("max_ns".into(), Json::Number(s.max_ns as f64));
+            o.insert("mean_ns".into(), Json::Number(s.mean_ns()));
+            spans.insert(name.clone(), Json::Object(o));
+        }
+        let mut counters = BTreeMap::new();
+        for (name, n) in &self.counters {
+            counters.insert(name.clone(), Json::Number(*n as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in &self.gauges {
+            let mut o = BTreeMap::new();
+            o.insert("last".into(), Json::Number(g.last as f64));
+            o.insert("peak".into(), Json::Number(g.peak as f64));
+            gauges.insert(name.clone(), Json::Object(o));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("spans".into(), Json::Object(spans));
+        doc.insert("counters".into(), Json::Object(counters));
+        doc.insert("gauges".into(), Json::Object(gauges));
+        Json::Object(doc)
+    }
+}
+
+/// Schema tag stamped into every `BENCH_*.json` document; the checker
+/// rejects documents carrying any other tag.
+pub const BENCH_SCHEMA: &str = "sm3-telemetry-bench-v1";
+
+/// Build a complete `BENCH_*.json` document:
+/// `{schema, bench, quick, spans, counters, gauges}`.
+pub fn bench_doc(bench: &str, quick: bool, reg: &Registry) -> Json {
+    let mut doc = match reg.to_json() {
+        Json::Object(m) => m,
+        _ => unreachable!("Registry::to_json returns an object"),
+    };
+    doc.insert("schema".into(), Json::String(BENCH_SCHEMA.to_string()));
+    doc.insert("bench".into(), Json::String(bench.to_string()));
+    doc.insert("quick".into(), Json::Bool(quick));
+    Json::Object(doc)
+}
+
+fn field_u64(obj: &Json, key: &str, ctx: &str) -> Result<u64, String> {
+    let n = obj
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{ctx}: missing numeric field `{key}`"))?;
+    if !n.is_finite() || n < 0.0 {
+        return Err(format!("{ctx}: field `{key}` = {n} is not a count"));
+    }
+    Ok(n as u64)
+}
+
+/// Validate a parsed `BENCH_*.json` document against the documented
+/// schema (EXPERIMENTS.md §Telemetry). Returns the offending detail on
+/// mismatch; CI runs this via `sm3-train bench-check`.
+pub fn validate_bench_doc(doc: &Json) -> Result<(), String> {
+    let obj = doc.as_object().ok_or("document is not a JSON object")?;
+    match obj.get("schema").and_then(Json::as_str) {
+        Some(s) if s == BENCH_SCHEMA => {}
+        Some(s) => return Err(format!("unknown schema tag `{s}`")),
+        None => return Err("missing string field `schema`".into()),
+    }
+    if obj.get("bench").and_then(Json::as_str).is_none() {
+        return Err("missing string field `bench`".into());
+    }
+    if !matches!(obj.get("quick"), Some(Json::Bool(_))) {
+        return Err("missing bool field `quick`".into());
+    }
+    let spans = obj
+        .get("spans")
+        .and_then(Json::as_object)
+        .ok_or("missing object field `spans`")?;
+    for (name, s) in spans {
+        let ctx = format!("span `{name}`");
+        let count = field_u64(s, "count", &ctx)?;
+        let total = field_u64(s, "total_ns", &ctx)?;
+        let min = field_u64(s, "min_ns", &ctx)?;
+        let max = field_u64(s, "max_ns", &ctx)?;
+        if s.get("mean_ns").and_then(Json::as_f64).is_none() {
+            return Err(format!("{ctx}: missing numeric field `mean_ns`"));
+        }
+        if count == 0 {
+            return Err(format!("{ctx}: exported with count == 0"));
+        }
+        if min > max || max > total {
+            return Err(format!(
+                "{ctx}: inconsistent stats min={min} max={max} total={total}"
+            ));
+        }
+    }
+    let counters = obj
+        .get("counters")
+        .and_then(Json::as_object)
+        .ok_or("missing object field `counters`")?;
+    for (name, v) in counters {
+        if v.as_f64().filter(|n| n.is_finite() && *n >= 0.0).is_none() {
+            return Err(format!("counter `{name}` is not a count"));
+        }
+    }
+    let gauges = obj
+        .get("gauges")
+        .and_then(Json::as_object)
+        .ok_or("missing object field `gauges`")?;
+    for (name, g) in gauges {
+        let ctx = format!("gauge `{name}`");
+        let last = field_u64(g, "last", &ctx)?;
+        let peak = field_u64(g, "peak", &ctx)?;
+        if last > peak {
+            return Err(format!("{ctx}: last={last} exceeds peak={peak}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_stats_track_min_mean_max_total() {
+        let mut s = SpanStats::new();
+        for ns in [30, 10, 20] {
+            s.record(ns);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.total_ns, 60);
+        assert_eq!(s.min_ns, 10);
+        assert_eq!(s.max_ns, 30);
+        assert_eq!(s.mean_ns(), 20.0);
+    }
+
+    #[test]
+    fn merge_is_grouping_independent() {
+        // Fold the same 6 samples as (a+b)+c and a+(b+c) and flat —
+        // the aggregate must be identical: merge ordering across
+        // worker partials cannot affect the run summary.
+        let samples = [5u64, 9, 1, 7, 3, 8];
+        let part = |range: std::ops::Range<usize>| {
+            let mut s = SpanStats::new();
+            for &ns in &samples[range] {
+                s.record(ns);
+            }
+            s
+        };
+        let (a, b, c) = (part(0..2), part(2..4), part(4..6));
+
+        let mut left = SpanStats::new();
+        left.merge(&a);
+        left.merge(&b);
+        left.merge(&c);
+
+        let mut ab = a;
+        ab.merge(&b);
+        let mut right = SpanStats::new();
+        right.merge(&ab);
+        right.merge(&c);
+
+        let mut flat = SpanStats::new();
+        for &ns in &samples {
+            flat.record(ns);
+        }
+        assert_eq!(left, right);
+        assert_eq!(left, flat);
+    }
+
+    #[test]
+    fn gauge_keeps_high_water_mark() {
+        let mut g = GaugeStats::default();
+        g.set(10);
+        g.set(100);
+        g.set(7);
+        assert_eq!(g.last, 7);
+        assert_eq!(g.peak, 100);
+    }
+
+    #[test]
+    fn registry_merge_matches_direct_recording() {
+        let mut direct = Registry::new();
+        let mut w0 = Registry::new();
+        let mut w1 = Registry::new();
+        for (reg, ns) in [(&mut w0, 4u64), (&mut w1, 6)] {
+            reg.record_ns("opt_worker", ns);
+            reg.add("items", 2);
+            reg.gauge("bytes", ns * 100);
+        }
+        for ns in [4u64, 6] {
+            direct.record_ns("opt_worker", ns);
+            direct.add("items", 2);
+            direct.gauge("bytes", ns * 100);
+        }
+        let mut merged = Registry::new();
+        merged.merge(&w0);
+        merged.merge(&w1);
+        assert_eq!(merged, direct);
+    }
+
+    #[test]
+    fn bench_doc_passes_own_validator() {
+        let mut reg = Registry::new();
+        reg.record_ns("comm/hop_reduce", 1_500);
+        reg.record_ns("comm/hop_reduce", 2_500);
+        reg.add("comm/wire_bytes", 4096);
+        reg.gauge("mem/comm_buffer_bytes", 1 << 20);
+        let doc = bench_doc("bench_collectives", true, &reg);
+        validate_bench_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        // wrong schema tag
+        let mut reg = Registry::new();
+        reg.record_ns("x", 1);
+        let doc = bench_doc("b", false, &reg);
+        let mut bad = doc.as_object().unwrap().clone();
+        bad.insert("schema".into(), Json::String("v0".into()));
+        assert!(validate_bench_doc(&Json::Object(bad.clone())).is_err());
+        // missing spans section
+        let mut no_spans = doc.as_object().unwrap().clone();
+        no_spans.remove("spans");
+        assert!(validate_bench_doc(&Json::Object(no_spans)).is_err());
+        // span with inconsistent stats
+        let text = r#"{"schema":"sm3-telemetry-bench-v1","bench":"b",
+            "quick":true,"counters":{},"gauges":{},
+            "spans":{"p":{"count":1,"total_ns":5,"min_ns":9,
+                          "max_ns":9,"mean_ns":5.0}}}"#;
+        let parsed = Json::parse(text).unwrap();
+        assert!(validate_bench_doc(&parsed).is_err());
+    }
+}

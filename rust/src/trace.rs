@@ -31,7 +31,9 @@ pub fn write_heatmap_csv(path: &str, t: &Tensor) -> Result<()> {
 /// rank of the k largest Adagrad accumulators.
 pub fn top_k(t: &Tensor, k: usize) -> Vec<f32> {
     let mut v: Vec<f32> = t.data().to_vec();
-    v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // total_cmp: NaN accumulators (a diverged probe run) order
+    // deterministically (+NaN above +inf) instead of panicking mid-sort
+    v.sort_by(|a, b| b.total_cmp(a));
     v.truncate(k);
     v
 }
@@ -41,7 +43,7 @@ pub fn top_k(t: &Tensor, k: usize) -> Vec<f32> {
 pub fn top_k_indices(t: &Tensor, k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..t.len()).collect();
     let d = t.data();
-    idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+    idx.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
     idx.truncate(k);
     idx
 }
@@ -88,6 +90,25 @@ mod tests {
         let t = Tensor::from_vec(&[5], vec![3.0, 1.0, 4.0, 1.5, 9.0]);
         assert_eq!(top_k(&t, 3), vec![9.0, 4.0, 3.0]);
         assert_eq!(top_k_indices(&t, 2), vec![4, 2]);
+    }
+
+    #[test]
+    fn top_k_survives_nan_accumulators() {
+        // Regression: these sorts used `partial_cmp().unwrap()` and
+        // panicked the moment a diverged run produced a NaN statistic.
+        // total_cmp is a total order: +NaN sorts above +inf, so a NaN
+        // accumulator surfaces at the top of the ranking (visibly
+        // broken) rather than aborting the trace.
+        let t = Tensor::from_vec(
+            &[5], vec![1.0, f32::NAN, 3.0, f32::NEG_INFINITY, 2.0]);
+        let top = top_k(&t, 3);
+        assert!(top[0].is_nan());
+        assert_eq!(&top[1..], &[3.0, 2.0]);
+        let idx = top_k_indices(&t, 3);
+        assert_eq!(idx, vec![1, 2, 4]);
+        // all-NaN input is ordered, not a panic
+        let all = top_k(&Tensor::from_vec(&[2], vec![f32::NAN, f32::NAN]), 2);
+        assert!(all.iter().all(|x| x.is_nan()));
     }
 
     #[test]

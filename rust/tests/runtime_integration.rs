@@ -287,6 +287,69 @@ fn comm_dtype_and_threads_train_end_to_end() {
     }
 }
 
+/// PR 7 tentpole, end to end: the telemetry knob is bitwise invisible
+/// to the trajectory; enabled, it fills the widened per-phase StepRecord
+/// columns and streams a parseable JSONL event log with a final summary.
+#[test]
+fn telemetry_is_trajectory_invisible_and_fills_phase_columns() {
+    let _g = lock();
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("sm3_runtime_telemetry_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jsonl = dir.join("events.jsonl");
+    let run = |telemetry: bool| {
+        let mut cfg = tiny_cfg(ExecMode::Split);
+        cfg.workers = 2;
+        cfg.steps = 8;
+        cfg.telemetry = telemetry;
+        if telemetry {
+            cfg.telemetry_jsonl = Some(jsonl.to_str().unwrap().into());
+        }
+        let mut t = Trainer::with_runtime(cfg, rt.clone()).unwrap();
+        t.train().unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+    // 1. bitwise-identical losses: telemetry changed no trajectory bit
+    for (a, b) in off.steps.iter().zip(&on.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(),
+                   "telemetry changed the loss at step {}", a.step);
+    }
+    // 2. disabled runs report zeroed phase columns; enabled runs
+    // measure real grad/opt work (comm phases are >= 0: pack/unpack on
+    // tiny tensors can round below a nanosecond tick)
+    assert!(off.steps.iter().all(|s| s.grad_ms == 0.0 && s.opt_ms == 0.0));
+    assert!(on.steps.iter().all(|s| s.grad_ms > 0.0),
+            "enabled telemetry must time the grad phase");
+    assert!(on.steps.iter().all(|s| s.opt_ms > 0.0),
+            "enabled telemetry must time the optimizer phase");
+    assert!(on.steps.iter().all(|s| {
+        s.comm_pack_ms >= 0.0 && s.comm_hop_ms >= 0.0
+            && s.comm_unpack_ms >= 0.0 && s.ckpt_ms >= 0.0
+    }));
+    // 3. the JSONL stream parses: one step event per step + a summary
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let mut steps = 0;
+    let mut summaries = 0;
+    for line in text.lines() {
+        let ev = sm3::json::Json::parse(line).unwrap();
+        match ev.get("type").and_then(|t| t.as_str()) {
+            Some("step") => {
+                steps += 1;
+                assert!(ev.get("grad_ms").and_then(|v| v.as_f64())
+                        .is_some());
+            }
+            Some("summary") => {
+                summaries += 1;
+                assert!(ev.get("registry").is_some());
+            }
+            other => panic!("unexpected event type {other:?}"),
+        }
+    }
+    assert_eq!(steps, on.steps.len());
+    assert_eq!(summaries, 1);
+}
+
 #[test]
 fn init_checkpoint_matches_manifest_shapes() {
     let _g = lock();
