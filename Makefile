@@ -2,7 +2,8 @@
 # (and the build-test job in .github/workflows/ci.yml) exactly.
 
 .PHONY: tier1 build test lint fmt clippy bench-optim bench-quick \
-	bench-comms bench-comms-quick bench-telemetry benches docs artifacts
+	bench-comms bench-comms-quick bench-comms-overlap bench-telemetry \
+	benches docs artifacts
 
 tier1:
 	cargo build --release && cargo test -q
@@ -47,6 +48,15 @@ bench-comms:
 # rank agreement) executes. Mirrors the ci.yml step exactly.
 bench-comms-quick:
 	BENCH_QUICK=1 cargo bench --bench bench_collectives
+
+# Full overlap sweep with telemetry-calibrated timing: ranks x dtype x
+# bucket count x transport, measured-fit TimingModel, serial vs
+# overlapped pipeline model, written to out/perf_collectives_overlap.csv
+# (EXPERIMENTS.md §Overlapped-collectives). The `< serial` assertion for
+# ranks >= 2 executes here at full bench sizes, and again under both
+# transports because the sweep iterates TransportKind::ALL internally.
+bench-comms-overlap:
+	cargo bench --bench bench_collectives -- --telemetry
 
 # Quick benches with telemetry export: writes out/BENCH_optim.json,
 # out/BENCH_comms.json, out/BENCH_memory.json and validates them with

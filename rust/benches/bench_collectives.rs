@@ -21,7 +21,7 @@
 use sm3::bench_util::{bench, speedup, telemetry_requested,
                       write_bench_json, CsvWriter, Stats};
 use sm3::collectives;
-use sm3::comms::{CommEngine, TimingModel};
+use sm3::comms::{CommEngine, CommOpts, TimingModel, TransportKind};
 use sm3::memory::comm_wire_bytes;
 use sm3::optim::{ParamSpec, StateDtype};
 use sm3::rng::Rng;
@@ -115,6 +115,41 @@ fn run_gates(specs: &[ParamSpec]) -> anyhow::Result<()> {
     }
     println!("  serial == 2 == 4 threads           OK (f32, bf16, q8)");
     println!("  rank agreement after exchange      OK");
+    // 4. ISSUE 8: bucketed, overlapped, and channel-transport exchanges
+    //    all equal the monolithic serial exchange bitwise — outputs AND
+    //    carried residuals (the hard contract for the pipeline)
+    for dtype in StateDtype::ALL {
+        let ranks = 3;
+        let base = rank_grads(specs, ranks, 11);
+        let mut ref_eng = CommEngine::new(specs, ranks, dtype, 64, 1)?;
+        let mut ref_out = base.clone();
+        ref_eng.allreduce_mean(&mut ref_out)?;
+        for transport in TransportKind::ALL {
+            for buckets in [2usize, 4] {
+                for overlap in [false, true] {
+                    let mut eng = CommEngine::with_opts(
+                        specs, ranks,
+                        CommOpts { dtype, chunk: 64, threads: 1, buckets,
+                                   overlap, transport })?;
+                    let mut out = base.clone();
+                    eng.allreduce_mean(&mut out)?;
+                    let what = format!("{} b{buckets} overlap={overlap} {}",
+                                       dtype.name(), transport.name());
+                    assert_bitwise(&ref_out, &out, &what);
+                    for ((_, a), (_, b)) in
+                        ref_eng.state().iter().zip(&eng.state())
+                    {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            assert_eq!(x.to_bits(), y.to_bits(),
+                                       "{what} residual");
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!("  buckets x overlap x transports     OK (bitwise, \
+              incl residuals)");
     Ok(())
 }
 
@@ -122,7 +157,10 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
         .unwrap_or(false);
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let tele = telemetry_requested(&argv);
+    // quick (CI) runs always emit the telemetry document — the perf
+    // trajectory gate (`sm3-train bench-check`) wants BENCH_comms.json
+    // from every CI run, not only the --telemetry job
+    let tele = telemetry_requested(&argv) || quick;
     let _tele_guard = tele.then(telemetry::enable);
     if tele {
         println!("telemetry on — writing out/BENCH_comms.json at exit");
@@ -228,6 +266,118 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+
+    // ── ISSUE 8: the overlapped pipeline — measured throughput plus the
+    // calibrated overlap model (EXPERIMENTS.md §Overlapped-collectives).
+    // Per configuration the engine runs overlapped, the TimingModel is
+    // refit from this run's measured hop/stage spans
+    // (`TimingModel::from_measured`; defaults when telemetry is off),
+    // and the refit model prices the same bucket plan serial vs
+    // overlapped. The acceptance gate: overlapped < serial for every
+    // multi-bucket multi-rank configuration.
+    println!("\n=== overlapped pipeline — ranks × dtype × buckets × \
+              transport ===");
+    let mut ocsv = CsvWriter::create(
+        "out/perf_collectives_overlap.csv",
+        "ranks,dtype,buckets,transport,elements,median_ns,wire_bytes,\
+         modeled_serial_ms,modeled_overlap_ms,overlap_gain")?;
+    let bucket_list: &[usize] = if quick { &[1, 4] } else { &[1, 4, 8] };
+    for &ranks in rank_list {
+        for dtype in [StateDtype::F32, StateDtype::Q8] {
+            for transport in TransportKind::ALL {
+                for &buckets in bucket_list {
+                    let mut eng = CommEngine::with_opts(
+                        &specs, ranks,
+                        CommOpts { dtype, chunk: 16 * 1024, threads: 1,
+                                   buckets, overlap: true, transport })?;
+                    let mut g = rank_grads(&specs, ranks, 3);
+                    let before = tele.then(telemetry::thread_totals);
+                    let stats = bench(
+                        &format!("x{ranks} {} b{buckets} {}", dtype.name(),
+                                 transport.name()),
+                        budget, min_iters,
+                        || {
+                            eng.allreduce_mean(&mut g).unwrap();
+                        });
+                    // refit the interconnect model from what this
+                    // configuration actually measured
+                    let (mut hops, mut stages) = (Vec::new(), Vec::new());
+                    if let Some(before) = before {
+                        let after = telemetry::thread_totals();
+                        let exch = after.counter(Counter::CommExchanges)
+                            .saturating_sub(
+                                before.counter(Counter::CommExchanges));
+                        let hop_probes = [Probe::CommHopReduce,
+                                          Probe::CommHopEncode,
+                                          Probe::CommHopGather];
+                        let hop_ns: u64 = hop_probes.iter()
+                            .map(|&p| after.ns(p)
+                                 .saturating_sub(before.ns(p)))
+                            .sum();
+                        let hop_n: u64 = hop_probes.iter()
+                            .map(|&p| after.spans(p) - before.spans(p))
+                            .sum();
+                        if exch > 0 && hop_n > 0 && hop_ns > 0 {
+                            hops.push((
+                                eng.wire_bytes_per_exchange()
+                                    * exch as usize / hop_n as usize,
+                                hop_ns as f64 / hop_n as f64 / 1e9,
+                            ));
+                        }
+                        let stage_ns = after.ms_since(
+                            &before,
+                            &[Probe::CommPack, Probe::CommFeedback])
+                            * 1e6;
+                        if exch > 0 && stage_ns > 0.0 {
+                            stages.push((
+                                ranks * d * 4 * exch as usize,
+                                stage_ns / 1e9,
+                            ));
+                        }
+                    }
+                    let fit = TimingModel::from_measured(&hops, &stages);
+                    let serial_ms =
+                        eng.plan().modeled_seconds(&fit, ranks, false) * 1e3;
+                    let overlap_ms =
+                        eng.plan().modeled_seconds(&fit, ranks, true) * 1e3;
+                    // the acceptance gate: the pipeline model must price
+                    // overlap below serial whenever there is anything to
+                    // overlap, and never above it
+                    assert!(overlap_ms <= serial_ms,
+                            "overlap {overlap_ms} > serial {serial_ms}");
+                    if buckets >= 2 && ranks >= 2 {
+                        assert!(overlap_ms < serial_ms,
+                                "x{ranks} b{buckets}: overlap model must \
+                                 beat serial ({overlap_ms} vs {serial_ms})");
+                    }
+                    let gain = serial_ms / overlap_ms;
+                    println!("  {stats}  serial {serial_ms:>7.4} ms  \
+                              overlap {overlap_ms:>7.4} ms  {gain:>5.2}x  \
+                              [{}]", transport.name());
+                    ocsv.row(&[ranks.to_string(), dtype.name().into(),
+                               buckets.to_string(), transport.name().into(),
+                               d.to_string(),
+                               stats.per_iter_ns().to_string(),
+                               eng.wire_bytes_per_exchange().to_string(),
+                               format!("{serial_ms:.4}"),
+                               format!("{overlap_ms:.4}"),
+                               format!("{gain:.3}")])?;
+                    if tele {
+                        let key = format!(
+                            "overlap_model/x{ranks}_{}_b{buckets}_{}",
+                            dtype.name(), transport.name());
+                        treg.gauge(&format!("{key}/modeled_serial_ns"),
+                                   (serial_ms * 1e6) as u64);
+                        treg.gauge(&format!("{key}/modeled_overlap_ns"),
+                                   (overlap_ms * 1e6) as u64);
+                    }
+                }
+            }
+        }
+    }
+    println!("  gate: modeled overlap < modeled serial for every \
+              multi-bucket config   OK");
+    println!("CSV series: out/perf_collectives_overlap.csv");
 
     // wire-compression headline (also asserted in bench_memory on the
     // real Transformer-Big inventory)

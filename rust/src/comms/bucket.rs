@@ -1,0 +1,358 @@
+//! Bucketed exchange plans: the flat buffer split into 64-aligned
+//! buckets so staging and hop traffic can pipeline.
+//!
+//! PR 5's engine runs the whole exchange as one monolith: pack the full
+//! flat buffer, stage the full error-feedback sum, then sweep every
+//! schedule step. [`BucketPlan`] cuts that monolith into `comm_buckets`
+//! flat ranges so the overlapped path can stage bucket `k+1` while
+//! bucket `k`'s hop steps are in flight (the double-buffered global
+//! loader idea from kubecl's matmul pipeline, applied to the ring).
+//!
+//! # Why splitting is bitwise invisible
+//!
+//! Every schedule region is tiled from its own head on the
+//! `comm_chunk` grid, and `comm_chunk` is a multiple of the q8 wire
+//! block (64). A bucket bound β intersects region `[lo, hi)` at the
+//! **region-head-relative** down-snapped offset
+//! `a(β) = ⌊(β − lo)/64⌋ · 64`, so every piece starts at
+//! `lo + 64·j` — on the exact same tile/block grid the unsplit region
+//! uses. Per-block codec purity (each q8 block encodes independently;
+//! bf16/f32 are element-local) then makes piece-by-piece execution
+//! byte-identical to the whole-region pass, which is the same argument
+//! as `run_pair` chunking (DESIGN.md §12), extended to 64-aligned start
+//! offsets. The pieces of consecutive buckets meet exactly (bucket
+//! `k`'s piece ends where bucket `k+1`'s begins), so the per-bucket
+//! sweep is a *partition* of the schedule — nothing is dropped or done
+//! twice.
+//!
+//! # Why the pipeline is race-free
+//!
+//! Bucket bounds β_k are 64-aligned in **flat** coordinates, and a
+//! piece's end `lo + a(β_{k+1}) ≤ β_{k+1}` (down-snapping never crosses
+//! the bound), so every read and write of bucket `k`'s hops stays
+//! strictly below β_{k+1}. Staging bucket `k+1` touches exactly
+//! `[β_{k+1}, β_{k+2})` — disjoint. A piece may *start* up to 63
+//! elements below β_k, but that range was staged in round `k−1` and its
+//! hops completed with bucket `k−1` (the pieces partition), so the
+//! overlap window never sees a torn value. Error-feedback staging per
+//! 64-aligned flat bucket equals whole-buffer staging bitwise for the
+//! same block-grid reason.
+
+use super::ring::{Phase, Region, Schedule};
+use super::TimingModel;
+use crate::optim::qstate::codec::Q8_BLOCK;
+use crate::optim::StateDtype;
+use anyhow::{bail, ensure, Result};
+
+/// Default bucket count (`comm_buckets`): one bucket reproduces the
+/// PR 5 monolithic exchange exactly.
+pub const DEFAULT_COMM_BUCKETS: usize = 1;
+
+#[inline]
+fn snap_down(x: usize) -> usize {
+    x / Q8_BLOCK * Q8_BLOCK
+}
+
+/// The bucketed exchange plan for a fixed
+/// (leaf lengths, ranks, wire dtype, bucket count) tuple: per-bucket
+/// schedule-step pieces plus per-bucket wire-byte totals for the
+/// overlap timing model.
+pub struct BucketPlan {
+    /// flat bucket bounds, `buckets + 1` entries, `bounds[0] == 0`,
+    /// `bounds[buckets] == total`; interior bounds are 64-aligned
+    pub bounds: Vec<usize>,
+    /// per bucket: the schedule steps restricted to the bucket's pieces
+    /// (same step order and phases as the unsplit schedule)
+    pub steps: Vec<Vec<(Phase, Vec<Region>)>>,
+    /// per bucket: link bytes its hop pieces move in one exchange
+    pub wire_bytes: Vec<usize>,
+    /// link bytes of the whole exchange (all buckets; equals the
+    /// unsplit schedule's figure — splitting moves no extra bytes)
+    pub total_wire_bytes: usize,
+}
+
+impl BucketPlan {
+    /// Build the plan by splitting [`Schedule::build`]'s regions at the
+    /// snapped bucket bounds. Fails if any bucket snaps empty — the
+    /// error names the offending bucket so config errors are
+    /// actionable. With `ranks <= 1` (or an empty inventory) there is
+    /// nothing to exchange and the plan collapses to one empty bucket
+    /// regardless of `buckets`.
+    pub fn build(lens: &[usize], ranks: usize, dtype: StateDtype,
+                 buckets: usize) -> Result<Self> {
+        ensure!(buckets >= 1, "comm_buckets must be >= 1, got {buckets}");
+        let total: usize = lens.iter().sum();
+        let schedule = Schedule::build(lens, ranks, dtype);
+        if schedule.steps.is_empty() {
+            return Ok(Self {
+                bounds: vec![0, total],
+                steps: vec![Vec::new()],
+                wire_bytes: vec![0],
+                total_wire_bytes: 0,
+            });
+        }
+        let mut bounds = Vec::with_capacity(buckets + 1);
+        for k in 0..=buckets {
+            bounds.push(if k == buckets {
+                total
+            } else {
+                snap_down(k * total / buckets)
+            });
+        }
+        for k in 0..buckets {
+            if bounds[k + 1] <= bounds[k] {
+                bail!(
+                    "comm_buckets = {buckets} cannot tile {total} flat \
+                     elements: bucket {k} would be empty \
+                     ([{}..{}) after snapping bounds to the {Q8_BLOCK}-\
+                     element wire-block grid)",
+                    bounds[k], bounds[k + 1]
+                );
+            }
+        }
+        // region-head-relative offset of flat bound `b` inside a region
+        let cut = |b: usize, lo: usize, hi: usize| -> usize {
+            if b <= lo {
+                0
+            } else if b >= hi {
+                hi - lo
+            } else {
+                snap_down(b - lo)
+            }
+        };
+        let mut steps = Vec::with_capacity(buckets);
+        let mut wire = Vec::with_capacity(buckets);
+        for k in 0..buckets {
+            let (blo, bhi) = (bounds[k], bounds[k + 1]);
+            let mut bucket_steps = Vec::with_capacity(schedule.steps.len());
+            let mut bucket_wire = 0usize;
+            for (phase, regs) in &schedule.steps {
+                let pieces: Vec<Region> = regs
+                    .iter()
+                    .filter_map(|r| {
+                        let a0 = cut(blo, r.lo, r.hi);
+                        let a1 = cut(bhi, r.lo, r.hi);
+                        (a1 > a0).then(|| Region {
+                            src: r.src,
+                            dst: r.dst,
+                            lo: r.lo + a0,
+                            hi: r.lo + a1,
+                        })
+                    })
+                    .collect();
+                if *phase != Phase::Finalize {
+                    bucket_wire += pieces
+                        .iter()
+                        .map(|p| super::wire_bytes_for(p.hi - p.lo, dtype))
+                        .sum::<usize>();
+                }
+                bucket_steps.push((*phase, pieces));
+            }
+            steps.push(bucket_steps);
+            wire.push(bucket_wire);
+        }
+        // Splitting on the region-head 64 grid never adds partial-block
+        // scale fields, so the per-bucket bytes must re-sum to the
+        // unsplit schedule's total exactly.
+        let total_wire: usize = wire.iter().sum();
+        debug_assert_eq!(total_wire, schedule.wire_bytes);
+        Ok(Self { bounds, steps, wire_bytes: wire, total_wire_bytes: total_wire })
+    }
+
+    /// Number of buckets in the plan.
+    pub fn buckets(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Flat range `[lo, hi)` bucket `k` stages (pack + error feedback).
+    pub fn stage_range(&self, k: usize) -> (usize, usize) {
+        (self.bounds[k], self.bounds[k + 1])
+    }
+
+    /// Hot-path geometry check (no panics): the bucket bounds must tile
+    /// `[0, total)` with 64-aligned interior cuts. Errors name the
+    /// offending bucket, mirroring the engine's rank-geometry errors.
+    pub fn check(&self, total: usize) -> Result<()> {
+        ensure!(self.bounds.first() == Some(&0)
+                    && self.bounds.last() == Some(&total),
+                "bucket plan spans [{:?}..{:?}) but the flat buffer is \
+                 [0..{total})",
+                self.bounds.first(), self.bounds.last());
+        for k in 0..self.buckets() {
+            let (lo, hi) = (self.bounds[k], self.bounds[k + 1]);
+            if hi < lo || (hi == lo && self.buckets() > 1) {
+                bail!("bucket {k} of {} is empty or inverted: [{lo}..{hi})",
+                      self.buckets());
+            }
+            if k > 0 && lo % Q8_BLOCK != 0 {
+                bail!("bucket {k} starts at {lo}, off the {Q8_BLOCK}-element \
+                       wire-block grid");
+            }
+        }
+        Ok(())
+    }
+
+    /// Modeled wall time of one exchange under `t`: per bucket `k`, a
+    /// staging term `s_k` (pack + error-feedback traffic over all
+    /// ranks' bucket bytes) and a hop term `h_k`
+    /// ([`TimingModel::exchange_seconds`] of the bucket's wire bytes).
+    /// Serial (`overlap == false`) pays `Σ (s_k + h_k)`; the pipelined
+    /// path stages bucket `k+1` while bucket `k`'s hops fly, paying
+    /// `s_0 + Σ max(h_k, s_{k+1})` — strictly less whenever there are
+    /// ≥ 2 buckets, ≥ 2 ranks, and nonzero terms. This is the
+    /// overlap-adjusted figure `StepRecord::comm_ms` reports.
+    pub fn modeled_seconds(&self, t: &TimingModel, ranks: usize,
+                           overlap: bool) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let b = self.buckets();
+        let stage = |k: usize| {
+            let elems = self.bounds[k + 1] - self.bounds[k];
+            t.stage_seconds(ranks * elems * 4)
+        };
+        let hop = |k: usize| t.exchange_seconds(self.wire_bytes[k], ranks);
+        let mut secs = stage(0);
+        for k in 0..b {
+            let next = if k + 1 < b { stage(k + 1) } else { 0.0 };
+            secs += if overlap { hop(k).max(next) } else { hop(k) + next };
+        }
+        secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LENS: [usize; 3] = [700, 37, 301]; // 1038 elements, odd leaves
+
+    #[test]
+    fn bounds_are_snapped_and_tile_the_buffer() {
+        for buckets in [1usize, 2, 3, 5] {
+            let p = BucketPlan::build(&LENS, 4, StateDtype::Q8, buckets)
+                .unwrap();
+            assert_eq!(p.buckets(), buckets);
+            assert_eq!(p.bounds[0], 0);
+            assert_eq!(*p.bounds.last().unwrap(), 1038);
+            for k in 1..buckets {
+                assert_eq!(p.bounds[k] % Q8_BLOCK, 0);
+                assert!(p.bounds[k] > p.bounds[k - 1]);
+            }
+            p.check(1038).unwrap();
+            assert!(p.check(1039).is_err());
+        }
+    }
+
+    #[test]
+    fn empty_bucket_errors_name_the_bucket() {
+        // 64 elements over 2 buckets: bounds[1] snaps to 0 ⇒ bucket 0 empty
+        let err = BucketPlan::build(&[64], 2, StateDtype::F32, 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bucket 0"), "{err}");
+        assert!(err.contains("comm_buckets = 2"), "{err}");
+        assert!(BucketPlan::build(&[64], 2, StateDtype::F32, 0).is_err());
+    }
+
+    #[test]
+    fn single_rank_collapses_to_one_empty_bucket() {
+        let p = BucketPlan::build(&LENS, 1, StateDtype::Q8, 4).unwrap();
+        assert_eq!(p.buckets(), 1);
+        assert!(p.steps[0].is_empty());
+        assert_eq!(p.total_wire_bytes, 0);
+        assert_eq!(p.modeled_seconds(&TimingModel::default(), 1, true), 0.0);
+    }
+
+    /// The pieces partition every schedule region exactly, on the
+    /// region-head-relative 64 grid, and per-bucket wire bytes re-sum
+    /// to the unsplit schedule's total at every dtype.
+    #[test]
+    fn pieces_partition_regions_on_the_block_grid() {
+        for dtype in StateDtype::ALL {
+            for n in [2usize, 3, 8] {
+                for buckets in [1usize, 2, 3, 5] {
+                    let s = Schedule::build(&LENS, n, dtype);
+                    let p = BucketPlan::build(&LENS, n, dtype, buckets)
+                        .unwrap();
+                    assert_eq!(p.total_wire_bytes, s.wire_bytes);
+                    assert_eq!(p.wire_bytes.iter().sum::<usize>(),
+                               s.wire_bytes);
+                    for (si, (phase, regs)) in s.steps.iter().enumerate() {
+                        for reg in regs {
+                            // collect this region's pieces across buckets
+                            let mut cursor = reg.lo;
+                            for k in 0..buckets {
+                                let (ph, pieces) = &p.steps[k][si];
+                                assert_eq!(ph, phase);
+                                for piece in pieces.iter().filter(|x| {
+                                    x.src == reg.src && x.dst == reg.dst
+                                        && x.lo >= reg.lo && x.hi <= reg.hi
+                                }) {
+                                    assert_eq!(piece.lo, cursor,
+                                               "gap or overlap in pieces");
+                                    assert_eq!((piece.lo - reg.lo) % Q8_BLOCK,
+                                               0, "piece off the block grid");
+                                    // pipeline safety: bucket-k work ends
+                                    // at or before the next bucket bound
+                                    assert!(piece.hi <= p.bounds[k + 1]);
+                                    cursor = piece.hi;
+                                }
+                            }
+                            assert_eq!(cursor, reg.hi,
+                                       "pieces do not cover the region");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn modeled_overlap_beats_serial_for_multi_bucket_multi_rank() {
+        let t = TimingModel::default();
+        for n in [2usize, 4, 8] {
+            for buckets in [2usize, 3, 5] {
+                let p = BucketPlan::build(&[4096, 1111], n, StateDtype::Q8,
+                                          buckets)
+                    .unwrap();
+                let serial = p.modeled_seconds(&t, n, false);
+                let ovl = p.modeled_seconds(&t, n, true);
+                assert!(ovl < serial,
+                        "overlap {ovl} !< serial {serial} (n={n}, b={buckets})");
+                // ...and overlap can never beat the hop critical path
+                let hops: f64 = p
+                    .wire_bytes
+                    .iter()
+                    .map(|&w| t.exchange_seconds(w, n))
+                    .sum();
+                assert!(ovl >= hops);
+            }
+        }
+        // single bucket: the two figures coincide (nothing to overlap)
+        let p = BucketPlan::build(&[4096], 4, StateDtype::F32, 1).unwrap();
+        let s = p.modeled_seconds(&TimingModel::default(), 4, false);
+        let o = p.modeled_seconds(&TimingModel::default(), 4, true);
+        assert_eq!(s, o);
+    }
+
+    #[test]
+    fn modeled_seconds_hand_numbers() {
+        // bw 100 B/s, lat 0, stage 50 B/s; 2 ranks, 2 buckets of 64
+        // elements each. hop_k = wire/(n·bw) = 512/200; stage_k =
+        // 2·64·4/50 = 10.24
+        let t = TimingModel {
+            link_bandwidth: 100.0,
+            hop_latency: 0.0,
+            stage_bandwidth: 50.0,
+        };
+        let p = BucketPlan::build(&[128], 2, StateDtype::F32, 2).unwrap();
+        assert_eq!(p.wire_bytes, vec![512, 512]);
+        let h = 512.0 / 200.0;
+        let s = 10.24;
+        let serial = p.modeled_seconds(&t, 2, false);
+        assert!((serial - (s + h + s + h)).abs() < 1e-9, "{serial}");
+        let ovl = p.modeled_seconds(&t, 2, true);
+        assert!((ovl - (s + h.max(s) + h)).abs() < 1e-9, "{ovl}");
+    }
+}

@@ -5,10 +5,12 @@
 //! inventory. It owns, per rank: a persistent flat f32 gradient buffer
 //! (leaves packed contiguously in spec order) and — for compressed wire
 //! dtypes — a persistent flat **error-feedback residual**. Every
-//! exchange runs:
+//! exchange runs, per 64-aligned bucket of the flat buffer
+//! ([`BucketPlan`]; one bucket by default):
 //!
-//! 1. **pack** — each rank's leaf tensors are copied into its flat
-//!    buffer (no allocation; the buffers are sized at construction).
+//! 1. **pack** — each rank's leaf tensors are copied into the bucket's
+//!    range of its flat buffer (no allocation; the buffers are sized at
+//!    construction).
 //! 2. **error feedback** (compressed dtypes only) — per rank,
 //!    `u = grad + residual` is wire round-tripped to `v = Q(u)`; the
 //!    buffer continues with `v` and the residual becomes `u − v`
@@ -16,26 +18,43 @@
 //!    next step's send re-injects — the MicroAdam-style error-feedback
 //!    contract that keeps compressed training convergent. The q8 block
 //!    grid here is the global 64-aligned grid of the flat buffer, so
-//!    the tiling (`comm_chunk`) and the thread count never shift a
-//!    block boundary.
-//! 3. **ring exchange** — the precomputed [`ring::Schedule`], serial or
-//!    across `comm_threads` workers (bitwise identical either way).
-//! 4. **unpack** — each rank's buffer is written back to its leaf
-//!    tensors times `1/ranks` (the data-parallel mean), exactly the
-//!    historical `collectives::allreduce_mean` arithmetic.
+//!    the tiling (`comm_chunk`), the thread count, and the bucket
+//!    bounds never shift a block boundary.
+//! 3. **ring exchange** — the bucket's slice of the precomputed
+//!    [`ring::Schedule`], serial or across `comm_threads` workers,
+//!    through the configured [`Transport`] (bitwise identical every
+//!    way).
+//! 4. **unpack** — after all buckets drain, each rank's buffer is
+//!    written back to its leaf tensors times `1/ranks` (the
+//!    data-parallel mean), exactly the historical
+//!    `collectives::allreduce_mean` arithmetic.
 //!
-//! At `comm_dtype = f32` steps 2 is skipped entirely and the wire is
+//! With `comm_overlap` (and ≥ 2 ranks) steps 1–2 for bucket `k+1` run
+//! on the calling thread **while** bucket `k`'s hop steps are in flight
+//! on a persistent hop-worker thread — the double-buffered pipeline
+//! (two persistent wire-scratch slabs: the caller's stager and the
+//! worker's hop codec). The bucket bounds make the concurrent ranges
+//! provably disjoint (see [`super::bucket`]), so the overlapped
+//! exchange is *bitwise identical* to the serial one, and the steady
+//! state still allocates nothing on the calling thread (the handshake
+//! is a mutex/condvar pair, both allocation-free).
+//!
+//! At `comm_dtype = f32` step 2 is skipped entirely and the wire is
 //! the identity, so the whole path reproduces pre-`comms` trajectories
 //! bit for bit. Residuals are exposed through [`CommEngine::state`] /
 //! [`CommEngine::load_state`] and ride the `SM3CKPT2` checkpoint as
 //! f32-tagged tensors (they must stay exact for resume to be bitwise).
 
-use super::ring::{self, Phase, Schedule, WireScratch};
-use super::{check_comm_chunk, TimingModel};
+use super::bucket::{BucketPlan, DEFAULT_COMM_BUCKETS};
+use super::ring::{self, Phase, RankBufs, WireScratch};
+use super::transport::{self, InprocTransport, Transport, TransportKind};
+use super::{check_comm_chunk, TimingModel, DEFAULT_COMM_CHUNK};
 use crate::optim::{Backend, ParamSpec, StateDtype};
 use crate::telemetry::{self, Counter, Gauge, Probe};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// What one exchange cost: exact wire bytes moved and the simulated pod
 /// interconnect time from the engine's [`TimingModel`].
@@ -43,11 +62,80 @@ use anyhow::{bail, ensure, Result};
 pub struct CommStats {
     /// bytes that crossed links (wire-encoded payloads, both phases)
     pub wire_bytes: usize,
-    /// simulated exchange wall time (0.0 for a single rank)
+    /// simulated hop-only exchange wall time (0.0 for a single rank) —
+    /// the historical PR 5 figure, kept for trend comparability
     pub sim_seconds: f64,
+    /// simulated wall time of the full staged pipeline
+    /// ([`BucketPlan::modeled_seconds`] as configured): staging + hops,
+    /// with staging hidden behind in-flight hops when `comm_overlap`
+    /// is on. This is what `StepRecord::comm_ms` reports.
+    pub sim_overlap_seconds: f64,
 }
 
-/// The communication engine: persistent buffers + residuals + schedule.
+/// Exchange-path knobs of a [`CommEngine`], mirroring the
+/// `comm_*` config keys. `Default` is the PR 5 behaviour: f32 wire,
+/// one bucket, no overlap, serial, ambient transport
+/// (`SM3_COMM_TRANSPORT`, direct unless overridden).
+#[derive(Debug, Clone, Copy)]
+pub struct CommOpts {
+    /// wire dtype (`comm_dtype`)
+    pub dtype: StateDtype,
+    /// tile size in elements (`comm_chunk`)
+    pub chunk: usize,
+    /// worker threads for the non-overlapped hop sweep and error
+    /// feedback (`comm_threads`); the overlapped pipeline runs hops on
+    /// its dedicated worker regardless
+    pub threads: usize,
+    /// 64-aligned flat buckets the exchange pipelines over
+    /// (`comm_buckets`)
+    pub buckets: usize,
+    /// stage bucket `k+1` while bucket `k`'s hops are in flight
+    /// (`comm_overlap`)
+    pub overlap: bool,
+    /// hop-edge payload path (`comm_transport`)
+    pub transport: TransportKind,
+}
+
+impl Default for CommOpts {
+    fn default() -> Self {
+        Self {
+            dtype: StateDtype::F32,
+            chunk: DEFAULT_COMM_CHUNK,
+            threads: 1,
+            buckets: DEFAULT_COMM_BUCKETS,
+            overlap: false,
+            transport: TransportKind::default(),
+        }
+    }
+}
+
+/// Command slot of the hop-worker handshake. One in-flight bucket at a
+/// time: the caller flips `Idle → Run`, the worker flips
+/// `Run → Done`, the caller's wait flips `Done → Idle`.
+enum HopCmd {
+    Idle,
+    Run { bucket: usize, backend: Backend, tele: bool },
+    Done(Option<String>),
+    Exit,
+}
+
+/// State shared with the persistent hop worker. The mutex/condvar pair
+/// is the whole protocol (both allocation-free in steady state); hop
+/// nanoseconds accumulate in atomics and are folded into the telemetry
+/// probes by the owning thread after the pipeline drains.
+struct HopShared {
+    cmd: Mutex<HopCmd>,
+    cv: Condvar,
+    /// per-phase hop time: [reduce, finalize-encode, gather]
+    hop_ns: [AtomicU64; 3],
+}
+
+struct HopWorker {
+    shared: Arc<HopShared>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// The communication engine: persistent buffers + residuals + plan.
 pub struct CommEngine {
     /// per-leaf flat lengths, in pack order
     lens: Vec<usize>,
@@ -57,6 +145,8 @@ pub struct CommEngine {
     dtype: StateDtype,
     chunk: usize,
     threads: usize,
+    overlap: bool,
+    transport_kind: TransportKind,
     /// kernel backend for the wire codec, reduce, and unpack lanes
     /// (bitwise identical across backends — DESIGN.md §13); pack stays a
     /// plain memcpy in every backend
@@ -65,59 +155,134 @@ pub struct CommEngine {
     bufs: Vec<Vec<f32>>,
     /// per-rank error-feedback residuals (empty at f32 or ranks == 1)
     residual: Vec<Vec<f32>>,
-    /// per-thread wire scratch
+    /// per-thread wire scratch (the caller-side persistent slab(s))
     scratch: Vec<WireScratch>,
-    schedule: Schedule,
+    /// the bucketed schedule (one bucket ⇒ the PR 5 monolith)
+    plan: Arc<BucketPlan>,
+    /// hop-edge payload path (None ⇒ direct shared-memory)
+    channel: Option<Arc<InprocTransport>>,
+    /// raw rank-buffer pointers shared with the hop worker
+    shared_bufs: Option<Arc<RankBufs>>,
+    worker: Option<HopWorker>,
     timing: TimingModel,
 }
 
 impl CommEngine {
     /// Build an engine for `ranks` data-parallel workers exchanging
-    /// gradients over the given parameter inventory.
+    /// gradients over the given parameter inventory with default
+    /// bucketing/overlap/transport (the PR 5 constructor, kept
+    /// source-compatible).
     pub fn new(specs: &[ParamSpec], ranks: usize, dtype: StateDtype,
                chunk: usize, threads: usize) -> Result<Self> {
-        let lens: Vec<usize> = specs.iter().map(ParamSpec::numel).collect();
-        Self::with_lens(lens, ranks, dtype, chunk, threads)
+        Self::with_opts(specs, ranks,
+                        CommOpts { dtype, chunk, threads,
+                                   ..CommOpts::default() })
     }
 
-    /// Core constructor over raw per-leaf flat lengths.
+    /// Build an engine with the full option set.
+    pub fn with_opts(specs: &[ParamSpec], ranks: usize, opts: CommOpts)
+                     -> Result<Self> {
+        let lens: Vec<usize> = specs.iter().map(ParamSpec::numel).collect();
+        Self::with_lens_opts(lens, ranks, opts)
+    }
+
+    /// Core constructor over raw per-leaf flat lengths (PR 5 knobs).
     pub fn with_lens(lens: Vec<usize>, ranks: usize, dtype: StateDtype,
                      chunk: usize, threads: usize) -> Result<Self> {
+        Self::with_lens_opts(lens, ranks,
+                             CommOpts { dtype, chunk, threads,
+                                        ..CommOpts::default() })
+    }
+
+    /// Core constructor over raw per-leaf flat lengths and full options.
+    pub fn with_lens_opts(lens: Vec<usize>, ranks: usize, opts: CommOpts)
+                          -> Result<Self> {
         ensure!(ranks >= 1, "comm engine needs at least one rank");
-        ensure!(threads >= 1, "comm_threads must be >= 1 (1 = serial)");
-        check_comm_chunk(chunk)?;
+        ensure!(opts.threads >= 1, "comm_threads must be >= 1 (1 = serial)");
+        check_comm_chunk(opts.chunk)?;
         let total: usize = lens.iter().sum();
+        let plan =
+            Arc::new(BucketPlan::build(&lens, ranks, opts.dtype,
+                                       opts.buckets)?);
         let (bufs, residual, scratch) = if ranks > 1 {
             (
                 (0..ranks).map(|_| vec![0.0f32; total]).collect(),
-                if dtype != StateDtype::F32 {
+                if opts.dtype != StateDtype::F32 {
                     (0..ranks).map(|_| vec![0.0f32; total]).collect()
                 } else {
                     Vec::new()
                 },
-                (0..threads).map(|_| WireScratch::new(chunk)).collect(),
+                (0..opts.threads)
+                    .map(|_| WireScratch::new(opts.chunk))
+                    .collect::<Vec<_>>(),
             )
         } else {
             (Vec::new(), Vec::new(), Vec::new())
         };
-        let schedule = Schedule::build(&lens, ranks, dtype);
-        Ok(Self {
+        let channel = if ranks > 1 && opts.transport == TransportKind::Inproc
+        {
+            Some(Arc::new(InprocTransport::new(
+                ranks,
+                transport::message_cap(opts.chunk),
+            )))
+        } else {
+            None
+        };
+        let mut eng = Self {
             lens,
             total,
             ranks,
-            dtype,
-            chunk,
-            threads,
+            dtype: opts.dtype,
+            chunk: opts.chunk,
+            threads: opts.threads,
+            overlap: opts.overlap,
+            transport_kind: opts.transport,
             backend: Backend::default(),
             bufs,
             residual,
             scratch,
-            schedule,
+            plan,
+            channel,
+            shared_bufs: None,
+            worker: None,
             timing: TimingModel::default(),
-        })
+        };
+        if opts.overlap && ranks > 1 {
+            eng.start_worker()?;
+        }
+        Ok(eng)
     }
 
-    /// Override the interconnect model (defaults to the TPU-v2 pod).
+    /// Spawn the persistent hop worker and publish the (stable) rank
+    /// buffer pointers it drives. Called once, at construction.
+    fn start_worker(&mut self) -> Result<()> {
+        let shared = Arc::new(HopShared {
+            cmd: Mutex::new(HopCmd::Idle),
+            cv: Condvar::new(),
+            hop_ns: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+        });
+        // Vec data pointers are stable under moves of the owning struct,
+        // so capturing them here is safe for the engine's lifetime; Drop
+        // joins the worker before the buffers are freed.
+        let bufs = Arc::new(RankBufs::new(&mut self.bufs));
+        let (plan, dtype, chunk) =
+            (Arc::clone(&self.plan), self.dtype, self.chunk);
+        let channel = self.channel.clone();
+        let (ws, wb) = (Arc::clone(&shared), Arc::clone(&bufs));
+        let handle = std::thread::Builder::new()
+            .name("sm3-comm-hop".into())
+            .spawn(move || {
+                hop_worker_loop(ws, wb, plan, channel, dtype, chunk)
+            })
+            .map_err(|e| anyhow::anyhow!("spawn comm hop worker: {e}"))?;
+        self.shared_bufs = Some(bufs);
+        self.worker = Some(HopWorker { shared, handle });
+        Ok(())
+    }
+
+    /// Override the interconnect model (defaults to the TPU-v2 pod;
+    /// the trainer refits it from measured hop spans via
+    /// [`TimingModel::from_measured`] when telemetry is on).
     pub fn set_timing(&mut self, timing: TimingModel) {
         self.timing = timing;
     }
@@ -138,17 +303,50 @@ impl CommEngine {
         self.dtype
     }
 
+    /// Configured bucket count (1 = the monolithic exchange).
+    pub fn buckets(&self) -> usize {
+        self.plan.buckets()
+    }
+
+    /// Whether the overlapped pipeline is active (requires ≥ 2 ranks).
+    pub fn overlap_enabled(&self) -> bool {
+        self.worker.is_some()
+    }
+
+    /// Configured hop-edge transport.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport_kind
+    }
+
+    /// The bucketed exchange plan (bench/tooling: feed
+    /// [`BucketPlan::modeled_seconds`] with a calibrated model).
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
     /// Exact bytes crossing links in one full exchange (0 for one rank).
     /// `crate::memory::comm_wire_bytes` is the static mirror.
     pub fn wire_bytes_per_exchange(&self) -> usize {
-        self.schedule.wire_bytes
+        self.plan.total_wire_bytes
     }
 
     /// Persistent per-run comm buffer bytes: staging + residuals
-    /// (excludes the Θ(comm_chunk) per-thread scratch).
+    /// (excludes the Θ(comm_chunk) scratch — see
+    /// [`CommEngine::scratch_bytes`]).
     /// `crate::memory::comm_buffer_bytes` is the static mirror.
     pub fn buffer_bytes(&self) -> usize {
         (self.bufs.len() + self.residual.len()) * self.total * 4
+    }
+
+    /// Persistent Θ(comm_chunk) scratch bytes: per-thread wire slabs,
+    /// the hop worker's slab when overlapped, and the in-process
+    /// transport's per-edge message slabs.
+    /// `crate::memory::comm_scratch_bytes` is the static mirror.
+    pub fn scratch_bytes(&self) -> usize {
+        let per = self.scratch.first().map_or(0, WireScratch::bytes);
+        self.scratch.len() * per
+            + if self.worker.is_some() { per } else { 0 }
+            + self.channel.as_ref().map_or(0, |t| t.slab_bytes())
     }
 
     /// Error-feedback residual scalars carried across steps.
@@ -156,10 +354,25 @@ impl CommEngine {
         self.residual.len() * self.total
     }
 
+    /// The full staged-pipeline model at the engine's current timing —
+    /// what one exchange costs as configured, with staging hidden
+    /// behind in-flight hops when overlapped (0.0 for a single rank).
+    /// The trainer re-reads this after refitting the timing from
+    /// measured spans so `StepRecord::comm_ms` tracks the calibrated
+    /// model.
+    pub fn modeled_overlap_seconds(&self) -> f64 {
+        if self.ranks <= 1 {
+            return 0.0;
+        }
+        self.plan
+            .modeled_seconds(&self.timing, self.ranks, self.worker.is_some())
+    }
+
     /// All-reduce every rank's gradient leaves to their data-parallel
     /// mean, in place, through the compressed ring. Validates the rank
-    /// and leaf geometry (mismatches are errors, not panics — the
-    /// trainer propagates them like every other step failure).
+    /// and leaf geometry and the bucket tiling (mismatches are errors,
+    /// not panics — the trainer propagates them like every other step
+    /// failure).
     pub fn allreduce_mean(&mut self, ranks: &mut [Vec<Tensor>])
                           -> Result<CommStats> {
         ensure!(ranks.len() == self.ranks,
@@ -175,49 +388,24 @@ impl CommEngine {
                         t.len(), self.lens[i]);
             }
         }
+        // the bucket bounds must still tile the flat buffer exactly —
+        // a violated plan is an error naming the bucket, never a panic
+        self.plan.check(self.total)?;
         if self.ranks == 1 {
             return Ok(CommStats::default());
         }
-        let pack_span = telemetry::span(Probe::CommPack);
-        self.pack(ranks);
-        drop(pack_span);
-        if self.dtype != StateDtype::F32 {
-            let fb_span = telemetry::span(Probe::CommFeedback);
-            self.apply_error_feedback();
-            drop(fb_span);
-        }
-        for si in 0..self.schedule.steps.len() {
-            // split-borrow the schedule away from the buffers
-            let (phase, regions) = {
-                let (p, r) = &self.schedule.steps[si];
-                (*p, r)
-            };
-            // hop timing on the calling thread: one span per schedule
-            // step (a full ring sweep), classified by phase. These
-            // measured latencies are the calibration source for
-            // TimingModel (DESIGN.md §14; bench_collectives reports
-            // measured-vs-modeled).
-            let _hop = telemetry::span(match phase {
-                Phase::Reduce => Probe::CommHopReduce,
-                Phase::Finalize => Probe::CommHopEncode,
-                Phase::Gather => Probe::CommHopGather,
-            });
-            if self.threads <= 1 {
-                ring::run_step_serial(&mut self.bufs, phase, regions,
-                                      self.dtype, self.chunk, self.backend,
-                                      &mut self.scratch[0]);
-            } else {
-                ring::run_step_threaded(&mut self.bufs, phase, regions,
-                                        self.dtype, self.chunk, self.backend,
-                                        self.threads, &mut self.scratch);
-            }
+        let tele = telemetry::enabled();
+        if self.worker.is_some() {
+            self.exchange_overlapped(ranks, tele)?;
+        } else {
+            self.exchange_bucketed(ranks, tele)?;
         }
         let unpack_span = telemetry::span(Probe::CommUnpack);
         self.unpack(ranks);
         drop(unpack_span);
-        if telemetry::enabled() {
+        if tele {
             telemetry::count(Counter::CommWireBytes,
-                             self.schedule.wire_bytes as u64);
+                             self.plan.total_wire_bytes as u64);
             telemetry::count(Counter::CommExchanges, 1);
             // live memory gauges; the static accountant
             // (memory::comm_buffer_bytes) must agree — cross-checked in
@@ -228,11 +416,173 @@ impl CommEngine {
                              (self.residual_floats() * 4) as u64);
         }
         Ok(CommStats {
-            wire_bytes: self.schedule.wire_bytes,
+            wire_bytes: self.plan.total_wire_bytes,
             sim_seconds: self
                 .timing
-                .exchange_seconds(self.schedule.wire_bytes, self.ranks),
+                .exchange_seconds(self.plan.total_wire_bytes, self.ranks),
+            sim_overlap_seconds: self.modeled_overlap_seconds(),
         })
+    }
+
+    /// The non-overlapped path: stage everything, then sweep each
+    /// bucket's steps serially or across `comm_threads` workers. With
+    /// one bucket this is exactly the PR 5 exchange.
+    fn exchange_bucketed(&mut self, ranks: &mut [Vec<Tensor>], tele: bool)
+                         -> Result<()> {
+        let pack_span = telemetry::span(Probe::CommPack);
+        self.pack(ranks);
+        drop(pack_span);
+        if self.dtype != StateDtype::F32 {
+            let fb_span = telemetry::span(Probe::CommFeedback);
+            self.apply_error_feedback();
+            drop(fb_span);
+        }
+        for k in 0..self.plan.buckets() {
+            if tele {
+                telemetry::gauge(Gauge::CommInflightBuckets, 1);
+            }
+            for si in 0..self.plan.steps[k].len() {
+                // split-borrow the plan away from the buffers
+                let (phase, regions) = {
+                    let (p, r) = &self.plan.steps[k][si];
+                    (*p, r)
+                };
+                // hop timing on the calling thread: one span per bucket
+                // step, classified by phase. These measured latencies
+                // are the calibration source for TimingModel
+                // (TimingModel::from_measured; bench_collectives reports
+                // measured-vs-modeled).
+                let _hop = telemetry::span(match phase {
+                    Phase::Reduce => Probe::CommHopReduce,
+                    Phase::Finalize => Probe::CommHopEncode,
+                    Phase::Gather => Probe::CommHopGather,
+                });
+                let via =
+                    self.channel.as_deref().map(|t| t as &dyn Transport);
+                if self.threads <= 1 {
+                    ring::run_step_serial(&mut self.bufs, phase, regions,
+                                          self.dtype, self.chunk,
+                                          self.backend,
+                                          &mut self.scratch[0], via)?;
+                } else {
+                    ring::run_step_threaded(&mut self.bufs, phase, regions,
+                                            self.dtype, self.chunk,
+                                            self.backend, self.threads,
+                                            &mut self.scratch, via)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The overlapped pipeline: stage bucket 0, then keep exactly one
+    /// bucket's hops in flight on the worker while the calling thread
+    /// stages the next one. Bitwise identical to
+    /// [`CommEngine::exchange_bucketed`] — the concurrent flat ranges
+    /// are disjoint by the bucket-bound argument (`super::bucket`).
+    fn exchange_overlapped(&mut self, ranks: &mut [Vec<Tensor>], tele: bool)
+                           -> Result<()> {
+        let nb = self.plan.buckets();
+        self.stage_bucket(ranks, 0);
+        for k in 0..nb {
+            if tele {
+                // hop lane holds bucket k; the stager holds k+1 if any
+                telemetry::gauge(Gauge::CommInflightBuckets,
+                                 if k + 1 < nb { 2 } else { 1 });
+            }
+            self.submit_bucket(k, tele);
+            if k + 1 < nb {
+                self.stage_bucket(ranks, k + 1);
+            }
+            self.wait_bucket()?;
+        }
+        if tele {
+            // fold the worker's hop time into the per-phase probes (one
+            // record per phase per exchange), worker-order-independent
+            let w = self.worker.as_ref().expect("overlap worker");
+            for (slot, probe) in [(0, Probe::CommHopReduce),
+                                  (1, Probe::CommHopEncode),
+                                  (2, Probe::CommHopGather)]
+            {
+                let ns = w.shared.hop_ns[slot].swap(0, Ordering::Relaxed);
+                if ns > 0 {
+                    telemetry::record_ns(probe, ns);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack + error-feedback one bucket's flat range on the calling
+    /// thread. Writes go through the shared raw pointers (the same
+    /// provenance the hop worker uses), touching only
+    /// `[bounds[k], bounds[k+1])` — disjoint from any in-flight hops.
+    fn stage_bucket(&mut self, ranks: &[Vec<Tensor>], k: usize) {
+        let (lo, hi) = self.plan.stage_range(k);
+        let shared = self.shared_bufs.as_ref().expect("overlap bufs");
+        {
+            let _s = telemetry::span(Probe::CommPack);
+            for (r, leaves) in ranks.iter().enumerate() {
+                // SAFETY: the staged range is disjoint from every range
+                // the hop worker currently reads or writes (bucket-bound
+                // argument, super::bucket), and `r` is in range by the
+                // geometry checks in allreduce_mean.
+                let buf = unsafe { shared.range_mut(r, lo, hi) };
+                let mut off = 0usize;
+                for t in leaves {
+                    let n = t.len();
+                    let (a, b) = (off.max(lo), (off + n).min(hi));
+                    if b > a {
+                        buf[a - lo..b - lo]
+                            .copy_from_slice(&t.data()[a - off..b - off]);
+                    }
+                    off += n;
+                    if off >= hi {
+                        break;
+                    }
+                }
+            }
+        }
+        if self.dtype != StateDtype::F32 {
+            let _s = telemetry::span(Probe::CommFeedback);
+            let (dtype, chunk, backend) =
+                (self.dtype, self.chunk, self.backend);
+            let sc = &mut self.scratch[0];
+            for (r, res) in self.residual.iter_mut().enumerate() {
+                // SAFETY: as above — same bucket range, same provenance.
+                let buf = unsafe { shared.range_mut(r, lo, hi) };
+                // `lo` is a bucket bound (64-aligned), so tiling from
+                // the slice head keeps the global q8 block grid
+                error_feedback_rank(buf, &mut res[lo..hi], dtype, chunk,
+                                    backend, sc);
+            }
+        }
+    }
+
+    /// Hand bucket `k` to the hop worker (non-blocking).
+    fn submit_bucket(&self, k: usize, tele: bool) {
+        let w = self.worker.as_ref().expect("overlap worker");
+        let mut g = w.shared.cmd.lock().unwrap();
+        debug_assert!(matches!(&*g, HopCmd::Idle));
+        *g = HopCmd::Run { bucket: k, backend: self.backend, tele };
+        w.shared.cv.notify_all();
+    }
+
+    /// Block until the in-flight bucket's hops complete.
+    fn wait_bucket(&self) -> Result<()> {
+        let w = self.worker.as_ref().expect("overlap worker");
+        let mut g = w.shared.cmd.lock().unwrap();
+        loop {
+            match &*g {
+                HopCmd::Done(_) => break,
+                _ => g = w.shared.cv.wait(g).unwrap(),
+            }
+        }
+        match std::mem::replace(&mut *g, HopCmd::Idle) {
+            HopCmd::Done(None) => Ok(()),
+            HopCmd::Done(Some(e)) => bail!("comm hop worker failed: {e}"),
+            _ => unreachable!("wait loop exits only on Done"),
+        }
     }
 
     /// Copy every rank's leaves into its flat staging buffer.
@@ -332,6 +682,82 @@ impl CommEngine {
     }
 }
 
+impl Drop for CommEngine {
+    /// Join the hop worker (if any) before the buffers it points into
+    /// are freed.
+    fn drop(&mut self) {
+        if let Some(HopWorker { shared, handle }) = self.worker.take() {
+            {
+                let mut g = shared.cmd.lock().unwrap();
+                *g = HopCmd::Exit;
+                shared.cv.notify_all();
+            }
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The persistent hop worker: waits for a bucket, runs its schedule
+/// steps serially with its own scratch slab, reports back. Phase times
+/// land in the shared atomics so the owner can fold them into the
+/// telemetry probes (worker threads have their own telemetry cells —
+/// same idiom as `optim::parallel`'s worker spans).
+fn hop_worker_loop(shared: Arc<HopShared>, bufs: Arc<RankBufs>,
+                   plan: Arc<BucketPlan>,
+                   channel: Option<Arc<InprocTransport>>,
+                   dtype: StateDtype, chunk: usize) {
+    let mut scratch = WireScratch::new(chunk);
+    loop {
+        let cmd = {
+            let mut g = shared.cmd.lock().unwrap();
+            loop {
+                match &*g {
+                    HopCmd::Run { .. } | HopCmd::Exit => break,
+                    _ => g = shared.cv.wait(g).unwrap(),
+                }
+            }
+            std::mem::replace(&mut *g, HopCmd::Idle)
+        };
+        let (bucket, backend, tele) = match cmd {
+            HopCmd::Exit => return,
+            HopCmd::Run { bucket, backend, tele } => (bucket, backend, tele),
+            _ => unreachable!("wait loop exits only on Run/Exit"),
+        };
+        let mut err: Option<String> = None;
+        for (phase, regions) in &plan.steps[bucket] {
+            let t0 = if tele { telemetry::now_ns() } else { 0 };
+            let via = channel.as_deref().map(|t| t as &dyn Transport);
+            // SAFETY: pipeline disjointness (super::bucket): any
+            // concurrent staging touches only flat ranges at or past
+            // the next bucket bound, while this bucket's regions stay
+            // strictly below it. The pointers outlive this thread —
+            // the engine joins it on drop.
+            let r = unsafe {
+                ring::run_step_raw(&bufs, *phase, regions, 0, 1, dtype,
+                                   chunk, backend, &mut scratch, via)
+            };
+            if tele {
+                let slot = match phase {
+                    Phase::Reduce => 0,
+                    Phase::Finalize => 1,
+                    Phase::Gather => 2,
+                };
+                shared.hop_ns[slot].fetch_add(
+                    telemetry::now_ns().saturating_sub(t0),
+                    Ordering::Relaxed,
+                );
+            }
+            if let Err(e) = r {
+                err = Some(format!("{e:#}"));
+                break;
+            }
+        }
+        let mut g = shared.cmd.lock().unwrap();
+        *g = HopCmd::Done(err);
+        shared.cv.notify_all();
+    }
+}
+
 /// One rank's error-feedback pass (see [`CommEngine`] docs).
 fn error_feedback_rank(buf: &mut [f32], res: &mut [f32], dtype: StateDtype,
                        chunk: usize, backend: Backend,
@@ -393,6 +819,14 @@ mod tests {
         }
     }
 
+    fn assert_residuals_bitwise(a: &CommEngine, b: &CommEngine, what: &str) {
+        for ((_, ta), (_, tb)) in a.state().iter().zip(&b.state()) {
+            for (x, y) in ta.data().iter().zip(tb.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what} residual");
+            }
+        }
+    }
+
     /// The acceptance line: the f32 engine reproduces the pre-`comms`
     /// `collectives::allreduce_mean` bit for bit.
     #[test]
@@ -407,6 +841,8 @@ mod tests {
             let stats = eng.allreduce_mean(&mut new).unwrap();
             assert_bitwise(&legacy, &new, &format!("ranks {ranks}"));
             assert!(stats.wire_bytes > 0 && stats.sim_seconds > 0.0);
+            assert!(stats.sim_overlap_seconds > stats.sim_seconds,
+                    "pipeline model adds the staging term");
         }
     }
 
@@ -429,14 +865,8 @@ mod tests {
                     eng.allreduce_mean(&mut out).unwrap();
                     assert_bitwise(&ref_out, &out,
                                    &format!("{dtype:?} x{threads}"));
-                    for ((_, a), (_, b)) in
-                        ref_eng.state().iter().zip(&eng.state())
-                    {
-                        for (x, y) in a.data().iter().zip(b.data()) {
-                            assert_eq!(x.to_bits(), y.to_bits(),
-                                       "{dtype:?} x{threads} residual");
-                        }
-                    }
+                    assert_residuals_bitwise(&ref_eng, &eng,
+                                             &format!("{dtype:?} x{threads}"));
                 }
             }
         }
@@ -639,7 +1069,9 @@ mod tests {
         let stats = eng.allreduce_mean(&mut g).unwrap();
         assert_eq!(stats.wire_bytes, 0);
         assert_eq!(stats.sim_seconds, 0.0);
+        assert_eq!(stats.sim_overlap_seconds, 0.0);
         assert_eq!(eng.buffer_bytes(), 0);
+        assert_eq!(eng.scratch_bytes(), 0);
         assert_bitwise(&before, &g, "single rank");
     }
 
@@ -695,6 +1127,11 @@ mod tests {
         let res_gauge = telemetry::thread_gauge(Gauge::CommResidualBytes);
         assert_eq!(res_gauge.last as usize, eng.residual_floats() * 4);
         assert_eq!(buf_gauge.peak, buf_gauge.last);
+
+        // the non-overlapped path keeps exactly one bucket in flight
+        let inflight = telemetry::thread_gauge(Gauge::CommInflightBuckets);
+        assert_eq!(inflight.last, 1);
+        assert_eq!(inflight.peak, 1);
 
         // the allocator actually saw those buffers get allocated:
         // construction grew live bytes by at least the gauge (plus
@@ -757,5 +1194,254 @@ mod tests {
             CommEngine::new(&specs, 4, StateDtype::Q8, 64, 1).unwrap();
         assert_eq!(eng.buffer_bytes(), 2 * 4 * total * 4);
         assert_eq!(eng.residual_floats(), 4 * total);
+    }
+
+    // ───────────────────────── ISSUE 8 gates ─────────────────────────
+
+    fn opts(dtype: StateDtype, buckets: usize, overlap: bool,
+            threads: usize, transport: TransportKind) -> CommOpts {
+        CommOpts { dtype, chunk: 64, threads, buckets, overlap, transport }
+    }
+
+    /// The PR 8 hard contract, engine level: bucketed exchanges equal
+    /// the monolithic exchange bitwise at every dtype × bucket count ×
+    /// thread count — gradients AND carried residuals, over two
+    /// consecutive exchanges (the second starts from live residuals).
+    #[test]
+    fn bucketed_exchange_is_bitwise_invisible() {
+        let specs = specs();
+        let ranks = 4;
+        for dtype in StateDtype::ALL {
+            let g1 = grads(&specs, ranks, 61);
+            let g2 = grads(&specs, ranks, 62);
+            let mut ref_eng =
+                CommEngine::new(&specs, ranks, dtype, 64, 1).unwrap();
+            let mut ref_a = g1.clone();
+            ref_eng.allreduce_mean(&mut ref_a).unwrap();
+            let mut ref_b = g2.clone();
+            ref_eng.allreduce_mean(&mut ref_b).unwrap();
+            for buckets in [2usize, 3, 5] {
+                for threads in [1usize, 2] {
+                    let mut eng = CommEngine::with_opts(
+                        &specs, ranks,
+                        opts(dtype, buckets, false, threads,
+                             TransportKind::Direct))
+                        .unwrap();
+                    assert_eq!(eng.buckets(), buckets);
+                    let mut a = g1.clone();
+                    eng.allreduce_mean(&mut a).unwrap();
+                    let mut b = g2.clone();
+                    eng.allreduce_mean(&mut b).unwrap();
+                    let what = format!("{dtype:?} b{buckets} x{threads}");
+                    assert_bitwise(&ref_a, &a, &what);
+                    assert_bitwise(&ref_b, &b, &what);
+                    assert_residuals_bitwise(&ref_eng, &eng, &what);
+                }
+            }
+        }
+    }
+
+    /// ...and the overlapped pipeline equals the serial exchange
+    /// bitwise at every dtype × bucket count × transport, residuals
+    /// included.
+    #[test]
+    fn overlapped_exchange_matches_serial_bitwise() {
+        let specs = specs();
+        let ranks = 3;
+        for dtype in StateDtype::ALL {
+            let g1 = grads(&specs, ranks, 71);
+            let g2 = grads(&specs, ranks, 72);
+            let mut ref_eng =
+                CommEngine::new(&specs, ranks, dtype, 64, 1).unwrap();
+            let mut ref_a = g1.clone();
+            ref_eng.allreduce_mean(&mut ref_a).unwrap();
+            let mut ref_b = g2.clone();
+            ref_eng.allreduce_mean(&mut ref_b).unwrap();
+            for buckets in [1usize, 2, 3] {
+                for transport in TransportKind::ALL {
+                    let mut eng = CommEngine::with_opts(
+                        &specs, ranks,
+                        opts(dtype, buckets, true, 1, transport))
+                        .unwrap();
+                    assert!(eng.overlap_enabled());
+                    assert_eq!(eng.transport_kind(), transport);
+                    let mut a = g1.clone();
+                    eng.allreduce_mean(&mut a).unwrap();
+                    let mut b = g2.clone();
+                    eng.allreduce_mean(&mut b).unwrap();
+                    let what = format!("{dtype:?} b{buckets} {}",
+                                       transport.name());
+                    assert_bitwise(&ref_a, &a, &what);
+                    assert_bitwise(&ref_b, &b, &what);
+                    assert_residuals_bitwise(&ref_eng, &eng, &what);
+                }
+            }
+        }
+    }
+
+    /// The in-process channel transport is bitwise invisible on the
+    /// non-overlapped path too, at every thread count (edges are keyed
+    /// to one worker per sending rank).
+    #[test]
+    fn inproc_transport_matches_direct_bitwise() {
+        let specs = specs();
+        for dtype in StateDtype::ALL {
+            for ranks in [2usize, 5] {
+                let base = grads(&specs, ranks, 81);
+                let mut ref_out = base.clone();
+                let mut ref_eng = CommEngine::with_opts(
+                    &specs, ranks,
+                    opts(dtype, 1, false, 1, TransportKind::Direct))
+                    .unwrap();
+                ref_eng.allreduce_mean(&mut ref_out).unwrap();
+                for threads in [1usize, 2, 4] {
+                    let mut eng = CommEngine::with_opts(
+                        &specs, ranks,
+                        opts(dtype, 1, false, threads,
+                             TransportKind::Inproc))
+                        .unwrap();
+                    let mut out = base.clone();
+                    eng.allreduce_mean(&mut out).unwrap();
+                    assert_bitwise(&ref_out, &out,
+                                   &format!("{dtype:?} inproc x{threads}"));
+                    assert_residuals_bitwise(&ref_eng, &eng,
+                                             &format!("{dtype:?} inproc"));
+                }
+            }
+        }
+    }
+
+    /// ISSUE 8 tentpole: the overlapped pipeline allocates nothing on
+    /// the calling thread in steady state — the double-buffered slabs,
+    /// rank pointers, transport edges, and the worker handshake are all
+    /// construction-time.
+    #[test]
+    fn overlapped_steady_state_is_allocation_free() {
+        let specs = specs();
+        for transport in TransportKind::ALL {
+            let mut eng = CommEngine::with_opts(
+                &specs, 4,
+                opts(StateDtype::Q8, 3, true, 1, transport))
+                .unwrap();
+            let mut g = grads(&specs, 4, 91);
+            for _ in 0..2 {
+                eng.allreduce_mean(&mut g).unwrap(); // warm
+            }
+            let before = crate::alloc_count::thread_allocs();
+            for _ in 0..3 {
+                eng.allreduce_mean(&mut g).unwrap();
+            }
+            let allocs = crate::alloc_count::thread_allocs() - before;
+            assert_eq!(allocs, 0,
+                       "{}: {allocs} allocations in steady-state \
+                        overlapped exchanges",
+                       transport.name());
+        }
+    }
+
+    /// Bucket geometries that cannot tile the flat buffer are
+    /// construction/hot-path errors naming the offending bucket — never
+    /// panics (ISSUE 8 satellite).
+    #[test]
+    fn bucket_geometry_errors_name_the_bucket() {
+        // 64 flat elements cannot feed 2 buckets on the 64 grid
+        let err = CommEngine::with_lens_opts(
+            vec![64], 2,
+            opts(StateDtype::F32, 2, false, 1, TransportKind::Direct))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bucket 0"), "{err}");
+        // zero buckets is rejected outright
+        assert!(CommEngine::with_lens_opts(
+            vec![256], 2,
+            opts(StateDtype::F32, 0, false, 1, TransportKind::Direct))
+            .is_err());
+        // more buckets than 64-blocks: names a bucket, not a panic
+        let err = CommEngine::with_lens_opts(
+            vec![128], 2,
+            opts(StateDtype::F32, 5, true, 1, TransportKind::Direct))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bucket"), "{err}");
+    }
+
+    /// The stats surface the overlap model: hop-only `sim_seconds` is
+    /// unchanged by bucketing, while `sim_overlap_seconds` prices the
+    /// staged pipeline and drops when overlap turns on.
+    #[test]
+    fn stats_price_the_overlap_pipeline() {
+        let specs = specs();
+        let ranks = 4;
+        let run = |buckets: usize, overlap: bool| -> CommStats {
+            let mut eng = CommEngine::with_opts(
+                &specs, ranks,
+                opts(StateDtype::Q8, buckets, overlap, 1,
+                     TransportKind::Direct))
+                .unwrap();
+            let mut g = grads(&specs, ranks, 99);
+            eng.allreduce_mean(&mut g).unwrap()
+        };
+        let serial = run(3, false);
+        let ovl = run(3, true);
+        assert_eq!(serial.wire_bytes, ovl.wire_bytes);
+        assert_eq!(serial.sim_seconds, ovl.sim_seconds);
+        assert!(ovl.sim_overlap_seconds < serial.sim_overlap_seconds,
+                "overlap {} !< serial {}",
+                ovl.sim_overlap_seconds, serial.sim_overlap_seconds);
+        // the pipeline figure always includes staging, so it dominates
+        // the hop-only model
+        assert!(serial.sim_overlap_seconds > serial.sim_seconds);
+        assert!(ovl.sim_overlap_seconds > ovl.sim_seconds);
+    }
+
+    /// The overlapped pipeline reports two in-flight buckets mid-run
+    /// (hop lane + stager) and drains to one; hop spans are folded from
+    /// the worker into the usual probes.
+    #[test]
+    fn overlap_telemetry_gauges_and_spans() {
+        let specs = specs();
+        let _g = telemetry::enable();
+        telemetry::reset_thread();
+        let mut eng = CommEngine::with_opts(
+            &specs, 3,
+            opts(StateDtype::Q8, 3, true, 1, TransportKind::Direct))
+            .unwrap();
+        let mut g = grads(&specs, 3, 101);
+        let before = telemetry::thread_totals();
+        eng.allreduce_mean(&mut g).unwrap();
+        let after = telemetry::thread_totals();
+        let inflight = telemetry::thread_gauge(Gauge::CommInflightBuckets);
+        assert_eq!(inflight.peak, 2, "pipeline never double-buffered");
+        assert_eq!(inflight.last, 1, "pipeline did not drain");
+        for p in [Probe::CommPack, Probe::CommFeedback,
+                  Probe::CommHopReduce, Probe::CommHopEncode,
+                  Probe::CommHopGather, Probe::CommUnpack] {
+            assert!(after.spans(p) > before.spans(p),
+                    "{p:?} recorded no span under overlap");
+        }
+        telemetry::reset_thread();
+    }
+
+    /// `scratch_bytes` accounts every persistent Θ(chunk) slab: caller
+    /// scratch per thread, the worker slab under overlap, and the
+    /// transport's per-edge messages.
+    #[test]
+    fn scratch_accounting_tracks_slabs() {
+        let specs = specs();
+        let per = WireScratch::new(64).bytes();
+        let eng = |b, o, t, tr| {
+            CommEngine::with_opts(&specs, 4,
+                                  opts(StateDtype::Q8, b, o, t, tr))
+                .unwrap()
+        };
+        let base = eng(1, false, 1, TransportKind::Direct);
+        assert_eq!(base.scratch_bytes(), per);
+        let threaded = eng(1, false, 3, TransportKind::Direct);
+        assert_eq!(threaded.scratch_bytes(), 3 * per);
+        let ovl = eng(2, true, 1, TransportKind::Direct);
+        assert_eq!(ovl.scratch_bytes(), 2 * per);
+        let chan = eng(1, false, 1, TransportKind::Inproc);
+        assert_eq!(chan.scratch_bytes(),
+                   per + 4 * transport::message_cap(64));
     }
 }

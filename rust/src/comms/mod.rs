@@ -29,14 +29,28 @@
 //!   [`TimingModel`]-backed `comm_ms` estimate the trainer logs per
 //!   step. Residuals are part of the `SM3CKPT2` checkpoint
 //!   (`CommEngine::state`), so resume is bitwise.
+//! * **[`bucket`]** — [`BucketPlan`]: the flat buffer cut into
+//!   64-aligned buckets so the engine can pipeline staging of bucket
+//!   `k+1` with bucket `k`'s in-flight hop steps (`comm_buckets` /
+//!   `comm_overlap`), bitwise identical to the monolithic exchange.
+//! * **[`transport`]** — the [`Transport`] hop-edge trait
+//!   (`comm_transport`) that decouples payload movement from the
+//!   executor: `direct` shared-memory, or `inproc` per-edge message
+//!   channels carrying exact little-endian wire bytes.
 //!
 //! See DESIGN.md §12 for the schedule, the wire format, the residual
-//! contract, and the full determinism argument.
+//! contract, and the full determinism argument, and §15 for the
+//! bucketed overlap pipeline, the Transport contract, and the
+//! calibrated timing model.
 
+pub mod bucket;
 pub mod engine;
 pub mod ring;
+pub mod transport;
 
-pub use engine::{CommEngine, CommStats};
+pub use bucket::{BucketPlan, DEFAULT_COMM_BUCKETS};
+pub use engine::{CommEngine, CommOpts, CommStats};
+pub use transport::{InprocTransport, Transport, TransportKind};
 
 use crate::optim::qstate::codec::Q8_BLOCK;
 use crate::optim::StateDtype;
@@ -59,19 +73,54 @@ pub fn check_comm_chunk(chunk: usize) -> anyhow::Result<()> {
 /// Interconnect timing model (TPU-v2 pod defaults) — the simulated cost
 /// of the gradient exchange. Load-bearing since the `comms` subsystem:
 /// [`CommEngine::allreduce_mean`] feeds its estimate into the trainer's
-/// per-step `comm_ms` column.
+/// per-step `comm_ms` column. Since PR 8 the constants are no longer
+/// hard-wired: [`TimingModel::from_measured`] refits them from the
+/// telemetry `comm/hop_*` spans the engine records, and the added
+/// staging term lets [`BucketPlan::modeled_seconds`] price the
+/// overlapped pipeline.
 #[derive(Debug, Clone)]
 pub struct TimingModel {
     /// per-link bandwidth, bytes/s
     pub link_bandwidth: f64,
     /// per-hop latency, seconds
     pub hop_latency: f64,
+    /// staging bandwidth (pack + error-feedback encode), bytes/s — the
+    /// compute-side cost the overlapped pipeline hides behind hops
+    pub stage_bandwidth: f64,
 }
 
 impl Default for TimingModel {
     fn default() -> Self {
-        // TPU-v2 ICI: ~60 GB/s per link, ~1 µs hop latency
-        Self { link_bandwidth: 60e9, hop_latency: 1e-6 }
+        // TPU-v2 ICI: ~60 GB/s per link, ~1 µs hop latency; staging is
+        // host-memory-bound, ~10 GB/s through pack + EF encode
+        Self { link_bandwidth: 60e9, hop_latency: 1e-6, stage_bandwidth: 10e9 }
+    }
+}
+
+/// Least-squares fit of `t = latency + bytes / bandwidth` over
+/// `(bytes, seconds)` samples. Degenerate inputs (no samples, zero
+/// byte variance, non-increasing trend) keep `default_bw` and fit only
+/// the intercept, clamped non-negative.
+fn fit_line(samples: &[(usize, f64)], default_bw: f64,
+            default_lat: f64) -> (f64, f64) {
+    if samples.is_empty() {
+        return (default_bw, default_lat);
+    }
+    let n = samples.len() as f64;
+    let mb = samples.iter().map(|&(b, _)| b as f64).sum::<f64>() / n;
+    let mt = samples.iter().map(|&(_, t)| t).sum::<f64>() / n;
+    let mut var_b = 0.0;
+    let mut cov = 0.0;
+    for &(b, t) in samples {
+        let db = b as f64 - mb;
+        var_b += db * db;
+        cov += db * (t - mt);
+    }
+    let slope = if var_b > 0.0 { cov / var_b } else { 0.0 };
+    if slope > 0.0 && slope.is_finite() {
+        ((1.0 / slope), (mt - slope * mb).max(0.0))
+    } else {
+        (default_bw, (mt - mb / default_bw).max(0.0))
     }
 }
 
@@ -101,6 +150,40 @@ impl TimingModel {
         }
         self.allreduce_seconds(total_wire_bytes / (2 * (n - 1)), n)
     }
+
+    /// Modeled staging time (pack + error-feedback encode) of `bytes`
+    /// of host traffic — the term the overlapped pipeline hides behind
+    /// in-flight hops.
+    pub fn stage_seconds(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.stage_bandwidth
+    }
+
+    /// Calibrate a model from measured telemetry spans instead of the
+    /// pod constants. `hops` are `(per_link_bytes, seconds)` samples of
+    /// individual hop steps (the `comm/hop_reduce` / `comm/hop_gather`
+    /// spans); `stages` are `(bytes, seconds)` samples of the staging
+    /// phases (`comm/pack` + `comm/feedback`). The hop fit is least
+    /// squares on `t = hop_latency + bytes / link_bandwidth`; with
+    /// degenerate samples (a single step size gives zero byte variance)
+    /// the default bandwidth is kept and only the latency intercept is
+    /// fitted, so calibration degrades gracefully instead of producing
+    /// a wild model. Staging fits the aggregate throughput
+    /// `Σ bytes / Σ seconds`.
+    pub fn from_measured(hops: &[(usize, f64)],
+                         stages: &[(usize, f64)]) -> Self {
+        let dflt = Self::default();
+        let (link_bandwidth, hop_latency) =
+            fit_line(hops, dflt.link_bandwidth, dflt.hop_latency);
+        let (sb, ss) = stages.iter().fold((0.0f64, 0.0f64), |(b, s), &(bb, t)| {
+            (b + bb as f64, s + t)
+        });
+        let stage_bandwidth = if sb > 0.0 && ss > 0.0 {
+            sb / ss
+        } else {
+            dflt.stage_bandwidth
+        };
+        Self { link_bandwidth, hop_latency, stage_bandwidth }
+    }
 }
 
 /// Exact wire bytes of one encoded region of `len` elements at `dtype`
@@ -129,16 +212,19 @@ mod tests {
     fn timing_bytes_links_arithmetic_is_exact() {
         // hand-checkable numbers: bw 100 B/s, latency 1 s, 400 B, 4 ranks:
         // 2(4-1) = 6 steps, each 1 s latency + (400/4)/100 = 1 s transfer
-        let t = TimingModel { link_bandwidth: 100.0, hop_latency: 1.0 };
+        let t = TimingModel { link_bandwidth: 100.0, hop_latency: 1.0,
+                              ..TimingModel::default() };
         let s = t.allreduce_seconds(400, 4);
         assert!((s - 12.0).abs() < 1e-12, "{s}");
         // latency-free: pure bandwidth term 2(n-1)/n · bytes / bw
-        let t = TimingModel { link_bandwidth: 50.0, hop_latency: 0.0 };
+        let t = TimingModel { link_bandwidth: 50.0, hop_latency: 0.0,
+                              ..TimingModel::default() };
         let s = t.allreduce_seconds(1000, 2);
         assert!((s - 2.0 * 500.0 / 50.0).abs() < 1e-12, "{s}");
         // exchange_seconds: total wire bytes of 2(n−1) hop sweeps
         // reduces to allreduce_seconds of one sweep
-        let t = TimingModel { link_bandwidth: 100.0, hop_latency: 1.0 };
+        let t = TimingModel { link_bandwidth: 100.0, hop_latency: 1.0,
+                              ..TimingModel::default() };
         let total = 400 * 2 * 3; // sweep 400 B × 6 hops at n = 4
         assert!((t.exchange_seconds(total, 4)
                  - t.allreduce_seconds(400, 4)).abs() < 1e-12);
@@ -156,6 +242,57 @@ mod tests {
         let t16 = t.allreduce_seconds(1 << 30, 16);
         let t64 = t.allreduce_seconds(1 << 30, 64);
         assert!((t16 / t64 - 1.0).abs() < 0.1, "{t16} vs {t64}");
+    }
+
+    /// `from_measured` recovers an exact synthetic (bandwidth, latency)
+    /// pair from noiseless samples and degrades to the defaults when
+    /// the samples cannot identify a slope.
+    #[test]
+    fn from_measured_fits_and_falls_back() {
+        // t = 5 µs + bytes / 8 GB/s, three distinct sizes
+        let (bw, lat) = (8e9f64, 5e-6f64);
+        let hops: Vec<(usize, f64)> = [1usize << 16, 1 << 18, 1 << 20]
+            .iter()
+            .map(|&b| (b, lat + b as f64 / bw))
+            .collect();
+        let stages = [(1usize << 20, 1e-4), (1 << 21, 2e-4)];
+        let t = TimingModel::from_measured(&hops, &stages);
+        assert!((t.link_bandwidth / bw - 1.0).abs() < 1e-9, "{}", t.link_bandwidth);
+        assert!((t.hop_latency / lat - 1.0).abs() < 1e-9, "{}", t.hop_latency);
+        // stage fit: (2^20 + 2^21) bytes over 3e-4 s
+        let want = (3.0 * (1 << 20) as f64) / 3e-4;
+        assert!((t.stage_bandwidth / want - 1.0).abs() < 1e-9);
+
+        // zero byte variance (every hop the same size): keep default
+        // bandwidth, fit the intercept only, clamped non-negative
+        let d = TimingModel::default();
+        let t = TimingModel::from_measured(&[(1 << 20, 1e-3); 4], &[]);
+        assert_eq!(t.link_bandwidth, d.link_bandwidth);
+        let want = (1e-3 - (1 << 20) as f64 / d.link_bandwidth).max(0.0);
+        assert!((t.hop_latency - want).abs() < 1e-12);
+        assert_eq!(t.stage_bandwidth, d.stage_bandwidth);
+
+        // no samples at all: the defaults verbatim
+        let t = TimingModel::from_measured(&[], &[]);
+        assert_eq!(t.link_bandwidth, d.link_bandwidth);
+        assert_eq!(t.hop_latency, d.hop_latency);
+        assert_eq!(t.stage_bandwidth, d.stage_bandwidth);
+
+        // decreasing time with size (noise-dominated): fall back, never
+        // a negative bandwidth or latency
+        let t = TimingModel::from_measured(&[(1 << 10, 2e-3), (1 << 20, 1e-3)],
+                                           &[(0, 0.0)]);
+        assert_eq!(t.link_bandwidth, d.link_bandwidth);
+        assert!(t.hop_latency >= 0.0);
+        assert_eq!(t.stage_bandwidth, d.stage_bandwidth);
+    }
+
+    #[test]
+    fn stage_seconds_is_bytes_over_bandwidth() {
+        let t = TimingModel { stage_bandwidth: 100.0,
+                              ..TimingModel::default() };
+        assert_eq!(t.stage_seconds(0), 0.0);
+        assert!((t.stage_seconds(250) - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! byte-identical to a whole-region encode — the same argument as the
 //! step-kernel tile cursor (DESIGN.md §10), applied to the wire.
 
+use super::transport::Transport;
 use super::wire_bytes_for;
 use crate::optim::qstate::codec;
 use crate::optim::{Backend, StateDtype};
@@ -167,18 +168,36 @@ pub struct WireScratch {
     pub codes: Vec<u8>,
     /// bf16 wire words
     pub half: Vec<u16>,
+    /// serialized outbound wire message (transport sends)
+    pub wire_out: Vec<u8>,
+    /// received wire message (transport recvs)
+    pub wire_in: Vec<u8>,
 }
 
 impl WireScratch {
     /// Scratch for tiles of at most `chunk` elements.
     pub fn new(chunk: usize) -> Self {
+        let cap = super::transport::message_cap(chunk);
         Self {
             stage: vec![0.0; chunk],
             decode: vec![0.0; chunk],
             scales: vec![0.0; codec::q8_blocks(chunk)],
             codes: vec![0; chunk],
             half: vec![0; chunk],
+            wire_out: vec![0; cap],
+            wire_in: vec![0; cap],
         }
+    }
+
+    /// Persistent bytes one scratch slab set holds (sized once at
+    /// construction; the memory accountant's `comm_scratch_bytes`
+    /// mirrors this).
+    pub fn bytes(&self) -> usize {
+        4 * (self.stage.len() + self.decode.len() + self.scales.len())
+            + self.codes.len()
+            + 2 * self.half.len()
+            + self.wire_out.len()
+            + self.wire_in.len()
     }
 }
 
@@ -216,7 +235,7 @@ pub fn wire_roundtrip(vals: &[f32], dtype: StateDtype, backend: Backend,
 pub fn wire_roundtrip_staged(scratch: &mut WireScratch, len: usize,
                              dtype: StateDtype, backend: Backend) {
     let be = backend.imp();
-    let WireScratch { stage, decode, scales, codes, half } = scratch;
+    let WireScratch { stage, decode, scales, codes, half, .. } = scratch;
     match dtype {
         StateDtype::F32 => decode[..len].copy_from_slice(&stage[..len]),
         StateDtype::Bf16 => {
@@ -325,7 +344,7 @@ impl RankBufs {
     /// # Safety
     /// `[lo, hi)` must be in bounds and disjoint from every concurrently
     /// written range (schedule invariant above).
-    unsafe fn range(&self, rank: usize, lo: usize, hi: usize) -> &[f32] {
+    pub unsafe fn range(&self, rank: usize, lo: usize, hi: usize) -> &[f32] {
         debug_assert!(lo <= hi && hi <= self.len);
         std::slice::from_raw_parts(self.ptrs[rank].add(lo), hi - lo)
     }
@@ -334,47 +353,92 @@ impl RankBufs {
     /// `[lo, hi)` must be in bounds, written by this task only, and
     /// disjoint from every concurrently read range (schedule invariant).
     #[allow(clippy::mut_from_ref)]
-    unsafe fn range_mut(&self, rank: usize, lo: usize, hi: usize)
-                        -> &mut [f32] {
+    pub unsafe fn range_mut(&self, rank: usize, lo: usize, hi: usize)
+                            -> &mut [f32] {
         debug_assert!(lo <= hi && hi <= self.len);
         std::slice::from_raw_parts_mut(self.ptrs[rank].add(lo), hi - lo)
     }
 }
 
-/// Execute one schedule step's regions with `threads` workers (tasks
-/// round-robin over region index — the assignment is irrelevant to the
-/// result, which is bitwise identical at any thread count).
+/// Execute the regions of one schedule step assigned to worker `tid`
+/// of `threads` through raw rank-buffer pointers — the shared core of
+/// the threaded executor and the overlap hop worker. Tasks round-robin
+/// over region index; when a [`Transport`] is supplied they key on the
+/// sending rank instead, so each ring edge's send/recv pairs stay on
+/// one worker (the one-in-flight-message rendezvous discipline). The
+/// assignment is bitwise-irrelevant either way — regions within a step
+/// commute.
+///
+/// # Safety
+/// The schedule invariant ([`RankBufs`] docs) must hold for `regions`,
+/// the pointers must outlive the call, and no concurrent task may
+/// touch any range this task reads or writes (for the overlap pipeline
+/// that is the bucket-bound disjointness argument in
+/// [`super::bucket`]).
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn run_step_raw(bufs: &RankBufs, phase: Phase, regions: &[Region],
+                           tid: usize, threads: usize, dtype: StateDtype,
+                           chunk: usize, backend: Backend,
+                           scratch: &mut WireScratch,
+                           transport: Option<&dyn Transport>)
+                           -> anyhow::Result<()> {
+    for (i, reg) in regions.iter().enumerate() {
+        let key = if transport.is_some() { reg.src } else { i };
+        if key % threads != tid {
+            continue;
+        }
+        if phase == Phase::Finalize {
+            // finalize is an owner-local re-encode — never transported
+            let b = bufs.range_mut(reg.src, reg.lo, reg.hi);
+            run_finalize(b, dtype, chunk, backend, scratch);
+            continue;
+        }
+        let s = bufs.range(reg.src, reg.lo, reg.hi);
+        let d = bufs.range_mut(reg.dst, reg.lo, reg.hi);
+        match transport {
+            None => run_pair(phase, s, d, dtype, chunk, backend, scratch),
+            Some(t) => super::transport::run_pair_via(
+                phase, s, d, (reg.src, reg.dst), dtype, chunk, backend,
+                scratch, t)?,
+        }
+    }
+    Ok(())
+}
+
+/// Execute one schedule step's regions with `threads` workers, bitwise
+/// identical at any thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
                          regions: &[Region], dtype: StateDtype,
                          chunk: usize, backend: Backend, threads: usize,
-                         scratch: &mut [WireScratch]) {
+                         scratch: &mut [WireScratch],
+                         transport: Option<&dyn Transport>)
+                         -> anyhow::Result<()> {
     let shared = RankBufs::new(bufs);
-    std::thread::scope(|scope| {
-        for (tid, sc) in scratch.iter_mut().enumerate().take(threads) {
-            let shared = &shared;
-            scope.spawn(move || {
-                for (i, reg) in regions.iter().enumerate() {
-                    if i % threads != tid {
-                        continue;
-                    }
-                    // SAFETY: schedule invariant — this task exclusively
-                    // owns the write range; read ranges are never written
-                    // in the same step (see RankBufs docs).
+    let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = scratch
+            .iter_mut()
+            .enumerate()
+            .take(threads)
+            .map(|(tid, sc)| {
+                let shared = &shared;
+                scope.spawn(move || {
+                    // SAFETY: schedule invariant — each task exclusively
+                    // owns its write ranges; read ranges are never
+                    // written in the same step (see RankBufs docs).
                     unsafe {
-                        if phase == Phase::Finalize {
-                            let b = shared.range_mut(reg.src, reg.lo, reg.hi);
-                            run_finalize(b, dtype, chunk, backend, sc);
-                        } else {
-                            let s = shared.range(reg.src, reg.lo, reg.hi);
-                            let d = shared.range_mut(reg.dst, reg.lo, reg.hi);
-                            run_pair(phase, s, d, dtype, chunk, backend, sc);
-                        }
+                        run_step_raw(shared, phase, regions, tid, threads,
+                                     dtype, chunk, backend, sc, transport)
                     }
-                }
-            });
-        }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
+    for r in results {
+        r?;
+    }
+    Ok(())
 }
 
 /// Execute one schedule step serially with safe split borrows (the
@@ -382,7 +446,9 @@ pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
 /// [`run_step_threaded`]).
 pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
                        regions: &[Region], dtype: StateDtype, chunk: usize,
-                       backend: Backend, scratch: &mut WireScratch) {
+                       backend: Backend, scratch: &mut WireScratch,
+                       transport: Option<&dyn Transport>)
+                       -> anyhow::Result<()> {
     for reg in regions {
         if phase == Phase::Finalize {
             run_finalize(&mut bufs[reg.src][reg.lo..reg.hi], dtype, chunk,
@@ -397,9 +463,15 @@ pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
             let (left, right) = bufs.split_at_mut(reg.src);
             (&right[0], &mut left[reg.dst])
         };
-        run_pair(phase, &a[reg.lo..reg.hi], &mut b[reg.lo..reg.hi], dtype,
-                 chunk, backend, scratch);
+        let (s, d) = (&a[reg.lo..reg.hi], &mut b[reg.lo..reg.hi]);
+        match transport {
+            None => run_pair(phase, s, d, dtype, chunk, backend, scratch),
+            Some(t) => super::transport::run_pair_via(
+                phase, s, d, (reg.src, reg.dst), dtype, chunk, backend,
+                scratch, t)?,
+        }
     }
+    Ok(())
 }
 
 #[cfg(test)]

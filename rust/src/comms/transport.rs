@@ -1,0 +1,465 @@
+//! Pluggable hop-edge transport for the ring executor.
+//!
+//! PR 5's executor moves every hop payload by reaching directly into the
+//! peer rank's flat buffer (all ranks live in one address space). That
+//! is the fastest possible in-process path, but it hard-wires the
+//! assumption that a "link" is a shared-memory view — rank processes,
+//! sockets, or RDMA can never slot in. This module splits the *data
+//! movement* out of the executor behind [`Transport`]:
+//!
+//! * a hop edge is the directed ring link `src → (src+1) mod n`;
+//! * the sender serializes one tile's **wire encoding** (the exact
+//!   `comm_dtype` bytes the schedule accounts — q8 scale fields + codes,
+//!   bf16 words, or raw f32) into a byte message and [`Transport::send`]s
+//!   it;
+//! * the receiver [`Transport::recv`]s the message and decodes it into
+//!   its accumulate/copy lane.
+//!
+//! Because the wire serialization is exact little-endian bit transport
+//! (`f32::to_le_bytes`/`from_le_bytes` round-trip every bit pattern),
+//! `decode(serialize(encode(x)))` equals the direct path's
+//! `decode(encode(x))` bit for bit — so swapping transports can never
+//! change a trajectory, and the bitwise gates run at every
+//! [`TransportKind`].
+//!
+//! Today's implementation is [`InprocTransport`]: one preallocated
+//! message slab per ring edge behind a mutex, rendezvous discipline
+//! (exactly one in-flight message per edge; the executor pairs each
+//! `send` with its `recv`). Rank count is a property of the transport,
+//! not of the executor's thread pool, so `ranks` may exceed
+//! `comm_threads` on every path. A socket or shared-memory rank-process
+//! transport implements the same two methods and inherits the whole
+//! schedule, bucketing, and determinism argument unchanged.
+
+use super::ring::{Phase, WireScratch};
+use crate::optim::qstate::codec;
+use crate::optim::{Backend, StateDtype};
+use anyhow::{bail, ensure, Result};
+use std::sync::Mutex;
+
+/// Which transport the comm engine moves hop payloads through
+/// (config key `comm_transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Zero-copy shared-memory fast path: the executor reads the peer's
+    /// buffer directly (the PR 5 behaviour, and the default).
+    Direct,
+    /// In-process channel transport: payloads are serialized to wire
+    /// bytes and move through per-edge message slabs ([`InprocTransport`]).
+    Inproc,
+}
+
+impl TransportKind {
+    /// Every selectable transport, for sweeps and gates.
+    pub const ALL: [TransportKind; 2] =
+        [TransportKind::Direct, TransportKind::Inproc];
+
+    /// Stable config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Direct => "direct",
+            TransportKind::Inproc => "inproc",
+        }
+    }
+
+    /// Parse a config/CLI value (`direct` | `inproc`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "direct" => Ok(TransportKind::Direct),
+            "inproc" => Ok(TransportKind::Inproc),
+            other => bail!(
+                "unknown comm_transport {other:?} (expected \"direct\" or \
+                 \"inproc\")"
+            ),
+        }
+    }
+
+    /// Resolve the ambient default from `SM3_COMM_TRANSPORT` (unset or
+    /// empty ⇒ [`TransportKind::Direct`]). CI matrixes the quick bench
+    /// gates over this variable so every bitwise gate also executes with
+    /// the channel transport as the ambient default.
+    pub fn ambient() -> Result<Self> {
+        Self::ambient_from(std::env::var("SM3_COMM_TRANSPORT").ok().as_deref())
+    }
+
+    /// [`TransportKind::ambient`] with the environment value injected
+    /// (testable without process-global env mutation).
+    pub fn ambient_from(v: Option<&str>) -> Result<Self> {
+        match v {
+            None | Some("") => Ok(TransportKind::Direct),
+            Some(s) => Self::parse(s),
+        }
+    }
+}
+
+impl Default for TransportKind {
+    /// The ambient default; an unparseable `SM3_COMM_TRANSPORT` falls
+    /// back to `Direct` here (config parsing surfaces the error loudly
+    /// via [`TransportKind::ambient`]).
+    fn default() -> Self {
+        Self::ambient().unwrap_or(TransportKind::Direct)
+    }
+}
+
+/// A reliable, ordered message pipe per directed ring edge
+/// `src → (src+1) mod ranks`.
+///
+/// Discipline: at most one message is in flight per edge; the executor
+/// pairs every `send` with the matching `recv` before the next message
+/// on that edge (one worker owns all of an edge's regions within a
+/// step, so sends and recvs strictly alternate). In-process both sides
+/// run on the same host; a rank-process transport splits them.
+pub trait Transport: Send + Sync {
+    /// Rank count of the pod this transport connects.
+    fn ranks(&self) -> usize;
+    /// Largest message (bytes) an edge can carry.
+    fn max_message(&self) -> usize;
+    /// Stage `bytes` on the edge `src → dst`. Errors if the edge is not
+    /// a ring link, the message exceeds the slab, or a message is
+    /// already in flight on the edge.
+    fn send(&self, src: usize, dst: usize, bytes: &[u8]) -> Result<()>;
+    /// Drain the pending message on edge `src → dst` into `out`;
+    /// returns the byte count. Errors if no message is in flight.
+    fn recv(&self, src: usize, dst: usize, out: &mut [u8]) -> Result<usize>;
+}
+
+/// One edge's preallocated message slab.
+struct EdgeSlot {
+    buf: Vec<u8>,
+    len: usize,
+    full: bool,
+}
+
+/// In-process channel transport: per-edge mutex-protected slabs, sized
+/// once at construction (steady-state sends/recvs allocate nothing).
+pub struct InprocTransport {
+    ranks: usize,
+    cap: usize,
+    /// indexed by sender rank (ring: the receiver is `(src+1) mod n`)
+    edges: Vec<Mutex<EdgeSlot>>,
+}
+
+impl InprocTransport {
+    /// Build the edge slabs for `ranks` ranks and messages of at most
+    /// `cap` bytes (one tile's worst-case wire encoding).
+    pub fn new(ranks: usize, cap: usize) -> Self {
+        let edges = (0..ranks)
+            .map(|_| {
+                Mutex::new(EdgeSlot { buf: vec![0u8; cap], len: 0, full: false })
+            })
+            .collect();
+        Self { ranks, cap, edges }
+    }
+
+    /// Persistent slab bytes held by the edge buffers (the memory
+    /// accountant's `comm_scratch_bytes` mirrors this).
+    pub fn slab_bytes(&self) -> usize {
+        self.ranks * self.cap
+    }
+
+    fn check_edge(&self, src: usize, dst: usize) -> Result<()> {
+        ensure!(src < self.ranks && dst < self.ranks,
+                "transport edge {src}->{dst} out of range for {} ranks",
+                self.ranks);
+        ensure!(dst == (src + 1) % self.ranks,
+                "transport edge {src}->{dst} is not a ring link \
+                 (expected {src}->{})",
+                (src + 1) % self.ranks);
+        Ok(())
+    }
+}
+
+impl Transport for InprocTransport {
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn max_message(&self) -> usize {
+        self.cap
+    }
+
+    fn send(&self, src: usize, dst: usize, bytes: &[u8]) -> Result<()> {
+        self.check_edge(src, dst)?;
+        ensure!(bytes.len() <= self.cap,
+                "transport message of {} bytes exceeds the {}-byte edge \
+                 slab",
+                bytes.len(), self.cap);
+        let mut slot = self.edges[src].lock().unwrap();
+        ensure!(!slot.full,
+                "transport edge {src}->{dst} already carries an in-flight \
+                 message");
+        slot.buf[..bytes.len()].copy_from_slice(bytes);
+        slot.len = bytes.len();
+        slot.full = true;
+        Ok(())
+    }
+
+    fn recv(&self, src: usize, dst: usize, out: &mut [u8]) -> Result<usize> {
+        self.check_edge(src, dst)?;
+        let mut slot = self.edges[src].lock().unwrap();
+        ensure!(slot.full,
+                "transport recv on edge {src}->{dst} with no in-flight \
+                 message");
+        let n = slot.len;
+        ensure!(out.len() >= n,
+                "transport recv buffer of {} bytes cannot hold a {n}-byte \
+                 message",
+                out.len());
+        out[..n].copy_from_slice(&slot.buf[..n]);
+        slot.full = false;
+        Ok(n)
+    }
+}
+
+/// Worst-case wire-message bytes for a `chunk`-element tile across all
+/// dtypes (f32 dominates: 4 bytes/element; q8's scale fields stay well
+/// under that). Sizes the edge slabs and the scratch byte slabs.
+pub fn message_cap(chunk: usize) -> usize {
+    4 * chunk
+}
+
+/// Serialize the wire encoding of `vals` into `out` (little-endian),
+/// returning the byte count — exactly `wire_bytes_for(vals.len(), dtype)`.
+/// Uses the scratch codec fields; `out` must be a disjoint slab.
+pub fn encode_message(vals: &[f32], dtype: StateDtype, backend: Backend,
+                      scratch_scales: &mut [f32], scratch_codes: &mut [u8],
+                      scratch_half: &mut [u16], out: &mut [u8]) -> usize {
+    let be = backend.imp();
+    let n = vals.len();
+    match dtype {
+        StateDtype::F32 => {
+            for (v, o) in vals.iter().zip(out.chunks_exact_mut(4)) {
+                o.copy_from_slice(&v.to_le_bytes());
+            }
+            4 * n
+        }
+        StateDtype::Bf16 => {
+            be.bf16_encode(vals, &mut scratch_half[..n]);
+            for (h, o) in
+                scratch_half[..n].iter().zip(out.chunks_exact_mut(2))
+            {
+                o.copy_from_slice(&h.to_le_bytes());
+            }
+            2 * n
+        }
+        StateDtype::Q8 => {
+            let blocks = codec::q8_blocks(n);
+            be.q8_encode(vals, &mut scratch_scales[..blocks],
+                         &mut scratch_codes[..n]);
+            for (s, o) in
+                scratch_scales[..blocks].iter().zip(out.chunks_exact_mut(4))
+            {
+                o.copy_from_slice(&s.to_le_bytes());
+            }
+            out[4 * blocks..4 * blocks + n]
+                .copy_from_slice(&scratch_codes[..n]);
+            4 * blocks + n
+        }
+    }
+}
+
+/// Deserialize a wire message of `len` elements into `decode[..len]` —
+/// bit-for-bit the values the direct path's `wire_roundtrip` produces
+/// (little-endian byte transport is exact on every f32/u16 bit pattern).
+pub fn decode_message(bytes: &[u8], len: usize, dtype: StateDtype,
+                      backend: Backend, scratch_scales: &mut [f32],
+                      scratch_codes: &mut [u8], scratch_half: &mut [u16],
+                      decode: &mut [f32]) -> Result<()> {
+    let be = backend.imp();
+    let expect = super::wire_bytes_for(len, dtype);
+    ensure!(bytes.len() == expect,
+            "wire message of {} bytes for {len} {} elements (expected \
+             {expect})",
+            bytes.len(), dtype.name());
+    match dtype {
+        StateDtype::F32 => {
+            for (b, d) in bytes.chunks_exact(4).zip(decode[..len].iter_mut())
+            {
+                *d = f32::from_le_bytes(b.try_into().unwrap());
+            }
+        }
+        StateDtype::Bf16 => {
+            for (b, h) in
+                bytes.chunks_exact(2).zip(scratch_half[..len].iter_mut())
+            {
+                *h = u16::from_le_bytes(b.try_into().unwrap());
+            }
+            be.bf16_decode(&scratch_half[..len], &mut decode[..len]);
+        }
+        StateDtype::Q8 => {
+            let blocks = codec::q8_blocks(len);
+            for (b, s) in bytes[..4 * blocks]
+                .chunks_exact(4)
+                .zip(scratch_scales[..blocks].iter_mut())
+            {
+                *s = f32::from_le_bytes(b.try_into().unwrap());
+            }
+            scratch_codes[..len]
+                .copy_from_slice(&bytes[4 * blocks..4 * blocks + len]);
+            be.q8_decode(&scratch_scales[..blocks], &scratch_codes[..len],
+                         &mut decode[..len]);
+        }
+    }
+    Ok(())
+}
+
+/// Run one hop region through a transport in `chunk`-element tiles: per
+/// tile, encode → send → recv → decode → accumulate/copy. Bitwise
+/// identical to the direct `run_pair` at every dtype (the serialization
+/// is exact), tiled on the same region-head-anchored grid.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pair_via(phase: Phase, src: &[f32], dst: &mut [f32],
+                    edge: (usize, usize), dtype: StateDtype, chunk: usize,
+                    backend: Backend, scratch: &mut WireScratch,
+                    transport: &dyn Transport) -> Result<()> {
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert_ne!(phase, Phase::Finalize, "finalize is always local");
+    let be = backend.imp();
+    let WireScratch { decode, scales, codes, half, wire_out, wire_in, .. } =
+        scratch;
+    let n = src.len();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let (s, d) = (&src[lo..hi], &mut dst[lo..hi]);
+        let len = s.len();
+        let msg = encode_message(s, dtype, backend, scales, codes, half,
+                                 wire_out);
+        transport.send(edge.0, edge.1, &wire_out[..msg])?;
+        let got = transport.recv(edge.0, edge.1, wire_in)?;
+        decode_message(&wire_in[..got], len, dtype, backend, scales, codes,
+                       half, decode)?;
+        match phase {
+            Phase::Reduce => be.add_assign(d, &decode[..len]),
+            Phase::Gather => d.copy_from_slice(&decode[..len]),
+            Phase::Finalize => unreachable!(),
+        }
+        lo = hi;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::ring::{run_pair, wire_roundtrip};
+
+    #[test]
+    fn kind_parse_and_names_round_trip() {
+        for k in TransportKind::ALL {
+            assert_eq!(TransportKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("tcp").is_err());
+        assert_eq!(TransportKind::ambient_from(None).unwrap(),
+                   TransportKind::Direct);
+        assert_eq!(TransportKind::ambient_from(Some("")).unwrap(),
+                   TransportKind::Direct);
+        assert_eq!(TransportKind::ambient_from(Some("inproc")).unwrap(),
+                   TransportKind::Inproc);
+        assert!(TransportKind::ambient_from(Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn inproc_edges_enforce_the_ring_and_rendezvous_discipline() {
+        let t = InprocTransport::new(4, 64);
+        assert_eq!(t.ranks(), 4);
+        assert_eq!(t.max_message(), 64);
+        assert_eq!(t.slab_bytes(), 4 * 64);
+        // not a ring link
+        assert!(t.send(0, 2, &[1]).is_err());
+        assert!(t.send(0, 0, &[1]).is_err());
+        assert!(t.send(5, 6, &[1]).is_err());
+        // oversized message
+        assert!(t.send(0, 1, &[0u8; 65]).is_err());
+        // recv before send
+        let mut out = [0u8; 64];
+        assert!(t.recv(0, 1, &mut out).is_err());
+        // happy path, including the wrap-around edge
+        t.send(3, 0, &[7, 8, 9]).unwrap();
+        // double-send on a full edge is an error, other edges unaffected
+        assert!(t.send(3, 0, &[1]).is_err());
+        t.send(0, 1, &[5]).unwrap();
+        assert_eq!(t.recv(3, 0, &mut out).unwrap(), 3);
+        assert_eq!(&out[..3], &[7, 8, 9]);
+        assert_eq!(t.recv(0, 1, &mut out).unwrap(), 1);
+        assert_eq!(out[0], 5);
+        // drained edge: recv errors again
+        assert!(t.recv(3, 0, &mut out).is_err());
+        // too-small recv buffer
+        t.send(1, 2, &[1, 2, 3, 4]).unwrap();
+        assert!(t.recv(1, 2, &mut out[..2]).is_err());
+    }
+
+    /// The serialization contract: decode(serialize(encode(x))) equals
+    /// the direct path's wire round-trip bit for bit, at every dtype ×
+    /// backend, including negative zeros and denormals.
+    #[test]
+    fn message_codec_matches_wire_roundtrip_bitwise() {
+        let mut rng = crate::rng::Rng::new(17);
+        let mut vals: Vec<f32> =
+            (0..200).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        vals[0] = -0.0;
+        vals[1] = 1e-42; // denormal
+        for backend in Backend::ALL {
+            for dtype in StateDtype::ALL {
+                let mut sc = WireScratch::new(256);
+                wire_roundtrip(&vals, dtype, backend, &mut sc);
+                let direct: Vec<f32> = sc.decode[..vals.len()].to_vec();
+                let mut sc2 = WireScratch::new(256);
+                let WireScratch {
+                    decode, scales, codes, half, wire_out, ..
+                } = &mut sc2;
+                let msg = encode_message(&vals, dtype, backend, scales,
+                                         codes, half, wire_out);
+                assert_eq!(msg,
+                           crate::comms::wire_bytes_for(vals.len(), dtype));
+                let bytes: Vec<u8> = wire_out[..msg].to_vec();
+                decode_message(&bytes, vals.len(), dtype, backend, scales,
+                               codes, half, decode)
+                    .unwrap();
+                for (a, b) in direct.iter().zip(&decode[..vals.len()]) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{dtype:?} {}", backend.name());
+                }
+            }
+        }
+        // truncated / oversized messages are errors, not panics
+        let mut sc = WireScratch::new(256);
+        let WireScratch { decode, scales, codes, half, .. } = &mut sc;
+        assert!(decode_message(&[0u8; 3], 1, StateDtype::F32,
+                               Backend::Scalar, scales, codes, half, decode)
+            .is_err());
+        assert!(decode_message(&[0u8; 9], 1, StateDtype::Q8,
+                               Backend::Scalar, scales, codes, half, decode)
+            .is_err());
+    }
+
+    /// The transported hop equals the direct hop bitwise at every phase
+    /// × dtype × chunk (the per-transport leg of the PR 8 gates).
+    #[test]
+    fn run_pair_via_matches_run_pair_bitwise() {
+        let mut rng = crate::rng::Rng::new(23);
+        let src: Vec<f32> =
+            (0..333).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for dtype in StateDtype::ALL {
+            for phase in [Phase::Reduce, Phase::Gather] {
+                for chunk in [64usize, 256] {
+                    let mut direct = vec![0.25f32; src.len()];
+                    let mut sc = WireScratch::new(chunk);
+                    run_pair(phase, &src, &mut direct, dtype, chunk,
+                             Backend::Scalar, &mut sc);
+                    let t = InprocTransport::new(2, message_cap(chunk));
+                    let mut via = vec![0.25f32; src.len()];
+                    let mut sc = WireScratch::new(chunk);
+                    run_pair_via(phase, &src, &mut via, (0, 1), dtype,
+                                 chunk, Backend::Scalar, &mut sc, &t)
+                        .unwrap();
+                    for (a, b) in direct.iter().zip(&via) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "{dtype:?} {phase:?} chunk {chunk}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@
 pub mod toml;
 
 use self::toml::TomlValue;
+use crate::comms::TransportKind;
 use crate::optim::{Backend, GroupSpec, OptimSpec, SplitPolicy, StateDtype};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -167,6 +168,21 @@ pub struct TrainConfig {
     /// serial. Results are bitwise identical at any value and any
     /// `comm_dtype` — the ring schedule fixes the reduction order.
     pub comm_threads: usize,
+    /// 64-aligned flat gradient buckets the exchange pipelines over
+    /// (split path; >= 1, 1 = the monolithic exchange). Pure scheduling:
+    /// results are bitwise identical at any tiling bucket count — see
+    /// `comms::bucket` / DESIGN.md §15.
+    pub comm_buckets: usize,
+    /// stage/quantize bucket k+1 while bucket k's ring hops are in
+    /// flight on a dedicated hop-worker thread (split path). Bitwise
+    /// identical on or off; `comm_buckets >= 2` is what buys actual
+    /// overlap. See DESIGN.md §15.
+    pub comm_overlap: bool,
+    /// hop-edge payload path: "direct" (in-memory regions) | "inproc"
+    /// (serialized messages through per-edge channel slots). Bitwise
+    /// identical either way; defaults to the ambient
+    /// `SM3_COMM_TRANSPORT`, direct when unset.
+    pub comm_transport: TransportKind,
     /// kernel backend for the split-path hot loops (step kernels, state
     /// codecs, global-norm partials, comm wire lanes): "scalar" |
     /// "simd". A pure performance knob — every backend is bitwise
@@ -206,6 +222,9 @@ impl Default for TrainConfig {
             comm_dtype: StateDtype::F32,
             comm_chunk: crate::comms::DEFAULT_COMM_CHUNK,
             comm_threads: 1,
+            comm_buckets: crate::comms::DEFAULT_COMM_BUCKETS,
+            comm_overlap: false,
+            comm_transport: TransportKind::default(),
             kernel_backend: Backend::default(),
             telemetry: false,
             telemetry_jsonl: None,
@@ -294,7 +313,8 @@ const OPTIM_KEYS: &[&str] = &[
 const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
     "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
-    "comm_threads", "kernel_backend", "telemetry", "telemetry_jsonl", "seed",
+    "comm_threads", "comm_buckets", "comm_overlap", "comm_transport",
+    "kernel_backend", "telemetry", "telemetry_jsonl", "seed",
     "artifacts_dir", "out_dir",
 ];
 
@@ -427,6 +447,38 @@ impl TrainConfig {
                 Some(v) => v as usize,
                 None => d.comm_threads,
             },
+            comm_buckets: match train_tbl.get("comm_buckets")
+                .and_then(TomlValue::as_i64)
+            {
+                // reject instead of casting: a negative would wrap
+                // through `as u64` to an absurd bucket count
+                Some(v) if v < 1 => bail!("[train] comm_buckets must be \
+                                           >= 1, got {v}"),
+                Some(v) => v as usize,
+                None => d.comm_buckets,
+            },
+            comm_overlap: match train_tbl.get("comm_overlap") {
+                // strict: `comm_overlap = "on"` must error, not silently
+                // run the serial pipeline
+                None => d.comm_overlap,
+                Some(v) => match v.as_bool() {
+                    Some(b) => b,
+                    None => bail!("[train] comm_overlap must be a \
+                                   boolean, got {v:?}"),
+                },
+            },
+            comm_transport: match train_tbl.get("comm_transport") {
+                // no key: the ambient SM3_COMM_TRANSPORT decides, and a
+                // typo'd env value must error, not silently run direct
+                None => TransportKind::ambient()
+                    .context("[train] comm_transport (SM3_COMM_TRANSPORT)")?,
+                Some(v) => match v.as_str() {
+                    Some(s) => TransportKind::parse(s)
+                        .context("[train] comm_transport")?,
+                    None => bail!("[train] comm_transport must be a \
+                                   string, got {v:?}"),
+                },
+            },
             kernel_backend: Backend::parse(&get_str(
                 &train_tbl, "kernel_backend", d.kernel_backend.name()))
                 .context("[train] kernel_backend")?,
@@ -504,6 +556,9 @@ impl TrainConfig {
         if self.comm_threads == 0 {
             bail!("comm_threads must be > 0 (1 = serial)");
         }
+        if self.comm_buckets == 0 {
+            bail!("comm_buckets must be > 0 (1 = monolithic exchange)");
+        }
         crate::comms::check_comm_chunk(self.comm_chunk)
             .context("[train] comm_chunk")?;
         if self.exec == ExecMode::Fused {
@@ -522,6 +577,18 @@ impl TrainConfig {
                 bail!("comm_chunk applies to the split path only (the \
                        fused artifact has no gradient exchange)");
             }
+            if self.comm_buckets != crate::comms::DEFAULT_COMM_BUCKETS {
+                bail!("comm_buckets applies to the split path only (the \
+                       fused artifact has no gradient exchange)");
+            }
+            if self.comm_overlap {
+                bail!("comm_overlap applies to the split path only (the \
+                       fused artifact has no gradient exchange)");
+            }
+            // comm_transport is deliberately NOT rejected on the fused
+            // path: its default tracks the ambient SM3_COMM_TRANSPORT
+            // (a CI matrix dimension), and with no exchange the knob is
+            // inert rather than silently wrong
         }
         if self.telemetry_jsonl.is_some() && !self.telemetry {
             bail!("[train] telemetry_jsonl requires telemetry = true \
@@ -769,6 +836,55 @@ warmup_steps = 40
             .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("comm_dtpye") && msg.contains("comm_dtype"),
+                "{msg}");
+    }
+
+    /// ISSUE 8: the overlap-pipeline knobs parse, default, and validate
+    /// like the other comm knobs (bucket count strict-positive, overlap
+    /// strict-boolean, transport from the registry or the ambient env).
+    #[test]
+    fn overlap_knobs_parse_defaults_and_validate() {
+        use crate::comms::TransportKind;
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.comm_buckets, crate::comms::DEFAULT_COMM_BUCKETS);
+        assert!(!cfg.comm_overlap);
+        // the no-key default tracks the ambient SM3_COMM_TRANSPORT (a CI
+        // matrix dimension), so compare against it rather than Direct
+        assert_eq!(cfg.comm_transport, TransportKind::ambient().unwrap());
+        let cfg = TrainConfig::from_toml(
+            "[train]\nworkers = 4\ncomm_buckets = 8\ncomm_overlap = true\n\
+             comm_transport = \"inproc\"\n").unwrap();
+        assert_eq!((cfg.comm_buckets, cfg.comm_overlap, cfg.comm_transport),
+                   (8, true, TransportKind::Inproc));
+        let cfg = TrainConfig::from_toml(
+            "[train]\ncomm_transport = \"direct\"\n").unwrap();
+        assert_eq!(cfg.comm_transport, TransportKind::Direct);
+        // comm_buckets: strict positive integer, no negative wrapping
+        assert!(TrainConfig::from_toml("[train]\ncomm_buckets = 0\n")
+            .is_err());
+        assert!(TrainConfig::from_toml("[train]\ncomm_buckets = -2\n")
+            .is_err());
+        // comm_overlap: strict boolean — "on" must error, not default
+        assert!(TrainConfig::from_toml(
+            "[train]\ncomm_overlap = \"on\"\n").is_err());
+        // unknown transport names must fail with a message, not default
+        let err = TrainConfig::from_toml(
+            "[train]\ncomm_transport = \"rdma\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("rdma"), "{err:#}");
+        // split-path knobs: the fused artifact has no gradient exchange
+        for bad in ["comm_buckets = 2", "comm_overlap = true"] {
+            let toml = format!("[train]\nexec = \"fused\"\n{bad}\n");
+            assert!(TrainConfig::from_toml(&toml).is_err(), "{bad}");
+        }
+        // fused + explicit defaults is fine (comm_transport stays inert)
+        assert!(TrainConfig::from_toml(
+            "[train]\nexec = \"fused\"\ncomm_buckets = 1\n\
+             comm_overlap = false\n").is_ok());
+        // a typo'd key names the nearest valid one
+        let err = TrainConfig::from_toml("[train]\ncomm_bukets = 2\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("comm_bukets") && msg.contains("comm_buckets"),
                 "{msg}");
     }
 

@@ -3,7 +3,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::Arc;
 
-use crate::comms::CommEngine;
+use crate::comms::{CommEngine, CommOpts, TimingModel};
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
 use crate::json::Json;
@@ -25,8 +25,13 @@ pub struct StepRecord {
     pub loss_ema: f64,
     pub lr: f64,
     pub wall_ms: f64,
-    /// simulated pod-interconnect cost of this step's gradient exchange
-    /// (`comms::TimingModel`; 0.0 single-worker and on the fused path)
+    /// modeled pod-interconnect cost of this step's gradient exchange:
+    /// the full staged-pipeline figure (`BucketPlan::modeled_seconds` —
+    /// staging + hops, with staging hidden behind in-flight hops under
+    /// `comm_overlap`). With telemetry on, the underlying `TimingModel`
+    /// is refit each step from measured hop/stage spans
+    /// (`TimingModel::from_measured`); otherwise the TPU-v2 pod defaults
+    /// apply. 0.0 single-worker and on the fused path.
     pub comm_ms: f64,
     /// measured forward+backward time (all workers, all grad-accum
     /// microbatches)
@@ -119,6 +124,11 @@ pub struct Trainer {
     ema: Ema,
     /// simulated interconnect cost of the most recent `train_step`
     last_comm_ms: f64,
+    /// measured (bytes, seconds) hop samples feeding
+    /// `TimingModel::from_measured` (telemetry runs only; capped)
+    comm_hop_samples: Vec<(usize, f64)>,
+    /// measured (bytes, seconds) stage samples (pack + error feedback)
+    comm_stage_samples: Vec<(usize, f64)>,
     /// keeps the process-wide telemetry flag raised for this trainer's
     /// lifetime when `cfg.telemetry` is set (guards nest across
     /// concurrent trainers)
@@ -159,11 +169,20 @@ impl Trainer {
                     .optim_spec()?
                     .build(&specs)
                     .context("building the optimizer from [optim]")?;
-                // the gradient exchange: buffers, residuals, and the
-                // ring schedule are all sized once, here
-                let mut comms = CommEngine::new(
-                    &specs, cfg.workers, cfg.comm_dtype, cfg.comm_chunk,
-                    cfg.comm_threads)
+                // the gradient exchange: buffers, residuals, the
+                // bucketed ring schedule, the hop transport, and (when
+                // comm_overlap is on) the dedicated hop-worker thread
+                // are all sized/spawned once, here
+                let mut comms = CommEngine::with_opts(
+                    &specs, cfg.workers,
+                    CommOpts {
+                        dtype: cfg.comm_dtype,
+                        chunk: cfg.comm_chunk,
+                        threads: cfg.comm_threads,
+                        buckets: cfg.comm_buckets,
+                        overlap: cfg.comm_overlap,
+                        transport: cfg.comm_transport,
+                    })
                     .context("building the comm engine from [train]")?;
                 // the optimizer side gets its backend via optim_spec();
                 // the wire side is set here so both halves of the split
@@ -213,6 +232,8 @@ impl Trainer {
             step: 0,
             ema: Ema::new(0.9),
             last_comm_ms: 0.0,
+            comm_hop_samples: Vec::new(),
+            comm_stage_samples: Vec::new(),
             _telemetry: tele_guard,
         })
     }
@@ -321,12 +342,58 @@ impl Trainer {
                 drop(grad_span);
                 // data-parallel combine: the compressed ring all-reduce
                 // (comms subsystem — wire codec, error feedback, and
-                // the simulated interconnect cost it reports); the
+                // the modeled interconnect cost it reports); the
                 // engine records its own pack/hop/unpack spans
+                let comm_before =
+                    telemetry::enabled().then(telemetry::thread_totals);
                 let stats = comms
                     .allreduce_mean(&mut worker_grads)
                     .context("gradient all-reduce")?;
-                self.last_comm_ms = stats.sim_seconds * 1e3;
+                self.last_comm_ms = stats.sim_overlap_seconds * 1e3;
+                if let Some(before) = comm_before {
+                    // calibrate the interconnect model from what this
+                    // exchange actually measured: per-hop-sweep wire
+                    // bytes/seconds fit the link line, pack + error
+                    // feedback fit the staging bandwidth. Bitwise-inert:
+                    // only the *modeled* comm_ms changes, never data.
+                    let after = telemetry::thread_totals();
+                    const HOPS: [Probe; 3] = [Probe::CommHopReduce,
+                                              Probe::CommHopEncode,
+                                              Probe::CommHopGather];
+                    let hop_ns: u64 = HOPS.iter()
+                        .map(|&p| after.ns(p).saturating_sub(before.ns(p)))
+                        .sum();
+                    let hop_n: u64 = HOPS.iter()
+                        .map(|&p| after.spans(p) - before.spans(p))
+                        .sum();
+                    let stage_ns = after.ns(Probe::CommPack)
+                        .saturating_sub(before.ns(Probe::CommPack))
+                        + after.ns(Probe::CommFeedback)
+                            .saturating_sub(before.ns(Probe::CommFeedback));
+                    // cap the sample sets: the fit stabilizes quickly and
+                    // the step loop must stay O(1) per step
+                    const CAP: usize = 256;
+                    if hop_n > 0 && hop_ns > 0
+                        && self.comm_hop_samples.len() < CAP
+                    {
+                        self.comm_hop_samples.push((
+                            stats.wire_bytes / hop_n as usize,
+                            hop_ns as f64 / hop_n as f64 / 1e9,
+                        ));
+                    }
+                    if stage_ns > 0 && self.comm_stage_samples.len() < CAP {
+                        // every rank stages the full flat f32 buffer once
+                        self.comm_stage_samples.push((
+                            self.cfg.workers * self.meta.param_count * 4,
+                            stage_ns as f64 / 1e9,
+                        ));
+                    }
+                    comms.set_timing(TimingModel::from_measured(
+                        &self.comm_hop_samples, &self.comm_stage_samples));
+                    // report this step at the freshly calibrated model
+                    self.last_comm_ms =
+                        comms.modeled_overlap_seconds() * 1e3;
+                }
                 let grads = worker_grads.into_iter().next().unwrap();
                 let opt_span = telemetry::span(Probe::OptStep);
                 opt.step(params, &grads, lr);

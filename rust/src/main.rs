@@ -39,6 +39,9 @@ fn commands() -> Vec<Command> {
             .option("comm-dtype", "wire precision of the gradient exchange: f32 | bf16 | q8 (split path; compressed dtypes carry error-feedback residuals)")
             .option("comm-threads", "host threads for the ring collectives (1 = serial; bitwise-identical results)")
             .option("comm-chunk", "wire tile for the ring collectives, in elements (multiple of 64; bitwise-identical results)")
+            .option("comm-buckets", "64-aligned gradient buckets the exchange pipelines over (1 = monolithic; bitwise-identical results)")
+            .option("comm-transport", "hop-edge payload path: direct | inproc (bitwise-identical results; default from SM3_COMM_TRANSPORT)")
+            .flag("comm-overlap", "stage bucket k+1 while bucket k's ring hops are in flight (split path; bitwise-identical results)")
             .option("kernel-backend", "tile-kernel implementation: scalar | simd (split path; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
@@ -147,6 +150,15 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     if let Some(c) = args.opt_count("comm-chunk")? {
         cfg.comm_chunk = c; // cfg.validate() checks block alignment
     }
+    if let Some(b) = args.opt_count("comm-buckets")? {
+        cfg.comm_buckets = b; // engine rejects untileable bucket counts
+    }
+    if args.has_flag("comm-overlap") {
+        cfg.comm_overlap = true;
+    }
+    if let Some(t) = args.opt("comm-transport") {
+        cfg.comm_transport = sm3::comms::TransportKind::parse(t)?;
+    }
     if let Some(b) = args.opt("kernel-backend") {
         cfg.kernel_backend = sm3::optim::Backend::parse(b)?;
     }
@@ -190,9 +202,10 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
     );
     if cfg.workers > 1 {
         println!(
-            "  comms: dtype={} threads={} chunk={} (ring all-reduce, \
-             error feedback {})",
+            "  comms: dtype={} threads={} chunk={} buckets={} overlap={} \
+             transport={} (ring all-reduce, error feedback {})",
             cfg.comm_dtype.name(), cfg.comm_threads, cfg.comm_chunk,
+            cfg.comm_buckets, cfg.comm_overlap, cfg.comm_transport.name(),
             if cfg.comm_dtype == sm3::optim::StateDtype::F32 {
                 "off"
             } else {

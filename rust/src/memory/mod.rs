@@ -179,6 +179,37 @@ pub fn comm_buffer_bytes(specs: &[ParamSpec], ranks: usize,
     copies * ranks * total * 4
 }
 
+/// Persistent comm-subsystem *scratch* bytes per run — the Θ(comm_chunk)
+/// slabs that PR 8 pins for the exchange's lifetime: one wire-scratch
+/// slab set per comm thread, one more for the dedicated hop worker when
+/// `comm_overlap` is on (the double buffer), and the in-process
+/// transport's per-edge message slots. The static mirror of
+/// `comms::CommEngine::scratch_bytes` (cross-checked in tests).
+///
+/// One wire-scratch slab set holds, for tiles of `chunk` elements:
+/// f32 stage + decode + q8 scale fields, u8 codes, u16 halves, and the
+/// two serialized-message buffers (out + in) of `message_cap(chunk)`
+/// bytes each.
+pub fn comm_scratch_bytes(ranks: usize, chunk: usize, threads: usize,
+                          overlap: bool,
+                          transport: crate::comms::TransportKind) -> usize {
+    use crate::comms::transport::message_cap;
+    use crate::optim::qstate::codec::q8_blocks;
+    if ranks <= 1 {
+        return 0;
+    }
+    let per = 4 * (2 * chunk + q8_blocks(chunk)) // stage + decode + scales
+        + chunk                                  // codes
+        + 2 * chunk                              // halves
+        + 2 * message_cap(chunk);                // wire out + in
+    let slabs = threads + usize::from(overlap);
+    let edges = match transport {
+        crate::comms::TransportKind::Direct => 0,
+        crate::comms::TransportKind::Inproc => ranks * message_cap(chunk),
+    };
+    slabs * per + edges
+}
+
 /// Calibrated activation/overhead model for one hardware+model setting.
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
@@ -349,6 +380,46 @@ mod tests {
                 assert_eq!(comm_buffer_bytes(&specs, ranks, dtype),
                            eng.buffer_bytes(),
                            "{dtype:?} x{ranks} buffers");
+            }
+        }
+    }
+
+    /// ISSUE 8: the static scratch arithmetic must agree with the live
+    /// engine across chunk sizes, thread counts, overlap, and both
+    /// transports — the Θ(chunk) slabs are part of the budget now that
+    /// they are pinned for the run's lifetime.
+    #[test]
+    fn static_matches_dynamic_comm_scratch_bytes() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        let specs = vec![
+            ParamSpec::new("emb", &[33, 7]),
+            ParamSpec::new("w", &[16, 64]),
+            ParamSpec::new("b", &[65]),
+        ];
+        for ranks in [1usize, 2, 4] {
+            for chunk in [64usize, 256] {
+                for threads in [1usize, 3] {
+                    for overlap in [false, true] {
+                        for transport in TransportKind::ALL {
+                            let eng = CommEngine::with_opts(
+                                &specs, ranks,
+                                CommOpts {
+                                    dtype: StateDtype::Q8,
+                                    chunk,
+                                    threads,
+                                    buckets: 1,
+                                    overlap,
+                                    transport,
+                                }).unwrap();
+                            assert_eq!(
+                                comm_scratch_bytes(ranks, chunk, threads,
+                                                   overlap, transport),
+                                eng.scratch_bytes(),
+                                "x{ranks} chunk {chunk} t{threads} \
+                                 overlap {overlap} {}", transport.name());
+                        }
+                    }
+                }
             }
         }
     }

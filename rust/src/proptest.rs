@@ -795,6 +795,206 @@ mod tests {
         });
     }
 
+    /// ISSUE 8 satellite: the bucketed / overlapped / channel-transport
+    /// ring equals the monolithic serial exchange (the PR 5 oracle)
+    /// bitwise — outputs AND carried residuals over two consecutive
+    /// exchanges — for random inventories, ranks in [1, 8], every wire
+    /// dtype, 1/2/4 comm threads, and bucket counts both on and off the
+    /// 64-element tiling grid. Bucket counts the flat buffer cannot
+    /// tile must error naming a bucket, never panic.
+    #[test]
+    fn bucketed_overlapped_ring_matches_serial_oracle() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        use crate::optim::{ParamSpec, StateDtype};
+        use crate::tensor::Tensor;
+        // (buckets, threads, overlap, transport): overlap forces one hop
+        // worker, so threads vary only on the non-overlapped rows
+        const CONFIGS: [(usize, usize, bool, TransportKind); 6] = [
+            (2, 1, false, TransportKind::Direct),
+            (3, 2, false, TransportKind::Inproc),
+            (5, 4, false, TransportKind::Direct),
+            (2, 1, true, TransportKind::Direct),
+            (3, 1, true, TransportKind::Inproc),
+            (4, 1, true, TransportKind::Direct),
+        ];
+        forall("bucketed/overlapped ring == serial oracle", |rng| {
+            (gen::param_specs(rng, 3, 3, 7),
+             1 + rng.index(8), // ranks in [1, 8]
+             rng.next_u64())
+        }, |(specs, ranks, seed)| {
+            let n = *ranks;
+            let total: usize = specs.iter().map(ParamSpec::numel).sum();
+            for dtype in StateDtype::ALL {
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut gen_round = |rng: &mut crate::rng::Rng| {
+                    (0..n)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, rng))
+                            .collect::<Vec<Tensor>>())
+                        .collect::<Vec<_>>()
+                };
+                let g1 = gen_round(&mut rng);
+                let g2 = gen_round(&mut rng);
+                let mut ref_eng = CommEngine::new(specs, n, dtype, 64, 1)
+                    .map_err(|e| e.to_string())?;
+                let mut ref_a = g1.clone();
+                let mut ref_b = g2.clone();
+                ref_eng.allreduce_mean(&mut ref_a)
+                    .map_err(|e| e.to_string())?;
+                ref_eng.allreduce_mean(&mut ref_b)
+                    .map_err(|e| e.to_string())?;
+                for &(buckets, threads, overlap, transport) in &CONFIGS {
+                    let built = CommEngine::with_opts(
+                        specs, n,
+                        CommOpts { dtype, chunk: 64, threads, buckets,
+                                   overlap, transport });
+                    // multi-rank engines need every bucket non-empty on
+                    // the 64 grid; total >= 64·buckets guarantees it —
+                    // below that line, a tiling error naming a bucket is
+                    // the contract (single-rank engines never tile)
+                    let mut eng = match built {
+                        Ok(e) => e,
+                        Err(e) if n > 1 && total < 64 * buckets => {
+                            let msg = e.to_string();
+                            if !msg.contains("bucket") {
+                                return Err(format!(
+                                    "geometry error must name a bucket: \
+                                     {msg}"));
+                            }
+                            continue;
+                        }
+                        Err(e) => {
+                            return Err(format!(
+                                "x{n} b{buckets} (total {total}): {e:#}"));
+                        }
+                    };
+                    for (round, (g, want)) in
+                        [(&g1, &ref_a), (&g2, &ref_b)].iter().enumerate()
+                    {
+                        let mut out = (*g).clone();
+                        eng.allreduce_mean(&mut out)
+                            .map_err(|e| e.to_string())?;
+                        for (la, lb) in want.iter().zip(&out) {
+                            for (ta, tb) in la.iter().zip(lb) {
+                                for (x, y) in
+                                    ta.data().iter().zip(tb.data())
+                                {
+                                    if x.to_bits() != y.to_bits() {
+                                        return Err(format!(
+                                            "{dtype:?} x{n} b{buckets} \
+                                             t{threads} overlap={overlap} \
+                                             {} round {round}: {x} != {y}",
+                                            transport.name()));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    for ((_, a), (_, b)) in
+                        ref_eng.state().iter().zip(&eng.state())
+                    {
+                        for (x, y) in a.data().iter().zip(b.data()) {
+                            if x.to_bits() != y.to_bits() {
+                                return Err(format!(
+                                    "{dtype:?} x{n} b{buckets}: residual \
+                                     {x} != {y}"));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 8 satellite: error-feedback residuals written to an
+    /// `SM3CKPT2` checkpoint mid-trajectory restore into an engine with
+    /// *different* bucketing/overlap/transport, and the resumed run
+    /// continues bit-identically — the pipeline knobs are invisible to
+    /// the checkpoint contract.
+    #[test]
+    fn bucketed_residuals_resume_mid_trajectory_bitwise() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        use crate::optim::{ParamSpec, StateDtype};
+        use crate::tensor::Tensor;
+        let dir = std::env::temp_dir().join("sm3_comm_bucket_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("residuals.ckpt");
+        forall("bucketed comm residual mid-trajectory resume", |rng| {
+            (gen::param_specs(rng, 3, 3, 7), rng.next_u64())
+        }, |(specs, seed)| {
+            let total: usize = specs.iter().map(ParamSpec::numel).sum();
+            for dtype in [StateDtype::Bf16, StateDtype::Q8] {
+                let ranks = 3;
+                // resume into the most different pipeline that still
+                // tiles this inventory
+                let buckets = (total / 64).clamp(1, 3);
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut gen_round = |rng: &mut crate::rng::Rng| {
+                    (0..ranks)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, rng))
+                            .collect::<Vec<Tensor>>())
+                        .collect::<Vec<_>>()
+                };
+                // trajectory A: monolithic serial direct, 2 warm steps
+                let mut a = CommEngine::new(specs, ranks, dtype, 64, 1)
+                    .map_err(|e| e.to_string())?;
+                for _ in 0..2 {
+                    let mut g = gen_round(&mut rng);
+                    a.allreduce_mean(&mut g)
+                        .map_err(|e| e.to_string())?;
+                }
+                // checkpoint exactly the way the trainer does
+                let named: Vec<(String, Tensor)> = a
+                    .state()
+                    .into_iter()
+                    .map(|(r, t)| (format!("comm/residual/{r}"), t))
+                    .collect();
+                let entries: Vec<(String, &Tensor, StateDtype)> = named
+                    .iter()
+                    .map(|(n, t)| (n.clone(), t, StateDtype::F32))
+                    .collect();
+                crate::checkpoint::save_v2(&path, &entries)
+                    .map_err(|e| e.to_string())?;
+                let loaded = crate::checkpoint::load_tagged(&path)
+                    .map_err(|e| e.to_string())?;
+                // trajectory B resumes bucketed + overlapped + inproc
+                let mut b = CommEngine::with_opts(
+                    specs, ranks,
+                    CommOpts { dtype, chunk: 64, threads: 1, buckets,
+                               overlap: true,
+                               transport: TransportKind::Inproc })
+                    .map_err(|e| e.to_string())?;
+                b.load_state(
+                    loaded.into_iter().map(|(_, t, _)| t).collect())
+                    .map_err(|e| e.to_string())?;
+                for round in 0..2 {
+                    let g = gen_round(&mut rng);
+                    let mut ga = g.clone();
+                    let mut gb = g;
+                    a.allreduce_mean(&mut ga)
+                        .map_err(|e| e.to_string())?;
+                    b.allreduce_mean(&mut gb)
+                        .map_err(|e| e.to_string())?;
+                    for (la, lb) in ga.iter().zip(&gb) {
+                        for (ta, tb) in la.iter().zip(lb) {
+                            for (x, y) in ta.data().iter().zip(tb.data())
+                            {
+                                if x.to_bits() != y.to_bits() {
+                                    return Err(format!(
+                                        "{dtype:?} b{buckets} round \
+                                         {round}: {x} != {y}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Values for the backend-equivalence properties: normals plus the
     /// edge cases the codec lanes care about — ±0, f32 denormals, and
     /// huge magnitudes (never NaN/∞: the trait contract is NaN-free).

@@ -161,11 +161,15 @@ pub enum Gauge {
     /// Sharded-step load imbalance, permille: slowest worker over mean
     /// worker time × 1000 (1000 = perfectly balanced).
     OptImbalancePermille = 4,
+    /// Gradient buckets concurrently in flight inside an exchange:
+    /// peaks at 2 under `comm_overlap` (hop lane + stager), pinned at 1
+    /// on the serial bucket loop.
+    CommInflightBuckets = 5,
 }
 
 impl Gauge {
     /// Number of gauges (size of the per-thread gauge array).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 6;
 
     /// Every gauge, in index order.
     pub const ALL: [Gauge; Gauge::COUNT] = [
@@ -174,6 +178,7 @@ impl Gauge {
         Gauge::CommResidualBytes,
         Gauge::StepScratchBytes,
         Gauge::OptImbalancePermille,
+        Gauge::CommInflightBuckets,
     ];
 
     /// Canonical registry/JSON name.
@@ -184,6 +189,7 @@ impl Gauge {
             Gauge::CommResidualBytes => "mem/comm_residual_bytes",
             Gauge::StepScratchBytes => "mem/step_scratch_bytes",
             Gauge::OptImbalancePermille => "opt/imbalance_permille",
+            Gauge::CommInflightBuckets => "comm/inflight_buckets",
         }
     }
 }
