@@ -60,13 +60,16 @@ bench-comms-overlap:
 
 # Quick benches with telemetry export: writes out/BENCH_optim.json,
 # out/BENCH_comms.json, out/BENCH_memory.json and validates them with
-# the in-repo checker (EXPERIMENTS.md §Telemetry). Mirrors the ci.yml
-# telemetry job.
+# the in-repo checker (EXPERIMENTS.md §Telemetry), holding
+# BENCH_memory.json's peak pool bytes to the committed baseline
+# (the peak-memory regression gate, DESIGN.md §16). Mirrors the
+# ci.yml telemetry job.
 bench-telemetry:
 	BENCH_QUICK=1 cargo bench --bench bench_optim -- --telemetry
 	BENCH_QUICK=1 cargo bench --bench bench_collectives -- --telemetry
 	BENCH_QUICK=1 cargo bench --bench bench_memory -- --telemetry
 	cargo run --release --bin sm3-train -- bench-check \
+		--baseline ci/BENCH_memory_baseline.json \
 		out/BENCH_optim.json out/BENCH_comms.json out/BENCH_memory.json
 
 # Compile every harness=false bench target without running it (the CI

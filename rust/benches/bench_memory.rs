@@ -5,13 +5,19 @@
 //! (`optim::qstate`) with their recomputed frontier.
 //!
 //! Run: `cargo bench --bench bench_memory` (writes out/table1_memory.csv,
-//! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv).
-//! Pass `-- --telemetry` (or `SM3_TELEMETRY=1`) to emit
-//! out/BENCH_memory.json: the table's state/wire byte figures as
-//! telemetry gauges, one standing document per run (DESIGN.md §14).
+//! out/table2_memory.csv, out/max_batch.csv, out/qstate_memory.csv,
+//! out/pool_occupancy.csv). Pass `-- --telemetry` (or `SM3_TELEMETRY=1`)
+//! to emit out/BENCH_memory.json: the table's state/wire byte figures
+//! plus the live pool-occupancy gauges, one standing document per run
+//! (DESIGN.md §14). Quick runs (`BENCH_QUICK=1`) ALWAYS export the
+//! document — CI uploads it and gates `mem/pool_bytes_peak` against the
+//! committed baseline (`ci/BENCH_memory_baseline.json`).
 
 use sm3::bench_util::{telemetry_requested, write_bench_json};
-use sm3::comms::TimingModel;
+use sm3::comms::{CommEngine, CommOpts, TimingModel};
+use sm3::pool::{Pool, Tag};
+use sm3::rng::Rng;
+use sm3::tensor::Tensor;
 use sm3::memory::{comm_buffer_bytes, comm_wire_bytes, inventory,
                   opt_state_bytes, opt_state_floats, MemoryModel,
                   SlotLayout, GIB};
@@ -49,7 +55,9 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").map(|v| v == "1")
         .unwrap_or(false);
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let tele = telemetry_requested(&argv);
+    // quick runs always export the telemetry document: CI uploads
+    // BENCH_memory.json and gates its peak pool bytes (ISSUE 9)
+    let tele = telemetry_requested(&argv) || quick;
 
     // ---- Table 1: Transformer-Big on TPUv2 (8 GiB/core) ----------------
     let big = MemoryModel::calibrate(
@@ -276,9 +284,84 @@ fn main() -> anyhow::Result<()> {
                  (sm3 - d) as f64 / 1e6,
                  100.0 * (sm3 - d) as f64 / d as f64);
     }
+    // ---- live pool occupancy (ISSUE 9: the runtime the tables audit) ----
+    // Everything above is static arithmetic; this section RUNS the pool:
+    // a pooled optimizer + comm engine on a small fixed inventory, two
+    // steps, then the per-tag ledger — the live counterpart of the
+    // accountant columns (equality is enforced in `memory::tests`; here
+    // the figures are exported so CI can gate the peak).
+    println!("\n=== live memory-pool occupancy (per-tag ledger, small \
+              inventory) ===");
+    let pspecs = vec![
+        ParamSpec::new("emb", &[512, 64]),
+        ParamSpec::new("w", &[64, 64]),
+        ParamSpec::new("b", &[65]),
+    ];
+    let mut plog = RunLogger::new(
+        Some("out/pool_occupancy.csv"),
+        "scenario,optimizer,state_dtype,comm_dtype,ranks,tag,\
+         bytes_in_use,peak_bytes",
+        false)?;
+    let mut pools: Vec<Pool> = Vec::new();
+    for (opt_name, sdtype) in [("sm3", StateDtype::F32),
+                               ("sm3", StateDtype::Q8),
+                               ("adam", StateDtype::Q8)] {
+        for (cdtype, ranks) in [(StateDtype::F32, 1usize),
+                                (StateDtype::Q8, 4)] {
+            let pool = Pool::new();
+            let mut opt = sm3::optim::OptimSpec::named(opt_name)?
+                .state_dtype(sdtype)
+                .threads(2)
+                .pool(&pool)
+                .build(&pspecs)?;
+            let mut comms = if ranks > 1 {
+                Some(CommEngine::with_opts_in(
+                    &pspecs, ranks,
+                    CommOpts { dtype: cdtype, chunk: 256, threads: 2,
+                               ..CommOpts::default() },
+                    &pool)?)
+            } else {
+                None
+            };
+            let mut rng = Rng::new(7);
+            let mut params: Vec<Tensor> = pspecs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            for _ in 0..2 {
+                let mut grads: Vec<Vec<Tensor>> = (0..ranks)
+                    .map(|_| pspecs.iter()
+                        .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                        .collect())
+                    .collect();
+                if let Some(eng) = comms.as_mut() {
+                    eng.allreduce_mean(&mut grads)?;
+                }
+                opt.step(&mut params, &grads[0], 0.1);
+            }
+            let scenario = format!("{opt_name}_{}_wire_{}_x{ranks}",
+                                   sdtype.name(), cdtype.name());
+            for tag in Tag::ALL {
+                plog.row(&[scenario.clone(), opt_name.into(),
+                           sdtype.name().into(), cdtype.name().into(),
+                           ranks.to_string(), tag.name().into(),
+                           pool.bytes_in_use_tag(tag).to_string(),
+                           pool.peak_bytes_tag(tag).to_string()])?;
+            }
+            println!("  {scenario:<24} in_use {:>9} B  peak {:>9} B  \
+                      slab {:>7} B",
+                     pool.bytes_in_use(), pool.peak_bytes(),
+                     pool.slab_bytes());
+            // engines drop here; the pool (kept for gauge export below)
+            // retains only its shelves and the run's high-water marks
+            pools.push(pool);
+        }
+    }
+    plog.flush()?;
+
     println!("\nCSV series: out/table1_memory.csv out/table2_memory.csv \
               out/max_batch.csv out/qstate_memory.csv out/comm_wire.csv \
-              out/step_buffers.csv");
+              out/step_buffers.csv out/pool_occupancy.csv");
 
     // ---- telemetry export: the byte tables as standing gauges -----------
     // This bench is pure accounting arithmetic (no timed sections), so
@@ -306,6 +389,13 @@ fn main() -> anyhow::Result<()> {
                         wire as u64);
                 }
             }
+        }
+        // live pool-occupancy gauges: `mem/pool_bytes{,_peak}` and the
+        // per-tag set, folded across the scenarios above (a gauge's
+        // recorded peak is the max over exports) — the CI regression
+        // gate budgets `mem/pool_bytes_peak`
+        for pool in &pools {
+            pool.export_gauges(&mut reg);
         }
         sm3::telemetry::with_bench_registry(|r| r.merge(&reg));
         write_bench_json("bench_memory", quick, "out/BENCH_memory.json")?;

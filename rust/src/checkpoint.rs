@@ -403,7 +403,8 @@ mod tests {
         }
         // restore into a fresh pipeline; trajectories must not diverge
         let mut fresh = build();
-        fresh.load_state(loaded.into_iter().map(|(_, t, _)| t).collect());
+        fresh.load_state(loaded.into_iter().map(|(_, t, _)| t).collect())
+            .unwrap();
         let mut pb = params.clone();
         for _ in 0..2 {
             let grads: Vec<Tensor> = specs
@@ -418,6 +419,77 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
             }
         }
+    }
+
+    /// ISSUE 9 acceptance: a checkpoint whose stitched split-leaf slot
+    /// carries the wrong geometry must surface an `anyhow` error naming
+    /// the leaf and the expected element count — not panic — and must do
+    /// so through a real `SM3CKPT2` file, exactly the path the trainer's
+    /// restore takes.
+    #[test]
+    fn malformed_stitched_geometry_is_an_error_not_a_panic() {
+        use crate::optim::{OptimSpec, Optimizer, ParamSpec};
+        // `emb` dominates the total, so the IntraLeaf default splits it
+        // across the 4 workers; `b` stays whole.
+        let specs = vec![ParamSpec::new("emb", &[4096]),
+                        ParamSpec::new("b", &[64])];
+        let build = || {
+            OptimSpec::named("adagrad").unwrap()
+                .threads(4)
+                .build(&specs)
+                .unwrap()
+        };
+        let mut opt = build();
+        let mut rng = Rng::new(17);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        opt.step(&mut params, &grads, 0.1);
+        // save exactly the way the trainer does (scalar slots f32)
+        let dtype = opt.state_dtype();
+        let named: Vec<(String, Tensor, StateDtype)> = opt
+            .state()
+            .into_iter()
+            .map(|(leaf, slot, t)| {
+                let tag = if t.len() <= 1 { StateDtype::F32 } else { dtype };
+                (format!("opt/{leaf}/{slot}"), t, tag)
+            })
+            .collect();
+        let entries: Vec<(String, &Tensor, StateDtype)> = named
+            .iter()
+            .map(|(n, t, d)| (n.clone(), t, *d))
+            .collect();
+        let path = tmpfile("malformed_stitch.ckpt");
+        save_v2(&path, &entries).unwrap();
+        let mut loaded = load_tagged(&path).unwrap();
+        assert_eq!(loaded.len(), entries.len());
+        // tamper: swap the stitched 4096-element slot for a 7-element
+        // tensor. The tensor COUNT stays right, so the fast pre-count
+        // check passes and the per-slot geometry ensure must fire.
+        let idx = loaded
+            .iter()
+            .position(|(_, t, _)| t.len() == specs[0].numel())
+            .expect("stitched emb slot present in checkpoint");
+        loaded[idx].1 = Tensor::zeros(&[7]);
+        let mut fresh = build();
+        let err = fresh
+            .load_state(loaded.into_iter().map(|(_, t, _)| t).collect())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("split leaf"), "unexpected error: {err}");
+        assert!(err.contains("emb"), "error must name the leaf: {err}");
+        assert!(err.contains("4096"),
+                "error must name the expected layout: {err}");
+        // and the wrong-count shape still fails fast with the layout error
+        let mut fresh2 = build();
+        let err2 = fresh2.load_state(Vec::new()).unwrap_err().to_string();
+        assert!(err2.contains("state layout mismatch"),
+                "unexpected error: {err2}");
     }
 
     /// SM3CKPT1 → SM3CKPT2 cross-version round-trip: a state saved v1

@@ -50,6 +50,7 @@ use super::ring::{self, Phase, RankBufs, WireScratch};
 use super::transport::{self, InprocTransport, Transport, TransportKind};
 use super::{check_comm_chunk, TimingModel, DEFAULT_COMM_CHUNK};
 use crate::optim::{Backend, ParamSpec, StateDtype};
+use crate::pool::{Pool, PoolBuf, Tag};
 use crate::telemetry::{self, Counter, Gauge, Probe};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
@@ -151,10 +152,12 @@ pub struct CommEngine {
     /// (bitwise identical across backends — DESIGN.md §13); pack stays a
     /// plain memcpy in every backend
     backend: Backend,
-    /// per-rank flat gradient staging buffers (empty when ranks == 1)
-    bufs: Vec<Vec<f32>>,
-    /// per-rank error-feedback residuals (empty at f32 or ranks == 1)
-    residual: Vec<Vec<f32>>,
+    /// per-rank flat gradient staging buffers (empty when ranks == 1);
+    /// leased from the pool under `Tag::CommFlat` when one is given
+    bufs: Vec<PoolBuf<f32>>,
+    /// per-rank error-feedback residuals (empty at f32 or ranks == 1);
+    /// `Tag::CommResidual` leases when pooled
+    residual: Vec<PoolBuf<f32>>,
     /// per-thread wire scratch (the caller-side persistent slab(s))
     scratch: Vec<WireScratch>,
     /// the bucketed schedule (one bucket ⇒ the PR 5 monolith)
@@ -186,6 +189,17 @@ impl CommEngine {
         Self::with_lens_opts(lens, ranks, opts)
     }
 
+    /// Build an engine whose staging buffers, residuals, wire scratch,
+    /// and transport slabs are all leased from `pool` (tags
+    /// `CommFlat`/`CommResidual`/`CommWire`/`TransportSlot`). Bitwise
+    /// identical to [`CommEngine::with_opts`] — the pool only changes
+    /// where the bytes live.
+    pub fn with_opts_in(specs: &[ParamSpec], ranks: usize, opts: CommOpts,
+                        pool: &Pool) -> Result<Self> {
+        let lens: Vec<usize> = specs.iter().map(ParamSpec::numel).collect();
+        Self::build(lens, ranks, opts, Some(pool))
+    }
+
     /// Core constructor over raw per-leaf flat lengths (PR 5 knobs).
     pub fn with_lens(lens: Vec<usize>, ranks: usize, dtype: StateDtype,
                      chunk: usize, threads: usize) -> Result<Self> {
@@ -197,6 +211,11 @@ impl CommEngine {
     /// Core constructor over raw per-leaf flat lengths and full options.
     pub fn with_lens_opts(lens: Vec<usize>, ranks: usize, opts: CommOpts)
                           -> Result<Self> {
+        Self::build(lens, ranks, opts, None)
+    }
+
+    fn build(lens: Vec<usize>, ranks: usize, opts: CommOpts,
+             pool: Option<&Pool>) -> Result<Self> {
         ensure!(ranks >= 1, "comm engine needs at least one rank");
         ensure!(opts.threads >= 1, "comm_threads must be >= 1 (1 = serial)");
         check_comm_chunk(opts.chunk)?;
@@ -204,16 +223,23 @@ impl CommEngine {
         let plan =
             Arc::new(BucketPlan::build(&lens, ranks, opts.dtype,
                                        opts.buckets)?);
+        let flat = |tag: Tag| match pool {
+            Some(p) => p.take_f32(tag, total),
+            None => PoolBuf::from_vec(tag, vec![0.0f32; total]),
+        };
         let (bufs, residual, scratch) = if ranks > 1 {
             (
-                (0..ranks).map(|_| vec![0.0f32; total]).collect(),
+                (0..ranks).map(|_| flat(Tag::CommFlat)).collect(),
                 if opts.dtype != StateDtype::F32 {
-                    (0..ranks).map(|_| vec![0.0f32; total]).collect()
+                    (0..ranks).map(|_| flat(Tag::CommResidual)).collect()
                 } else {
                     Vec::new()
                 },
                 (0..opts.threads)
-                    .map(|_| WireScratch::new(opts.chunk))
+                    .map(|_| match pool {
+                        Some(p) => WireScratch::new_in(p, opts.chunk),
+                        None => WireScratch::new(opts.chunk),
+                    })
                     .collect::<Vec<_>>(),
             )
         } else {
@@ -221,10 +247,11 @@ impl CommEngine {
         };
         let channel = if ranks > 1 && opts.transport == TransportKind::Inproc
         {
-            Some(Arc::new(InprocTransport::new(
-                ranks,
-                transport::message_cap(opts.chunk),
-            )))
+            let cap = transport::message_cap(opts.chunk);
+            Some(Arc::new(match pool {
+                Some(p) => InprocTransport::new_in(p, ranks, cap),
+                None => InprocTransport::new(ranks, cap),
+            }))
         } else {
             None
         };
@@ -248,14 +275,15 @@ impl CommEngine {
             timing: TimingModel::default(),
         };
         if opts.overlap && ranks > 1 {
-            eng.start_worker()?;
+            eng.start_worker(pool.cloned())?;
         }
         Ok(eng)
     }
 
     /// Spawn the persistent hop worker and publish the (stable) rank
-    /// buffer pointers it drives. Called once, at construction.
-    fn start_worker(&mut self) -> Result<()> {
+    /// buffer pointers it drives. Called once, at construction. The
+    /// worker's own wire slab leases from `pool` when one is given.
+    fn start_worker(&mut self, pool: Option<Pool>) -> Result<()> {
         let shared = Arc::new(HopShared {
             cmd: Mutex::new(HopCmd::Idle),
             cv: Condvar::new(),
@@ -272,7 +300,7 @@ impl CommEngine {
         let handle = std::thread::Builder::new()
             .name("sm3-comm-hop".into())
             .spawn(move || {
-                hop_worker_loop(ws, wb, plan, channel, dtype, chunk)
+                hop_worker_loop(ws, wb, plan, channel, dtype, chunk, pool)
             })
             .map_err(|e| anyhow::anyhow!("spawn comm hop worker: {e}"))?;
         self.shared_bufs = Some(bufs);
@@ -626,7 +654,7 @@ impl CommEngine {
             return;
         }
         let threads = self.threads;
-        let mut buckets: Vec<Vec<(&mut Vec<f32>, &mut Vec<f32>)>> =
+        let mut buckets: Vec<Vec<(&mut PoolBuf<f32>, &mut PoolBuf<f32>)>> =
             (0..threads).map(|_| Vec::new()).collect();
         for (r, (b, q)) in self
             .bufs
@@ -659,7 +687,7 @@ impl CommEngine {
         self.residual
             .iter()
             .enumerate()
-            .map(|(r, q)| (r, Tensor::from_vec(&[q.len()], q.clone())))
+            .map(|(r, q)| (r, Tensor::from_vec(&[q.len()], q.to_vec())))
             .collect()
     }
 
@@ -705,8 +733,11 @@ impl Drop for CommEngine {
 fn hop_worker_loop(shared: Arc<HopShared>, bufs: Arc<RankBufs>,
                    plan: Arc<BucketPlan>,
                    channel: Option<Arc<InprocTransport>>,
-                   dtype: StateDtype, chunk: usize) {
-    let mut scratch = WireScratch::new(chunk);
+                   dtype: StateDtype, chunk: usize, pool: Option<Pool>) {
+    let mut scratch = match &pool {
+        Some(p) => WireScratch::new_in(p, chunk),
+        None => WireScratch::new(chunk),
+    };
     loop {
         let cmd = {
             let mut g = shared.cmd.lock().unwrap();

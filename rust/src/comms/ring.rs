@@ -37,6 +37,7 @@ use super::transport::Transport;
 use super::wire_bytes_for;
 use crate::optim::qstate::codec;
 use crate::optim::{Backend, StateDtype};
+use crate::pool::{Pool, PoolBuf, Tag};
 
 /// Which operation a schedule step applies to its regions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -159,33 +160,50 @@ impl Schedule {
 /// `optim::parallel`).
 pub struct WireScratch {
     /// staging copy (finalize / error-feedback sum)
-    pub stage: Vec<f32>,
+    pub stage: PoolBuf<f32>,
     /// decoded wire values
-    pub decode: Vec<f32>,
+    pub decode: PoolBuf<f32>,
     /// q8 per-block scale fields
-    pub scales: Vec<f32>,
+    pub scales: PoolBuf<f32>,
     /// q8 codes
-    pub codes: Vec<u8>,
+    pub codes: PoolBuf<u8>,
     /// bf16 wire words
-    pub half: Vec<u16>,
+    pub half: PoolBuf<u16>,
     /// serialized outbound wire message (transport sends)
-    pub wire_out: Vec<u8>,
+    pub wire_out: PoolBuf<u8>,
     /// received wire message (transport recvs)
-    pub wire_in: Vec<u8>,
+    pub wire_in: PoolBuf<u8>,
 }
 
 impl WireScratch {
-    /// Scratch for tiles of at most `chunk` elements.
+    /// Scratch for tiles of at most `chunk` elements, on the plain heap
+    /// (tests, standalone executors).
     pub fn new(chunk: usize) -> Self {
         let cap = super::transport::message_cap(chunk);
         Self {
-            stage: vec![0.0; chunk],
-            decode: vec![0.0; chunk],
-            scales: vec![0.0; codec::q8_blocks(chunk)],
-            codes: vec![0; chunk],
-            half: vec![0; chunk],
-            wire_out: vec![0; cap],
-            wire_in: vec![0; cap],
+            stage: PoolBuf::from_vec(Tag::CommWire, vec![0.0; chunk]),
+            decode: PoolBuf::from_vec(Tag::CommWire, vec![0.0; chunk]),
+            scales: PoolBuf::from_vec(Tag::CommWire,
+                                      vec![0.0; codec::q8_blocks(chunk)]),
+            codes: PoolBuf::from_vec(Tag::CommWire, vec![0; chunk]),
+            half: PoolBuf::from_vec(Tag::CommWire, vec![0; chunk]),
+            wire_out: PoolBuf::from_vec(Tag::CommWire, vec![0; cap]),
+            wire_in: PoolBuf::from_vec(Tag::CommWire, vec![0; cap]),
+        }
+    }
+
+    /// Like [`WireScratch::new`], leasing every buffer from `pool` under
+    /// [`Tag::CommWire`] (bitwise identical — placement only).
+    pub fn new_in(pool: &Pool, chunk: usize) -> Self {
+        let cap = super::transport::message_cap(chunk);
+        Self {
+            stage: pool.take_f32(Tag::CommWire, chunk),
+            decode: pool.take_f32(Tag::CommWire, chunk),
+            scales: pool.take_f32(Tag::CommWire, codec::q8_blocks(chunk)),
+            codes: pool.take_u8(Tag::CommWire, chunk),
+            half: pool.take_u16(Tag::CommWire, chunk),
+            wire_out: pool.take_u8(Tag::CommWire, cap),
+            wire_in: pool.take_u8(Tag::CommWire, cap),
         }
     }
 
@@ -335,10 +353,16 @@ unsafe impl Sync for RankBufs {}
 
 impl RankBufs {
     /// Capture the (stable) data pointers of every rank's flat buffer.
-    pub fn new(bufs: &mut [Vec<f32>]) -> Self {
-        let len = bufs.first().map_or(0, Vec::len);
+    pub fn new(bufs: &mut [PoolBuf<f32>]) -> Self {
+        let len = bufs.first().map_or(0, |b| b.len());
         debug_assert!(bufs.iter().all(|b| b.len() == len));
-        Self { ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(), len }
+        Self {
+            ptrs: bufs
+                .iter_mut()
+                .map(|b| b.as_mut_slice().as_mut_ptr())
+                .collect(),
+            len,
+        }
     }
 
     /// # Safety
@@ -408,7 +432,7 @@ pub unsafe fn run_step_raw(bufs: &RankBufs, phase: Phase, regions: &[Region],
 /// Execute one schedule step's regions with `threads` workers, bitwise
 /// identical at any thread count.
 #[allow(clippy::too_many_arguments)]
-pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
+pub fn run_step_threaded(bufs: &mut [PoolBuf<f32>], phase: Phase,
                          regions: &[Region], dtype: StateDtype,
                          chunk: usize, backend: Backend, threads: usize,
                          scratch: &mut [WireScratch],
@@ -444,7 +468,7 @@ pub fn run_step_threaded(bufs: &mut [Vec<f32>], phase: Phase,
 /// Execute one schedule step serially with safe split borrows (the
 /// steady-state allocation-free path; bitwise identical to
 /// [`run_step_threaded`]).
-pub fn run_step_serial(bufs: &mut [Vec<f32>], phase: Phase,
+pub fn run_step_serial(bufs: &mut [PoolBuf<f32>], phase: Phase,
                        regions: &[Region], dtype: StateDtype, chunk: usize,
                        backend: Backend, scratch: &mut WireScratch,
                        transport: Option<&dyn Transport>)

@@ -34,6 +34,7 @@
 use super::ring::{Phase, WireScratch};
 use crate::optim::qstate::codec;
 use crate::optim::{Backend, StateDtype};
+use crate::pool::{Pool, PoolBuf, Tag};
 use anyhow::{bail, ensure, Result};
 use std::sync::Mutex;
 
@@ -123,9 +124,10 @@ pub trait Transport: Send + Sync {
     fn recv(&self, src: usize, dst: usize, out: &mut [u8]) -> Result<usize>;
 }
 
-/// One edge's preallocated message slab.
+/// One edge's preallocated message slab ([`Tag::TransportSlot`] when
+/// the transport is pool-backed).
 struct EdgeSlot {
-    buf: Vec<u8>,
+    buf: PoolBuf<u8>,
     len: usize,
     full: bool,
 }
@@ -145,7 +147,27 @@ impl InprocTransport {
     pub fn new(ranks: usize, cap: usize) -> Self {
         let edges = (0..ranks)
             .map(|_| {
-                Mutex::new(EdgeSlot { buf: vec![0u8; cap], len: 0, full: false })
+                Mutex::new(EdgeSlot {
+                    buf: PoolBuf::from_vec(Tag::TransportSlot,
+                                           vec![0u8; cap]),
+                    len: 0,
+                    full: false,
+                })
+            })
+            .collect();
+        Self { ranks, cap, edges }
+    }
+
+    /// [`InprocTransport::new`] with the edge slabs leased from `pool`
+    /// under [`Tag::TransportSlot`] (bitwise identical — placement only).
+    pub fn new_in(pool: &Pool, ranks: usize, cap: usize) -> Self {
+        let edges = (0..ranks)
+            .map(|_| {
+                Mutex::new(EdgeSlot {
+                    buf: pool.take_u8(Tag::TransportSlot, cap),
+                    len: 0,
+                    full: false,
+                })
             })
             .collect();
         Self { ranks, cap, edges }

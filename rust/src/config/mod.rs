@@ -189,6 +189,12 @@ pub struct TrainConfig {
     /// identical (DESIGN.md §13). The default tracks the `simd` cargo
     /// feature.
     pub kernel_backend: Backend,
+    /// route every steady-state buffer (optimizer slots/scratch, comm
+    /// staging, wire slabs, transport edges, checkpoint stitches)
+    /// through the size-classed memory pool (split path; DESIGN.md
+    /// §16). `false` keeps the same lease API and occupancy ledger but
+    /// skips free-list recycling. Bitwise identical on or off.
+    pub pool: bool,
     /// enable the telemetry subsystem (split path): per-phase span
     /// timings widen the step CSV (grad/opt/comm pack/hop/unpack/ckpt
     /// ms columns) and live memory gauges are sampled at step
@@ -226,6 +232,7 @@ impl Default for TrainConfig {
             comm_overlap: false,
             comm_transport: TransportKind::default(),
             kernel_backend: Backend::default(),
+            pool: true,
             telemetry: false,
             telemetry_jsonl: None,
             seed: 0,
@@ -314,7 +321,7 @@ const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
     "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
     "comm_threads", "comm_buckets", "comm_overlap", "comm_transport",
-    "kernel_backend", "telemetry", "telemetry_jsonl", "seed",
+    "kernel_backend", "pool", "telemetry", "telemetry_jsonl", "seed",
     "artifacts_dir", "out_dir",
 ];
 
@@ -482,6 +489,16 @@ impl TrainConfig {
             kernel_backend: Backend::parse(&get_str(
                 &train_tbl, "kernel_backend", d.kernel_backend.name()))
                 .context("[train] kernel_backend")?,
+            pool: match train_tbl.get("pool") {
+                // strict: `pool = "off"` must error, not silently keep
+                // pooling (same contract as comm_overlap/telemetry)
+                None => d.pool,
+                Some(v) => match v.as_bool() {
+                    Some(b) => b,
+                    None => bail!("[train] pool must be a boolean, \
+                                   got {v:?}"),
+                },
+            },
             telemetry: match train_tbl.get("telemetry") {
                 // strict: `telemetry = "on"` must error, not silently
                 // run unmeasured
@@ -886,6 +903,24 @@ warmup_steps = 40
         let msg = err.to_string();
         assert!(msg.contains("comm_bukets") && msg.contains("comm_buckets"),
                 "{msg}");
+    }
+
+    /// ISSUE 9: the memory-pool knob defaults on, parses strictly, and
+    /// a typo'd key names it.
+    #[test]
+    fn pool_knob_parses_strictly_and_defaults_on() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert!(cfg.pool, "pool must default on");
+        let cfg =
+            TrainConfig::from_toml("[train]\npool = false\n").unwrap();
+        assert!(!cfg.pool);
+        // strict boolean — `pool = "off"` must error, not silently pool
+        assert!(TrainConfig::from_toml("[train]\npool = \"off\"\n")
+            .is_err());
+        let err =
+            TrainConfig::from_toml("[train]\npol = true\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pol") && msg.contains("pool"), "{msg}");
     }
 
     /// ISSUE 6 tentpole: the kernel backend parses, defaults to the

@@ -9,6 +9,7 @@ use crate::data::{source_for_model, translation::trim_ref, BatchSource};
 use crate::json::Json;
 use crate::metrics::{corpus_bleu, Ema};
 use crate::optim::{schedule::Schedule, Optimizer, StateDtype};
+use crate::pool::Pool;
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
 use crate::telemetry::{self, Gauge, Probe};
@@ -98,6 +99,11 @@ enum Engine {
         /// the gradient exchange (comms subsystem, DESIGN.md §12):
         /// persistent ring buffers + wire codec + error feedback
         comms: CommEngine,
+        /// the memory-pool runtime every steady-state buffer above
+        /// leases from (DESIGN.md §16). `train.pool = false` swaps in
+        /// [`Pool::disabled`] — same leases, no recycling — which is
+        /// bitwise identical and keeps the occupancy ledger live.
+        pool: Pool,
     },
     Fused {
         train_art: Arc<Artifact>,
@@ -165,15 +171,23 @@ impl Trainer {
                 // against the model's parameter list. Results stay
                 // bitwise identical at any thread count, tile size, and
                 // dtype (optim::parallel / optim::transform).
+                // every steady-state buffer below (optimizer slots and
+                // scratch, comm staging/residuals/wire slabs, transport
+                // edges) leases from this pool, so its live ledger IS
+                // the run's steady-state footprint. `pool = false`
+                // keeps the ledger but skips recycling.
+                let pool =
+                    if cfg.pool { Pool::new() } else { Pool::disabled() };
                 let opt = cfg
                     .optim_spec()?
+                    .pool(&pool)
                     .build(&specs)
                     .context("building the optimizer from [optim]")?;
                 // the gradient exchange: buffers, residuals, the
                 // bucketed ring schedule, the hop transport, and (when
                 // comm_overlap is on) the dedicated hop-worker thread
                 // are all sized/spawned once, here
-                let mut comms = CommEngine::with_opts(
+                let mut comms = CommEngine::with_opts_in(
                     &specs, cfg.workers,
                     CommOpts {
                         dtype: cfg.comm_dtype,
@@ -182,13 +196,14 @@ impl Trainer {
                         buckets: cfg.comm_buckets,
                         overlap: cfg.comm_overlap,
                         transport: cfg.comm_transport,
-                    })
+                    },
+                    &pool)
                     .context("building the comm engine from [train]")?;
                 // the optimizer side gets its backend via optim_spec();
                 // the wire side is set here so both halves of the split
                 // engine run the same kernels
                 comms.set_backend(cfg.kernel_backend);
-                Engine::Split { grad_art, params, opt, comms }
+                Engine::Split { grad_art, params, opt, comms, pool }
             }
             ExecMode::Fused => {
                 let name = format!("{}_train_{}", cfg.model, cfg.optim.name);
@@ -262,6 +277,15 @@ impl Trainer {
         }
     }
 
+    /// Introspect the memory pool every steady-state buffer leases
+    /// from (split mode only).
+    pub fn pool(&self) -> Option<&Pool> {
+        match &self.engine {
+            Engine::Split { pool, .. } => Some(pool),
+            Engine::Fused { .. } => None,
+        }
+    }
+
     /// Introspect the gradient-exchange engine (split mode only).
     pub fn comms(&self) -> Option<&CommEngine> {
         match &self.engine {
@@ -302,7 +326,7 @@ impl Trainer {
         self.step += 1;
         let lr = self.schedule.lr(self.step) as f32;
         match &mut self.engine {
-            Engine::Split { grad_art, params, opt, comms } => {
+            Engine::Split { grad_art, params, opt, comms, pool } => {
                 // per-worker gradient (averaged over grad_accum microbatches)
                 let mut worker_grads: Vec<Vec<Tensor>> =
                     Vec::with_capacity(self.cfg.workers);
@@ -415,6 +439,14 @@ impl Trainer {
                     };
                     telemetry::gauge(Gauge::StepScratchBytes,
                                      scratch as u64);
+                    // the pool's live ledger: with every steady-state
+                    // owner migrated, this equals the sum of the static
+                    // accountant's figures (enforced in pool/memory
+                    // tests across the optimizer × dtype × comm grid)
+                    telemetry::gauge(Gauge::PoolBytes,
+                                     pool.bytes_in_use() as u64);
+                    telemetry::gauge(Gauge::PoolBytesPeak,
+                                     pool.peak_bytes() as u64);
                 }
                 Ok(loss_sum / self.cfg.workers as f64)
             }

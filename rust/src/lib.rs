@@ -38,7 +38,14 @@
 //!   [`telemetry::Registry`], and exported as per-phase `StepRecord`
 //!   columns, an optional JSONL event stream, and the benches'
 //!   `BENCH_*.json` perf trajectory — bitwise-invisible to training
-//!   whether enabled or disabled.
+//!   whether enabled or disabled. Every steady-state buffer behind
+//!   those subsystems — optimizer-state slots, kernel scratch, comm
+//!   flat/wire/residual slabs, transport edge slots, checkpoint stitch
+//!   buffers — is leased from the size-classed [`pool`] runtime
+//!   (DESIGN.md §16), whose live per-tag occupancy the static
+//!   [`memory`] accountant must equal at step boundaries (enforced in
+//!   tests), making peak-memory claims measured facts rather than
+//!   hand-maintained mirrors.
 //!
 //! See `DESIGN.md` for the experiment index (every paper table/figure →
 //! bench target) and `EXPERIMENTS.md` for measured results. This offline
@@ -59,6 +66,7 @@ pub mod json;
 pub mod memory;
 pub mod metrics;
 pub mod optim;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

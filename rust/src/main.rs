@@ -43,6 +43,7 @@ fn commands() -> Vec<Command> {
             .option("comm-transport", "hop-edge payload path: direct | inproc (bitwise-identical results; default from SM3_COMM_TRANSPORT)")
             .flag("comm-overlap", "stage bucket k+1 while bucket k's ring hops are in flight (split path; bitwise-identical results)")
             .option("kernel-backend", "tile-kernel implementation: scalar | simd (split path; bitwise-identical results)")
+            .flag("no-pool", "bypass the memory-pool runtime (plain heap buffers; split path; bitwise-identical results)")
             .option("grad-accum", "microbatches per step")
             .option("seed", "data/init RNG seed")
             .option("artifacts", "artifacts directory (default: artifacts)")
@@ -60,7 +61,14 @@ fn commands() -> Vec<Command> {
             .option("artifacts", "artifacts directory"),
         Command::new("bench-check",
                      "validate BENCH_*.json telemetry documents (positional \
-                      file paths; exits non-zero on schema violations)"),
+                      file paths; exits non-zero on schema violations)")
+            .option("baseline",
+                    "budget file (ci/BENCH_memory_baseline.json): gauge \
+                     peaks in the checked documents must stay within the \
+                     committed ceilings")
+            .option("max-regress",
+                    "extra headroom over each baseline ceiling, in percent \
+                     (default 10)"),
     ]
 }
 
@@ -161,6 +169,9 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
     }
     if let Some(b) = args.opt("kernel-backend") {
         cfg.kernel_backend = sm3::optim::Backend::parse(b)?;
+    }
+    if args.has_flag("no-pool") {
+        cfg.pool = false;
     }
     if let Some(g) = args.opt_parse::<u64>("grad-accum")? {
         cfg.grad_accum = g;
@@ -362,34 +373,103 @@ fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
 /// Validate `BENCH_*.json` telemetry documents (the CI gate behind
 /// `make bench-telemetry`): every file must parse as JSON and satisfy
 /// `telemetry::validate_bench_doc` — schema tag, internally consistent
-/// span stats, numeric counters/gauges.
+/// span stats, numeric counters/gauges. With `--baseline`, gauge peaks
+/// are additionally held to the committed ceilings (the peak-memory
+/// regression gate): a budgeted gauge present in a checked document
+/// must not exceed `ceiling × (1 + max_regress/100)`; documents that
+/// don't carry a budgeted gauge skip that budget gracefully.
 fn cmd_bench_check(args: &sm3::cli::Args) -> Result<()> {
     if args.positional.is_empty() {
         bail!("bench-check needs at least one BENCH_*.json path");
     }
+    let budgets = match args.opt("baseline") {
+        Some(path) => Some(load_bench_baseline(path)?),
+        None => None,
+    };
+    let tol = args.opt_parse::<f64>("max-regress")?.unwrap_or(10.0);
+    if tol < 0.0 || !tol.is_finite() {
+        bail!("--max-regress must be a non-negative percentage");
+    }
     let mut bad = 0usize;
     for path in &args.positional {
-        let verdict = std::fs::read_to_string(path)
+        let doc = std::fs::read_to_string(path)
             .map_err(|e| format!("read error: {e}"))
             .and_then(|text| {
                 sm3::json::Json::parse(&text)
                     .map_err(|e| format!("parse error: {e}"))
-            })
-            .and_then(|doc| {
-                sm3::telemetry::validate_bench_doc(&doc)
             });
+        let verdict = doc.as_ref().map_err(Clone::clone).and_then(
+            sm3::telemetry::validate_bench_doc);
         match verdict {
             Ok(()) => println!("  {path}: ok"),
             Err(e) => {
                 println!("  {path}: INVALID — {e}");
                 bad += 1;
+                continue;
+            }
+        }
+        let Some(budgets) = &budgets else { continue };
+        let doc = doc.expect("validated above");
+        let gauges = doc.get("gauges").expect("validated above");
+        for (gauge, ceiling) in budgets {
+            let Some(peak) =
+                gauges.get(gauge).and_then(|g| g.get("peak"))
+                      .and_then(sm3::json::Json::as_f64)
+            else {
+                // e.g. a timing bench with no pool gauge: skip, don't
+                // fail — the memory bench is the gate's real subject
+                println!("  {path}: gauge `{gauge}` absent — budget \
+                          skipped");
+                continue;
+            };
+            let limit = ceiling * (1.0 + tol / 100.0);
+            if peak > limit {
+                println!("  {path}: REGRESSION — `{gauge}` peak {peak} \
+                          exceeds baseline {ceiling} (+{tol}% = {limit})");
+                bad += 1;
+            } else {
+                println!("  {path}: `{gauge}` peak {peak} within \
+                          baseline {ceiling} (+{tol}%)");
             }
         }
     }
     if bad > 0 {
-        bail!("{bad} invalid telemetry document(s)");
+        bail!("{bad} invalid or over-budget telemetry document(s)");
     }
     Ok(())
+}
+
+/// Parse the committed baseline file: `{schema, budgets: {gauge: max}}`.
+fn load_bench_baseline(
+    path: &str,
+) -> Result<std::collections::BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading baseline {path}: {e}"))?;
+    let doc = sm3::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing baseline {path}: {e}"))?;
+    match doc.get("schema").and_then(sm3::json::Json::as_str) {
+        Some("sm3-bench-baseline-v1") => {}
+        other => bail!("baseline {path}: unknown schema tag {other:?}"),
+    }
+    let budgets = doc
+        .get("budgets")
+        .and_then(sm3::json::Json::as_object)
+        .ok_or_else(|| {
+            anyhow::anyhow!("baseline {path}: missing object `budgets`")
+        })?;
+    let mut out = std::collections::BTreeMap::new();
+    for (gauge, v) in budgets {
+        let ceiling = v
+            .as_f64()
+            .filter(|c| c.is_finite() && *c >= 0.0)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "baseline {path}: budget `{gauge}` must be a \
+                     non-negative number, got {v:?}")
+            })?;
+        out.insert(gauge.clone(), ceiling);
+    }
+    Ok(out)
 }
 
 fn cmd_list(args: &sm3::cli::Args) -> Result<()> {

@@ -424,6 +424,212 @@ mod tests {
         }
     }
 
+    /// ISSUE 9 tentpole: the accountant stops being a hand-maintained
+    /// mirror — live pool occupancy must EQUAL the static arithmetic,
+    /// per tag, at every step boundary, for every optimizer × state
+    /// dtype × sharding mode (serial and split). And when the owner
+    /// drops, every lease must come back: occupancy returns to zero.
+    #[test]
+    fn accountant_equals_pool_occupancy_optimizer_grid() {
+        use crate::pool::{Pool, Tag};
+        use crate::tensor::Tensor;
+        let specs = vec![
+            ParamSpec::new("emb", &[100, 16]),
+            ParamSpec::new("w", &[16, 64]),
+            ParamSpec::new("b", &[65]),
+        ];
+        let mut rng = crate::rng::Rng::new(11);
+        let params0: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+            .collect();
+        for name in optim::ALL {
+            for dtype in StateDtype::ALL {
+                for threads in [1usize, 4] {
+                    let label =
+                        format!("{name} @ {dtype:?} x{threads}");
+                    let pool = Pool::new();
+                    let expect =
+                        opt_state_bytes(name, &specs, dtype).unwrap();
+                    let mut opt = optim::OptimSpec::named(name).unwrap()
+                        .state_dtype(dtype)
+                        .threads(threads)
+                        .pool(&pool)
+                        .build(&specs)
+                        .unwrap();
+                    assert_eq!(opt.state_bytes(), expect, "{label}");
+                    assert_eq!(pool.bytes_in_use_tag(Tag::OptState),
+                               expect, "{label}: state at construction");
+                    let mut params = params0.clone();
+                    for step in 0..2 {
+                        opt.step(&mut params, &grads, 0.1);
+                        assert_eq!(pool.bytes_in_use_tag(Tag::OptState),
+                                   expect,
+                                   "{label}: state after step {step}");
+                        assert_eq!(
+                            pool.bytes_in_use_tag(Tag::KernelScratch),
+                            opt.scratch_bytes(),
+                            "{label}: scratch after step {step}");
+                        assert_eq!(pool.bytes_in_use(),
+                                   expect + opt.scratch_bytes(),
+                                   "{label}: total after step {step}");
+                    }
+                    drop(opt);
+                    assert_eq!(pool.bytes_in_use(), 0,
+                               "{label}: leases must all return");
+                }
+            }
+        }
+    }
+
+    /// ISSUE 9 tentpole, comm lane: per-tag pool occupancy equals the
+    /// static comm arithmetic — flat + residual staging under
+    /// `CommFlat`/`CommResidual`, wire slabs + transport slots under
+    /// `CommWire`/`TransportSlot` — across comm dtype × ranks ×
+    /// transport, and returns to zero when the engine drops.
+    #[test]
+    fn accountant_equals_pool_occupancy_comm_grid() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        use crate::pool::{Pool, Tag};
+        let specs = vec![
+            ParamSpec::new("emb", &[33, 7]),
+            ParamSpec::new("w", &[16, 64]),
+            ParamSpec::new("b", &[65]),
+        ];
+        let (chunk, threads) = (64usize, 2usize);
+        for dtype in StateDtype::ALL {
+            for ranks in [1usize, 2, 4] {
+                for transport in TransportKind::ALL {
+                    let label = format!("{dtype:?} x{ranks} {}",
+                                        transport.name());
+                    let pool = Pool::new();
+                    let eng = CommEngine::with_opts_in(
+                        &specs, ranks,
+                        CommOpts { dtype, chunk, threads, buckets: 2,
+                                   overlap: false, transport },
+                        &pool).unwrap();
+                    let buffers = comm_buffer_bytes(&specs, ranks, dtype);
+                    let scratch = comm_scratch_bytes(
+                        ranks, chunk, threads, false, transport);
+                    assert_eq!(pool.bytes_in_use_tag(Tag::CommFlat)
+                               + pool.bytes_in_use_tag(Tag::CommResidual),
+                               buffers, "{label}: staging buffers");
+                    assert_eq!(pool.bytes_in_use_tag(Tag::CommWire)
+                               + pool.bytes_in_use_tag(Tag::TransportSlot),
+                               scratch, "{label}: wire scratch");
+                    assert_eq!(pool.bytes_in_use(), buffers + scratch,
+                               "{label}: total");
+                    drop(eng);
+                    assert_eq!(pool.bytes_in_use(), 0,
+                               "{label}: leases must all return");
+                }
+            }
+        }
+    }
+
+    /// Overlap mode pins one extra wire slab for the hop worker — the
+    /// worker leases it on its own thread, so occupancy converges to
+    /// the static figure rather than equaling it synchronously at
+    /// construction return. Bounded wait, then exact.
+    #[test]
+    fn accountant_equals_pool_occupancy_with_overlap_worker() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        use crate::pool::Pool;
+        let specs = vec![ParamSpec::new("w", &[16, 64]),
+                        ParamSpec::new("b", &[65])];
+        let (ranks, chunk, threads) = (4usize, 64usize, 2usize);
+        let pool = Pool::new();
+        let eng = CommEngine::with_opts_in(
+            &specs, ranks,
+            CommOpts { dtype: StateDtype::Q8, chunk, threads, buckets: 2,
+                       overlap: true, transport: TransportKind::Inproc },
+            &pool).unwrap();
+        let expect = comm_buffer_bytes(&specs, ranks, StateDtype::Q8)
+            + comm_scratch_bytes(ranks, chunk, threads, true,
+                                 TransportKind::Inproc);
+        for _ in 0..2000 {
+            if pool.bytes_in_use() == expect {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.bytes_in_use(), expect,
+                   "overlap worker slab must land in the ledger");
+        drop(eng);
+        assert_eq!(pool.bytes_in_use(), 0, "leases must all return");
+    }
+
+    /// ISSUE 9 satellite: the three-way cross-check at step boundaries
+    /// — static accountant == live pool occupancy, and the thread-local
+    /// counting allocator brackets both (every leased byte is real heap,
+    /// class round-up at most doubles it), with zero steady-state heap
+    /// traffic once the leases are warm. Serial path: the counting
+    /// allocator is thread-local (see `crate::alloc_count`).
+    #[test]
+    fn three_way_accountant_pool_allocator_cross_check() {
+        use crate::pool::{Pool, Tag};
+        use crate::tensor::Tensor;
+        let specs = vec![
+            ParamSpec::new("emb", &[100, 16]),
+            ParamSpec::new("b", &[65]),
+        ];
+        let mut rng = crate::rng::Rng::new(23);
+        for dtype in StateDtype::ALL {
+            // allocate everything that is NOT under test before the
+            // live-bytes baseline
+            let mut params: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let grads: Vec<Tensor> = specs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 1.0, &mut rng))
+                .collect();
+            let expect = opt_state_bytes("adam", &specs, dtype).unwrap();
+            let live0 = crate::alloc_count::thread_live_bytes();
+            let pool = Pool::new();
+            let mut opt = optim::OptimSpec::named("adam").unwrap()
+                .state_dtype(dtype)
+                .pool(&pool)
+                .build(&specs)
+                .unwrap();
+            opt.step(&mut params, &grads, 0.1);
+            // leg 1 == leg 2: static accountant == pool ledger, per tag
+            assert_eq!(pool.bytes_in_use_tag(Tag::OptState), expect,
+                       "{dtype:?}: accountant == pool (state)");
+            assert_eq!(pool.bytes_in_use_tag(Tag::KernelScratch),
+                       opt.scratch_bytes(), "{dtype:?}: scratch ledger");
+            let pooled = pool.bytes_in_use();
+            assert_eq!(pooled, expect + opt.scratch_bytes(),
+                       "{dtype:?}: accountant == pool (total)");
+            // leg 3: the counting allocator brackets the ledger — every
+            // pooled byte is live heap (lower bound), and size-class
+            // round-up at most doubles each lease, plus a small
+            // structural slack (Box/Vec headers, store indices)
+            let delta = (crate::alloc_count::thread_live_bytes()
+                         - live0) as usize;
+            assert!(delta >= pooled,
+                    "{dtype:?}: allocator {delta} < pool {pooled}");
+            assert!(delta <= 2 * pooled + (64 << 10),
+                    "{dtype:?}: allocator {delta} vs pool {pooled} — \
+                     pooled leases should dominate the live heap");
+            // warm steps lease from shelves, not the system
+            let allocs0 = crate::alloc_count::thread_allocs();
+            for _ in 0..3 {
+                opt.step(&mut params, &grads, 0.1);
+                assert_eq!(pool.bytes_in_use_tag(Tag::OptState), expect,
+                           "{dtype:?}: state stable across steps");
+            }
+            assert_eq!(crate::alloc_count::thread_allocs() - allocs0, 0,
+                       "{dtype:?}: steady-state steps must not touch \
+                        the heap");
+        }
+    }
+
     /// The acceptance line: q8 wire payloads cut all-reduce bytes
     /// ≥ 3.5× (≈ 3.7×) below f32 on the real Transformer-Big inventory.
     #[test]

@@ -11,7 +11,9 @@
 use super::backend::Backend;
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
+use crate::pool::{Pool, PoolBuf, Tag};
 use crate::tensor::Tensor;
+use anyhow::ensure;
 
 const EPS: f32 = 1e-30;
 
@@ -54,11 +56,12 @@ pub struct Adafactor {
     /// (one Adafactor per leaf — never split: the clip is a whole-leaf
     /// reduction) the retained buffers sum to ~2·d floats across
     /// instances, trading resident bytes for allocation-free steps; PR 2
-    /// made the opposite call, this PR's satellite reverses it.
-    scratch: Vec<f32>,
-    mom_buf: Vec<f32>,
-    stat_a: Vec<f32>,
-    stat_b: Vec<f32>,
+    /// made the opposite call, this PR's satellite reverses it. Pooled
+    /// instances lease these under [`Tag::KernelScratch`].
+    scratch: PoolBuf<f32>,
+    mom_buf: PoolBuf<f32>,
+    stat_a: PoolBuf<f32>,
+    stat_b: PoolBuf<f32>,
 }
 
 impl Adafactor {
@@ -71,7 +74,23 @@ impl Adafactor {
     /// leaf-granular — no streaming tile).
     pub fn with_dtype(specs: &[ParamSpec], beta1: f32, beta2: f32,
                       dtype: StateDtype) -> Self {
-        let mut store = QuantizedSlots::new(dtype);
+        Self::build(specs, beta1, beta2, dtype, None)
+    }
+
+    /// [`Adafactor::with_dtype`] with state slots and all working
+    /// scratch leased from `pool` (bitwise identical to the unpooled
+    /// constructor).
+    pub fn with_dtype_in(specs: &[ParamSpec], beta1: f32, beta2: f32,
+                         dtype: StateDtype, pool: &Pool) -> Self {
+        Self::build(specs, beta1, beta2, dtype, Some(pool))
+    }
+
+    fn build(specs: &[ParamSpec], beta1: f32, beta2: f32,
+             dtype: StateDtype, pool: Option<&Pool>) -> Self {
+        let mut store = match pool {
+            Some(p) => QuantizedSlots::new_in(dtype, p.clone()),
+            None => QuantizedSlots::new(dtype),
+        };
         let mut kinds = Vec::with_capacity(specs.len());
         let mut mom_ids = Vec::with_capacity(specs.len());
         for s in specs {
@@ -87,9 +106,13 @@ impl Adafactor {
             }
             mom_ids.push(store.add_zeros(s.numel()));
         }
+        let lease = || match pool {
+            Some(p) => p.take_f32(Tag::KernelScratch, 0),
+            None => PoolBuf::unpooled(Tag::KernelScratch),
+        };
         Self { beta1, beta2, kinds, mom_ids, store,
-               specs: specs.to_vec(), scratch: Vec::new(),
-               mom_buf: Vec::new(), stat_a: Vec::new(), stat_b: Vec::new() }
+               specs: specs.to_vec(), scratch: lease(),
+               mom_buf: lease(), stat_a: lease(), stat_b: lease() }
     }
 
     /// Route the state store's codec lanes through `backend` (bitwise
@@ -119,14 +142,20 @@ impl Optimizer for Adafactor {
         for idx in 0..params.len() {
             let wd = params[idx].data_mut();
             let gd = grads[idx].data();
-            self.store.read_into(self.mom_ids[idx], &mut self.mom_buf);
+            {
+                let (store, id) = (&self.store, self.mom_ids[idx]);
+                self.mom_buf.with_vec(|v| store.read_into(id, v));
+            }
             let mom = &mut self.mom_buf;
             let kind = self.kinds[idx];
             match kind {
                 SlotKind::Factored { vr: vr_id, vc: vc_id, rows, cols } => {
                     let (m, n) = (rows, cols);
-                    self.store.read_into(vr_id, &mut self.stat_a);
-                    self.store.read_into(vc_id, &mut self.stat_b);
+                    {
+                        let store = &self.store;
+                        self.stat_a.with_vec(|v| store.read_into(vr_id, v));
+                        self.stat_b.with_vec(|v| store.read_into(vc_id, v));
+                    }
                     let vr = &mut self.stat_a;
                     let vc = &mut self.stat_b;
                     // update factored stats: row/col means of g² + eps
@@ -149,7 +178,7 @@ impl Optimizer for Adafactor {
                     let vr_mean: f32 = vr.iter().sum::<f32>() / m as f32;
                     // unclipped update into scratch, accumulate RMS
                     self.scratch.clear();
-                    self.scratch.resize(m * n, 0.0);
+                    self.scratch.resize(m * n);
                     let mut sumsq = 0.0f32;
                     for i in 0..m {
                         for j in 0..n {
@@ -171,10 +200,13 @@ impl Optimizer for Adafactor {
                     self.store.write(vc_id, vc);
                 }
                 SlotKind::Full { v: v_id } => {
-                    self.store.read_into(v_id, &mut self.stat_a);
+                    {
+                        let store = &self.store;
+                        self.stat_a.with_vec(|b| store.read_into(v_id, b));
+                    }
                     let v = &mut self.stat_a;
                     self.scratch.clear();
-                    self.scratch.resize(wd.len(), 0.0);
+                    self.scratch.resize(wd.len());
                     let mut sumsq = 0.0f32;
                     for k in 0..wd.len() {
                         v[k] = b2 * v[k] + (1.0 - b2) * (gd[k] * gd[k] + EPS);
@@ -232,23 +264,23 @@ impl Optimizer for Adafactor {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
         // Mismatch diagnostics name the leaf and its slot kind: a restore
         // from a checkpoint written for a different parameter folding
         // (e.g. a rank-3 leaf saved full-v but expected factored) must say
         // *which* leaf and *what* layout was expected, not just "underrun".
         fn take(it: &mut std::vec::IntoIter<Tensor>, leaf: &str,
-                slot: &str, kind: &str, want: usize) -> Tensor {
-            let t = it.next().unwrap_or_else(|| {
-                panic!("adafactor state underrun at leaf {leaf:?} slot \
-                        {slot:?} (leaf layout: {kind})")
-            });
-            assert_eq!(t.len(), want,
-                       "adafactor leaf {leaf:?} slot {slot:?}: checkpoint \
-                        tensor has {} elements, expected {want} (leaf \
-                        layout: {kind})",
-                       t.len());
-            t
+                slot: &str, kind: &str, want: usize)
+                -> anyhow::Result<Tensor> {
+            let t = it.next().ok_or_else(|| anyhow::anyhow!(
+                "adafactor state underrun at leaf {leaf:?} slot {slot:?} \
+                 (leaf layout: {kind})"))?;
+            ensure!(t.len() == want,
+                    "adafactor leaf {leaf:?} slot {slot:?}: checkpoint \
+                     tensor has {} elements, expected {want} (leaf \
+                     layout: {kind})",
+                    t.len());
+            Ok(t)
         }
         let mut it = state.into_iter();
         for i in 0..self.kinds.len() {
@@ -257,26 +289,32 @@ impl Optimizer for Adafactor {
             let expect = kind.describe();
             match kind {
                 SlotKind::Factored { vr, vc, rows, cols } => {
-                    let tr = take(&mut it, &leaf, "vr", &expect, rows);
-                    let tc = take(&mut it, &leaf, "vc", &expect, cols);
+                    let tr = take(&mut it, &leaf, "vr", &expect, rows)?;
+                    let tc = take(&mut it, &leaf, "vc", &expect, cols)?;
                     self.store.write(vr, tr.data());
                     self.store.write(vc, tc.data());
                 }
                 SlotKind::Full { v } => {
                     let n = self.store.slot_len(v);
-                    let tv = take(&mut it, &leaf, "v", &expect, n);
+                    let tv = take(&mut it, &leaf, "v", &expect, n)?;
                     self.store.write(v, tv.data());
                 }
             }
             let tm = take(&mut it, &leaf, "mom", &expect,
-                          self.specs[i].numel());
-            assert_eq!(tm.shape(), self.specs[i].shape.as_slice(),
-                       "adafactor leaf {leaf:?} momentum: checkpoint shape \
-                        {:?} != parameter shape {:?} (leaf layout: {expect})",
-                       tm.shape(), self.specs[i].shape);
+                          self.specs[i].numel())?;
+            ensure!(tm.shape() == self.specs[i].shape.as_slice(),
+                    "adafactor leaf {leaf:?} momentum: checkpoint shape \
+                     {:?} != parameter shape {:?} (leaf layout: {expect})",
+                    tm.shape(), self.specs[i].shape);
             self.store.write(self.mom_ids[i], tm.data());
         }
-        assert!(it.next().is_none(), "adafactor state overrun");
+        ensure!(it.next().is_none(), "adafactor state overrun");
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        (self.scratch.len() + self.mom_buf.len() + self.stat_a.len()
+         + self.stat_b.len()) * 4
     }
 }
 
@@ -317,18 +355,20 @@ mod tests {
         assert_eq!(opt.factored_dims(0), None);
     }
 
-    /// Regression (ISSUE 2 satellite): a mismatched restore must name the
-    /// offending leaf and its expected slot layout, so a checkpoint saved
-    /// for a different folding is diagnosable.
+    /// Regression (ISSUE 2 satellite; ISSUE 9 turned the panic into an
+    /// error): a mismatched restore must name the offending leaf and its
+    /// expected slot layout, so a checkpoint saved for a different
+    /// folding is diagnosable.
     #[test]
-    #[should_panic(expected = "leaf \"enc0/ffn_w1\" slot \"vr\"")]
     fn load_state_mismatch_names_leaf_and_kind() {
         let specs = vec![ParamSpec::new("enc0/ffn_w1", &[6, 4])];
         let mut opt = Adafactor::new(&specs, 0.9, 0.98);
         // a full-v style state (one 24-elem v + mom) where factored
         // (vr[6], vc[4], mom) is expected
         let bad = vec![Tensor::zeros(&[24]), Tensor::zeros(&[6, 4])];
-        opt.load_state(bad);
+        let err = opt.load_state(bad).unwrap_err().to_string();
+        assert!(err.contains("leaf \"enc0/ffn_w1\" slot \"vr\""), "{err}");
+        assert!(err.contains("factored (vr[6], vc[4])"), "{err}");
     }
 
     #[test]
@@ -352,7 +392,7 @@ mod tests {
             let saved: Vec<Tensor> =
                 opt.state().into_iter().map(|(_, _, t)| t).collect();
             let mut fresh = Adafactor::with_dtype(&specs, 0.9, 0.98, dtype);
-            fresh.load_state(saved.clone());
+            fresh.load_state(saved.clone()).unwrap();
             let restored: Vec<Tensor> =
                 fresh.state().into_iter().map(|(_, _, t)| t).collect();
             assert_eq!(saved, restored, "{dtype:?}");

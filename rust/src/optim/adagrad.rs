@@ -5,7 +5,9 @@ use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
+use crate::pool::Pool;
 use crate::tensor::Tensor;
+use anyhow::ensure;
 
 /// Adagrad-with-momentum optimizer state over a parameter list.
 pub struct Adagrad {
@@ -38,14 +40,33 @@ impl Adagrad {
     /// streaming tile.
     pub fn with_opts(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
                      chunk: usize) -> Self {
+        Self::build(specs, beta1, dtype, chunk, None)
+    }
+
+    /// [`Adagrad::with_opts`] with state slots and decode scratch leased
+    /// from `pool` (bitwise identical to the unpooled constructor).
+    pub fn with_opts_in(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+                        chunk: usize, pool: &Pool) -> Self {
+        Self::build(specs, beta1, dtype, chunk, Some(pool))
+    }
+
+    fn build(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+             chunk: usize, pool: Option<&Pool>) -> Self {
         kernel::check_chunk(chunk).unwrap();
-        let mut slots = QuantizedSlots::new(dtype);
+        let mut slots = match pool {
+            Some(p) => QuantizedSlots::new_in(dtype, p.clone()),
+            None => QuantizedSlots::new(dtype),
+        };
         for s in specs {
             slots.add_zeros(s.numel()); // acc
             slots.add_zeros(s.numel()); // mom
         }
+        let scratch = match pool {
+            Some(p) => ChunkScratch::new_in(p),
+            None => ChunkScratch::default(),
+        };
         Self { beta1, chunk, backend: Backend::default(),
-               scratch: ChunkScratch::default(), slots,
+               scratch, slots,
                specs: specs.to_vec() }
     }
 
@@ -116,16 +137,27 @@ impl Optimizer for Adagrad {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
+        let want = 2 * self.specs.len();
+        ensure!(state.len() == want,
+                "adagrad state layout mismatch: got {} tensors, expected \
+                 {} (acc/mom per leaf over {} leaves)",
+                state.len(), want, self.specs.len());
         let mut it = state.into_iter();
         for (i, s) in self.specs.iter().enumerate() {
-            for slot in [2 * i, 2 * i + 1] {
-                let t = it.next().expect("state underrun");
-                assert_eq!(t.shape(), s.shape.as_slice());
+            for (slot, kind) in [(2 * i, "acc"), (2 * i + 1, "mom")] {
+                let t = it.next().expect("length checked above");
+                ensure!(t.shape() == s.shape.as_slice(),
+                        "adagrad leaf {:?} slot {kind}: state shape {:?}, \
+                         expected {:?}", s.name, t.shape(), s.shape);
                 self.slots.write(slot, t.data());
             }
         }
-        assert!(it.next().is_none());
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes()
     }
 }
 
@@ -207,7 +239,7 @@ mod tests {
         let saved: Vec<Tensor> =
             opt.state().into_iter().map(|(_, _, t)| t).collect();
         let mut fresh = Adagrad::with_dtype(&specs, 0.9, StateDtype::Q8);
-        fresh.load_state(saved.clone());
+        fresh.load_state(saved.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t).collect();
         // dequantized values re-quantize to the identical codes, so the

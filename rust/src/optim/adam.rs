@@ -5,7 +5,9 @@ use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
+use crate::pool::Pool;
 use crate::tensor::Tensor;
+use anyhow::ensure;
 
 /// Adam optimizer state over a parameter list (see [`AdamHp`] for the
 /// hyperparameters; `eps` is configurable — `[optim] eps` / `--eps`).
@@ -49,15 +51,35 @@ impl Adam {
     /// upstream).
     pub fn with_opts(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
                      dtype: StateDtype, chunk: usize) -> Self {
+        Self::build(specs, beta1, beta2, eps, dtype, chunk, None)
+    }
+
+    /// [`Adam::with_opts`] with state slots and decode scratch leased
+    /// from `pool` (bitwise identical to the unpooled constructor).
+    pub fn with_opts_in(specs: &[ParamSpec], beta1: f32, beta2: f32,
+                        eps: f32, dtype: StateDtype, chunk: usize,
+                        pool: &Pool) -> Self {
+        Self::build(specs, beta1, beta2, eps, dtype, chunk, Some(pool))
+    }
+
+    fn build(specs: &[ParamSpec], beta1: f32, beta2: f32, eps: f32,
+             dtype: StateDtype, chunk: usize, pool: Option<&Pool>) -> Self {
         kernel::check_chunk(chunk).unwrap();
-        let mut slots = QuantizedSlots::new(dtype);
+        let mut slots = match pool {
+            Some(p) => QuantizedSlots::new_in(dtype, p.clone()),
+            None => QuantizedSlots::new(dtype),
+        };
         for s in specs {
             slots.add_zeros(s.numel()); // m
             slots.add_zeros(s.numel()); // v
         }
+        let scratch = match pool {
+            Some(p) => ChunkScratch::new_in(p),
+            None => ChunkScratch::default(),
+        };
         Self { beta1, beta2, eps, t: 0.0, chunk,
                backend: Backend::default(),
-               scratch: ChunkScratch::default(), slots,
+               scratch, slots,
                specs: specs.to_vec() }
     }
 
@@ -133,17 +155,32 @@ impl Optimizer for Adam {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
+        let want = 1 + 2 * self.specs.len();
+        ensure!(state.len() == want,
+                "adam state layout mismatch: got {} tensors, expected {} \
+                 (t + m/v per leaf over {} leaves)",
+                state.len(), want, self.specs.len());
         let mut it = state.into_iter();
-        self.t = it.next().expect("state underrun").data()[0];
+        let t0 = it.next().expect("length checked above");
+        ensure!(t0.data().len() == 1,
+                "adam step counter must be a 1-element tensor, got {} \
+                 elements", t0.data().len());
+        self.t = t0.data()[0];
         for (i, s) in self.specs.iter().enumerate() {
-            for slot in [2 * i, 2 * i + 1] {
-                let t = it.next().expect("state underrun");
-                assert_eq!(t.shape(), s.shape.as_slice());
+            for (slot, kind) in [(2 * i, "m"), (2 * i + 1, "v")] {
+                let t = it.next().expect("length checked above");
+                ensure!(t.shape() == s.shape.as_slice(),
+                        "adam leaf {:?} slot {kind}: state shape {:?}, \
+                         expected {:?}", s.name, t.shape(), s.shape);
                 self.slots.write(slot, t.data());
             }
         }
-        assert!(it.next().is_none());
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes()
     }
 }
 
@@ -178,7 +215,7 @@ mod tests {
         }
         let st: Vec<Tensor> = opt.state().into_iter().map(|(_, _, t)| t).collect();
         let mut fresh = Adam::new(&specs, 0.9, 0.999, 1e-8);
-        fresh.load_state(st);
+        fresh.load_state(st).unwrap();
         assert_eq!(fresh.t, 5.0);
     }
 
@@ -199,7 +236,7 @@ mod tests {
         assert_eq!(st[0].data()[0], 7.0);
         let mut fresh = Adam::with_dtype(&specs, 0.9, 0.999, 1e-8,
                                          StateDtype::Q8);
-        fresh.load_state(st);
+        fresh.load_state(st).unwrap();
         assert_eq!(fresh.t, 7.0);
     }
 

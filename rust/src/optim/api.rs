@@ -44,6 +44,7 @@ use super::qstate::StateDtype;
 use super::transform::{Pipeline, UpdateTransform};
 use super::{Adafactor, Adagrad, Adam, Optimizer, ParamSpec, SgdMomentum,
             Sm3, Sm3Variant};
+use crate::pool::Pool;
 use anyhow::{bail, ensure, Result};
 
 /// Adam hyperparameters (Kingma & Ba). `eps` was hard-pinned to `1e-8`
@@ -266,38 +267,65 @@ impl Method {
 
     /// Construct one serial optimizer instance over `specs` (the leaf
     /// factory `ParallelStep` and the legacy shims share). `opts.chunk`
-    /// must already be validated ([`kernel::check_chunk`]).
-    pub fn build_serial(&self, specs: &[ParamSpec], opts: &StateOpts)
-                        -> Box<dyn Optimizer> {
+    /// must already be validated ([`kernel::check_chunk`]). When `pool`
+    /// is `Some`, state slots and working scratch lease from it
+    /// (bitwise identical either way — the pool is a placement knob,
+    /// DESIGN.md §16).
+    pub fn build_serial(&self, specs: &[ParamSpec], opts: &StateOpts,
+                        pool: Option<&Pool>) -> Box<dyn Optimizer> {
         match self {
             Method::Adam(hp) => {
-                let mut o = Adam::with_opts(specs, hp.beta1, hp.beta2,
-                                            hp.eps, opts.dtype, opts.chunk);
+                let mut o = match pool {
+                    Some(p) => Adam::with_opts_in(specs, hp.beta1, hp.beta2,
+                                                  hp.eps, opts.dtype,
+                                                  opts.chunk, p),
+                    None => Adam::with_opts(specs, hp.beta1, hp.beta2,
+                                            hp.eps, opts.dtype, opts.chunk),
+                };
                 o.set_backend(opts.backend);
                 Box::new(o)
             }
             Method::Sm3(hp) => {
-                let mut o = Sm3::with_opts(specs, hp.variant, hp.beta1,
-                                           opts.dtype, opts.chunk);
+                let mut o = match pool {
+                    Some(p) => Sm3::with_opts_in(specs, hp.variant, hp.beta1,
+                                                 opts.dtype, opts.chunk, p),
+                    None => Sm3::with_opts(specs, hp.variant, hp.beta1,
+                                           opts.dtype, opts.chunk),
+                };
                 o.set_backend(opts.backend);
                 Box::new(o)
             }
             Method::Adagrad(hp) => {
-                let mut o = Adagrad::with_opts(specs, hp.beta1, opts.dtype,
-                                               opts.chunk);
+                let mut o = match pool {
+                    Some(p) => Adagrad::with_opts_in(specs, hp.beta1,
+                                                     opts.dtype, opts.chunk,
+                                                     p),
+                    None => Adagrad::with_opts(specs, hp.beta1, opts.dtype,
+                                               opts.chunk),
+                };
                 o.set_backend(opts.backend);
                 Box::new(o)
             }
             Method::Adafactor(hp) => {
                 // leaf-granular two-pass update: no streaming tile
-                let mut o = Adafactor::with_dtype(specs, hp.beta1, hp.beta2,
-                                                  opts.dtype);
+                let mut o = match pool {
+                    Some(p) => Adafactor::with_dtype_in(specs, hp.beta1,
+                                                        hp.beta2, opts.dtype,
+                                                        p),
+                    None => Adafactor::with_dtype(specs, hp.beta1, hp.beta2,
+                                                  opts.dtype),
+                };
                 o.set_backend(opts.backend);
                 Box::new(o)
             }
             Method::SgdMomentum(hp) => {
-                let mut o = SgdMomentum::with_opts(specs, hp.beta1,
-                                                   opts.dtype, opts.chunk);
+                let mut o = match pool {
+                    Some(p) => SgdMomentum::with_opts_in(specs, hp.beta1,
+                                                         opts.dtype,
+                                                         opts.chunk, p),
+                    None => SgdMomentum::with_opts(specs, hp.beta1,
+                                                   opts.dtype, opts.chunk),
+                };
                 o.set_backend(opts.backend);
                 Box::new(o)
             }
@@ -408,6 +436,9 @@ pub struct OptimSpec {
     groups: Vec<GroupSpec>,
     threads: usize,
     policy: SplitPolicy,
+    /// memory pool state slots and scratch lease from (`None` = plain
+    /// heap Vecs, the pre-pool construction; bitwise identical)
+    pool: Option<Pool>,
 }
 
 impl OptimSpec {
@@ -421,6 +452,7 @@ impl OptimSpec {
             groups: Vec::new(),
             threads: 1,
             policy: SplitPolicy::IntraLeaf,
+            pool: None,
         }
     }
 
@@ -483,6 +515,15 @@ impl OptimSpec {
     /// How `ParallelStep` may divide leaves across workers.
     pub fn split_policy(mut self, policy: SplitPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Lease every state slot and working buffer from `pool` (the
+    /// unified memory-pool runtime, DESIGN.md §16). Clones the handle —
+    /// the pool is shared, occupancy is visible through the original.
+    /// Bitwise identical to the unpooled construction.
+    pub fn pool(mut self, pool: &Pool) -> Self {
+        self.pool = Some(pool.clone());
         self
     }
 
@@ -616,17 +657,23 @@ impl OptimSpec {
         let inner: Box<dyn Optimizer> = if self.threads > 1 || !uniform_scale
         {
             let (method, state) = (self.method, self.state);
+            let pool = self.pool.clone();
             let mut engine = ParallelStep::with_leaf_factory(
                 specs, self.threads, self.policy,
                 |s| method.elementwise_at_rank(s.shape.len()),
-                |s| Ok(method.build_serial(std::slice::from_ref(s), &state)),
+                |s| Ok(method.build_serial(std::slice::from_ref(s), &state,
+                                           pool.as_ref())),
             )?;
+            if let Some(p) = &self.pool {
+                engine.set_pool(p.clone());
+            }
             if !uniform_scale {
                 engine.set_lr_scales(&scale)?;
             }
             Box::new(engine)
         } else {
-            self.method.build_serial(specs, &self.state)
+            self.method.build_serial(specs, &self.state,
+                                     self.pool.as_ref())
         };
         let stages: Vec<UpdateTransform> = self
             .transforms

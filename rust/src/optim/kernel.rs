@@ -31,6 +31,7 @@
 
 use super::qstate::QuantizedSlots;
 use super::safe_rsqrt;
+use crate::pool::{Pool, PoolBuf, Tag};
 use anyhow::ensure;
 
 /// Elements per q8 block — the alignment unit for tiles and shard splits.
@@ -67,13 +68,41 @@ pub fn elementwise(name: &str, rank: usize) -> bool {
 
 /// Reusable decode scratch for up to two streamed slots. Lives in the
 /// optimizer struct so steady-state steps allocate nothing; f32 stores
-/// never touch it.
-#[derive(Default)]
+/// never touch it. Storage is a pool lease tagged
+/// [`Tag::KernelScratch`] (the `Default` impl stays unpooled so legacy
+/// constructors keep their exact behavior).
 pub struct ChunkScratch {
     /// decode scratch for the first streamed slot
-    pub a: Vec<f32>,
+    pub a: PoolBuf<f32>,
     /// decode scratch for the second streamed slot
-    pub b: Vec<f32>,
+    pub b: PoolBuf<f32>,
+}
+
+impl Default for ChunkScratch {
+    fn default() -> Self {
+        ChunkScratch {
+            a: PoolBuf::unpooled(Tag::KernelScratch),
+            b: PoolBuf::unpooled(Tag::KernelScratch),
+        }
+    }
+}
+
+impl ChunkScratch {
+    /// Scratch whose buffers lease from `pool` under
+    /// [`Tag::KernelScratch`]; sized lazily by the cursor exactly as the
+    /// unpooled default is.
+    pub fn new_in(pool: &Pool) -> Self {
+        ChunkScratch {
+            a: pool.take_f32(Tag::KernelScratch, 0),
+            b: pool.take_f32(Tag::KernelScratch, 0),
+        }
+    }
+
+    /// Live bytes currently held by this scratch pair (the quantity the
+    /// pool attributes to [`Tag::KernelScratch`] for these leases).
+    pub fn bytes(&self) -> usize {
+        (self.a.len() + self.b.len()) * 4
+    }
 }
 
 /// Stream one state slot alongside the leaf's param/grad data in `tile`-
@@ -86,11 +115,16 @@ pub fn step_chunked1(
 ) {
     debug_assert_eq!(slots.slot_len(id), w.len());
     debug_assert_eq!(g.len(), w.len());
-    let mut cur = slots.slot_mut(id).chunks_mut(tile, &mut scratch.a);
-    while let Some(mut t) = cur.next_tile() {
-        let (off, n) = (t.offset(), t.len());
-        f(&mut w[off..off + n], &g[off..off + n], &mut t);
-    }
+    // lend the lease's backing Vec to the cursor (whose scratch
+    // contract predates the pool); the lease reconciles its accounting
+    // when the closure returns
+    scratch.a.with_vec(|sa| {
+        let mut cur = slots.slot_mut(id).chunks_mut(tile, sa);
+        while let Some(mut t) = cur.next_tile() {
+            let (off, n) = (t.offset(), t.len());
+            f(&mut w[off..off + n], &g[off..off + n], &mut t);
+        }
+    });
 }
 
 /// Stream two state slots (e.g. accumulator + momentum) in lockstep with
@@ -105,14 +139,19 @@ pub fn step_chunked2(
     debug_assert_eq!(slots.slot_len(id_b), w.len());
     debug_assert_eq!(g.len(), w.len());
     let (sa, sb) = slots.slot_pair_mut(id_a, id_b);
-    let mut ca = sa.chunks_mut(tile, &mut scratch.a);
-    let mut cb = sb.chunks_mut(tile, &mut scratch.b);
-    while let Some(mut ta) = ca.next_tile() {
-        let mut tb = cb.next_tile().expect("slot lengths diverge");
-        let (off, n) = (ta.offset(), ta.len());
-        debug_assert_eq!(tb.len(), n);
-        f(&mut w[off..off + n], &g[off..off + n], &mut ta, &mut tb);
-    }
+    let (buf_a, buf_b) = (&mut scratch.a, &mut scratch.b);
+    buf_a.with_vec(|va| {
+        buf_b.with_vec(|vb| {
+            let mut ca = sa.chunks_mut(tile, va);
+            let mut cb = sb.chunks_mut(tile, vb);
+            while let Some(mut ta) = ca.next_tile() {
+                let mut tb = cb.next_tile().expect("slot lengths diverge");
+                let (off, n) = (ta.offset(), ta.len());
+                debug_assert_eq!(tb.len(), n);
+                f(&mut w[off..off + n], &g[off..off + n], &mut ta, &mut tb);
+            }
+        });
+    });
 }
 
 /// Adagrad with heavy-ball momentum, one tile (paper Eq. 1–2). Also

@@ -126,8 +126,21 @@ pub trait Optimizer: Send {
     /// is a checkpoint/trace path, not the hot loop.
     fn state(&self) -> Vec<(usize, &'static str, Tensor)>;
 
-    /// Restore state saved by [`Optimizer::state`] (same order).
-    fn load_state(&mut self, state: Vec<Tensor>);
+    /// Restore state saved by [`Optimizer::state`] (same order). A
+    /// layout mismatch (wrong tensor count, wrong leaf shape) is an
+    /// `Err` naming the leaf and the expected layout — restore paths
+    /// must not panic on malformed checkpoints.
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()>;
+
+    /// Live bytes currently held by this optimizer's *working* scratch
+    /// (decode tiles, leaf-granular two-pass buffers) — the quantity
+    /// the pool attributes to [`crate::pool::Tag::KernelScratch`] for a
+    /// pooled instance. Scratch is sized lazily by the first steps, so
+    /// this is a live query, not a static formula. Default 0 (no
+    /// scratch).
+    fn scratch_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Construct an optimizer by registry name with f32 state storage.

@@ -44,8 +44,10 @@ use super::kernel;
 use super::qstate::codec::Q8_BLOCK;
 use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
+use crate::pool::{Pool, PoolBuf, Tag};
 use crate::telemetry::{self, Gauge, Probe};
 use crate::tensor::Tensor;
+use anyhow::ensure;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// `lr · s` skipping the multiply when `s == 1` (the uniform case keeps
@@ -147,6 +149,9 @@ pub struct ParallelStep {
     /// per-leaf LR multipliers (`OptimSpec` param groups); empty =
     /// uniform 1.0 — the historical arithmetic, skip the multiply
     lr_scales: Vec<f32>,
+    /// pool the checkpoint stitch path stages split-leaf slots in
+    /// ([`Tag::CkptStitch`]); `None` = plain Vec staging
+    pool: Option<Pool>,
     /// telemetry: one preallocated slot per worker. Scoped workers die
     /// inside the step, so each measures its own elapsed time here and
     /// the owning thread folds the slots — in worker-index order — into
@@ -200,7 +205,8 @@ impl ParallelStep {
         Self::with_leaf_factory(
             specs, threads, policy,
             |s| kernel::elementwise(name, s.shape.len()),
-            |s| Ok(method.build_serial(std::slice::from_ref(s), &opts)))
+            |s| Ok(method.build_serial(std::slice::from_ref(s), &opts,
+                                       None)))
     }
 
     /// Fully generic constructor: a deterministic per-leaf factory plus
@@ -277,7 +283,14 @@ impl ParallelStep {
         }
         let worker_ns = (0..bins.len()).map(|_| AtomicU64::new(0)).collect();
         Ok(Self { leaves, task_worker, workers: bins.len(), threads,
-                  lr_scales: Vec::new(), worker_ns })
+                  lr_scales: Vec::new(), pool: None, worker_ns })
+    }
+
+    /// Stage split-leaf checkpoint stitching through `pool`
+    /// ([`Tag::CkptStitch`]). The per-leaf sub-optimizers are pooled
+    /// through the leaf factory, not here — see `OptimSpec::pool`.
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = Some(pool);
     }
 
     /// Configured worker count (the live worker count may be lower when
@@ -504,12 +517,18 @@ impl Optimizer for ParallelStep {
                             out.push((i, *slot, t0.clone()));
                             continue;
                         }
-                        let mut data = Vec::with_capacity(spec.numel());
+                        // stage the concatenation in a pooled lease so
+                        // repeated checkpointing reuses one slab
+                        let mut data = match &self.pool {
+                            Some(p) => p.take_f32(Tag::CkptStitch, 0),
+                            None => PoolBuf::unpooled(Tag::CkptStitch),
+                        };
                         for p in &per {
                             data.extend_from_slice(p[j].2.data());
                         }
                         out.push((i, *slot,
-                                  Tensor::from_vec(&spec.shape, data)));
+                                  Tensor::from_vec(&spec.shape,
+                                                   data.to_vec())));
                     }
                 }
             }
@@ -517,7 +536,7 @@ impl Optimizer for ParallelStep {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
         // Pre-count so a layout mismatch (e.g. serial-Adam state, whose
         // global `t` slot appears once instead of per leaf) fails fast
         // BEFORE any leaf is mutated. Split leaves expect the *stitched*
@@ -531,18 +550,18 @@ impl Optimizer for ParallelStep {
             })
             .collect();
         let expect: usize = lens.iter().sum();
-        assert_eq!(state.len(), expect,
-                   "state layout mismatch: got {} tensors, this {}-leaf \
-                    ParallelStep expects {} (per-leaf slot layout differs \
-                    from serial for optimizers with global slots — see \
-                    module docs)",
-                   state.len(), self.leaves.len(), expect);
+        ensure!(state.len() == expect,
+                "state layout mismatch: got {} tensors, this {}-leaf \
+                 ParallelStep expects {} (per-leaf slot layout differs \
+                 from serial for optimizers with global slots — see \
+                 module docs)",
+                state.len(), self.leaves.len(), expect);
         let mut it = state.into_iter();
         for (leaf, n) in self.leaves.iter_mut().zip(lens) {
             match leaf {
                 Leaf::Whole(opt) => {
                     let chunk: Vec<Tensor> = it.by_ref().take(n).collect();
-                    opt.load_state(chunk);
+                    opt.load_state(chunk)?;
                 }
                 Leaf::Split { spec, parts } => {
                     // slice each stitched slot back into range tensors
@@ -563,10 +582,10 @@ impl Optimizer for ParallelStep {
                             }
                             continue;
                         }
-                        assert_eq!(t.len(), spec.numel(),
-                                   "split leaf {:?}: stitched slot has {} \
-                                    elements, expected {}",
-                                   spec.name, t.len(), spec.numel());
+                        ensure!(t.len() == spec.numel(),
+                                "split leaf {:?}: stitched slot has {} \
+                                 elements, expected {}",
+                                spec.name, t.len(), spec.numel());
                         let data = t.data();
                         for (p, v) in parts.iter().zip(per_part.iter_mut()) {
                             v.push(Tensor::from_vec(
@@ -574,11 +593,24 @@ impl Optimizer for ParallelStep {
                         }
                     }
                     for (p, st) in parts.iter_mut().zip(per_part) {
-                        p.opt.load_state(st);
+                        p.opt.load_state(st)?;
                     }
                 }
             }
         }
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.leaves
+            .iter()
+            .map(|l| match l {
+                Leaf::Whole(o) => o.scratch_bytes(),
+                Leaf::Split { parts, .. } => {
+                    parts.iter().map(|p| p.opt.scratch_bytes()).sum()
+                }
+            })
+            .sum()
     }
 }
 
@@ -777,7 +809,7 @@ mod tests {
             sb.into_iter().map(|(_, _, t)| t).collect();
         let mut fresh = ParallelStep::from_registry(
             "adam", &specs, 0.9, 0.98, 4).unwrap();
-        fresh.load_state(tensors.clone());
+        fresh.load_state(tensors.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t).collect();
         assert_eq!(tensors, restored);
@@ -814,7 +846,7 @@ mod tests {
             par.state().into_iter().map(|(_, _, t)| t).collect();
         let mut fresh =
             ParallelStep::from_registry("sm3", &specs, 0.9, 0.98, 2).unwrap();
-        fresh.load_state(saved.clone());
+        fresh.load_state(saved.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t).collect();
         assert_eq!(saved, restored);
@@ -824,7 +856,6 @@ mod tests {
     /// layout, whose global `t` appears once instead of per leaf) must
     /// fail fast before any leaf is mutated.
     #[test]
-    #[should_panic(expected = "state layout mismatch")]
     fn load_state_rejects_wrong_layout_before_mutating() {
         let specs = mixed_specs();
         let serial =
@@ -835,7 +866,8 @@ mod tests {
             serial.state().into_iter().map(|(_, _, t)| t).collect();
         let mut par =
             ParallelStep::from_registry("adam", &specs, 0.9, 0.98, 2).unwrap();
-        par.load_state(saved);
+        let err = par.load_state(saved).unwrap_err().to_string();
+        assert!(err.contains("state layout mismatch"), "{err}");
     }
 
     /// The determinism contract at q8: sharded stepping with quantized

@@ -29,6 +29,7 @@
 use super::codec;
 use super::StateDtype;
 use crate::optim::backend::Backend;
+use crate::pool::{Pool, PoolBuf, Tag};
 
 /// One state vector in its storage encoding.
 pub struct QSlot {
@@ -39,22 +40,53 @@ pub struct QSlot {
     backend: Backend,
 }
 
+/// Backing storage lives in pool leases tagged [`Tag::OptState`]
+/// (legacy constructors hand out unpooled leases so pre-pool call
+/// sites keep their exact behavior).
 enum SlotData {
-    F32(Vec<f32>),
-    Bf16(Vec<u16>),
-    Q8 { scales: Vec<f32>, codes: Vec<u8> },
+    F32(PoolBuf<f32>),
+    Bf16(PoolBuf<u16>),
+    Q8 { scales: PoolBuf<f32>, codes: PoolBuf<u8> },
 }
 
 impl QSlot {
-    /// A zero-initialized slot of `len` scalars.
+    /// A zero-initialized slot of `len` scalars (unpooled storage; the
+    /// trainer path allocates through [`QSlot::zeros_in`]).
     pub fn zeros(len: usize, dtype: StateDtype) -> Self {
         let data = match dtype {
-            StateDtype::F32 => SlotData::F32(vec![0.0; len]),
-            StateDtype::Bf16 => SlotData::Bf16(vec![0; len]),
+            StateDtype::F32 => {
+                SlotData::F32(PoolBuf::from_vec(Tag::OptState, vec![0.0; len]))
+            }
+            StateDtype::Bf16 => {
+                SlotData::Bf16(PoolBuf::from_vec(Tag::OptState, vec![0; len]))
+            }
             StateDtype::Q8 => SlotData::Q8 {
-                scales: vec![0.0; codec::q8_blocks(len)],
-                codes: vec![codec::Q8_ZERO_CODE; len],
+                scales: PoolBuf::from_vec(
+                    Tag::OptState, vec![0.0; codec::q8_blocks(len)]),
+                codes: PoolBuf::from_vec(
+                    Tag::OptState, vec![codec::Q8_ZERO_CODE; len]),
             },
+        };
+        Self { len, data, backend: Backend::default() }
+    }
+
+    /// A zero-initialized slot whose storage is leased from `pool`
+    /// under [`Tag::OptState`]. Bitwise identical to [`QSlot::zeros`]:
+    /// pool leases arrive zero-filled, and the q8 code plane is re-set
+    /// to the codec's zero code just as the fresh-vec path does.
+    pub fn zeros_in(len: usize, dtype: StateDtype, pool: &Pool) -> Self {
+        let data = match dtype {
+            StateDtype::F32 => SlotData::F32(pool.take_f32(Tag::OptState, len)),
+            StateDtype::Bf16 => {
+                SlotData::Bf16(pool.take_u16(Tag::OptState, len))
+            }
+            StateDtype::Q8 => {
+                let scales =
+                    pool.take_f32(Tag::OptState, codec::q8_blocks(len));
+                let mut codes = pool.take_u8(Tag::OptState, len);
+                codes.fill(codec::Q8_ZERO_CODE);
+                SlotData::Q8 { scales, codes }
+            }
         };
         Self { len, data, backend: Backend::default() }
     }
@@ -152,7 +184,7 @@ impl QSlot {
     /// of an f32 slot alias this storage directly.
     pub fn as_f32(&self) -> Option<&[f32]> {
         match &self.data {
-            SlotData::F32(v) => Some(v),
+            SlotData::F32(v) => Some(v.as_slice()),
             _ => None,
         }
     }
@@ -311,12 +343,23 @@ pub struct QuantizedSlots {
     dtype: StateDtype,
     backend: Backend,
     slots: Vec<QSlot>,
+    /// lease source for slot storage; `None` = legacy unpooled mode
+    pool: Option<Pool>,
 }
 
 impl QuantizedSlots {
-    /// An empty store whose future slots use `dtype`.
+    /// An empty store whose future slots use `dtype` (unpooled storage;
+    /// the trainer path constructs through [`QuantizedSlots::new_in`]).
     pub fn new(dtype: StateDtype) -> Self {
-        Self { dtype, backend: Backend::default(), slots: Vec::new() }
+        Self { dtype, backend: Backend::default(), slots: Vec::new(),
+               pool: None }
+    }
+
+    /// An empty store whose future slots lease their storage from
+    /// `pool` under [`Tag::OptState`].
+    pub fn new_in(dtype: StateDtype, pool: Pool) -> Self {
+        Self { dtype, backend: Backend::default(), slots: Vec::new(),
+               pool: Some(pool) }
     }
 
     /// Storage precision of every slot in the store.
@@ -339,9 +382,14 @@ impl QuantizedSlots {
         }
     }
 
-    /// Allocate a zero slot of `len` scalars; returns its id.
+    /// Allocate a zero slot of `len` scalars; returns its id. Storage
+    /// comes from the store's pool when one was attached at
+    /// construction ([`QuantizedSlots::new_in`]).
     pub fn add_zeros(&mut self, len: usize) -> usize {
-        let mut slot = QSlot::zeros(len, self.dtype);
+        let mut slot = match &self.pool {
+            Some(p) => QSlot::zeros_in(len, self.dtype, p),
+            None => QSlot::zeros(len, self.dtype),
+        };
         slot.set_backend(self.backend);
         self.slots.push(slot);
         self.slots.len() - 1
@@ -615,6 +663,53 @@ mod tests {
                                "{dtype:?} len {len}: {x} != {y}");
                 }
             }
+        }
+    }
+
+    /// Pool contract (ISSUE 9): a pooled store's live `OptState`
+    /// occupancy equals its exact `state_bytes()` at every dtype, and
+    /// drops to zero when the store is torn down.
+    #[test]
+    fn pooled_store_occupancy_matches_state_bytes() {
+        for dtype in StateDtype::ALL {
+            let pool = Pool::new();
+            let mut st = QuantizedSlots::new_in(dtype, pool.clone());
+            for len in [100usize, 64, 0, 257] {
+                st.add_zeros(len);
+            }
+            assert_eq!(pool.bytes_in_use_tag(Tag::OptState), st.state_bytes(),
+                       "{dtype:?}");
+            assert_eq!(pool.bytes_in_use(), st.state_bytes());
+            drop(st);
+            assert_eq!(pool.bytes_in_use(), 0, "{dtype:?}");
+        }
+    }
+
+    /// Pooled slots are bitwise identical to unpooled ones — including
+    /// the q8 zero-code plane, and including slots whose storage was
+    /// recycled from a previous (dirty) lease.
+    #[test]
+    fn pooled_slots_match_unpooled_bitwise() {
+        let vals: Vec<f32> = (0..200).map(|i| (i as f32 - 77.0) * 0.31).collect();
+        for dtype in StateDtype::ALL {
+            let pool = Pool::new();
+            // dirty the shelves first so recycling is actually exercised
+            {
+                let mut junk = QSlot::zeros_in(200, dtype, &pool);
+                junk.write(&vals);
+            }
+            let pooled_zero = QSlot::zeros_in(200, dtype, &pool);
+            let plain_zero = QSlot::zeros(200, dtype);
+            for (a, b) in pooled_zero.to_vec().iter().zip(plain_zero.to_vec()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} zeros");
+            }
+            let mut pooled = QSlot::zeros_in(200, dtype, &pool);
+            pooled.write(&vals);
+            let plain = QSlot::from_f32(dtype, &vals);
+            for (a, b) in pooled.to_vec().iter().zip(plain.to_vec()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} written");
+            }
+            assert_eq!(pooled.state_bytes(), plain.state_bytes());
         }
     }
 

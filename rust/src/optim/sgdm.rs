@@ -5,7 +5,9 @@ use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{Optimizer, ParamSpec};
+use crate::pool::Pool;
 use crate::tensor::Tensor;
+use anyhow::ensure;
 
 /// SGD-with-momentum optimizer state over a parameter list.
 pub struct SgdMomentum {
@@ -37,13 +39,33 @@ impl SgdMomentum {
     /// streaming tile.
     pub fn with_opts(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
                      chunk: usize) -> Self {
+        Self::build(specs, beta1, dtype, chunk, None)
+    }
+
+    /// [`SgdMomentum::with_opts`] with state slots and decode scratch
+    /// leased from `pool` (bitwise identical to the unpooled
+    /// constructor).
+    pub fn with_opts_in(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+                        chunk: usize, pool: &Pool) -> Self {
+        Self::build(specs, beta1, dtype, chunk, Some(pool))
+    }
+
+    fn build(specs: &[ParamSpec], beta1: f32, dtype: StateDtype,
+             chunk: usize, pool: Option<&Pool>) -> Self {
         kernel::check_chunk(chunk).unwrap();
-        let mut slots = QuantizedSlots::new(dtype);
+        let mut slots = match pool {
+            Some(p) => QuantizedSlots::new_in(dtype, p.clone()),
+            None => QuantizedSlots::new(dtype),
+        };
         for s in specs {
             slots.add_zeros(s.numel());
         }
+        let scratch = match pool {
+            Some(p) => ChunkScratch::new_in(p),
+            None => ChunkScratch::default(),
+        };
         Self { beta1, chunk, backend: Backend::default(),
-               scratch: ChunkScratch::default(), slots,
+               scratch, slots,
                specs: specs.to_vec() }
     }
 
@@ -103,12 +125,22 @@ impl Optimizer for SgdMomentum {
             .collect()
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
-        assert_eq!(state.len(), self.specs.len());
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
+        ensure!(state.len() == self.specs.len(),
+                "sgdm state layout mismatch: got {} tensors, expected {} \
+                 (one momentum per leaf)", state.len(), self.specs.len());
         for (i, t) in state.into_iter().enumerate() {
-            assert_eq!(t.shape(), self.specs[i].shape.as_slice());
+            let s = &self.specs[i];
+            ensure!(t.shape() == s.shape.as_slice(),
+                    "sgdm leaf {:?} slot mom: state shape {:?}, expected \
+                     {:?}", s.name, t.shape(), s.shape);
             self.slots.write(i, t.data());
         }
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes()
     }
 }
 

@@ -25,15 +25,26 @@ use super::backend::Backend;
 use super::kernel::{self, ChunkScratch};
 use super::qstate::{QuantizedSlots, StateDtype};
 use super::{safe_rsqrt, Optimizer, ParamSpec};
+use crate::pool::{Pool, PoolBuf, Tag};
 use crate::tensor::{axis_index, Tensor};
+use anyhow::ensure;
 
 /// Ensure `bufs` holds at least `k` buffer shells (capacity inside each
 /// shell grows to the lengths seen and is then reused — steady-state
-/// steps allocate nothing).
-fn ensure_bufs(bufs: &mut Vec<Vec<f32>>, k: usize) {
+/// steps allocate nothing). Shells lease from `pool` when present
+/// ([`Tag::KernelScratch`]), else run unpooled.
+fn ensure_bufs(bufs: &mut Vec<PoolBuf<f32>>, k: usize, pool: Option<&Pool>) {
     while bufs.len() < k {
-        bufs.push(Vec::new());
+        bufs.push(match pool {
+            Some(p) => p.take_f32(Tag::KernelScratch, 0),
+            None => PoolBuf::unpooled(Tag::KernelScratch),
+        });
     }
+}
+
+/// Live f32 bytes across a shell set (the pool's view of these leases).
+fn bufs_bytes(bufs: &[PoolBuf<f32>]) -> usize {
+    bufs.iter().map(|b| b.len() * 4).sum()
 }
 
 /// Which algorithm from the paper.
@@ -68,10 +79,13 @@ pub struct Sm3 {
     scratch: ChunkScratch,
     /// reduction-coupled leaves: dequantized accumulator buffers (one per
     /// axis), momentum buffer, and per-axis reduction scratch — all
-    /// struct-held so steady-state steps are allocation-free
-    acc_bufs: Vec<Vec<f32>>,
-    mom_buf: Vec<f32>,
-    axis_scratch: Vec<Vec<f32>>,
+    /// struct-held so steady-state steps are allocation-free; pooled
+    /// instances lease them under [`Tag::KernelScratch`]
+    acc_bufs: Vec<PoolBuf<f32>>,
+    mom_buf: PoolBuf<f32>,
+    axis_scratch: Vec<PoolBuf<f32>>,
+    /// lease source for lazily-grown shells; `None` = legacy unpooled
+    pool: Option<Pool>,
     store: QuantizedSlots,
     leaves: Vec<LeafIds>,
     specs: Vec<ParamSpec>,
@@ -94,9 +108,26 @@ impl Sm3 {
     /// reduction-coupled and leaf-granular).
     pub fn with_opts(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
                      dtype: StateDtype, chunk: usize) -> Self {
+        Self::build(specs, variant, beta1, dtype, chunk, None)
+    }
+
+    /// [`Sm3::with_opts`] with state slots and all working scratch
+    /// leased from `pool` (bitwise identical to the unpooled
+    /// constructor).
+    pub fn with_opts_in(specs: &[ParamSpec], variant: Sm3Variant,
+                        beta1: f32, dtype: StateDtype, chunk: usize,
+                        pool: &Pool) -> Self {
+        Self::build(specs, variant, beta1, dtype, chunk, Some(pool))
+    }
+
+    fn build(specs: &[ParamSpec], variant: Sm3Variant, beta1: f32,
+             dtype: StateDtype, chunk: usize, pool: Option<&Pool>) -> Self {
         kernel::check_chunk(chunk).unwrap();
-        let mut store = QuantizedSlots::new(dtype);
-        let leaves = specs
+        let mut store = match pool {
+            Some(p) => QuantizedSlots::new_in(dtype, p.clone()),
+            None => QuantizedSlots::new(dtype),
+        };
+        let leaves: Vec<LeafIds> = specs
             .iter()
             .map(|s| {
                 let accs = if s.shape.len() <= 1 {
@@ -107,10 +138,17 @@ impl Sm3 {
                 LeafIds { accs, mom: store.add_zeros(s.numel()) }
             })
             .collect();
+        let (scratch, mom_buf) = match pool {
+            Some(p) => (ChunkScratch::new_in(p),
+                        p.take_f32(Tag::KernelScratch, 0)),
+            None => (ChunkScratch::default(),
+                     PoolBuf::unpooled(Tag::KernelScratch)),
+        };
         Self { variant, beta1, chunk, backend: Backend::default(),
-               scratch: ChunkScratch::default(),
-               acc_bufs: Vec::new(), mom_buf: Vec::new(),
-               axis_scratch: Vec::new(), store, leaves,
+               scratch,
+               acc_bufs: Vec::new(), mom_buf,
+               axis_scratch: Vec::new(),
+               pool: pool.cloned(), store, leaves,
                specs: specs.to_vec() }
     }
 
@@ -146,19 +184,18 @@ impl Sm3 {
     }
 }
 
-fn step_matrix_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                  g: &Tensor, lr: f32, beta1: f32,
-                  scratch: &mut Vec<Vec<f32>>) {
+fn step_matrix_ii(accs: &mut [PoolBuf<f32>], mom: &mut [f32],
+                  w: &mut Tensor, g: &Tensor, lr: f32, beta1: f32,
+                  scratch: &mut [PoolBuf<f32>]) {
     let (m, n) = (w.shape()[0], w.shape()[1]);
     let wd = w.data_mut();
     let gd = g.data();
     let (rows, cols) = accs.split_at_mut(1);
     let row = &mut rows[0];
     let col = &mut cols[0];
-    ensure_bufs(scratch, 1);
     let new_col = &mut scratch[0];
     new_col.clear();
-    new_col.resize(n, f32::NEG_INFINITY);
+    new_col.resize_fill(n, f32::NEG_INFINITY);
     // Single fused pass: nu is computed per element, consumed for the
     // update, and folded into the new row/col maxima — the m×n nu
     // matrix is never materialized (memory stays Θ(m+n)).
@@ -185,12 +222,12 @@ fn step_matrix_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         }
         row[i] = rmax;
     }
-    col.copy_from_slice(new_col);
+    col.copy_from_slice(&new_col[..]);
 }
 
-fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+fn step_matrix_i(accs: &mut [PoolBuf<f32>], mom: &mut [f32], w: &mut Tensor,
                  g: &Tensor, lr: f32, beta1: f32,
-                 scratch: &mut Vec<Vec<f32>>) {
+                 scratch: &mut [PoolBuf<f32>]) {
     let (m, n) = (w.shape()[0], w.shape()[1]);
     let gd = g.data();
     // pass 1: mu += max over slice of g²
@@ -198,14 +235,13 @@ fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         let (rows, cols) = accs.split_at_mut(1);
         let row = &mut rows[0];
         let col = &mut cols[0];
-        ensure_bufs(scratch, 2);
         let (rm, cm) = scratch.split_at_mut(1);
         let rowmax = &mut rm[0];
         let colmax = &mut cm[0];
         rowmax.clear();
-        rowmax.resize(m, 0.0);
+        rowmax.resize(m);
         colmax.clear();
-        colmax.resize(n, 0.0);
+        colmax.resize(n);
         for i in 0..m {
             let base = i * n;
             for j in 0..n {
@@ -242,17 +278,16 @@ fn step_matrix_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
 }
 
 /// Generic rank-p path (conv kernels etc.). SM3-II semantics.
-fn step_tensor_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
-                  g: &Tensor, lr: f32, beta1: f32,
-                  scratch: &mut Vec<Vec<f32>>) {
+fn step_tensor_ii(accs: &mut [PoolBuf<f32>], mom: &mut [f32],
+                  w: &mut Tensor, g: &Tensor, lr: f32, beta1: f32,
+                  scratch: &mut [PoolBuf<f32>]) {
     let shape = g.shape();
     let wd = w.data_mut();
     let gd = g.data();
-    ensure_bufs(scratch, shape.len());
     let new_accs = &mut scratch[..shape.len()];
     for (na, &nn) in new_accs.iter_mut().zip(shape) {
         na.clear();
-        na.resize(nn, f32::NEG_INFINITY);
+        na.resize_fill(nn, f32::NEG_INFINITY);
     }
     for k in 0..wd.len() {
         let mut nu = f32::INFINITY;
@@ -274,21 +309,20 @@ fn step_tensor_ii(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
         }
     }
     for (dst, src) in accs.iter_mut().zip(new_accs.iter()) {
-        dst.copy_from_slice(src);
+        dst.copy_from_slice(&src[..]);
     }
 }
 
-fn step_tensor_i(accs: &mut [Vec<f32>], mom: &mut [f32], w: &mut Tensor,
+fn step_tensor_i(accs: &mut [PoolBuf<f32>], mom: &mut [f32], w: &mut Tensor,
                  g: &Tensor, lr: f32, beta1: f32,
-                 scratch: &mut Vec<Vec<f32>>) {
+                 scratch: &mut [PoolBuf<f32>]) {
     let shape = g.shape();
     let gd = g.data();
     // pass 1: accumulate slice maxima of g²
-    ensure_bufs(scratch, 1);
     let mx = &mut scratch[0];
     for (a, acc) in accs.iter_mut().enumerate() {
         mx.clear();
-        mx.resize(shape[a], 0.0);
+        mx.resize(shape[a]);
         for k in 0..gd.len() {
             let g2 = gd[k] * gd[k];
             let ai = axis_index(shape, k, a);
@@ -352,14 +386,29 @@ impl Optimizer for Sm3 {
             let w = &mut params[idx];
             let g = &grads[idx];
             let ids = &self.leaves[idx];
-            ensure_bufs(&mut self.acc_bufs, ids.accs.len());
+            ensure_bufs(&mut self.acc_bufs, ids.accs.len(),
+                        self.pool.as_ref());
+            // per-variant axis-scratch shells the step fn will index
+            let shells = match (rank, variant) {
+                (2, Sm3Variant::II) => 1,
+                (2, Sm3Variant::I) => 2,
+                (_, Sm3Variant::II) => rank,
+                (_, Sm3Variant::I) => 1,
+            };
+            ensure_bufs(&mut self.axis_scratch, shells, self.pool.as_ref());
             let accs = &mut self.acc_bufs[..ids.accs.len()];
-            for (buf, &id) in accs.iter_mut().zip(&ids.accs) {
-                self.store.read_into(id, buf);
+            {
+                let store = &self.store;
+                for (buf, &id) in accs.iter_mut().zip(&ids.accs) {
+                    buf.with_vec(|v| store.read_into(id, v));
+                }
             }
-            self.store.read_into(ids.mom, &mut self.mom_buf);
-            let mom = &mut self.mom_buf;
-            let scratch = &mut self.axis_scratch;
+            {
+                let (store, mom_buf) = (&self.store, &mut self.mom_buf);
+                mom_buf.with_vec(|v| store.read_into(ids.mom, v));
+            }
+            let mom = &mut self.mom_buf[..];
+            let scratch = &mut self.axis_scratch[..];
             match (rank, variant) {
                 (2, Sm3Variant::II) => {
                     step_matrix_ii(accs, mom, w, g, lr, beta1, scratch)
@@ -433,20 +482,37 @@ impl Optimizer for Sm3 {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
+        let want: usize =
+            self.leaves.iter().map(|l| l.accs.len() + 1).sum();
+        ensure!(state.len() == want,
+                "sm3 state layout mismatch: got {} tensors, expected {} \
+                 (per-axis accumulators + momentum over {} leaves)",
+                state.len(), want, self.leaves.len());
         let mut it = state.into_iter();
         for i in 0..self.leaves.len() {
             let ids = &self.leaves[i];
-            for &id in &ids.accs {
-                let t = it.next().expect("state underrun");
-                assert_eq!(t.len(), self.store.slot_len(id));
+            for (a, &id) in ids.accs.iter().enumerate() {
+                let t = it.next().expect("length checked above");
+                ensure!(t.len() == self.store.slot_len(id),
+                        "sm3 leaf {:?} axis {a}: accumulator has {} \
+                         elements, expected {}", self.specs[i].name,
+                        t.len(), self.store.slot_len(id));
                 self.store.write(id, t.data());
             }
-            let t = it.next().expect("state underrun");
-            assert_eq!(t.shape(), self.specs[i].shape.as_slice());
+            let t = it.next().expect("length checked above");
+            ensure!(t.shape() == self.specs[i].shape.as_slice(),
+                    "sm3 leaf {:?} slot mom: state shape {:?}, expected \
+                     {:?}", self.specs[i].name, t.shape(),
+                    self.specs[i].shape);
             self.store.write(ids.mom, t.data());
         }
-        assert!(it.next().is_none(), "state overrun");
+        Ok(())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes() + bufs_bytes(&self.acc_bufs)
+            + self.mom_buf.len() * 4 + bufs_bytes(&self.axis_scratch)
     }
 }
 
@@ -610,7 +676,7 @@ mod tests {
             opt.state().into_iter().map(|(_, _, t)| t).collect();
         let specs = vec![ParamSpec::new("w", &[4, 3])];
         let mut fresh = Sm3::new(&specs, Sm3Variant::II, 0.9);
-        fresh.load_state(saved.clone());
+        fresh.load_state(saved.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t.clone()).collect();
         assert_eq!(saved, restored);
@@ -636,7 +702,7 @@ mod tests {
                 opt.state().into_iter().map(|(_, _, t)| t).collect();
             let mut fresh =
                 Sm3::with_dtype(&specs, Sm3Variant::II, 0.9, dtype);
-            fresh.load_state(saved.clone());
+            fresh.load_state(saved.clone()).unwrap();
             let restored: Vec<Tensor> =
                 fresh.state().into_iter().map(|(_, _, t)| t).collect();
             assert_eq!(saved, restored, "{dtype:?}");
@@ -664,7 +730,7 @@ mod tests {
             state.into_iter().map(|(_, _, t)| t).collect();
         let specs = vec![ParamSpec::new("w", &shape)];
         let mut fresh = Sm3::new(&specs, Sm3Variant::II, 0.9);
-        fresh.load_state(saved.clone());
+        fresh.load_state(saved.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t).collect();
         assert_eq!(saved, restored);

@@ -452,18 +452,27 @@ impl Optimizer for Pipeline {
         out
     }
 
-    fn load_state(&mut self, state: Vec<Tensor>) {
-        assert!(state.len() >= 2,
-                "pipeline state underrun: {} tensors, expected the \
-                 tx_step/tx_norm slots plus the inner layout", state.len());
+    fn load_state(&mut self, state: Vec<Tensor>) -> anyhow::Result<()> {
+        anyhow::ensure!(state.len() >= 2,
+                        "pipeline state underrun: {} tensors, expected the \
+                         tx_step/tx_norm slots plus the inner layout",
+                        state.len());
         let mut it = state.into_iter();
-        let step_t = it.next().unwrap();
-        let norm_t = it.next().unwrap();
-        assert_eq!(step_t.len(), 1, "tx_step must be a 1-element tensor");
-        assert_eq!(norm_t.len(), 1, "tx_norm must be a 1-element tensor");
+        let step_t = it.next().expect("length checked above");
+        let norm_t = it.next().expect("length checked above");
+        anyhow::ensure!(step_t.len() == 1,
+                        "tx_step must be a 1-element tensor, got {}",
+                        step_t.len());
+        anyhow::ensure!(norm_t.len() == 1,
+                        "tx_norm must be a 1-element tensor, got {}",
+                        norm_t.len());
         self.steps = step_t.data()[0];
         self.last_norm = norm_t.data()[0];
-        self.inner.load_state(it.collect());
+        self.inner.load_state(it.collect())
+    }
+
+    fn scratch_bytes(&self) -> usize {
+        self.inner.scratch_bytes()
     }
 }
 
@@ -650,7 +659,7 @@ mod tests {
         let tensors: Vec<Tensor> =
             st.into_iter().map(|(_, _, t)| t).collect();
         let mut fresh = build().unwrap();
-        fresh.load_state(tensors.clone());
+        fresh.load_state(tensors.clone()).unwrap();
         let restored: Vec<Tensor> =
             fresh.state().into_iter().map(|(_, _, t)| t).collect();
         assert_eq!(tensors, restored);

@@ -1,0 +1,705 @@
+//! The unified memory-pool runtime (DESIGN.md §16): a size-classed slab
+//! allocator that owns every steady-state and transient buffer in the
+//! training process, so the memory accountant (`crate::memory`) stops
+//! being a hand-maintained static mirror and becomes an assertion
+//! against live occupancy — `memory::… == pool.bytes_in_use()` at step
+//! boundaries, enforced in tests across optimizer × state dtype × comm
+//! dtype × sharding mode.
+//!
+//! Shape of the thing (exemplar: kubecl's `exclusive_pool` — size-classed
+//! exclusive pages with reuse):
+//!
+//! * A [`Pool`] is a cheaply clonable handle (`Arc` inside) holding one
+//!   free shelf per element type (`f32` / `u16` / `u8`), each shelf
+//!   bucketed by power-of-two size class. [`Pool::take`] hands out a
+//!   [`PoolBuf`] lease; dropping the lease returns the backing storage
+//!   to its class shelf — never to the system — so steady-state
+//!   construct/teardown cycles stop paying reallocation spikes.
+//! * Every lease carries a [`Tag`] naming its purpose, so occupancy is
+//!   attributable: `bytes_in_use_tag(Tag::OptState)` is exactly the
+//!   quantized-slot bytes, `Tag::CommFlat` the per-rank flat buffers,
+//!   and so on. Accounting tracks *requested* (logical) bytes — the
+//!   quantity the static accountant mirrors — while the rounded-up
+//!   class capacity parked on shelves is reported separately by
+//!   [`Pool::slab_bytes`].
+//! * Acquire zero-fills the lease, so a recycled buffer is
+//!   indistinguishable from a fresh `vec![0; n]`: pooling is bitwise
+//!   invisible to every consumer (property-tested here and end-to-end
+//!   in `crate::proptest`).
+//! * [`Pool::disabled`] is the off position of the on/off axis: leases
+//!   are still tagged and accounted (the occupancy gauges keep
+//!   working), but dropped storage goes back to the system instead of a
+//!   shelf. [`PoolBuf::unpooled`] is the zero-cost legacy mode — plain
+//!   `Vec` semantics, no accounting — used by constructors that predate
+//!   the pool so existing call sites keep their exact behavior.
+//!
+//! What stays un-pooled, and why: `Tensor` payloads (they are handed
+//! across API boundaries by value), scalar state (Adam's `t`, transform
+//! step counters — bytes, not buffers), and the bounded channel nodes
+//! inside the Inproc transport (owned by `std::sync` primitives). See
+//! DESIGN.md §16 for the full contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Purpose tag carried by every lease, making pool occupancy
+/// attributable per subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    /// Quantized optimizer-state slots (`optim::qstate`).
+    OptState,
+    /// Step-kernel decode scratch and the leaf-granular SM3/Adafactor
+    /// working buffers.
+    KernelScratch,
+    /// Per-rank flat gradient buffers of the comm engine.
+    CommFlat,
+    /// Per-thread wire staging/codec scratch of the ring exchange.
+    CommWire,
+    /// Per-rank error-feedback residuals (compressed wire dtypes).
+    CommResidual,
+    /// Inproc-transport edge slots (serialized hop payloads).
+    TransportSlot,
+    /// Checkpoint stitch buffers reassembling split leaves.
+    CkptStitch,
+}
+
+impl Tag {
+    /// Number of tags (sizes the per-tag accounting arrays).
+    pub const COUNT: usize = 7;
+
+    /// Every tag, in declaration order.
+    pub const ALL: [Tag; Tag::COUNT] = [
+        Tag::OptState,
+        Tag::KernelScratch,
+        Tag::CommFlat,
+        Tag::CommWire,
+        Tag::CommResidual,
+        Tag::TransportSlot,
+        Tag::CkptStitch,
+    ];
+
+    /// Stable snake_case name (gauge keys, CSV columns).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tag::OptState => "opt_state",
+            Tag::KernelScratch => "kernel_scratch",
+            Tag::CommFlat => "comm_flat",
+            Tag::CommWire => "comm_wire",
+            Tag::CommResidual => "comm_residual",
+            Tag::TransportSlot => "transport_slot",
+            Tag::CkptStitch => "ckpt_stitch",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Tag::OptState => 0,
+            Tag::KernelScratch => 1,
+            Tag::CommFlat => 2,
+            Tag::CommWire => 3,
+            Tag::CommResidual => 4,
+            Tag::TransportSlot => 5,
+            Tag::CkptStitch => 6,
+        }
+    }
+}
+
+/// One element type's free storage, bucketed by power-of-two class.
+/// Public only as an implementation detail of the sealed [`PoolItem`]
+/// trait.
+#[doc(hidden)]
+#[derive(Debug, Default)]
+pub struct Shelves<T> {
+    classes: Vec<Vec<Vec<T>>>,
+}
+
+impl<T> Shelves<T> {
+    fn pop(&mut self, class: usize) -> Option<Vec<T>> {
+        self.classes.get_mut(class).and_then(|c| c.pop())
+    }
+
+    fn push(&mut self, class: usize, v: Vec<T>) {
+        if self.classes.len() <= class {
+            self.classes.resize_with(class + 1, Vec::new);
+        }
+        self.classes[class].push(v);
+    }
+}
+
+mod sealed {
+    use super::{Pool, Shelves};
+    use std::sync::Mutex;
+
+    pub trait Sealed: Sized {
+        fn shelves(pool: &Pool) -> &Mutex<Shelves<Self>>;
+    }
+
+    impl Sealed for f32 {
+        fn shelves(pool: &Pool) -> &Mutex<Shelves<f32>> {
+            &pool.inner.f32s
+        }
+    }
+
+    impl Sealed for u16 {
+        fn shelves(pool: &Pool) -> &Mutex<Shelves<u16>> {
+            &pool.inner.u16s
+        }
+    }
+
+    impl Sealed for u8 {
+        fn shelves(pool: &Pool) -> &Mutex<Shelves<u8>> {
+            &pool.inner.u8s
+        }
+    }
+}
+
+/// Element types the pool shelves: `f32`, `u16` (bf16 words), `u8`
+/// (q8 codes, wire bytes). Sealed — the shelf set is fixed.
+pub trait PoolItem:
+    Copy + Default + Send + Sync + sealed::Sealed + 'static
+{
+}
+
+impl PoolItem for f32 {}
+impl PoolItem for u16 {}
+impl PoolItem for u8 {}
+
+struct Inner {
+    enabled: bool,
+    f32s: Mutex<Shelves<f32>>,
+    u16s: Mutex<Shelves<u16>>,
+    u8s: Mutex<Shelves<u8>>,
+    /// requested (logical) bytes per tag, and their high-water marks
+    in_use: [AtomicUsize; Tag::COUNT],
+    peak: [AtomicUsize; Tag::COUNT],
+    total_in_use: AtomicUsize,
+    total_peak: AtomicUsize,
+    /// capacity bytes parked on shelves (held, not in use)
+    slab: AtomicUsize,
+}
+
+/// The pool handle. Cheap to clone; all clones share one shelf set and
+/// one accounting ledger.
+#[derive(Clone)]
+pub struct Pool {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("enabled", &self.inner.enabled)
+            .field("bytes_in_use", &self.bytes_in_use())
+            .field("peak_bytes", &self.peak_bytes())
+            .field("slab_bytes", &self.slab_bytes())
+            .finish()
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::new()
+    }
+}
+
+/// Smallest class capacity handed out for non-empty requests.
+const MIN_CLASS_ELEMS: usize = 16;
+
+/// Class index for a request of `n` elements: the exponent of the
+/// smallest power of two ≥ `max(n, MIN)`.
+fn request_class(n: usize) -> usize {
+    let c = n.max(MIN_CLASS_ELEMS).next_power_of_two();
+    c.trailing_zeros() as usize
+}
+
+/// Class index a retiring buffer of `cap` elements files under: the
+/// exponent of the largest power of two ≤ `cap` (so every buffer on
+/// shelf `c` has capacity ≥ 2^c, which is what `request_class` assumes).
+fn capacity_class(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+impl Pool {
+    /// A live pool: leases recycle through size-classed shelves.
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// The off position of the pool on/off axis: leases are tagged and
+    /// accounted identically, but dropped storage is freed instead of
+    /// shelved. Bitwise-identical to [`Pool::new`] by construction
+    /// (acquire zero-fills either way) — property-tested.
+    pub fn disabled() -> Self {
+        Self::with_enabled(false)
+    }
+
+    fn with_enabled(enabled: bool) -> Self {
+        Pool {
+            inner: Arc::new(Inner {
+                enabled,
+                f32s: Mutex::new(Shelves::default()),
+                u16s: Mutex::new(Shelves::default()),
+                u8s: Mutex::new(Shelves::default()),
+                in_use: std::array::from_fn(|_| AtomicUsize::new(0)),
+                peak: std::array::from_fn(|_| AtomicUsize::new(0)),
+                total_in_use: AtomicUsize::new(0),
+                total_peak: AtomicUsize::new(0),
+                slab: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Is reuse on (see [`Pool::disabled`])?
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled
+    }
+
+    /// Lease a zero-filled buffer of `n` elements under `tag`. The
+    /// lease returns its storage to the pool when dropped.
+    pub fn take<T: PoolItem>(&self, tag: Tag, n: usize) -> PoolBuf<T> {
+        let mut data: Vec<T> = if self.inner.enabled && n > 0 {
+            let recycled = {
+                let mut shelves = T::shelves(self).lock().unwrap();
+                shelves.pop(request_class(n))
+            };
+            match recycled {
+                Some(v) => {
+                    self.inner.slab.fetch_sub(
+                        v.capacity() * std::mem::size_of::<T>(),
+                        Ordering::Relaxed);
+                    v
+                }
+                None => Vec::with_capacity(
+                    1usize << request_class(n)),
+            }
+        } else {
+            Vec::new()
+        };
+        // zero-fill: a recycled lease is indistinguishable from a fresh
+        // `vec![0; n]` (the pooling-is-bitwise-invisible contract)
+        data.clear();
+        data.resize(n, T::default());
+        self.add_bytes(tag, n * std::mem::size_of::<T>());
+        PoolBuf { data, tag, pool: Some(self.clone()) }
+    }
+
+    /// [`Pool::take`] monomorphized to `f32` (reads better at call
+    /// sites that would otherwise need a turbofish).
+    pub fn take_f32(&self, tag: Tag, n: usize) -> PoolBuf<f32> {
+        self.take(tag, n)
+    }
+
+    /// [`Pool::take`] monomorphized to `u16`.
+    pub fn take_u16(&self, tag: Tag, n: usize) -> PoolBuf<u16> {
+        self.take(tag, n)
+    }
+
+    /// [`Pool::take`] monomorphized to `u8`.
+    pub fn take_u8(&self, tag: Tag, n: usize) -> PoolBuf<u8> {
+        self.take(tag, n)
+    }
+
+    fn release<T: PoolItem>(&self, tag: Tag, mut data: Vec<T>) {
+        self.sub_bytes(tag, data.len() * std::mem::size_of::<T>());
+        if self.inner.enabled && data.capacity() > 0 {
+            data.clear();
+            let class = capacity_class(data.capacity());
+            self.inner.slab.fetch_add(
+                data.capacity() * std::mem::size_of::<T>(),
+                Ordering::Relaxed);
+            T::shelves(self).lock().unwrap().push(class, data);
+        }
+        // disabled (or zero-capacity): storage drops back to the system
+    }
+
+    fn add_bytes(&self, tag: Tag, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        let i = tag.index();
+        let new =
+            self.inner.in_use[i].fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.inner.peak[i].fetch_max(new, Ordering::Relaxed);
+        let total = self.inner.total_in_use.fetch_add(bytes, Ordering::Relaxed)
+            + bytes;
+        self.inner.total_peak.fetch_max(total, Ordering::Relaxed);
+    }
+
+    fn sub_bytes(&self, tag: Tag, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        self.inner.in_use[tag.index()].fetch_sub(bytes, Ordering::Relaxed);
+        self.inner.total_in_use.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Requested (logical) bytes currently leased, across all tags —
+    /// the live quantity the static accountant must equal at step
+    /// boundaries.
+    pub fn bytes_in_use(&self) -> usize {
+        self.inner.total_in_use.load(Ordering::Relaxed)
+    }
+
+    /// Requested bytes currently leased under `tag`.
+    pub fn bytes_in_use_tag(&self, tag: Tag) -> usize {
+        self.inner.in_use[tag.index()].load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Pool::bytes_in_use`].
+    pub fn peak_bytes(&self) -> usize {
+        self.inner.total_peak.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Pool::bytes_in_use_tag`].
+    pub fn peak_bytes_tag(&self, tag: Tag) -> usize {
+        self.inner.peak[tag.index()].load(Ordering::Relaxed)
+    }
+
+    /// Capacity bytes parked on free shelves (held for reuse, not in
+    /// use). Zero for a [`Pool::disabled`] pool.
+    pub fn slab_bytes(&self) -> usize {
+        self.inner.slab.load(Ordering::Relaxed)
+    }
+
+    /// Export the occupancy ledger as telemetry gauges:
+    /// `mem/pool_bytes{,_peak}`, `mem/pool_slab_bytes`, and the per-tag
+    /// set `mem/pool/<tag>_bytes{,_peak}`.
+    pub fn export_gauges(&self, reg: &mut crate::telemetry::Registry) {
+        reg.gauge("mem/pool_bytes", self.bytes_in_use() as u64);
+        reg.gauge("mem/pool_bytes_peak", self.peak_bytes() as u64);
+        reg.gauge("mem/pool_slab_bytes", self.slab_bytes() as u64);
+        for tag in Tag::ALL {
+            reg.gauge(&format!("mem/pool/{}_bytes", tag.name()),
+                      self.bytes_in_use_tag(tag) as u64);
+            reg.gauge(&format!("mem/pool/{}_bytes_peak", tag.name()),
+                      self.peak_bytes_tag(tag) as u64);
+        }
+    }
+}
+
+/// An RAII lease on pool storage. Dereferences to `[T]`; mutate through
+/// the slice, grow with [`PoolBuf::resize`] / [`PoolBuf::ensure`] (both
+/// keep the ledger exact). Dropping the lease returns the storage to
+/// its size-class shelf (or frees it — disabled pool / unpooled mode).
+#[derive(Debug)]
+pub struct PoolBuf<T: PoolItem> {
+    data: Vec<T>,
+    tag: Tag,
+    pool: Option<Pool>,
+}
+
+impl<T: PoolItem> PoolBuf<T> {
+    /// An empty legacy-mode buffer: plain `Vec` semantics, no pool, no
+    /// accounting. Constructors that predate the pool use this so their
+    /// call sites keep their exact behavior.
+    pub fn unpooled(tag: Tag) -> Self {
+        PoolBuf { data: Vec::new(), tag, pool: None }
+    }
+
+    /// Wrap an existing vector as a legacy-mode (unaccounted) buffer.
+    pub fn from_vec(tag: Tag, data: Vec<T>) -> Self {
+        PoolBuf { data, tag, pool: None }
+    }
+
+    /// This lease's purpose tag.
+    pub fn tag(&self) -> Tag {
+        self.tag
+    }
+
+    /// Logical length in elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Is the buffer zero-length?
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Backing capacity in elements (exceeds `len` after class
+    /// round-up or shrinking resizes).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Resize to exactly `n` elements, zero-filling growth — mirrors
+    /// `Vec::resize(n, 0)`, with the ledger adjusted by the delta.
+    pub fn resize(&mut self, n: usize) {
+        let before = self.data.len();
+        self.data.resize(n, T::default());
+        self.reconcile(before);
+    }
+
+    /// Resize to exactly `n` elements, filling growth with `v` —
+    /// mirrors `Vec::resize(n, v)`, with the ledger adjusted by the
+    /// delta.
+    pub fn resize_fill(&mut self, n: usize, v: T) {
+        let before = self.data.len();
+        self.data.resize(n, v);
+        self.reconcile(before);
+    }
+
+    /// Grow-only resize: after this, `len() >= n` (new elements
+    /// zero-filled); never shrinks, so steady-state lengths are
+    /// order-independent high-water marks.
+    pub fn ensure(&mut self, n: usize) {
+        if n > self.data.len() {
+            self.resize(n);
+        }
+    }
+
+    /// Truncate to zero length (ledger drops to zero for this lease;
+    /// capacity is retained).
+    pub fn clear(&mut self) {
+        let before = self.data.len();
+        self.data.clear();
+        self.reconcile(before);
+    }
+
+    /// Append a slice — mirrors `Vec::extend_from_slice`, accounted.
+    pub fn extend_from_slice(&mut self, s: &[T]) {
+        let before = self.data.len();
+        self.data.extend_from_slice(s);
+        self.reconcile(before);
+    }
+
+    /// Copy out as a plain vector (checkpoint/Tensor hand-off).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.data.clone()
+    }
+
+    /// View as a slice (explicit form of the deref).
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    /// View as a mutable slice (explicit form of the deref).
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Lend the backing `Vec` to a closure written against `Vec`
+    /// (e.g. `QSlot::read_into`, the `ChunkCursor` scratch), then
+    /// reconcile the ledger against whatever length it left behind.
+    /// This keeps pre-pool helpers byte-for-byte unchanged while their
+    /// scratch lives in the pool.
+    pub fn with_vec<R>(&mut self, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
+        let before = self.data.len();
+        let r = f(&mut self.data);
+        self.reconcile(before);
+        r
+    }
+
+    fn reconcile(&self, before: usize) {
+        let after = self.data.len();
+        if let Some(pool) = &self.pool {
+            let eb = std::mem::size_of::<T>();
+            if after > before {
+                pool.add_bytes(self.tag, (after - before) * eb);
+            } else if before > after {
+                pool.sub_bytes(self.tag, (before - after) * eb);
+            }
+        }
+    }
+}
+
+impl<T: PoolItem> Drop for PoolBuf<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let data = std::mem::take(&mut self.data);
+            pool.release(self.tag, data);
+        }
+    }
+}
+
+impl<T: PoolItem> std::ops::Deref for PoolBuf<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        &self.data
+    }
+}
+
+impl<T: PoolItem> std::ops::DerefMut for PoolBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_tracks_requested_bytes_per_tag() {
+        let pool = Pool::new();
+        let a = pool.take_f32(Tag::OptState, 100); // 400 B
+        let b = pool.take_u8(Tag::OptState, 100); // 100 B
+        let c = pool.take_u16(Tag::CommWire, 50); // 100 B
+        assert_eq!(pool.bytes_in_use_tag(Tag::OptState), 500);
+        assert_eq!(pool.bytes_in_use_tag(Tag::CommWire), 100);
+        assert_eq!(pool.bytes_in_use(), 600);
+        assert_eq!(pool.peak_bytes(), 600);
+        drop(a);
+        assert_eq!(pool.bytes_in_use_tag(Tag::OptState), 100);
+        assert_eq!(pool.bytes_in_use(), 200);
+        drop(b);
+        drop(c);
+        assert_eq!(pool.bytes_in_use(), 0);
+        // peaks persist past release
+        assert_eq!(pool.peak_bytes(), 600);
+        assert_eq!(pool.peak_bytes_tag(Tag::OptState), 500);
+        // requested bytes, not class capacity: 100 f32 rounds to a
+        // 128-element class, parked on the shelf after release
+        assert_eq!(pool.slab_bytes(), 128 * 4 + 128 + 64 * 2);
+    }
+
+    #[test]
+    fn leases_are_zero_filled_even_when_recycled() {
+        let pool = Pool::new();
+        let mut a = pool.take_f32(Tag::KernelScratch, 64);
+        for v in a.iter_mut() {
+            *v = 7.5;
+        }
+        drop(a);
+        let b = pool.take_f32(Tag::KernelScratch, 40);
+        assert!(b.iter().all(|&v| v.to_bits() == 0),
+                "recycled lease must read as fresh zeros");
+        assert!(b.capacity() >= 64, "lease should reuse the shelved slab");
+    }
+
+    #[test]
+    fn steady_state_acquire_release_reuses_storage() {
+        let pool = Pool::new();
+        // warm one slab into the 64..128 class
+        drop(pool.take_f32(Tag::CommFlat, 100));
+        let held = pool.slab_bytes();
+        assert!(held >= 100 * 4);
+        for _ in 0..10 {
+            let x = pool.take_f32(Tag::CommFlat, 70); // same class (128)
+            assert_eq!(pool.slab_bytes(), 0, "the one slab is out on lease");
+            drop(x);
+            assert_eq!(pool.slab_bytes(), held, "slab returned, not freed");
+        }
+    }
+
+    #[test]
+    fn disabled_pool_accounts_but_never_shelves() {
+        let pool = Pool::disabled();
+        assert!(!pool.is_enabled());
+        let a = pool.take_f32(Tag::CommResidual, 64);
+        assert_eq!(pool.bytes_in_use(), 256);
+        drop(a);
+        assert_eq!(pool.bytes_in_use(), 0);
+        assert_eq!(pool.slab_bytes(), 0);
+        let b = pool.take_f32(Tag::CommResidual, 64);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn resize_ensure_clear_keep_the_ledger_exact() {
+        let pool = Pool::new();
+        let mut a = pool.take_f32(Tag::KernelScratch, 0);
+        assert_eq!(pool.bytes_in_use(), 0);
+        a.resize(10);
+        assert_eq!(pool.bytes_in_use(), 40);
+        a.ensure(4); // grow-only: no shrink
+        assert_eq!(a.len(), 10);
+        a.ensure(32);
+        assert_eq!(pool.bytes_in_use(), 128);
+        assert!(a[10..].iter().all(|&v| v == 0.0));
+        a.resize(8);
+        assert_eq!(pool.bytes_in_use(), 32);
+        a.with_vec(|v| v.extend_from_slice(&[1.0; 8]));
+        assert_eq!(pool.bytes_in_use(), 64);
+        a.clear();
+        assert_eq!(pool.bytes_in_use(), 0);
+        assert_eq!(pool.peak_bytes(), 128);
+        drop(a);
+        assert_eq!(pool.bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn unpooled_mode_is_plain_vec_semantics() {
+        let pool = Pool::new();
+        let mut u: PoolBuf<f32> = PoolBuf::unpooled(Tag::KernelScratch);
+        u.resize(100);
+        u.extend_from_slice(&[1.0; 28]);
+        assert_eq!(u.len(), 128);
+        assert_eq!(pool.bytes_in_use(), 0, "unpooled leases are invisible");
+        drop(u); // and drop frees — nothing to assert beyond not crashing
+        let w = PoolBuf::from_vec(Tag::CkptStitch, vec![2.0f32; 3]);
+        assert_eq!(w.as_slice(), &[2.0, 2.0, 2.0]);
+    }
+
+    /// Satellite gate: interleaved acquire/release across threads never
+    /// changes the contents a consumer observes — every lease arrives
+    /// zeroed, holds exactly its own writes, and two live leases never
+    /// alias.
+    #[test]
+    fn interleaved_threaded_leases_are_isolated_and_deterministic() {
+        let pool = Pool::new();
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    for round in 0..200u32 {
+                        let n = 16 + ((t * 37 + round * 13) % 300) as usize;
+                        let mut buf = pool.take_f32(Tag::KernelScratch, n);
+                        assert!(buf.iter().all(|&v| v.to_bits() == 0),
+                                "thread {t} round {round}: dirty lease");
+                        let mark = (t * 1000 + round) as f32;
+                        for v in buf.iter_mut() {
+                            *v = mark;
+                        }
+                        // another thread acquiring concurrently must not
+                        // see or clobber this lease
+                        assert!(buf.iter().all(|&v| v == mark),
+                                "thread {t} round {round}: lease aliased");
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.bytes_in_use(), 0);
+        assert!(pool.slab_bytes() > 0);
+    }
+
+    #[test]
+    fn size_classes_cover_the_range() {
+        assert_eq!(request_class(1), 4); // MIN_CLASS_ELEMS = 16 = 2^4
+        assert_eq!(request_class(16), 4);
+        assert_eq!(request_class(17), 5);
+        assert_eq!(request_class(4096), 12);
+        assert_eq!(request_class(4097), 13);
+        for cap in [16usize, 17, 31, 32, 100, 4096] {
+            // a buffer filed under its capacity class satisfies any
+            // request routed to that class
+            let c = capacity_class(cap);
+            assert!(cap >= 1 << c);
+            assert!(cap < 1 << (c + 1));
+        }
+    }
+
+    /// Steady-state acquire/release cycles after warmup hit the shelves,
+    /// not the system allocator.
+    #[test]
+    fn warm_cycles_are_allocation_free() {
+        let pool = Pool::new();
+        // warm every class this loop touches
+        for n in [64usize, 100, 256, 1000] {
+            drop(pool.take_f32(Tag::CommFlat, n));
+            drop(pool.take_u8(Tag::CommWire, n));
+        }
+        let allocs = crate::alloc_count::thread_allocs();
+        for _ in 0..50 {
+            for n in [64usize, 100, 256, 1000] {
+                let f = pool.take_f32(Tag::CommFlat, n);
+                let b = pool.take_u8(Tag::CommWire, n);
+                std::hint::black_box((&f[..], &b[..]));
+            }
+        }
+        assert_eq!(crate::alloc_count::thread_allocs() - allocs, 0,
+                   "warm lease cycles must not touch the heap");
+    }
+}

@@ -1349,6 +1349,136 @@ mod tests {
         });
     }
 
+    /// ISSUE 9 tentpole gate: the memory pool is bitwise invisible.
+    /// The same seeded trajectory — every registry optimizer × {f32,
+    /// q8} state × {1, 2, 4} threads, and the compressed comm ring with
+    /// error-feedback residuals at every wire dtype — produces
+    /// identical bits across all three placement modes: legacy heap
+    /// (no pool), `Pool::disabled` (accounted, not recycled), and
+    /// `Pool::new` (recycled slabs). Acquire zero-fills either way, so
+    /// this holds structurally; the property pins it.
+    #[test]
+    fn memory_pool_is_bitwise_invisible() {
+        use crate::comms::{CommEngine, CommOpts};
+        use crate::optim::{self, Optimizer, StateDtype};
+        use crate::pool::Pool;
+        use crate::tensor::Tensor;
+        forall("pool on == off == legacy, bitwise", |rng| {
+            (gen::param_specs(rng, 3, 3, 6), rng.next_u64())
+        }, |(specs, seed)| {
+            let bits = |params: &[Tensor]| -> Vec<u32> {
+                params
+                    .iter()
+                    .flat_map(|t| t.data().iter().map(|v| v.to_bits()))
+                    .collect()
+            };
+            // pool mode: None = legacy heap; Some(pool) = leased
+            let traj = |name: &str, dtype: StateDtype, threads: usize,
+                        pool: Option<Pool>| -> Result<Vec<u32>, String> {
+                let mut spec = optim::OptimSpec::named(name)
+                    .map_err(|e| e.to_string())?
+                    .state_dtype(dtype)
+                    .threads(threads);
+                if let Some(p) = &pool {
+                    spec = spec.pool(p);
+                }
+                let mut opt =
+                    spec.build(specs).map_err(|e| e.to_string())?;
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut params: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                    .collect();
+                for _step in 0..3 {
+                    let grads: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                        .collect();
+                    opt.step(&mut params, &grads, 0.1);
+                }
+                if let Some(p) = &pool {
+                    // recycling must not leak: steady state re-leases
+                    if p.is_enabled() && p.bytes_in_use() == 0 {
+                        return Err(format!(
+                            "{name} @ {dtype:?}: pooled build holds no \
+                             leases"));
+                    }
+                }
+                Ok(bits(&params))
+            };
+            for name in optim::ALL {
+                for dtype in [StateDtype::F32, StateDtype::Q8] {
+                    for threads in [1usize, 2, 4] {
+                        let legacy = traj(name, dtype, threads, None)?;
+                        let off = traj(name, dtype, threads,
+                                       Some(Pool::disabled()))?;
+                        let on = traj(name, dtype, threads,
+                                      Some(Pool::new()))?;
+                        if legacy != off || off != on {
+                            return Err(format!(
+                                "{name} @ {dtype:?} x{threads}: the \
+                                 pool changed the trajectory"));
+                        }
+                    }
+                }
+            }
+            // the comm ring: outputs AND carried error-feedback
+            // residuals, two rounds so round 2 consumes round 1's
+            // residuals out of pooled buffers
+            for dtype in StateDtype::ALL {
+                let ranks = 3;
+                let run = |pool: Option<Pool>|
+                 -> Result<(Vec<u32>, Vec<u32>), String> {
+                    let opts = CommOpts { dtype, chunk: 64, threads: 2,
+                                          ..CommOpts::default() };
+                    let mut eng = match &pool {
+                        Some(p) => CommEngine::with_opts_in(
+                            specs, ranks, opts, p),
+                        None => CommEngine::with_opts(specs, ranks, opts),
+                    }
+                    .map_err(|e| e.to_string())?;
+                    let mut rng = crate::rng::Rng::new(*seed);
+                    let base: Vec<Vec<Tensor>> = (0..ranks)
+                        .map(|_| specs.iter()
+                            .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                            .collect())
+                        .collect();
+                    let mut out = base.clone();
+                    for _round in 0..2 {
+                        let mut g = base.clone();
+                        eng.allreduce_mean(&mut g)
+                            .map_err(|e| e.to_string())?;
+                        out = g;
+                    }
+                    let out_bits = out
+                        .iter()
+                        .flat_map(|rank| bits(rank))
+                        .collect();
+                    let res_bits = eng
+                        .state()
+                        .iter()
+                        .flat_map(|(_, t)| {
+                            t.data()
+                                .iter()
+                                .map(|v| v.to_bits())
+                                .collect::<Vec<u32>>()
+                        })
+                        .collect();
+                    Ok((out_bits, res_bits))
+                };
+                let legacy = run(None)?;
+                let off = run(Some(Pool::disabled()))?;
+                let on = run(Some(Pool::new()))?;
+                if legacy != off || off != on {
+                    return Err(format!(
+                        "{dtype:?} ring: the pool changed the exchange \
+                         or its residuals"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn shapes_in_bounds() {
         forall("shape bounds", |rng| gen::shape(rng, 4, 9), |s| {

@@ -165,11 +165,18 @@ pub enum Gauge {
     /// peaks at 2 under `comm_overlap` (hop lane + stager), pinned at 1
     /// on the serial bucket loop.
     CommInflightBuckets = 5,
+    /// Live bytes leased from the memory pool across every tag
+    /// (`Pool::bytes_in_use`; equals the static accountant's
+    /// steady-state total when the pool owns all buffers).
+    PoolBytes = 6,
+    /// High-water mark of pool occupancy since construction
+    /// (`Pool::peak_bytes`) — the figure the CI memory gate budgets.
+    PoolBytesPeak = 7,
 }
 
 impl Gauge {
     /// Number of gauges (size of the per-thread gauge array).
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 8;
 
     /// Every gauge, in index order.
     pub const ALL: [Gauge; Gauge::COUNT] = [
@@ -179,6 +186,8 @@ impl Gauge {
         Gauge::StepScratchBytes,
         Gauge::OptImbalancePermille,
         Gauge::CommInflightBuckets,
+        Gauge::PoolBytes,
+        Gauge::PoolBytesPeak,
     ];
 
     /// Canonical registry/JSON name.
@@ -190,6 +199,8 @@ impl Gauge {
             Gauge::StepScratchBytes => "mem/step_scratch_bytes",
             Gauge::OptImbalancePermille => "opt/imbalance_permille",
             Gauge::CommInflightBuckets => "comm/inflight_buckets",
+            Gauge::PoolBytes => "mem/pool_bytes",
+            Gauge::PoolBytesPeak => "mem/pool_bytes_peak",
         }
     }
 }
