@@ -3,7 +3,7 @@
 
 .PHONY: tier1 build test lint fmt clippy bench-optim bench-quick \
 	bench-comms bench-comms-quick bench-comms-overlap bench-telemetry \
-	benches docs artifacts
+	benches docs artifacts report
 
 tier1:
 	cargo build --release && cargo test -q
@@ -69,6 +69,23 @@ bench-telemetry:
 	BENCH_QUICK=1 cargo bench --bench bench_collectives -- --telemetry
 	BENCH_QUICK=1 cargo bench --bench bench_memory -- --telemetry
 	cargo run --release --bin sm3-train -- bench-check \
+		--baseline ci/BENCH_memory_baseline.json \
+		out/BENCH_optim.json out/BENCH_comms.json out/BENCH_memory.json
+
+# Run-health + performance report (EXPERIMENTS.md §Run-health): quick
+# benches leave BENCH_*.json documents plus a Chrome-trace timeline
+# (out/trace_comms.json), then `sm3-train report --check` validates the
+# trace, prints the measured hop-vs-stage overlap efficiency, and holds
+# every budgeted metric to the committed baselines. With artifacts/
+# present, add a trainer pass (`--trace-out out/trace_train.json
+# --telemetry-jsonl out/train_events.jsonl`) and pass `--jsonl` to the
+# reporter for the per-step phase budgets and watchdog verdicts.
+report:
+	BENCH_QUICK=1 cargo bench --bench bench_optim -- --telemetry
+	BENCH_QUICK=1 cargo bench --bench bench_collectives -- --telemetry
+	BENCH_QUICK=1 cargo bench --bench bench_memory -- --telemetry
+	cargo run --release --bin sm3-train -- report --check \
+		--trace out/trace_comms.json \
 		--baseline ci/BENCH_memory_baseline.json \
 		out/BENCH_optim.json out/BENCH_comms.json out/BENCH_memory.json
 

@@ -162,7 +162,12 @@ fn main() -> anyhow::Result<()> {
     // from every CI run, not only the --telemetry job
     let tele = telemetry_requested(&argv) || quick;
     let _tele_guard = tele.then(telemetry::enable);
+    // record every span/counter/gauge into the per-thread trace rings
+    // too: the bench leaves a Chrome-trace timeline next to the JSON
+    // document, and CI validates it with `sm3-train report --check`
+    let _trace_guard = tele.then(telemetry::enable_tracing);
     if tele {
+        sm3::telemetry::trace_event::set_thread_label("bench-main");
         println!("telemetry on — writing out/BENCH_comms.json at exit");
     }
     let budget = if quick {
@@ -179,6 +184,12 @@ fn main() -> anyhow::Result<()> {
     let d: usize = specs.iter().map(ParamSpec::numel).sum();
 
     run_gates(&specs)?;
+    if tele {
+        // the gates above ran outsized engine configs under the live
+        // guard; re-arm the gauge high-water marks so the peaks in
+        // BENCH_comms.json describe the measured sweeps, not the gates
+        telemetry::reset_thread_run();
+    }
 
     println!("\n=== ring all-reduce ({:.2}M floats) — ranks × dtype × \
               threads ===", d as f64 / 1e6);
@@ -393,6 +404,18 @@ fn main() -> anyhow::Result<()> {
         write_bench_json("bench_collectives", quick,
                          "out/BENCH_comms.json")?;
         println!("telemetry document: out/BENCH_comms.json");
+        // drain the trace rings (bench-main lane + every engine's
+        // comm-hop worker lane) into a Chrome-trace document; it must
+        // pass the in-repo validator before it is worth committing to
+        // an artifact
+        let mut tl = telemetry::Timeline::default();
+        tl.drain();
+        let doc = tl.to_chrome_json();
+        telemetry::validate_trace_doc(&doc)
+            .map_err(|e| anyhow::anyhow!("exported trace invalid: {e}"))?;
+        std::fs::write("out/trace_comms.json", format!("{doc}\n"))?;
+        println!("trace timeline: out/trace_comms.json ({} events, {} \
+                  dropped)", tl.records.len(), tl.dropped);
     }
     Ok(())
 }

@@ -503,6 +503,11 @@ fn main() -> anyhow::Result<()> {
                 // number — the BENCH_optim.json byte gauges are asserted,
                 // not just reported
                 telemetry::gauge(Gauge::OptStateBytes, sb as u64);
+                // re-arm the high-water mark: this config's exported
+                // peak is its own footprint, not a leak of the f32
+                // predecessor's larger one (`Registry::reset_run`'s
+                // per-thread half; the regression test lives there)
+                telemetry::reset_thread_run();
                 let stat = opt_state_bytes(name, &specs, dtype)?;
                 anyhow::ensure!(
                     telemetry::thread_gauge(Gauge::OptStateBytes).last

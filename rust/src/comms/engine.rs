@@ -51,7 +51,7 @@ use super::transport::{self, InprocTransport, Transport, TransportKind};
 use super::{check_comm_chunk, TimingModel, DEFAULT_COMM_CHUNK};
 use crate::optim::{Backend, ParamSpec, StateDtype};
 use crate::pool::{Pool, PoolBuf, Tag};
-use crate::telemetry::{self, Counter, Gauge, Probe};
+use crate::telemetry::{self, trace_event, Counter, Gauge, Probe};
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -315,6 +315,13 @@ impl CommEngine {
         self.timing = timing;
     }
 
+    /// The interconnect model currently in force (defaults or the
+    /// trainer's measured refit) — the health watchdogs' expected-hop
+    /// baseline.
+    pub fn timing(&self) -> &TimingModel {
+        &self.timing
+    }
+
     /// Route the wire codec, reduce, and unpack lanes through `backend`
     /// (config `kernel_backend`; bitwise identical across backends).
     pub fn set_backend(&mut self, backend: Backend) {
@@ -458,7 +465,7 @@ impl CommEngine {
     fn exchange_bucketed(&mut self, ranks: &mut [Vec<Tensor>], tele: bool)
                          -> Result<()> {
         let pack_span = telemetry::span(Probe::CommPack);
-        self.pack(ranks);
+        self.pack(ranks, tele);
         drop(pack_span);
         if self.dtype != StateDtype::F32 {
             let fb_span = telemetry::span(Probe::CommFeedback);
@@ -548,6 +555,7 @@ impl CommEngine {
     fn stage_bucket(&mut self, ranks: &[Vec<Tensor>], k: usize) {
         let (lo, hi) = self.plan.stage_range(k);
         let shared = self.shared_bufs.as_ref().expect("overlap bufs");
+        let tele = telemetry::enabled();
         {
             let _s = telemetry::span(Probe::CommPack);
             for (r, leaves) in ranks.iter().enumerate() {
@@ -568,6 +576,9 @@ impl CommEngine {
                     if off >= hi {
                         break;
                     }
+                }
+                if tele {
+                    scan_pack_nonfinite(r, buf);
                 }
             }
         }
@@ -613,13 +624,21 @@ impl CommEngine {
         }
     }
 
-    /// Copy every rank's leaves into its flat staging buffer.
-    fn pack(&mut self, ranks: &[Vec<Tensor>]) {
-        for (buf, leaves) in self.bufs.iter_mut().zip(ranks) {
+    /// Copy every rank's leaves into its flat staging buffer. With
+    /// telemetry on, each rank's staged gradients are scanned for
+    /// non-finite values (the comm-pack wiring of the health-counter
+    /// contract) — a read-only pass, so on == off stays bitwise.
+    fn pack(&mut self, ranks: &[Vec<Tensor>], tele: bool) {
+        for (r, (buf, leaves)) in
+            self.bufs.iter_mut().zip(ranks).enumerate()
+        {
             let mut off = 0;
             for t in leaves {
                 buf[off..off + t.len()].copy_from_slice(t.data());
                 off += t.len();
+            }
+            if tele {
+                scan_pack_nonfinite(r, buf);
             }
         }
     }
@@ -725,15 +744,32 @@ impl Drop for CommEngine {
     }
 }
 
+/// Scan one rank's freshly staged gradient range for non-finite values
+/// and feed the `grad/nonfinite` health counter, tagging the trace
+/// instant with the comm rank. Read-only on the staged data, counting
+/// only — telemetry on == off stays bitwise (the crate-wide contract).
+fn scan_pack_nonfinite(rank: usize, staged: &[f32]) {
+    let bad = staged.iter().filter(|x| !x.is_finite()).count() as u64;
+    if bad > 0 {
+        trace_event::set_rank(rank as u32);
+        telemetry::count(Counter::GradNonFinite, bad);
+        trace_event::clear_rank();
+    }
+}
+
 /// The persistent hop worker: waits for a bucket, runs its schedule
 /// steps serially with its own scratch slab, reports back. Phase times
 /// land in the shared atomics so the owner can fold them into the
 /// telemetry probes (worker threads have their own telemetry cells —
-/// same idiom as `optim::parallel`'s worker spans).
+/// same idiom as `optim::parallel`'s worker spans); being a persistent
+/// thread, it also records its hop spans straight into its own trace
+/// ring, so the overlapped pipeline shows up as a real `comm-hop` lane
+/// alongside the coordinator's staging spans.
 fn hop_worker_loop(shared: Arc<HopShared>, bufs: Arc<RankBufs>,
                    plan: Arc<BucketPlan>,
                    channel: Option<Arc<InprocTransport>>,
                    dtype: StateDtype, chunk: usize, pool: Option<Pool>) {
+    trace_event::set_thread_label("comm-hop");
     let mut scratch = match &pool {
         Some(p) => WireScratch::new_in(p, chunk),
         None => WireScratch::new(chunk),
@@ -768,15 +804,16 @@ fn hop_worker_loop(shared: Arc<HopShared>, bufs: Arc<RankBufs>,
                                    chunk, backend, &mut scratch, via)
             };
             if tele {
-                let slot = match phase {
-                    Phase::Reduce => 0,
-                    Phase::Finalize => 1,
-                    Phase::Gather => 2,
+                let dur = telemetry::now_ns().saturating_sub(t0);
+                let (slot, probe) = match phase {
+                    Phase::Reduce => (0, Probe::CommHopReduce),
+                    Phase::Finalize => (1, Probe::CommHopEncode),
+                    Phase::Gather => (2, Probe::CommHopGather),
                 };
-                shared.hop_ns[slot].fetch_add(
-                    telemetry::now_ns().saturating_sub(t0),
-                    Ordering::Relaxed,
-                );
+                shared.hop_ns[slot].fetch_add(dur, Ordering::Relaxed);
+                // trace-only record on this thread's own lane: the
+                // registry fold stays with the owner (no double count)
+                trace_event::complete(probe, t0, dur);
             }
             if let Err(e) = r {
                 err = Some(format!("{e:#}"));
@@ -1195,6 +1232,32 @@ mod tests {
                     "{p:?} recorded no span");
         }
         telemetry::reset_thread();
+    }
+
+    /// ISSUE 10: the comm-pack path feeds the `grad/nonfinite` health
+    /// counter — one count per non-finite staged value — and a clean
+    /// exchange counts nothing.
+    #[test]
+    fn pack_path_counts_nonfinite_gradients() {
+        let specs = specs();
+        let _g = telemetry::enable();
+        let mut eng =
+            CommEngine::new(&specs, 2, StateDtype::F32, 64, 1).unwrap();
+        let mut g = grads(&specs, 2, 3);
+
+        let before = telemetry::thread_totals();
+        eng.allreduce_mean(&mut g).unwrap();
+        let clean = telemetry::thread_totals();
+        assert_eq!(clean.counter(Counter::GradNonFinite)
+                       - before.counter(Counter::GradNonFinite), 0);
+
+        let mut g = grads(&specs, 2, 3);
+        g[0][0].data_mut()[1] = f32::NAN;
+        g[1][1].data_mut()[2] = f32::INFINITY;
+        eng.allreduce_mean(&mut g).unwrap();
+        let after = telemetry::thread_totals();
+        assert_eq!(after.counter(Counter::GradNonFinite)
+                       - clean.counter(Counter::GradNonFinite), 2);
     }
 
     /// Wire bytes shrink with the dtype; q8 clears the ≥ 3.5× line on

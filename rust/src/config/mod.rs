@@ -10,6 +10,7 @@ pub mod toml;
 
 use self::toml::TomlValue;
 use crate::comms::TransportKind;
+use crate::health::HealthAction;
 use crate::optim::{Backend, GroupSpec, OptimSpec, SplitPolicy, StateDtype};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -204,6 +205,15 @@ pub struct TrainConfig {
     /// optional JSONL event-stream path (one `step` event per training
     /// step plus a final `summary` event). Requires `telemetry = true`.
     pub telemetry_jsonl: Option<String>,
+    /// optional Chrome-trace output path: record every telemetry span
+    /// and counter/gauge update into per-thread trace rings and write
+    /// the drained timeline as Chrome-trace/Perfetto JSON at run end
+    /// (DESIGN.md §17). Requires `telemetry = true`.
+    pub trace_out: Option<String>,
+    /// what an abort-class health verdict does: `"warn"` logs and
+    /// continues (default), `"abort"` halts the run naming the tripped
+    /// rule. The watchdogs themselves run whenever telemetry is on.
+    pub health_action: HealthAction,
     /// RNG seed for data + init
     pub seed: u64,
     /// artifact directory
@@ -235,6 +245,8 @@ impl Default for TrainConfig {
             pool: true,
             telemetry: false,
             telemetry_jsonl: None,
+            trace_out: None,
+            health_action: HealthAction::Warn,
             seed: 0,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
@@ -321,8 +333,8 @@ const TRAIN_KEYS: &[&str] = &[
     "model", "exec", "steps", "eval_every", "grad_accum", "workers",
     "step_threads", "state_dtype", "step_chunk", "comm_dtype", "comm_chunk",
     "comm_threads", "comm_buckets", "comm_overlap", "comm_transport",
-    "kernel_backend", "pool", "telemetry", "telemetry_jsonl", "seed",
-    "artifacts_dir", "out_dir",
+    "kernel_backend", "pool", "telemetry", "telemetry_jsonl", "trace_out",
+    "health_action", "seed", "artifacts_dir", "out_dir",
 ];
 
 /// Keys accepted in each `[[optim.group]]`.
@@ -517,6 +529,26 @@ impl TrainConfig {
                                    string path, got {v:?}"),
                 },
             },
+            trace_out: match train_tbl.get("trace_out") {
+                None => d.trace_out.clone(),
+                Some(v) => match v.as_str() {
+                    Some(s) => Some(s.to_string()),
+                    None => bail!("[train] trace_out must be a string \
+                                   path, got {v:?}"),
+                },
+            },
+            health_action: match train_tbl.get("health_action") {
+                None => d.health_action,
+                Some(v) => match v.as_str() {
+                    // strict like the other enum keys: a typo must
+                    // error, not silently keep warning
+                    Some(s) => s.parse().map_err(|e| {
+                        anyhow::anyhow!("[train] {e}")
+                    })?,
+                    None => bail!("[train] health_action must be a string \
+                                   (`warn` or `abort`), got {v:?}"),
+                },
+            },
             seed: get_u64(&train_tbl, "seed", d.seed),
             artifacts_dir: get_str(&train_tbl, "artifacts_dir",
                                    &d.artifacts_dir),
@@ -610,6 +642,10 @@ impl TrainConfig {
         if self.telemetry_jsonl.is_some() && !self.telemetry {
             bail!("[train] telemetry_jsonl requires telemetry = true \
                    (the event stream is fed by the telemetry cells)");
+        }
+        if self.trace_out.is_some() && !self.telemetry {
+            bail!("[train] trace_out requires telemetry = true (the \
+                   trace rings record the telemetry spans)");
         }
         if self.telemetry && self.exec == ExecMode::Fused {
             // the fused artifact exposes no phase seams to instrument;
@@ -1011,6 +1047,36 @@ warmup_steps = 40
         assert!(msg.contains("telemetry_json")
                     && msg.contains("telemetry_jsonl"),
                 "{msg}");
+    }
+
+    /// ISSUE 10: the trace/health knobs parse, default off/warn, and
+    /// validate (trace rings record telemetry spans, so `trace_out`
+    /// requires the cells on).
+    #[test]
+    fn trace_and_health_knobs_parse_defaults_and_validate() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.trace_out, None);
+        assert_eq!(cfg.health_action, HealthAction::Warn);
+        let cfg = TrainConfig::from_toml(
+            "[train]\ntelemetry = true\ntrace_out = \"out/trace.json\"\n\
+             health_action = \"abort\"\n").unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(cfg.health_action, HealthAction::Abort);
+        // trace rings record the telemetry spans
+        let err = TrainConfig::from_toml(
+            "[train]\ntrace_out = \"t.json\"\n").unwrap_err();
+        assert!(err.to_string().contains("requires telemetry"), "{err}");
+        // strict types and values
+        assert!(TrainConfig::from_toml(
+            "[train]\ntelemetry = true\ntrace_out = 7\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\nhealth_action = \"panic\"\n").is_err());
+        assert!(TrainConfig::from_toml(
+            "[train]\nhealth_action = true\n").is_err());
+        // health_action is legal without telemetry (the rules just see
+        // loss-only observations)
+        assert!(TrainConfig::from_toml(
+            "[train]\nhealth_action = \"abort\"\n").is_ok());
     }
 
     /// ISSUE 3 satellite: the staircase schedule's η₀/α/τ come from the

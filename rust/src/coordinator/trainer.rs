@@ -6,13 +6,14 @@ use std::sync::Arc;
 use crate::comms::{CommEngine, CommOpts, TimingModel};
 use crate::config::{ExecMode, TrainConfig};
 use crate::data::{source_for_model, translation::trim_ref, BatchSource};
+use crate::health::{HealthMonitor, RunHealth, StepObs};
 use crate::json::Json;
 use crate::metrics::{corpus_bleu, Ema};
 use crate::optim::{schedule::Schedule, Optimizer, StateDtype};
 use crate::pool::Pool;
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::{Artifact, HostValue, Runtime};
-use crate::telemetry::{self, Gauge, Probe};
+use crate::telemetry::{self, trace_event, Counter, Gauge, Probe};
 use crate::tensor::Tensor;
 
 /// One training-step record (the loss-curve CSV row). The per-phase
@@ -139,6 +140,15 @@ pub struct Trainer {
     /// lifetime when `cfg.telemetry` is set (guards nest across
     /// concurrent trainers)
     _telemetry: Option<telemetry::Enabled>,
+    /// keeps per-event trace recording on for this trainer's lifetime
+    /// when `cfg.trace_out` is set (DESIGN.md §17)
+    _tracing: Option<telemetry::TracingGuard>,
+    /// the accumulated trace timeline, drained from the rings at each
+    /// step boundary and written as Chrome-trace JSON at run end
+    timeline: Option<telemetry::Timeline>,
+    /// the run-health watchdogs, evaluated at every step boundary from
+    /// the step's telemetry deltas (DESIGN.md §17)
+    health: HealthMonitor,
 }
 
 impl Trainer {
@@ -233,6 +243,15 @@ impl Trainer {
             source_for_model(&meta, cfg.seed, cfg.workers, cfg.workers + 1)?;
 
         let tele_guard = cfg.telemetry.then(telemetry::enable);
+        let tracing_guard =
+            cfg.trace_out.is_some().then(telemetry::enable_tracing);
+        if tracing_guard.is_some() {
+            // the step loop runs on this thread: name its trace lane
+            trace_event::set_thread_label("coordinator");
+        }
+        let timeline =
+            cfg.trace_out.is_some().then(telemetry::Timeline::default);
+        let health = HealthMonitor::standard(cfg.health_action);
 
         Ok(Self {
             cfg,
@@ -250,6 +269,9 @@ impl Trainer {
             comm_hop_samples: Vec::new(),
             comm_stage_samples: Vec::new(),
             _telemetry: tele_guard,
+            _tracing: tracing_guard,
+            timeline,
+            health,
         })
     }
 
@@ -650,11 +672,30 @@ impl Trainer {
                     &before, &[Probe::CommUnpack]),
                 ckpt_ms: after.ms_since(&before, &[Probe::CkptIo]),
             };
+            // the watchdogs see this step's telemetry deltas (read-only
+            // bookkeeping — the trajectory is untouched, proptested)
+            let health = self.observe_health(&rec, &before, &after);
             if let Some(w) = jsonl.as_mut() {
-                w.event(&step_event(&rec))
+                w.event(&step_event_with_health(&rec, &health))
                     .context("writing telemetry_jsonl step event")?;
             }
+            // drain the trace rings at the step boundary (quiescent:
+            // workers are joined, the hop worker is idle)
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.drain();
+            }
             hist.steps.push(rec);
+            if !health.ok() {
+                eprintln!("[health] {}", health.report());
+            }
+            if self.health.must_abort(&health) {
+                // flush what the rings hold before halting, so the
+                // post-mortem trace covers the tripping step
+                self.write_trace()
+                    .context("writing trace_out after health abort")?;
+                bail!("run halted by health watchdog: {}",
+                      health.report());
+            }
             if self.step % self.cfg.eval_every == 0
                 || self.step == self.cfg.steps
             {
@@ -676,7 +717,86 @@ impl Trainer {
                 .context("writing telemetry_jsonl summary event")?;
             w.flush().context("flushing telemetry_jsonl")?;
         }
+        self.write_trace().context("writing trace_out")?;
         Ok(hist)
+    }
+
+    /// Build this step's watchdog observations from the telemetry
+    /// deltas and run every rule. Works with telemetry off too — the
+    /// counters/hops/pool sides are simply absent and the loss window
+    /// still guards divergence.
+    fn observe_health(&mut self, rec: &StepRecord,
+                      before: &telemetry::Totals,
+                      after: &telemetry::Totals) -> RunHealth {
+        let mut obs = StepObs {
+            step: rec.step,
+            loss: rec.loss,
+            grad_nonfinite: after.counter(Counter::GradNonFinite)
+                .saturating_sub(before.counter(Counter::GradNonFinite)),
+            update_nonfinite: after.counter(Counter::UpdateNonFinite)
+                .saturating_sub(before.counter(Counter::UpdateNonFinite)),
+            ..StepObs::default()
+        };
+        const HOPS: [Probe; 3] = [Probe::CommHopReduce,
+                                  Probe::CommHopEncode,
+                                  Probe::CommHopGather];
+        let hop_ns: u64 = HOPS.iter()
+            .map(|&p| after.ns(p).saturating_sub(before.ns(p)))
+            .sum();
+        let hop_n: u64 = HOPS.iter()
+            .map(|&p| after.spans(p).saturating_sub(before.spans(p)))
+            .sum();
+        let wire = after.counter(Counter::CommWireBytes)
+            .saturating_sub(before.counter(Counter::CommWireBytes));
+        if let Engine::Split { opt, comms, pool, .. } = &self.engine {
+            if hop_n > 0 {
+                // measured mean hop vs the calibrated model's
+                // prediction for the same per-hop payload
+                let timing = comms.timing();
+                let per_hop_bytes = wire as f64 / hop_n as f64;
+                obs.hop_mean_ns = Some(hop_ns as f64 / hop_n as f64);
+                obs.hop_expect_ns = Some(
+                    (timing.hop_latency
+                        + per_hop_bytes / timing.link_bandwidth) * 1e9);
+            }
+            if telemetry::enabled() {
+                // live pool occupancy vs the object accounting the PR 9
+                // pool tests pin to the static accountant
+                let scratch =
+                    if self.cfg.state_dtype == StateDtype::F32 {
+                        0
+                    } else {
+                        2 * self.cfg.step_chunk * 4 * self.cfg.step_threads
+                    };
+                let accounted = opt.state_bytes() + scratch
+                    + comms.buffer_bytes() + comms.scratch_bytes();
+                obs.pool_bytes = Some(pool.bytes_in_use() as u64);
+                obs.accountant_bytes = Some(accounted as u64);
+            }
+        }
+        self.health.observe(&obs)
+    }
+
+    /// Drain any remaining trace records and write the accumulated
+    /// timeline as Chrome-trace JSON to `cfg.trace_out`. No-op without
+    /// `trace_out`; idempotent (the abort path flushes early).
+    fn write_trace(&mut self) -> Result<()> {
+        let (Some(tl), Some(path)) =
+            (self.timeline.as_mut(), self.cfg.trace_out.as_deref())
+        else {
+            return Ok(());
+        };
+        tl.drain();
+        let doc = tl.to_chrome_json();
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {parent:?}"))?;
+            }
+        }
+        std::fs::write(path, format!("{doc}\n"))
+            .with_context(|| format!("writing {path}"))?;
+        Ok(())
     }
 }
 
@@ -700,6 +820,17 @@ fn step_event(r: &StepRecord) -> Json {
     put("comm_hop_ms", Json::Number(r.comm_hop_ms));
     put("comm_unpack_ms", Json::Number(r.comm_unpack_ms));
     put("ckpt_ms", Json::Number(r.ckpt_ms));
+    Json::Object(o)
+}
+
+/// The step event plus the step's health verdict
+/// (`"health": {verdict, rules: [...]}`) — additive over the PR 7
+/// schema, so existing consumers are untouched.
+fn step_event_with_health(r: &StepRecord, h: &RunHealth) -> Json {
+    let Json::Object(mut o) = step_event(r) else {
+        unreachable!("step_event returns an object");
+    };
+    o.insert("health".to_string(), h.to_json());
     Json::Object(o)
 }
 

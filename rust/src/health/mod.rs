@@ -1,0 +1,359 @@
+//! Run-health watchdogs: pluggable rules evaluated at step boundaries
+//! from telemetry the trainer already collects (DESIGN.md §17).
+//!
+//! The paper's memory-efficient family is exactly the kind of run that
+//! must detect instability *online* — Shazeer & Stern (2018) document
+//! out-of-date second-moment estimators producing outsized updates —
+//! and the ROADMAP's endurance-run scenario (fault injection, rank
+//! kill/restore) is blocked on detecting divergence, NaN contamination,
+//! and stalls at all. This module closes that gap:
+//!
+//! * a [`WatchdogRule`] sees one [`StepObs`] per step — loss, the
+//!   non-finite counters wired into the chunk-kernel and comm-pack
+//!   paths, the step's measured mean ring-hop time against the
+//!   [`TimingModel`](crate::comms::TimingModel) fit's prediction, and
+//!   live pool occupancy against the static accountant — and returns a
+//!   [`Trip`] naming itself when its invariant breaks;
+//! * the [`HealthMonitor`] folds every rule's answer into a per-step
+//!   [`RunHealth`] verdict that the trainer logs, emits into the JSONL
+//!   stream, and — under `[train] health_action = abort` — turns into a
+//!   halt with a report naming the tripped rule.
+//!
+//! Determinism: rules read observations and keep plain bookkeeping
+//! (a sliding loss window); they never touch training arithmetic, so a
+//! run with health monitoring on is bitwise identical to one with it
+//! off, as the proptest gate asserts alongside tracing.
+
+mod rules;
+
+pub use rules::{
+    standard_rules, HopStallRule, LossDivergenceRule, NonFiniteRule,
+    PoolDriftRule,
+};
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// What one step looked like to the watchdogs. Built by the trainer
+/// from per-step telemetry snapshot deltas; every field is observable
+/// without touching training arithmetic.
+#[derive(Clone, Debug, Default)]
+pub struct StepObs {
+    /// 1-based step index.
+    pub step: u64,
+    /// The step's training loss.
+    pub loss: f64,
+    /// `grad/nonfinite` counter delta this step (chunk-kernel tile scan
+    /// + comm-pack scan).
+    pub grad_nonfinite: u64,
+    /// `opt/update_nonfinite` counter delta this step (post-update
+    /// parameter tile scan).
+    pub update_nonfinite: u64,
+    /// Measured mean ring-hop duration this step, ns (reduce + encode +
+    /// gather sweeps), when the step exchanged gradients.
+    pub hop_mean_ns: Option<f64>,
+    /// The calibrated timing model's predicted per-hop duration, ns.
+    pub hop_expect_ns: Option<f64>,
+    /// Live pool occupancy at the step boundary, bytes.
+    pub pool_bytes: Option<u64>,
+    /// The static accountant's steady-state total for the same buffers.
+    pub accountant_bytes: Option<u64>,
+}
+
+/// How bad a tripped rule is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Degraded but survivable (a stalled hop, pool drift) — log and
+    /// continue under either action.
+    Warn,
+    /// The run is producing garbage (NaN contamination, divergence) —
+    /// halts the run under `health_action = abort`.
+    Abort,
+}
+
+impl Severity {
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Abort => "abort",
+        }
+    }
+}
+
+/// One tripped rule: who, how bad, and the measured detail.
+#[derive(Clone, Debug)]
+pub struct Trip {
+    /// The rule's [`WatchdogRule::name`].
+    pub rule: &'static str,
+    /// The rule's severity class.
+    pub severity: Severity,
+    /// Human-readable measurement that tripped it.
+    pub detail: String,
+}
+
+/// A pluggable per-step invariant. `check` runs once per step in
+/// registration order; returning `Some` trips the rule for this step
+/// (rules are stateful — e.g. a sliding loss window — and stay armed
+/// after tripping).
+pub trait WatchdogRule {
+    /// Stable rule name, used in verdicts, JSONL events, and reports.
+    fn name(&self) -> &'static str;
+    /// Inspect one step; `Some(trip)` if the invariant broke.
+    fn check(&mut self, obs: &StepObs) -> Option<Trip>;
+}
+
+/// Per-step verdict: which rules tripped, if any.
+#[derive(Clone, Debug, Default)]
+pub struct RunHealth {
+    /// The step this verdict describes.
+    pub step: u64,
+    /// Every rule that tripped this step (empty = healthy).
+    pub trips: Vec<Trip>,
+}
+
+impl RunHealth {
+    /// True when no rule tripped.
+    pub fn ok(&self) -> bool {
+        self.trips.is_empty()
+    }
+
+    /// The worst severity among the trips, if any.
+    pub fn worst(&self) -> Option<Severity> {
+        self.trips.iter().map(|t| t.severity).max()
+    }
+
+    /// `"ok"`, `"warn"`, or `"abort"` — the verdict the trainer logs
+    /// per step.
+    pub fn verdict(&self) -> &'static str {
+        match self.worst() {
+            None => "ok",
+            Some(s) => s.name(),
+        }
+    }
+
+    /// JSON form for the JSONL stream:
+    /// `{verdict, rules: [{rule, severity, detail}]}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("verdict".into(), Json::String(self.verdict().into()));
+        let rules: Vec<Json> = self
+            .trips
+            .iter()
+            .map(|t| {
+                let mut r = BTreeMap::new();
+                r.insert("rule".into(), Json::String(t.rule.into()));
+                r.insert("severity".into(),
+                         Json::String(t.severity.name().into()));
+                r.insert("detail".into(), Json::String(t.detail.clone()));
+                Json::Object(r)
+            })
+            .collect();
+        o.insert("rules".into(), Json::Array(rules));
+        Json::Object(o)
+    }
+
+    /// One-line report naming the tripped rules (the abort message).
+    pub fn report(&self) -> String {
+        if self.ok() {
+            return format!("step {}: healthy", self.step);
+        }
+        let rules: Vec<String> = self
+            .trips
+            .iter()
+            .map(|t| format!("{} [{}]: {}", t.rule, t.severity.name(),
+                             t.detail))
+            .collect();
+        format!("step {}: {}", self.step, rules.join("; "))
+    }
+}
+
+/// What the trainer does with an abort-class verdict
+/// (`[train] health_action`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HealthAction {
+    /// Log the verdict and keep training.
+    #[default]
+    Warn,
+    /// Halt the run with a report naming the tripped rule.
+    Abort,
+}
+
+impl HealthAction {
+    /// Canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthAction::Warn => "warn",
+            HealthAction::Abort => "abort",
+        }
+    }
+}
+
+impl std::str::FromStr for HealthAction {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "warn" => Ok(HealthAction::Warn),
+            "abort" => Ok(HealthAction::Abort),
+            other => anyhow::bail!(
+                "health_action must be `warn` or `abort`, got `{other}`"),
+        }
+    }
+}
+
+/// The monitor: a rule set plus the configured action.
+pub struct HealthMonitor {
+    rules: Vec<Box<dyn WatchdogRule>>,
+    action: HealthAction,
+}
+
+impl HealthMonitor {
+    /// The standard rule set ([`standard_rules`]) under `action`.
+    pub fn standard(action: HealthAction) -> Self {
+        Self::with_rules(standard_rules(), action)
+    }
+
+    /// A custom rule set under `action`.
+    pub fn with_rules(rules: Vec<Box<dyn WatchdogRule>>,
+                      action: HealthAction) -> Self {
+        HealthMonitor { rules, action }
+    }
+
+    /// The configured action.
+    pub fn action(&self) -> HealthAction {
+        self.action
+    }
+
+    /// Evaluate every rule against one step's observations.
+    pub fn observe(&mut self, obs: &StepObs) -> RunHealth {
+        let trips =
+            self.rules.iter_mut().filter_map(|r| r.check(obs)).collect();
+        RunHealth { step: obs.step, trips }
+    }
+
+    /// True when `health` must halt the run: an abort-class trip under
+    /// [`HealthAction::Abort`].
+    pub fn must_abort(&self, health: &RunHealth) -> bool {
+        self.action == HealthAction::Abort
+            && health.worst() == Some(Severity::Abort)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn healthy(step: u64) -> StepObs {
+        StepObs { step, loss: 1.0, ..StepObs::default() }
+    }
+
+    #[test]
+    fn healthy_steps_stay_ok_under_the_standard_set() {
+        let mut mon = HealthMonitor::standard(HealthAction::Abort);
+        for step in 1..=50 {
+            let h = mon.observe(&healthy(step));
+            assert!(h.ok(), "step {step}: {}", h.report());
+            assert_eq!(h.verdict(), "ok");
+            assert!(!mon.must_abort(&h));
+        }
+    }
+
+    /// Synthetic NaN-gradient stream: the non-finite rule (and only it)
+    /// trips, by name, with abort severity.
+    #[test]
+    fn nan_gradient_stream_trips_exactly_the_nonfinite_rule() {
+        let mut mon = HealthMonitor::standard(HealthAction::Abort);
+        let mut obs = healthy(3);
+        obs.grad_nonfinite = 7;
+        let h = mon.observe(&obs);
+        assert_eq!(h.trips.len(), 1, "{}", h.report());
+        assert_eq!(h.trips[0].rule, "non_finite");
+        assert_eq!(h.trips[0].severity, Severity::Abort);
+        assert_eq!(h.verdict(), "abort");
+        assert!(mon.must_abort(&h));
+        assert!(h.report().contains("non_finite"), "{}", h.report());
+        // under warn the verdict stands but nothing halts
+        let mut warn = HealthMonitor::standard(HealthAction::Warn);
+        let h = warn.observe(&obs);
+        assert_eq!(h.verdict(), "abort");
+        assert!(!warn.must_abort(&h));
+    }
+
+    /// Synthetic divergent-loss stream: steady losses, then a blow-up —
+    /// the divergence rule trips by name.
+    #[test]
+    fn divergent_loss_stream_trips_exactly_the_divergence_rule() {
+        let mut mon = HealthMonitor::standard(HealthAction::Abort);
+        for step in 1..=30 {
+            let mut obs = healthy(step);
+            obs.loss = 2.0 - (step as f64) * 0.01;
+            assert!(mon.observe(&obs).ok(), "warm-up must stay healthy");
+        }
+        let mut obs = healthy(31);
+        obs.loss = 50.0;
+        let h = mon.observe(&obs);
+        assert_eq!(h.trips.len(), 1, "{}", h.report());
+        assert_eq!(h.trips[0].rule, "loss_divergence");
+        assert!(mon.must_abort(&h));
+    }
+
+    /// Synthetic stalled-hop stream: measured hops far above the
+    /// calibrated prediction — the stall rule trips by name, at warn
+    /// severity (a slow link is survivable).
+    #[test]
+    fn stalled_hop_stream_trips_exactly_the_stall_rule() {
+        let mut mon = HealthMonitor::standard(HealthAction::Abort);
+        let mut obs = healthy(5);
+        obs.hop_mean_ns = Some(50_000_000.0);
+        obs.hop_expect_ns = Some(1_000_000.0);
+        let h = mon.observe(&obs);
+        assert_eq!(h.trips.len(), 1, "{}", h.report());
+        assert_eq!(h.trips[0].rule, "hop_stall");
+        assert_eq!(h.trips[0].severity, Severity::Warn);
+        assert_eq!(h.verdict(), "warn");
+        assert!(!mon.must_abort(&h), "warn-class trips never halt");
+    }
+
+    #[test]
+    fn pool_drift_trips_the_drift_rule() {
+        let mut mon = HealthMonitor::standard(HealthAction::Abort);
+        let mut obs = healthy(2);
+        obs.pool_bytes = Some(10 << 20);
+        obs.accountant_bytes = Some(1 << 20);
+        let h = mon.observe(&obs);
+        assert_eq!(h.trips.len(), 1, "{}", h.report());
+        assert_eq!(h.trips[0].rule, "pool_drift");
+        assert_eq!(h.trips[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn verdict_json_round_trips_rule_names() {
+        let mut mon = HealthMonitor::standard(HealthAction::Warn);
+        let mut obs = healthy(9);
+        obs.update_nonfinite = 1;
+        let h = mon.observe(&obs);
+        let j = h.to_json();
+        assert_eq!(j.get("verdict").and_then(Json::as_str), Some("abort"));
+        let rules = match j.get("rules") {
+            Some(Json::Array(a)) => a.clone(),
+            _ => panic!("rules array missing"),
+        };
+        assert_eq!(rules[0].get("rule").and_then(Json::as_str),
+                   Some("non_finite"));
+        let text = j.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("verdict").and_then(Json::as_str),
+                   Some("abort"));
+    }
+
+    #[test]
+    fn health_action_parses_strictly() {
+        assert_eq!("warn".parse::<HealthAction>().unwrap(),
+                   HealthAction::Warn);
+        assert_eq!("abort".parse::<HealthAction>().unwrap(),
+                   HealthAction::Abort);
+        assert!("on".parse::<HealthAction>().is_err());
+        assert!("Abort".parse::<HealthAction>().is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! The standard watchdog rules (DESIGN.md §17).
+//!
+//! Each rule watches one failure mode the telemetry layer can already
+//! observe, keeps only plain bookkeeping state, and names itself in the
+//! [`Trip`] it returns so reports and abort messages are actionable.
+
+use super::{Severity, StepObs, Trip, WatchdogRule};
+use std::collections::VecDeque;
+
+/// Any non-finite gradient or update value this step is an immediate
+/// abort-class trip: NaN contamination spreads through the optimizer
+/// state and is never survivable. Fed by the `grad/nonfinite` and
+/// `opt/update_nonfinite` counters scanned in the chunk-kernel and
+/// comm-pack paths.
+#[derive(Default)]
+pub struct NonFiniteRule;
+
+impl WatchdogRule for NonFiniteRule {
+    fn name(&self) -> &'static str {
+        "non_finite"
+    }
+
+    fn check(&mut self, obs: &StepObs) -> Option<Trip> {
+        let total = obs.grad_nonfinite + obs.update_nonfinite;
+        if total == 0 {
+            return None;
+        }
+        Some(Trip {
+            rule: self.name(),
+            severity: Severity::Abort,
+            detail: format!(
+                "{} non-finite gradient values, {} non-finite updates",
+                obs.grad_nonfinite, obs.update_nonfinite
+            ),
+        })
+    }
+}
+
+/// Loss divergence over a sliding window: trips when the current loss
+/// exceeds `factor` times the window median (and the window is full, so
+/// noisy warm-up steps cannot trip it). Median rather than mean keeps a
+/// single earlier spike from masking a real blow-up.
+pub struct LossDivergenceRule {
+    window: VecDeque<f64>,
+    capacity: usize,
+    factor: f64,
+}
+
+impl Default for LossDivergenceRule {
+    fn default() -> Self {
+        Self::new(20, 3.0)
+    }
+}
+
+impl LossDivergenceRule {
+    /// Window of `capacity` recent losses; trip at `factor` × median.
+    pub fn new(capacity: usize, factor: f64) -> Self {
+        assert!(capacity >= 2 && factor > 1.0);
+        LossDivergenceRule { window: VecDeque::new(), capacity, factor }
+    }
+
+    fn median(&self) -> f64 {
+        let mut v: Vec<f64> = self.window.iter().copied().collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let mid = v.len() / 2;
+        if v.len() % 2 == 1 {
+            v[mid]
+        } else {
+            0.5 * (v[mid - 1] + v[mid])
+        }
+    }
+}
+
+impl WatchdogRule for LossDivergenceRule {
+    fn name(&self) -> &'static str {
+        "loss_divergence"
+    }
+
+    fn check(&mut self, obs: &StepObs) -> Option<Trip> {
+        // Non-finite loss is divergence regardless of window state.
+        if !obs.loss.is_finite() {
+            return Some(Trip {
+                rule: self.name(),
+                severity: Severity::Abort,
+                detail: format!("loss is {}", obs.loss),
+            });
+        }
+        let trip = if self.window.len() == self.capacity {
+            let med = self.median();
+            // Guard near-zero medians: a loss that small fluctuating is
+            // converged noise, not a blow-up.
+            if med > 1e-12 && obs.loss > self.factor * med {
+                Some(Trip {
+                    rule: self.name(),
+                    severity: Severity::Abort,
+                    detail: format!(
+                        "loss {:.4e} exceeds {:.1}x window median {:.4e}",
+                        obs.loss, self.factor, med
+                    ),
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        // Divergent samples stay out of the window so a sustained
+        // blow-up keeps tripping instead of re-normalizing itself.
+        if trip.is_none() {
+            if self.window.len() == self.capacity {
+                self.window.pop_front();
+            }
+            self.window.push_back(obs.loss);
+        }
+        trip
+    }
+}
+
+/// Per-hop stall detection against the calibrated
+/// [`TimingModel::from_measured`](crate::comms::TimingModel::from_measured)
+/// fit: trips when the step's measured mean hop takes `factor` times the
+/// model's prediction. An absolute floor keeps microsecond-scale
+/// predictions (tiny quick-run buckets) from tripping on scheduler
+/// jitter. Warn-class: a slow link degrades throughput but the math is
+/// still right.
+pub struct HopStallRule {
+    factor: f64,
+    floor_ns: f64,
+}
+
+impl Default for HopStallRule {
+    fn default() -> Self {
+        Self::new(8.0, 50_000.0)
+    }
+}
+
+impl HopStallRule {
+    /// Trip when `measured > factor * expected` and
+    /// `measured > expected + floor_ns`.
+    pub fn new(factor: f64, floor_ns: f64) -> Self {
+        assert!(factor > 1.0 && floor_ns >= 0.0);
+        HopStallRule { factor, floor_ns }
+    }
+}
+
+impl WatchdogRule for HopStallRule {
+    fn name(&self) -> &'static str {
+        "hop_stall"
+    }
+
+    fn check(&mut self, obs: &StepObs) -> Option<Trip> {
+        let (measured, expected) =
+            match (obs.hop_mean_ns, obs.hop_expect_ns) {
+                (Some(m), Some(e)) if e > 0.0 => (m, e),
+                _ => return None,
+            };
+        if measured > self.factor * expected
+            && measured > expected + self.floor_ns
+        {
+            return Some(Trip {
+                rule: self.name(),
+                severity: Severity::Warn,
+                detail: format!(
+                    "mean hop {:.0}ns exceeds {:.1}x expected {:.0}ns",
+                    measured, self.factor, expected
+                ),
+            });
+        }
+        None
+    }
+}
+
+/// Pool-occupancy drift against the static accountant: the PR 9 pool
+/// enforces live == accounted at steady state, so occupancy beyond the
+/// accountant total plus a tolerance means a leak or an unplanned
+/// allocation path. Warn-class: the pool's own debug assertions are the
+/// hard gate; this rule makes drift visible on release runs.
+pub struct PoolDriftRule {
+    tolerance: f64,
+}
+
+impl Default for PoolDriftRule {
+    fn default() -> Self {
+        Self::new(0.25)
+    }
+}
+
+impl PoolDriftRule {
+    /// Trip when `pool > accountant * (1 + tolerance)`.
+    pub fn new(tolerance: f64) -> Self {
+        assert!(tolerance >= 0.0);
+        PoolDriftRule { tolerance }
+    }
+}
+
+impl WatchdogRule for PoolDriftRule {
+    fn name(&self) -> &'static str {
+        "pool_drift"
+    }
+
+    fn check(&mut self, obs: &StepObs) -> Option<Trip> {
+        let (pool, accounted) =
+            match (obs.pool_bytes, obs.accountant_bytes) {
+                (Some(p), Some(a)) if a > 0 => (p, a),
+                _ => return None,
+            };
+        let ceiling = (accounted as f64) * (1.0 + self.tolerance);
+        if (pool as f64) > ceiling {
+            return Some(Trip {
+                rule: self.name(),
+                severity: Severity::Warn,
+                detail: format!(
+                    "pool occupancy {pool}B exceeds accountant \
+                     {accounted}B by more than {:.0}%",
+                    self.tolerance * 100.0
+                ),
+            });
+        }
+        None
+    }
+}
+
+/// The standard rule set, in evaluation order.
+pub fn standard_rules() -> Vec<Box<dyn WatchdogRule>> {
+    vec![
+        Box::new(NonFiniteRule),
+        Box::new(LossDivergenceRule::default()),
+        Box::new(HopStallRule::default()),
+        Box::new(PoolDriftRule::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(step: u64, loss: f64) -> StepObs {
+        StepObs { step, loss, ..StepObs::default() }
+    }
+
+    #[test]
+    fn divergence_needs_a_full_window() {
+        let mut rule = LossDivergenceRule::new(4, 3.0);
+        // Window not yet full: even a huge loss cannot trip.
+        assert!(rule.check(&obs(1, 1.0)).is_none());
+        assert!(rule.check(&obs(2, 100.0)).is_none());
+        assert!(rule.check(&obs(3, 1.0)).is_none());
+        assert!(rule.check(&obs(4, 1.0)).is_none());
+        // Window [1, 100, 1, 1], median 1.0: 3.5 > 3x trips.
+        let trip = rule.check(&obs(5, 3.5)).expect("should trip");
+        assert_eq!(trip.rule, "loss_divergence");
+        assert_eq!(trip.severity, Severity::Abort);
+        // A sustained blow-up keeps tripping (divergent samples are
+        // excluded from the window).
+        assert!(rule.check(&obs(6, 3.5)).is_some());
+    }
+
+    #[test]
+    fn nan_loss_trips_divergence_immediately() {
+        let mut rule = LossDivergenceRule::default();
+        let trip =
+            rule.check(&obs(1, f64::NAN)).expect("NaN loss must trip");
+        assert_eq!(trip.rule, "loss_divergence");
+        assert_eq!(trip.severity, Severity::Abort);
+    }
+
+    #[test]
+    fn hop_stall_respects_factor_and_floor() {
+        let mut rule = HopStallRule::new(8.0, 50_000.0);
+        let mut o = obs(1, 1.0);
+        // 5x expected: below the factor, no trip.
+        o.hop_mean_ns = Some(5_000_000.0);
+        o.hop_expect_ns = Some(1_000_000.0);
+        assert!(rule.check(&o).is_none());
+        // 10x a tiny expected hop: above the factor but inside the
+        // jitter floor, no trip.
+        o.hop_mean_ns = Some(10_000.0);
+        o.hop_expect_ns = Some(1_000.0);
+        assert!(rule.check(&o).is_none());
+        // 10x a real hop: trips.
+        o.hop_mean_ns = Some(10_000_000.0);
+        o.hop_expect_ns = Some(1_000_000.0);
+        let trip = rule.check(&o).expect("should trip");
+        assert_eq!(trip.rule, "hop_stall");
+        // No measurements this step: silent.
+        o.hop_mean_ns = None;
+        assert!(rule.check(&o).is_none());
+    }
+
+    #[test]
+    fn pool_drift_tolerates_small_overshoot() {
+        let mut rule = PoolDriftRule::new(0.25);
+        let mut o = obs(1, 1.0);
+        o.accountant_bytes = Some(1000);
+        o.pool_bytes = Some(1200);
+        assert!(rule.check(&o).is_none(), "20% is inside tolerance");
+        o.pool_bytes = Some(1300);
+        let trip = rule.check(&o).expect("30% should trip");
+        assert_eq!(trip.rule, "pool_drift");
+        // Missing either side: silent.
+        o.accountant_bytes = None;
+        assert!(rule.check(&o).is_none());
+    }
+}

@@ -38,7 +38,15 @@
 //!   [`telemetry::Registry`], and exported as per-phase `StepRecord`
 //!   columns, an optional JSONL event stream, and the benches'
 //!   `BENCH_*.json` perf trajectory — bitwise-invisible to training
-//!   whether enabled or disabled. Every steady-state buffer behind
+//!   whether enabled or disabled. On top of the same cells, the
+//!   per-event trace timeline ([`telemetry::trace_event`], DESIGN.md
+//!   §17) records every span and counter/gauge update into lock-free
+//!   per-thread ring buffers drained cold-side into Chrome-trace JSON
+//!   (`--trace-out`), and the [`health`] watchdogs turn per-step
+//!   telemetry deltas (non-finite scans, loss windows, hop timings,
+//!   pool occupancy) into a logged `RunHealth` verdict that can halt
+//!   a run under `[train] health_action = abort`. Every steady-state
+//!   buffer behind
 //!   those subsystems — optimizer-state slots, kernel scratch, comm
 //!   flat/wire/residual slabs, transport edge slots, checkpoint stitch
 //!   buffers — is leased from the size-classed [`pool`] runtime
@@ -62,6 +70,7 @@ pub mod comms;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod health;
 pub mod json;
 pub mod memory;
 pub mod metrics;

@@ -51,6 +51,8 @@ fn commands() -> Vec<Command> {
             .option("save", "write final params + optimizer state here (SM3CKPT2; split path)")
             .option("telemetry-jsonl", "stream per-step telemetry events to this JSONL file (implies --telemetry semantics must hold: split path)")
             .flag("telemetry", "measure per-phase spans / counters / gauges (split path; bitwise-invisible to the trajectory)")
+            .option("trace-out", "write a Chrome-trace/Perfetto JSON timeline of every span and counter/gauge update here (implies --telemetry; split path; bitwise-invisible)")
+            .option("health-action", "what an abort-class health verdict does: warn (log and continue; default) | abort (halt naming the tripped rule)")
             .flag("quiet", "suppress per-step output"),
         Command::new("eval", "evaluate at initialization")
             .option("model", "model key")
@@ -63,12 +65,33 @@ fn commands() -> Vec<Command> {
                      "validate BENCH_*.json telemetry documents (positional \
                       file paths; exits non-zero on schema violations)")
             .option("baseline",
-                    "budget file (ci/BENCH_memory_baseline.json): gauge \
-                     peaks in the checked documents must stay within the \
-                     committed ceilings")
+                    "budget file (ci/BENCH_*_baseline.json): budgeted \
+                     metrics — gauge peaks, `span_mean_ns:NAME` span means, \
+                     `counter:NAME` totals — must stay within the committed \
+                     ceilings")
             .option("max-regress",
                     "extra headroom over each baseline ceiling, in percent \
                      (default 10)"),
+        Command::new("report",
+                     "run-health + performance report over a run's telemetry \
+                      (positional BENCH_*.json paths join the report)")
+            .option("jsonl",
+                    "per-step telemetry JSONL stream from a training run \
+                     ([train] telemetry_jsonl / --telemetry-jsonl): phase \
+                     budget breakdown + health summary")
+            .option("trace",
+                    "Chrome-trace JSON from --trace-out: validated, then \
+                     mined for the measured hop-vs-stage overlap efficiency")
+            .option("baseline",
+                    "budget file: regression verdicts for every budgeted \
+                     metric found in the positional BENCH documents")
+            .option("max-regress",
+                    "extra headroom over each baseline ceiling, in percent \
+                     (default 10)")
+            .flag("check",
+                  "CI gate: exit non-zero on a schema-invalid trace/bench \
+                   document, an abort-class health verdict, or a budget \
+                   regression"),
     ]
 }
 
@@ -101,6 +124,7 @@ fn main() -> Result<()> {
         "memory-report" => cmd_memory_report(&args),
         "list" => cmd_list(&args),
         "bench-check" => cmd_bench_check(&args),
+        "report" => cmd_report(&args),
         _ => unreachable!(),
     }
 }
@@ -191,6 +215,16 @@ fn build_config(args: &sm3::cli::Args) -> Result<TrainConfig> {
         cfg.telemetry = true;
         cfg.telemetry_jsonl = Some(p.to_string());
     }
+    if let Some(p) = args.opt("trace-out") {
+        // the trace rings record the telemetry spans, so tracing implies
+        // measurement too
+        cfg.telemetry = true;
+        cfg.trace_out = Some(p.to_string());
+    }
+    if let Some(a) = args.opt("health-action") {
+        cfg.health_action = a.parse()
+            .map_err(|e| anyhow::anyhow!("--health-action: {e}"))?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -279,6 +313,10 @@ fn cmd_train(args: &sm3::cli::Args) -> Result<()> {
         for (name, g) in reg.gauges() {
             println!("    {name:<18} last={} peak={}", g.last, g.peak);
         }
+    }
+    if let Some(path) = &cfg.trace_out {
+        println!("  trace: {path} (load in chrome://tracing or \
+                  ui.perfetto.dev; lanes = threads + worker replays)");
     }
     for e in &hist.evals {
         let metric = e.metric.map(|m| format!("  metric {m:.4}"))
@@ -373,11 +411,12 @@ fn cmd_memory_report(args: &sm3::cli::Args) -> Result<()> {
 /// Validate `BENCH_*.json` telemetry documents (the CI gate behind
 /// `make bench-telemetry`): every file must parse as JSON and satisfy
 /// `telemetry::validate_bench_doc` — schema tag, internally consistent
-/// span stats, numeric counters/gauges. With `--baseline`, gauge peaks
-/// are additionally held to the committed ceilings (the peak-memory
-/// regression gate): a budgeted gauge present in a checked document
-/// must not exceed `ceiling × (1 + max_regress/100)`; documents that
-/// don't carry a budgeted gauge skip that budget gracefully.
+/// span stats, numeric counters/gauges. With `--baseline`, budgeted
+/// metrics (gauge peaks, `span_mean_ns:NAME` means, `counter:NAME`
+/// totals) are additionally held to the committed ceilings: a budgeted
+/// metric present in a checked document must not exceed
+/// `ceiling × (1 + max_regress/100)`; documents that don't carry a
+/// budgeted metric skip that budget gracefully.
 fn cmd_bench_check(args: &sm3::cli::Args) -> Result<()> {
     if args.positional.is_empty() {
         bail!("bench-check needs at least one BENCH_*.json path");
@@ -408,35 +447,65 @@ fn cmd_bench_check(args: &sm3::cli::Args) -> Result<()> {
                 continue;
             }
         }
-        let Some(budgets) = &budgets else { continue };
-        let doc = doc.expect("validated above");
-        let gauges = doc.get("gauges").expect("validated above");
-        for (gauge, ceiling) in budgets {
-            let Some(peak) =
-                gauges.get(gauge).and_then(|g| g.get("peak"))
-                      .and_then(sm3::json::Json::as_f64)
-            else {
-                // e.g. a timing bench with no pool gauge: skip, don't
-                // fail — the memory bench is the gate's real subject
-                println!("  {path}: gauge `{gauge}` absent — budget \
-                          skipped");
-                continue;
-            };
-            let limit = ceiling * (1.0 + tol / 100.0);
-            if peak > limit {
-                println!("  {path}: REGRESSION — `{gauge}` peak {peak} \
-                          exceeds baseline {ceiling} (+{tol}% = {limit})");
-                bad += 1;
-            } else {
-                println!("  {path}: `{gauge}` peak {peak} within \
-                          baseline {ceiling} (+{tol}%)");
-            }
+        if let Some(budgets) = &budgets {
+            bad += check_budgets(path, &doc.expect("validated above"),
+                                 budgets, tol);
         }
     }
     if bad > 0 {
         bail!("{bad} invalid or over-budget telemetry document(s)");
     }
     Ok(())
+}
+
+/// Resolve a baseline budget key against a bench document. The key
+/// names one of the three metric families of `Registry::to_json`:
+///   `span_mean_ns:NAME` → `spans.NAME.mean_ns`
+///   `counter:NAME`      → `counters.NAME`
+///   `gauge_peak:NAME`   → `gauges.NAME.peak`
+/// A bare name keeps its original meaning — a gauge peak — so the
+/// first-generation memory baselines stay valid unchanged.
+fn resolve_metric(doc: &sm3::json::Json, key: &str) -> Option<f64> {
+    let (section, name, field) = match key.split_once(':') {
+        Some(("span_mean_ns", n)) => ("spans", n, Some("mean_ns")),
+        Some(("counter", n)) => ("counters", n, None),
+        Some(("gauge_peak", n)) => ("gauges", n, Some("peak")),
+        _ => ("gauges", key, Some("peak")),
+    };
+    let node = doc.get(section)?.get(name)?;
+    match field {
+        Some(f) => node.get(f)?.as_f64(),
+        None => node.as_f64(),
+    }
+}
+
+/// Hold every budgeted metric carried by `doc` to its committed
+/// ceiling (+`tol`% headroom). Returns the number of regressions;
+/// budgets whose metric is absent from the document are skipped — each
+/// baseline file gates the bench that actually records its metrics.
+fn check_budgets(
+    path: &str,
+    doc: &sm3::json::Json,
+    budgets: &std::collections::BTreeMap<String, f64>,
+    tol: f64,
+) -> usize {
+    let mut bad = 0usize;
+    for (key, ceiling) in budgets {
+        let Some(value) = resolve_metric(doc, key) else {
+            println!("  {path}: metric `{key}` absent — budget skipped");
+            continue;
+        };
+        let limit = ceiling * (1.0 + tol / 100.0);
+        if value > limit {
+            println!("  {path}: REGRESSION — `{key}` = {value} exceeds \
+                      baseline {ceiling} (+{tol}% = {limit})");
+            bad += 1;
+        } else {
+            println!("  {path}: `{key}` = {value} within baseline \
+                      {ceiling} (+{tol}%)");
+        }
+    }
+    bad
 }
 
 /// Parse the committed baseline file: `{schema, budgets: {gauge: max}}`.
@@ -470,6 +539,234 @@ fn load_bench_baseline(
         out.insert(gauge.clone(), ceiling);
     }
     Ok(out)
+}
+
+/// The run reporter (`make report`): joins a run's per-step telemetry
+/// JSONL, its Chrome-trace timeline, and the standing `BENCH_*.json`
+/// snapshots into one screenful — phase budgets, the measured
+/// hop-vs-stage overlap efficiency, watchdog verdicts, and baseline
+/// regression verdicts. With `--check` it is the CI gate: a
+/// schema-invalid trace/bench document, an abort-class health verdict,
+/// or a budget regression exits non-zero.
+fn cmd_report(args: &sm3::cli::Args) -> Result<()> {
+    use sm3::json::Json;
+    let check = args.has_flag("check");
+    let tol = args.opt_parse::<f64>("max-regress")?.unwrap_or(10.0);
+    if tol < 0.0 || !tol.is_finite() {
+        bail!("--max-regress must be a non-negative percentage");
+    }
+    if args.opt("jsonl").is_none() && args.opt("trace").is_none()
+        && args.positional.is_empty()
+    {
+        bail!("report needs --jsonl, --trace, or BENCH_*.json paths");
+    }
+    let mut bad = 0usize;
+    if let Some(path) = args.opt("jsonl") {
+        bad += report_jsonl(path)?;
+    }
+    if let Some(path) = args.opt("trace") {
+        bad += report_trace(path)?;
+    }
+    let budgets = match args.opt("baseline") {
+        Some(path) => Some(load_bench_baseline(path)?),
+        None => None,
+    };
+    if !args.positional.is_empty() {
+        println!("bench documents:");
+    }
+    for path in &args.positional {
+        let doc = std::fs::read_to_string(path)
+            .map_err(|e| format!("read error: {e}"))
+            .and_then(|text| {
+                Json::parse(&text).map_err(|e| format!("parse error: {e}"))
+            });
+        let verdict = doc.as_ref().map_err(Clone::clone).and_then(
+            sm3::telemetry::validate_bench_doc);
+        match verdict {
+            Ok(()) => {
+                let doc = doc.expect("validated above");
+                let bench = doc.get("bench").and_then(Json::as_str)
+                    .unwrap_or("?");
+                println!("  {path}: ok (bench `{bench}`)");
+                if let Some(budgets) = &budgets {
+                    bad += check_budgets(path, &doc, budgets, tol);
+                }
+            }
+            Err(e) => {
+                println!("  {path}: INVALID — {e}");
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        if check {
+            bail!("report: {bad} failing check(s)");
+        }
+        println!("report: {bad} finding(s) — advisory without --check");
+    }
+    Ok(())
+}
+
+/// Phase-budget breakdown + run-health summary from the per-step
+/// telemetry JSONL stream. Returns the number of failing checks (an
+/// abort-class health verdict fails; warn-class trips are reported but
+/// pass — mirroring `HealthAction`).
+fn report_jsonl(path: &str) -> Result<usize> {
+    use sm3::json::Json;
+    use std::collections::BTreeMap;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let mut steps = 0usize;
+    let mut verdicts: BTreeMap<&str, usize> = BTreeMap::new();
+    // rule name -> (worst severity seen, steps it tripped on)
+    let mut trips: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut summary: Option<Json> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!("{path}:{}: {e}", lineno + 1)
+        })?;
+        match ev.get("type").and_then(Json::as_str) {
+            Some("step") => {
+                steps += 1;
+                let Some(h) = ev.get("health") else { continue };
+                match h.get("verdict").and_then(Json::as_str) {
+                    Some("ok") => *verdicts.entry("ok").or_insert(0) += 1,
+                    Some("warn") => *verdicts.entry("warn").or_insert(0) += 1,
+                    Some("abort") => {
+                        *verdicts.entry("abort").or_insert(0) += 1
+                    }
+                    _ => *verdicts.entry("?").or_insert(0) += 1,
+                }
+                let rules = h.get("rules").and_then(Json::as_array)
+                    .unwrap_or(&[]);
+                for r in rules {
+                    let rule = r.get("rule").and_then(Json::as_str)
+                        .unwrap_or("?");
+                    let sev = r.get("severity").and_then(Json::as_str)
+                        .unwrap_or("?");
+                    let slot = trips.entry(rule.to_string())
+                        .or_insert_with(|| (sev.to_string(), 0));
+                    if sev == "abort" {
+                        slot.0 = "abort".to_string();
+                    }
+                    slot.1 += 1;
+                }
+            }
+            Some("summary") => summary = ev.get("registry").cloned(),
+            _ => {}
+        }
+    }
+    println!("run {path}: {steps} step event(s)");
+    match &summary {
+        Some(reg) => report_registry(reg),
+        None => println!("  (no summary event — phase tables unavailable)"),
+    }
+    let (ok, warn, abort) = (
+        verdicts.get("ok").copied().unwrap_or(0),
+        verdicts.get("warn").copied().unwrap_or(0),
+        verdicts.get("abort").copied().unwrap_or(0),
+    );
+    println!("  health: ok {ok}, warn {warn}, abort {abort}");
+    for (rule, (sev, n)) in &trips {
+        println!("    tripped `{rule}` ({sev}) on {n} step(s)");
+    }
+    if abort > 0 {
+        println!("    FAIL — abort-class verdict in the stream");
+        return Ok(1);
+    }
+    Ok(0)
+}
+
+/// The phase-budget table from a summary event's registry JSON. The
+/// share column apportions run time across the top-level phases;
+/// sub-spans (`opt_worker` runs inside `opt_step`) print `-` so the
+/// shares sum to 100%.
+fn report_registry(reg: &sm3::json::Json) {
+    use sm3::json::Json;
+    const TOP: &[&str] = &[
+        "grad", "opt_step", "comm/pack", "comm/feedback",
+        "comm/hop_reduce", "comm/hop_encode", "comm/hop_gather",
+        "comm/unpack", "eval", "ckpt_io",
+    ];
+    if let Some(spans) = reg.get("spans").and_then(Json::as_object) {
+        let run_ns: f64 = TOP.iter()
+            .filter_map(|p| spans.get(*p))
+            .filter_map(|s| s.get("total_ns"))
+            .filter_map(Json::as_f64)
+            .sum();
+        println!("  phase budget (whole run):");
+        for (name, s) in spans {
+            let total = s.get("total_ns").and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            let count = s.get("count").and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            let mean = s.get("mean_ns").and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            let share = if run_ns > 0.0 && TOP.contains(&name.as_str()) {
+                format!("{:>5.1}%", 100.0 * total / run_ns)
+            } else {
+                "     -".to_string()
+            };
+            println!("    {name:<18} {share}  n={count:<7} total \
+                      {:>10.3} ms  mean {:>9.1} us",
+                     total / 1e6, mean / 1e3);
+        }
+    }
+    if let Some(counters) = reg.get("counters").and_then(Json::as_object) {
+        for (name, v) in counters {
+            println!("    {name:<18} {v}");
+        }
+    }
+    if let Some(gauges) = reg.get("gauges").and_then(Json::as_object) {
+        for (name, g) in gauges {
+            let last = g.get("last").map(Json::to_string)
+                .unwrap_or_default();
+            let peak = g.get("peak").map(Json::to_string)
+                .unwrap_or_default();
+            println!("    {name:<18} last={last} peak={peak}");
+        }
+    }
+}
+
+/// Validate the Chrome-trace document, then mine it for the measured
+/// hop-vs-stage overlap efficiency. Returns the number of failing
+/// checks (a schema-invalid trace fails).
+fn report_trace(path: &str) -> Result<usize> {
+    use sm3::json::Json;
+    let doc = std::fs::read_to_string(path)
+        .map_err(|e| format!("read error: {e}"))
+        .and_then(|text| {
+            Json::parse(&text).map_err(|e| format!("parse error: {e}"))
+        });
+    let verdict = doc.as_ref().map_err(Clone::clone).and_then(
+        sm3::telemetry::validate_trace_doc);
+    match verdict {
+        Err(e) => {
+            println!("trace {path}: INVALID — {e}");
+            Ok(1)
+        }
+        Ok(()) => {
+            let doc = doc.expect("validated above");
+            let events = doc.get("traceEvents").and_then(Json::as_array)
+                .map_or(0, <[Json]>::len);
+            let dropped = doc.get("dropped_events")
+                .and_then(Json::as_usize).unwrap_or(0);
+            println!("trace {path}: ok — {events} event(s), \
+                      {dropped} dropped");
+            match sm3::telemetry::trace_event::overlap_efficiency(&doc) {
+                Some(x) => println!(
+                    "  overlap efficiency: {:.1}% of ring-hop time ran \
+                     concurrently with bucket staging", 100.0 * x),
+                None => println!(
+                    "  overlap efficiency: n/a (no hop/stage span pair \
+                     in the trace)"),
+            }
+            Ok(0)
+        }
+    }
 }
 
 fn cmd_list(args: &sm3::cli::Args) -> Result<()> {

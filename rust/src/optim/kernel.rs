@@ -32,6 +32,7 @@
 use super::qstate::QuantizedSlots;
 use super::safe_rsqrt;
 use crate::pool::{Pool, PoolBuf, Tag};
+use crate::telemetry::{self, Counter};
 use anyhow::ensure;
 
 /// Elements per q8 block — the alignment unit for tiles and shard splits.
@@ -105,6 +106,30 @@ impl ChunkScratch {
     }
 }
 
+/// Count non-finite values in one tile. Read-only — the watchdog scans
+/// below observe the same f32 stream the kernels consume; they never
+/// alter it, so telemetry on == off stays bitwise (the crate-wide
+/// contract, proptested).
+#[inline]
+fn nonfinite_in(xs: &[f32]) -> u64 {
+    xs.iter().filter(|x| !x.is_finite()).count() as u64
+}
+
+/// Scan one tile pair for the health counters: incoming gradient values
+/// feed `grad/nonfinite`, post-update parameter values feed
+/// `opt/update_nonfinite`. Callers gate on [`telemetry::enabled`] once
+/// per driver call so the disabled path pays a single branch.
+#[inline]
+fn scan_tile(w: &[f32], g_bad: u64) {
+    if g_bad > 0 {
+        telemetry::count(Counter::GradNonFinite, g_bad);
+    }
+    let w_bad = nonfinite_in(w);
+    if w_bad > 0 {
+        telemetry::count(Counter::UpdateNonFinite, w_bad);
+    }
+}
+
 /// Stream one state slot alongside the leaf's param/grad data in `tile`-
 /// sized pieces, calling `f(w, g, s)` per tile. Slot, param and grad
 /// must have equal length.
@@ -118,11 +143,17 @@ pub fn step_chunked1(
     // lend the lease's backing Vec to the cursor (whose scratch
     // contract predates the pool); the lease reconciles its accounting
     // when the closure returns
+    let tele = telemetry::enabled();
     scratch.a.with_vec(|sa| {
         let mut cur = slots.slot_mut(id).chunks_mut(tile, sa);
         while let Some(mut t) = cur.next_tile() {
             let (off, n) = (t.offset(), t.len());
+            let g_bad =
+                if tele { nonfinite_in(&g[off..off + n]) } else { 0 };
             f(&mut w[off..off + n], &g[off..off + n], &mut t);
+            if tele {
+                scan_tile(&w[off..off + n], g_bad);
+            }
         }
     });
 }
@@ -142,13 +173,19 @@ pub fn step_chunked2(
     let (buf_a, buf_b) = (&mut scratch.a, &mut scratch.b);
     buf_a.with_vec(|va| {
         buf_b.with_vec(|vb| {
+            let tele = telemetry::enabled();
             let mut ca = sa.chunks_mut(tile, va);
             let mut cb = sb.chunks_mut(tile, vb);
             while let Some(mut ta) = ca.next_tile() {
                 let mut tb = cb.next_tile().expect("slot lengths diverge");
                 let (off, n) = (ta.offset(), ta.len());
                 debug_assert_eq!(tb.len(), n);
+                let g_bad =
+                    if tele { nonfinite_in(&g[off..off + n]) } else { 0 };
                 f(&mut w[off..off + n], &g[off..off + n], &mut ta, &mut tb);
+                if tele {
+                    scan_tile(&w[off..off + n], g_bad);
+                }
             }
         });
     });
@@ -260,5 +297,44 @@ mod tests {
             });
             assert_eq!(seen, n);
         }
+    }
+
+    /// The tile scans feed the health counters: non-finite gradient
+    /// values count into `grad/nonfinite`, non-finite post-update
+    /// parameters into `opt/update_nonfinite` — and a clean pass counts
+    /// nothing.
+    #[test]
+    fn nonfinite_scans_feed_the_health_counters() {
+        use crate::telemetry::{self, Counter};
+        let _g = telemetry::enable();
+        let n = 130;
+        let mut slots = QuantizedSlots::new(StateDtype::F32);
+        let a = slots.add_zeros(n);
+        let b = slots.add_zeros(n);
+        let mut scratch = ChunkScratch::default();
+        let mut w = vec![0.0f32; n];
+        let mut g = vec![1.0f32; n];
+
+        let before = telemetry::thread_totals();
+        step_chunked1(&mut slots, a, 64, &mut scratch, &mut w, &g,
+                      |_, _, _| {});
+        let clean = telemetry::thread_totals();
+        assert_eq!(clean.counter(Counter::GradNonFinite)
+                       - before.counter(Counter::GradNonFinite), 0);
+        assert_eq!(clean.counter(Counter::UpdateNonFinite)
+                       - before.counter(Counter::UpdateNonFinite), 0);
+
+        g[3] = f32::NAN;
+        g[70] = f32::INFINITY;
+        g[129] = f32::NEG_INFINITY;
+        step_chunked2(&mut slots, a, b, 64, &mut scratch, &mut w, &g,
+                      |w, _, _, _| {
+            w[0] = f32::NAN; // first element of each of the 3 tiles
+        });
+        let after = telemetry::thread_totals();
+        assert_eq!(after.counter(Counter::GradNonFinite)
+                       - clean.counter(Counter::GradNonFinite), 3);
+        assert_eq!(after.counter(Counter::UpdateNonFinite)
+                       - clean.counter(Counter::UpdateNonFinite), 3);
     }
 }

@@ -45,7 +45,7 @@ use super::qstate::codec::Q8_BLOCK;
 use super::qstate::StateDtype;
 use super::{Optimizer, ParamSpec};
 use crate::pool::{Pool, PoolBuf, Tag};
-use crate::telemetry::{self, Gauge, Probe};
+use crate::telemetry::{self, trace_event, Gauge, Probe};
 use crate::tensor::Tensor;
 use anyhow::ensure;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -157,6 +157,12 @@ pub struct ParallelStep {
     /// the owning thread folds the slots — in worker-index order — into
     /// its thread-local cells after the scope joins (DESIGN.md §14).
     worker_ns: Vec<AtomicU64>,
+    /// start timestamps paired with `worker_ns`, so the owner can
+    /// replay each worker's span onto its synthetic trace lane
+    /// (`trace_event::worker_lane`) after the scope joins — scoped
+    /// workers die inside the step, so their own thread-local rings
+    /// would be unreachable to the drainer.
+    worker_t0: Vec<AtomicU64>,
 }
 
 impl ParallelStep {
@@ -282,8 +288,9 @@ impl ParallelStep {
             }
         }
         let worker_ns = (0..bins.len()).map(|_| AtomicU64::new(0)).collect();
+        let worker_t0 = (0..bins.len()).map(|_| AtomicU64::new(0)).collect();
         Ok(Self { leaves, task_worker, workers: bins.len(), threads,
-                  lr_scales: Vec::new(), pool: None, worker_ns })
+                  lr_scales: Vec::new(), pool: None, worker_ns, worker_t0 })
     }
 
     /// Stage split-leaf checkpoint stitching through `pool`
@@ -426,15 +433,18 @@ impl Optimizer for ParallelStep {
         // slots are preallocated, so measuring adds no allocations.
         let tele = telemetry::enabled();
         let worker_ns = &self.worker_ns;
+        let worker_t0 = &self.worker_t0;
         std::thread::scope(|scope| {
             for (wid, bucket) in buckets.into_iter().enumerate() {
                 let slot = &worker_ns[wid];
+                let t0_slot = &worker_t0[wid];
                 scope.spawn(move || {
                     let t0 = if tele { telemetry::now_ns() } else { 0 };
                     for item in bucket {
                         item.run(lr);
                     }
                     if tele {
+                        t0_slot.store(t0, Ordering::Relaxed);
                         slot.store(
                             telemetry::now_ns().saturating_sub(t0),
                             Ordering::Relaxed);
@@ -447,9 +457,14 @@ impl Optimizer for ParallelStep {
             // regardless of which worker finished first
             let mut sum = 0u64;
             let mut max = 0u64;
-            for slot in worker_ns {
+            for (wid, slot) in worker_ns.iter().enumerate() {
                 let ns = slot.load(Ordering::Relaxed);
                 telemetry::record_ns(Probe::OptWorker, ns);
+                // replay the span onto a per-worker synthetic lane so
+                // the trace shows imbalance as parallel bars
+                trace_event::complete_on_lane(
+                    Probe::OptWorker, trace_event::worker_lane(wid),
+                    worker_t0[wid].load(Ordering::Relaxed), ns);
                 sum += ns;
                 max = max.max(ns);
             }

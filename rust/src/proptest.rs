@@ -1349,6 +1349,157 @@ mod tests {
         });
     }
 
+    /// ISSUE 10 tentpole gate: tracing + health are bitwise invisible.
+    /// The PR 7 property re-run with the trace rings recording, the
+    /// non-finite scans live, and the watchdog monitor observing every
+    /// step: every registry optimizer × {f32, q8} state × {serial,
+    /// whole-leaf sharded, intra-leaf sharded} engines, and the comm
+    /// ring at every wire dtype over both transports (direct, inproc)
+    /// — identical bits with tracing/health on and off. The scans and
+    /// rings only read the f32 stream and write integer cells, so this
+    /// holds structurally; the property pins it.
+    #[test]
+    fn tracing_and_health_are_bitwise_invisible() {
+        use crate::comms::{CommEngine, CommOpts, TransportKind};
+        use crate::health::{HealthAction, HealthMonitor, StepObs};
+        use crate::optim::{self, parallel::ParallelStep, Optimizer,
+                           SplitPolicy, StateDtype};
+        use crate::telemetry;
+        use crate::tensor::Tensor;
+        forall("tracing/health on == off, bitwise", |rng| {
+            (gen::param_specs(rng, 3, 3, 6), rng.next_u64())
+        }, |(specs, seed)| {
+            let bits = |params: &[Tensor]| -> Vec<u32> {
+                params
+                    .iter()
+                    .flat_map(|t| t.data().iter().map(|v| v.to_bits()))
+                    .collect()
+            };
+            // mode 0: serial; 1: whole-leaf sharded; 2: intra-leaf
+            let traj = |name: &str, dtype: StateDtype, mode: u8,
+                        on: bool| -> Result<Vec<u32>, String> {
+                let _tele = on.then(telemetry::enable);
+                let _rings = on.then(telemetry::enable_tracing);
+                let mut health = on
+                    .then(|| HealthMonitor::standard(HealthAction::Warn));
+                let mut serial: Option<Box<dyn Optimizer>> = None;
+                let mut par: Option<ParallelStep> = None;
+                if mode == 0 {
+                    serial = Some(
+                        optim::OptimSpec::named(name)
+                            .and_then(|s| s.state_dtype(dtype).build(specs))
+                            .map_err(|e| e.to_string())?);
+                } else {
+                    let policy = if mode == 1 {
+                        SplitPolicy::WholeLeaf
+                    } else {
+                        SplitPolicy::IntraLeaf
+                    };
+                    par = Some(ParallelStep::from_registry_opts(
+                        name, specs, 0.9, 0.98, 2, dtype, 64, policy)
+                        .map_err(|e| e.to_string())?);
+                }
+                let mut rng = crate::rng::Rng::new(*seed);
+                let mut params: Vec<Tensor> = specs
+                    .iter()
+                    .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                    .collect();
+                for step in 0..2u64 {
+                    let grads: Vec<Tensor> = specs
+                        .iter()
+                        .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                        .collect();
+                    if let Some(o) = serial.as_mut() {
+                        o.step(&mut params, &grads, 0.1);
+                    }
+                    if let Some(p) = par.as_mut() {
+                        p.step(&mut params, &grads, 0.1);
+                    }
+                    if let Some(mon) = health.as_mut() {
+                        // the monitor only reads observations; verdicts
+                        // must not feed back into the trajectory
+                        let verdict = mon.observe(&StepObs {
+                            step: step + 1,
+                            loss: 1.0,
+                            ..StepObs::default()
+                        });
+                        if !verdict.ok() {
+                            return Err(format!(
+                                "clean run tripped {}", verdict.report()));
+                        }
+                    }
+                }
+                Ok(bits(&params))
+            };
+            for name in optim::ALL {
+                for dtype in [StateDtype::F32, StateDtype::Q8] {
+                    for mode in 0u8..3 {
+                        let off = traj(name, dtype, mode, false)?;
+                        let on = traj(name, dtype, mode, true)?;
+                        if off != on {
+                            return Err(format!(
+                                "{name} @ {dtype:?} mode {mode}: \
+                                 tracing/health changed the trajectory"));
+                        }
+                    }
+                }
+            }
+            // the comm ring across both transports: outputs and carried
+            // residuals, 2 comm threads so the hop spans + pack scans
+            // run on the instrumented paths
+            for dtype in StateDtype::ALL {
+                for transport in TransportKind::ALL {
+                    let ranks = 3;
+                    let run = |on: bool|
+                     -> Result<(Vec<u32>, Vec<u32>), String> {
+                        let _tele = on.then(telemetry::enable);
+                        let _rings = on.then(telemetry::enable_tracing);
+                        let mut rng = crate::rng::Rng::new(*seed);
+                        let base: Vec<Vec<Tensor>> = (0..ranks)
+                            .map(|_| specs.iter()
+                                .map(|s| gen_grad_tensor(&s.shape, &mut rng))
+                                .collect())
+                            .collect();
+                        let mut eng = CommEngine::with_opts(
+                            specs, ranks,
+                            CommOpts { dtype, chunk: 64, threads: 2,
+                                       transport, ..CommOpts::default() })
+                            .map_err(|e| e.to_string())?;
+                        let mut out = base.clone();
+                        for _round in 0..2 {
+                            let mut g = base.clone();
+                            eng.allreduce_mean(&mut g)
+                                .map_err(|e| e.to_string())?;
+                            out = g;
+                        }
+                        let out_bits = out
+                            .iter()
+                            .flat_map(|rank| bits(rank))
+                            .collect();
+                        let res_bits = eng
+                            .state()
+                            .iter()
+                            .flat_map(|(_, t)| {
+                                t.data()
+                                    .iter()
+                                    .map(|v| v.to_bits())
+                                    .collect::<Vec<u32>>()
+                            })
+                            .collect();
+                        Ok((out_bits, res_bits))
+                    };
+                    if run(false)? != run(true)? {
+                        return Err(format!(
+                            "{dtype:?} ring over {transport:?}: \
+                             tracing/health changed the exchange or its \
+                             residuals"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// ISSUE 9 tentpole gate: the memory pool is bitwise invisible.
     /// The same seeded trajectory — every registry optimizer × {f32,
     /// q8} state × {1, 2, 4} threads, and the compressed comm ring with

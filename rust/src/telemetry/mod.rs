@@ -33,12 +33,17 @@
 pub mod clock;
 pub mod jsonl;
 pub mod registry;
+pub mod trace_event;
 
 pub use clock::{now_ns, Clock, FakeClock, MonotonicClock};
 pub use jsonl::JsonlWriter;
 pub use registry::{
     bench_doc, validate_bench_doc, GaugeStats, Registry, SpanStats,
     BENCH_SCHEMA,
+};
+pub use trace_event::{
+    enable_tracing, tracing, validate_trace_doc, Timeline, TracingGuard,
+    TRACE_SCHEMA,
 };
 
 use std::cell::Cell;
@@ -124,21 +129,34 @@ pub enum Counter {
     CommWireBytes = 0,
     /// Completed all-reduce exchanges.
     CommExchanges = 1,
+    /// Non-finite (NaN/Inf) gradient values observed on instrumented
+    /// paths: the comm-pack scan and the chunk-kernel tile scan. Fed to
+    /// the health watchdogs (`health::NonFiniteRule`).
+    GradNonFinite = 2,
+    /// Non-finite (NaN/Inf) parameter values observed immediately after
+    /// a chunk-kernel tile update — contamination reached the weights.
+    UpdateNonFinite = 3,
 }
 
 impl Counter {
     /// Number of counters (size of the per-thread counter array).
-    pub const COUNT: usize = 2;
+    pub const COUNT: usize = 4;
 
     /// Every counter, in index order.
-    pub const ALL: [Counter; Counter::COUNT] =
-        [Counter::CommWireBytes, Counter::CommExchanges];
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::CommWireBytes,
+        Counter::CommExchanges,
+        Counter::GradNonFinite,
+        Counter::UpdateNonFinite,
+    ];
 
     /// Canonical registry/JSON name.
     pub fn name(self) -> &'static str {
         match self {
             Counter::CommWireBytes => "comm/wire_bytes",
             Counter::CommExchanges => "comm/exchanges",
+            Counter::GradNonFinite => "grad/nonfinite",
+            Counter::UpdateNonFinite => "opt/update_nonfinite",
         }
     }
 }
@@ -271,6 +289,12 @@ impl GaugeCell {
         self.last.set(0);
         self.peak.set(0);
     }
+
+    /// Re-arm the high-water mark at the current level (a new bench
+    /// run's peak starts from its own live value, not a predecessor's).
+    fn rearm(&self) {
+        self.peak.set(self.last.get());
+    }
 }
 
 struct Cells {
@@ -354,7 +378,11 @@ pub fn span(probe: Probe) -> Span {
 impl Drop for Span {
     fn drop(&mut self) {
         if self.live {
-            record_ns(self.probe, clock::now_ns().saturating_sub(self.t0_ns));
+            let dur = clock::now_ns().saturating_sub(self.t0_ns);
+            record_ns(self.probe, dur);
+            // one ring-buffer entry when the per-event timeline is on
+            // (a relaxed load and early return otherwise)
+            trace_event::complete(self.probe, self.t0_ns, dur);
         }
     }
 }
@@ -377,6 +405,7 @@ pub fn count(counter: Counter, n: u64) {
             let cell = &c.counters[counter as usize];
             cell.set(cell.get() + n);
         });
+        trace_event::instant_counter(counter, n);
     }
 }
 
@@ -386,6 +415,7 @@ pub fn count(counter: Counter, n: u64) {
 pub fn gauge(gauge: Gauge, v: u64) {
     if enabled() {
         let _ = CELLS.try_with(|c| c.gauges[gauge as usize].set(v));
+        trace_event::instant_gauge(gauge, v);
     }
 }
 
@@ -475,6 +505,21 @@ pub fn thread_snapshot_into(reg: &mut Registry) {
             if s.peak > 0 {
                 reg.merge_gauge(g.name(), &s);
             }
+        }
+    });
+}
+
+/// Re-arm this thread's gauge high-water marks at their current levels
+/// — the per-thread half of [`Registry::reset_run`]. Call between bench
+/// configs driven by one process, so a later section's exported peaks
+/// (`mem/pool_bytes_peak`, `comm/inflight_buckets`) describe that
+/// section alone instead of leaking an earlier, larger config's
+/// high-water mark (ISSUE 10 satellite). Span and counter cells are
+/// untouched: those are cumulative trajectory totals by design.
+pub fn reset_thread_run() {
+    let _ = CELLS.try_with(|c| {
+        for g in &c.gauges {
+            g.rearm();
         }
     });
 }

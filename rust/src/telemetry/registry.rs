@@ -102,6 +102,12 @@ impl GaugeStats {
         self.last = other.last;
         self.peak = self.peak.max(other.peak);
     }
+
+    /// Re-arm the high-water mark at the current sample: the next run's
+    /// peak starts from its own live level.
+    pub fn reset_peak(&mut self) {
+        self.peak = self.last;
+    }
 }
 
 /// String-keyed run aggregate: per-phase [`SpanStats`], monotone
@@ -194,6 +200,20 @@ impl Registry {
         }
         for (k, g) in &other.gauges {
             self.merge_gauge(k, g);
+        }
+    }
+
+    /// Start a new run within the same process: re-arm every gauge's
+    /// high-water mark at its current level ([`GaugeStats::reset_peak`]).
+    /// One process driving multiple bench configs must call this
+    /// between sections, or a later section's exported peaks
+    /// (`mem/pool_bytes_peak`, `comm/inflight_buckets`) silently carry
+    /// an earlier, larger config's high-water mark. Spans and counters
+    /// are left to accumulate: they are cumulative trajectory totals,
+    /// not per-run marks.
+    pub fn reset_run(&mut self) {
+        for g in self.gauges.values_mut() {
+            g.reset_peak();
         }
     }
 
@@ -431,6 +451,41 @@ mod tests {
         merged.merge(&w0);
         merged.merge(&w1);
         assert_eq!(merged, direct);
+    }
+
+    /// ISSUE 10 satellite (gauge high-water semantics): one process
+    /// driving two consecutive bench sections must not leak section A's
+    /// peak into section B's report. Without `reset_run` the second
+    /// section's `mem/pool_bytes_peak` still reads the first section's
+    /// larger high-water mark; with it, each section reports its own.
+    #[test]
+    fn reset_run_isolates_consecutive_bench_sections() {
+        let mut reg = Registry::new();
+        // section A: a large config peaks at 8 MiB
+        reg.gauge("mem/pool_bytes_peak", 8 << 20);
+        reg.gauge("mem/pool_bytes_peak", 1 << 20);
+        reg.gauge("comm/inflight_buckets", 2);
+        reg.gauge("comm/inflight_buckets", 1);
+        assert_eq!(reg.gauge_stats("mem/pool_bytes_peak").unwrap().peak,
+                   8 << 20);
+        // the leak this guards against: section B (small config) still
+        // reports section A's peak
+        reg.gauge("mem/pool_bytes_peak", 2 << 20);
+        assert_eq!(reg.gauge_stats("mem/pool_bytes_peak").unwrap().peak,
+                   8 << 20, "without reset_run the peak leaks");
+        // re-arm between sections: B's peak describes B alone
+        reg.reset_run();
+        assert_eq!(reg.gauge_stats("comm/inflight_buckets").unwrap().peak,
+                   1, "re-armed at the live level");
+        reg.gauge("mem/pool_bytes_peak", 3 << 20);
+        let g = reg.gauge_stats("mem/pool_bytes_peak").unwrap();
+        assert_eq!((g.last, g.peak), (3 << 20, 3 << 20));
+        // spans/counters keep accumulating across sections
+        reg.record_ns("opt_step", 10);
+        reg.add("comm/exchanges", 1);
+        reg.reset_run();
+        assert_eq!(reg.span("opt_step").unwrap().count, 1);
+        assert_eq!(reg.counter("comm/exchanges"), Some(1));
     }
 
     #[test]

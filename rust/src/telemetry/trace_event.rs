@@ -1,0 +1,901 @@
+//! Per-event trace timeline: lock-free per-thread bounded ring buffers
+//! recording one entry per completed [`Probe`] span (Chrome-trace `"X"`
+//! complete events carrying the begin timestamp and duration) plus
+//! instant entries for [`Counter`] / [`Gauge`] updates, tagged with a
+//! thread lane and an optional comm rank — drained cold-side into a
+//! Chrome-trace/Perfetto JSON document (DESIGN.md §17).
+//!
+//! Hot-path contract (the same determinism bargain as the rest of
+//! `telemetry`): recording reads the monotonic clock and stores integer
+//! words into a preallocated atomic ring — it never touches f32
+//! training arithmetic, RNG state, or gradient buffers, so trajectories
+//! are bitwise identical with tracing on or off. With tracing **off**
+//! every entry point is a single relaxed load and an early return: zero
+//! allocation, zero clock reads. With tracing **on** allocation is
+//! *bounded*: one ring of [`RING_CAPACITY`] fixed-size entries per
+//! participating thread, allocated on that thread's first traced event
+//! and reused for the lifetime of the process.
+//!
+//! Drop policy: a ring that fills between drains **drops newest** —
+//! the entry is discarded and a per-ring drop counter increments. The
+//! drained document reports the total in `dropped_events`, so a
+//! truncated timeline is visible rather than silently wrapped (a
+//! wrap-around policy would tear in-progress entries under concurrent
+//! drains; drop-newest keeps every exported entry internally
+//! consistent). Drains happen at step boundaries, when all worker
+//! scopes have joined and the persistent comm-hop worker is parked, so
+//! in steady state the ring never fills at the default capacity.
+//!
+//! Lanes: every participating thread registers once and receives a
+//! distinct lane id (the Chrome `tid`); the coordinator additionally
+//! emits events on *synthetic* worker lanes ([`worker_lane`]) for the
+//! scoped `ParallelStep` workers, whose own thread-locals die inside
+//! the step — their begin/duration pairs are measured into preallocated
+//! slots and replayed by the owner, so worker imbalance is visible as
+//! parallel lanes without touching scoped-thread TLS after the join.
+
+use super::{clock, Counter, Gauge, Probe};
+use crate::json::Json;
+use std::cell::{Cell, OnceCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Entries a per-thread ring holds between drains (fixed at first use;
+/// beyond it the ring drops newest and counts the drops).
+pub const RING_CAPACITY: usize = 16 * 1024;
+
+/// Words per packed entry: `[ts_ns, dur_or_value, kind|id|rank|lane]`.
+const WORDS: usize = 3;
+
+/// `rank` field sentinel: event not attributed to a comm rank.
+pub const NO_RANK: u32 = 0xFFFF;
+
+/// Synthetic-lane namespace bit: lanes the owner replays on behalf of
+/// scoped workers, disjoint from registered thread lanes by the high
+/// bit.
+const SYNTH_LANE: u32 = 0x8000_0000;
+
+/// The synthetic lane id for sharded-step worker `wid` (rendered as
+/// `opt_worker/<wid>` in the exported trace).
+pub fn worker_lane(wid: usize) -> u32 {
+    SYNTH_LANE | (wid as u32 & 0x7FFF_FFFF)
+}
+
+const KIND_SPAN: u64 = 0;
+const KIND_COUNTER: u64 = 1;
+const KIND_GAUGE: u64 = 2;
+
+#[inline]
+fn pack_tag(kind: u64, id: u64, rank: u32, lane: u32) -> u64 {
+    (kind << 60) | ((id & 0xFF) << 48) | (((rank & 0xFFFF) as u64) << 32)
+        | lane as u64
+}
+
+// ---------------------------------------------------------------------------
+// Enablement (refcounted, like telemetry::ENABLED)
+
+static TRACING: AtomicUsize = AtomicUsize::new(0);
+
+/// True while at least one [`TracingGuard`] is alive.
+#[inline]
+pub fn tracing() -> bool {
+    TRACING.load(Ordering::Relaxed) > 0
+}
+
+/// RAII tracing guard — trace entries record while it lives.
+#[derive(Debug)]
+pub struct TracingGuard {
+    _priv: (),
+}
+
+/// Turn per-event tracing on until the returned guard drops. Guards
+/// nest. Tracing is independent of (but only useful together with)
+/// `telemetry::enable`, which gates the spans that feed it.
+#[must_use = "tracing stays enabled only while the guard lives"]
+pub fn enable_tracing() -> TracingGuard {
+    TRACING.fetch_add(1, Ordering::Relaxed);
+    TracingGuard { _priv: () }
+}
+
+impl Drop for TracingGuard {
+    fn drop(&mut self) {
+        TRACING.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread rings
+
+struct Ring {
+    lane: u32,
+    label: Mutex<String>,
+    /// `WORDS * RING_CAPACITY` packed words; the owning thread stores
+    /// relaxed then publishes via `len` (release), the drainer loads
+    /// `len` (acquire) then reads the words — a bounded SPSC handoff.
+    words: Box<[AtomicU64]>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl Ring {
+    fn new(lane: u32, label: String) -> Self {
+        let words = (0..WORDS * RING_CAPACITY)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring {
+            lane,
+            label: Mutex::new(label),
+            words,
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn push(&self, ts_ns: u64, dur_or_value: u64, tag: u64) {
+        let i = self.len.load(Ordering::Relaxed);
+        if i >= RING_CAPACITY {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.words[WORDS * i].store(ts_ns, Ordering::Relaxed);
+        self.words[WORDS * i + 1].store(dur_or_value, Ordering::Relaxed);
+        self.words[WORDS * i + 2].store(tag, Ordering::Relaxed);
+        self.len.store(i + 1, Ordering::Release);
+    }
+}
+
+/// Registered rings, one per participating thread. Pushed once per
+/// thread (cold); the drainer walks the list at step boundaries.
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+    static THREAD_RANK: Cell<u32> = const { Cell::new(NO_RANK) };
+    static THREAD_LABEL: Cell<&'static str> = const { Cell::new("lane") };
+}
+
+fn with_ring(f: impl FnOnce(&Ring)) {
+    let _ = THREAD_RING.try_with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let lane = NEXT_LANE.fetch_add(1, Ordering::Relaxed) as u32
+                & !SYNTH_LANE;
+            let label = THREAD_LABEL
+                .try_with(Cell::get)
+                .unwrap_or("lane")
+                .to_string();
+            let ring = Arc::new(Ring::new(lane, label));
+            RINGS
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(Arc::clone(&ring));
+            ring
+        });
+        f(ring);
+    });
+}
+
+/// Name this thread's trace lane (e.g. `"coordinator"`, `"comm-hop"`).
+/// Takes effect immediately whether or not the ring exists yet; cold
+/// path (once per thread).
+pub fn set_thread_label(label: &'static str) {
+    let _ = THREAD_LABEL.try_with(|c| c.set(label));
+    let _ = THREAD_RING.try_with(|cell| {
+        if let Some(ring) = cell.get() {
+            *ring.label.lock().unwrap_or_else(|p| p.into_inner()) =
+                label.to_string();
+        }
+    });
+}
+
+/// Attribute subsequent events on this thread to comm `rank` (the
+/// engine brackets per-rank staging loops with this). [`NO_RANK`]
+/// clears the attribution.
+#[inline]
+pub fn set_rank(rank: u32) {
+    let _ = THREAD_RANK.try_with(|c| c.set(rank));
+}
+
+/// Clear the comm-rank attribution on this thread.
+#[inline]
+pub fn clear_rank() {
+    set_rank(NO_RANK);
+}
+
+// ---------------------------------------------------------------------------
+// Recording
+
+/// Record a completed span: begin timestamp `t0_ns`, duration `dur_ns`,
+/// on this thread's lane. No-op (one relaxed load) while tracing is off.
+#[inline]
+pub fn complete(probe: Probe, t0_ns: u64, dur_ns: u64) {
+    if !tracing() {
+        return;
+    }
+    let rank = THREAD_RANK.try_with(Cell::get).unwrap_or(NO_RANK);
+    with_ring(|r| {
+        r.push(t0_ns, dur_ns,
+               pack_tag(KIND_SPAN, probe as u64, rank, r.lane));
+    });
+}
+
+/// Record a completed span on an explicit (synthetic) lane — the owner
+/// replaying a scoped worker's measured `(begin, duration)` slot onto
+/// [`worker_lane`].
+#[inline]
+pub fn complete_on_lane(probe: Probe, lane: u32, t0_ns: u64, dur_ns: u64) {
+    if !tracing() {
+        return;
+    }
+    with_ring(|r| {
+        r.push(t0_ns, dur_ns,
+               pack_tag(KIND_SPAN, probe as u64, NO_RANK, lane));
+    });
+}
+
+/// Record an instant event for a counter increment (`value` = the
+/// added amount), timestamped now.
+#[inline]
+pub fn instant_counter(counter: Counter, value: u64) {
+    if !tracing() {
+        return;
+    }
+    let rank = THREAD_RANK.try_with(Cell::get).unwrap_or(NO_RANK);
+    with_ring(|r| {
+        r.push(clock::now_ns(), value,
+               pack_tag(KIND_COUNTER, counter as u64, rank, r.lane));
+    });
+}
+
+/// Record an instant event for a gauge sample (`value` = the sampled
+/// level), timestamped now.
+#[inline]
+pub fn instant_gauge(gauge: Gauge, value: u64) {
+    if !tracing() {
+        return;
+    }
+    let rank = THREAD_RANK.try_with(Cell::get).unwrap_or(NO_RANK);
+    with_ring(|r| {
+        r.push(clock::now_ns(), value,
+               pack_tag(KIND_GAUGE, gauge as u64, rank, r.lane));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Draining (cold side)
+
+/// One decoded trace entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Canonical probe/counter/gauge name.
+    pub name: &'static str,
+    /// `"span"`, `"counter"`, or `"gauge"`.
+    pub kind: &'static str,
+    /// Begin timestamp (spans) or sample timestamp (instants), ns.
+    pub ts_ns: u64,
+    /// Span duration in ns; 0 for instants.
+    pub dur_ns: u64,
+    /// Counter delta / gauge level; 0 for spans.
+    pub value: u64,
+    /// Lane (Chrome `tid`): a registered thread or a synthetic worker
+    /// lane.
+    pub lane: u32,
+    /// Comm rank the event is attributed to, if any.
+    pub rank: Option<u32>,
+}
+
+fn decode(ts: u64, dv: u64, tag: u64) -> Option<TraceRecord> {
+    let kind = tag >> 60;
+    let id = ((tag >> 48) & 0xFF) as usize;
+    let rank = ((tag >> 32) & 0xFFFF) as u32;
+    let lane = (tag & 0xFFFF_FFFF) as u32;
+    let rank = if rank == NO_RANK { None } else { Some(rank) };
+    let (name, kind, dur, value) = match kind {
+        KIND_SPAN => {
+            (Probe::ALL.get(id)?.name(), "span", dv, 0)
+        }
+        KIND_COUNTER => {
+            (Counter::ALL.get(id)?.name(), "counter", 0, dv)
+        }
+        KIND_GAUGE => {
+            (Gauge::ALL.get(id)?.name(), "gauge", 0, dv)
+        }
+        _ => return None,
+    };
+    Some(TraceRecord { name, kind, ts_ns: ts, dur_ns: dur, value, lane, rank })
+}
+
+/// Collected timeline: decoded records, lane labels, and the total
+/// number of entries dropped by full rings.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    /// Decoded entries in drain order (sort before export).
+    pub records: Vec<TraceRecord>,
+    /// Registered lane labels (synthetic worker lanes are named at
+    /// export time).
+    pub lanes: BTreeMap<u32, String>,
+    /// Entries dropped because a ring filled between drains.
+    pub dropped: u64,
+}
+
+impl Timeline {
+    /// Drain every registered ring into this timeline, resetting the
+    /// rings. Call at quiescent points only (step boundaries): the
+    /// reset races benignly with a concurrent writer — an entry may be
+    /// lost, never torn.
+    pub fn drain(&mut self) {
+        let rings: Vec<Arc<Ring>> = RINGS
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        for ring in rings {
+            let n = ring.len.load(Ordering::Acquire).min(RING_CAPACITY);
+            for i in 0..n {
+                let ts = ring.words[WORDS * i].load(Ordering::Relaxed);
+                let dv = ring.words[WORDS * i + 1].load(Ordering::Relaxed);
+                let tag = ring.words[WORDS * i + 2].load(Ordering::Relaxed);
+                if let Some(rec) = decode(ts, dv, tag) {
+                    self.records.push(rec);
+                }
+            }
+            ring.len.store(0, Ordering::Release);
+            self.dropped += ring.dropped.swap(0, Ordering::Relaxed);
+            self.lanes.insert(
+                ring.lane,
+                ring.label.lock().unwrap_or_else(|p| p.into_inner()).clone(),
+            );
+        }
+    }
+
+    /// Export as a Chrome-trace/Perfetto JSON document (schema
+    /// [`TRACE_SCHEMA`]): `"M"` thread-name metadata per lane, `"X"`
+    /// complete events for spans (`ts`/`dur` in microseconds), `"i"`
+    /// instants for counter/gauge updates. Events are ordered by
+    /// `(ts, lane, -dur)` so enclosing spans precede their children.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        let mut lanes = self.lanes.clone();
+        for rec in &self.records {
+            if rec.lane & SYNTH_LANE != 0 {
+                lanes
+                    .entry(rec.lane)
+                    .or_insert_with(|| format!("opt_worker/{}",
+                                               rec.lane & !SYNTH_LANE));
+            }
+        }
+        for (lane, label) in &lanes {
+            let mut args = BTreeMap::new();
+            args.insert("name".into(), Json::String(label.clone()));
+            let mut m = BTreeMap::new();
+            m.insert("ph".into(), Json::String("M".into()));
+            m.insert("name".into(), Json::String("thread_name".into()));
+            m.insert("pid".into(), Json::Number(0.0));
+            m.insert("tid".into(), Json::Number(*lane as f64));
+            m.insert("args".into(), Json::Object(args));
+            events.push(Json::Object(m));
+        }
+        let mut order: Vec<usize> = (0..self.records.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ra, rb) = (&self.records[a], &self.records[b]);
+            ra.ts_ns
+                .cmp(&rb.ts_ns)
+                .then(ra.lane.cmp(&rb.lane))
+                .then(rb.dur_ns.cmp(&ra.dur_ns))
+                .then(a.cmp(&b))
+        });
+        for i in order {
+            let rec = &self.records[i];
+            let mut e = BTreeMap::new();
+            e.insert("name".into(), Json::String(rec.name.to_string()));
+            e.insert("pid".into(), Json::Number(0.0));
+            e.insert("tid".into(), Json::Number(rec.lane as f64));
+            e.insert("ts".into(), Json::Number(rec.ts_ns as f64 / 1e3));
+            let mut args = BTreeMap::new();
+            if let Some(r) = rec.rank {
+                args.insert("rank".into(), Json::Number(r as f64));
+            }
+            match rec.kind {
+                "span" => {
+                    e.insert("ph".into(), Json::String("X".into()));
+                    e.insert("cat".into(), Json::String("span".into()));
+                    e.insert("dur".into(),
+                             Json::Number(rec.dur_ns as f64 / 1e3));
+                }
+                kind => {
+                    e.insert("ph".into(), Json::String("i".into()));
+                    e.insert("s".into(), Json::String("t".into()));
+                    e.insert("cat".into(), Json::String(kind.to_string()));
+                    args.insert("value".into(),
+                                Json::Number(rec.value as f64));
+                }
+            }
+            if !args.is_empty() {
+                e.insert("args".into(), Json::Object(args));
+            }
+            events.push(Json::Object(e));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".into(), Json::String(TRACE_SCHEMA.to_string()));
+        doc.insert("displayTimeUnit".into(), Json::String("ns".into()));
+        doc.insert("dropped_events".into(),
+                   Json::Number(self.dropped as f64));
+        doc.insert("traceEvents".into(), Json::Array(events));
+        Json::Object(doc)
+    }
+}
+
+/// Schema tag stamped into every exported trace document; the checker
+/// ([`validate_trace_doc`], `sm3-train report --check`) rejects any
+/// other tag.
+pub const TRACE_SCHEMA: &str = "sm3-trace-v1";
+
+fn num(e: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    e.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| n.is_finite())
+        .ok_or_else(|| format!("{ctx}: missing numeric field `{key}`"))
+}
+
+/// Validate a parsed trace document: schema tag, well-formed events
+/// (every `"X"` carries non-negative `ts`/`dur`, every `"i"` a
+/// timestamp and a value), and the per-lane nesting invariant — on one
+/// lane, complete events are either disjoint or properly nested (a
+/// laminar family), which is what makes the timeline renderable as
+/// stacked spans.
+pub fn validate_trace_doc(doc: &Json) -> Result<(), String> {
+    let obj = doc.as_object().ok_or("trace is not a JSON object")?;
+    match obj.get("schema").and_then(Json::as_str) {
+        Some(s) if s == TRACE_SCHEMA => {}
+        Some(s) => return Err(format!("unknown trace schema tag `{s}`")),
+        None => return Err("missing string field `schema`".into()),
+    }
+    if obj
+        .get("dropped_events")
+        .and_then(Json::as_f64)
+        .filter(|n| n.is_finite() && *n >= 0.0)
+        .is_none()
+    {
+        return Err("missing numeric field `dropped_events`".into());
+    }
+    let events = match obj.get("traceEvents") {
+        Some(Json::Array(a)) => a,
+        _ => return Err("missing array field `traceEvents`".into()),
+    };
+    // per-lane X intervals for the nesting check
+    let mut spans: BTreeMap<u64, Vec<(f64, f64)>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ctx = format!("event #{i}");
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{ctx}: missing string field `ph`"))?;
+        if e.get("name").and_then(Json::as_str).is_none() {
+            return Err(format!("{ctx}: missing string field `name`"));
+        }
+        match ph {
+            "M" => continue,
+            "X" => {
+                let tid = num(e, "tid", &ctx)?;
+                let ts = num(e, "ts", &ctx)?;
+                let dur = num(e, "dur", &ctx)?;
+                if ts < 0.0 || dur < 0.0 {
+                    return Err(format!(
+                        "{ctx}: negative ts={ts} or dur={dur}"));
+                }
+                spans.entry(tid as u64).or_default().push((ts, ts + dur));
+            }
+            "i" => {
+                let ts = num(e, "ts", &ctx)?;
+                if ts < 0.0 {
+                    return Err(format!("{ctx}: negative ts={ts}"));
+                }
+                if e.get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64)
+                    .is_none()
+                {
+                    return Err(format!(
+                        "{ctx}: instant without `args.value`"));
+                }
+            }
+            other => {
+                return Err(format!("{ctx}: unknown phase `{other}`"));
+            }
+        }
+    }
+    for (lane, mut iv) in spans {
+        // sort by start asc, end desc: an enclosing span sorts first
+        iv.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                .then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        let mut stack: Vec<f64> = Vec::new();
+        for (start, end) in iv {
+            while let Some(&top) = stack.last() {
+                if top <= start {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = stack.last() {
+                if end > top {
+                    return Err(format!(
+                        "lane {lane}: span [{start}, {end}] straddles \
+                         enclosing span ending at {top} — intervals must \
+                         nest or be disjoint"
+                    ));
+                }
+            }
+            stack.push(end);
+        }
+    }
+    Ok(())
+}
+
+/// Measured hop-vs-stage concurrency from a parsed trace document: the
+/// fraction of total ring-hop span time during which a staging span
+/// (`comm/pack` / `comm/feedback`) was simultaneously open on a
+/// *different* lane — the overlap-efficiency figure `sm3-train report`
+/// prints (1.0 = every hop fully hidden staging, 0.0 = no overlap).
+/// Returns `None` when the trace has no hop spans.
+pub fn overlap_efficiency(doc: &Json) -> Option<f64> {
+    let events = match doc.get("traceEvents") {
+        Some(Json::Array(a)) => a,
+        _ => return None,
+    };
+    let mut hops: Vec<(f64, f64, u64)> = Vec::new();
+    let mut stages: Vec<(f64, f64, u64)> = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let name = e.get("name").and_then(Json::as_str)?;
+        let ts = e.get("ts").and_then(Json::as_f64)?;
+        let dur = e.get("dur").and_then(Json::as_f64)?;
+        let tid = e.get("tid").and_then(Json::as_f64)? as u64;
+        if name.starts_with("comm/hop_") {
+            hops.push((ts, ts + dur, tid));
+        } else if name == "comm/pack" || name == "comm/feedback" {
+            stages.push((ts, ts + dur, tid));
+        }
+    }
+    if hops.is_empty() {
+        return None;
+    }
+    let total: f64 = hops.iter().map(|&(s, e, _)| e - s).sum();
+    if total <= 0.0 {
+        return Some(0.0);
+    }
+    let mut covered = 0.0;
+    for &(hs, he, hl) in &hops {
+        // merge the cross-lane stage intervals clipped to this hop
+        let mut clips: Vec<(f64, f64)> = stages
+            .iter()
+            .filter(|&&(_, _, sl)| sl != hl)
+            .map(|&(ss, se, _)| (ss.max(hs), se.min(he)))
+            .filter(|&(s, e)| e > s)
+            .collect();
+        clips.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut cursor = hs;
+        for (s, e) in clips {
+            let s = s.max(cursor);
+            if e > s {
+                covered += e - s;
+                cursor = e;
+            }
+        }
+    }
+    Some((covered / total).clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Serialize ring-global tests: rings and the TRACING flag are
+    // process-wide, so concurrent harness threads would cross-drain.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_tracing_records_nothing_and_never_allocates() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!tracing());
+        let before = crate::alloc_count::thread_allocs();
+        for i in 0..64 {
+            complete(Probe::OptStep, i, 10);
+            instant_counter(Counter::CommWireBytes, 64);
+            instant_gauge(Gauge::PoolBytes, 1 << 20);
+        }
+        assert_eq!(crate::alloc_count::thread_allocs(), before,
+                   "tracing-off entry points must not allocate");
+        let mut tl = Timeline::default();
+        tl.drain();
+        assert!(tl.records.is_empty());
+    }
+
+    #[test]
+    fn enabled_tracing_allocates_once_then_stays_flat() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = enable_tracing();
+        // first event allocates the ring (bounded, once per thread)
+        complete(Probe::OptStep, 0, 5);
+        let before = crate::alloc_count::thread_allocs();
+        for i in 1..256u64 {
+            complete(Probe::OptStep, i * 10, 5);
+            instant_counter(Counter::CommWireBytes, 64);
+        }
+        assert_eq!(crate::alloc_count::thread_allocs(), before,
+                   "steady-state tracing must reuse the ring");
+        let mut tl = Timeline::default();
+        tl.drain();
+        assert!(tl.records.len() >= 511);
+    }
+
+    #[test]
+    fn records_round_trip_with_lane_rank_and_kind() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let mut tl = Timeline::default();
+            tl.drain(); // flush leftovers from other tests
+        }
+        let _g = enable_tracing();
+        set_thread_label("test-lane");
+        set_rank(3);
+        complete(Probe::CommPack, 1000, 500);
+        clear_rank();
+        complete_on_lane(Probe::OptWorker, worker_lane(2), 2000, 800);
+        instant_gauge(Gauge::PoolBytes, 4096);
+        let mut tl = Timeline::default();
+        tl.drain();
+        let pack = tl
+            .records
+            .iter()
+            .find(|r| r.name == "comm/pack")
+            .expect("pack span drained");
+        assert_eq!((pack.ts_ns, pack.dur_ns, pack.rank),
+                   (1000, 500, Some(3)));
+        let w = tl
+            .records
+            .iter()
+            .find(|r| r.name == "opt_worker")
+            .expect("worker span drained");
+        assert_eq!(w.lane, worker_lane(2));
+        assert_eq!(w.rank, None);
+        let g = tl
+            .records
+            .iter()
+            .find(|r| r.name == "mem/pool_bytes")
+            .expect("gauge instant drained");
+        assert_eq!((g.kind, g.value), ("gauge", 4096));
+        // the drain reset the ring
+        let mut again = Timeline::default();
+        again.drain();
+        assert!(again.records.iter().all(|r| r.name != "comm/pack"));
+    }
+
+    #[test]
+    fn full_ring_drops_newest_and_reports_the_count() {
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let mut tl = Timeline::default();
+            tl.drain();
+        }
+        let _g = enable_tracing();
+        for i in 0..(RING_CAPACITY as u64 + 100) {
+            complete(Probe::Grad, i, 1);
+        }
+        let mut tl = Timeline::default();
+        tl.drain();
+        let grads =
+            tl.records.iter().filter(|r| r.name == "grad").count();
+        assert_eq!(grads, RING_CAPACITY, "ring holds exactly its capacity");
+        assert_eq!(tl.dropped, 100, "overflow must be counted, not wrapped");
+        // earliest events survive (drop-newest, not drop-oldest)
+        assert!(tl.records.iter().any(|r| r.name == "grad" && r.ts_ns == 0));
+    }
+
+    #[test]
+    fn chrome_export_validates_and_orders_nested_spans() {
+        let tl = Timeline {
+            records: vec![
+                TraceRecord { name: "opt_step", kind: "span", ts_ns: 1000,
+                              dur_ns: 9000, value: 0, lane: 0, rank: None },
+                TraceRecord { name: "opt_worker", kind: "span", ts_ns: 2000,
+                              dur_ns: 3000, value: 0, lane: 0, rank: None },
+                TraceRecord { name: "comm/wire_bytes", kind: "counter",
+                              ts_ns: 4000, dur_ns: 0, value: 256, lane: 1,
+                              rank: Some(2) },
+            ],
+            lanes: BTreeMap::from([(0, "coordinator".into()),
+                                   (1, "comm-hop".into())]),
+            dropped: 0,
+        };
+        let doc = tl.to_chrome_json();
+        validate_trace_doc(&doc).unwrap();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        validate_trace_doc(&parsed).unwrap();
+        let events = match parsed.get("traceEvents") {
+            Some(Json::Array(a)) => a.clone(),
+            _ => panic!("traceEvents missing"),
+        };
+        // metadata first, then X events ordered ts asc with the
+        // enclosing span before its child
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[0].get("name").and_then(Json::as_str),
+                   Some("opt_step"));
+        assert_eq!(xs[0].get("ts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(xs[0].get("dur").and_then(Json::as_f64), Some(9.0));
+        // instant carries its value and rank
+        let inst = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .unwrap();
+        let args = inst.get("args").unwrap();
+        assert_eq!(args.get("value").and_then(Json::as_f64), Some(256.0));
+        assert_eq!(args.get("rank").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn fake_clock_trace_round_trips_through_chrome_json() {
+        use crate::telemetry::{Clock, FakeClock};
+        let _l = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let mut tl = Timeline::default();
+            tl.drain(); // flush leftovers from other tests
+        }
+        let _g = enable_tracing();
+        set_thread_label("fake-clock");
+        // a deterministic schedule: outer opt_step [1000, 10000) strictly
+        // containing an opt_worker replay [2000, 5000) on worker lane 1,
+        // a rank-tagged pack instant at t=3000, and a later grad span
+        // [12000, 15000) — all stamped from a FakeClock, so every
+        // exported ts/dur is exact, not wall-clock-approximate
+        let clock = FakeClock::new();
+        clock.set(1_000);
+        let t_outer = clock.now_ns();
+        clock.advance(1_000);
+        let t_inner = clock.now_ns();
+        clock.advance(3_000);
+        complete_on_lane(Probe::OptWorker, worker_lane(1), t_inner,
+                         clock.now_ns() - t_inner);
+        clock.advance(5_000);
+        complete(Probe::OptStep, t_outer, clock.now_ns() - t_outer);
+        set_rank(2);
+        instant_counter(Counter::CommWireBytes, 640);
+        clear_rank();
+        clock.advance(2_000);
+        let t_grad = clock.now_ns();
+        clock.advance(3_000);
+        complete(Probe::Grad, t_grad, clock.now_ns() - t_grad);
+        let mut tl = Timeline::default();
+        tl.drain();
+        // round-trip: export → serialize → re-parse with the in-crate
+        // parser → re-validate the parsed document
+        let doc = tl.to_chrome_json();
+        validate_trace_doc(&doc).unwrap();
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        validate_trace_doc(&parsed).unwrap();
+        let events = parsed.get("traceEvents").unwrap();
+        let events = match events {
+            Json::Array(a) => a,
+            _ => panic!("traceEvents must be an array"),
+        };
+        // lane invariant: the labeled thread and the synthetic worker
+        // lane each carry a thread_name metadata event
+        let lane_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .filter_map(|e| e.get("args")?.get("name")?.as_str())
+            .collect();
+        assert!(lane_names.contains(&"fake-clock"), "{lane_names:?}");
+        assert!(lane_names.iter().any(|n| n.contains("worker")),
+                "worker lane must be labeled: {lane_names:?}");
+        // ordering invariant: X events sorted by ts, exact fake-clock
+        // microseconds
+        let xs: Vec<(&str, f64, f64, f64)> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| (e.get("name").and_then(Json::as_str).unwrap(),
+                      e.get("ts").and_then(Json::as_f64).unwrap(),
+                      e.get("dur").and_then(Json::as_f64).unwrap(),
+                      e.get("tid").and_then(Json::as_f64).unwrap()))
+            .collect();
+        assert!(xs.windows(2).all(|w| w[0].1 <= w[1].1),
+                "X events must be ts-ascending: {xs:?}");
+        let step = xs.iter().find(|x| x.0 == "opt_step").unwrap();
+        let worker = xs.iter().find(|x| x.0 == "opt_worker").unwrap();
+        let grad = xs.iter().find(|x| x.0 == "grad").unwrap();
+        assert_eq!((step.1, step.2), (1.0, 9.0));
+        assert_eq!((worker.1, worker.2), (2.0, 3.0));
+        assert_eq!((grad.1, grad.2), (12.0, 15.0 - 12.0));
+        // nesting invariant: the worker replay lies strictly inside the
+        // enclosing opt_step, on its own (different) lane
+        assert!(step.1 <= worker.1
+                && worker.1 + worker.2 <= step.1 + step.2);
+        assert_ne!(step.3, worker.3, "replayed worker spans get their \
+                                      own synthetic lane");
+        // the rank tag survives the round trip on the instant
+        let inst = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .unwrap();
+        assert_eq!(inst.get("args").unwrap().get("rank")
+                       .and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn validator_rejects_straddling_spans_and_bad_schema() {
+        // straddling intervals on one lane: [0, 10) and [5, 15)
+        let tl = Timeline {
+            records: vec![
+                TraceRecord { name: "grad", kind: "span", ts_ns: 0,
+                              dur_ns: 10_000, value: 0, lane: 0,
+                              rank: None },
+                TraceRecord { name: "opt_step", kind: "span", ts_ns: 5_000,
+                              dur_ns: 10_000, value: 0, lane: 0,
+                              rank: None },
+            ],
+            lanes: BTreeMap::new(),
+            dropped: 0,
+        };
+        let err = validate_trace_doc(&tl.to_chrome_json()).unwrap_err();
+        assert!(err.contains("straddles"), "{err}");
+        // same intervals on different lanes are fine
+        let tl2 = Timeline {
+            records: vec![
+                TraceRecord { name: "grad", kind: "span", ts_ns: 0,
+                              dur_ns: 10_000, value: 0, lane: 0,
+                              rank: None },
+                TraceRecord { name: "opt_step", kind: "span", ts_ns: 5_000,
+                              dur_ns: 10_000, value: 0, lane: 1,
+                              rank: None },
+            ],
+            lanes: BTreeMap::new(),
+            dropped: 0,
+        };
+        validate_trace_doc(&tl2.to_chrome_json()).unwrap();
+        // schema tag is enforced
+        let bad = Json::parse(
+            r#"{"schema":"nope","dropped_events":0,"traceEvents":[]}"#)
+            .unwrap();
+        assert!(validate_trace_doc(&bad).is_err());
+        assert!(validate_trace_doc(&Json::parse("[]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn overlap_efficiency_measures_cross_lane_concurrency() {
+        // hop on lane 1 over [0, 100); staging on lane 0 covers
+        // [20, 60) — 40% hidden. A same-lane stage must not count.
+        let tl = Timeline {
+            records: vec![
+                TraceRecord { name: "comm/hop_reduce", kind: "span",
+                              ts_ns: 0, dur_ns: 100_000, value: 0,
+                              lane: 1, rank: None },
+                TraceRecord { name: "comm/pack", kind: "span",
+                              ts_ns: 20_000, dur_ns: 40_000, value: 0,
+                              lane: 0, rank: None },
+                TraceRecord { name: "comm/feedback", kind: "span",
+                              ts_ns: 110_000, dur_ns: 40_000, value: 0,
+                              lane: 1, rank: None },
+            ],
+            lanes: BTreeMap::new(),
+            dropped: 0,
+        };
+        let doc = tl.to_chrome_json();
+        let eff = overlap_efficiency(&doc).unwrap();
+        assert!((eff - 0.4).abs() < 1e-9, "{eff}");
+        // no hops → None
+        let empty = Timeline::default().to_chrome_json();
+        assert_eq!(overlap_efficiency(&empty), None);
+    }
+}
